@@ -1,0 +1,84 @@
+//! SPMD Jacobi under SEDAR — the communication-intensive pattern (§4.3).
+//!
+//! Runs the halo-exchange Jacobi solver under every strategy, injecting a
+//! fault into a mid-run iteration, and shows the property the paper
+//! emphasizes for SPMD codes: detection latency is *short* (the corrupted
+//! block reaches a neighbor exchange within one iteration — TDC at the next
+//! halo send), so checkpoint recovery loses very little work.
+//!
+//! ```text
+//! cargo run --release --example jacobi_spmd
+//! ```
+
+use std::sync::Arc;
+
+use sedar::apps::spec::AppSpec;
+use sedar::apps::JacobiApp;
+use sedar::config::{RunConfig, Strategy};
+use sedar::coordinator::SedarRun;
+use sedar::inject::{InjectKind, InjectPoint, InjectionSpec};
+use sedar::report::Table;
+use sedar::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let app = Arc::new(JacobiApp::new(128, 4, 24, 8)); // 24 iters, ck every 8
+    let artifacts = Engine::default_artifact_dir();
+    let use_xla = Engine::artifacts_available(&artifacts);
+    println!(
+        "jacobi 128×128, 4 ranks, 24 iterations, checkpoint every 8 (xla={use_xla})\n"
+    );
+
+    // Corrupt a grid cell of rank 2's replica right before iteration 13
+    // (i.e. between CK1 at iter 16? no — after the CK covering iters 0-7;
+    // cursor arithmetic below picks the phase by name).
+    let inject_phase = app.cursor_of("ITER13");
+    let spec = InjectionSpec {
+        name: "jacobi-grid-flip".into(),
+        point: InjectPoint::BeforePhase(inject_phase),
+        rank: 2,
+        replica: 1,
+        kind: InjectKind::BitFlip {
+            var: "grid".into(),
+            elem: 40,
+            bit: 30,
+        },
+    };
+
+    let mut table = Table::new(&["strategy", "attempts", "restarts", "detected", "resumes", "wall"]);
+    for strategy in [Strategy::DetectOnly, Strategy::SysCkpt, Strategy::UserCkpt] {
+        let mut cfg = RunConfig::default();
+        cfg.strategy = strategy;
+        cfg.use_xla = use_xla;
+        cfg.run_dir = format!("runs/example-jacobi-{}", strategy.label()).into();
+        let outcome = SedarRun::new(app.clone(), cfg, Some(spec.clone())).run()?;
+        anyhow::ensure!(
+            outcome.result_correct == Some(true),
+            "{}: wrong result",
+            strategy.label()
+        );
+        table.row(&[
+            strategy.label().to_string(),
+            outcome.attempts.to_string(),
+            outcome.restarts.to_string(),
+            outcome
+                .detections
+                .iter()
+                .map(|d| format!("{}@{}", d.class, d.site))
+                .collect::<Vec<_>>()
+                .join(" "),
+            outcome
+                .resume_history
+                .iter()
+                .map(|r| r.to_string())
+                .collect::<Vec<_>>()
+                .join(" "),
+            sedar::util::human_duration(outcome.wall),
+        ]);
+    }
+    println!("{}", table.markdown());
+    println!(
+        "the corrupted halo row is caught at the very next ITER13 exchange\n\
+         (TDC) — the SPMD pattern's short detection latency keeps k = 0."
+    );
+    Ok(())
+}

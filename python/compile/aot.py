@@ -1,0 +1,97 @@
+"""AOT compiler: lower every Layer-2 model function to HLO **text**
+artifacts the rust runtime loads through the `xla` crate.
+
+HLO text (not ``lowered.compile()`` / serialized protos) is the interchange
+format: jax >= 0.5 emits HloModuleProtos with 64-bit instruction ids which
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage::
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Python runs ONCE here, at build time; the rust binary is self-contained
+afterwards (Makefile target ``artifacts``).
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+F32 = jnp.float32
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (ids reassigned by the parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def variants():
+    """(artifact name, function, example args) for every geometry the rust
+    apps/examples/benches use. Names must match the rust side:
+      MatmulApp::artifact()  -> matmul_r{band_rows}_n{n}
+      JacobiApp::artifact()  -> jacobi_r{rows}_n{n}
+      SwApp::artifact()      -> sw_b{block_rows}_w{band_width}
+    """
+    out = []
+
+    # --- matmul: (band_rows, n) ---
+    for r, n in [(4, 64), (8, 128), (16, 256), (16, 512), (32, 256)]:
+        out.append(
+            (f"matmul_r{r}_n{n}", model.matmul_band, (_spec(r, n), _spec(n, n)))
+        )
+
+    # --- jacobi: (rows, n), input is the padded (rows+2, n) block ---
+    for r, n in [(16, 64), (32, 128), (64, 256)]:
+        out.append((f"jacobi_r{r}_n{n}", model.jacobi_sweep, (_spec(r + 2, n),)))
+
+    # --- smith-waterman: (block_rows, band_width) ---
+    for br, bw in [(16, 16), (8, 32), (64, 128), (32, 64)]:
+        out.append(
+            (
+                f"sw_b{br}_w{bw}",
+                model.sw_block,
+                (_spec(br), _spec(bw), _spec(bw), _spec(br + 1)),
+            )
+        )
+
+    # --- replica-buffer validation reduce ---
+    for n in [4096, 65536]:
+        out.append((f"validate_n{n}", model.validate_buffers, (_spec(n), _spec(n))))
+
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="substring filter on names")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    for name, fn, specs in variants():
+        if args.only and args.only not in name:
+            continue
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Layer-1 Jacobi 5-point stencil Pallas kernel.
+
+One sweep over a rank's (rows, n) grid block with halo rows attached:
+``out[i][j] = 0.25 * (up + down + left + right)``.
+
+Halo handling: the padded (rows+2, n) input is exposed to the kernel as
+three row-shifted views (up / mid / down), which keeps every BlockSpec
+block-aligned — the interpret-mode-safe equivalent of the overlapping-
+window HBM→VMEM schedule a real TPU build would express with unblocked
+indexing. The column shifts happen *inside* the kernel on the full-width
+row band (shift-and-pad in registers/VMEM), so each grid step touches each
+input element exactly once.
+
+Edge columns get a zero outside-neighbor; the caller restores the Dirichlet
+boundary afterwards (identical contract to ref.jacobi_ref and the rust
+fallback).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pick_block(dim, want):
+    b = min(dim, want)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+def jacobi_sweep(padded, br=64, interpret=True):
+    """One stencil sweep. `padded` is (rows+2, n); returns (rows, n)."""
+    rows = padded.shape[0] - 2
+    n = padded.shape[1]
+    br = _pick_block(rows, br)
+
+    up = padded[0:rows, :]
+    mid = padded[1 : rows + 1, :]
+    down = padded[2 : rows + 2, :]
+
+    def kernel(up_ref, mid_ref, dn_ref, o_ref):
+        m = mid_ref[...]
+        left = jnp.pad(m[:, :-1], ((0, 0), (1, 0)))
+        right = jnp.pad(m[:, 1:], ((0, 0), (0, 1)))
+        o_ref[...] = 0.25 * (up_ref[...] + dn_ref[...] + left + right)
+
+    grid = (rows // br,)
+    spec = pl.BlockSpec((br, n), lambda i: (i, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[spec, spec, spec],
+        out_specs=pl.BlockSpec((br, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, n), jnp.float32),
+        interpret=interpret,
+    )(up, mid, down)

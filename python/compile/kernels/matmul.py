@@ -1,0 +1,66 @@
+"""Layer-1 blocked matmul Pallas kernel.
+
+The MATMUL phase of the Master/Worker test application computes
+``C_band = A_band @ B`` for a row band of A. The kernel tiles the product
+``(bm, bk) x (bk, bn)`` with the k-dimension innermost in the grid, so each
+output tile stays resident while the reduction streams through — the
+MXU-friendly schedule a TPU build would use (bf16 inputs / f32 accumulator);
+under ``interpret=True`` we keep f32 end-to-end so the CPU PJRT path is
+bit-deterministic.
+
+VMEM budget (see DESIGN.md §Perf): one (bm, bk) A tile + one (bk, bn) B
+tile + one (bm, bn) accumulator; for the default 128³ tiles that is
+3 x 64 KiB = 192 KiB << the 16 MiB/core budget, leaving room for
+double-buffering the streaming tiles.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pick_block(dim, want):
+    """Largest divisor of `dim` not exceeding `want` (shapes here are
+    powers of two, so this terminates at a power of two)."""
+    b = min(dim, want)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+def matmul(a, b, bm=128, bn=128, bk=128, interpret=True):
+    """``a @ b`` via a tiled Pallas kernel.
+
+    Args:
+      a: (m, k) f32.
+      b: (k, n) f32.
+      bm/bn/bk: requested tile sizes (clamped to divisors of the dims).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims differ: {k} vs {k2}"
+    bm = _pick_block(m, bm)
+    bn = _pick_block(n, bn)
+    bk = _pick_block(k, bk)
+
+    def kernel(a_ref, b_ref, o_ref):
+        @pl.when(pl.program_id(2) == 0)
+        def _init():
+            o_ref[...] = jnp.zeros_like(o_ref)
+
+        o_ref[...] += jnp.dot(
+            a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+        )
+
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,120 @@
+"""Pure-jnp correctness oracles for the Layer-1 Pallas kernels.
+
+Each function here is the *specification* its kernel counterpart is tested
+against (pytest + hypothesis sweeps in python/tests/). They are also kept
+semantically identical to the rust fallbacks in rust/src/apps/, closing the
+loop: rust fallback == jnp reference == Pallas kernel == AOT artifact.
+"""
+
+import jax
+import jax.numpy as jnp
+
+# Smith-Waterman scoring (matches rust/src/apps/oracle.rs).
+SW_MATCH = 2.0
+SW_MISMATCH = -1.0
+SW_GAP = -1.0
+
+
+def matmul_ref(a, b):
+    """C = A @ B with f32 accumulation: the matmul kernel's oracle."""
+    return jnp.matmul(a, b, preferred_element_type=jnp.float32)
+
+
+def jacobi_ref(padded):
+    """5-point stencil sweep over a padded (rows+2, n) block.
+
+    Returns the (rows, n) block of neighbor means. Edge columns use a zero
+    neighbor outside the block — the caller (rust or model.py) restores the
+    Dirichlet boundary afterwards, exactly like the rust fallback.
+    """
+    rows = padded.shape[0] - 2
+    up = padded[0:rows, :]
+    down = padded[2 : rows + 2, :]
+    mid = padded[1 : rows + 1, :]
+    left = jnp.pad(mid[:, :-1], ((0, 0), (1, 0)))
+    right = jnp.pad(mid[:, 1:], ((0, 0), (0, 1)))
+    return 0.25 * (up + down + left + right)
+
+
+def sw_row_ref(prev_row, diag_row, left1, s_row):
+    """One Smith-Waterman DP row over a band, linear gap.
+
+    Args:
+      prev_row: H of the previous row over the band, shape (bw,).
+      diag_row: prev_row shifted right by one with the left-neighbor corner
+        (H[i-1][band_start-1]) in slot 0 — i.e. the diagonal predecessors.
+      left1: scalar H[i][band_start-1] (left neighbor's value on THIS row).
+      s_row: substitution scores for this row over the band, shape (bw,).
+
+    The left-to-right dependency H[i][j-1] + GAP is resolved with the
+    max-plus prefix trick: H[j] = max_{k<=j} (tmp[k] - (j-k))
+                                = prefix_max(tmp[k] + k)[j] - j,
+    where tmp[j] = max(0, diag[j]+s[j], up[j]-1, (j==0)*(left1-1)).
+    Valid because tmp >= 0 everywhere, so the running clamp never binds.
+    """
+    bw = prev_row.shape[0]
+    tmp = jnp.maximum(diag_row + s_row, prev_row + SW_GAP)
+    tmp = tmp.at[0].set(jnp.maximum(tmp[0], left1 + SW_GAP))
+    tmp = jnp.maximum(tmp, 0.0)
+    idx = jnp.arange(bw, dtype=jnp.float32)
+    run = jax.lax.cummax(tmp + idx) - idx
+    return jnp.maximum(tmp, run)
+
+
+def sw_block_ref(s1_block, s2_band, prev_row, left):
+    """One (block_rows × band_width) SW DP block — the sw kernel's oracle.
+
+    Args:
+      s1_block: (br,) f32 symbols of this row block.
+      s2_band: (bw,) f32 symbols of this rank's column band.
+      prev_row: (bw,) H of the last processed row.
+      left: (br+1,) left-neighbor frontier; left[i] = H[rs-1+i][prev band's
+        last column] (zeros for the first band).
+
+    Returns (new_prev_row (bw,), out_frontier (br+1,), block_max (1,)).
+    """
+    br = s1_block.shape[0]
+    bw = s2_band.shape[0]
+
+    def row_step(carry, i):
+        prev, best = carry
+        s_row = jnp.where(s1_block[i] == s2_band, SW_MATCH, SW_MISMATCH)
+        diag = jnp.concatenate([left[i][None], prev[:-1]])
+        cur = sw_row_ref(prev, diag, left[i + 1], s_row)
+        best = jnp.maximum(best, jnp.max(cur))
+        return (cur, best), cur[bw - 1]
+
+    (new_prev, best), last_col = jax.lax.scan(
+        row_step, (prev_row, jnp.float32(0.0)), jnp.arange(br)
+    )
+    out_frontier = jnp.concatenate([prev_row[bw - 1][None], last_col])
+    return new_prev, out_frontier, best[None]
+
+
+def sw_score_ref(s1, s2):
+    """Full sequential SW score (numpy-style DP) — end-to-end oracle."""
+    import numpy as np
+
+    m, n = len(s1), len(s2)
+    prev = np.zeros(n + 1, dtype=np.float32)
+    best = 0.0
+    for i in range(1, m + 1):
+        cur = np.zeros(n + 1, dtype=np.float32)
+        for j in range(1, n + 1):
+            s = SW_MATCH if s1[i - 1] == s2[j - 1] else SW_MISMATCH
+            cur[j] = max(prev[j - 1] + s, prev[j] + SW_GAP, cur[j - 1] + SW_GAP, 0.0)
+            best = max(best, cur[j])
+        prev = cur
+    return np.float32(best)
+
+
+def validate_ref(a, b):
+    """Replica-buffer validation: (mismatch count, weighted checksum).
+
+    The detection hot path's reduce: counts differing elements and returns a
+    content checksum of `a`, both as f32 scalars.
+    """
+    mism = jnp.sum((a != b).astype(jnp.float32))
+    idx = jnp.arange(a.shape[0], dtype=jnp.float32) + 1.0
+    csum = jnp.sum(a * idx)
+    return mism[None], csum[None]

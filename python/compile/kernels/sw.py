@@ -1,0 +1,49 @@
+"""Layer-1 Smith-Waterman row-update Pallas kernel.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): GPU Smith-Waterman
+implementations parallelize anti-diagonals across threads. On a
+vector/VMEM machine the profitable formulation is per-*row* with the
+left-to-right gap dependency turned into a **max-plus prefix scan**:
+
+    tmp[j] = max(0, diag[j] + s[j], up[j] + GAP)          (vector op)
+    H[j]   = max(tmp[j], max_{k<=j}(tmp[k] + k) - j)      (cummax)
+
+which is exact for a linear gap penalty because every ``tmp`` is already
+clamped at 0 (the running clamp never binds — proof in ref.sw_row_ref).
+The kernel is one fused vector pass over the band; Layer 2 scans it over
+the rows of a block (python/compile/model.py: sw_block).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def sw_row(prev_row, diag_row, left1, s_row, interpret=True):
+    """One DP row over a band of width bw.
+
+    Args:
+      prev_row: (bw,) H of the previous row.
+      diag_row: (bw,) diagonal predecessors (prev shifted, corner in slot 0).
+      left1: (1,) H of the left neighbor on this row.
+      s_row: (bw,) substitution scores.
+    Returns (bw,) H of this row.
+    """
+    bw = prev_row.shape[0]
+
+    def kernel(prev_ref, diag_ref, left1_ref, s_ref, o_ref):
+        tmp = jnp.maximum(diag_ref[...] + s_ref[...], prev_ref[...] + ref.SW_GAP)
+        first = jnp.maximum(tmp[0], left1_ref[0] + ref.SW_GAP)
+        tmp = jnp.concatenate([first[None], tmp[1:]])
+        tmp = jnp.maximum(tmp, 0.0)
+        idx = jax.lax.iota(jnp.float32, bw)
+        run = jax.lax.cummax(tmp + idx) - idx
+        o_ref[...] = jnp.maximum(tmp, run)
+
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((bw,), jnp.float32),
+        interpret=interpret,
+    )(prev_row, diag_row, left1, s_row)

@@ -1,0 +1,58 @@
+"""Layer-1 replica-buffer validation Pallas kernel.
+
+The detection hot path compares the two replicas' outgoing message buffers
+before every send (§3.1 of the paper). This kernel is the accelerator-side
+formulation: a single bandwidth-bound pass producing the mismatch count and
+a position-weighted content checksum — the building block for offloaded
+(RedMPI-style hashed) validation. The rust coordinator's CPU comparator is
+benchmarked against it in benches/micro_hotpath.rs.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pick_block(dim, want):
+    b = min(dim, want)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+def validate(a, b, bc=4096, interpret=True):
+    """Compare two (n,) f32 buffers.
+
+    Returns (mismatches (1,), checksum (1,)): the number of differing
+    elements and sum(a[i] * (i+1)).
+    """
+    n = a.shape[0]
+    bc = _pick_block(n, bc)
+
+    def kernel(a_ref, b_ref, m_ref, c_ref):
+        @pl.when(pl.program_id(0) == 0)
+        def _init():
+            m_ref[...] = jnp.zeros_like(m_ref)
+            c_ref[...] = jnp.zeros_like(c_ref)
+
+        av = a_ref[...]
+        bv = b_ref[...]
+        base = pl.program_id(0) * bc
+        idx = jax.lax.iota(jnp.float32, bc) + 1.0 + base.astype(jnp.float32)
+        m_ref[...] += jnp.sum((av != bv).astype(jnp.float32))[None]
+        c_ref[...] += jnp.sum(av * idx)[None]
+
+    grid = (n // bc,)
+    spec = pl.BlockSpec((bc,), lambda i: (i,))
+    out_spec = pl.BlockSpec((1,), lambda i: (0,))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=[out_spec, out_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,66 @@
+"""Layer-2 JAX model functions — the compute graphs the rust coordinator
+executes through PJRT.
+
+Each function wraps a Layer-1 Pallas kernel in the surrounding compute
+structure (scans, boundary handling) and is AOT-lowered by aot.py to an
+HLO-text artifact. Every function returns a tuple (the rust loader always
+unwraps a tuple — lowering uses return_tuple=True).
+
+Shapes are static per artifact; aot.py emits one artifact per geometry
+variant (the rust apps name them, e.g. ``matmul_r16_n256``).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import jacobi as kjacobi
+from .kernels import matmul as kmatmul
+from .kernels import ref
+from .kernels import sw as ksw
+from .kernels import validate as kvalidate
+
+
+def matmul_band(a_band, b):
+    """MATMUL phase: C_band = A_band @ B (Pallas tiled matmul)."""
+    return (kmatmul.matmul(a_band, b),)
+
+
+def jacobi_sweep(padded):
+    """One Jacobi iteration over a rank's padded block (Pallas stencil).
+
+    The caller (rust) restores the Dirichlet boundary; the artifact computes
+    the raw neighbor means, matching the rust fallback's contract.
+    """
+    return (kjacobi.jacobi_sweep(padded),)
+
+
+def sw_block(s1_block, s2_band, prev_row, left):
+    """One pipelined Smith-Waterman block: scan the Pallas row kernel over
+    the block's rows, carrying (prev_row, running max) and emitting the
+    frontier column for the next rank.
+
+    Returns (new_prev_row, out_frontier, block_max) — exactly the triple the
+    rust SwApp expects.
+    """
+    br = s1_block.shape[0]
+    bw = s2_band.shape[0]
+
+    def row_step(carry, i):
+        prev, best = carry
+        s_row = jnp.where(s1_block[i] == s2_band, ref.SW_MATCH, ref.SW_MISMATCH)
+        diag = jnp.concatenate([left[i][None], prev[:-1]])
+        cur = ksw.sw_row(prev, diag, left[i + 1][None], s_row)
+        best = jnp.maximum(best, jnp.max(cur))
+        return (cur, best), cur[bw - 1]
+
+    (new_prev, best), last_col = jax.lax.scan(
+        row_step, (prev_row, jnp.float32(0.0)), jnp.arange(br)
+    )
+    out_frontier = jnp.concatenate([prev_row[bw - 1][None], last_col])
+    return new_prev, out_frontier, best[None]
+
+
+def validate_buffers(a, b):
+    """Replica-buffer validation reduce (Pallas): (mismatches, checksum)."""
+    m, c = kvalidate.validate(a, b)
+    return m, c

@@ -1,0 +1,108 @@
+"""Layer-1 performance model: VMEM footprint + MXU utilization estimates.
+
+interpret=True gives CPU-numpy timings only, which say nothing about TPU
+performance — so per the DESIGN.md §Perf plan we optimize kernel *structure*
+and estimate the real-hardware characteristics statically:
+
+* **VMEM footprint** per grid step (must fit the ~16 MiB/core budget with
+  headroom for double-buffering the streamed operands);
+* **MXU utilization** for the matmul kernel: fraction of the 128×128
+  systolic array's lanes a (bm, bn, bk) tile keeps busy;
+* **arithmetic intensity** (flop / HBM byte), which decides compute- vs
+  bandwidth-bound per the roofline.
+
+Run: ``cd python && python -m compile.vmem``
+Checked by python/tests/test_perf_model.py, quoted in DESIGN.md §Perf.
+"""
+
+VMEM_BUDGET = 16 * 1024 * 1024  # bytes/core
+MXU_DIM = 128  # systolic array is 128×128
+F32 = 4
+
+
+def matmul_tiles(m, n, k, bm=128, bn=128, bk=128):
+    """VMEM/MXU model of kernels/matmul.py for one (bm,bn,bk) grid step."""
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    vmem = (bm * bk + bk * bn + bm * bn) * F32
+    # Each dimension underfills the MXU if the tile is smaller than 128.
+    mxu = (min(bm, MXU_DIM) / MXU_DIM) * (min(bn, MXU_DIM) / MXU_DIM)
+    flops = 2 * m * n * k
+    # Tiled HBM traffic: A read n/bn times, B read m/bm times, C written once.
+    hbm = (m * k * (n / bn) + k * n * (m / bm) + m * n) * F32
+    return {
+        "kind": "matmul",
+        "tile": (bm, bn, bk),
+        "vmem_bytes": vmem,
+        "mxu_util": mxu,
+        "flops": flops,
+        "hbm_bytes": hbm,
+        "intensity": flops / hbm,
+    }
+
+
+def jacobi_tiles(rows, n, br=64):
+    """VMEM model of kernels/jacobi.py (bandwidth-bound stencil)."""
+    br = min(br, rows)
+    # Three (br, n) input views + one output block.
+    vmem = 4 * br * n * F32
+    flops = 4 * rows * n  # 3 adds + 1 mul per point
+    hbm = (3 * rows * n + rows * n) * F32
+    return {
+        "kind": "jacobi",
+        "tile": (br, n),
+        "vmem_bytes": vmem,
+        "mxu_util": 0.0,  # VPU-only kernel
+        "flops": flops,
+        "hbm_bytes": hbm,
+        "intensity": flops / hbm,
+    }
+
+
+def sw_tiles(br, bw):
+    """VMEM model of kernels/sw.py (vector kernel + cummax scan)."""
+    # prev, diag, scores, output rows + the left frontier.
+    vmem = (4 * bw + br + 1) * F32
+    flops = 10 * br * bw  # maxes/adds per cell incl. the prefix scan
+    hbm = (br + 3 * bw + 2 * (br + 1)) * F32  # streams once per block
+    return {
+        "kind": "sw",
+        "tile": (br, bw),
+        "vmem_bytes": vmem,
+        "mxu_util": 0.0,
+        "flops": flops,
+        "hbm_bytes": hbm,
+        "intensity": flops / hbm,
+    }
+
+
+def production_variants():
+    """The models for the shipped artifact geometries + the block-shape
+    sweep used to pick the matmul defaults (DESIGN.md §Perf)."""
+    out = []
+    for r, n in [(4, 64), (16, 256), (16, 512)]:
+        out.append((f"matmul_r{r}_n{n}", matmul_tiles(r, n, n)))
+    # The sweep a real TPU build would choose from: full-MXU tiles.
+    for bm, bn, bk in [(128, 128, 128), (256, 256, 64), (512, 128, 128)]:
+        out.append(
+            (f"matmul_sweep_{bm}x{bn}x{bk}", matmul_tiles(4096, 4096, 4096, bm, bn, bk))
+        )
+    for r, n in [(16, 64), (64, 256)]:
+        out.append((f"jacobi_r{r}_n{n}", jacobi_tiles(r, n)))
+    for br, bw in [(16, 16), (64, 128)]:
+        out.append((f"sw_b{br}_w{bw}", sw_tiles(br, bw)))
+    return out
+
+
+def main():
+    print(f"{'variant':30} {'tile':>16} {'VMEM':>10} {'MXU':>6} {'flop/B':>8}")
+    for name, m in production_variants():
+        print(
+            f"{name:30} {str(m['tile']):>16} {m['vmem_bytes']/1024:>8.1f}K "
+            f"{m['mxu_util']*100:>5.0f}% {m['intensity']:>8.2f}"
+        )
+    print(f"\nVMEM budget/core: {VMEM_BUDGET//1024//1024} MiB "
+          f"(double-buffering headroom required: ≤ 1/3 of budget per step)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,216 @@
+"""Kernel-vs-reference correctness: the CORE Layer-1 signal.
+
+Every Pallas kernel is checked against its pure-jnp oracle in ref.py, with
+hypothesis sweeping shapes and values. Tolerances are tight (the kernels
+are f32 end-to-end; matmul allows accumulation-order noise).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import jacobi as kjacobi
+from compile.kernels import matmul as kmatmul
+from compile.kernels import ref
+from compile.kernels import sw as ksw
+from compile.kernels import validate as kvalidate
+
+jax.config.update("jax_platform_name", "cpu")
+
+POW2 = [4, 8, 16, 32, 64]
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.uniform(-1.0, 1.0, size=shape).astype(np.float32))
+
+
+# ---------------------------------------------------------------- matmul
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.sampled_from(POW2),
+    k=st.sampled_from(POW2),
+    n=st.sampled_from(POW2),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_kernel_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    a, b = rand(rng, m, k), rand(rng, k, n)
+    got = kmatmul.matmul(a, b)
+    want = ref.matmul_ref(a, b)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    bm=st.sampled_from([2, 4, 8]),
+    bk=st.sampled_from([2, 4, 16]),
+    bn=st.sampled_from([2, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_block_shape_invariance(bm, bk, bn, seed):
+    """The result must not depend on the tiling (up to f32 reassociation)."""
+    rng = np.random.default_rng(seed)
+    a, b = rand(rng, 16, 16), rand(rng, 16, 16)
+    got = kmatmul.matmul(a, b, bm=bm, bn=bn, bk=bk)
+    want = ref.matmul_ref(a, b)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_matmul_identity():
+    a = jnp.eye(8, dtype=jnp.float32)
+    b = jnp.arange(64, dtype=jnp.float32).reshape(8, 8)
+    np.testing.assert_array_equal(kmatmul.matmul(a, b), b)
+
+
+def test_matmul_rejects_bad_shapes():
+    a = jnp.zeros((4, 8), jnp.float32)
+    b = jnp.zeros((4, 8), jnp.float32)
+    with pytest.raises(AssertionError):
+        kmatmul.matmul(a, b)
+
+
+# ---------------------------------------------------------------- jacobi
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    rows=st.sampled_from([4, 8, 16, 32]),
+    n=st.sampled_from([8, 16, 64]),
+    br=st.sampled_from([2, 4, 8, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_jacobi_kernel_matches_ref(rows, n, br, seed):
+    rng = np.random.default_rng(seed)
+    padded = rand(rng, rows + 2, n)
+    got = kjacobi.jacobi_sweep(padded, br=br)
+    want = ref.jacobi_ref(padded)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+def test_jacobi_constant_grid_interior():
+    """A constant field stays constant in the interior of the sweep."""
+    padded = jnp.full((10, 16), 3.0, jnp.float32)
+    out = kjacobi.jacobi_sweep(padded)
+    # Interior columns: mean of 4 equal neighbors = the constant.
+    np.testing.assert_allclose(out[:, 1:-1], 3.0, atol=1e-6)
+
+
+# ---------------------------------------------------------------- smith-waterman
+
+
+def sw_block_fallback(s1b, s2b, prev, left):
+    """Scalar DP, the rust fallback's twin — independent of ref.py."""
+    br, bw = len(s1b), len(s2b)
+    prev = np.array(prev, dtype=np.float32)
+    frontier = np.zeros(br + 1, dtype=np.float32)
+    frontier[0] = prev[bw - 1]
+    best = np.float32(0.0)
+    cur = np.zeros(bw, dtype=np.float32)
+    for i in range(br):
+        for j in range(bw):
+            s = ref.SW_MATCH if s1b[i] == s2b[j] else ref.SW_MISMATCH
+            diag = left[i] if j == 0 else prev[j - 1]
+            up = prev[j]
+            lf = left[i + 1] if j == 0 else cur[j - 1]
+            cur[j] = max(diag + s, up + ref.SW_GAP, lf + ref.SW_GAP, 0.0)
+            best = max(best, cur[j])
+        prev = cur.copy()
+        frontier[i + 1] = cur[bw - 1]
+    return prev, frontier, np.array([best], dtype=np.float32)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    br=st.sampled_from([2, 4, 8]),
+    bw=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sw_block_ref_matches_scalar_dp(br, bw, seed):
+    rng = np.random.default_rng(seed)
+    s1b = jnp.asarray(rng.integers(0, 4, br).astype(np.float32))
+    s2b = jnp.asarray(rng.integers(0, 4, bw).astype(np.float32))
+    prev = jnp.asarray(rng.integers(0, 5, bw).astype(np.float32))
+    # A plausible monotone-ish left frontier.
+    left = jnp.asarray(rng.integers(0, 5, br + 1).astype(np.float32))
+    got = ref.sw_block_ref(s1b, s2b, prev, left)
+    want = sw_block_fallback(np.array(s1b), np.array(s2b), prev, np.array(left))
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.array(g), w, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    bw=st.sampled_from([4, 8, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sw_row_kernel_matches_ref(bw, seed):
+    rng = np.random.default_rng(seed)
+    prev = jnp.asarray(rng.integers(0, 6, bw).astype(np.float32))
+    diag = jnp.asarray(rng.integers(0, 6, bw).astype(np.float32))
+    left1 = jnp.asarray(rng.integers(0, 6, 1).astype(np.float32))
+    s_row = jnp.asarray(rng.choice([ref.SW_MATCH, ref.SW_MISMATCH], bw).astype(np.float32))
+    got = ksw.sw_row(prev, diag, left1, s_row)
+    want = ref.sw_row_ref(prev, diag, left1[0], s_row)
+    np.testing.assert_allclose(got, want, atol=1e-6)
+
+
+@settings(max_examples=8, deadline=None)
+@given(m=st.sampled_from([8, 16, 24]), seed=st.integers(0, 2**31 - 1))
+def test_sw_block_chain_equals_full_dp(m, seed):
+    """Chaining blocks through one band reproduces the full SW score."""
+    rng = np.random.default_rng(seed)
+    s1 = rng.integers(0, 4, m)
+    s2 = rng.integers(0, 4, m)
+    br = m // 2
+    prev = jnp.zeros(m, jnp.float32)
+    best = 0.0
+    for b in range(2):
+        s1b = jnp.asarray(s1[b * br : (b + 1) * br].astype(np.float32))
+        left = jnp.zeros(br + 1, jnp.float32)
+        prev, _, bmax = ref.sw_block_ref(
+            s1b, jnp.asarray(s2.astype(np.float32)), prev, left
+        )
+        best = max(best, float(bmax[0]))
+    assert best == float(ref.sw_score_ref(list(s1), list(s2)))
+
+
+def test_sw_identical_sequences_score():
+    s = jnp.asarray(np.array([0, 1, 2, 3, 0, 1, 2, 3], np.float32))
+    prev = jnp.zeros(8, jnp.float32)
+    left = jnp.zeros(9, jnp.float32)
+    _, _, bmax = ref.sw_block_ref(s, s, prev, left)
+    assert float(bmax[0]) == 16.0  # 8 matches × +2
+
+
+# ---------------------------------------------------------------- validate
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.sampled_from([8, 64, 256]),
+    nflips=st.integers(0, 5),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_validate_counts_mismatches(n, nflips, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.uniform(-1, 1, n).astype(np.float32)
+    b = a.copy()
+    flip_at = rng.choice(n, size=min(nflips, n), replace=False)
+    for i in flip_at:
+        b[i] += 1.0
+    m, c = kvalidate.validate(jnp.asarray(a), jnp.asarray(b), bc=8)
+    wm, wc = ref.validate_ref(jnp.asarray(a), jnp.asarray(b))
+    assert float(m[0]) == float(wm[0]) == len(flip_at)
+    # Blockwise vs. full-sum accumulation order: absolute tolerance scaled
+    # to the summand magnitudes (the checksum can cancel to near zero).
+    np.testing.assert_allclose(float(c[0]), float(wc[0]), rtol=1e-4, atol=n * 2e-4)
+
+
+def test_validate_identical_buffers():
+    a = jnp.arange(128, dtype=jnp.float32)
+    m, _ = kvalidate.validate(a, a, bc=32)
+    assert float(m[0]) == 0.0

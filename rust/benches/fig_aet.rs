@@ -1,0 +1,87 @@
+//! Bench: the **AET-vs-MTBE sweep** (Equations 9–11, §3.4) — the paper's
+//! average-execution-time analysis as a series per strategy, for all three
+//! parameter sets, plus Daly-optimal checkpoint intervals. This is the
+//! "figure" of the temporal model. (`cargo bench --bench fig_aet`)
+
+use sedar::model::params::PaperApp;
+use sedar::model::{aet, daly_interval, equations::*, fault_probability};
+use sedar::report::Table;
+
+fn main() {
+    for app in PaperApp::ALL {
+        let p = app.paper_params();
+        println!(
+            "\n=== AET vs MTBE — {} (T_prog = {:.2} h) [hs] ===\n",
+            app.label(),
+            p.t_prog / 3600.0
+        );
+        let mut t = Table::new(&[
+            "MTBE [h]",
+            "P(fault)",
+            "baseline",
+            "detect-only",
+            "sys-ckpt (k=0)",
+            "user-ckpt",
+            "winner",
+        ]);
+        for mtbe_h in [1.0, 2.0, 5.0, 10.0, 20.0, 50.0, 100.0, 500.0] {
+            let mtbe = mtbe_h * 3600.0;
+            let rows = [
+                aet(eq1_baseline_fa(&p), eq2_baseline_fp(&p), p.t_prog, mtbe),
+                aet(eq3_detect_fa(&p), eq4_detect_fp(&p, 0.5), p.t_prog, mtbe),
+                aet(eq5_sys_fa(&p), eq6_sys_fp(&p, 0), p.t_prog, mtbe),
+                aet(eq7_user_fa(&p), eq8_user_fp(&p), p.t_prog, mtbe),
+            ];
+            let names = ["baseline", "detect-only", "sys-ckpt", "user-ckpt"];
+            let winner = rows
+                .iter()
+                .enumerate()
+                .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| names[i])
+                .unwrap();
+            t.row(&[
+                format!("{mtbe_h}"),
+                format!("{:.3}", fault_probability(p.t_prog, mtbe)),
+                format!("{:.2}", rows[0] / 3600.0),
+                format!("{:.2}", rows[1] / 3600.0),
+                format!("{:.2}", rows[2] / 3600.0),
+                format!("{:.2}", rows[3] / 3600.0),
+                winner.to_string(),
+            ]);
+        }
+        print!("{}", t.markdown());
+    }
+
+    println!("\n=== shape checks ===\n");
+    // At high fault rates the checkpointing strategies must win; at very
+    // low rates all strategies converge to their fault-free times and the
+    // baseline's (lower fixed overhead) wins by a hair.
+    let p = PaperApp::Jacobi.paper_params();
+    let high = |t_fa: f64, t_fp: f64| aet(t_fa, t_fp, p.t_prog, 2.0 * 3600.0);
+    let sys = high(eq5_sys_fa(&p), eq6_sys_fp(&p, 0));
+    let base = high(eq1_baseline_fa(&p), eq2_baseline_fp(&p));
+    let det = high(eq3_detect_fa(&p), eq4_detect_fp(&p, 0.5));
+    println!(
+        "  [{}] MTBE=2h: sys-ckpt ({:.2} h) < detect-only ({:.2} h) < baseline ({:.2} h)",
+        if sys < det && det < base { "ok" } else { "DIFFERS" },
+        sys / 3600.0,
+        det / 3600.0,
+        base / 3600.0
+    );
+
+    println!("\n=== Daly-optimal checkpoint interval per app ===\n");
+    let mut t = Table::new(&["app", "MTBE [h]", "t_cs [s]", "t_opt (Daly)", "paper t_i"]);
+    for app in PaperApp::ALL {
+        let p = app.paper_params();
+        for mtbe_h in [5.0, 24.0, 100.0] {
+            t.row(&[
+                app.label().to_string(),
+                format!("{mtbe_h}"),
+                format!("{:.2}", p.t_cs),
+                format!("{:.2} h", daly_interval(p.t_cs, mtbe_h * 3600.0) / 3600.0),
+                "1 h (fixed)".to_string(),
+            ]);
+        }
+    }
+    print!("{}", t.markdown());
+}

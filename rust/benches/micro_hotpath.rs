@@ -1,0 +1,224 @@
+//! Bench: the Layer-3 **detection hot path** micro-benchmarks — the perf
+//! deliverable's measurement substrate (EXPERIMENTS.md §Perf).
+//!
+//! Covers: replica-buffer comparison (full vs SHA-256, by message size),
+//! pair rendezvous latency, vmpi point-to-point latency/bandwidth,
+//! checkpoint frame write/read by codec, VarStore serialization, and —
+//! when artifacts are present — the PJRT dispatch overhead.
+//!
+//! (`cargo bench --bench micro_hotpath`; `SEDAR_BENCH_QUICK=1` shrinks it)
+
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+use std::time::Duration;
+
+use sedar::checkpoint::snapshot::{read_frame, write_frame, Codec};
+use sedar::detect::{buffers_equal, comparison_token, sha256, ValidationMode};
+use sedar::replica::pair::PairSync;
+use sedar::report::benchkit::{bench, black_box, quick, Stats};
+use sedar::report::Table;
+use sedar::runtime::Engine;
+use sedar::state::{Var, VarStore};
+use sedar::util::prng::SplitMix64;
+use sedar::vmpi::Network;
+
+fn rand_bytes(seed: u64, n: usize) -> Vec<u8> {
+    let mut rng = SplitMix64::new(seed);
+    (0..n).map(|_| (rng.next_u64() & 0xff) as u8).collect()
+}
+
+fn print_stats(title: &str, rows: &[(Stats, Option<usize>)]) {
+    println!("\n=== {title} ===\n");
+    let mut t = Table::new(&["case", "iters", "min", "mean", "p50", "p95", "throughput"]);
+    for (s, bytes) in rows {
+        let mut row = s.row();
+        row.push(match bytes {
+            Some(b) => format!("{:.2} GiB/s", s.gib_per_s(*b)),
+            None => "-".to_string(),
+        });
+        t.row(&row);
+    }
+    print!("{}", t.markdown());
+}
+
+fn main() {
+    let iters = if quick() { 20 } else { 200 };
+
+    // ---------------- buffer comparison (the per-message detection cost) --
+    let mut rows = Vec::new();
+    for size in [1usize << 10, 1 << 14, 1 << 18, 1 << 22] {
+        let a = rand_bytes(1, size);
+        let b = a.clone();
+        rows.push((
+            bench(&format!("memcmp-equal {}", sedar::util::human_bytes(size as u64)), 3, iters, || {
+                black_box(buffers_equal(&a, &b));
+            }),
+            Some(size),
+        ));
+        rows.push((
+            bench(&format!("sha256 {}", sedar::util::human_bytes(size as u64)), 3, iters.min(100), || {
+                black_box(sha256(&a));
+            }),
+            Some(size),
+        ));
+    }
+    // Early-exit path: first-byte mismatch must be ~O(1).
+    {
+        let a = rand_bytes(2, 1 << 22);
+        let mut b = a.clone();
+        b[0] ^= 1;
+        rows.push((
+            bench("memcmp-mismatch@0 4MiB", 3, iters, || {
+                black_box(buffers_equal(&a, &b));
+            }),
+            None,
+        ));
+    }
+    print_stats("replica-buffer comparison", &rows);
+    println!(
+        "\ncrossover guidance: full comparison beats hashing at every size on\n\
+         this host (compare is bandwidth-bound, sha256 is compute-bound); the\n\
+         paper's full-content message validation is the right default, hashes\n\
+         pay off only for checkpoint-sized payloads crossing a network."
+    );
+
+    // ---------------- comparison-token build (ValidationMode) -------------
+    let mut rows = Vec::new();
+    let msg = rand_bytes(3, 1 << 16);
+    rows.push((
+        bench("token full 64KiB", 3, iters, || {
+            black_box(comparison_token(ValidationMode::Full, &msg));
+        }),
+        Some(msg.len()),
+    ));
+    rows.push((
+        bench("token sha256 64KiB", 3, iters, || {
+            black_box(comparison_token(ValidationMode::Sha256, &msg));
+        }),
+        Some(msg.len()),
+    ));
+    print_stats("comparison-token construction", &rows);
+
+    // ---------------- pair rendezvous latency ------------------------------
+    {
+        let abort = Arc::new(AtomicBool::new(false));
+        let pair = PairSync::new(abort);
+        let p2 = Arc::clone(&pair);
+        let n_rounds = if quick() { 2_000 } else { 20_000 };
+        let sibling = std::thread::spawn(move || {
+            for _ in 0..n_rounds {
+                let _ = p2.exchange(1, vec![1u8; 32], Duration::from_secs(5)).unwrap();
+            }
+        });
+        let s = bench("pair exchange (32 B token)", 0, 1, || {
+            for _ in 0..n_rounds {
+                let _ = pair.exchange(0, vec![1u8; 32], Duration::from_secs(5)).unwrap();
+            }
+        });
+        sibling.join().unwrap();
+        println!(
+            "\n=== replica rendezvous ===\n\n  {n_rounds} round-trips in {} → {:.2} µs / rendezvous",
+            sedar::util::human_duration(s.min),
+            s.min.as_secs_f64() * 1e6 / n_rounds as f64
+        );
+    }
+
+    // ---------------- vmpi point-to-point ----------------------------------
+    {
+        let net = Network::new(2);
+        let a = net.endpoint(0);
+        let b = net.endpoint(1);
+        let n_msgs = if quick() { 2_000 } else { 20_000 };
+        let payload = vec![0f32; 1 << 14]; // 64 KiB
+        let bytes = payload.len() * 4 * n_msgs;
+        let recv_thread = {
+            let b = b.clone();
+            std::thread::spawn(move || {
+                for _ in 0..n_msgs {
+                    let _ = b.recv(0, 1).unwrap();
+                }
+            })
+        };
+        let s = bench("vmpi send+recv 64KiB", 0, 1, || {
+            for _ in 0..n_msgs {
+                a.send(1, 1, Var::f32(&[payload.len()], payload.clone())).unwrap();
+            }
+        });
+        recv_thread.join().unwrap();
+        println!(
+            "\n=== vmpi point-to-point ===\n\n  {n_msgs} × 64 KiB in {} → {:.2} GiB/s, {:.2} µs/msg",
+            sedar::util::human_duration(s.min),
+            bytes as f64 / s.min.as_secs_f64() / (1 << 30) as f64,
+            s.min.as_secs_f64() * 1e6 / n_msgs as f64
+        );
+    }
+
+    // ---------------- snapshot framing -------------------------------------
+    let mut rows = Vec::new();
+    let dir = std::env::temp_dir().join(format!("sedar-bench-snap-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    // A realistic checkpoint body: a rank's matrices (mostly f32 noise,
+    // which is the worst case for compression).
+    let mut store = VarStore::new();
+    let mut rng = SplitMix64::new(9);
+    let mut m = vec![0f32; 1 << 20];
+    rng.fill_f32(&mut m);
+    store.insert("A", Var::f32(&[1024, 1024], m));
+    let payload = store.serialize();
+    for codec in [Codec::Raw, Codec::Deflate(1), Codec::Deflate(6)] {
+        let p = dir.join("frame.bin");
+        let label = format!("{codec:?}");
+        rows.push((
+            bench(&format!("ckpt write {label} 4MiB"), 1, iters.min(30), || {
+                write_frame(&p, &payload, codec).unwrap();
+            }),
+            Some(payload.len()),
+        ));
+        rows.push((
+            bench(&format!("ckpt read  {label} 4MiB"), 1, iters.min(30), || {
+                black_box(read_frame(&p).unwrap());
+            }),
+            Some(payload.len()),
+        ));
+    }
+    rows.push((
+        bench("VarStore serialize 4MiB", 1, iters.min(50), || {
+            black_box(store.serialize());
+        }),
+        Some(payload.len()),
+    ));
+    print_stats("checkpoint substrate (t_cs drivers)", &rows);
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // ---------------- PJRT dispatch ----------------------------------------
+    let art = Engine::default_artifact_dir();
+    if Engine::artifacts_available(&art) {
+        let engine = Engine::start(&art).unwrap();
+        let h = engine.handle();
+        h.warm("matmul_r4_n64").unwrap();
+        let mut rng = SplitMix64::new(11);
+        let mut a = vec![0f32; 4 * 64];
+        let mut b = vec![0f32; 64 * 64];
+        rng.fill_f32(&mut a);
+        rng.fill_f32(&mut b);
+        let s = bench("engine.execute matmul_r4_n64", 3, iters.min(100), || {
+            black_box(
+                h.execute(
+                    "matmul_r4_n64",
+                    vec![Var::f32(&[4, 64], a.clone()), Var::f32(&[64, 64], b.clone())],
+                )
+                .unwrap(),
+            );
+        });
+        println!(
+            "\n=== PJRT dispatch (compute hot path) ===\n\n  warm execute: min {} mean {}  \
+             (2·r·n² = {} flop → {:.2} MFLOP/s incl. marshalling)",
+            sedar::util::human_duration(s.min),
+            sedar::util::human_duration(s.mean),
+            2 * 4 * 64 * 64,
+            (2.0 * 4.0 * 64.0 * 64.0) / s.min.as_secs_f64() / 1e6
+        );
+    } else {
+        println!("\n(PJRT dispatch bench skipped: no artifacts — run `make artifacts`)");
+    }
+}

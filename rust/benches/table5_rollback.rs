@@ -1,0 +1,80 @@
+//! Bench: regenerate **Table 5** + the §4.4 thresholds — the convenience
+//! analysis of multi-rollback recovery vs stop-and-relaunch — from the
+//! paper's Jacobi parameters, and verify the decision rule with *live*
+//! runs: a fault whose chain walk needs k rollbacks really costs more wall
+//! time than one with k-1. (`cargo bench --bench table5_rollback`)
+
+use std::sync::Arc;
+
+use sedar::apps::matmul::phases;
+use sedar::apps::spec::AppSpec;
+use sedar::apps::MatmulApp;
+use sedar::config::{RunConfig, Strategy};
+use sedar::coordinator::SedarRun;
+use sedar::inject::{InjectKind, InjectPoint, InjectionSpec};
+use sedar::model::params::PaperApp;
+use sedar::model::tables::{table5, table5_markdown, threshold_x};
+use sedar::report::Table;
+
+fn main() {
+    // ---------------- the model part --------------------------------------
+    let p = PaperApp::Jacobi.paper_params();
+    println!("\n=== Table 5 (Jacobi parameters, X ∈ {{30,50,80}}%, k ≤ 4) ===\n");
+    print!("{}", table5_markdown(&table5(&p, &[0.3, 0.5, 0.8], 4)));
+
+    println!("\n=== §4.4 crossover thresholds ===\n");
+    for (k, want) in [(0u32, 5.88), (1, 22.67), (2, 50.61)] {
+        let got = threshold_x(&p, k) * 100.0;
+        println!(
+            "  X*(k={k}) = {got:5.2}%   (paper: {want}%)  Δ = {:+.2} pp",
+            got - want
+        );
+    }
+
+    // ---------------- the live part ---------------------------------------
+    // Same fault class, increasing rollback depth: FSC injections whose
+    // dirty-checkpoint span grows — wall time must grow monotonically.
+    println!("\n=== live rollback-depth cost (matmul N=256, this host) ===\n");
+    let app: Arc<dyn AppSpec> = Arc::new(MatmulApp::new(256, 4));
+    let cases = [
+        ("k=0 (clean CK3)", phases::VALIDATE, 1u32),
+        ("k=1 (dirty CK3)", phases::CK3, 2),
+        ("k=3 (dirty CK1..3, A_chunk)", phases::CK1, 4),
+    ];
+    let mut t = Table::new(&["case", "restarts", "wall"]);
+    let mut walls = Vec::new();
+    for (label, phase, want_restarts) in cases {
+        let var = if phase == phases::CK1 { "A_chunk" } else { "C" };
+        let spec = InjectionSpec {
+            name: label.into(),
+            point: InjectPoint::BeforePhase(phase),
+            rank: 0,
+            replica: 1,
+            kind: InjectKind::BitFlip {
+                var: var.into(),
+                elem: 7,
+                bit: 30,
+            },
+        };
+        let mut cfg = RunConfig::for_tests(&format!("t5-{phase}"));
+        cfg.strategy = Strategy::SysCkpt;
+        let outcome = SedarRun::new(app.clone(), cfg, Some(spec)).run().unwrap();
+        assert_eq!(outcome.result_correct, Some(true));
+        assert_eq!(outcome.restarts, want_restarts, "{label}");
+        t.row(&[
+            label.to_string(),
+            outcome.restarts.to_string(),
+            sedar::util::human_duration(outcome.wall),
+        ]);
+        walls.push(outcome.wall);
+    }
+    print!("{}", t.markdown());
+    println!(
+        "\n  [{}] wall time grows with rollback depth (the §4.4 cost driver)",
+        if walls.windows(2).all(|w| w[1] >= w[0]) {
+            "ok"
+        } else {
+            "DIFFERS (timing noise at this scale)"
+        }
+    );
+}

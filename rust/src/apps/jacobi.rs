@@ -1,0 +1,300 @@
+//! SPMD Jacobi iteration for Laplace's equation (§4.3's second benchmark).
+//!
+//! The n×n grid is decomposed into horizontal row blocks, one per rank.
+//! Every iteration exchanges halo rows with both neighbors and sweeps the
+//! block with the 5-point stencil; every `ckpt_every` iterations a SEDAR
+//! checkpoint is taken. This is the paper's *most communication-intensive*
+//! pattern — its measured `f_d` is the largest of the three benchmarks
+//! (Table 3), which our Table-3 bench reproduces in shape.
+//!
+//! Phase layout (`I` iterations, `E = ckpt_every`):
+//!
+//! ```text
+//! [0] INIT
+//! [1..] groups of E × ITER phases followed by one CK phase
+//! [last-1] GATHER   master collects the blocks
+//! [last]   VALIDATE master compares the assembled grid between replicas
+//! ```
+//!
+//! The sweep runs through the AOT artifact `jacobi_r<rows>_n<n>` (a Pallas
+//! 5-point stencil kernel); the rust fallback is bit-identical.
+
+use crate::apps::oracle;
+use crate::apps::spec::AppSpec;
+use crate::error::Result;
+use crate::replica::ReplicaCtx;
+use crate::state::{Var, VarStore};
+
+/// SPMD Jacobi over `nranks` row blocks.
+#[derive(Debug, Clone)]
+pub struct JacobiApp {
+    /// Grid dimension (n × n); divisible by `nranks`.
+    pub n: usize,
+    pub nranks: usize,
+    /// Total iterations; divisible by `ckpt_every`.
+    pub iters: usize,
+    /// Checkpoint after every this many iterations.
+    pub ckpt_every: usize,
+}
+
+impl JacobiApp {
+    pub fn new(n: usize, nranks: usize, iters: usize, ckpt_every: usize) -> JacobiApp {
+        assert!(n % nranks == 0, "n must divide by nranks");
+        assert!(
+            iters % ckpt_every == 0,
+            "iters must divide by ckpt_every"
+        );
+        JacobiApp {
+            n,
+            nranks,
+            iters,
+            ckpt_every,
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.n / self.nranks
+    }
+
+    pub fn artifact(&self) -> String {
+        format!("jacobi_r{}_n{}", self.rows(), self.n)
+    }
+
+    fn n_cks(&self) -> u64 {
+        (self.iters / self.ckpt_every) as u64
+    }
+
+    /// Phase classification: INIT | Iter(i) | Ck(j) | GATHER | VALIDATE.
+    fn classify(&self, phase: u64) -> JPhase {
+        if phase == 0 {
+            return JPhase::Init;
+        }
+        let e = self.ckpt_every as u64;
+        let body = 1 + self.iters as u64 + self.n_cks();
+        if phase < body {
+            let p = phase - 1;
+            let group = p / (e + 1);
+            let within = p % (e + 1);
+            if within < e {
+                JPhase::Iter(group * e + within)
+            } else {
+                JPhase::Ck(group)
+            }
+        } else if phase == body {
+            JPhase::Gather
+        } else {
+            JPhase::Validate
+        }
+    }
+
+    /// Sweep one iteration of this rank's block (with halos attached).
+    fn sweep(&self, ctx: &ReplicaCtx, padded: Var) -> Result<Vec<f32>> {
+        let rows = self.rows();
+        let n = self.n;
+        let out = ctx.compute(&self.artifact(), vec![padded], |inputs| {
+            let g = inputs[0].buf.as_f32()?;
+            // Pure stencil over the padded (rows+2)×n input: out[i][j] =
+            // mean of the 4 neighbors; columns handled below by the caller.
+            let mut o = vec![0f32; rows * n];
+            for i in 0..rows {
+                let pi = i + 1;
+                for j in 0..n {
+                    let left = if j > 0 { g[pi * n + j - 1] } else { 0.0 };
+                    let right = if j < n - 1 { g[pi * n + j + 1] } else { 0.0 };
+                    o[i * n + j] =
+                        0.25 * (g[(pi - 1) * n + j] + g[(pi + 1) * n + j] + left + right);
+                }
+            }
+            Ok(vec![Var::f32(&[rows, n], o)])
+        })?;
+        Ok(out[0].buf.as_f32()?.to_vec())
+    }
+}
+
+#[derive(Debug, PartialEq)]
+enum JPhase {
+    Init,
+    Iter(u64),
+    Ck(u64),
+    Gather,
+    Validate,
+}
+
+impl AppSpec for JacobiApp {
+    fn name(&self) -> &'static str {
+        "jacobi"
+    }
+
+    fn nranks(&self) -> usize {
+        self.nranks
+    }
+
+    fn n_phases(&self) -> u64 {
+        1 + self.iters as u64 + self.n_cks() + 2
+    }
+
+    fn phase_name(&self, phase: u64) -> String {
+        match self.classify(phase) {
+            JPhase::Init => "INIT".into(),
+            JPhase::Iter(i) => format!("ITER{i}"),
+            JPhase::Ck(j) => format!("CK{j}"),
+            JPhase::Gather => "GATHER".into(),
+            JPhase::Validate => "VALIDATE".into(),
+        }
+    }
+
+    fn init_store(&self, rank: usize, seed: u64) -> VarStore {
+        let n = self.n;
+        let rows = self.rows();
+        let full = oracle::gen_matrix(seed.wrapping_mul(17).wrapping_add(3), n, n);
+        let block = full[rank * rows * n..(rank + 1) * rows * n].to_vec();
+        let mut s = VarStore::new();
+        s.insert("grid", Var::f32(&[rows, n], block));
+        s.insert("ghost_top", Var::f32(&[n], vec![0.0; n]));
+        s.insert("ghost_bot", Var::f32(&[n], vec![0.0; n]));
+        if rank == 0 {
+            s.insert("G", Var::f32(&[n, n], vec![0.0; n * n]));
+        }
+        s
+    }
+
+    fn run_phase(&self, ctx: &mut ReplicaCtx, phase: u64) -> Result<()> {
+        let n = self.n;
+        let rows = self.rows();
+        let rank = ctx.rank;
+        let last = self.nranks - 1;
+        match self.classify(phase) {
+            JPhase::Init => Ok(()),
+            JPhase::Ck(j) => ctx.checkpoint(j, &format!("CK{j}")),
+            JPhase::Iter(i) => {
+                let site = format!("ITER{i}");
+                // --- halo exchange (buffered sends first: no deadlock) ---
+                let (top_row, bot_row) = {
+                    let g = ctx.store.f32("grid")?;
+                    (
+                        Var::f32(&[n], g[0..n].to_vec()),
+                        Var::f32(&[n], g[(rows - 1) * n..rows * n].to_vec()),
+                    )
+                };
+                if rank > 0 {
+                    ctx.sedar_send_value(rank - 1, 7, &top_row, &site)?;
+                }
+                if rank < last {
+                    ctx.sedar_send_value(rank + 1, 8, &bot_row, &site)?;
+                }
+                if rank > 0 {
+                    ctx.sedar_recv(rank - 1, 8, "ghost_top", &site)?;
+                }
+                if rank < last {
+                    ctx.sedar_recv(rank + 1, 7, "ghost_bot", &site)?;
+                }
+                // --- sweep ---
+                let padded = {
+                    let g = ctx.store.f32("grid")?;
+                    let gt = ctx.store.f32("ghost_top")?;
+                    let gb = ctx.store.f32("ghost_bot")?;
+                    let mut p = Vec::with_capacity((rows + 2) * n);
+                    p.extend_from_slice(gt);
+                    p.extend_from_slice(g);
+                    p.extend_from_slice(gb);
+                    Var::f32(&[rows + 2, n], p)
+                };
+                let mut new = self.sweep(ctx, padded)?;
+                // Fixed (Dirichlet) boundary: restore global edge rows and
+                // the two edge columns from the current block.
+                {
+                    let g = ctx.store.f32("grid")?;
+                    if rank == 0 {
+                        new[0..n].copy_from_slice(&g[0..n]);
+                    }
+                    if rank == last {
+                        new[(rows - 1) * n..].copy_from_slice(&g[(rows - 1) * n..]);
+                    }
+                    for i in 0..rows {
+                        new[i * n] = g[i * n];
+                        new[i * n + n - 1] = g[i * n + n - 1];
+                    }
+                }
+                ctx.store.f32_mut("grid")?.copy_from_slice(&new);
+                Ok(())
+            }
+            JPhase::Gather => {
+                let parts = ctx.gather(0, "grid", "GATHER")?;
+                if let Some(parts) = parts {
+                    let g = ctx.store.f32_mut("G")?;
+                    for (r, part) in parts.iter().enumerate() {
+                        g[r * rows * n..(r + 1) * rows * n]
+                            .copy_from_slice(part.buf.as_f32()?);
+                    }
+                }
+                Ok(())
+            }
+            JPhase::Validate => {
+                if ctx.rank == 0 {
+                    ctx.validate_result("G", "VALIDATE")?;
+                }
+                Ok(())
+            }
+        }
+    }
+
+    fn significant_vars(&self, rank: usize) -> Vec<String> {
+        let mut v = vec!["grid".to_string()];
+        if rank == 0 {
+            v.push("G".to_string());
+        }
+        v
+    }
+
+    fn result_var(&self) -> &'static str {
+        "G"
+    }
+
+    fn expected_result(&self, seed: u64) -> Vec<f32> {
+        let full = oracle::gen_matrix(seed.wrapping_mul(17).wrapping_add(3), self.n, self.n);
+        oracle::jacobi_seq(&full, self.n, self.iters)
+    }
+
+    fn ckpt_phases(&self) -> Vec<u64> {
+        (0..self.n_phases())
+            .filter(|p| matches!(self.classify(*p), JPhase::Ck(_)))
+            .collect()
+    }
+
+    fn artifacts(&self) -> Vec<String> {
+        vec![self.artifact()]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phase_layout() {
+        let app = JacobiApp::new(64, 4, 6, 3);
+        // INIT + 6 iters + 2 cks + GATHER + VALIDATE = 11 phases.
+        assert_eq!(app.n_phases(), 11);
+        assert_eq!(app.phase_name(0), "INIT");
+        assert_eq!(app.phase_name(1), "ITER0");
+        assert_eq!(app.phase_name(3), "ITER2");
+        assert_eq!(app.phase_name(4), "CK0");
+        assert_eq!(app.phase_name(5), "ITER3");
+        assert_eq!(app.phase_name(8), "CK1");
+        assert_eq!(app.phase_name(9), "GATHER");
+        assert_eq!(app.phase_name(10), "VALIDATE");
+        assert_eq!(app.ckpt_phases(), vec![4, 8]);
+    }
+
+    #[test]
+    fn oracle_block_consistency() {
+        // The sequential oracle and a manual single-rank sweep agree.
+        let app = JacobiApp::new(16, 4, 4, 2);
+        let want = app.expected_result(5);
+        assert_eq!(want.len(), 256);
+        // Boundary preserved by the oracle.
+        let full = oracle::gen_matrix(5u64.wrapping_mul(17).wrapping_add(3), 16, 16);
+        assert_eq!(want[0], full[0]);
+        assert_eq!(want[255], full[255]);
+    }
+}

@@ -1,0 +1,313 @@
+//! The Master/Worker matrix-multiplication test application — Algorithm 3
+//! of the paper, the substrate of the 64-scenario workfault (§4.1).
+//!
+//! Phase structure (cursor values in brackets):
+//!
+//! ```text
+//! [0] INIT      every rank builds its initial store (master: A, B, C)
+//! [1] CK0       SEDAR_Ckpt()
+//! [2] SCATTER   master scatters row-chunks of A (keeps chunk 0)
+//! [3] CK1       SEDAR_Ckpt()
+//! [4] BCAST     master broadcasts B
+//! [5] CK2       SEDAR_Ckpt()
+//! [6] MATMUL    every rank computes C_chunk = A_chunk × B (sub-blocked)
+//! [7] GATHER    master gathers the C chunks
+//! [8] CK3       SEDAR_Ckpt()
+//! [9] VALIDATE  master compares the final C between replicas
+//! ```
+//!
+//! The MATMUL phase is split into `sub_blocks` row bands so the TOE
+//! scenarios (index-variable corruption, e.g. Scenario 59) can force one
+//! replica to redo part of its work and miss the GATHER rendezvous.
+//!
+//! The compute hot spot runs through the AOT artifact
+//! `matmul_r<band-rows>_n<N>` (Layer 1 Pallas kernel under Layer 2 JAX),
+//! falling back to a bit-identical naive loop when artifacts are disabled.
+
+use crate::apps::oracle;
+use crate::apps::spec::AppSpec;
+use crate::error::Result;
+use crate::replica::ReplicaCtx;
+use crate::state::{Var, VarStore};
+
+/// Phase cursors (public: the workfault catalog addresses windows by them).
+pub mod phases {
+    pub const INIT: u64 = 0;
+    pub const CK0: u64 = 1;
+    pub const SCATTER: u64 = 2;
+    pub const CK1: u64 = 3;
+    pub const BCAST: u64 = 4;
+    pub const CK2: u64 = 5;
+    pub const MATMUL: u64 = 6;
+    pub const GATHER: u64 = 7;
+    pub const CK3: u64 = 8;
+    pub const VALIDATE: u64 = 9;
+    pub const COUNT: u64 = 10;
+}
+
+/// Master/Worker `C = A × B` over `nranks` ranks (rank 0 = master, which
+/// also computes a chunk, as in the paper's test application).
+#[derive(Debug, Clone)]
+pub struct MatmulApp {
+    /// Matrix dimension (N × N). Must be divisible by `nranks * sub_blocks`.
+    pub n: usize,
+    pub nranks: usize,
+    /// Row bands per rank in the MATMUL phase.
+    pub sub_blocks: usize,
+}
+
+impl MatmulApp {
+    pub fn new(n: usize, nranks: usize) -> MatmulApp {
+        let app = MatmulApp {
+            n,
+            nranks,
+            sub_blocks: 4,
+        };
+        assert!(
+            n % (nranks * app.sub_blocks) == 0,
+            "N={n} must be divisible by nranks*sub_blocks={}",
+            nranks * app.sub_blocks
+        );
+        app
+    }
+
+    /// Rows of each rank's chunk.
+    pub fn chunk_rows(&self) -> usize {
+        self.n / self.nranks
+    }
+
+    /// Rows of one compute sub-block.
+    pub fn band_rows(&self) -> usize {
+        self.chunk_rows() / self.sub_blocks
+    }
+
+    /// The AOT artifact this app's compute uses.
+    pub fn artifact(&self) -> String {
+        format!("matmul_r{}_n{}", self.band_rows(), self.n)
+    }
+
+    fn seed_a(seed: u64) -> u64 {
+        seed.wrapping_mul(31).wrapping_add(1)
+    }
+
+    fn seed_b(seed: u64) -> u64 {
+        seed.wrapping_mul(31).wrapping_add(2)
+    }
+
+    /// Compute one row band: `C_band = A_band × B`.
+    fn compute_band(&self, ctx: &ReplicaCtx, a_band: Var, b: Var) -> Result<Vec<f32>> {
+        let rows = self.band_rows();
+        let n = self.n;
+        let out = ctx.compute(&self.artifact(), vec![a_band, b], |inputs| {
+            let a = inputs[0].buf.as_f32()?;
+            let b = inputs[1].buf.as_f32()?;
+            Ok(vec![Var::f32(
+                &[rows, n],
+                oracle::matmul_seq(a, b, rows, n, n),
+            )])
+        })?;
+        Ok(out[0].buf.as_f32()?.to_vec())
+    }
+}
+
+impl AppSpec for MatmulApp {
+    fn name(&self) -> &'static str {
+        "matmul"
+    }
+
+    fn nranks(&self) -> usize {
+        self.nranks
+    }
+
+    fn n_phases(&self) -> u64 {
+        phases::COUNT
+    }
+
+    fn phase_name(&self, phase: u64) -> String {
+        match phase {
+            phases::INIT => "INIT",
+            phases::CK0 => "CK0",
+            phases::SCATTER => "SCATTER",
+            phases::CK1 => "CK1",
+            phases::BCAST => "BCAST",
+            phases::CK2 => "CK2",
+            phases::MATMUL => "MATMUL",
+            phases::GATHER => "GATHER",
+            phases::CK3 => "CK3",
+            phases::VALIDATE => "VALIDATE",
+            _ => "?",
+        }
+        .to_string()
+    }
+
+    fn init_store(&self, rank: usize, seed: u64) -> VarStore {
+        let n = self.n;
+        let rows = self.chunk_rows();
+        let mut s = VarStore::new();
+        if rank == 0 {
+            s.insert(
+                "A",
+                Var::f32(&[n, n], oracle::gen_matrix(Self::seed_a(seed), n, n)),
+            );
+            s.insert(
+                "B",
+                Var::f32(&[n, n], oracle::gen_matrix(Self::seed_b(seed), n, n)),
+            );
+            s.insert("C", Var::f32(&[n, n], vec![0.0; n * n]));
+        } else {
+            s.insert("B", Var::f32(&[n, n], vec![0.0; n * n]));
+        }
+        s.insert("A_chunk", Var::f32(&[rows, n], vec![0.0; rows * n]));
+        s.insert("C_chunk", Var::f32(&[rows, n], vec![0.0; rows * n]));
+        s
+    }
+
+    fn run_phase(&self, ctx: &mut ReplicaCtx, phase: u64) -> Result<()> {
+        let n = self.n;
+        let rows = self.chunk_rows();
+        match phase {
+            phases::INIT => Ok(()),
+            phases::CK0 => ctx.checkpoint(0, "CK0"),
+            phases::SCATTER => {
+                let chunks = if ctx.rank == 0 {
+                    let a = ctx.store.f32("A")?;
+                    Some(
+                        (0..self.nranks)
+                            .map(|r| {
+                                Var::f32(&[rows, n], a[r * rows * n..(r + 1) * rows * n].to_vec())
+                            })
+                            .collect(),
+                    )
+                } else {
+                    None
+                };
+                ctx.scatter(0, chunks, "A_chunk", "SCATTER")
+            }
+            phases::CK1 => ctx.checkpoint(1, "CK1"),
+            phases::BCAST => ctx.bcast(0, "B", "BCAST"),
+            phases::CK2 => ctx.checkpoint(2, "CK2"),
+            phases::MATMUL => {
+                let band = self.band_rows();
+                let b = ctx.store.get("B")?.clone();
+                let mut sb: u64 = 0;
+                while sb < self.sub_blocks as u64 {
+                    let lo = sb as usize * band * n;
+                    let hi = lo + band * n;
+                    let a_band = {
+                        let a = ctx.store.f32("A_chunk")?;
+                        Var::f32(&[band, n], a[lo..hi].to_vec())
+                    };
+                    let c_band = self.compute_band(ctx, a_band, b.clone())?;
+                    ctx.store.f32_mut("C_chunk")?[lo..hi].copy_from_slice(&c_band);
+                    // Index-corruption injection (TOE scenarios): the loop
+                    // variable is knocked back, the replica redoes work and
+                    // arrives late at GATHER.
+                    if let Some((redo, delay)) = ctx.maybe_index_rollback(phases::MATMUL, sb) {
+                        std::thread::sleep(delay);
+                        sb = sb.saturating_sub(redo);
+                        continue;
+                    }
+                    sb += 1;
+                }
+                Ok(())
+            }
+            phases::GATHER => {
+                let parts = ctx.gather(0, "C_chunk", "GATHER")?;
+                if let Some(parts) = parts {
+                    let c = ctx.store.f32_mut("C")?;
+                    for (r, part) in parts.iter().enumerate() {
+                        let p = part.buf.as_f32()?;
+                        c[r * rows * n..(r + 1) * rows * n].copy_from_slice(p);
+                    }
+                }
+                Ok(())
+            }
+            phases::CK3 => ctx.checkpoint(3, "CK3"),
+            phases::VALIDATE => {
+                if ctx.rank == 0 {
+                    ctx.validate_result("C", "VALIDATE")?;
+                }
+                Ok(())
+            }
+            other => unreachable!("matmul has no phase {other}"),
+        }
+    }
+
+    fn significant_vars(&self, rank: usize) -> Vec<String> {
+        if rank == 0 {
+            vec!["A", "B", "C", "A_chunk", "C_chunk"]
+        } else {
+            vec!["A_chunk", "B", "C_chunk"]
+        }
+        .into_iter()
+        .map(String::from)
+        .collect()
+    }
+
+    fn result_var(&self) -> &'static str {
+        "C"
+    }
+
+    fn expected_result(&self, seed: u64) -> Vec<f32> {
+        let n = self.n;
+        let a = oracle::gen_matrix(Self::seed_a(seed), n, n);
+        let b = oracle::gen_matrix(Self::seed_b(seed), n, n);
+        oracle::matmul_seq(&a, &b, n, n, n)
+    }
+
+    fn ckpt_phases(&self) -> Vec<u64> {
+        vec![phases::CK0, phases::CK1, phases::CK2, phases::CK3]
+    }
+
+    fn artifacts(&self) -> Vec<String> {
+        vec![self.artifact()]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geometry() {
+        let app = MatmulApp::new(64, 4);
+        assert_eq!(app.chunk_rows(), 16);
+        assert_eq!(app.band_rows(), 4);
+        assert_eq!(app.artifact(), "matmul_r4_n64");
+        assert_eq!(app.n_phases(), 10);
+    }
+
+    #[test]
+    fn phase_names_match_paper() {
+        let app = MatmulApp::new(64, 4);
+        assert_eq!(app.phase_name(2), "SCATTER");
+        assert_eq!(app.cursor_of("GATHER"), 7);
+        assert_eq!(app.ckpt_phases().len(), 4);
+    }
+
+    #[test]
+    fn init_stores_deterministic_and_distinct() {
+        let app = MatmulApp::new(32, 4);
+        let m1 = app.init_store(0, 7);
+        let m2 = app.init_store(0, 7);
+        assert_eq!(m1, m2);
+        let w = app.init_store(1, 7);
+        assert!(!w.contains("A"));
+        assert!(w.contains("A_chunk"));
+    }
+
+    #[test]
+    fn oracle_is_full_matmul() {
+        let app = MatmulApp::new(16, 4);
+        let c = app.expected_result(3);
+        assert_eq!(c.len(), 256);
+        // Spot-check one element against a manual dot product.
+        let a = oracle::gen_matrix(MatmulApp::seed_a(3), 16, 16);
+        let b = oracle::gen_matrix(MatmulApp::seed_b(3), 16, 16);
+        let mut acc = 0f32;
+        for k in 0..16 {
+            acc += a[5 * 16 + k] * b[k * 16 + 9];
+        }
+        assert_eq!(c[5 * 16 + 9], acc);
+    }
+}

@@ -1,0 +1,27 @@
+//! The benchmark applications of the paper's evaluation (§4.1, §4.3).
+//!
+//! Three communication patterns, as in the paper:
+//!
+//! * [`matmul`] — Master/Worker matrix multiplication, the §4.1 test
+//!   application (Algorithm 3) over which the 64-scenario workfault is
+//!   defined;
+//! * [`jacobi`] — SPMD Jacobi iteration for Laplace's equation (neighbor
+//!   halo exchange every iteration);
+//! * [`sw`] — pipelined Smith-Waterman DNA sequence alignment (frontier
+//!   flows rank→rank+1).
+//!
+//! All are phase-structured [`spec::AppSpec`]s whose compute hot spots run
+//! through the AOT Pallas/XLA artifacts (with bit-deterministic pure-rust
+//! fallbacks), and all are deterministic — the SEDAR replication
+//! prerequisite.
+
+pub mod jacobi;
+pub mod matmul;
+pub mod oracle;
+pub mod spec;
+pub mod sw;
+
+pub use jacobi::JacobiApp;
+pub use matmul::MatmulApp;
+pub use spec::AppSpec;
+pub use sw::SwApp;

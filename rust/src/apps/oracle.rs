@@ -1,0 +1,168 @@
+//! Sequential ground-truth implementations of the three benchmarks.
+//!
+//! These run outside the fault-tolerance machinery and outside XLA; the
+//! coordinator compares the protected run's final result against them, which
+//! closes the end-to-end loop: *a recovered execution must produce the same
+//! answer as an unprotected sequential one*.
+
+use crate::util::prng::SplitMix64;
+
+/// Deterministic workload matrix of `rows × cols`, seeded like the apps do.
+pub fn gen_matrix(seed: u64, rows: usize, cols: usize) -> Vec<f32> {
+    let mut rng = SplitMix64::new(seed);
+    let mut m = vec![0f32; rows * cols];
+    rng.fill_f32(&mut m);
+    m
+}
+
+/// Naive `C = A × B`, row-major, k-innermost — the exact accumulation order
+/// the distributed fallback uses, so results match bitwise.
+pub fn matmul_seq(a: &[f32], b: &[f32], n_rows: usize, n_inner: usize, n_cols: usize) -> Vec<f32> {
+    let mut c = vec![0f32; n_rows * n_cols];
+    for i in 0..n_rows {
+        for j in 0..n_cols {
+            let mut acc = 0f32;
+            for k in 0..n_inner {
+                acc += a[i * n_inner + k] * b[k * n_cols + j];
+            }
+            c[i * n_cols + j] = acc;
+        }
+    }
+    c
+}
+
+/// Jacobi sweeps on an `n × n` grid with fixed boundary, `iters` iterations.
+/// Interior point = mean of its 4 neighbors.
+pub fn jacobi_seq(grid0: &[f32], n: usize, iters: usize) -> Vec<f32> {
+    let mut cur = grid0.to_vec();
+    let mut next = grid0.to_vec();
+    for _ in 0..iters {
+        for i in 1..n - 1 {
+            for j in 1..n - 1 {
+                next[i * n + j] = 0.25
+                    * (cur[(i - 1) * n + j]
+                        + cur[(i + 1) * n + j]
+                        + cur[i * n + j - 1]
+                        + cur[i * n + j + 1]);
+            }
+        }
+        std::mem::swap(&mut cur, &mut next);
+    }
+    cur
+}
+
+/// Smith-Waterman local-alignment score of two byte sequences with linear
+/// gap penalty. Returns the maximum cell of the DP matrix.
+///
+/// Scoring: match = +2, mismatch = -1, gap = -1 (the classic defaults the
+/// SW benchmark of the paper's reference [29] uses for DNA).
+pub fn sw_seq(s1: &[u8], s2: &[u8]) -> f32 {
+    let m = s1.len();
+    let n = s2.len();
+    let mut prev = vec![0f32; n + 1];
+    let mut cur = vec![0f32; n + 1];
+    let mut best = 0f32;
+    for i in 1..=m {
+        cur[0] = 0.0;
+        for j in 1..=n {
+            let score = if s1[i - 1] == s2[j - 1] { 2.0 } else { -1.0 };
+            let v = (prev[j - 1] + score)
+                .max(prev[j] - 1.0)
+                .max(cur[j - 1] - 1.0)
+                .max(0.0);
+            cur[j] = v;
+            if v > best {
+                best = v;
+            }
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    best
+}
+
+/// Deterministic DNA-like sequence (values 0..4).
+pub fn gen_sequence(seed: u64, len: usize) -> Vec<u8> {
+    let mut rng = SplitMix64::new(seed);
+    (0..len).map(|_| (rng.below(4)) as u8).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        // A × I = A
+        let n = 4;
+        let a = gen_matrix(1, n, n);
+        let mut id = vec![0f32; n * n];
+        for i in 0..n {
+            id[i * n + i] = 1.0;
+        }
+        let c = matmul_seq(&a, &id, n, n, n);
+        assert_eq!(c, a);
+    }
+
+    #[test]
+    fn matmul_known_2x2() {
+        let a = vec![1.0, 2.0, 3.0, 4.0];
+        let b = vec![5.0, 6.0, 7.0, 8.0];
+        let c = matmul_seq(&a, &b, 2, 2, 2);
+        assert_eq!(c, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn jacobi_converges_toward_boundary_mean() {
+        // All-zero boundary, hot interior: interior must cool monotonically.
+        let n = 8;
+        let mut g = vec![0f32; n * n];
+        for i in 1..n - 1 {
+            for j in 1..n - 1 {
+                g[i * n + j] = 100.0;
+            }
+        }
+        let out = jacobi_seq(&g, n, 200);
+        for i in 1..n - 1 {
+            for j in 1..n - 1 {
+                assert!(out[i * n + j] < 1.0, "grid did not relax");
+            }
+        }
+        // Boundary untouched.
+        assert_eq!(out[0], 0.0);
+    }
+
+    #[test]
+    fn jacobi_fixed_point_is_fixed() {
+        // A constant grid is a fixed point of the averaging operator.
+        let n = 6;
+        let g = vec![3.5f32; n * n];
+        let out = jacobi_seq(&g, n, 10);
+        assert_eq!(out, g);
+    }
+
+    #[test]
+    fn sw_identical_sequences() {
+        let s = b"ACGTACGT";
+        // Perfect match: 2 points per symbol.
+        assert_eq!(sw_seq(s, s), 16.0);
+    }
+
+    #[test]
+    fn sw_no_similarity() {
+        assert_eq!(sw_seq(b"AAAA", b"CCCC"), 0.0);
+    }
+
+    #[test]
+    fn sw_known_alignment() {
+        // "GGTT" vs "GGAT": best local alignment GG (4) or GG?T with
+        // mismatch: GGTT vs GGAT = 2+2-1+2 = 5.
+        assert_eq!(sw_seq(b"GGTT", b"GGAT"), 5.0);
+    }
+
+    #[test]
+    fn sequences_deterministic() {
+        assert_eq!(gen_sequence(7, 32), gen_sequence(7, 32));
+        assert_ne!(gen_sequence(7, 32), gen_sequence(8, 32));
+        assert!(gen_sequence(7, 100).iter().all(|&b| b < 4));
+    }
+}

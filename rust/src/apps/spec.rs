@@ -1,0 +1,66 @@
+//! The application contract: phase-structured, resumable, deterministic
+//! message-passing programs.
+//!
+//! SEDAR's recovery needs to relaunch an application *from a phase
+//! boundary* with restored state (the DMTCP restart / user-checkpoint
+//! restore paths). Apps therefore describe themselves as an ordered list of
+//! **phases**; everything a phase needs must live in the replica's
+//! [`VarStore`] (so that a snapshot taken at any checkpoint phase is
+//! sufficient to resume). This is the in-library equivalent of DMTCP
+//! capturing the whole process image.
+
+use crate::error::Result;
+use crate::replica::ReplicaCtx;
+use crate::state::VarStore;
+
+/// A deterministic, phase-structured parallel application.
+pub trait AppSpec: Send + Sync {
+    /// Short name (used for run dirs, artifact names, reports).
+    fn name(&self) -> &'static str;
+
+    /// World size (rank 0 is the Master where the pattern has one).
+    fn nranks(&self) -> usize;
+
+    /// Number of phases; cursors run `0..n_phases()`.
+    fn n_phases(&self) -> u64;
+
+    /// Human name of a phase (`"SCATTER"`, `"CK2"`, …) — used for detection
+    /// sites and traces, so it must match what the scenario oracle predicts.
+    fn phase_name(&self, phase: u64) -> String;
+
+    /// Fresh phase-0 state for `rank`, generated deterministically from
+    /// `seed` (both replicas call this with the same arguments and must get
+    /// bit-identical stores).
+    fn init_store(&self, rank: usize, seed: u64) -> VarStore;
+
+    /// Execute one phase on this replica.
+    fn run_phase(&self, ctx: &mut ReplicaCtx, phase: u64) -> Result<()>;
+
+    /// The variables a user-level checkpoint must capture for `rank`
+    /// (§3.3's "set of variables that are significant to the application").
+    fn significant_vars(&self, rank: usize) -> Vec<String>;
+
+    /// Name of the final-result variable on rank 0.
+    fn result_var(&self) -> &'static str;
+
+    /// Ground-truth final result (computed sequentially, outside the
+    /// fault-tolerance machinery) — the end-to-end correctness oracle.
+    fn expected_result(&self, seed: u64) -> Vec<f32>;
+
+    /// Cursors of the checkpoint phases, in order (ck number = index).
+    fn ckpt_phases(&self) -> Vec<u64>;
+
+    /// AOT artifacts this app's compute needs (warmed by the coordinator;
+    /// if any is missing the run falls back to the pure-rust compute path).
+    fn artifacts(&self) -> Vec<String> {
+        Vec::new()
+    }
+
+    /// Cursor of the phase whose name is `name` (convenience for scenario
+    /// tables; panics if absent).
+    fn cursor_of(&self, name: &str) -> u64 {
+        (0..self.n_phases())
+            .find(|p| self.phase_name(*p) == name)
+            .unwrap_or_else(|| panic!("{}: no phase named {name}", self.name()))
+    }
+}

@@ -1,0 +1,386 @@
+//! Pipelined Smith-Waterman DNA sequence alignment (§4.3's third benchmark).
+//!
+//! The DP matrix (s1 × s2) is decomposed into **column bands**, one per
+//! rank; s1 is processed in row blocks that flow through the ranks as a
+//! pipeline: rank r computes block b as soon as rank r-1 has produced the
+//! frontier (the H values of its band's last column) for block b. This is
+//! the paper's *pipeline* communication pattern — long-lived point-to-point
+//! streams between neighbors only.
+//!
+//! Scoring: match +2, mismatch −1, linear gap −1, local alignment (H ≥ 0).
+//! Only the similarity *score* is validated at the end, which is why SW has
+//! the smallest `T_comp` of Table 3 — our measured-parameters bench
+//! reproduces that shape.
+//!
+//! The block compute runs through the AOT artifact `sw_b<rows>_w<band>`
+//! (Layer 1: a Pallas row-update kernel + the max-plus prefix trick — see
+//! python/compile/kernels/sw.py); the rust fallback is bit-identical
+//! because all cell values are small integers exactly representable in f32.
+
+use crate::apps::oracle;
+use crate::apps::spec::AppSpec;
+use crate::error::Result;
+use crate::replica::ReplicaCtx;
+use crate::state::{Var, VarStore};
+
+/// Pipelined Smith-Waterman: `s1` (length m) against `s2` (length m),
+/// column bands of width `m / nranks`, row blocks of `block_rows`.
+#[derive(Debug, Clone)]
+pub struct SwApp {
+    /// Sequence length (both sequences).
+    pub m: usize,
+    pub nranks: usize,
+    /// Rows per pipeline block; divides `m`.
+    pub block_rows: usize,
+    /// Checkpoint after every this many blocks (0 = no mid-run ckpts).
+    pub ckpt_every: usize,
+}
+
+impl SwApp {
+    pub fn new(m: usize, nranks: usize, block_rows: usize, ckpt_every: usize) -> SwApp {
+        assert!(m % nranks == 0, "m must divide by nranks");
+        assert!(m % block_rows == 0, "m must divide by block_rows");
+        let blocks = m / block_rows;
+        if ckpt_every > 0 {
+            assert!(blocks % ckpt_every == 0, "blocks must divide by ckpt_every");
+        }
+        SwApp {
+            m,
+            nranks,
+            block_rows,
+            ckpt_every,
+        }
+    }
+
+    pub fn band_width(&self) -> usize {
+        self.m / self.nranks
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.m / self.block_rows
+    }
+
+    pub fn artifact(&self) -> String {
+        format!("sw_b{}_w{}", self.block_rows, self.band_width())
+    }
+
+    fn n_cks(&self) -> u64 {
+        if self.ckpt_every == 0 {
+            0
+        } else {
+            (self.n_blocks() / self.ckpt_every) as u64
+        }
+    }
+
+    fn classify(&self, phase: u64) -> SPhase {
+        if phase == 0 {
+            return SPhase::Init;
+        }
+        let body = 1 + self.n_blocks() as u64 + self.n_cks();
+        if phase < body {
+            if self.ckpt_every == 0 {
+                return SPhase::Block((phase - 1) as usize);
+            }
+            let e = self.ckpt_every as u64;
+            let p = phase - 1;
+            let group = p / (e + 1);
+            let within = p % (e + 1);
+            if within < e {
+                SPhase::Block((group * e + within) as usize)
+            } else {
+                SPhase::Ck(group)
+            }
+        } else if phase == body {
+            SPhase::Reduce
+        } else {
+            SPhase::Validate
+        }
+    }
+
+    fn seed_s1(seed: u64) -> u64 {
+        seed.wrapping_mul(101).wrapping_add(11)
+    }
+
+    fn seed_s2(seed: u64) -> u64 {
+        seed.wrapping_mul(101).wrapping_add(22)
+    }
+
+    /// Compute one `block_rows × band_width` DP block.
+    ///
+    /// Inputs: the block's s1 symbols, the band's s2 symbols, the carried
+    /// previous row (H of the last processed row over the band), and the
+    /// left frontier `left[0..=block_rows]` where `left[i]` is the left
+    /// neighbor's last-column H at global row `row_start - 1 + i` (zeros
+    /// for rank 0). Returns (new prev_row, outgoing frontier, block max).
+    #[allow(clippy::too_many_arguments)]
+    fn compute_block(
+        &self,
+        ctx: &ReplicaCtx,
+        s1_block: Var,
+        s2_band: Var,
+        prev_row: Var,
+        left: Var,
+    ) -> Result<(Vec<f32>, Vec<f32>, f32)> {
+        let br = self.block_rows;
+        let bw = self.band_width();
+        let out = ctx.compute(
+            &self.artifact(),
+            vec![s1_block, s2_band, prev_row, left],
+            |inputs| {
+                let s1 = inputs[0].buf.as_f32()?;
+                let s2 = inputs[1].buf.as_f32()?;
+                let prev0 = inputs[2].buf.as_f32()?;
+                let left = inputs[3].buf.as_f32()?;
+                let mut prev = prev0.to_vec();
+                let mut frontier = vec![0f32; br + 1];
+                frontier[0] = prev[bw - 1];
+                let mut best = 0f32;
+                let mut cur = vec![0f32; bw];
+                for i in 0..br {
+                    for j in 0..bw {
+                        let s = if s1[i] == s2[j] { 2.0 } else { -1.0 };
+                        let diag = if j == 0 { left[i] } else { prev[j - 1] };
+                        let up = prev[j];
+                        let lf = if j == 0 { left[i + 1] } else { cur[j - 1] };
+                        cur[j] = (diag + s).max(up - 1.0).max(lf - 1.0).max(0.0);
+                        if cur[j] > best {
+                            best = cur[j];
+                        }
+                    }
+                    prev.copy_from_slice(&cur);
+                    frontier[i + 1] = cur[bw - 1];
+                }
+                Ok(vec![
+                    Var::f32(&[bw], prev),
+                    Var::f32(&[br + 1], frontier),
+                    Var::f32(&[1], vec![best]),
+                ])
+            },
+        )?;
+        Ok((
+            out[0].buf.as_f32()?.to_vec(),
+            out[1].buf.as_f32()?.to_vec(),
+            out[2].buf.as_f32()?[0],
+        ))
+    }
+}
+
+#[derive(Debug, PartialEq)]
+enum SPhase {
+    Init,
+    Block(usize),
+    Ck(u64),
+    Reduce,
+    Validate,
+}
+
+impl AppSpec for SwApp {
+    fn name(&self) -> &'static str {
+        "sw"
+    }
+
+    fn nranks(&self) -> usize {
+        self.nranks
+    }
+
+    fn n_phases(&self) -> u64 {
+        1 + self.n_blocks() as u64 + self.n_cks() + 2
+    }
+
+    fn phase_name(&self, phase: u64) -> String {
+        match self.classify(phase) {
+            SPhase::Init => "INIT".into(),
+            SPhase::Block(b) => format!("BLOCK{b}"),
+            SPhase::Ck(j) => format!("CK{j}"),
+            SPhase::Reduce => "REDUCE".into(),
+            SPhase::Validate => "VALIDATE".into(),
+        }
+    }
+
+    fn init_store(&self, rank: usize, seed: u64) -> VarStore {
+        let bw = self.band_width();
+        let s1 = oracle::gen_sequence(Self::seed_s1(seed), self.m);
+        let s2 = oracle::gen_sequence(Self::seed_s2(seed), self.m);
+        let mut s = VarStore::new();
+        // Sequences as f32 so they can feed the XLA kernel directly.
+        s.insert(
+            "s1",
+            Var::f32(&[self.m], s1.iter().map(|&b| b as f32).collect()),
+        );
+        s.insert(
+            "s2_band",
+            Var::f32(
+                &[bw],
+                s2[rank * bw..(rank + 1) * bw].iter().map(|&b| b as f32).collect(),
+            ),
+        );
+        s.insert("prev_row", Var::f32(&[bw], vec![0.0; bw]));
+        s.insert("left_col", Var::f32(&[self.block_rows + 1], vec![0.0; self.block_rows + 1]));
+        s.insert("local_max", Var::f32(&[1], vec![0.0]));
+        if rank == 0 {
+            s.insert("score", Var::f32(&[1], vec![0.0]));
+        }
+        s
+    }
+
+    fn run_phase(&self, ctx: &mut ReplicaCtx, phase: u64) -> Result<()> {
+        let br = self.block_rows;
+        let rank = ctx.rank;
+        let last = self.nranks - 1;
+        match self.classify(phase) {
+            SPhase::Init => Ok(()),
+            SPhase::Ck(j) => ctx.checkpoint(j, &format!("CK{j}")),
+            SPhase::Block(b) => {
+                let site = format!("BLOCK{b}");
+                // Receive the left frontier from the pipeline predecessor.
+                if rank > 0 {
+                    ctx.sedar_recv(rank - 1, 9, "left_col", &site)?;
+                } else {
+                    // Left boundary of the DP matrix: all zeros.
+                    let z = vec![0.0; br + 1];
+                    ctx.store.f32_mut("left_col")?.copy_from_slice(&z);
+                }
+                let (s1_block, s2_band, prev_row, left) = {
+                    let s1 = ctx.store.f32("s1")?;
+                    (
+                        Var::f32(&[br], s1[b * br..(b + 1) * br].to_vec()),
+                        ctx.store.get("s2_band")?.clone(),
+                        ctx.store.get("prev_row")?.clone(),
+                        ctx.store.get("left_col")?.clone(),
+                    )
+                };
+                let (new_prev, frontier, best) =
+                    self.compute_block(ctx, s1_block, s2_band, prev_row, left)?;
+                ctx.store.f32_mut("prev_row")?.copy_from_slice(&new_prev);
+                {
+                    let lm = ctx.store.f32_mut("local_max")?;
+                    if best > lm[0] {
+                        lm[0] = best;
+                    }
+                }
+                // Pass the frontier downstream.
+                if rank < last {
+                    let f = Var::f32(&[br + 1], frontier);
+                    ctx.sedar_send_value(rank + 1, 9, &f, &site)?;
+                }
+                Ok(())
+            }
+            SPhase::Reduce => {
+                let parts = ctx.gather(0, "local_max", "REDUCE")?;
+                if let Some(parts) = parts {
+                    let mut best = 0f32;
+                    for p in &parts {
+                        best = best.max(p.buf.as_f32()?[0]);
+                    }
+                    ctx.store.f32_mut("score")?[0] = best;
+                }
+                Ok(())
+            }
+            SPhase::Validate => {
+                if ctx.rank == 0 {
+                    ctx.validate_result("score", "VALIDATE")?;
+                }
+                Ok(())
+            }
+        }
+    }
+
+    fn significant_vars(&self, rank: usize) -> Vec<String> {
+        let mut v = vec![
+            "s1".to_string(),
+            "s2_band".to_string(),
+            "prev_row".to_string(),
+            "left_col".to_string(),
+            "local_max".to_string(),
+        ];
+        if rank == 0 {
+            v.push("score".to_string());
+        }
+        v
+    }
+
+    fn result_var(&self) -> &'static str {
+        "score"
+    }
+
+    fn expected_result(&self, seed: u64) -> Vec<f32> {
+        let s1 = oracle::gen_sequence(Self::seed_s1(seed), self.m);
+        let s2 = oracle::gen_sequence(Self::seed_s2(seed), self.m);
+        vec![oracle::sw_seq(&s1, &s2)]
+    }
+
+    fn ckpt_phases(&self) -> Vec<u64> {
+        (0..self.n_phases())
+            .filter(|p| matches!(self.classify(*p), SPhase::Ck(_)))
+            .collect()
+    }
+
+    fn artifacts(&self) -> Vec<String> {
+        vec![self.artifact()]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phase_layout_with_ckpts() {
+        let app = SwApp::new(64, 4, 16, 2);
+        // 4 blocks, ck every 2 → INIT + 4 + 2 + REDUCE + VALIDATE = 9.
+        assert_eq!(app.n_phases(), 9);
+        assert_eq!(app.phase_name(1), "BLOCK0");
+        assert_eq!(app.phase_name(3), "CK0");
+        assert_eq!(app.phase_name(6), "CK1");
+        assert_eq!(app.phase_name(7), "REDUCE");
+        assert_eq!(app.ckpt_phases(), vec![3, 6]);
+    }
+
+    #[test]
+    fn phase_layout_no_ckpts() {
+        let app = SwApp::new(64, 4, 16, 0);
+        assert_eq!(app.n_phases(), 7);
+        assert_eq!(app.phase_name(4), "BLOCK3");
+        assert!(app.ckpt_phases().is_empty());
+    }
+
+    #[test]
+    fn band_geometry() {
+        let app = SwApp::new(128, 4, 32, 0);
+        assert_eq!(app.band_width(), 32);
+        assert_eq!(app.n_blocks(), 4);
+        assert_eq!(app.artifact(), "sw_b32_w32");
+    }
+
+    #[test]
+    fn block_recurrence_matches_oracle_single_band() {
+        // One rank, one band = the full matrix: the block recurrence must
+        // reproduce the sequential SW score.
+        let app = SwApp::new(32, 1, 8, 0);
+        let want = app.expected_result(9)[0];
+        // Manually run the block chain like run_phase does.
+        let s1 = oracle::gen_sequence(SwApp::seed_s1(9), 32);
+        let s2 = oracle::gen_sequence(SwApp::seed_s2(9), 32);
+        let s1f: Vec<f32> = s1.iter().map(|&b| b as f32).collect();
+        let s2f: Vec<f32> = s2.iter().map(|&b| b as f32).collect();
+        let mut prev = vec![0f32; 32];
+        let mut best = 0f32;
+        for b in 0..4 {
+            let left = vec![0f32; 9];
+            // Inline the fallback recurrence.
+            let mut cur = vec![0f32; 32];
+            for i in 0..8 {
+                for j in 0..32 {
+                    let s = if s1f[b * 8 + i] == s2f[j] { 2.0 } else { -1.0 };
+                    let diag = if j == 0 { left[i] } else { prev[j - 1] };
+                    let up = prev[j];
+                    let lf = if j == 0 { left[i + 1] } else { cur[j - 1] };
+                    cur[j] = (diag + s).max(up - 1.0).max(lf - 1.0).max(0.0f32);
+                    best = best.max(cur[j]);
+                }
+                prev.copy_from_slice(&cur);
+            }
+        }
+        assert_eq!(best, want);
+    }
+}

@@ -1,0 +1,20 @@
+//! The two checkpointing substrates of SEDAR.
+//!
+//! * [`system`] — DMTCP-equivalent: a **chain** of coordinated, whole-state,
+//!   *unvalidated* checkpoints (§3.2). Because a checkpoint may capture
+//!   already-corrupted replica state ("dirty" checkpoints), none can be
+//!   deleted and recovery may need to walk several steps back (Algorithm 1).
+//! * [`user`] — application-level: per-replica dumps of the app's
+//!   *significant variables*, cross-validated by SHA-256 between the two
+//!   replicas at creation time (§3.3, Algorithm 2). A checkpoint that
+//!   validates proves the replicas were still in agreement, so the previous
+//!   checkpoint can be discarded — a **single** valid checkpoint exists at
+//!   any time and at most one rollback is ever needed.
+//! * [`snapshot`] — the shared on-disk framing (magic/version/CRC32/deflate).
+
+pub mod snapshot;
+pub mod system;
+pub mod user;
+
+pub use system::{RankSnapshot, SystemChain};
+pub use user::UserChain;

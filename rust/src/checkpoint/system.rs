@@ -1,0 +1,321 @@
+//! System-level checkpoint chain — the DMTCP substitute (§3.2).
+//!
+//! DMTCP gives SEDAR three properties, all reproduced here:
+//!
+//! 1. **whole-state capture**: a checkpoint of a rank contains *everything*,
+//!    i.e. the full [`crate::state::VarStore`] of **both** replica threads
+//!    plus the phase cursor. Crucially this is *unvalidated*: if a replica
+//!    was already corrupted, the corruption is faithfully captured (a
+//!    "dirty" checkpoint) and will re-manifest after restart — exactly the
+//!    behavior Algorithm 1's multi-rollback exists to handle.
+//! 2. **a numbered chain**: checkpoints are identified by their position in
+//!    program order (`ck0, ck1, …`); none are deleted, because validity is
+//!    unknowable at save time.
+//! 3. **restart scripts**: [`SystemChain::read`] + the coordinator's rank
+//!    relaunch reproduce `dmtcp_restart` from checkpoint *k*; re-executions
+//!    overwrite later checkpoints as they pass them again (§4.2: "the
+//!    wrong-restart checkpoint has to be erased and stored again in
+//!    re-execution").
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{Result, SedarError};
+use crate::state::VarStore;
+
+use super::snapshot::{read_frame, write_frame, Codec};
+
+/// Whole-state snapshot of one rank: both replicas + the phase cursor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RankSnapshot {
+    pub cursor: u64,
+    /// `stores[r]` is replica r's full variable store.
+    pub stores: [VarStore; 2],
+}
+
+impl RankSnapshot {
+    pub fn serialize(&self) -> Vec<u8> {
+        Self::serialize_parts(
+            self.cursor,
+            &self.stores[0].serialize(),
+            &self.stores[1].serialize(),
+        )
+    }
+
+    /// Assemble the snapshot payload from already-serialized stores —
+    /// the hot checkpoint path uses this to avoid cloning both replicas'
+    /// buffers just to re-serialize them (perf change P4, EXPERIMENTS.md
+    /// §Perf).
+    pub fn serialize_parts(cursor: u64, s0: &[u8], s1: &[u8]) -> Vec<u8> {
+        let mut out = Vec::with_capacity(24 + s0.len() + s1.len());
+        out.extend_from_slice(&cursor.to_le_bytes());
+        out.extend_from_slice(&(s0.len() as u64).to_le_bytes());
+        out.extend_from_slice(s0);
+        out.extend_from_slice(&(s1.len() as u64).to_le_bytes());
+        out.extend_from_slice(s1);
+        out
+    }
+
+    pub fn deserialize(data: &[u8]) -> Result<RankSnapshot> {
+        let need = |cond: bool| {
+            if cond {
+                Ok(())
+            } else {
+                Err(SedarError::Checkpoint("truncated RankSnapshot".into()))
+            }
+        };
+        need(data.len() >= 16)?;
+        let cursor = u64::from_le_bytes(data[0..8].try_into().unwrap());
+        let l0 = u64::from_le_bytes(data[8..16].try_into().unwrap()) as usize;
+        need(data.len() >= 16 + l0 + 8)?;
+        let s0 = VarStore::deserialize(&data[16..16 + l0])?;
+        let off = 16 + l0;
+        let l1 = u64::from_le_bytes(data[off..off + 8].try_into().unwrap()) as usize;
+        need(data.len() >= off + 8 + l1)?;
+        let s1 = VarStore::deserialize(&data[off + 8..off + 8 + l1])?;
+        Ok(RankSnapshot {
+            cursor,
+            stores: [s0, s1],
+        })
+    }
+
+    /// Total application bytes captured (the "W"-driven `t_cs` cost driver).
+    pub fn byte_len(&self) -> usize {
+        self.stores[0].byte_len() + self.stores[1].byte_len()
+    }
+}
+
+/// The on-disk chain of coordinated checkpoints for one run.
+///
+/// Layout: `dir/ck<NO>_rank<R>.bin` + `dir/chain.idx` holding the count of
+/// complete checkpoints as ASCII (the `get_ckpt_count()` of Algorithm 1).
+pub struct SystemChain {
+    dir: PathBuf,
+    nranks: usize,
+    codec: Codec,
+}
+
+impl SystemChain {
+    pub fn create(dir: &Path, nranks: usize, codec: Codec) -> Result<SystemChain> {
+        std::fs::create_dir_all(dir)?;
+        let chain = SystemChain {
+            dir: dir.to_path_buf(),
+            nranks,
+            codec,
+        };
+        if !chain.idx_path().exists() {
+            chain.set_count(0)?;
+        }
+        Ok(chain)
+    }
+
+    /// Open an existing chain (restart path).
+    pub fn open(dir: &Path, nranks: usize, codec: Codec) -> Result<SystemChain> {
+        if !dir.join("chain.idx").exists() {
+            return Err(SedarError::Checkpoint(format!(
+                "no chain at {}",
+                dir.display()
+            )));
+        }
+        Ok(SystemChain {
+            dir: dir.to_path_buf(),
+            nranks,
+            codec,
+        })
+    }
+
+    fn idx_path(&self) -> PathBuf {
+        self.dir.join("chain.idx")
+    }
+
+    fn ck_path(&self, no: u64, rank: usize) -> PathBuf {
+        self.dir.join(format!("ck{no}_rank{rank}.bin"))
+    }
+
+    /// `get_ckpt_count()` of Algorithm 1: number of complete checkpoints.
+    pub fn count(&self) -> Result<u64> {
+        let s = std::fs::read_to_string(self.idx_path())?;
+        s.trim()
+            .parse()
+            .map_err(|e| SedarError::Checkpoint(format!("bad chain.idx: {e}")))
+    }
+
+    fn set_count(&self, n: u64) -> Result<()> {
+        std::fs::write(self.idx_path(), format!("{n}\n"))?;
+        Ok(())
+    }
+
+    /// Store rank `rank`'s snapshot for checkpoint `no` (overwrites a
+    /// previous incarnation from a rolled-back execution).
+    pub fn write(&self, no: u64, rank: usize, snap: &RankSnapshot) -> Result<()> {
+        self.write_payload(no, rank, &snap.serialize())
+    }
+
+    /// Store a pre-assembled snapshot payload (see
+    /// [`RankSnapshot::serialize_parts`]).
+    pub fn write_payload(&self, no: u64, rank: usize, payload: &[u8]) -> Result<()> {
+        write_frame(&self.ck_path(no, rank), payload, self.codec)
+    }
+
+    /// Mark checkpoint `no` complete (all ranks stored). Called once per
+    /// checkpoint by the master's leading replica, after a barrier.
+    pub fn commit(&self, no: u64) -> Result<()> {
+        let count = self.count()?;
+        if no + 1 > count {
+            self.set_count(no + 1)?;
+        }
+        Ok(())
+    }
+
+    /// Load rank `rank`'s snapshot of checkpoint `no`.
+    pub fn read(&self, no: u64, rank: usize) -> Result<RankSnapshot> {
+        let payload = read_frame(&self.ck_path(no, rank))?;
+        RankSnapshot::deserialize(&payload)
+    }
+
+    /// Logical truncation after a rollback to checkpoint `no`: the chain
+    /// count becomes `no + 1`. Files beyond it stay on disk and are
+    /// overwritten as the re-execution passes their phase points again.
+    pub fn truncate(&self, keep: u64) -> Result<()> {
+        let count = self.count()?;
+        if keep < count {
+            self.set_count(keep)?;
+        }
+        Ok(())
+    }
+
+    /// Total bytes currently on disk for the chain (storage-cost metric of
+    /// §3.2's "amount of required storage" limitation).
+    pub fn disk_bytes(&self) -> Result<u64> {
+        let mut total = 0;
+        for entry in std::fs::read_dir(&self.dir)? {
+            let entry = entry?;
+            if entry
+                .file_name()
+                .to_string_lossy()
+                .starts_with("ck")
+            {
+                total += entry.metadata()?.len();
+            }
+        }
+        Ok(total)
+    }
+
+    pub fn nranks(&self) -> usize {
+        self.nranks
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::state::{Var, VarStore};
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "sedar-chain-{tag}-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn snap(cursor: u64, seed: f32) -> RankSnapshot {
+        let mut s0 = VarStore::new();
+        s0.insert("x", Var::f32(&[3], vec![seed, seed + 1.0, seed + 2.0]));
+        let mut s1 = s0.clone();
+        s1.insert("extra", Var::i64_scalar(9));
+        RankSnapshot {
+            cursor,
+            stores: [s0, s1],
+        }
+    }
+
+    #[test]
+    fn snapshot_roundtrip() {
+        let s = snap(5, 1.0);
+        let d = RankSnapshot::deserialize(&s.serialize()).unwrap();
+        assert_eq!(s, d);
+    }
+
+    #[test]
+    fn chain_count_and_commit() {
+        let dir = tmpdir("count");
+        let c = SystemChain::create(&dir, 2, Codec::Raw).unwrap();
+        assert_eq!(c.count().unwrap(), 0);
+        for rank in 0..2 {
+            c.write(0, rank, &snap(2, rank as f32)).unwrap();
+        }
+        c.commit(0).unwrap();
+        assert_eq!(c.count().unwrap(), 1);
+        for rank in 0..2 {
+            c.write(1, rank, &snap(4, rank as f32)).unwrap();
+        }
+        c.commit(1).unwrap();
+        assert_eq!(c.count().unwrap(), 2);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn restart_reads_what_was_written() {
+        let dir = tmpdir("rw");
+        let c = SystemChain::create(&dir, 1, Codec::Deflate(1)).unwrap();
+        let s = snap(7, 3.0);
+        c.write(0, 0, &s).unwrap();
+        c.commit(0).unwrap();
+        // Re-open (the dmtcp_restart path).
+        let c2 = SystemChain::open(&dir, 1, Codec::Deflate(1)).unwrap();
+        assert_eq!(c2.read(0, 0).unwrap(), s);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn truncate_resets_count_and_overwrite_works() {
+        let dir = tmpdir("trunc");
+        let c = SystemChain::create(&dir, 1, Codec::Raw).unwrap();
+        for no in 0..4u64 {
+            c.write(no, 0, &snap(no, no as f32)).unwrap();
+            c.commit(no).unwrap();
+        }
+        assert_eq!(c.count().unwrap(), 4);
+        c.truncate(2).unwrap(); // rollback to ck1 → count 2
+        assert_eq!(c.count().unwrap(), 2);
+        // Re-execution overwrites ck2 with new content and recommits.
+        c.write(2, 0, &snap(2, 99.0)).unwrap();
+        c.commit(2).unwrap();
+        assert_eq!(c.count().unwrap(), 3);
+        assert_eq!(c.read(2, 0).unwrap().stores[0].f32("x").unwrap()[0], 99.0);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn dirty_checkpoint_captures_divergence() {
+        // The defining property vs user-level checkpoints: divergent replica
+        // stores are captured as-is and come back divergent.
+        let dir = tmpdir("dirty");
+        let c = SystemChain::create(&dir, 1, Codec::Raw).unwrap();
+        let mut s = snap(3, 1.0);
+        s.stores[1].f32_mut("x").unwrap()[0] = -1.0; // replica 1 corrupted
+        c.write(0, 0, &s).unwrap();
+        c.commit(0).unwrap();
+        let back = c.read(0, 0).unwrap();
+        assert_ne!(
+            back.stores[0].f32("x").unwrap()[0],
+            back.stores[1].f32("x").unwrap()[0]
+        );
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn missing_checkpoint_errors() {
+        let dir = tmpdir("missing");
+        let c = SystemChain::create(&dir, 1, Codec::Raw).unwrap();
+        assert!(c.read(0, 0).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,274 @@
+//! User-level (application-level) checkpointing — §3.3, Algorithm 2.
+//!
+//! Each replica dumps only the application's *significant variables*. The
+//! two dumps are hash-compared (SHA-256) **at creation time**, reusing the
+//! message-validation machinery:
+//!
+//! * hashes match ⇒ the replicas were still in agreement, the checkpoint is
+//!   **valid**, and the previous one can be discarded — storage holds a
+//!   single valid checkpoint at any time;
+//! * hashes differ ⇒ a fault occurred within the last checkpoint interval;
+//!   the candidate is **corrupted**, is discarded, and execution restarts
+//!   from the previous (valid) checkpoint. Detection latency is therefore
+//!   confined within one checkpoint interval and at most one rollback is
+//!   ever needed (Equation 8's `(1/2)·t_i` re-execution term).
+//!
+//! Restoring a user-level checkpoint loads the *single validated copy* into
+//! **both** replicas, which also wipes out any latent replica divergence —
+//! unlike system-level restore, which faithfully reproduces it.
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{Result, SedarError};
+use crate::state::VarStore;
+
+use super::snapshot::{read_frame, write_frame, Codec};
+
+/// The payload of a user-level checkpoint: the phase cursor + the filtered
+/// (significant-variables-only) store.
+#[derive(Debug, Clone, PartialEq)]
+pub struct UserSnapshot {
+    pub cursor: u64,
+    pub store: VarStore,
+}
+
+impl UserSnapshot {
+    pub fn serialize(&self) -> Vec<u8> {
+        Self::serialize_parts(self.cursor, &self.store.serialize())
+    }
+
+    /// Assemble the payload from an already-serialized (filtered) store —
+    /// the checkpoint hot path avoids a deserialize→reserialize round trip
+    /// (perf change P5, EXPERIMENTS.md §Perf).
+    pub fn serialize_parts(cursor: u64, store_bytes: &[u8]) -> Vec<u8> {
+        let mut out = Vec::with_capacity(8 + store_bytes.len());
+        out.extend_from_slice(&cursor.to_le_bytes());
+        out.extend_from_slice(store_bytes);
+        out
+    }
+
+    pub fn deserialize(data: &[u8]) -> Result<UserSnapshot> {
+        if data.len() < 8 {
+            return Err(SedarError::Checkpoint("truncated UserSnapshot".into()));
+        }
+        let cursor = u64::from_le_bytes(data[0..8].try_into().unwrap());
+        let store = VarStore::deserialize(&data[8..])?;
+        Ok(UserSnapshot { cursor, store })
+    }
+}
+
+/// Storage manager for the single-valid-checkpoint scheme.
+///
+/// Layout: `dir/uck<NO>_rank<R>.bin` + `dir/ulatest.idx` holding the number
+/// of the latest *valid* checkpoint (or `-1`).
+pub struct UserChain {
+    dir: PathBuf,
+    nranks: usize,
+    codec: Codec,
+}
+
+impl UserChain {
+    pub fn create(dir: &Path, nranks: usize, codec: Codec) -> Result<UserChain> {
+        std::fs::create_dir_all(dir)?;
+        let c = UserChain {
+            dir: dir.to_path_buf(),
+            nranks,
+            codec,
+        };
+        if !c.idx_path().exists() {
+            c.set_latest(None)?;
+        }
+        Ok(c)
+    }
+
+    pub fn open(dir: &Path, nranks: usize, codec: Codec) -> Result<UserChain> {
+        if !dir.join("ulatest.idx").exists() {
+            return Err(SedarError::Checkpoint(format!(
+                "no user chain at {}",
+                dir.display()
+            )));
+        }
+        Ok(UserChain {
+            dir: dir.to_path_buf(),
+            nranks,
+            codec,
+        })
+    }
+
+    fn idx_path(&self) -> PathBuf {
+        self.dir.join("ulatest.idx")
+    }
+
+    fn uck_path(&self, no: u64, rank: usize) -> PathBuf {
+        self.dir.join(format!("uck{no}_rank{rank}.bin"))
+    }
+
+    /// Number of the latest valid checkpoint.
+    pub fn latest(&self) -> Result<Option<u64>> {
+        let s = std::fs::read_to_string(self.idx_path())?;
+        let v: i64 = s
+            .trim()
+            .parse()
+            .map_err(|e| SedarError::Checkpoint(format!("bad ulatest.idx: {e}")))?;
+        Ok(if v < 0 { None } else { Some(v as u64) })
+    }
+
+    fn set_latest(&self, no: Option<u64>) -> Result<()> {
+        let v = no.map(|n| n as i64).unwrap_or(-1);
+        std::fs::write(self.idx_path(), format!("{v}\n"))?;
+        Ok(())
+    }
+
+    /// Store rank `rank`'s validated snapshot for checkpoint `no`.
+    pub fn write_valid(&self, no: u64, rank: usize, snap: &UserSnapshot) -> Result<()> {
+        self.write_valid_payload(no, rank, &snap.serialize())
+    }
+
+    /// Store a pre-assembled payload (see [`UserSnapshot::serialize_parts`]).
+    pub fn write_valid_payload(&self, no: u64, rank: usize, payload: &[u8]) -> Result<()> {
+        write_frame(&self.uck_path(no, rank), payload, self.codec)
+    }
+
+    /// Promote checkpoint `no` to "the" valid checkpoint and discard the
+    /// previous one (Algorithm 2 line 25: `remove_usr_ckpt(n-1)`).
+    pub fn commit_valid(&self, no: u64) -> Result<()> {
+        let prev = self.latest()?;
+        self.set_latest(Some(no))?;
+        if let Some(p) = prev {
+            if p != no {
+                for rank in 0..self.nranks {
+                    let _ = std::fs::remove_file(self.uck_path(p, rank));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Remove the candidate files of a *corrupted* checkpoint (Algorithm 2
+    /// line 28: `remove_usr_ckpt(n)`). The latest-valid pointer is untouched.
+    pub fn discard(&self, no: u64) -> Result<()> {
+        for rank in 0..self.nranks {
+            let _ = std::fs::remove_file(self.uck_path(no, rank));
+        }
+        Ok(())
+    }
+
+    /// Load rank `rank`'s copy of checkpoint `no`.
+    pub fn read(&self, no: u64, rank: usize) -> Result<UserSnapshot> {
+        let payload = read_frame(&self.uck_path(no, rank))?;
+        UserSnapshot::deserialize(&payload)
+    }
+
+    /// Bytes on disk — should stay O(one checkpoint), the §3.3 storage win.
+    pub fn disk_bytes(&self) -> Result<u64> {
+        let mut total = 0;
+        for entry in std::fs::read_dir(&self.dir)? {
+            let entry = entry?;
+            if entry.file_name().to_string_lossy().starts_with("uck") {
+                total += entry.metadata()?.len();
+            }
+        }
+        Ok(total)
+    }
+
+    pub fn nranks(&self) -> usize {
+        self.nranks
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::state::Var;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "sedar-uchain-{tag}-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn usnap(cursor: u64, v: f32) -> UserSnapshot {
+        let mut s = VarStore::new();
+        s.insert("C", Var::f32(&[2], vec![v, v * 2.0]));
+        UserSnapshot { cursor, store: s }
+    }
+
+    #[test]
+    fn snapshot_roundtrip() {
+        let s = usnap(11, 5.0);
+        assert_eq!(UserSnapshot::deserialize(&s.serialize()).unwrap(), s);
+    }
+
+    #[test]
+    fn single_valid_checkpoint_retained() {
+        let dir = tmpdir("single");
+        let c = UserChain::create(&dir, 2, Codec::Raw).unwrap();
+        assert_eq!(c.latest().unwrap(), None);
+
+        for rank in 0..2 {
+            c.write_valid(0, rank, &usnap(2, 1.0)).unwrap();
+        }
+        c.commit_valid(0).unwrap();
+        assert_eq!(c.latest().unwrap(), Some(0));
+
+        for rank in 0..2 {
+            c.write_valid(1, rank, &usnap(4, 2.0)).unwrap();
+        }
+        c.commit_valid(1).unwrap();
+        assert_eq!(c.latest().unwrap(), Some(1));
+
+        // The previous checkpoint's files are gone: single-valid invariant.
+        assert!(c.read(0, 0).is_err());
+        assert!(c.read(1, 0).is_ok());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn discard_keeps_previous_valid() {
+        let dir = tmpdir("discard");
+        let c = UserChain::create(&dir, 1, Codec::Raw).unwrap();
+        c.write_valid(0, 0, &usnap(2, 1.0)).unwrap();
+        c.commit_valid(0).unwrap();
+        // Candidate 1 turns out corrupted: discard it.
+        c.write_valid(1, 0, &usnap(4, 2.0)).unwrap();
+        c.discard(1).unwrap();
+        assert_eq!(c.latest().unwrap(), Some(0));
+        assert!(c.read(1, 0).is_err());
+        assert_eq!(c.read(0, 0).unwrap(), usnap(2, 1.0));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn reopen_preserves_latest() {
+        let dir = tmpdir("reopen");
+        {
+            let c = UserChain::create(&dir, 1, Codec::Deflate(1)).unwrap();
+            c.write_valid(3, 0, &usnap(8, 7.0)).unwrap();
+            c.commit_valid(3).unwrap();
+        }
+        let c = UserChain::open(&dir, 1, Codec::Deflate(1)).unwrap();
+        assert_eq!(c.latest().unwrap(), Some(3));
+        assert_eq!(c.read(3, 0).unwrap().cursor, 8);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn disk_usage_stays_single_checkpoint() {
+        let dir = tmpdir("disk");
+        let c = UserChain::create(&dir, 1, Codec::Raw).unwrap();
+        c.write_valid(0, 0, &usnap(2, 1.0)).unwrap();
+        c.commit_valid(0).unwrap();
+        let one = c.disk_bytes().unwrap();
+        for no in 1..6u64 {
+            c.write_valid(no, 0, &usnap(no * 2, no as f32)).unwrap();
+            c.commit_valid(no).unwrap();
+        }
+        assert_eq!(c.disk_bytes().unwrap(), one);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,130 @@
+//! Minimal command-line argument parsing (no external CLI crate in the
+//! offline dependency set).
+//!
+//! Grammar: `sedar <command> [positional…] [--flag value…] [--switch…]`.
+//! A token starting with `--` is a switch if the next token is absent or is
+//! itself a flag; otherwise it consumes the next token as its value. Use
+//! `--flag=value` to force value binding.
+
+use std::collections::HashMap;
+
+use crate::error::{Result, SedarError};
+
+/// Parsed command line.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub command: Option<String>,
+    pub positional: Vec<String>,
+    values: HashMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Args {
+        let mut args = Args::default();
+        let toks: Vec<String> = tokens.into_iter().collect();
+        let mut i = 0;
+        while i < toks.len() {
+            let t = &toks[i];
+            if let Some(name) = t.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    args.values.insert(k.to_string(), v.to_string());
+                } else if i + 1 < toks.len() && !toks[i + 1].starts_with("--") {
+                    args.values.insert(name.to_string(), toks[i + 1].clone());
+                    i += 1;
+                } else {
+                    args.switches.push(name.to_string());
+                }
+            } else if args.command.is_none() {
+                args.command = Some(t.clone());
+            } else {
+                args.positional.push(t.clone());
+            }
+            i += 1;
+        }
+        args
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name) || self.values.contains_key(name)
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| SedarError::Config(format!("--{name}: {e}"))),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| SedarError::Config(format!("--{name}: {e}"))),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| SedarError::Config(format!("--{name}: {e}"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn command_and_positionals() {
+        let a = parse("run matmul extra");
+        assert_eq!(a.command.as_deref(), Some("run"));
+        assert_eq!(a.positional, vec!["matmul", "extra"]);
+    }
+
+    #[test]
+    fn flags_and_switches() {
+        let a = parse("run --n 256 --trace --strategy=userckpt");
+        assert_eq!(a.get("n"), Some("256"));
+        assert!(a.has("trace"));
+        assert_eq!(a.get("strategy"), Some("userckpt"));
+        assert!(!a.has("missing"));
+    }
+
+    #[test]
+    fn switch_before_flag() {
+        let a = parse("run --xla --n 64");
+        assert!(a.has("xla"));
+        assert_eq!(a.usize_or("n", 0).unwrap(), 64);
+    }
+
+    #[test]
+    fn numeric_parsing_errors() {
+        let a = parse("run --n abc");
+        assert!(a.usize_or("n", 0).is_err());
+        assert_eq!(a.usize_or("m", 7).unwrap(), 7);
+    }
+}

@@ -1,0 +1,251 @@
+//! Multicore-cluster topology model and replica placement.
+//!
+//! The paper's testbed is a Blade cluster: nodes with two quad-core Xeon
+//! sockets in which **pairs of cores share an L2 cache**. SEDAR places each
+//! replica thread on the cache-sharing sibling of its original process's
+//! core, so replica comparisons are resolved inside the shared cache (§3.1,
+//! Figure 1).
+//!
+//! Our ranks are in-process threads, so placement cannot change physical
+//! cache residency; the model is still load-bearing in three ways:
+//!
+//! * it *validates* requested rank counts against available core pairs, the
+//!   same capacity constraint a real deployment has;
+//! * it computes the mapping tables the reports print (which core runs which
+//!   replica, which pairs share cache), mirroring the paper's mapping
+//!   discussion (§4.3: 8 MPI processes, ≤4 per node, siblings on free cores);
+//! * the baseline strategy uses it to express "two independent instances,
+//!   each with half the cores" (§3, baseline).
+
+/// One core of the modeled machine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CoreId {
+    pub node: usize,
+    pub socket: usize,
+    pub core: usize,
+}
+
+impl std::fmt::Display for CoreId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "n{}s{}c{}", self.node, self.socket, self.core)
+    }
+}
+
+/// Cluster shape: `nodes × sockets/node × cores/socket`, with cores grouped
+/// in cache-sharing pairs (consecutive even/odd core ids share a cache, like
+/// the Xeon e5405's 2×6MB L2 shared between pairs of cores).
+#[derive(Debug, Clone)]
+pub struct Topology {
+    pub nodes: usize,
+    pub sockets_per_node: usize,
+    pub cores_per_socket: usize,
+}
+
+impl Topology {
+    /// The paper's testbed: 8 nodes × 2 sockets × 4 cores (quad-core Xeon
+    /// e5405), cache shared between pairs of cores.
+    pub fn paper_testbed() -> Self {
+        Topology {
+            nodes: 8,
+            sockets_per_node: 2,
+            cores_per_socket: 4,
+        }
+    }
+
+    /// A small model for unit tests / local runs.
+    pub fn small(nodes: usize) -> Self {
+        Topology {
+            nodes,
+            sockets_per_node: 1,
+            cores_per_socket: 4,
+        }
+    }
+
+    pub fn total_cores(&self) -> usize {
+        self.nodes * self.sockets_per_node * self.cores_per_socket
+    }
+
+    /// Number of cache-sharing core *pairs* (each pair hosts one rank: the
+    /// leading thread plus its replica).
+    pub fn replica_slots(&self) -> usize {
+        self.total_cores() / 2
+    }
+
+    /// Enumerate all cores in deterministic order.
+    pub fn cores(&self) -> Vec<CoreId> {
+        let mut v = Vec::with_capacity(self.total_cores());
+        for node in 0..self.nodes {
+            for socket in 0..self.sockets_per_node {
+                for core in 0..self.cores_per_socket {
+                    v.push(CoreId { node, socket, core });
+                }
+            }
+        }
+        v
+    }
+
+    /// The cache-sharing sibling of a core (pairing consecutive cores within
+    /// a socket: 0↔1, 2↔3).
+    pub fn cache_sibling(&self, c: CoreId) -> CoreId {
+        CoreId {
+            node: c.node,
+            socket: c.socket,
+            core: c.core ^ 1,
+        }
+    }
+
+    pub fn shares_cache(&self, a: CoreId, b: CoreId) -> bool {
+        a.node == b.node && a.socket == b.socket && (a.core ^ 1) == b.core
+    }
+}
+
+/// Where the two replicas of one rank run.
+#[derive(Debug, Clone, Copy)]
+pub struct RankPlacement {
+    pub rank: usize,
+    /// Core of the leading thread (replica 0).
+    pub lead: CoreId,
+    /// Core of the replica thread (replica 1) — always the cache sibling.
+    pub replica: CoreId,
+}
+
+/// Placement of a whole SEDAR job.
+#[derive(Debug, Clone)]
+pub struct Placement {
+    pub ranks: Vec<RankPlacement>,
+}
+
+#[derive(Debug, thiserror::Error)]
+#[error("placement: requested {requested} ranks but topology has only {available} replica slots")]
+pub struct PlacementError {
+    pub requested: usize,
+    pub available: usize,
+}
+
+impl Placement {
+    /// SEDAR placement (§3.1): rank *r*'s leading thread goes on the even
+    /// core of pair *r*; its replica goes on the cache-sharing odd sibling.
+    /// Pairs are filled node-major so ranks spread across nodes last, like
+    /// the paper's "maximum of four processes mapped in each node".
+    pub fn sedar(topo: &Topology, nranks: usize) -> Result<Placement, PlacementError> {
+        if nranks > topo.replica_slots() {
+            return Err(PlacementError {
+                requested: nranks,
+                available: topo.replica_slots(),
+            });
+        }
+        let cores = topo.cores();
+        let mut ranks = Vec::with_capacity(nranks);
+        // Even-indexed cores are pair leaders.
+        let leaders: Vec<CoreId> = cores.iter().copied().filter(|c| c.core % 2 == 0).collect();
+        for (rank, lead) in leaders.into_iter().take(nranks).enumerate() {
+            ranks.push(RankPlacement {
+                rank,
+                lead,
+                replica: topo.cache_sibling(lead),
+            });
+        }
+        Ok(Placement { ranks })
+    }
+
+    /// Baseline placement (§3): two independent application instances, each
+    /// using half of the cores, same rank mapping for both instances.
+    /// Instance 0 takes even cores, instance 1 takes odd cores.
+    pub fn baseline(
+        topo: &Topology,
+        nranks: usize,
+    ) -> Result<(Placement, Placement), PlacementError> {
+        let p = Self::sedar(topo, nranks)?;
+        let inst0 = Placement {
+            ranks: p
+                .ranks
+                .iter()
+                .map(|r| RankPlacement {
+                    rank: r.rank,
+                    lead: r.lead,
+                    replica: r.lead, // no replication in the baseline
+                })
+                .collect(),
+        };
+        let inst1 = Placement {
+            ranks: p
+                .ranks
+                .iter()
+                .map(|r| RankPlacement {
+                    rank: r.rank,
+                    lead: r.replica,
+                    replica: r.replica,
+                })
+                .collect(),
+        };
+        Ok((inst0, inst1))
+    }
+
+    /// Human-readable mapping table (printed by run reports).
+    pub fn table(&self) -> String {
+        let mut s = String::from("| rank | lead core | replica core |\n|---|---|---|\n");
+        for r in &self.ranks {
+            s.push_str(&format!("| {} | {} | {} |\n", r.rank, r.lead, r.replica));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_testbed_capacity() {
+        let t = Topology::paper_testbed();
+        assert_eq!(t.total_cores(), 64);
+        assert_eq!(t.replica_slots(), 32);
+    }
+
+    #[test]
+    fn siblings_share_cache() {
+        let t = Topology::paper_testbed();
+        for c in t.cores() {
+            let s = t.cache_sibling(c);
+            assert!(t.shares_cache(c, s));
+            assert_eq!(t.cache_sibling(s), c);
+        }
+    }
+
+    #[test]
+    fn sedar_placement_uses_sibling_pairs() {
+        let t = Topology::small(2);
+        let p = Placement::sedar(&t, 4).unwrap();
+        assert_eq!(p.ranks.len(), 4);
+        for r in &p.ranks {
+            assert!(t.shares_cache(r.lead, r.replica));
+        }
+    }
+
+    #[test]
+    fn paper_mapping_four_ranks_per_node() {
+        // §4.3: 8 MPI processes, max 4 per node → replicas fill the node's
+        // remaining cores.
+        let t = Topology::paper_testbed();
+        let p = Placement::sedar(&t, 8).unwrap();
+        let on_node0 = p.ranks.iter().filter(|r| r.lead.node == 0).count();
+        assert_eq!(on_node0, 4);
+        let on_node1 = p.ranks.iter().filter(|r| r.lead.node == 1).count();
+        assert_eq!(on_node1, 4);
+    }
+
+    #[test]
+    fn placement_rejects_oversubscription() {
+        let t = Topology::small(1); // 4 cores → 2 slots
+        assert!(Placement::sedar(&t, 3).is_err());
+    }
+
+    #[test]
+    fn baseline_instances_disjoint() {
+        let t = Topology::small(2);
+        let (a, b) = Placement::baseline(&t, 4).unwrap();
+        for (ra, rb) in a.ranks.iter().zip(&b.ranks) {
+            assert_ne!(ra.lead, rb.lead);
+        }
+    }
+}

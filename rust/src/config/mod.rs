@@ -1,0 +1,271 @@
+//! Run configuration: strategy selection, timing knobs, directories.
+//!
+//! A [`RunConfig`] fully determines a SEDAR run (together with an app spec
+//! and an optional injection). Configs can be parsed from a simple
+//! `key = value` file (see [`RunConfig::from_kv`]) and overridden from the
+//! CLI; no external config-format crate exists in the offline set, and the
+//! paper's artifact would have used environment variables anyway.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use crate::checkpoint::snapshot::Codec;
+use crate::detect::ValidationMode;
+use crate::error::{Result, SedarError};
+
+/// The protection strategy — the three SEDAR levels plus the paper's
+/// baseline (§3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Strategy {
+    /// Two independent instances + final comparison (+ third run & vote on
+    /// mismatch). The reference point of Equations 1–2.
+    Baseline,
+    /// SEDAR level 1: detection with notification & safe stop (Equations 3–4).
+    DetectOnly,
+    /// SEDAR level 2: recovery from multiple system-level checkpoints
+    /// (Equations 5–6, Algorithm 1).
+    SysCkpt,
+    /// SEDAR level 3: recovery from a single validated application-level
+    /// checkpoint (Equations 7–8, Algorithm 2).
+    UserCkpt,
+}
+
+impl Strategy {
+    pub fn parse(s: &str) -> Result<Strategy> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "baseline" => Strategy::Baseline,
+            "detect" | "detect-only" | "detectonly" => Strategy::DetectOnly,
+            "sys" | "sysckpt" | "sys-ckpt" | "multiple" => Strategy::SysCkpt,
+            "user" | "userckpt" | "user-ckpt" | "single" => Strategy::UserCkpt,
+            other => {
+                return Err(SedarError::Config(format!(
+                    "unknown strategy '{other}' (baseline|detect|sysckpt|userckpt)"
+                )))
+            }
+        })
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Strategy::Baseline => "baseline",
+            Strategy::DetectOnly => "detect-only",
+            Strategy::SysCkpt => "sys-ckpt",
+            Strategy::UserCkpt => "user-ckpt",
+        }
+    }
+}
+
+/// How SEDAR's communication wrappers implement collectives (§4.2: the
+/// functional validation uses point-to-point; optimized native collectives
+/// exist for the temporal evaluation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CollectiveImpl {
+    /// Compose scatter/gather/bcast from validated point-to-point sends.
+    /// More comparison points ⇒ FSC scenarios become visible (§4.2).
+    PointToPoint,
+    /// Validate once, then use the substrate's native collective.
+    Native,
+}
+
+/// Full configuration of one SEDAR run.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    /// Protection strategy.
+    pub strategy: Strategy,
+    /// Message-validation mode (full contents vs SHA-256 digests).
+    pub validation: ValidationMode,
+    /// Collective implementation.
+    pub collectives: CollectiveImpl,
+    /// Replica-rendezvous lapse after which a missing sibling is a TOE.
+    pub toe_timeout: Duration,
+    /// Rendezvous lapse for slow sites (checkpoint writes).
+    pub ckpt_timeout: Duration,
+    /// Working directory of the run (checkpoints, latches, counters, trace).
+    pub run_dir: PathBuf,
+    /// Snapshot codec.
+    pub codec: Codec,
+    /// Use the AOT XLA artifacts for compute (vs the pure-rust fallback).
+    pub use_xla: bool,
+    /// Artifact directory (only consulted when `use_xla`).
+    pub artifact_dir: PathBuf,
+    /// Workload seed (matrix / sequence generation).
+    pub seed: u64,
+    /// Safety bound on recovery attempts (Algorithm 1 loop).
+    pub max_attempts: u32,
+    /// Echo the event trace to stderr as it happens.
+    pub echo_trace: bool,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            strategy: Strategy::SysCkpt,
+            validation: ValidationMode::Full,
+            collectives: CollectiveImpl::PointToPoint,
+            toe_timeout: Duration::from_millis(1500),
+            ckpt_timeout: Duration::from_secs(60),
+            run_dir: PathBuf::from("runs/default"),
+            codec: Codec::Raw,
+            use_xla: false,
+            artifact_dir: PathBuf::from("artifacts"),
+            seed: 0xC0FFEE,
+            max_attempts: 32,
+            echo_trace: false,
+        }
+    }
+}
+
+impl RunConfig {
+    /// A config suitable for fast unit/integration tests: tight timeouts,
+    /// raw snapshots, unique run dir under the system temp dir.
+    pub fn for_tests(tag: &str) -> RunConfig {
+        let run_dir = std::env::temp_dir().join(format!(
+            "sedar-test-{tag}-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&run_dir);
+        RunConfig {
+            toe_timeout: Duration::from_millis(400),
+            ckpt_timeout: Duration::from_secs(20),
+            run_dir,
+            codec: Codec::Raw,
+            ..RunConfig::default()
+        }
+    }
+
+    /// Apply one `key = value` assignment.
+    pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "strategy" => self.strategy = Strategy::parse(value)?,
+            "validation" => {
+                self.validation = match value {
+                    "full" => ValidationMode::Full,
+                    "sha256" | "hash" => ValidationMode::Sha256,
+                    other => {
+                        return Err(SedarError::Config(format!(
+                            "unknown validation '{other}' (full|sha256)"
+                        )))
+                    }
+                }
+            }
+            "collectives" => {
+                self.collectives = match value {
+                    "p2p" | "point-to-point" => CollectiveImpl::PointToPoint,
+                    "native" | "optimized" => CollectiveImpl::Native,
+                    other => {
+                        return Err(SedarError::Config(format!(
+                            "unknown collectives '{other}' (p2p|native)"
+                        )))
+                    }
+                }
+            }
+            "toe_timeout_ms" => {
+                self.toe_timeout = Duration::from_millis(parse_num(key, value)?)
+            }
+            "ckpt_timeout_ms" => {
+                self.ckpt_timeout = Duration::from_millis(parse_num(key, value)?)
+            }
+            "run_dir" => self.run_dir = PathBuf::from(value),
+            "codec" => {
+                self.codec = match value {
+                    "raw" => Codec::Raw,
+                    s if s.starts_with("deflate") => {
+                        let lvl = s
+                            .strip_prefix("deflate")
+                            .unwrap()
+                            .trim_matches(|c| c == '(' || c == ')')
+                            .parse()
+                            .unwrap_or(1);
+                        Codec::Deflate(lvl)
+                    }
+                    other => {
+                        return Err(SedarError::Config(format!(
+                            "unknown codec '{other}' (raw|deflateN)"
+                        )))
+                    }
+                }
+            }
+            "use_xla" => self.use_xla = parse_bool(key, value)?,
+            "artifact_dir" => self.artifact_dir = PathBuf::from(value),
+            "seed" => self.seed = parse_num(key, value)?,
+            "max_attempts" => self.max_attempts = parse_num(key, value)? as u32,
+            "echo_trace" => self.echo_trace = parse_bool(key, value)?,
+            other => {
+                return Err(SedarError::Config(format!("unknown config key '{other}'")))
+            }
+        }
+        Ok(())
+    }
+
+    /// Parse a `key = value` config file body (`#` comments, blank lines ok).
+    pub fn from_kv(body: &str) -> Result<RunConfig> {
+        let mut cfg = RunConfig::default();
+        for (lineno, line) in body.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (k, v) = line.split_once('=').ok_or_else(|| {
+                SedarError::Config(format!("line {}: expected key = value", lineno + 1))
+            })?;
+            cfg.set(k.trim(), v.trim())?;
+        }
+        Ok(cfg)
+    }
+}
+
+fn parse_num(key: &str, value: &str) -> Result<u64> {
+    value
+        .parse()
+        .map_err(|e| SedarError::Config(format!("{key}: {e}")))
+}
+
+fn parse_bool(key: &str, value: &str) -> Result<bool> {
+    match value {
+        "true" | "1" | "yes" => Ok(true),
+        "false" | "0" | "no" => Ok(false),
+        other => Err(SedarError::Config(format!("{key}: bad bool '{other}'"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_strategies() {
+        assert_eq!(Strategy::parse("baseline").unwrap(), Strategy::Baseline);
+        assert_eq!(Strategy::parse("detect").unwrap(), Strategy::DetectOnly);
+        assert_eq!(Strategy::parse("sysckpt").unwrap(), Strategy::SysCkpt);
+        assert_eq!(Strategy::parse("user").unwrap(), Strategy::UserCkpt);
+        assert!(Strategy::parse("magic").is_err());
+    }
+
+    #[test]
+    fn kv_file_roundtrip() {
+        let cfg = RunConfig::from_kv(
+            "# comment\n\
+             strategy = userckpt\n\
+             validation = sha256\n\
+             toe_timeout_ms = 250\n\
+             seed = 99\n\
+             collectives = native\n\
+             codec = deflate(6)\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.strategy, Strategy::UserCkpt);
+        assert_eq!(cfg.validation, ValidationMode::Sha256);
+        assert_eq!(cfg.toe_timeout, Duration::from_millis(250));
+        assert_eq!(cfg.seed, 99);
+        assert_eq!(cfg.collectives, CollectiveImpl::Native);
+        assert_eq!(cfg.codec, Codec::Deflate(6));
+    }
+
+    #[test]
+    fn kv_rejects_unknown_keys_and_bad_lines() {
+        assert!(RunConfig::from_kv("nope = 1").is_err());
+        assert!(RunConfig::from_kv("strategy").is_err());
+        assert!(RunConfig::from_kv("use_xla = maybe").is_err());
+    }
+}

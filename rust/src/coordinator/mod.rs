@@ -1,0 +1,612 @@
+//! The SEDAR run coordinator.
+//!
+//! [`SedarRun`] wires an application × a protection strategy × an optional
+//! injected fault, executes the (re)launch loop, and produces a
+//! [`RunOutcome`] with the detection/recovery history, timing and the
+//! end-to-end correctness verdict against the app's sequential oracle.
+//!
+//! In process terms this plays the role of the paper's launcher scripts +
+//! DMTCP coordinator + the external `failures.txt` machinery (§4.2): each
+//! *attempt* spawns a fresh world (network + 2 replica threads per rank),
+//! joins it, inspects the detector, and — per Algorithm 1 / Algorithm 2 —
+//! decides where the next attempt resumes.
+
+pub mod trace;
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::apps::spec::AppSpec;
+use crate::checkpoint::snapshot::Codec;
+use crate::checkpoint::{SystemChain, UserChain};
+use crate::config::{RunConfig, Strategy};
+use crate::detect::{DetectionEvent, Detector};
+use crate::error::{Result, SedarError};
+use crate::inject::{Injector, InjectionSpec, Latch};
+use crate::metrics::{MetricsSnapshot, RunMetrics};
+use crate::recovery::{decide_resume, ExternCounter, ResumeFrom};
+use crate::replica::driver::replica_main;
+use crate::replica::pair::PairSync;
+use crate::replica::{ReplicaCtx, ReplicaParts};
+use crate::runtime::{Engine, EngineHandle};
+use crate::state::VarStore;
+use crate::vmpi::Network;
+
+use trace::Trace;
+
+/// Everything a finished run reports.
+#[derive(Debug)]
+pub struct RunOutcome {
+    pub app: String,
+    pub strategy: Strategy,
+    /// Did an attempt run to completion?
+    pub completed: bool,
+    /// Total executions (1 = fault-free single pass).
+    pub attempts: u32,
+    /// Restarts performed — the paper's `N_roll`.
+    pub restarts: u32,
+    /// The detection event of every failed attempt, in order.
+    pub detections: Vec<DetectionEvent>,
+    /// What each restart resumed from (parallel to `detections`).
+    pub resume_history: Vec<ResumeFrom>,
+    /// Final result matches the sequential oracle (None if not completed).
+    pub result_correct: Option<bool>,
+    /// Whether the configured injection actually fired.
+    pub injected: bool,
+    pub wall: Duration,
+    pub attempt_walls: Vec<Duration>,
+    pub metrics: MetricsSnapshot,
+    pub trace_dump: String,
+}
+
+impl RunOutcome {
+    /// One-paragraph human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} under {}: {} after {} attempt(s) ({} restart(s)); \
+             detections: [{}]; resumes: [{}]; result {}; wall {}",
+            self.app,
+            self.strategy.label(),
+            if self.completed { "COMPLETED" } else { "GAVE UP" },
+            self.attempts,
+            self.restarts,
+            self.detections
+                .iter()
+                .map(|d| format!("{}@{}", d.class, d.site))
+                .collect::<Vec<_>>()
+                .join(", "),
+            self.resume_history
+                .iter()
+                .map(|r| r.to_string())
+                .collect::<Vec<_>>()
+                .join(", "),
+            match self.result_correct {
+                Some(true) => "CORRECT".to_string(),
+                Some(false) => "WRONG".to_string(),
+                None => "n/a".to_string(),
+            },
+            crate::util::human_duration(self.wall),
+        )
+    }
+}
+
+/// A configured SEDAR execution.
+pub struct SedarRun {
+    pub app: Arc<dyn AppSpec>,
+    pub cfg: Arc<RunConfig>,
+    pub injections: Vec<InjectionSpec>,
+}
+
+struct Shared {
+    app: Arc<dyn AppSpec>,
+    cfg: Arc<RunConfig>,
+    injector: Arc<Injector>,
+    sys_chain: Option<Arc<SystemChain>>,
+    user_chain: Option<Arc<UserChain>>,
+    engine: Option<EngineHandle>,
+    metrics: Arc<RunMetrics>,
+    trace: Arc<Trace>,
+}
+
+enum AttemptResult {
+    Completed(VarStore),
+    Fault(DetectionEvent),
+}
+
+impl SedarRun {
+    pub fn new(
+        app: Arc<dyn AppSpec>,
+        cfg: RunConfig,
+        injection: Option<InjectionSpec>,
+    ) -> SedarRun {
+        SedarRun {
+            app,
+            cfg: Arc::new(cfg),
+            injections: injection.into_iter().collect(),
+        }
+    }
+
+    /// A run with several independent armed faults (§4.2's multi-fault
+    /// extension; each fault gets its own external latch file).
+    pub fn new_multi(
+        app: Arc<dyn AppSpec>,
+        cfg: RunConfig,
+        injections: Vec<InjectionSpec>,
+    ) -> SedarRun {
+        SedarRun {
+            app,
+            cfg: Arc::new(cfg),
+            injections,
+        }
+    }
+
+    /// Execute the run to completion (or give up after `max_attempts`).
+    pub fn run(&self) -> Result<RunOutcome> {
+        let t_run = Instant::now();
+        // Fresh working directory.
+        let _ = std::fs::remove_dir_all(&self.cfg.run_dir);
+        std::fs::create_dir_all(&self.cfg.run_dir)?;
+
+        let trace = Arc::new(Trace::new(self.cfg.echo_trace));
+        let metrics = Arc::new(RunMetrics::new());
+
+        // Fault injection latches (injected_<i>.txt), external to all
+        // checkpoints — the paper's injected.txt (§4.2).
+        let injector = Arc::new(if self.injections.is_empty() {
+            Injector::none()
+        } else {
+            let mut slots = Vec::with_capacity(self.injections.len());
+            for (i, spec) in self.injections.iter().enumerate() {
+                let latch =
+                    Latch::file_backed(&self.cfg.run_dir.join(format!("injected_{i}.txt")))?;
+                slots.push((spec.clone(), latch));
+            }
+            Injector::multi(slots)
+        });
+
+        // Checkpoint substrates per strategy.
+        let nranks = self.app.nranks();
+        let codec: Codec = self.cfg.codec;
+        let sys_chain = match self.cfg.strategy {
+            Strategy::SysCkpt => Some(Arc::new(SystemChain::create(
+                &self.cfg.run_dir.join("ckpt"),
+                nranks,
+                codec,
+            )?)),
+            _ => None,
+        };
+        let user_chain = match self.cfg.strategy {
+            Strategy::UserCkpt => Some(Arc::new(UserChain::create(
+                &self.cfg.run_dir.join("uckpt"),
+                nranks,
+                codec,
+            )?)),
+            _ => None,
+        };
+
+        // XLA engine (optional). A failure to start or warm degrades to the
+        // pure-rust compute path rather than failing the run.
+        let engine_holder;
+        let engine: Option<EngineHandle> = if self.cfg.use_xla {
+            match Engine::start(&self.cfg.artifact_dir) {
+                Ok(e) => {
+                    let mut ok = true;
+                    for art in self.app.artifacts() {
+                        if let Err(err) = e.handle().warm(&art) {
+                            trace.coord(format!(
+                                "artifact '{art}' unavailable ({err}); using rust fallback"
+                            ));
+                            ok = false;
+                            break;
+                        }
+                    }
+                    if ok {
+                        engine_holder = Some(e);
+                        engine_holder.as_ref().map(|e| e.handle())
+                    } else {
+                        engine_holder = None;
+                        None
+                    }
+                }
+                Err(err) => {
+                    trace.coord(format!("XLA engine unavailable ({err}); rust fallback"));
+                    engine_holder = None;
+                    None
+                }
+            }
+        } else {
+            engine_holder = None;
+            None
+        };
+        let _keep_engine_alive = &engine_holder;
+
+        let shared = Shared {
+            app: Arc::clone(&self.app),
+            cfg: Arc::clone(&self.cfg),
+            injector: Arc::clone(&injector),
+            sys_chain,
+            user_chain,
+            engine,
+            metrics: Arc::clone(&metrics),
+            trace: Arc::clone(&trace),
+        };
+
+        if self.cfg.strategy == Strategy::Baseline {
+            return self.run_baseline(&shared, t_run);
+        }
+
+        // Algorithm 1's external counter.
+        let counter = ExternCounter::at(&self.cfg.run_dir)?;
+        counter.reset()?;
+
+        let mut attempts: u32 = 0;
+        let mut detections = Vec::new();
+        let mut resume_history = Vec::new();
+        let mut attempt_walls = Vec::new();
+        let mut resume = ResumeFrom::Scratch;
+
+        trace.coord(format!(
+            "run start: app={} strategy={} nranks={} inject={}",
+            self.app.name(),
+            self.cfg.strategy.label(),
+            nranks,
+            if self.injections.is_empty() {
+                "none".to_string()
+            } else {
+                self.injections
+                    .iter()
+                    .map(|s| s.name.clone())
+                    .collect::<Vec<_>>()
+                    .join("+")
+            },
+        ));
+
+        loop {
+            attempts += 1;
+            let t_attempt = Instant::now();
+            trace.coord(format!("attempt {attempts}: start from {resume}"));
+            let result = self.attempt(&shared, resume)?;
+            attempt_walls.push(t_attempt.elapsed());
+
+            match result {
+                AttemptResult::Completed(master_store) => {
+                    let correct = self.check_oracle(&master_store)?;
+                    trace.coord(format!(
+                        "attempt {attempts}: COMPLETED (result {})",
+                        if correct { "correct" } else { "WRONG" }
+                    ));
+                    return Ok(RunOutcome {
+                        app: self.app.name().to_string(),
+                        strategy: self.cfg.strategy,
+                        completed: true,
+                        attempts,
+                        restarts: attempts - 1,
+                        detections,
+                        resume_history,
+                        result_correct: Some(correct),
+                        injected: injector.injected(),
+                        wall: t_run.elapsed(),
+                        attempt_walls,
+                        metrics: metrics.snapshot(),
+                        trace_dump: trace.dump(),
+                    });
+                }
+                AttemptResult::Fault(ev) => {
+                    trace.coord(format!(
+                        "attempt {attempts}: FAULT {} detected at {} (rank {})",
+                        ev.class, ev.site, ev.rank
+                    ));
+                    detections.push(ev);
+                    if attempts >= self.cfg.max_attempts {
+                        trace.coord("max attempts exceeded: giving up".to_string());
+                        return Ok(RunOutcome {
+                            app: self.app.name().to_string(),
+                            strategy: self.cfg.strategy,
+                            completed: false,
+                            attempts,
+                            restarts: attempts - 1,
+                            detections,
+                            resume_history,
+                            result_correct: None,
+                            injected: injector.injected(),
+                            wall: t_run.elapsed(),
+                            attempt_walls,
+                            metrics: metrics.snapshot(),
+                            trace_dump: trace.dump(),
+                        });
+                    }
+                    // Algorithm 1 / Algorithm 2 resume decision.
+                    let n_fail = counter.increment()?;
+                    let sys_count = match &shared.sys_chain {
+                        Some(c) => Some(c.count()?),
+                        None => None,
+                    };
+                    let user_latest = match &shared.user_chain {
+                        Some(c) => c.latest()?,
+                        None => None,
+                    };
+                    resume = decide_resume(self.cfg.strategy, sys_count, n_fail, user_latest);
+                    if let (ResumeFrom::SysCkpt(k), Some(chain)) = (resume, &shared.sys_chain)
+                    {
+                        // §4.2: the wrong-restart checkpoint will be stored
+                        // again during re-execution; logically truncate.
+                        chain.truncate(k + 1)?;
+                    }
+                    trace.coord(format!(
+                        "recovery: extern_counter={n_fail} → resume from {resume}"
+                    ));
+                    resume_history.push(resume);
+                }
+            }
+        }
+    }
+
+    /// One execution attempt: fresh world, run every replica to completion
+    /// or first detection.
+    fn attempt(&self, shared: &Shared, resume: ResumeFrom) -> Result<AttemptResult> {
+        let nranks = self.app.nranks();
+        let net = Network::new(nranks);
+        let detector = Arc::new(Detector::new());
+        detector.attach_network(Arc::clone(&net));
+
+        let mut handles = Vec::with_capacity(nranks * 2);
+        for rank in 0..nranks {
+            let pair = PairSync::new(detector.abort_flag());
+            let (stores, cursor) = self.build_state(shared, rank, resume)?;
+            for (replica, store) in stores.into_iter().enumerate() {
+                let ctx = ReplicaCtx::new(ReplicaParts {
+                    rank,
+                    nranks,
+                    replica,
+                    start_cursor: cursor,
+                    store,
+                    cfg: Arc::clone(&shared.cfg),
+                    pair: Arc::clone(&pair),
+                    ep: net.endpoint(rank),
+                    detector: Arc::clone(&detector),
+                    injector: Arc::clone(&shared.injector),
+                    sys_chain: shared.sys_chain.clone(),
+                    user_chain: shared.user_chain.clone(),
+                    engine: shared.engine.clone(),
+                    metrics: Arc::clone(&shared.metrics),
+                    trace: Arc::clone(&shared.trace),
+                    significant: shared.app.significant_vars(rank),
+                    solo: false,
+                });
+                let app = Arc::clone(&shared.app);
+                let det = Arc::clone(&detector);
+                handles.push(
+                    std::thread::Builder::new()
+                        .name(format!("r{rank}.{replica}"))
+                        .spawn(move || {
+                            let mut ctx = ctx;
+                            let r = replica_main(&*app, &mut ctx);
+                            if let Err(e) = &r {
+                                if !e.is_fault_signal() {
+                                    det.hard_abort();
+                                }
+                            }
+                            (r, ctx.rank, ctx.replica, ctx.store)
+                        })
+                        .map_err(|e| SedarError::Runtime(format!("spawn: {e}")))?,
+                );
+            }
+        }
+
+        let mut master_store: Option<VarStore> = None;
+        let mut hard_error: Option<SedarError> = None;
+        for h in handles {
+            let (r, rank, replica, store) = h
+                .join()
+                .map_err(|_| SedarError::Runtime("replica thread panicked".into()))?;
+            match r {
+                Ok(()) => {
+                    if rank == 0 && replica == 0 {
+                        master_store = Some(store);
+                    }
+                }
+                Err(e) if e.is_fault_signal() => {}
+                Err(e) => {
+                    if hard_error.is_none() {
+                        hard_error = Some(e);
+                    }
+                }
+            }
+        }
+        if let Some(e) = hard_error {
+            return Err(e);
+        }
+        if let Some(ev) = detector.event() {
+            return Ok(AttemptResult::Fault(ev));
+        }
+        let store = master_store.ok_or_else(|| {
+            SedarError::Runtime("no master store after successful attempt".into())
+        })?;
+        Ok(AttemptResult::Completed(store))
+    }
+
+    /// Build the two replica stores + start cursor for `rank` per the
+    /// resume decision.
+    fn build_state(
+        &self,
+        shared: &Shared,
+        rank: usize,
+        resume: ResumeFrom,
+    ) -> Result<([VarStore; 2], u64)> {
+        match resume {
+            ResumeFrom::Scratch => {
+                let s0 = shared.app.init_store(rank, shared.cfg.seed);
+                let s1 = shared.app.init_store(rank, shared.cfg.seed);
+                Ok(([s0, s1], 0))
+            }
+            ResumeFrom::SysCkpt(k) => {
+                let chain = shared.sys_chain.as_ref().ok_or_else(|| {
+                    SedarError::Checkpoint("sys resume without chain".into())
+                })?;
+                let snap = chain.read(k, rank)?;
+                // System-level restore is FAITHFUL: replica divergence
+                // captured in a dirty checkpoint comes back (§3.2).
+                Ok((snap.stores, snap.cursor))
+            }
+            ResumeFrom::UserCkpt(k) => {
+                let chain = shared.user_chain.as_ref().ok_or_else(|| {
+                    SedarError::Checkpoint("user resume without chain".into())
+                })?;
+                let snap = chain.read(k, rank)?;
+                // User-level restore loads the single VALIDATED copy into
+                // both replicas (overlaid on a fresh base store), wiping any
+                // divergence (§3.3).
+                let mut base0 = shared.app.init_store(rank, shared.cfg.seed);
+                let mut base1 = shared.app.init_store(rank, shared.cfg.seed);
+                for name in snap.store.names() {
+                    let v = snap.store.get(name)?;
+                    base0.insert(name, v.clone());
+                    base1.insert(name, v.clone());
+                }
+                Ok(([base0, base1], snap.cursor))
+            }
+        }
+    }
+
+    /// Compare the protected run's final result against the sequential
+    /// oracle, tolerating XLA-vs-naive accumulation-order noise.
+    fn check_oracle(&self, master_store: &VarStore) -> Result<bool> {
+        let got = master_store.f32(self.app.result_var())?;
+        let want = self.app.expected_result(self.cfg.seed);
+        if got.len() != want.len() {
+            return Ok(false);
+        }
+        Ok(got.iter().zip(&want).all(|(g, w)| {
+            let tol = 1e-3f32.max(w.abs() * 1e-4);
+            (g - w).abs() <= tol
+        }))
+    }
+
+    // -------------------------------------------------------------- baseline
+
+    /// The paper's baseline (§3): two independent unreplicated instances run
+    /// simultaneously; their final results are compared; on mismatch a third
+    /// run breaks the tie by majority vote.
+    fn run_baseline(&self, shared: &Shared, t_run: Instant) -> Result<RunOutcome> {
+        let trace = Arc::clone(&shared.trace);
+        trace.coord(format!(
+            "baseline: two independent instances of {}",
+            self.app.name()
+        ));
+        let t0 = Instant::now();
+        let (r0, r1) = std::thread::scope(|s| {
+            let h0 = s.spawn(|| self.solo_instance(shared, 0));
+            let h1 = s.spawn(|| self.solo_instance(shared, 1));
+            (h0.join().unwrap(), h1.join().unwrap())
+        });
+        let wall_two = t0.elapsed();
+        let c0 = r0?;
+        let c1 = r1?;
+        let equal = c0.f32(self.app.result_var())?.iter().zip(
+            c1.f32(self.app.result_var())?.iter(),
+        ).all(|(a, b)| a.to_bits() == b.to_bits());
+
+        let mut attempts = 2;
+        let mut attempt_walls = vec![wall_two, wall_two];
+        let final_store;
+        if equal {
+            trace.coord("baseline: instances agree".to_string());
+            final_store = c0;
+        } else {
+            // Third run + vote (Equation 2's re-execution).
+            trace.coord("baseline: MISMATCH — third run + majority vote".to_string());
+            let t2 = Instant::now();
+            let c2 = self.solo_instance(shared, 2)?;
+            attempt_walls.push(t2.elapsed());
+            attempts = 3;
+            let v2 = c2.f32(self.app.result_var())?;
+            let matches0 = c0.f32(self.app.result_var())?.iter().zip(v2.iter())
+                .all(|(a, b)| a.to_bits() == b.to_bits());
+            final_store = if matches0 { c0 } else { c1 };
+        }
+        let correct = self.check_oracle(&final_store)?;
+        Ok(RunOutcome {
+            app: self.app.name().to_string(),
+            strategy: Strategy::Baseline,
+            completed: true,
+            attempts,
+            restarts: attempts - 2,
+            detections: Vec::new(),
+            resume_history: Vec::new(),
+            result_correct: Some(correct),
+            injected: shared.injector.injected(),
+            wall: t_run.elapsed(),
+            attempt_walls,
+            metrics: shared.metrics.snapshot(),
+            trace_dump: trace.dump(),
+        })
+    }
+
+    /// One unreplicated application instance (baseline component).
+    /// `instance` doubles as the injection "replica" id.
+    fn solo_instance(&self, shared: &Shared, instance: usize) -> Result<VarStore> {
+        let nranks = self.app.nranks();
+        let net = Network::new(nranks);
+        let detector = Arc::new(Detector::new());
+        detector.attach_network(Arc::clone(&net));
+        let mut handles = Vec::with_capacity(nranks);
+        for rank in 0..nranks {
+            let pair = PairSync::new(detector.abort_flag());
+            let store = shared.app.init_store(rank, shared.cfg.seed);
+            let ctx = ReplicaCtx::new(ReplicaParts {
+                rank,
+                nranks,
+                replica: instance,
+                start_cursor: 0,
+                store,
+                cfg: Arc::clone(&shared.cfg),
+                pair,
+                ep: net.endpoint(rank),
+                detector: Arc::clone(&detector),
+                injector: Arc::clone(&shared.injector),
+                sys_chain: None,
+                user_chain: None,
+                engine: shared.engine.clone(),
+                metrics: Arc::clone(&shared.metrics),
+                trace: Arc::clone(&shared.trace),
+                significant: Vec::new(),
+                solo: true,
+            });
+            let app = Arc::clone(&shared.app);
+            let det = Arc::clone(&detector);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("solo{instance}.r{rank}"))
+                    .spawn(move || {
+                        let mut ctx = ctx;
+                        let r = replica_main(&*app, &mut ctx);
+                        if r.is_err() {
+                            det.hard_abort();
+                        }
+                        (r, ctx.rank, ctx.store)
+                    })
+                    .map_err(|e| SedarError::Runtime(format!("spawn: {e}")))?,
+            );
+        }
+        let mut master = None;
+        let mut err = None;
+        for h in handles {
+            let (r, rank, store) = h
+                .join()
+                .map_err(|_| SedarError::Runtime("solo thread panicked".into()))?;
+            match r {
+                Ok(()) => {
+                    if rank == 0 {
+                        master = Some(store);
+                    }
+                }
+                Err(e) if err.is_none() => err = Some(e),
+                Err(_) => {}
+            }
+        }
+        if let Some(e) = err {
+            return Err(e);
+        }
+        master.ok_or_else(|| SedarError::Runtime("solo instance lost master store".into()))
+    }
+}

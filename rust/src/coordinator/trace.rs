@@ -1,0 +1,122 @@
+//! The run event trace — the Figure-3-style experiment log.
+//!
+//! Figure 3 of the paper shows the console output of an injection
+//! experiment: checkpoints being stored, the injection, the detection, the
+//! rollback attempts and the final successful validation. [`Trace`] records
+//! exactly that sequence with timestamps; `sedar run --trace` and the
+//! injection-campaign example print it.
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// One trace line.
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    pub elapsed: Duration,
+    /// Rank that emitted the event; `usize::MAX` = the coordinator itself.
+    pub rank: usize,
+    pub replica: usize,
+    pub msg: String,
+}
+
+impl TraceEvent {
+    pub fn format(&self) -> String {
+        let who = if self.rank == usize::MAX {
+            "coord  ".to_string()
+        } else {
+            format!("r{}.{}   ", self.rank, self.replica)
+        };
+        format!(
+            "[{:>9.3} ms] {} {}",
+            self.elapsed.as_secs_f64() * 1e3,
+            who,
+            self.msg
+        )
+    }
+}
+
+/// Append-only, thread-safe event log for one SEDAR run (across attempts).
+pub struct Trace {
+    start: Instant,
+    events: Mutex<Vec<TraceEvent>>,
+    echo: bool,
+}
+
+impl Trace {
+    pub fn new(echo: bool) -> Trace {
+        Trace {
+            start: Instant::now(),
+            events: Mutex::new(Vec::new()),
+            echo,
+        }
+    }
+
+    pub fn emit(&self, rank: usize, replica: usize, msg: impl Into<String>) {
+        let ev = TraceEvent {
+            elapsed: self.start.elapsed(),
+            rank,
+            replica,
+            msg: msg.into(),
+        };
+        if self.echo {
+            eprintln!("{}", ev.format());
+        }
+        self.events.lock().unwrap().push(ev);
+    }
+
+    /// Coordinator-level event.
+    pub fn coord(&self, msg: impl Into<String>) {
+        self.emit(usize::MAX, 0, msg);
+    }
+
+    pub fn events(&self) -> Vec<TraceEvent> {
+        self.events.lock().unwrap().clone()
+    }
+
+    /// Full log as text (the Figure-3 artifact).
+    pub fn dump(&self) -> String {
+        self.events()
+            .iter()
+            .map(|e| e.format())
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+
+    /// True if some event message contains `needle` (test helper).
+    pub fn contains(&self, needle: &str) -> bool {
+        self.events
+            .lock()
+            .unwrap()
+            .iter()
+            .any(|e| e.msg.contains(needle))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_in_order() {
+        let t = Trace::new(false);
+        t.coord("start");
+        t.emit(2, 1, "INJECTED bit-flip");
+        t.coord("end");
+        let evs = t.events();
+        assert_eq!(evs.len(), 3);
+        assert!(evs[0].msg.contains("start"));
+        assert_eq!(evs[1].rank, 2);
+        assert!(t.contains("INJECTED"));
+        assert!(!t.contains("nothing"));
+    }
+
+    #[test]
+    fn dump_formats_lines() {
+        let t = Trace::new(false);
+        t.coord("hello");
+        let s = t.dump();
+        assert!(s.contains("coord"));
+        assert!(s.contains("hello"));
+        assert!(s.contains("ms]"));
+    }
+}

@@ -1,0 +1,246 @@
+//! The detection engine (§3.1 of the paper).
+//!
+//! Detection rests on three comparison surfaces between the two replicas of
+//! each rank:
+//!
+//! 1. **pre-send message contents** — catches TDC before it propagates;
+//! 2. **final results** — catches FSC that propagated only locally;
+//! 3. **synchronization timeouts** — catches TOE (a replica that never
+//!    reaches the rendezvous within the configured lapse).
+//!
+//! The [`Detector`] is the run-global sink for detection events: the first
+//! report wins, the network(s) are aborted so every rank safe-stops, and the
+//! coordinator reads the event after joining the rank threads.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use sha2::{Digest, Sha256};
+
+use crate::error::{FaultClass, SedarError};
+use crate::vmpi::Network;
+
+/// How replica buffers are validated against each other.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ValidationMode {
+    /// Byte-exact comparison of the full contents (the paper's message
+    /// validation: "compares the entire contents of the messages").
+    Full,
+    /// SHA-256 digest comparison (the paper's hash-based validation used for
+    /// application-level checkpoints, and RedMPI-style message hashing).
+    Sha256,
+}
+
+/// Fast byte-equality: compares 8 bytes at a time, then the tail.
+/// This is the detection hot path — see `benches/micro_hotpath.rs`.
+pub fn buffers_equal(a: &[u8], b: &[u8]) -> bool {
+    if a.len() != b.len() {
+        return false;
+    }
+    let n = a.len();
+    let words = n / 8;
+    // Unaligned 8-byte loads are fine on x86-64/aarch64.
+    unsafe {
+        let pa = a.as_ptr() as *const u64;
+        let pb = b.as_ptr() as *const u64;
+        for i in 0..words {
+            if pa.add(i).read_unaligned() != pb.add(i).read_unaligned() {
+                return false;
+            }
+        }
+    }
+    a[words * 8..] == b[words * 8..]
+}
+
+/// SHA-256 digest of a buffer (user-level checkpoint validation).
+pub fn sha256(bytes: &[u8]) -> [u8; 32] {
+    let mut h = Sha256::new();
+    h.update(bytes);
+    h.finalize().into()
+}
+
+/// The comparison token two replicas exchange: either the full buffer or its
+/// digest, per [`ValidationMode`].
+pub fn comparison_token(mode: ValidationMode, bytes: &[u8]) -> Vec<u8> {
+    match mode {
+        ValidationMode::Full => bytes.to_vec(),
+        ValidationMode::Sha256 => sha256(bytes).to_vec(),
+    }
+}
+
+/// A recorded detection.
+#[derive(Debug, Clone)]
+pub struct DetectionEvent {
+    pub class: FaultClass,
+    pub rank: usize,
+    /// Where it was detected, e.g. `"SCATTER"`, `"VALIDATE"`, `"CK2"`.
+    pub site: String,
+    /// Phase cursor of the detecting rank at detection time.
+    pub cursor: u64,
+}
+
+/// Comparison-volume counters (feed the overhead analysis of Table 3).
+#[derive(Debug, Default)]
+pub struct DetectStats {
+    pub comparisons: AtomicU64,
+    pub bytes_compared: AtomicU64,
+    pub sync_events: AtomicU64,
+}
+
+/// Run-global detection sink. First event wins; reporting aborts the
+/// attached network(s) so every rank unwinds with [`SedarError::Aborted`].
+pub struct Detector {
+    event: Mutex<Option<DetectionEvent>>,
+    networks: Mutex<Vec<Arc<Network>>>,
+    abort: Arc<AtomicBool>,
+    pub stats: DetectStats,
+}
+
+impl Default for Detector {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Detector {
+    pub fn new() -> Self {
+        Detector {
+            event: Mutex::new(None),
+            networks: Mutex::new(Vec::new()),
+            abort: Arc::new(AtomicBool::new(false)),
+            stats: DetectStats::default(),
+        }
+    }
+
+    /// Networks to tear down on detection.
+    pub fn attach_network(&self, net: Arc<Network>) {
+        self.networks.lock().unwrap().push(net);
+    }
+
+    /// The shared abort flag replica rendezvous loops poll while waiting.
+    pub fn abort_flag(&self) -> Arc<AtomicBool> {
+        Arc::clone(&self.abort)
+    }
+
+    pub fn is_aborted(&self) -> bool {
+        self.abort.load(Ordering::SeqCst)
+    }
+
+    /// Record a detection (first wins), trigger the safe-stop, and return
+    /// the error the detecting replica should unwind with.
+    pub fn report(&self, class: FaultClass, rank: usize, site: &str, cursor: u64) -> SedarError {
+        {
+            let mut ev = self.event.lock().unwrap();
+            if ev.is_none() {
+                *ev = Some(DetectionEvent {
+                    class,
+                    rank,
+                    site: site.to_string(),
+                    cursor,
+                });
+            }
+        }
+        self.abort.store(true, Ordering::SeqCst);
+        for net in self.networks.lock().unwrap().iter() {
+            net.abort();
+        }
+        SedarError::FaultDetected {
+            class,
+            rank,
+            site: site.to_string(),
+        }
+    }
+
+    /// Tear the run down *without* recording a detection event — used when a
+    /// replica hits an infrastructure error (I/O, runtime) and the other
+    /// ranks must be unblocked so the error can propagate out of the join.
+    pub fn hard_abort(&self) {
+        self.abort.store(true, Ordering::SeqCst);
+        for net in self.networks.lock().unwrap().iter() {
+            net.abort();
+        }
+    }
+
+    /// The recorded event, if any.
+    pub fn event(&self) -> Option<DetectionEvent> {
+        self.event.lock().unwrap().clone()
+    }
+
+    pub fn detected(&self) -> bool {
+        self.event.lock().unwrap().is_some()
+    }
+
+    /// Account one comparison of `bytes` bytes.
+    pub fn note_comparison(&self, bytes: usize) {
+        self.stats.comparisons.fetch_add(1, Ordering::Relaxed);
+        self.stats
+            .bytes_compared
+            .fetch_add(bytes as u64, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn equal_buffers_compare_equal() {
+        let a = vec![7u8; 1025];
+        let b = a.clone();
+        assert!(buffers_equal(&a, &b));
+    }
+
+    #[test]
+    fn detects_single_bit_difference_everywhere() {
+        let a = vec![0u8; 131];
+        for i in 0..a.len() {
+            for bit in [0u8, 3, 7] {
+                let mut b = a.clone();
+                b[i] ^= 1 << bit;
+                assert!(!buffers_equal(&a, &b), "missed flip at byte {i} bit {bit}");
+            }
+        }
+    }
+
+    #[test]
+    fn length_mismatch_is_unequal() {
+        assert!(!buffers_equal(&[1, 2, 3], &[1, 2]));
+    }
+
+    #[test]
+    fn sha256_known_vector() {
+        // SHA-256 of the empty string.
+        assert_eq!(
+            crate::util::hex(&sha256(b"")),
+            "e3b0c44298fc1c149afbf4c8996fb92427ae41e4649b934ca495991b7852b855"
+        );
+    }
+
+    #[test]
+    fn token_modes() {
+        let data = vec![1u8, 2, 3];
+        assert_eq!(comparison_token(ValidationMode::Full, &data), data);
+        assert_eq!(comparison_token(ValidationMode::Sha256, &data).len(), 32);
+    }
+
+    #[test]
+    fn first_report_wins() {
+        let d = Detector::new();
+        let e1 = d.report(FaultClass::Tdc, 1, "SCATTER", 2);
+        assert!(matches!(e1, SedarError::FaultDetected { .. }));
+        let _e2 = d.report(FaultClass::Fsc, 0, "VALIDATE", 9);
+        let ev = d.event().unwrap();
+        assert_eq!(ev.class, FaultClass::Tdc);
+        assert_eq!(ev.site, "SCATTER");
+        assert!(d.is_aborted());
+    }
+
+    #[test]
+    fn report_aborts_attached_network() {
+        let d = Detector::new();
+        let net = Network::new(2);
+        d.attach_network(Arc::clone(&net));
+        let _ = d.report(FaultClass::Toe, 0, "GATHER", 5);
+        assert!(net.is_aborted());
+    }
+}

@@ -1,0 +1,93 @@
+//! Error taxonomy of the SEDAR runtime.
+//!
+//! The important distinction is between *infrastructure* errors (I/O,
+//! malformed artifacts, …) and the two control-flow signals that drive
+//! SEDAR's detection protocol:
+//!
+//! * [`SedarError::FaultDetected`] — a replica divergence (or timeout) was
+//!   observed; the run must safe-stop and, depending on the strategy, a
+//!   recovery is attempted.
+//! * [`SedarError::Aborted`] — another rank already reported a fault and the
+//!   coordinator tore the network down; blocked operations unwind with this.
+
+use thiserror::Error;
+
+/// The four transient-fault effect classes of the paper (§2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FaultClass {
+    /// Transmitted Data Corruption: corrupt data *about to be sent* was
+    /// caught by the pre-send replica comparison.
+    Tdc,
+    /// Final Status Corruption: corruption of non-communicated data, caught
+    /// by the final-result comparison.
+    Fsc,
+    /// Latent Error: the corrupted data was never used again; harmless.
+    Le,
+    /// Time-Out Error: one replica failed to reach the synchronization point
+    /// within the configured lapse.
+    Toe,
+    /// A corrupted *user-level checkpoint* (Algorithm 2 hash mismatch). Not a
+    /// separate class in the paper's taxonomy but a distinct detection site.
+    CkptCorrupt,
+}
+
+impl std::fmt::Display for FaultClass {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            FaultClass::Tdc => "TDC",
+            FaultClass::Fsc => "FSC",
+            FaultClass::Le => "LE",
+            FaultClass::Toe => "TOE",
+            FaultClass::CkptCorrupt => "CKPT-CORRUPT",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// Everything that can go wrong inside a SEDAR run.
+#[derive(Debug, Error)]
+pub enum SedarError {
+    /// A replica divergence / timeout was detected at `site` by `rank`.
+    #[error("fault detected: {class} at {site} (rank {rank})")]
+    FaultDetected {
+        class: FaultClass,
+        rank: usize,
+        site: String,
+    },
+
+    /// The run was torn down because some (other) rank detected a fault.
+    #[error("run aborted (fault detected elsewhere)")]
+    Aborted,
+
+    /// Message-passing substrate failure (mismatched shapes, bad peer, …).
+    #[error("vmpi: {0}")]
+    Vmpi(String),
+
+    /// Checkpoint storage / framing failure.
+    #[error("checkpoint: {0}")]
+    Checkpoint(String),
+
+    /// XLA/PJRT runtime failure.
+    #[error("runtime: {0}")]
+    Runtime(String),
+
+    /// Configuration / CLI error.
+    #[error("config: {0}")]
+    Config(String),
+
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+pub type Result<T> = std::result::Result<T, SedarError>;
+
+impl SedarError {
+    /// True if this error is one of the two detection-protocol signals (as
+    /// opposed to an infrastructure failure).
+    pub fn is_fault_signal(&self) -> bool {
+        matches!(
+            self,
+            SedarError::FaultDetected { .. } | SedarError::Aborted
+        )
+    }
+}

@@ -1,0 +1,403 @@
+//! Controlled fault injection (§4.2 of the paper).
+//!
+//! The paper emulates a transient bit-flip in a processor register by
+//! changing the value of a variable **in only one of the replicated
+//! threads**, in a single place of the execution, *from inside the code of
+//! the application*. An external file (`injected.txt`) latches the
+//! injection so that re-executions after rollback do not re-inject — the
+//! latch must live outside the checkpointed state.
+//!
+//! We reproduce the method exactly: an [`InjectionSpec`] names the execution
+//! point, the target rank/replica, the variable, element and bit; the
+//! [`Injector`] applies it at most once per experiment, guarded by a
+//! file-backed [`Latch`].
+//!
+//! Two injection kinds exist:
+//!
+//! * [`InjectKind::BitFlip`] — corrupt one bit of one element (SDC-type
+//!   faults: TDC / FSC / LE depending on the data's future use);
+//! * [`InjectKind::IndexRollback`] — corrupt a loop index during the compute
+//!   phase so one replica redoes part of its work and arrives late at the
+//!   next synchronization (the paper's TOE scenarios, e.g. Scenario 59).
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::error::Result;
+use crate::state::VarStore;
+
+/// Where in the execution the injection fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InjectPoint {
+    /// Immediately before the phase with this cursor starts (the paper's
+    /// "between X and Y" windows: the injection point between SCATTER and
+    /// CK1 is `BeforePhase(cursor_of(CK1))`).
+    BeforePhase(u64),
+    /// During the compute phase, after sub-block `after_subblock` completes
+    /// (index-variable corruption, TOE scenarios).
+    DuringPhase { phase: u64, after_subblock: u64 },
+}
+
+/// What the injection does.
+#[derive(Debug, Clone)]
+pub enum InjectKind {
+    /// Flip `bit` of element `elem` of variable `var`.
+    BitFlip { var: String, elem: usize, bit: u8 },
+    /// Reset the compute sub-block loop index so the replica redoes
+    /// `redo_blocks` sub-blocks and additionally sleeps `extra_delay`
+    /// (guaranteeing the sibling's rendezvous lapse expires → TOE).
+    IndexRollback {
+        redo_blocks: u64,
+        extra_delay: Duration,
+    },
+}
+
+/// A single controlled fault.
+#[derive(Debug, Clone)]
+pub struct InjectionSpec {
+    /// Human-readable name, e.g. `"scenario-50"`.
+    pub name: String,
+    pub point: InjectPoint,
+    /// Target rank.
+    pub rank: usize,
+    /// Target replica (the paper always injects into one replica; we default
+    /// to replica 1 so replica 0 — the one that talks to the network — holds
+    /// the correct data, but either works).
+    pub replica: usize,
+    pub kind: InjectKind,
+}
+
+/// File-backed one-shot latch — the paper's `injected.txt`. The file content
+/// is `0` before injection and `1` after; it is intentionally **external**
+/// to the application state so checkpoints/rollbacks do not reset it.
+pub struct Latch {
+    path: Option<PathBuf>,
+    fired: AtomicBool,
+}
+
+impl Latch {
+    /// A latch persisted at `path` (created holding `0` if absent).
+    pub fn file_backed(path: &Path) -> Result<Latch> {
+        let fired = if path.exists() {
+            std::fs::read_to_string(path)?.trim() == "1"
+        } else {
+            std::fs::write(path, "0")?;
+            false
+        };
+        Ok(Latch {
+            path: Some(path.to_path_buf()),
+            fired: AtomicBool::new(fired),
+        })
+    }
+
+    /// An in-memory latch (unit tests).
+    pub fn in_memory() -> Latch {
+        Latch {
+            path: None,
+            fired: AtomicBool::new(false),
+        }
+    }
+
+    /// Attempt to fire. Returns `true` exactly once.
+    pub fn fire(&self) -> bool {
+        if self.fired.swap(true, Ordering::SeqCst) {
+            return false;
+        }
+        if let Some(p) = &self.path {
+            // Best-effort persistence; the in-memory flag is authoritative
+            // within the process (matches the paper's single-experiment use).
+            let _ = std::fs::write(p, "1");
+        }
+        true
+    }
+
+    pub fn fired(&self) -> bool {
+        self.fired.load(Ordering::SeqCst)
+    }
+}
+
+/// A record of an injection that actually happened (for traces/reports).
+#[derive(Debug, Clone)]
+pub struct InjectionRecord {
+    pub name: String,
+    pub rank: usize,
+    pub replica: usize,
+    pub description: String,
+}
+
+/// One armed fault: a spec plus its once-only latch.
+struct Slot {
+    spec: InjectionSpec,
+    latch: Latch,
+}
+
+/// The injector a run carries. Usually holds one fault (the paper's single-
+/// fault experiments); multiple slots model the §3.2/§4.2 multi-fault
+/// discussion (independent faults, each with its own external latch).
+pub struct Injector {
+    slots: Vec<Slot>,
+    records: Mutex<Vec<InjectionRecord>>,
+}
+
+impl Injector {
+    /// A fault-free run.
+    pub fn none() -> Injector {
+        Injector {
+            slots: Vec::new(),
+            records: Mutex::new(Vec::new()),
+        }
+    }
+
+    pub fn new(spec: InjectionSpec, latch: Latch) -> Injector {
+        Injector {
+            slots: vec![Slot { spec, latch }],
+            records: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Multiple independent faults, each with its own latch.
+    pub fn multi(specs: Vec<(InjectionSpec, Latch)>) -> Injector {
+        Injector {
+            slots: specs
+                .into_iter()
+                .map(|(spec, latch)| Slot { spec, latch })
+                .collect(),
+            records: Mutex::new(Vec::new()),
+        }
+    }
+
+    pub fn specs(&self) -> Vec<&InjectionSpec> {
+        self.slots.iter().map(|s| &s.spec).collect()
+    }
+
+    /// Did every armed injection happen (in this or a previous execution)?
+    pub fn injected(&self) -> bool {
+        !self.slots.is_empty() && self.slots.iter().all(|s| s.latch.fired())
+    }
+
+    /// The records of injections performed *in this process*.
+    pub fn records(&self) -> Vec<InjectionRecord> {
+        self.records.lock().unwrap().clone()
+    }
+
+    /// Called by the replica driver at `BeforePhase(cursor)` points.
+    /// Applies every matching un-fired bit-flip to `store`; returns the
+    /// records of injections performed now.
+    pub fn maybe_inject_at_phase(
+        &self,
+        cursor: u64,
+        rank: usize,
+        replica: usize,
+        store: &mut VarStore,
+    ) -> Vec<InjectionRecord> {
+        let mut fired = Vec::new();
+        for slot in &self.slots {
+            let spec = &slot.spec;
+            if spec.rank != rank || spec.replica != replica {
+                continue;
+            }
+            let InjectPoint::BeforePhase(p) = spec.point else {
+                continue;
+            };
+            if p != cursor {
+                continue;
+            }
+            let InjectKind::BitFlip { var, elem, bit } = &spec.kind else {
+                continue;
+            };
+            // Match found — fire the latch (once, across re-executions).
+            if !slot.latch.fire() {
+                continue;
+            }
+            let v = store
+                .get_mut(var)
+                .unwrap_or_else(|_| panic!("injection target var '{var}' missing"));
+            let esz = v.buf.dtype().size_of();
+            let byte_idx = *elem * esz; // flip within the element's first byte + bit
+            crate::util::flip_bit(
+                v.buf.bytes_mut(),
+                byte_idx + (*bit as usize / 8),
+                bit % 8,
+            );
+            let rec = InjectionRecord {
+                name: spec.name.clone(),
+                rank,
+                replica,
+                description: format!(
+                    "bit-flip: var={var} elem={elem} bit={bit} at cursor {cursor}"
+                ),
+            };
+            self.records.lock().unwrap().push(rec.clone());
+            fired.push(rec);
+        }
+        fired
+    }
+
+    /// Called by compute loops after each sub-block. Returns
+    /// `Some((redo_blocks, extra_delay))` at most once per slot if this is
+    /// the index-corruption point for (rank, replica).
+    pub fn maybe_index_rollback(
+        &self,
+        phase: u64,
+        subblock: u64,
+        rank: usize,
+        replica: usize,
+    ) -> Option<(u64, Duration)> {
+        for slot in &self.slots {
+            let spec = &slot.spec;
+            if spec.rank != rank || spec.replica != replica {
+                continue;
+            }
+            let InjectPoint::DuringPhase {
+                phase: p,
+                after_subblock,
+            } = spec.point
+            else {
+                continue;
+            };
+            if p != phase || after_subblock != subblock {
+                continue;
+            }
+            let InjectKind::IndexRollback {
+                redo_blocks,
+                extra_delay,
+            } = &spec.kind
+            else {
+                continue;
+            };
+            if !slot.latch.fire() {
+                continue;
+            }
+            let rec = InjectionRecord {
+                name: spec.name.clone(),
+                rank,
+                replica,
+                description: format!(
+                    "index-rollback: phase={phase} subblock={subblock} redo={redo_blocks}"
+                ),
+            };
+            self.records.lock().unwrap().push(rec.clone());
+            return Some((*redo_blocks, *extra_delay));
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::state::Var;
+
+    fn store_with_a() -> VarStore {
+        let mut s = VarStore::new();
+        s.insert("A", Var::f32(&[4], vec![1.0, 2.0, 3.0, 4.0]));
+        s
+    }
+
+    fn flip_spec(point: InjectPoint) -> InjectionSpec {
+        InjectionSpec {
+            name: "t".into(),
+            point,
+            rank: 1,
+            replica: 1,
+            kind: InjectKind::BitFlip {
+                var: "A".into(),
+                elem: 2,
+                bit: 31, // sign bit of the f32
+            },
+        }
+    }
+
+    #[test]
+    fn injects_once_at_matching_point() {
+        let inj = Injector::new(flip_spec(InjectPoint::BeforePhase(3)), Latch::in_memory());
+        let mut s = store_with_a();
+        // Wrong cursor / rank / replica: no-ops.
+        assert!(inj.maybe_inject_at_phase(2, 1, 1, &mut s).is_empty());
+        assert!(inj.maybe_inject_at_phase(3, 0, 1, &mut s).is_empty());
+        assert!(inj.maybe_inject_at_phase(3, 1, 0, &mut s).is_empty());
+        assert_eq!(s.f32("A").unwrap()[2], 3.0);
+        // Match: flips the sign bit of A[2].
+        assert!(!inj.maybe_inject_at_phase(3, 1, 1, &mut s).is_empty());
+        assert_eq!(s.f32("A").unwrap()[2], -3.0);
+        // Latched: second pass does nothing (the re-execution case).
+        assert!(inj.maybe_inject_at_phase(3, 1, 1, &mut s).is_empty());
+        assert_eq!(s.f32("A").unwrap()[2], -3.0);
+        assert!(inj.injected());
+    }
+
+    #[test]
+    fn multi_injector_fires_each_slot_once() {
+        let mut spec2 = flip_spec(InjectPoint::BeforePhase(3));
+        spec2.kind = InjectKind::BitFlip {
+            var: "A".into(),
+            elem: 0,
+            bit: 31,
+        };
+        let inj = Injector::multi(vec![
+            (flip_spec(InjectPoint::BeforePhase(3)), Latch::in_memory()),
+            (spec2, Latch::in_memory()),
+        ]);
+        let mut s = store_with_a();
+        let fired = inj.maybe_inject_at_phase(3, 1, 1, &mut s);
+        assert_eq!(fired.len(), 2);
+        assert_eq!(s.f32("A").unwrap()[0], -1.0);
+        assert_eq!(s.f32("A").unwrap()[2], -3.0);
+        assert!(inj.injected());
+        assert_eq!(inj.records().len(), 2);
+    }
+
+    #[test]
+    fn file_latch_survives_reload() {
+        let dir = std::env::temp_dir().join(format!("sedar-latch-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("injected.txt");
+        let _ = std::fs::remove_file(&path);
+        {
+            let l = Latch::file_backed(&path).unwrap();
+            assert!(!l.fired());
+            assert!(l.fire());
+            assert!(!l.fire());
+        }
+        // "Restart": a new latch over the same file sees the fired state.
+        let l2 = Latch::file_backed(&path).unwrap();
+        assert!(l2.fired());
+        assert!(!l2.fire());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn index_rollback_matches_subblock() {
+        let spec = InjectionSpec {
+            name: "toe".into(),
+            point: InjectPoint::DuringPhase {
+                phase: 6,
+                after_subblock: 2,
+            },
+            rank: 2,
+            replica: 1,
+            kind: InjectKind::IndexRollback {
+                redo_blocks: 2,
+                extra_delay: Duration::from_millis(50),
+            },
+        };
+        let inj = Injector::new(spec, Latch::in_memory());
+        assert!(inj.maybe_index_rollback(6, 1, 2, 1).is_none());
+        assert!(inj.maybe_index_rollback(6, 2, 0, 1).is_none());
+        let (redo, delay) = inj.maybe_index_rollback(6, 2, 2, 1).unwrap();
+        assert_eq!(redo, 2);
+        assert_eq!(delay, Duration::from_millis(50));
+        // once only
+        assert!(inj.maybe_index_rollback(6, 2, 2, 1).is_none());
+    }
+
+    #[test]
+    fn none_injector_is_inert() {
+        let inj = Injector::none();
+        let mut s = store_with_a();
+        assert!(inj.maybe_inject_at_phase(0, 0, 0, &mut s).is_empty());
+        assert!(!inj.injected());
+    }
+}

@@ -1,0 +1,70 @@
+//! # SEDAR-RS
+//!
+//! A reproduction of *"Soft Errors Detection and Automatic Recovery based on
+//! Replication combined with different Levels of Checkpointing"* (Montezanti
+//! et al., Future Generation Computer Systems, 2020).
+//!
+//! SEDAR protects message-passing parallel applications against transient
+//! faults (silent data corruption and time-out errors) by duplicating every
+//! application process in a replica thread, validating the contents of every
+//! outgoing message between the two replicas before it is sent, and — when a
+//! divergence is detected — recovering automatically from one of two kinds of
+//! checkpoints:
+//!
+//! 1. **Detection-only** — notify the user and safe-stop (§3.1 of the paper).
+//! 2. **Multiple system-level checkpoints** — a DMTCP-style chain of
+//!    coordinated whole-state snapshots walked backwards until a clean one is
+//!    found (§3.2, Algorithm 1).
+//! 3. **A single validated application-level checkpoint** — per-replica dumps
+//!    of the application's significant variables, cross-validated by hash so
+//!    at most one rollback is ever needed (§3.3, Algorithm 2).
+//!
+//! The crate is the Layer-3 (coordination) component of a three-layer stack:
+//! the compute hot spots of the benchmark applications are Pallas kernels
+//! (Layer 1) wrapped in JAX functions (Layer 2) that are AOT-lowered to HLO
+//! text at build time and executed from Rust through the PJRT C API (the
+//! [`runtime`] module). Python never runs on the request path.
+//!
+//! ## Crate map
+//!
+//! | module | role |
+//! |---|---|
+//! | [`cluster`] | multicore-cluster topology model + replica placement |
+//! | [`vmpi`] | in-process message-passing substrate (the "MPI") |
+//! | [`state`] | typed variable store = the application state |
+//! | [`replica`] | dual-replica lockstep execution of each rank |
+//! | [`detect`] | comparison engine: TDC / FSC / TOE / LE classification |
+//! | [`inject`] | controlled bit-flip fault injection (§4.2) |
+//! | [`checkpoint`] | system-level chain + user-level validated checkpoints |
+//! | [`recovery`] | Algorithms 1 and 2: rollback orchestration |
+//! | [`coordinator`] | the SEDAR run controller (strategy × app × injection) |
+//! | [`apps`] | matmul (Master/Worker), Jacobi (SPMD), Smith-Waterman (pipeline) |
+//! | [`workfault`] | the 64-scenario workfault catalog + prediction oracle (§4.1) |
+//! | [`model`] | analytical temporal model: Equations 1–14 + AET (§3.4, §4.3-4.4) |
+//! | [`runtime`] | PJRT engine: loads `artifacts/*.hlo.txt`, executes from rust |
+//! | [`metrics`] | timers and derived execution parameters (Table 3) |
+//! | [`report`] | markdown / CSV table emitters for the experiment harness |
+//! | [`prop`] | in-repo property-based testing mini-framework |
+
+pub mod apps;
+pub mod checkpoint;
+pub mod cli;
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod detect;
+pub mod error;
+pub mod inject;
+pub mod metrics;
+pub mod model;
+pub mod prop;
+pub mod recovery;
+pub mod replica;
+pub mod report;
+pub mod runtime;
+pub mod state;
+pub mod util;
+pub mod vmpi;
+pub mod workfault;
+
+pub use error::{Result, SedarError};

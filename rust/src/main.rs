@@ -1,0 +1,261 @@
+//! `sedar` — the command-line launcher.
+//!
+//! ```text
+//! sedar run      --app matmul|jacobi|sw --strategy baseline|detect|sysckpt|userckpt
+//!                [--n 256] [--nranks 4] [--iters 32] [--scenario 50] [--xla]
+//!                [--trace] [--seed 7] [--collectives p2p|native] [--run-dir DIR]
+//! sedar campaign [--limit 64] [--scenario K] [--trace]    # the 64-scenario workfault
+//! sedar catalog                                           # print Table 2 (all 64 rows)
+//! sedar model    [--table 4|5] [--thresholds] [--aet]     # the analytical model
+//! sedar help
+//! ```
+
+use std::sync::Arc;
+
+use sedar::apps::{AppSpec, JacobiApp, MatmulApp, SwApp};
+use sedar::cli::Args;
+use sedar::config::{RunConfig, Strategy};
+use sedar::coordinator::SedarRun;
+use sedar::error::{Result, SedarError};
+use sedar::model::params::PaperApp;
+use sedar::model::tables;
+use sedar::report::Table;
+use sedar::workfault;
+
+fn main() {
+    let args = Args::from_env();
+    let code = match dispatch(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("sedar: error: {e}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.command.as_deref() {
+        Some("run") => cmd_run(args),
+        Some("campaign") => cmd_campaign(args),
+        Some("catalog") => cmd_catalog(),
+        Some("model") => cmd_model(args),
+        Some("help") | None => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        Some(other) => Err(SedarError::Config(format!(
+            "unknown command '{other}' (try 'sedar help')"
+        ))),
+    }
+}
+
+const HELP: &str = "\
+sedar — soft-error detection and automatic recovery (SEDAR, FGCS 2020)
+
+commands:
+  run       run an application under a protection strategy (optionally
+            injecting one of the 64 workfault scenarios)
+  campaign  run the 64-scenario injection campaign and check every
+            prediction (effect, P_det, P_rec, N_roll)
+  catalog   print the full scenario catalog (the paper's Table 2)
+  model     evaluate the analytical temporal model (Tables 4/5, thresholds,
+            AET-vs-MTBE sweeps)
+  help      this text
+
+run `sedar <cmd>` flag semantics are documented in rust/src/main.rs.
+";
+
+fn build_app(args: &Args) -> Result<Arc<dyn AppSpec>> {
+    let nranks = args.usize_or("nranks", 4)?;
+    match args.get_or("app", "matmul") {
+        "matmul" => {
+            let n = args.usize_or("n", 256)?;
+            Ok(Arc::new(MatmulApp::new(n, nranks)))
+        }
+        "jacobi" => {
+            let n = args.usize_or("n", 256)?;
+            let iters = args.usize_or("iters", 32)?;
+            let every = args.usize_or("ckpt-every", 8)?;
+            Ok(Arc::new(JacobiApp::new(n, nranks, iters, every)))
+        }
+        "sw" => {
+            let m = args.usize_or("n", 512)?;
+            let block = args.usize_or("block", m / 8)?;
+            let every = args.usize_or("ckpt-every", 2)?;
+            Ok(Arc::new(SwApp::new(m, nranks, block, every)))
+        }
+        other => Err(SedarError::Config(format!("unknown app '{other}'"))),
+    }
+}
+
+fn build_cfg(args: &Args) -> Result<RunConfig> {
+    // `--config FILE` loads a key=value config first; CLI flags override.
+    let base = match args.get("config") {
+        Some(path) => RunConfig::from_kv(&std::fs::read_to_string(path)?)?,
+        None => RunConfig::default(),
+    };
+    let mut cfg = RunConfig {
+        strategy: match args.get("strategy") {
+            Some(s) => Strategy::parse(s)?,
+            None => base.strategy,
+        },
+        ..base
+    };
+    cfg.seed = args.u64_or("seed", cfg.seed)?;
+    cfg.use_xla = args.has("xla");
+    cfg.echo_trace = args.has("trace");
+    if let Some(c) = args.get("collectives") {
+        cfg.set("collectives", c)?;
+    }
+    if let Some(d) = args.get("run-dir") {
+        cfg.run_dir = d.into();
+    } else {
+        cfg.run_dir =
+            format!("runs/{}-{}", args.get_or("app", "matmul"), std::process::id()).into();
+    }
+    if let Some(ms) = args.get("toe-timeout-ms") {
+        cfg.set("toe_timeout_ms", ms)?;
+    }
+    Ok(cfg)
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let app = build_app(args)?;
+    let cfg = build_cfg(args)?;
+    let injection = match args.get("scenario") {
+        None => None,
+        Some(k) => {
+            let id: u32 = k
+                .parse()
+                .map_err(|e| SedarError::Config(format!("--scenario: {e}")))?;
+            // Scenarios are defined over the matmul test app (§4.1).
+            let m = MatmulApp::new(args.usize_or("n", 256)?, args.usize_or("nranks", 4)?);
+            let cat = workfault::catalog(&m);
+            let sc = cat
+                .iter()
+                .find(|s| s.id == id)
+                .ok_or_else(|| SedarError::Config(format!("no scenario {id}")))?;
+            println!("injecting: {}", sc.row());
+            Some(workfault::injection_for(&m, sc, &cfg))
+        }
+    };
+    let run = SedarRun::new(app, cfg, injection);
+    let outcome = run.run()?;
+    println!("{}", outcome.summary());
+    println!("\n-- metrics --\n{}", outcome.metrics.markdown());
+    if args.has("trace") {
+        println!("\n-- trace --\n{}", outcome.trace_dump);
+    }
+    if outcome.result_correct == Some(false) {
+        return Err(SedarError::Config("final result WRONG".into()));
+    }
+    Ok(())
+}
+
+fn cmd_campaign(args: &Args) -> Result<()> {
+    let n = args.usize_or("n", 64)?;
+    let nranks = args.usize_or("nranks", 4)?;
+    let app = MatmulApp::new(n, nranks);
+    let mut cfg = RunConfig::default();
+    cfg.run_dir = format!("runs/campaign-{}", std::process::id()).into();
+    cfg.echo_trace = false;
+    cfg.use_xla = args.has("xla");
+    cfg.seed = args.u64_or("seed", cfg.seed)?;
+
+    let cat = workfault::catalog(&app);
+    let only: Option<u32> = args.get("scenario").and_then(|s| s.parse().ok());
+    let limit = args.usize_or("limit", cat.len())?;
+
+    println!("{}", workfault::table2_header());
+    let mut passed = 0;
+    let mut failed = 0;
+    for sc in cat.iter().take(limit) {
+        if let Some(id) = only {
+            if sc.id != id {
+                continue;
+            }
+        }
+        let r = workfault::run_scenario(&app, sc, &cfg)?;
+        println!(
+            "{}  →  {}",
+            sc.row(),
+            if r.pass { "OK" } else { "MISMATCH" }
+        );
+        if args.has("trace") && only.is_some() {
+            println!("\n-- trace --\n{}", r.outcome.trace_dump);
+        }
+        if r.pass {
+            passed += 1;
+        } else {
+            failed += 1;
+            for m in &r.mismatches {
+                println!("    ! {m}");
+            }
+        }
+    }
+    println!("\ncampaign: {passed} passed, {failed} failed");
+    let _ = std::fs::remove_dir_all(&cfg.run_dir);
+    if failed > 0 {
+        return Err(SedarError::Config(format!("{failed} scenarios mismatched")));
+    }
+    Ok(())
+}
+
+fn cmd_catalog() -> Result<()> {
+    let app = MatmulApp::new(64, 4);
+    println!("{}", workfault::table2_header());
+    for sc in workfault::catalog(&app) {
+        println!("{}", sc.row());
+    }
+    Ok(())
+}
+
+fn cmd_model(args: &Args) -> Result<()> {
+    let cols: Vec<(&str, sedar::model::Params)> = PaperApp::ALL
+        .iter()
+        .map(|a| (a.label(), a.paper_params()))
+        .collect();
+    match args.get_or("table", "4") {
+        "4" => print!("{}", tables::table4_markdown(&cols)),
+        "5" => {
+            let p = PaperApp::Jacobi.paper_params();
+            let t = tables::table5(&p, &[0.3, 0.5, 0.8], 4);
+            print!("{}", tables::table5_markdown(&t));
+        }
+        other => return Err(SedarError::Config(format!("unknown table '{other}'"))),
+    }
+    if args.has("thresholds") {
+        let p = PaperApp::Jacobi.paper_params();
+        println!("\n§4.4 crossovers (Jacobi parameters):");
+        for k in 0..=2u32 {
+            println!(
+                "  X*(k={k}) = {:.2}%  (rolling back k={k} beats stop-and-relaunch beyond this)",
+                tables::threshold_x(&p, k) * 100.0
+            );
+        }
+    }
+    if args.has("aet") {
+        let mut t = Table::new(&["MTBE [h]", "baseline", "detect", "sys-ckpt", "user-ckpt"]);
+        let p = PaperApp::Jacobi.paper_params();
+        use sedar::model::equations::*;
+        for mtbe_h in [2.0, 5.0, 10.0, 20.0, 50.0, 100.0] {
+            let mtbe = mtbe_h * 3600.0;
+            let row = [
+                sedar::model::aet(eq1_baseline_fa(&p), eq2_baseline_fp(&p), p.t_prog, mtbe),
+                sedar::model::aet(eq3_detect_fa(&p), eq4_detect_fp(&p, 0.5), p.t_prog, mtbe),
+                sedar::model::aet(eq5_sys_fa(&p), eq6_sys_fp(&p, 0), p.t_prog, mtbe),
+                sedar::model::aet(eq7_user_fa(&p), eq8_user_fp(&p), p.t_prog, mtbe),
+            ];
+            t.row(&[
+                format!("{mtbe_h}"),
+                format!("{:.2}", row[0] / 3600.0),
+                format!("{:.2}", row[1] / 3600.0),
+                format!("{:.2}", row[2] / 3600.0),
+                format!("{:.2}", row[3] / 3600.0),
+            ]);
+        }
+        println!("\nAET vs MTBE (hours, Jacobi parameters):\n{}", t.markdown());
+    }
+    Ok(())
+}

@@ -1,0 +1,188 @@
+//! Run-time instrumentation.
+//!
+//! Counters here feed the execution-parameter measurements of Table 3
+//! (`f_d`, `t_cs`, `t_ca`, `T_comp`, …) and the perf pass of
+//! EXPERIMENTS.md §Perf. Everything is atomic so replica threads update
+//! without locks on the hot path.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+/// Shared counters for one execution attempt.
+#[derive(Debug, Default)]
+pub struct RunMetrics {
+    /// Nanoseconds spent in replica-pair buffer comparisons (detection cost).
+    pub compare_ns: AtomicU64,
+    /// Bytes run through the comparator.
+    pub compare_bytes: AtomicU64,
+    /// Nanoseconds spent blocked in replica rendezvous (sync cost).
+    pub sync_ns: AtomicU64,
+    /// Number of rendezvous events.
+    pub sync_events: AtomicU64,
+    /// Nanoseconds spent serializing + writing system-level checkpoints.
+    pub sys_ckpt_ns: AtomicU64,
+    /// Bytes written to system-level checkpoints.
+    pub sys_ckpt_bytes: AtomicU64,
+    /// Number of system-level checkpoints stored (this attempt).
+    pub sys_ckpts: AtomicU64,
+    /// Same, user-level.
+    pub user_ckpt_ns: AtomicU64,
+    pub user_ckpt_bytes: AtomicU64,
+    pub user_ckpts: AtomicU64,
+    /// Nanoseconds in compute-engine execution (XLA or fallback).
+    pub exec_ns: AtomicU64,
+    /// Number of compute launches.
+    pub execs: AtomicU64,
+}
+
+impl RunMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&self, counter: &AtomicU64, v: u64) {
+        counter.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn add_duration(&self, counter: &AtomicU64, d: Duration) {
+        counter.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    /// Average cost of storing one system-level checkpoint — the measured
+    /// `t_cs` of Table 3.
+    pub fn t_cs(&self) -> Option<Duration> {
+        let n = self.sys_ckpts.load(Ordering::Relaxed);
+        if n == 0 {
+            return None;
+        }
+        Some(Duration::from_nanos(
+            self.sys_ckpt_ns.load(Ordering::Relaxed) / n,
+        ))
+    }
+
+    /// Average cost of one user-level checkpoint — the measured `t_ca`.
+    pub fn t_ca(&self) -> Option<Duration> {
+        let n = self.user_ckpts.load(Ordering::Relaxed);
+        if n == 0 {
+            return None;
+        }
+        Some(Duration::from_nanos(
+            self.user_ckpt_ns.load(Ordering::Relaxed) / n,
+        ))
+    }
+
+    /// Snapshot all counters (for reports).
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            compare_ns: self.compare_ns.load(Ordering::Relaxed),
+            compare_bytes: self.compare_bytes.load(Ordering::Relaxed),
+            sync_ns: self.sync_ns.load(Ordering::Relaxed),
+            sync_events: self.sync_events.load(Ordering::Relaxed),
+            sys_ckpt_ns: self.sys_ckpt_ns.load(Ordering::Relaxed),
+            sys_ckpt_bytes: self.sys_ckpt_bytes.load(Ordering::Relaxed),
+            sys_ckpts: self.sys_ckpts.load(Ordering::Relaxed),
+            user_ckpt_ns: self.user_ckpt_ns.load(Ordering::Relaxed),
+            user_ckpt_bytes: self.user_ckpt_bytes.load(Ordering::Relaxed),
+            user_ckpts: self.user_ckpts.load(Ordering::Relaxed),
+            exec_ns: self.exec_ns.load(Ordering::Relaxed),
+            execs: self.execs.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Plain-data copy of [`RunMetrics`] at a point in time.
+#[derive(Debug, Clone, Default)]
+pub struct MetricsSnapshot {
+    pub compare_ns: u64,
+    pub compare_bytes: u64,
+    pub sync_ns: u64,
+    pub sync_events: u64,
+    pub sys_ckpt_ns: u64,
+    pub sys_ckpt_bytes: u64,
+    pub sys_ckpts: u64,
+    pub user_ckpt_ns: u64,
+    pub user_ckpt_bytes: u64,
+    pub user_ckpts: u64,
+    pub exec_ns: u64,
+    pub execs: u64,
+}
+
+impl MetricsSnapshot {
+    pub fn markdown(&self) -> String {
+        format!(
+            "| metric | value |\n|---|---|\n\
+             | comparisons | {} in {} |\n\
+             | sync events | {} blocking {} |\n\
+             | system ckpts | {} ({}, {}) |\n\
+             | user ckpts | {} ({}, {}) |\n\
+             | compute launches | {} ({}) |\n",
+            crate::util::human_bytes(self.compare_bytes),
+            crate::util::human_duration(Duration::from_nanos(self.compare_ns)),
+            self.sync_events,
+            crate::util::human_duration(Duration::from_nanos(self.sync_ns)),
+            self.sys_ckpts,
+            crate::util::human_bytes(self.sys_ckpt_bytes),
+            crate::util::human_duration(Duration::from_nanos(self.sys_ckpt_ns)),
+            self.user_ckpts,
+            crate::util::human_bytes(self.user_ckpt_bytes),
+            crate::util::human_duration(Duration::from_nanos(self.user_ckpt_ns)),
+            self.execs,
+            crate::util::human_duration(Duration::from_nanos(self.exec_ns)),
+        )
+    }
+}
+
+/// RAII timer that adds its elapsed time to an atomic counter on drop.
+pub struct ScopedTimer<'a> {
+    counter: &'a AtomicU64,
+    start: Instant,
+}
+
+impl<'a> ScopedTimer<'a> {
+    pub fn new(counter: &'a AtomicU64) -> Self {
+        ScopedTimer {
+            counter,
+            start: Instant::now(),
+        }
+    }
+}
+
+impl Drop for ScopedTimer<'_> {
+    fn drop(&mut self) {
+        self.counter
+            .fetch_add(self.start.elapsed().as_nanos() as u64, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scoped_timer_accumulates() {
+        let c = AtomicU64::new(0);
+        {
+            let _t = ScopedTimer::new(&c);
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(c.load(Ordering::Relaxed) >= 4_000_000);
+    }
+
+    #[test]
+    fn t_cs_averages() {
+        let m = RunMetrics::new();
+        assert!(m.t_cs().is_none());
+        m.sys_ckpts.store(4, Ordering::Relaxed);
+        m.sys_ckpt_ns.store(4_000_000, Ordering::Relaxed);
+        assert_eq!(m.t_cs().unwrap(), Duration::from_millis(1));
+    }
+
+    #[test]
+    fn snapshot_copies() {
+        let m = RunMetrics::new();
+        m.add(&m.compare_bytes, 128);
+        let s = m.snapshot();
+        assert_eq!(s.compare_bytes, 128);
+        assert!(s.markdown().contains("128 B"));
+    }
+}

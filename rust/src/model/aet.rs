@@ -1,0 +1,75 @@
+//! Average Execution Time (§3.4, Equations 9–11) and Daly's optimal
+//! checkpoint interval (referenced in §4.3).
+
+/// Equation 10 — probability that a silent fault hits a computation of
+/// length `t_prog` on a system with the given `mtbe` (exponential errors):
+/// `α = 1 - e^(-T_prog / MTBE)`.
+pub fn fault_probability(t_prog: f64, mtbe: f64) -> f64 {
+    1.0 - (-t_prog / mtbe).exp()
+}
+
+/// Equations 9 + 11 — `AET = T_FP·α + T_FA·(1-α)` with α from the MTBE.
+pub fn aet(t_fa: f64, t_fp: f64, t_prog: f64, mtbe: f64) -> f64 {
+    let alpha = fault_probability(t_prog, mtbe);
+    t_fp * alpha + t_fa * (1.0 - alpha)
+}
+
+/// MTBE of an N-processor system from the per-processor MTBE (§3.4:
+/// `MTBE = MTBE_ind / N`).
+pub fn system_mtbe(mtbe_ind: f64, n_processors: u32) -> f64 {
+    mtbe_ind / n_processors as f64
+}
+
+/// Daly's higher-order estimate of the optimum checkpoint interval
+/// (J. T. Daly, FGCS 2006), for checkpoint cost `delta` and MTBF `m`:
+///
+/// `t_opt = sqrt(2δM)·[1 + (1/3)√(δ/2M) + (1/9)(δ/2M)] − δ`  for δ < 2M,
+/// `t_opt = M` otherwise.
+pub fn daly_interval(delta: f64, m: f64) -> f64 {
+    if delta >= 2.0 * m {
+        return m;
+    }
+    let r = delta / (2.0 * m);
+    (2.0 * delta * m).sqrt() * (1.0 + r.sqrt() / 3.0 + r / 9.0) - delta
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn probability_limits() {
+        assert!(fault_probability(1.0, 1e12) < 1e-9); // huge MTBE → ~0
+        assert!(fault_probability(1e12, 1.0) > 0.999999); // tiny MTBE → ~1
+        let p = fault_probability(3600.0, 3600.0);
+        assert!((p - (1.0 - (-1.0f64).exp())).abs() < 1e-12);
+    }
+
+    #[test]
+    fn aet_interpolates_between_fa_and_fp() {
+        let t_fa = 10.0;
+        let t_fp = 20.0;
+        // Fault certain → FP time; fault impossible → FA time.
+        assert!((aet(t_fa, t_fp, 1e12, 1.0) - t_fp).abs() < 1e-3);
+        assert!((aet(t_fa, t_fp, 1.0, 1e12) - t_fa).abs() < 1e-3);
+        // Monotone in fault probability: smaller MTBE → larger AET.
+        let a1 = aet(t_fa, t_fp, 10.0, 100.0);
+        let a2 = aet(t_fa, t_fp, 10.0, 10.0);
+        assert!(a2 > a1);
+    }
+
+    #[test]
+    fn system_mtbe_scales_inversely() {
+        assert_eq!(system_mtbe(1000.0, 10), 100.0);
+    }
+
+    #[test]
+    fn daly_reasonable() {
+        // First-order term dominates: t_opt ≈ sqrt(2 δ M).
+        let t = daly_interval(10.0, 24.0 * 3600.0);
+        let first_order = (2.0f64 * 10.0 * 24.0 * 3600.0).sqrt();
+        assert!((t - first_order).abs() / first_order < 0.05);
+        // Degenerate regime.
+        assert_eq!(daly_interval(100.0, 10.0), 10.0);
+    }
+}

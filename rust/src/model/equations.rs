@@ -1,0 +1,135 @@
+//! Equations 1–8 and 13–14 of the paper: per-strategy execution time in the
+//! absence (`*_fa`) and presence (`*_fp`) of a single silent fault.
+//!
+//! All times in seconds; `x` is the detection instant as a fraction of
+//! progress (0 < X < 1); `k` is the number of *additional* checkpoints the
+//! recovery must walk back (k = 0 ⇒ the last checkpoint works).
+
+use super::params::Params;
+
+/// Equation 1 — baseline, fault-free: two simultaneous instances + final
+/// comparison.
+pub fn eq1_baseline_fa(p: &Params) -> f64 {
+    p.t_prog + p.t_comp
+}
+
+/// Equation 2 — baseline with a fault: full re-execution + second
+/// comparison (vote) + a restart.
+pub fn eq2_baseline_fp(p: &Params) -> f64 {
+    2.0 * (p.t_prog + p.t_comp) + p.t_rest
+}
+
+/// Equation 3 — detection-only, fault-free: the baseline time with `T_prog`
+/// inflated by the detection overhead factor `f_d`.
+pub fn eq3_detect_fa(p: &Params) -> f64 {
+    p.t_prog * (1.0 + p.f_d) + p.t_comp
+}
+
+/// Equation 4 — detection-only with a fault detected at progress `x`:
+/// the executed fraction + a full re-execution + restart + comparison.
+pub fn eq4_detect_fp(p: &Params, x: f64) -> f64 {
+    p.t_prog * (1.0 + p.f_d) * (x + 1.0) + p.t_rest + p.t_comp
+}
+
+/// Equation 5 — multiple system-level checkpoints, fault-free: detection
+/// overhead plus `n` checkpoint stores.
+pub fn eq5_sys_fa(p: &Params) -> f64 {
+    p.t_prog * (1.0 + p.f_d) + p.t_comp + p.n as f64 * p.t_cs
+}
+
+/// Equation 13 — the re-execution series of Equation 6 in closed form:
+/// `Σ_{m=0}^{k} (k - m + 1/2) · t_i = (k+1)²/2 · t_i`.
+pub fn eq13_rework(k: u32, t_i: f64) -> f64 {
+    let k1 = (k + 1) as f64;
+    k1 * k1 / 2.0 * t_i
+}
+
+/// Equation 6 / 14 — multiple system-level checkpoints with a fault needing
+/// `k` extra rollbacks: base time + re-stored checkpoints + re-executed
+/// intervals + restarts.
+pub fn eq6_sys_fp(p: &Params, k: u32) -> f64 {
+    p.t_prog * (1.0 + p.f_d)
+        + p.t_comp
+        + (p.n + k) as f64 * p.t_cs
+        + eq13_rework(k, p.t_i)
+        + (k + 1) as f64 * p.t_rest
+}
+
+/// Equation 7 — single validated application-level checkpoint, fault-free:
+/// detection overhead plus `n` validated user-level checkpoints.
+pub fn eq7_user_fa(p: &Params) -> f64 {
+    p.t_prog * (1.0 + p.f_d) + p.t_comp + p.n as f64 * (p.t_ca + p.t_comp_a)
+}
+
+/// Equation 8 — single validated application-level checkpoint with a fault:
+/// on average half a checkpoint interval is re-executed and exactly one
+/// restart happens.
+pub fn eq8_user_fp(p: &Params) -> f64 {
+    eq7_user_fa(p) + 0.5 * p.t_i + p.t_rest
+}
+
+/// Equation 12 (rearranged) — the measured detection overhead factor from a
+/// SEDAR detection run vs the baseline:
+/// `f_d = (T_SEDAR_det_FA - (T_prog + T_comp)) / (T_prog + T_comp)`.
+pub fn eq12_f_d(t_sedar_det_fa: f64, t_prog: f64, t_comp: f64) -> f64 {
+    (t_sedar_det_fa - (t_prog + t_comp)) / (t_prog + t_comp)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::params::PaperApp;
+
+    const H: f64 = 3600.0;
+
+    fn close(a_hours: f64, b_hours: f64, tol: f64) {
+        assert!(
+            (a_hours - b_hours).abs() <= tol,
+            "expected {b_hours:.3} h, got {a_hours:.3} h"
+        );
+    }
+
+    // These spot-check the equations against Table 4 of the paper; the full
+    // sweep lives in rust/tests/model_paper_values.rs.
+
+    #[test]
+    fn eq1_matches_table4_row1() {
+        let p = PaperApp::Matmul.paper_params();
+        close(eq1_baseline_fa(&p) / H, 10.22, 0.015);
+    }
+
+    #[test]
+    fn eq6_k0_matches_table4_row8() {
+        let p = PaperApp::Matmul.paper_params();
+        close(eq6_sys_fp(&p, 0) / H, 10.77, 0.015);
+    }
+
+    #[test]
+    fn eq13_closed_form_equals_series() {
+        for k in 0..8u32 {
+            let series: f64 = (0..=k).map(|m| (k - m) as f64 + 0.5).sum::<f64>();
+            assert!((eq13_rework(k, 1.0) - series).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn eq8_close_to_eq6_k0() {
+        // §4.3: "the time of recovery from the last valid application-level
+        // checkpoint is almost equal to the time of recovery from the last
+        // system-level checkpoint".
+        for app in PaperApp::ALL {
+            let p = app.paper_params();
+            let d = (eq8_user_fp(&p) - eq6_sys_fp(&p, 0)).abs() / H;
+            assert!(d < 0.15, "{}: diff {d:.3} h", app.label());
+        }
+    }
+
+    #[test]
+    fn eq12_recovers_overhead_factor() {
+        let p = PaperApp::Jacobi.paper_params();
+        let t_det = eq3_detect_fa(&p);
+        let f = eq12_f_d(t_det, p.t_prog, p.t_comp);
+        // Round-trips f_d up to the T_comp/T_prog cross-term.
+        assert!((f - p.f_d).abs() < 1e-4);
+    }
+}

@@ -1,0 +1,19 @@
+//! The analytical temporal model of the paper (§3.1–3.4, §4.3–4.4).
+//!
+//! Equations 1–14 describe the execution time of every strategy with and
+//! without a fault; Equations 9–11 average them by fault probability (AET).
+//! Tables 4 and 5 of the paper are *evaluations of this model* over the
+//! measured parameters of Table 3 — so this module, fed the paper's
+//! parameter values, regenerates the paper's numbers exactly (checked to
+//! rounding tolerance in `rust/tests/model_paper_values.rs`), and fed our
+//! measured parameters regenerates the same *shapes* on this host.
+
+pub mod aet;
+pub mod equations;
+pub mod params;
+pub mod tables;
+
+pub use aet::{aet, daly_interval, fault_probability};
+pub use equations::*;
+pub use params::{Params, PaperApp};
+pub use tables::{table4, table5, threshold_x, Table4Row, Table5};

@@ -1,0 +1,225 @@
+//! Generators for the paper's evaluation tables.
+//!
+//! * [`table4`] — Table 4: execution times of every strategy × fault
+//!   situation for a parameter set (12 rows).
+//! * [`table5`] — Table 5: detection-only vs `k+1` rollback attempts for
+//!   X ∈ {30, 50, 80}% with the NA (not-admissible) logic of §4.4.
+//! * [`threshold_x`] — the §4.4 crossover points (5.88 %, 22.67 %, 50.61 %
+//!   for the Jacobi parameters).
+
+use super::equations::*;
+use super::params::Params;
+
+/// One row of Table 4.
+#[derive(Debug, Clone)]
+pub struct Table4Row {
+    pub label: String,
+    /// Time in hours, one per app column.
+    pub hours: Vec<f64>,
+}
+
+/// Regenerate Table 4 for a set of app parameter columns.
+/// Rows match the paper exactly (X ∈ {30, 50, 80} %, k ∈ {0, 1, 4}).
+pub fn table4(params: &[(&str, Params)]) -> Vec<Table4Row> {
+    const H: f64 = 3600.0;
+    let mut rows: Vec<(String, Box<dyn Fn(&Params) -> f64>)> = Vec::new();
+    rows.push((
+        "Baseline, without fault (Eq. 1)".into(),
+        Box::new(|p| eq1_baseline_fa(p)),
+    ));
+    rows.push((
+        "Baseline, with fault (Eq. 2)".into(),
+        Box::new(|p| eq2_baseline_fp(p)),
+    ));
+    rows.push((
+        "Only detection, without fault (Eq. 3)".into(),
+        Box::new(|p| eq3_detect_fa(p)),
+    ));
+    for x in [0.3, 0.5, 0.8] {
+        rows.push((
+            format!("Only detection, with fault (Eq. 4, X = {:.0}%)", x * 100.0),
+            Box::new(move |p| eq4_detect_fp(p, x)),
+        ));
+    }
+    rows.push((
+        "Multiple checkpoints, without fault (Eq. 5)".into(),
+        Box::new(|p| eq5_sys_fa(p)),
+    ));
+    for k in [0u32, 1, 4] {
+        rows.push((
+            format!("Multiple checkpoints, with fault (Eq. 6, k = {k})"),
+            Box::new(move |p| eq6_sys_fp(p, k)),
+        ));
+    }
+    rows.push((
+        "Single checkpoint, without fault (Eq. 7)".into(),
+        Box::new(|p| eq7_user_fa(p)),
+    ));
+    rows.push((
+        "Single checkpoint, with fault (Eq. 8)".into(),
+        Box::new(|p| eq8_user_fp(p)),
+    ));
+
+    rows.into_iter()
+        .map(|(label, f)| Table4Row {
+            label,
+            hours: params.iter().map(|(_, p)| f(p) / H).collect(),
+        })
+        .collect()
+}
+
+/// Markdown rendering of Table 4.
+pub fn table4_markdown(params: &[(&str, Params)]) -> String {
+    let mut s = String::from("| # | Situation |");
+    for (name, _) in params {
+        s.push_str(&format!(" {name} |"));
+    }
+    s.push_str("\n|---|---|");
+    for _ in params {
+        s.push_str("---|");
+    }
+    s.push('\n');
+    for (i, row) in table4(params).iter().enumerate() {
+        s.push_str(&format!("| {} | {} |", i + 1, row.label));
+        for h in &row.hours {
+            s.push_str(&format!(" {h:.2} |"));
+        }
+        s.push('\n');
+    }
+    s
+}
+
+/// Table 5: execution time with the fault detected at X, comparing the
+/// detection-only response against `k+1` rollback attempts.
+#[derive(Debug, Clone)]
+pub struct Table5 {
+    pub x_percent: Vec<f64>,
+    pub k_max: u32,
+    /// `only_detection[i]` — hours for `x_percent[i]` (Equation 4).
+    pub only_detection: Vec<f64>,
+    /// `rollback[i][k]` — hours for k rollbacks at `x_percent[i]`, `None`
+    /// where the checkpoint was not yet stored (NA).
+    pub rollback: Vec<Vec<Option<f64>>>,
+}
+
+/// §4.4's admissibility: by progress fraction `x` of the detection-only
+/// reference time (Equation 3), `floor(x·T_ref / t_i)` checkpoints have
+/// been stored; rolling back `k+1` of them requires that many to exist.
+pub fn admissible(p: &Params, x: f64, k: u32) -> bool {
+    let t_ref = eq3_detect_fa(p);
+    let stored = (x * t_ref / p.t_i).floor() as i64;
+    (k as i64) < stored
+}
+
+/// Regenerate Table 5 for one parameter set (the paper uses Jacobi).
+pub fn table5(p: &Params, xs: &[f64], k_max: u32) -> Table5 {
+    const H: f64 = 3600.0;
+    let only: Vec<f64> = xs.iter().map(|x| eq4_detect_fp(p, *x) / H).collect();
+    let mut rollback = Vec::new();
+    for &x in xs {
+        let mut row = Vec::new();
+        for k in 0..=k_max {
+            row.push(if admissible(p, x, k) {
+                Some(eq6_sys_fp(p, k) / H)
+            } else {
+                None
+            });
+        }
+        rollback.push(row);
+    }
+    Table5 {
+        x_percent: xs.iter().map(|x| x * 100.0).collect(),
+        k_max,
+        only_detection: only,
+        rollback,
+    }
+}
+
+/// Markdown rendering of Table 5.
+pub fn table5_markdown(t: &Table5) -> String {
+    let mut s = String::from("| X [%] | Only detection [hs] |");
+    for k in 0..=t.k_max {
+        s.push_str(&format!(" k={k} |"));
+    }
+    s.push_str("\n|---|---|");
+    for _ in 0..=t.k_max {
+        s.push_str("---|");
+    }
+    s.push('\n');
+    for (i, x) in t.x_percent.iter().enumerate() {
+        s.push_str(&format!("| {x:.0} | {:.2} |", t.only_detection[i]));
+        for cell in &t.rollback[i] {
+            match cell {
+                Some(h) => s.push_str(&format!(" {h:.2} |")),
+                None => s.push_str(" NA |"),
+            }
+        }
+        s.push('\n');
+    }
+    s
+}
+
+/// §4.4 crossover: the progress fraction X at which the detection-only
+/// response (Equation 4) costs the same as recovery with `k` extra
+/// rollbacks (Equation 14). Below it, stop-and-relaunch wins; above it,
+/// rolling back wins. Solved in closed form from the linearity of Eq. 4:
+/// `X* = (Eq14(k) - Eq4(0)) / (T_prog (1 + f_d))`.
+pub fn threshold_x(p: &Params, k: u32) -> f64 {
+    let eq14 = eq6_sys_fp(p, k);
+    let eq4_at_0 = eq4_detect_fp(p, 0.0);
+    (eq14 - eq4_at_0) / (p.t_prog * (1.0 + p.f_d))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::params::PaperApp;
+
+    #[test]
+    fn table4_has_12_rows_and_3_columns() {
+        let cols: Vec<(&str, Params)> = PaperApp::ALL
+            .iter()
+            .map(|a| (a.label(), a.paper_params()))
+            .collect();
+        let t = table4(&cols);
+        assert_eq!(t.len(), 12);
+        assert!(t.iter().all(|r| r.hours.len() == 3));
+        let md = table4_markdown(&cols);
+        assert!(md.contains("MATMUL"));
+        assert!(md.contains("Eq. 8"));
+    }
+
+    #[test]
+    fn table5_na_pattern_matches_paper() {
+        // §4.4, Jacobi, t_i = 1 h: X=30% → k ≤ 1 admissible; X=50% → k ≤ 3;
+        // X=80% → all of k ≤ 4.
+        let p = PaperApp::Jacobi.paper_params();
+        let t = table5(&p, &[0.3, 0.5, 0.8], 4);
+        let admissible_count =
+            |row: &Vec<Option<f64>>| row.iter().filter(|c| c.is_some()).count();
+        assert_eq!(admissible_count(&t.rollback[0]), 2); // k=0,1
+        assert_eq!(admissible_count(&t.rollback[1]), 4); // k=0..3
+        assert_eq!(admissible_count(&t.rollback[2]), 5); // k=0..4
+    }
+
+    #[test]
+    fn thresholds_bracket_decisions() {
+        // For X below threshold_x(k=0), stop-and-relaunch beats k=0 rollback.
+        let p = PaperApp::Jacobi.paper_params();
+        let x0 = threshold_x(&p, 0);
+        assert!(x0 > 0.0 && x0 < 0.2);
+        let below = eq4_detect_fp(&p, x0 * 0.5);
+        let above = eq4_detect_fp(&p, (x0 * 1.5).min(1.0));
+        let k0 = eq6_sys_fp(&p, 0);
+        assert!(below < k0);
+        assert!(above > k0);
+    }
+
+    #[test]
+    fn table5_markdown_prints_na() {
+        let p = PaperApp::Jacobi.paper_params();
+        let t = table5(&p, &[0.3], 4);
+        let md = table5_markdown(&t);
+        assert!(md.contains("NA"));
+    }
+}

@@ -1,0 +1,167 @@
+//! Rollback decision logic — Algorithms 1 and 2 of the paper.
+//!
+//! The mechanics are deliberately file-based, like the paper's prototype
+//! (§4.2): `failures.txt` counts how many times the (same) fault has been
+//! detected across re-executions, and — because it lives **outside** the
+//! checkpointed state — survives rollbacks. Algorithm 1 turns that counter
+//! plus the chain length into the checkpoint number to restart from,
+//! walking one step further back on every re-detection until the fault no
+//! longer manifests (or the beginning of the program is reached).
+
+use std::path::{Path, PathBuf};
+
+use crate::config::Strategy;
+use crate::error::{Result, SedarError};
+
+/// Where an execution attempt (re)starts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ResumeFrom {
+    /// Fresh start (first attempt, or no usable checkpoint remains).
+    Scratch,
+    /// `dmtcp_restart` from system-level checkpoint `k` (Algorithm 1).
+    SysCkpt(u64),
+    /// Restore the single valid user-level checkpoint `k` (Algorithm 2).
+    UserCkpt(u64),
+}
+
+impl std::fmt::Display for ResumeFrom {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ResumeFrom::Scratch => write!(f, "scratch"),
+            ResumeFrom::SysCkpt(k) => write!(f, "sys-ck{k}"),
+            ResumeFrom::UserCkpt(k) => write!(f, "user-ck{k}"),
+        }
+    }
+}
+
+/// The `failures.txt` external rollback counter of §4.2 — `extern_counter`
+/// in Algorithm 1. Persisted so it is independent of checkpoint storage.
+pub struct ExternCounter {
+    path: PathBuf,
+}
+
+impl ExternCounter {
+    pub fn at(dir: &Path) -> Result<ExternCounter> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join("failures.txt");
+        if !path.exists() {
+            std::fs::write(&path, "0")?;
+        }
+        Ok(ExternCounter { path })
+    }
+
+    pub fn read(&self) -> Result<u32> {
+        std::fs::read_to_string(&self.path)?
+            .trim()
+            .parse()
+            .map_err(|e| SedarError::Checkpoint(format!("bad failures.txt: {e}")))
+    }
+
+    /// `extern_counter++` (Algorithm 1 line 10). Returns the new value.
+    pub fn increment(&self) -> Result<u32> {
+        let v = self.read()? + 1;
+        std::fs::write(&self.path, v.to_string())?;
+        Ok(v)
+    }
+
+    pub fn reset(&self) -> Result<()> {
+        std::fs::write(&self.path, "0")?;
+        Ok(())
+    }
+}
+
+/// Algorithm 1 line 14: `ckpt_no = ckpt_count - extern_counter`.
+///
+/// `ckpt_count` is the number of checkpoints stored by the last execution;
+/// the first detection (`extern_counter == 1`) restarts from the last one,
+/// each further detection walks one step back. `None` = the chain is
+/// exhausted: relaunch from the beginning (the Figure 2(b) worst case).
+pub fn algorithm1_target(ckpt_count: u64, extern_counter: u32) -> Option<u64> {
+    let t = ckpt_count as i64 - extern_counter as i64;
+    if t >= 0 {
+        Some(t as u64)
+    } else {
+        None
+    }
+}
+
+/// The per-strategy resume decision after a detection.
+pub fn decide_resume(
+    strategy: Strategy,
+    sys_count: Option<u64>,
+    extern_counter: u32,
+    user_latest: Option<u64>,
+) -> ResumeFrom {
+    match strategy {
+        // §3.1: safe stop + notify; the modeled response (Equation 4)
+        // relaunches from the beginning.
+        Strategy::Baseline | Strategy::DetectOnly => ResumeFrom::Scratch,
+        Strategy::SysCkpt => match algorithm1_target(sys_count.unwrap_or(0), extern_counter) {
+            Some(k) => ResumeFrom::SysCkpt(k),
+            None => ResumeFrom::Scratch,
+        },
+        // Algorithm 2: the latest valid checkpoint is by construction the
+        // only one on disk; if none was ever validated, start over.
+        Strategy::UserCkpt => match user_latest {
+            Some(k) => ResumeFrom::UserCkpt(k),
+            None => ResumeFrom::Scratch,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn algorithm1_walks_backwards() {
+        // 4 checkpoints stored (ck0..ck3).
+        assert_eq!(algorithm1_target(4, 1), Some(3)); // last
+        assert_eq!(algorithm1_target(4, 2), Some(2)); // last-but-one
+        assert_eq!(algorithm1_target(4, 4), Some(0)); // first
+        assert_eq!(algorithm1_target(4, 5), None); // from scratch
+        assert_eq!(algorithm1_target(0, 1), None); // nothing stored yet
+    }
+
+    #[test]
+    fn extern_counter_persists() {
+        let dir = std::env::temp_dir().join(format!(
+            "sedar-ec-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let c = ExternCounter::at(&dir).unwrap();
+        assert_eq!(c.read().unwrap(), 0);
+        assert_eq!(c.increment().unwrap(), 1);
+        assert_eq!(c.increment().unwrap(), 2);
+        // Re-open (process restart): value survives.
+        let c2 = ExternCounter::at(&dir).unwrap();
+        assert_eq!(c2.read().unwrap(), 2);
+        c2.reset().unwrap();
+        assert_eq!(c2.read().unwrap(), 0);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn resume_decisions_per_strategy() {
+        use Strategy::*;
+        assert_eq!(
+            decide_resume(DetectOnly, None, 1, None),
+            ResumeFrom::Scratch
+        );
+        assert_eq!(
+            decide_resume(SysCkpt, Some(3), 1, None),
+            ResumeFrom::SysCkpt(2)
+        );
+        assert_eq!(
+            decide_resume(SysCkpt, Some(3), 4, None),
+            ResumeFrom::Scratch
+        );
+        assert_eq!(
+            decide_resume(UserCkpt, None, 1, Some(5)),
+            ResumeFrom::UserCkpt(5)
+        );
+        assert_eq!(decide_resume(UserCkpt, None, 1, None), ResumeFrom::Scratch);
+    }
+}

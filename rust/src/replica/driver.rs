@@ -1,0 +1,26 @@
+//! The replica thread's main loop: a phase-structured program driver.
+//!
+//! Applications are written as resumable phase sequences (see
+//! [`crate::apps::spec::AppSpec`]); the driver walks the phases from the
+//! context's start cursor (0 for a fresh run, `snapshot.cursor` after a
+//! restart) and applies pending fault injections at phase boundaries — the
+//! paper's "between X and Y" injection windows.
+
+use crate::apps::spec::AppSpec;
+use crate::error::Result;
+
+use super::ReplicaCtx;
+
+/// Run the application program on this replica from `ctx.cursor` to
+/// completion. Unwinds with a fault-signal error on detection/abort.
+pub fn replica_main(app: &dyn AppSpec, ctx: &mut ReplicaCtx) -> Result<()> {
+    let n = app.n_phases();
+    while ctx.cursor < n {
+        let phase = ctx.cursor;
+        // Injection window "… → phase": fires right before the phase runs.
+        ctx.inject_before_phase(phase);
+        app.run_phase(ctx, phase)?;
+        ctx.cursor += 1;
+    }
+    Ok(())
+}

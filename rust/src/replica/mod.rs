@@ -1,0 +1,793 @@
+//! Dual-replica execution of one rank — the operational core of SEDAR.
+//!
+//! Every application rank runs as **two replica threads** executing the same
+//! deterministic program over private [`VarStore`]s. All interaction with
+//! the outside world goes through the [`ReplicaCtx`] operations defined
+//! here, which implement the paper's detection protocol (§3.1):
+//!
+//! * [`ReplicaCtx::sedar_send`] — replicas rendezvous, the outgoing buffer
+//!   contents are compared (full bytes or SHA-256 per config), and only the
+//!   leading replica performs the actual network send;
+//! * [`ReplicaCtx::sedar_recv`] — the leading replica receives, the sibling
+//!   gets a copy before either resumes (and the rendezvous doubles as a TOE
+//!   watchdog for the receiver side);
+//! * [`ReplicaCtx::validate_result`] — final-result comparison (FSC);
+//! * [`ReplicaCtx::checkpoint`] — strategy-dispatched: no-op, system-level
+//!   chain store (§3.2), or validated user-level checkpoint (Algorithm 2).
+//!
+//! A divergence anywhere reports to the [`Detector`], which safe-stops the
+//! whole run; the coordinator then drives recovery.
+
+pub mod driver;
+pub mod pair;
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::checkpoint::user::UserSnapshot;
+use crate::checkpoint::{RankSnapshot, SystemChain, UserChain};
+use crate::config::{CollectiveImpl, RunConfig, Strategy};
+use crate::coordinator::trace::Trace;
+use crate::detect::{buffers_equal, comparison_token, sha256, Detector, ValidationMode};
+use crate::error::{FaultClass, Result, SedarError};
+use crate::inject::Injector;
+use crate::metrics::RunMetrics;
+use crate::runtime::EngineHandle;
+use crate::state::{Buf, DType, Var, VarStore};
+use crate::vmpi::Endpoint;
+
+use pair::{PairError, PairSync};
+
+/// Compact wire encoding of a [`Var`] for replica-to-replica copies.
+pub fn encode_var(v: &Var) -> Vec<u8> {
+    let bytes = v.buf.bytes();
+    let mut out = Vec::with_capacity(16 + bytes.len());
+    out.push(match v.buf.dtype() {
+        DType::F32 => 0,
+        DType::F64 => 1,
+        DType::I64 => 2,
+        DType::U8 => 3,
+    });
+    out.push(v.shape.len() as u8);
+    for d in &v.shape {
+        out.extend_from_slice(&(*d as u64).to_le_bytes());
+    }
+    out.extend_from_slice(bytes);
+    out
+}
+
+/// Inverse of [`encode_var`].
+pub fn decode_var(data: &[u8]) -> Result<Var> {
+    if data.len() < 2 {
+        return Err(SedarError::Vmpi("truncated var encoding".into()));
+    }
+    let dtype = match data[0] {
+        0 => DType::F32,
+        1 => DType::F64,
+        2 => DType::I64,
+        3 => DType::U8,
+        t => return Err(SedarError::Vmpi(format!("bad dtype tag {t}"))),
+    };
+    let ndim = data[1] as usize;
+    let mut off = 2;
+    let mut shape = Vec::with_capacity(ndim);
+    for _ in 0..ndim {
+        if off + 8 > data.len() {
+            return Err(SedarError::Vmpi("truncated var shape".into()));
+        }
+        shape.push(u64::from_le_bytes(data[off..off + 8].try_into().unwrap()) as usize);
+        off += 8;
+    }
+    let buf = Buf::from_bytes(dtype, &data[off..])?;
+    Ok(Var { shape, buf })
+}
+
+/// Everything a replica thread needs to run its program.
+pub struct ReplicaCtx {
+    pub rank: usize,
+    pub nranks: usize,
+    /// 0 = leading thread (owns the network endpoint), 1 = replica.
+    pub replica: usize,
+    /// Phase about to run / running.
+    pub cursor: u64,
+    /// The application state of THIS replica.
+    pub store: VarStore,
+    pub cfg: Arc<RunConfig>,
+    pair: Arc<PairSync>,
+    ep: Endpoint,
+    detector: Arc<Detector>,
+    injector: Arc<Injector>,
+    sys_chain: Option<Arc<SystemChain>>,
+    user_chain: Option<Arc<UserChain>>,
+    engine: Option<EngineHandle>,
+    metrics: Arc<RunMetrics>,
+    trace: Arc<Trace>,
+    /// Names of this rank's significant variables (user-level checkpoints).
+    significant: Vec<String>,
+    /// Solo (baseline) mode: no replica sibling exists. All pair
+    /// rendezvous, comparisons and checkpoints become no-ops; `replica`
+    /// then identifies the *instance* (for injection targeting).
+    solo: bool,
+}
+
+/// Construction parameters for a [`ReplicaCtx`] (assembled by the
+/// coordinator for each attempt).
+pub struct ReplicaParts {
+    pub rank: usize,
+    pub nranks: usize,
+    pub replica: usize,
+    pub start_cursor: u64,
+    pub store: VarStore,
+    pub cfg: Arc<RunConfig>,
+    pub pair: Arc<PairSync>,
+    pub ep: Endpoint,
+    pub detector: Arc<Detector>,
+    pub injector: Arc<Injector>,
+    pub sys_chain: Option<Arc<SystemChain>>,
+    pub user_chain: Option<Arc<UserChain>>,
+    pub engine: Option<EngineHandle>,
+    pub metrics: Arc<RunMetrics>,
+    pub trace: Arc<Trace>,
+    pub significant: Vec<String>,
+    pub solo: bool,
+}
+
+impl ReplicaCtx {
+    pub fn new(p: ReplicaParts) -> ReplicaCtx {
+        ReplicaCtx {
+            rank: p.rank,
+            nranks: p.nranks,
+            replica: p.replica,
+            cursor: p.start_cursor,
+            store: p.store,
+            cfg: p.cfg,
+            pair: p.pair,
+            ep: p.ep,
+            detector: p.detector,
+            injector: p.injector,
+            sys_chain: p.sys_chain,
+            user_chain: p.user_chain,
+            engine: p.engine,
+            metrics: p.metrics,
+            trace: p.trace,
+            significant: p.significant,
+            solo: p.solo,
+        }
+    }
+
+    pub fn is_lead(&self) -> bool {
+        self.solo || self.replica == 0
+    }
+
+    pub fn is_solo(&self) -> bool {
+        self.solo
+    }
+
+    pub fn trace(&self, msg: impl Into<String>) {
+        self.trace.emit(self.rank, self.replica, msg);
+    }
+
+    pub fn metrics(&self) -> &RunMetrics {
+        &self.metrics
+    }
+
+    // ------------------------------------------------------------ internals
+
+    /// Rendezvous with the sibling, exchanging `token`. Converts a missing
+    /// sibling into a TOE detection at `site`.
+    fn pair_exchange(&self, token: Vec<u8>, site: &str) -> Result<Vec<u8>> {
+        if self.solo {
+            return Ok(token);
+        }
+        let t0 = Instant::now();
+        let r = self
+            .pair
+            .exchange(self.replica, token, self.cfg.toe_timeout);
+        self.metrics.add_duration(&self.metrics.sync_ns, t0.elapsed());
+        self.metrics.add(&self.metrics.sync_events, 1);
+        match r {
+            Ok(tok) => Ok(tok),
+            Err(PairError::Aborted) => Err(SedarError::Aborted),
+            Err(PairError::Timeout) => {
+                self.trace(format!("TOE: sibling missed rendezvous at {site}"));
+                Err(self
+                    .detector
+                    .report(FaultClass::Toe, self.rank, site, self.cursor))
+            }
+        }
+    }
+
+    fn pop_from_sibling(&self, site: &str) -> Result<Vec<u8>> {
+        if self.solo {
+            return Ok(vec![1]);
+        }
+        let t0 = Instant::now();
+        let r = self.pair.pop_mine(self.replica, self.cfg.toe_timeout);
+        self.metrics.add_duration(&self.metrics.sync_ns, t0.elapsed());
+        match r {
+            Ok(tok) => Ok(tok),
+            Err(PairError::Aborted) => Err(SedarError::Aborted),
+            Err(PairError::Timeout) => {
+                self.trace(format!("TOE: sibling missed rendezvous at {site}"));
+                Err(self
+                    .detector
+                    .report(FaultClass::Toe, self.rank, site, self.cursor))
+            }
+        }
+    }
+
+    fn push_to_sibling(&self, token: Vec<u8>) {
+        if self.solo {
+            return;
+        }
+        self.pair.push_to_peer(self.replica, token);
+    }
+
+    /// Compare this replica's buffer against the sibling's and classify a
+    /// mismatch as `class` at `site`. Returns Ok(()) on agreement.
+    ///
+    /// Protocol (perf change P3, EXPERIMENTS.md §Perf): in `Full` mode the
+    /// transfer is one-way — the replica ships its bytes, the leader
+    /// compares them against its own buffer in place and ships back a
+    /// 1-byte verdict. This halves the copied bytes per validation versus
+    /// the naive both-ways exchange while preserving the rendezvous (and
+    /// therefore TOE detection) in both directions. `Sha256` mode exchanges
+    /// 32-byte digests symmetrically.
+    fn compare_with_sibling(
+        &self,
+        bytes: &[u8],
+        site: &str,
+        class: FaultClass,
+    ) -> Result<()> {
+        if self.solo {
+            return Ok(());
+        }
+        let equal = match self.cfg.validation {
+            ValidationMode::Full => {
+                if self.is_lead() {
+                    let peer = self.pop_from_sibling_site(site)?;
+                    let t0 = Instant::now();
+                    let eq = buffers_equal(bytes, &peer);
+                    self.metrics
+                        .add_duration(&self.metrics.compare_ns, t0.elapsed());
+                    self.push_to_sibling(vec![eq as u8]);
+                    eq
+                } else {
+                    self.push_to_sibling(bytes.to_vec());
+                    let verdict = self.pop_from_sibling_site(site)?;
+                    verdict[0] == 1
+                }
+            }
+            ValidationMode::Sha256 => {
+                let token = {
+                    let t0 = Instant::now();
+                    let tok = comparison_token(ValidationMode::Sha256, bytes);
+                    self.metrics
+                        .add_duration(&self.metrics.compare_ns, t0.elapsed());
+                    tok
+                };
+                let peer = self.pair_exchange(token.clone(), site)?;
+                buffers_equal(&token, &peer)
+            }
+        };
+        self.metrics.add(&self.metrics.compare_bytes, bytes.len() as u64);
+        self.detector.note_comparison(bytes.len());
+        if equal {
+            Ok(())
+        } else {
+            self.trace(format!("{class} divergence detected at {site}"));
+            Err(self.detector.report(class, self.rank, site, self.cursor))
+        }
+    }
+
+    /// `pop_from_sibling` with the TOE classification at `site` (alias kept
+    /// for the compare protocol's readability).
+    fn pop_from_sibling_site(&self, site: &str) -> Result<Vec<u8>> {
+        self.pop_from_sibling(site)
+    }
+
+    // ----------------------------------------------------- point-to-point
+
+    /// Validated send (§3.1): compare the outgoing contents between
+    /// replicas; on agreement the leading replica sends one copy.
+    ///
+    /// Only the lead clones the payload (it must hand ownership to the
+    /// network); the replica compares straight out of its store (perf
+    /// change P6).
+    pub fn sedar_send(&mut self, dst: usize, tag: u32, var: &str, site: &str) -> Result<()> {
+        if self.is_lead() {
+            let v = self.store.get(var)?.clone();
+            self.compare_with_sibling(v.buf.bytes(), site, FaultClass::Tdc)?;
+            self.ep.send(dst, tag, v)?;
+        } else {
+            let v = self.store.get(var)?;
+            let bytes = v.buf.bytes();
+            // SAFETY-free reborrow dance: compare takes &self, store borrow
+            // is immutable — both coexist.
+            self.compare_with_sibling(bytes, site, FaultClass::Tdc)?;
+        }
+        Ok(())
+    }
+
+    /// Validated send of an ad-hoc value (not a named store variable) —
+    /// used for sub-slices like scatter chunks.
+    pub fn sedar_send_value(
+        &mut self,
+        dst: usize,
+        tag: u32,
+        v: &Var,
+        site: &str,
+    ) -> Result<()> {
+        self.compare_with_sibling(v.buf.bytes(), site, FaultClass::Tdc)?;
+        if self.is_lead() {
+            self.ep.send(dst, tag, v.clone())?;
+        }
+        Ok(())
+    }
+
+    /// Receive into `into`: the leading replica receives from the network
+    /// and copies the contents to its sibling before either resumes (§3.1:
+    /// "it makes a copy of the received contents"). The rendezvous also
+    /// makes a late sibling visible as a TOE at `site`.
+    pub fn sedar_recv(&mut self, src: usize, tag: u32, into: &str, site: &str) -> Result<Var> {
+        let v = if self.is_lead() {
+            let v = match self.ep.recv(src, tag) {
+                Ok(v) => v,
+                Err(SedarError::Aborted) => return Err(SedarError::Aborted),
+                Err(e) => return Err(e),
+            };
+            // Hand the copy to the sibling, then wait for its check-in token
+            // (the receiver-side synchronization of Figure 1).
+            self.push_to_sibling(encode_var(&v));
+            self.pop_from_sibling(site)?;
+            v
+        } else {
+            self.push_to_sibling(vec![1]); // check-in token
+            let bytes = self.pop_from_sibling(site)?;
+            decode_var(&bytes)?
+        };
+        self.store.insert(into, v.clone());
+        Ok(v)
+    }
+
+    // ---------------------------------------------------------- collectives
+
+    /// Broadcast `var` from `root` (stores into `var` on non-roots).
+    pub fn bcast(&mut self, root: usize, var: &str, site: &str) -> Result<()> {
+        match self.cfg.collectives {
+            CollectiveImpl::PointToPoint => {
+                if self.rank == root {
+                    for r in 0..self.nranks {
+                        if r != root {
+                            self.sedar_send(r, tag_for(site, r), var, site)?;
+                        }
+                    }
+                } else {
+                    self.sedar_recv(root, tag_for(site, self.rank), var, site)?;
+                }
+            }
+            CollectiveImpl::Native => {
+                // Validate once (root's full buffer participates — §4.2:
+                // "in collective communications, the sender process also
+                // participates, ... the corrupted data gets transmitted and
+                // hence it is validated").
+                if self.rank == root {
+                    let v = self.store.get(var)?.clone();
+                    self.compare_with_sibling(v.buf.bytes(), site, FaultClass::Tdc)?;
+                    if self.is_lead() {
+                        self.ep.bcast(root, Some(v))?;
+                    }
+                } else {
+                    let v = if self.is_lead() {
+                        let v = self.ep.bcast(root, None)?;
+                        self.push_to_sibling(encode_var(&v));
+                        self.pop_from_sibling(site)?;
+                        v
+                    } else {
+                        self.push_to_sibling(vec![1]);
+                        decode_var(&self.pop_from_sibling(site)?)?
+                    };
+                    self.store.insert(var, v);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Scatter row-chunks of root's `src_var` into each rank's `into`.
+    /// `chunks` is produced by the caller on the root (it knows the
+    /// decomposition); non-roots pass `None`.
+    pub fn scatter(
+        &mut self,
+        root: usize,
+        chunks: Option<Vec<Var>>,
+        into: &str,
+        site: &str,
+    ) -> Result<()> {
+        match self.cfg.collectives {
+            CollectiveImpl::PointToPoint => {
+                if self.rank == root {
+                    let chunks = chunks
+                        .ok_or_else(|| SedarError::Vmpi("scatter root needs chunks".into()))?;
+                    // Root's own chunk stays local — and therefore
+                    // UNVALIDATED in p2p mode: this is what makes the FSC
+                    // injection scenarios possible (§4.2).
+                    for (r, chunk) in chunks.into_iter().enumerate() {
+                        if r == root {
+                            self.store.insert(into, chunk);
+                        } else {
+                            self.sedar_send_value(r, tag_for(site, r), &chunk, site)?;
+                        }
+                    }
+                } else {
+                    self.sedar_recv(root, tag_for(site, self.rank), into, site)?;
+                }
+            }
+            CollectiveImpl::Native => {
+                if self.rank == root {
+                    let chunks = chunks
+                        .ok_or_else(|| SedarError::Vmpi("scatter root needs chunks".into()))?;
+                    // Validate the WHOLE scatter payload, own chunk included.
+                    let mut all = Vec::new();
+                    for c in &chunks {
+                        all.extend_from_slice(c.buf.bytes());
+                    }
+                    self.compare_with_sibling(&all, site, FaultClass::Tdc)?;
+                    let own = chunks[root].clone();
+                    if self.is_lead() {
+                        self.ep.scatter(root, Some(chunks))?;
+                    }
+                    self.store.insert(into, own);
+                } else {
+                    let v = if self.is_lead() {
+                        let v = self.ep.scatter(root, None)?;
+                        self.push_to_sibling(encode_var(&v));
+                        self.pop_from_sibling(site)?;
+                        v
+                    } else {
+                        self.push_to_sibling(vec![1]);
+                        decode_var(&self.pop_from_sibling(site)?)?
+                    };
+                    self.store.insert(into, v);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Gather each rank's `var` to `root`; returns the rank-ordered chunks
+    /// on the root, `None` elsewhere.
+    pub fn gather(&mut self, root: usize, var: &str, site: &str) -> Result<Option<Vec<Var>>> {
+        match self.cfg.collectives {
+            CollectiveImpl::PointToPoint => {
+                if self.rank == root {
+                    let mut out = Vec::with_capacity(self.nranks);
+                    for r in 0..self.nranks {
+                        if r == root {
+                            // Own contribution stays local and unvalidated
+                            // in p2p mode (FSC window).
+                            out.push(self.store.get(var)?.clone());
+                        } else {
+                            let v =
+                                self.sedar_recv(r, tag_for(site, r), &gather_tmp(r), site)?;
+                            self.store.remove(&gather_tmp(r));
+                            out.push(v);
+                        }
+                    }
+                    Ok(Some(out))
+                } else {
+                    self.sedar_send(root, tag_for(site, self.rank), var, site)?;
+                    Ok(None)
+                }
+            }
+            CollectiveImpl::Native => {
+                // Every rank validates its contribution — root's included.
+                let v = self.store.get(var)?.clone();
+                self.compare_with_sibling(v.buf.bytes(), site, FaultClass::Tdc)?;
+                if self.rank == root {
+                    if self.is_lead() {
+                        let parts = self.ep.gather(root, v)?.unwrap();
+                        // Share the gathered parts with the sibling.
+                        let mut blob = Vec::new();
+                        blob.extend_from_slice(&(parts.len() as u32).to_le_bytes());
+                        for p in &parts {
+                            let e = encode_var(p);
+                            blob.extend_from_slice(&(e.len() as u64).to_le_bytes());
+                            blob.extend_from_slice(&e);
+                        }
+                        self.push_to_sibling(blob);
+                        self.pop_from_sibling(site)?;
+                        Ok(Some(parts))
+                    } else {
+                        self.push_to_sibling(vec![1]);
+                        let blob = self.pop_from_sibling(site)?;
+                        let mut parts = Vec::new();
+                        let n =
+                            u32::from_le_bytes(blob[0..4].try_into().unwrap()) as usize;
+                        let mut off = 4;
+                        for _ in 0..n {
+                            let len = u64::from_le_bytes(
+                                blob[off..off + 8].try_into().unwrap(),
+                            ) as usize;
+                            off += 8;
+                            parts.push(decode_var(&blob[off..off + len])?);
+                            off += len;
+                        }
+                        Ok(Some(parts))
+                    }
+                } else {
+                    if self.is_lead() {
+                        self.ep.gather(root, v)?;
+                    }
+                    Ok(None)
+                }
+            }
+        }
+    }
+
+    /// A plain barrier across ranks (both replicas rendezvous, leaders run
+    /// the network barrier).
+    pub fn barrier(&mut self, site: &str) -> Result<()> {
+        self.pair_exchange(vec![1], site)?;
+        if self.is_lead() {
+            self.ep.barrier(0)?;
+        }
+        // Second rendezvous so the sibling does not run ahead of the global
+        // barrier point.
+        self.pair_exchange(vec![2], site)?;
+        Ok(())
+    }
+
+    // ----------------------------------------------------------- validation
+
+    /// Final-result comparison (§3.1's "comparison of the final results"):
+    /// catches FSC that never crossed a message. Apps call this on the rank
+    /// that owns the result (the Master).
+    pub fn validate_result(&mut self, var: &str, site: &str) -> Result<()> {
+        let v = self.store.get(var)?.clone();
+        self.compare_with_sibling(v.buf.bytes(), site, FaultClass::Fsc)?;
+        self.trace(format!("{site}: final result replicas agree"));
+        Ok(())
+    }
+
+    // ---------------------------------------------------------- checkpoints
+
+    /// Strategy-dispatched checkpoint call (the app's `SEDAR_Ckpt()`).
+    pub fn checkpoint(&mut self, ck_no: u64, site: &str) -> Result<()> {
+        match self.cfg.strategy {
+            Strategy::Baseline | Strategy::DetectOnly => Ok(()),
+            Strategy::SysCkpt => self.system_checkpoint(ck_no, site),
+            Strategy::UserCkpt => self.user_checkpoint(ck_no, site),
+        }
+    }
+
+    /// §3.2: coordinated, whole-state, UNVALIDATED checkpoint. Captures both
+    /// replicas' stores as they are — including any latent corruption.
+    fn system_checkpoint(&mut self, ck_no: u64, site: &str) -> Result<()> {
+        let chain = Arc::clone(self.sys_chain.as_ref().ok_or_else(|| {
+            SedarError::Checkpoint("system checkpoint without a chain".into())
+        })?);
+        let t0 = Instant::now();
+        // The snapshot resumes at the phase AFTER this checkpoint.
+        let resume_cursor = self.cursor + 1;
+        if self.is_lead() {
+            // Receive the sibling's serialized store (the rendezvous also
+            // catches a TOE at the checkpoint site). The payload is
+            // assembled from the two serialized stores directly — no store
+            // clone, no re-serialization (perf change P4).
+            let peer_bytes = self.pop_from_sibling(site)?;
+            let my_bytes = self.store.serialize();
+            let payload =
+                RankSnapshot::serialize_parts(resume_cursor, &my_bytes, &peer_bytes);
+            let payload_len = payload.len();
+            // Coordinated: all leaders enter, write, then the master commits.
+            self.ep.barrier(0)?;
+            chain
+                .write_payload(ck_no, self.rank, &payload)
+                .map_err(|e| SedarError::Checkpoint(format!("ck{ck_no}: {e}")))?;
+            self.ep.barrier(0)?;
+            if self.rank == 0 {
+                chain.commit(ck_no)?;
+            }
+            self.ep.barrier(0)?;
+            self.metrics
+                .add(&self.metrics.sys_ckpt_bytes, payload_len as u64);
+            self.metrics.add(&self.metrics.sys_ckpts, 1);
+            // Release the sibling.
+            self.push_to_sibling(vec![1]);
+            if self.rank == 0 {
+                self.trace(format!("{site}: system checkpoint #{ck_no} stored"));
+            }
+        } else {
+            self.push_to_sibling(self.store.serialize());
+            // Wait for the leader to finish the coordinated store. Uses the
+            // (long) checkpoint lapse, not the TOE lapse: disk writes are
+            // legitimately slow.
+            let t0w = Instant::now();
+            let r = self.pair.pop_mine(self.replica, self.cfg.ckpt_timeout);
+            self.metrics
+                .add_duration(&self.metrics.sync_ns, t0w.elapsed());
+            match r {
+                Ok(_) => {}
+                Err(PairError::Aborted) => return Err(SedarError::Aborted),
+                Err(PairError::Timeout) => {
+                    return Err(self.detector.report(
+                        FaultClass::Toe,
+                        self.rank,
+                        site,
+                        self.cursor,
+                    ))
+                }
+            }
+        }
+        self.metrics
+            .add_duration(&self.metrics.sys_ckpt_ns, t0.elapsed());
+        Ok(())
+    }
+
+    /// §3.3 / Algorithm 2: both replicas dump significant variables, hashes
+    /// are cross-compared, the checkpoint is kept only if valid (and then
+    /// the previous one is discarded). A corrupted candidate triggers
+    /// detection at the checkpoint site.
+    fn user_checkpoint(&mut self, ck_no: u64, site: &str) -> Result<()> {
+        let chain = Arc::clone(self.user_chain.as_ref().ok_or_else(|| {
+            SedarError::Checkpoint("user checkpoint without a chain".into())
+        })?);
+        let t0 = Instant::now();
+        let sig: Vec<&str> = self.significant.iter().map(|s| s.as_str()).collect();
+        // Serialize the significant variables once; hash and (on the lead)
+        // store those bytes directly (perf change P5).
+        let payload = UserSnapshot::serialize_parts(
+            self.cursor + 1,
+            &self.store.serialize_filtered(Some(&sig)),
+        );
+        let digest = sha256(&payload);
+        self.detector.note_comparison(payload.len());
+
+        // Hash cross-validation between replicas (Algorithm 2 lines 4–10).
+        let peer_digest = self.pair_exchange(digest.to_vec(), site)?;
+        let local_valid = buffers_equal(&digest, &peer_digest);
+
+        // Global verdict: every rank must have a valid candidate, because
+        // the checkpoint set is only usable if coordinated-consistent.
+        let global_valid = if self.is_lead() {
+            let verdict = Var {
+                shape: vec![],
+                buf: Buf::F32(vec![if local_valid { 1.0 } else { 0.0 }]),
+            };
+            let g = self.ep.allreduce_sum_f32(0, verdict)?;
+            let ok = g.buf.as_f32()?[0] as usize == self.nranks;
+            self.push_to_sibling(vec![ok as u8]);
+            ok
+        } else {
+            self.pop_from_sibling(site)?[0] == 1
+        };
+
+        if global_valid {
+            if self.is_lead() {
+                chain
+                    .write_valid_payload(ck_no, self.rank, &payload)
+                    .map_err(|e| SedarError::Checkpoint(format!("uck{ck_no}: {e}")))?;
+                self.ep.barrier(0)?;
+                if self.rank == 0 {
+                    chain.commit_valid(ck_no)?;
+                    self.trace(format!(
+                        "{site}: user checkpoint #{ck_no} VALID (previous discarded)"
+                    ));
+                }
+                self.ep.barrier(0)?;
+                self.push_to_sibling(vec![1]);
+                self.metrics
+                    .add(&self.metrics.user_ckpt_bytes, payload.len() as u64);
+                self.metrics.add(&self.metrics.user_ckpts, 1);
+            } else {
+                let r = self.pair.pop_mine(self.replica, self.cfg.ckpt_timeout);
+                if matches!(r, Err(PairError::Aborted)) {
+                    return Err(SedarError::Aborted);
+                }
+            }
+            self.metrics
+                .add_duration(&self.metrics.user_ckpt_ns, t0.elapsed());
+            Ok(())
+        } else {
+            // Corrupted candidate: not stored; detection fires here (the
+            // fault happened within the last checkpoint interval).
+            self.trace(format!("{site}: user checkpoint #{ck_no} CORRUPTED"));
+            Err(self
+                .detector
+                .report(FaultClass::CkptCorrupt, self.rank, site, self.cursor))
+        }
+    }
+
+    // -------------------------------------------------------------- compute
+
+    /// Run a compute kernel: the AOT XLA artifact when enabled, otherwise
+    /// the caller's pure-rust fallback (bit-identical for our workloads).
+    pub fn compute<F>(&self, artifact: &str, inputs: Vec<Var>, fallback: F) -> Result<Vec<Var>>
+    where
+        F: FnOnce(&[Var]) -> Result<Vec<Var>>,
+    {
+        let t0 = Instant::now();
+        let out = match (&self.engine, self.cfg.use_xla) {
+            (Some(engine), true) => engine.execute(artifact, inputs),
+            _ => fallback(&inputs),
+        };
+        self.metrics.add_duration(&self.metrics.exec_ns, t0.elapsed());
+        self.metrics.add(&self.metrics.execs, 1);
+        out
+    }
+
+    // ------------------------------------------------------------ injection
+
+    /// Driver hook: apply pending bit-flip injections for this phase.
+    pub fn inject_before_phase(&mut self, phase: u64) {
+        for rec in
+            self.injector
+                .maybe_inject_at_phase(phase, self.rank, self.replica, &mut self.store)
+        {
+            self.trace(format!("INJECTED [{}] {}", rec.name, rec.description));
+        }
+    }
+
+    /// Compute-loop hook: index-corruption (TOE) injection. Returns the
+    /// number of sub-blocks to redo; the app re-runs them and this replica
+    /// arrives late at the next rendezvous.
+    pub fn maybe_index_rollback(&self, phase: u64, subblock: u64) -> Option<(u64, std::time::Duration)> {
+        let r = self
+            .injector
+            .maybe_index_rollback(phase, subblock, self.rank, self.replica);
+        if let Some((redo, delay)) = r {
+            self.trace(format!(
+                "INJECTED index rollback at subblock {subblock}: redo {redo}, delay {delay:?}"
+            ));
+        }
+        r
+    }
+}
+
+fn tag_for(site: &str, peer: usize) -> u32 {
+    // User tags must stay below the collective tag space (1 << 16) and above
+    // the small hand-assigned tags apps use (< 64); fold the site name in so
+    // phases cannot alias.
+    let mut h: u32 = 2166136261;
+    for b in site.bytes() {
+        h = (h ^ b as u32).wrapping_mul(16777619);
+    }
+    64 + (h % 1000) * 64 + (peer as u32 % 64)
+}
+
+fn gather_tmp(rank: usize) -> String {
+    format!("__gather_tmp_{rank}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn var_encoding_roundtrip() {
+        let v = Var::f32(&[2, 3], vec![1.0, -2.0, 3.5, 0.0, 5.0, -6.25]);
+        let e = encode_var(&v);
+        let d = decode_var(&e).unwrap();
+        assert_eq!(d, v);
+    }
+
+    #[test]
+    fn var_encoding_scalar_i64() {
+        let v = Var::i64_scalar(-99);
+        assert_eq!(decode_var(&encode_var(&v)).unwrap(), v);
+    }
+
+    #[test]
+    fn decode_rejects_garbage() {
+        assert!(decode_var(&[]).is_err());
+        assert!(decode_var(&[9, 1, 2]).is_err());
+    }
+
+    #[test]
+    fn tags_distinct_per_site() {
+        assert_ne!(tag_for("SCATTER", 1), tag_for("GATHER", 1));
+        assert_ne!(tag_for("SCATTER", 1), tag_for("SCATTER", 2));
+        assert!(tag_for("BCAST", 63) < crate::vmpi::collectives::COLLECTIVE_TAG_BASE);
+    }
+}

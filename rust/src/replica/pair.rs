@@ -1,0 +1,226 @@
+//! Intra-rank replica rendezvous.
+//!
+//! The two replicas of a rank synchronize at every communication,
+//! checkpoint and validation event (§3.1: "the leading thread stops running
+//! and then waits for its replica to reach the same point"). [`PairSync`]
+//! implements the rendezvous as a pair of FIFO cells — replica *r* pushes
+//! its comparison token into its sibling's cell and pops its own. FIFO
+//! ordering keeps successive rendezvous rounds aligned without a generation
+//! counter, because both replicas execute the *same deterministic sequence*
+//! of SEDAR operations.
+//!
+//! The pop carries the **TOE lapse**: if the sibling does not check in
+//! within the configured timeout, the waiting replica reports a Time-Out
+//! Error (§3.1: "if an appreciable delay is noticed between the two
+//! replicas, it is considered that a silent error has caused the separation
+//! of their flows").
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Why a rendezvous pop failed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PairError {
+    /// The sibling did not arrive within the lapse — a TOE.
+    Timeout,
+    /// The run was safe-stopped by a detection elsewhere.
+    Aborted,
+}
+
+#[derive(Default)]
+struct Cell {
+    q: Mutex<VecDeque<Vec<u8>>>,
+    cv: Condvar,
+    /// Queue depth mirror — lets the consumer spin without touching the
+    /// mutex (no contention with the producer).
+    depth: std::sync::atomic::AtomicUsize,
+}
+
+/// Rendezvous + token-exchange channel between the two replicas of a rank.
+pub struct PairSync {
+    /// `cells[r]` holds tokens destined *for* replica `r`.
+    cells: [Cell; 2],
+    abort: Arc<AtomicBool>,
+}
+
+/// Poll quantum while blocked: bounds abort-detection latency without
+/// costing anything on the fast path (a present token is consumed without
+/// waiting; an arriving one wakes the waiter via the condvar immediately).
+const POLL_QUANTUM: Duration = Duration::from_millis(2);
+
+/// Spin iterations before parking in [`PairSync::pop_mine`]. Adaptive:
+/// spinning is only profitable when the sibling replica can actually run
+/// concurrently — on a single-core host it *starves* the sibling (measured
+/// 3.3 µs → 30 µs per rendezvous; EXPERIMENTS.md §Perf, change P2), so we
+/// park immediately there.
+fn spin_rounds() -> u32 {
+    use std::sync::OnceLock;
+    static ROUNDS: OnceLock<u32> = OnceLock::new();
+    *ROUNDS.get_or_init(|| {
+        let cores = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        if cores > 1 {
+            1500
+        } else {
+            0
+        }
+    })
+}
+
+impl PairSync {
+    pub fn new(abort: Arc<AtomicBool>) -> Arc<PairSync> {
+        Arc::new(PairSync {
+            cells: [Cell::default(), Cell::default()],
+            abort,
+        })
+    }
+
+    fn is_aborted(&self) -> bool {
+        self.abort.load(Ordering::SeqCst)
+    }
+
+    /// Deposit a token for the *other* replica. Never blocks.
+    pub fn push_to_peer(&self, me: usize, token: Vec<u8>) {
+        debug_assert!(me < 2);
+        let cell = &self.cells[1 - me];
+        {
+            let mut q = cell.q.lock().unwrap();
+            q.push_back(token);
+            cell.depth.store(q.len(), Ordering::Release);
+        }
+        cell.cv.notify_all();
+    }
+
+    /// Take the next token destined for me, waiting up to `lapse`.
+    ///
+    /// Fast path: lockstep replicas arrive at rendezvous within
+    /// microseconds of each other, so we spin briefly before parking on the
+    /// condvar — saves the futex round trip on the detection hot path
+    /// (EXPERIMENTS.md §Perf, change P2).
+    pub fn pop_mine(&self, me: usize, lapse: Duration) -> Result<Vec<u8>, PairError> {
+        debug_assert!(me < 2);
+        let cell = &self.cells[me];
+        // Spin phase: watch the lock-free depth mirror; only touch the
+        // mutex once a token is visible (no producer contention).
+        let mut spins = 0u32;
+        let max_spins = spin_rounds();
+        while spins < max_spins {
+            if cell.depth.load(Ordering::Acquire) > 0 {
+                break;
+            }
+            if self.is_aborted() {
+                return Err(PairError::Aborted);
+            }
+            std::hint::spin_loop();
+            spins += 1;
+        }
+        // Park phase (or immediate pop after a successful spin).
+        let deadline = Instant::now() + lapse;
+        let mut q = cell.q.lock().unwrap();
+        loop {
+            if self.is_aborted() {
+                return Err(PairError::Aborted);
+            }
+            if let Some(tok) = q.pop_front() {
+                cell.depth.store(q.len(), Ordering::Release);
+                return Ok(tok);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(PairError::Timeout);
+            }
+            let wait = POLL_QUANTUM.min(deadline - now);
+            let (guard, _) = cell.cv.wait_timeout(q, wait).unwrap();
+            q = guard;
+        }
+    }
+
+    /// Symmetric rendezvous: deposit my token, take the sibling's.
+    pub fn exchange(
+        &self,
+        me: usize,
+        token: Vec<u8>,
+        lapse: Duration,
+    ) -> Result<Vec<u8>, PairError> {
+        self.push_to_peer(me, token);
+        self.pop_mine(me, lapse)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pair() -> (Arc<PairSync>, Arc<AtomicBool>) {
+        let abort = Arc::new(AtomicBool::new(false));
+        (PairSync::new(Arc::clone(&abort)), abort)
+    }
+
+    #[test]
+    fn exchange_swaps_tokens() {
+        let (p, _) = pair();
+        let p2 = Arc::clone(&p);
+        let h = std::thread::spawn(move || {
+            p2.exchange(1, b"from-1".to_vec(), Duration::from_secs(1))
+                .unwrap()
+        });
+        let got0 = p
+            .exchange(0, b"from-0".to_vec(), Duration::from_secs(1))
+            .unwrap();
+        let got1 = h.join().unwrap();
+        assert_eq!(got0, b"from-1");
+        assert_eq!(got1, b"from-0");
+    }
+
+    #[test]
+    fn fifo_keeps_rounds_aligned() {
+        let (p, _) = pair();
+        let p2 = Arc::clone(&p);
+        let h = std::thread::spawn(move || {
+            for i in 0..20u8 {
+                let got = p2
+                    .exchange(1, vec![100 + i], Duration::from_secs(1))
+                    .unwrap();
+                assert_eq!(got, vec![i]);
+            }
+        });
+        for i in 0..20u8 {
+            let got = p.exchange(0, vec![i], Duration::from_secs(1)).unwrap();
+            assert_eq!(got, vec![100 + i]);
+        }
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn missing_sibling_times_out() {
+        let (p, _) = pair();
+        let t0 = Instant::now();
+        let err = p.pop_mine(0, Duration::from_millis(50)).unwrap_err();
+        assert_eq!(err, PairError::Timeout);
+        assert!(t0.elapsed() >= Duration::from_millis(45));
+    }
+
+    #[test]
+    fn abort_interrupts_wait() {
+        let (p, abort) = pair();
+        let abort2 = Arc::clone(&abort);
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            abort2.store(true, Ordering::SeqCst);
+        });
+        let err = p.pop_mine(0, Duration::from_secs(10)).unwrap_err();
+        assert_eq!(err, PairError::Aborted);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn asymmetric_push_pop() {
+        let (p, _) = pair();
+        p.push_to_peer(0, b"copy".to_vec()); // replica 0 → replica 1
+        let got = p.pop_mine(1, Duration::from_millis(100)).unwrap();
+        assert_eq!(got, b"copy");
+    }
+}

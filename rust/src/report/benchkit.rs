@@ -1,0 +1,105 @@
+//! Minimal benchmarking kit (in-repo criterion substitute — the offline
+//! crate set has no criterion). Used by the `harness = false` targets in
+//! `rust/benches/`.
+//!
+//! Method: `warmup` untimed iterations, then `iters` timed ones; reports
+//! min / mean / p50 / p95. Deliberately simple — the experiment benches
+//! measure *seconds-scale end-to-end runs* where statistical machinery
+//! adds nothing, and the micro benches report throughput where min is the
+//! meaningful roofline figure.
+
+use std::time::{Duration, Instant};
+
+/// Timing summary of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub iters: usize,
+    pub min: Duration,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+}
+
+impl Stats {
+    pub fn row(&self) -> Vec<String> {
+        vec![
+            self.name.clone(),
+            self.iters.to_string(),
+            crate::util::human_duration(self.min),
+            crate::util::human_duration(self.mean),
+            crate::util::human_duration(self.p50),
+            crate::util::human_duration(self.p95),
+        ]
+    }
+
+    pub fn header() -> &'static [&'static str] {
+        &["case", "iters", "min", "mean", "p50", "p95"]
+    }
+
+    /// Throughput for `bytes` processed per iteration, based on `min`.
+    pub fn gib_per_s(&self, bytes: usize) -> f64 {
+        bytes as f64 / self.min.as_secs_f64() / (1024.0 * 1024.0 * 1024.0)
+    }
+}
+
+/// Time `f` with warmup; returns stats.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> Stats {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+    }
+    samples.sort();
+    let min = samples[0];
+    let p50 = samples[iters / 2];
+    let p95 = samples[(iters * 95 / 100).min(iters - 1)];
+    let mean = samples.iter().sum::<Duration>() / iters as u32;
+    Stats {
+        name: name.to_string(),
+        iters,
+        min,
+        mean,
+        p50,
+        p95,
+    }
+}
+
+/// Prevent the optimizer from discarding a value.
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Quick-mode switch: `SEDAR_BENCH_QUICK=1` shrinks iteration counts so
+/// `cargo bench` stays minutes-scale in CI.
+pub fn quick() -> bool {
+    std::env::var("SEDAR_BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_are_ordered() {
+        let s = bench("t", 1, 20, || {
+            black_box((0..100).sum::<u64>());
+        });
+        assert!(s.min <= s.p50);
+        assert!(s.p50 <= s.p95);
+        assert_eq!(s.iters, 20);
+    }
+
+    #[test]
+    fn throughput_positive() {
+        let s = bench("t", 0, 3, || {
+            std::thread::sleep(Duration::from_micros(100));
+        });
+        assert!(s.gib_per_s(1024) > 0.0);
+    }
+}

@@ -1,0 +1,126 @@
+//! Small report-building helpers shared by the CLI, examples and benches:
+//! aligned markdown tables, CSV emission, and the bench-timing kit.
+
+pub mod benchkit;
+
+/// Incremental builder for an aligned markdown table.
+#[derive(Debug, Default)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Table {
+        Table {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn row_strs(&mut self, cells: &[&str]) -> &mut Self {
+        let owned: Vec<String> = cells.iter().map(|s| s.to_string()).collect();
+        self.row(&owned)
+    }
+
+    fn widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        w
+    }
+
+    /// Render as aligned markdown.
+    pub fn markdown(&self) -> String {
+        let w = self.widths();
+        let mut s = String::new();
+        let fmt_row = |cells: &[String], w: &[usize]| -> String {
+            let mut line = String::from("|");
+            for (c, width) in cells.iter().zip(w) {
+                line.push_str(&format!(" {c:<width$} |"));
+            }
+            line
+        };
+        s.push_str(&fmt_row(&self.header, &w));
+        s.push('\n');
+        s.push('|');
+        for width in &w {
+            s.push_str(&format!("{}|", "-".repeat(width + 2)));
+        }
+        s.push('\n');
+        for row in &self.rows {
+            s.push_str(&fmt_row(row, &w));
+            s.push('\n');
+        }
+        s
+    }
+
+    /// Render as CSV (no quoting — callers keep cells comma-free).
+    pub fn csv(&self) -> String {
+        let mut s = self.header.join(",");
+        s.push('\n');
+        for row in &self.rows {
+            s.push_str(&row.join(","));
+            s.push('\n');
+        }
+        s
+    }
+}
+
+/// Format seconds as `H.HH` hours (paper table style).
+pub fn fmt_hours(seconds: f64) -> String {
+    format!("{:.2}", seconds / 3600.0)
+}
+
+/// Format a ratio as a percentage with sensible precision.
+pub fn fmt_pct(x: f64) -> String {
+    if x.abs() < 0.001 {
+        format!("{:.3}%", x * 100.0)
+    } else {
+        format!("{:.2}%", x * 100.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markdown_alignment() {
+        let mut t = Table::new(&["name", "v"]);
+        t.row_strs(&["a", "1"]).row_strs(&["long-name", "22"]);
+        let md = t.markdown();
+        assert!(md.contains("| name      | v  |"));
+        assert!(md.lines().count() == 4);
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row_strs(&["1", "2"]);
+        assert_eq!(t.csv(), "a,b\n1,2\n");
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn arity_checked() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row_strs(&["only-one"]);
+    }
+
+    #[test]
+    fn formats() {
+        assert_eq!(fmt_hours(36756.0), "10.21");
+        assert_eq!(fmt_pct(0.006), "0.60%");
+        assert_eq!(fmt_pct(0.0001), "0.010%");
+    }
+}

@@ -1,0 +1,294 @@
+//! The PJRT execution engine — Layer-3's bridge to the AOT-compiled
+//! Layer-2/Layer-1 compute.
+//!
+//! `make artifacts` (python, build time only) lowers each JAX model function
+//! — whose hot spot is a Pallas kernel — to **HLO text** under
+//! `artifacts/<name>.hlo.txt`. At run time this module loads the text,
+//! compiles it once on the PJRT CPU client and executes it from the rank
+//! threads' hot path. HLO *text* (not serialized protos) is the interchange
+//! format because jax ≥ 0.5 emits 64-bit instruction ids that
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids.
+//!
+//! ## Threading model
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-based (not `Send`), so the engine
+//! owns it on a dedicated **service thread**; rank/replica threads talk to
+//! it through a cloneable [`EngineHandle`] over an mpsc channel. Execution
+//! requests are serialized, which also guarantees the bit-exact determinism
+//! SEDAR's replica comparison relies on (same executable + same inputs ⇒
+//! same output bytes, trivially, since there is exactly one compute stream).
+//! The perf pass measures the dispatch overhead in
+//! `benches/micro_hotpath.rs`.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+use std::sync::Mutex;
+
+use crate::error::{Result, SedarError};
+use crate::state::{Buf, Var};
+
+/// A compute request: run artifact `name` on `inputs`.
+struct ExecRequest {
+    artifact: String,
+    inputs: Vec<Var>,
+    resp: mpsc::Sender<Result<Vec<Var>>>,
+}
+
+enum Msg {
+    Exec(ExecRequest),
+    /// Preload + compile an artifact (warm-up path, so compile time does not
+    /// pollute hot-path measurements).
+    Warm(String, mpsc::Sender<Result<()>>),
+    Shutdown,
+}
+
+/// Cloneable, thread-safe handle to the engine service thread.
+#[derive(Clone)]
+pub struct EngineHandle {
+    tx: mpsc::Sender<Msg>,
+}
+
+impl EngineHandle {
+    /// Execute artifact `name` with `inputs`; returns the output buffers.
+    pub fn execute(&self, name: &str, inputs: Vec<Var>) -> Result<Vec<Var>> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Exec(ExecRequest {
+                artifact: name.to_string(),
+                inputs,
+                resp: tx,
+            }))
+            .map_err(|_| SedarError::Runtime("engine thread gone".into()))?;
+        rx.recv()
+            .map_err(|_| SedarError::Runtime("engine thread dropped reply".into()))?
+    }
+
+    /// Compile `name` now (idempotent).
+    pub fn warm(&self, name: &str) -> Result<()> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Warm(name.to_string(), tx))
+            .map_err(|_| SedarError::Runtime("engine thread gone".into()))?;
+        rx.recv()
+            .map_err(|_| SedarError::Runtime("engine thread dropped reply".into()))?
+    }
+}
+
+/// The engine: spawns the service thread at construction, joins at drop.
+pub struct Engine {
+    handle: EngineHandle,
+    join: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl Engine {
+    /// Start an engine serving artifacts from `artifact_dir`.
+    pub fn start(artifact_dir: &Path) -> Result<Engine> {
+        let dir = artifact_dir.to_path_buf();
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let join = std::thread::Builder::new()
+            .name("sedar-xla".into())
+            .spawn(move || service_main(dir, rx, ready_tx))
+            .map_err(|e| SedarError::Runtime(format!("spawn engine: {e}")))?;
+        // Fail fast if the PJRT client cannot be created.
+        ready_rx
+            .recv()
+            .map_err(|_| SedarError::Runtime("engine init lost".into()))??;
+        Ok(Engine {
+            handle: EngineHandle { tx },
+            join: Mutex::new(Some(join)),
+        })
+    }
+
+    pub fn handle(&self) -> EngineHandle {
+        self.handle.clone()
+    }
+
+    /// Default artifact directory: `$SEDAR_ARTIFACTS` or `./artifacts`.
+    pub fn default_artifact_dir() -> PathBuf {
+        std::env::var("SEDAR_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    /// True if the artifact directory exists and holds at least one .hlo.txt
+    /// (used to decide between the XLA path and the pure-rust fallback).
+    pub fn artifacts_available(dir: &Path) -> bool {
+        std::fs::read_dir(dir)
+            .map(|rd| {
+                rd.filter_map(|e| e.ok())
+                    .any(|e| e.file_name().to_string_lossy().ends_with(".hlo.txt"))
+            })
+            .unwrap_or(false)
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        let _ = self.handle.tx.send(Msg::Shutdown);
+        if let Some(j) = self.join.lock().unwrap().take() {
+            let _ = j.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------- service
+
+fn service_main(dir: PathBuf, rx: mpsc::Receiver<Msg>, ready: mpsc::Sender<Result<()>>) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => {
+            let _ = ready.send(Ok(()));
+            c
+        }
+        Err(e) => {
+            let _ = ready.send(Err(SedarError::Runtime(format!(
+                "PjRtClient::cpu failed: {e}"
+            ))));
+            return;
+        }
+    };
+    let mut cache: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
+
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            Msg::Shutdown => break,
+            Msg::Warm(name, resp) => {
+                let r = ensure(&client, &dir, &mut cache, &name).map(|_| ());
+                let _ = resp.send(r);
+            }
+            Msg::Exec(req) => {
+                let r = exec_one(&client, &dir, &mut cache, &req.artifact, &req.inputs);
+                let _ = req.resp.send(r);
+            }
+        }
+    }
+}
+
+fn ensure<'a>(
+    client: &xla::PjRtClient,
+    dir: &Path,
+    cache: &'a mut HashMap<String, xla::PjRtLoadedExecutable>,
+    name: &str,
+) -> Result<&'a xla::PjRtLoadedExecutable> {
+    if !cache.contains_key(name) {
+        let path = dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(&path).map_err(|e| {
+            SedarError::Runtime(format!("load {}: {e}", path.display()))
+        })?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| SedarError::Runtime(format!("compile {name}: {e}")))?;
+        cache.insert(name.to_string(), exe);
+    }
+    Ok(cache.get(name).unwrap())
+}
+
+fn to_literal(v: &Var) -> Result<xla::Literal> {
+    let lit = match &v.buf {
+        Buf::F32(data) => xla::Literal::vec1(data.as_slice()),
+        Buf::F64(data) => xla::Literal::vec1(data.as_slice()),
+        Buf::I64(data) => xla::Literal::vec1(data.as_slice()),
+        Buf::U8(_) => {
+            return Err(SedarError::Runtime(
+                "u8 buffers are not executable inputs".into(),
+            ))
+        }
+    };
+    if v.shape.is_empty() {
+        return Ok(lit);
+    }
+    let dims: Vec<i64> = v.shape.iter().map(|d| *d as i64).collect();
+    lit.reshape(&dims)
+        .map_err(|e| SedarError::Runtime(format!("reshape input: {e}")))
+}
+
+fn from_literal(lit: &xla::Literal) -> Result<Var> {
+    let shape = lit
+        .array_shape()
+        .map_err(|e| SedarError::Runtime(format!("output shape: {e}")))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|d| *d as usize).collect();
+    let ty = lit
+        .ty()
+        .map_err(|e| SedarError::Runtime(format!("output type: {e}")))?;
+    let buf = match ty {
+        xla::ElementType::F32 => Buf::F32(
+            lit.to_vec::<f32>()
+                .map_err(|e| SedarError::Runtime(format!("read f32: {e}")))?,
+        ),
+        xla::ElementType::F64 => Buf::F64(
+            lit.to_vec::<f64>()
+                .map_err(|e| SedarError::Runtime(format!("read f64: {e}")))?,
+        ),
+        xla::ElementType::S64 => Buf::I64(
+            lit.to_vec::<i64>()
+                .map_err(|e| SedarError::Runtime(format!("read i64: {e}")))?,
+        ),
+        other => {
+            return Err(SedarError::Runtime(format!(
+                "unsupported output type {other:?}"
+            )))
+        }
+    };
+    Ok(Var { shape: dims, buf })
+}
+
+fn exec_one(
+    client: &xla::PjRtClient,
+    dir: &Path,
+    cache: &mut HashMap<String, xla::PjRtLoadedExecutable>,
+    name: &str,
+    inputs: &[Var],
+) -> Result<Vec<Var>> {
+    let exe = ensure(client, dir, cache, name)?;
+    let lits: Vec<xla::Literal> = inputs.iter().map(to_literal).collect::<Result<_>>()?;
+    let out = exe
+        .execute::<xla::Literal>(&lits)
+        .map_err(|e| SedarError::Runtime(format!("execute {name}: {e}")))?;
+    let result = out[0][0]
+        .to_literal_sync()
+        .map_err(|e| SedarError::Runtime(format!("fetch result: {e}")))?;
+    // aot.py lowers with return_tuple=True: the result is always a tuple.
+    let parts = result
+        .to_tuple()
+        .map_err(|e| SedarError::Runtime(format!("untuple: {e}")))?;
+    parts.iter().map(from_literal).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Full engine tests (needing artifacts) live in rust/tests/runtime_xla.rs;
+    // here we cover the host-side marshalling only.
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let v = Var::f32(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let lit = to_literal(&v).unwrap();
+        let back = from_literal(&lit).unwrap();
+        assert_eq!(back, v);
+    }
+
+    #[test]
+    fn u8_inputs_rejected() {
+        let v = Var {
+            shape: vec![1],
+            buf: Buf::U8(vec![1]),
+        };
+        assert!(to_literal(&v).is_err());
+    }
+
+    #[test]
+    fn artifacts_probe() {
+        let dir = std::env::temp_dir().join(format!("sedar-art-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        assert!(!Engine::artifacts_available(&dir));
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(!Engine::artifacts_available(&dir));
+        std::fs::write(dir.join("x.hlo.txt"), "hlo").unwrap();
+        assert!(Engine::artifacts_available(&dir));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,499 @@
+//! The application state: a store of named, typed, shaped buffers.
+//!
+//! Everything an application rank knows lives in a [`VarStore`]: input
+//! matrices, result blocks, sequence buffers, progress counters. This is the
+//! unit of capture for *system-level* checkpoints (the whole store of both
+//! replicas) and — filtered through the app's *significant variables* list —
+//! for user-level checkpoints. It is also the surface the fault injector
+//! mutates.
+//!
+//! The binary serialization is a simple self-describing little-endian format
+//! (magic + version + sorted var records); framing, compression and CRC live
+//! one level up in [`crate::checkpoint::snapshot`].
+
+use std::collections::BTreeMap;
+
+use crate::error::{Result, SedarError};
+
+/// Element type of a variable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    F64,
+    I64,
+    U8,
+}
+
+impl DType {
+    pub fn size_of(self) -> usize {
+        match self {
+            DType::F32 => 4,
+            DType::F64 => 8,
+            DType::I64 => 8,
+            DType::U8 => 1,
+        }
+    }
+
+    fn tag(self) -> u8 {
+        match self {
+            DType::F32 => 0,
+            DType::F64 => 1,
+            DType::I64 => 2,
+            DType::U8 => 3,
+        }
+    }
+
+    fn from_tag(t: u8) -> Result<Self> {
+        Ok(match t {
+            0 => DType::F32,
+            1 => DType::F64,
+            2 => DType::I64,
+            3 => DType::U8,
+            _ => {
+                return Err(SedarError::Checkpoint(format!(
+                    "unknown dtype tag {t}"
+                )))
+            }
+        })
+    }
+}
+
+/// Typed storage. Buffers are kept natively typed (not raw bytes) so the
+/// compute paths get aligned slices for free; byte views for hashing,
+/// comparison and injection are produced on demand.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Buf {
+    F32(Vec<f32>),
+    F64(Vec<f64>),
+    I64(Vec<i64>),
+    U8(Vec<u8>),
+}
+
+impl Buf {
+    pub fn dtype(&self) -> DType {
+        match self {
+            Buf::F32(_) => DType::F32,
+            Buf::F64(_) => DType::F64,
+            Buf::I64(_) => DType::I64,
+            Buf::U8(_) => DType::U8,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Buf::F32(v) => v.len(),
+            Buf::F64(v) => v.len(),
+            Buf::I64(v) => v.len(),
+            Buf::U8(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn byte_len(&self) -> usize {
+        self.len() * self.dtype().size_of()
+    }
+
+    /// Immutable little-endian byte view of the raw buffer contents.
+    ///
+    /// Safety: widening the alignment requirement downwards (f32→u8) is
+    /// always valid; x86-64/aarch64 are little-endian so the view *is* the
+    /// serialized form.
+    pub fn bytes(&self) -> &[u8] {
+        unsafe {
+            match self {
+                Buf::F32(v) => {
+                    std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
+                }
+                Buf::F64(v) => {
+                    std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 8)
+                }
+                Buf::I64(v) => {
+                    std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 8)
+                }
+                Buf::U8(v) => v.as_slice(),
+            }
+        }
+    }
+
+    /// Mutable byte view (the fault injector's entry point).
+    pub fn bytes_mut(&mut self) -> &mut [u8] {
+        unsafe {
+            match self {
+                Buf::F32(v) => {
+                    std::slice::from_raw_parts_mut(v.as_mut_ptr() as *mut u8, v.len() * 4)
+                }
+                Buf::F64(v) => {
+                    std::slice::from_raw_parts_mut(v.as_mut_ptr() as *mut u8, v.len() * 8)
+                }
+                Buf::I64(v) => {
+                    std::slice::from_raw_parts_mut(v.as_mut_ptr() as *mut u8, v.len() * 8)
+                }
+                Buf::U8(v) => v.as_mut_slice(),
+            }
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Buf::F32(v) => Ok(v),
+            other => Err(SedarError::Vmpi(format!(
+                "expected f32 buffer, found {:?}",
+                other.dtype()
+            ))),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match self {
+            Buf::F32(v) => Ok(v),
+            other => Err(SedarError::Vmpi(format!(
+                "expected f32 buffer, found {:?}",
+                other.dtype()
+            ))),
+        }
+    }
+
+    pub fn as_i64(&self) -> Result<&[i64]> {
+        match self {
+            Buf::I64(v) => Ok(v),
+            other => Err(SedarError::Vmpi(format!(
+                "expected i64 buffer, found {:?}",
+                other.dtype()
+            ))),
+        }
+    }
+
+    pub fn as_i64_mut(&mut self) -> Result<&mut [i64]> {
+        match self {
+            Buf::I64(v) => Ok(v),
+            other => Err(SedarError::Vmpi(format!(
+                "expected i64 buffer, found {:?}",
+                other.dtype()
+            ))),
+        }
+    }
+
+    /// Reconstruct a typed buffer from its byte view.
+    pub fn from_bytes(dtype: DType, bytes: &[u8]) -> Result<Buf> {
+        let esz = dtype.size_of();
+        if bytes.len() % esz != 0 {
+            return Err(SedarError::Checkpoint(format!(
+                "byte length {} not a multiple of element size {esz}",
+                bytes.len()
+            )));
+        }
+        let n = bytes.len() / esz;
+        Ok(match dtype {
+            DType::F32 => {
+                let mut v = vec![0f32; n];
+                unsafe {
+                    std::ptr::copy_nonoverlapping(
+                        bytes.as_ptr(),
+                        v.as_mut_ptr() as *mut u8,
+                        bytes.len(),
+                    )
+                }
+                Buf::F32(v)
+            }
+            DType::F64 => {
+                let mut v = vec![0f64; n];
+                unsafe {
+                    std::ptr::copy_nonoverlapping(
+                        bytes.as_ptr(),
+                        v.as_mut_ptr() as *mut u8,
+                        bytes.len(),
+                    )
+                }
+                Buf::F64(v)
+            }
+            DType::I64 => {
+                let mut v = vec![0i64; n];
+                unsafe {
+                    std::ptr::copy_nonoverlapping(
+                        bytes.as_ptr(),
+                        v.as_mut_ptr() as *mut u8,
+                        bytes.len(),
+                    )
+                }
+                Buf::I64(v)
+            }
+            DType::U8 => Buf::U8(bytes.to_vec()),
+        })
+    }
+}
+
+/// A named, shaped buffer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Var {
+    pub shape: Vec<usize>,
+    pub buf: Buf,
+}
+
+impl Var {
+    pub fn f32(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Var {
+            shape: shape.to_vec(),
+            buf: Buf::F32(data),
+        }
+    }
+
+    pub fn i64_scalar(v: i64) -> Self {
+        Var {
+            shape: vec![],
+            buf: Buf::I64(vec![v]),
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// The full state of one replica of one rank: named variables, ordered
+/// deterministically (BTreeMap) so serialization and hashing are stable.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct VarStore {
+    vars: BTreeMap<String, Var>,
+}
+
+impl VarStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, name: &str, var: Var) {
+        self.vars.insert(name.to_string(), var);
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Var> {
+        self.vars
+            .get(name)
+            .ok_or_else(|| SedarError::Vmpi(format!("no variable '{name}' in store")))
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> Result<&mut Var> {
+        self.vars
+            .get_mut(name)
+            .ok_or_else(|| SedarError::Vmpi(format!("no variable '{name}' in store")))
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.vars.contains_key(name)
+    }
+
+    pub fn remove(&mut self, name: &str) -> Option<Var> {
+        self.vars.remove(name)
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.vars.keys().map(|s| s.as_str())
+    }
+
+    pub fn len(&self) -> usize {
+        self.vars.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.vars.is_empty()
+    }
+
+    /// Total payload bytes across all variables (the "W" column of Table 3).
+    pub fn byte_len(&self) -> usize {
+        self.vars.values().map(|v| v.buf.byte_len()).sum()
+    }
+
+    /// Convenience typed accessors -------------------------------------
+
+    pub fn f32(&self, name: &str) -> Result<&[f32]> {
+        self.get(name)?.buf.as_f32()
+    }
+
+    pub fn f32_mut(&mut self, name: &str) -> Result<&mut [f32]> {
+        self.get_mut(name)?.buf.as_f32_mut()
+    }
+
+    pub fn scalar_i64(&self, name: &str) -> Result<i64> {
+        Ok(self.get(name)?.buf.as_i64()?[0])
+    }
+
+    pub fn set_scalar_i64(&mut self, name: &str, v: i64) -> Result<()> {
+        self.get_mut(name)?.buf.as_i64_mut()?[0] = v;
+        Ok(())
+    }
+
+    /// Serialization ----------------------------------------------------
+
+    /// Serialize the whole store (or, with `filter`, a subset of variables —
+    /// the user-level checkpoint path) to a self-describing byte string.
+    pub fn serialize_filtered(&self, filter: Option<&[&str]>) -> Vec<u8> {
+        let selected: Vec<(&String, &Var)> = match filter {
+            None => self.vars.iter().collect(),
+            Some(names) => {
+                // Keep deterministic (sorted) order regardless of filter order.
+                self.vars
+                    .iter()
+                    .filter(|(k, _)| names.contains(&k.as_str()))
+                    .collect()
+            }
+        };
+        let mut out = Vec::with_capacity(64 + self.byte_len());
+        out.extend_from_slice(b"SDRV");
+        out.extend_from_slice(&1u32.to_le_bytes()); // version
+        out.extend_from_slice(&(selected.len() as u32).to_le_bytes());
+        for (name, var) in selected {
+            let nb = name.as_bytes();
+            out.extend_from_slice(&(nb.len() as u32).to_le_bytes());
+            out.extend_from_slice(nb);
+            out.push(var.buf.dtype().tag());
+            out.extend_from_slice(&(var.shape.len() as u32).to_le_bytes());
+            for d in &var.shape {
+                out.extend_from_slice(&(*d as u64).to_le_bytes());
+            }
+            let bytes = var.buf.bytes();
+            out.extend_from_slice(&(bytes.len() as u64).to_le_bytes());
+            out.extend_from_slice(bytes);
+        }
+        out
+    }
+
+    pub fn serialize(&self) -> Vec<u8> {
+        self.serialize_filtered(None)
+    }
+
+    pub fn deserialize(data: &[u8]) -> Result<VarStore> {
+        let mut c = Cursor { data, pos: 0 };
+        let magic = c.take(4)?;
+        if magic != b"SDRV" {
+            return Err(SedarError::Checkpoint("bad VarStore magic".into()));
+        }
+        let version = c.u32()?;
+        if version != 1 {
+            return Err(SedarError::Checkpoint(format!(
+                "unsupported VarStore version {version}"
+            )));
+        }
+        let count = c.u32()? as usize;
+        let mut store = VarStore::new();
+        for _ in 0..count {
+            let name_len = c.u32()? as usize;
+            let name = String::from_utf8(c.take(name_len)?.to_vec())
+                .map_err(|e| SedarError::Checkpoint(format!("bad var name: {e}")))?;
+            let dtype = DType::from_tag(c.u8()?)?;
+            let ndim = c.u32()? as usize;
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(c.u64()? as usize);
+            }
+            let byte_len = c.u64()? as usize;
+            let raw = c.take(byte_len)?;
+            let buf = Buf::from_bytes(dtype, raw)?;
+            store.insert(&name, Var { shape, buf });
+        }
+        Ok(store)
+    }
+}
+
+struct Cursor<'a> {
+    data: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.data.len() {
+            return Err(SedarError::Checkpoint("truncated VarStore".into()));
+        }
+        let s = &self.data[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_store() -> VarStore {
+        let mut s = VarStore::new();
+        s.insert("A", Var::f32(&[2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]));
+        s.insert("count", Var::i64_scalar(42));
+        s.insert(
+            "raw",
+            Var {
+                shape: vec![4],
+                buf: Buf::U8(vec![9, 8, 7, 6]),
+            },
+        );
+        s
+    }
+
+    #[test]
+    fn roundtrip_serialize() {
+        let s = sample_store();
+        let bytes = s.serialize();
+        let s2 = VarStore::deserialize(&bytes).unwrap();
+        assert_eq!(s, s2);
+    }
+
+    #[test]
+    fn filtered_serialize_keeps_subset() {
+        let s = sample_store();
+        let bytes = s.serialize_filtered(Some(&["A"]));
+        let s2 = VarStore::deserialize(&bytes).unwrap();
+        assert_eq!(s2.len(), 1);
+        assert_eq!(s2.f32("A").unwrap(), s.f32("A").unwrap());
+    }
+
+    #[test]
+    fn byte_view_matches_values() {
+        let v = Buf::F32(vec![1.0f32]);
+        assert_eq!(v.bytes(), 1.0f32.to_le_bytes());
+    }
+
+    #[test]
+    fn bit_flip_via_bytes_mut_changes_value() {
+        let mut b = Buf::F32(vec![1.0f32, 2.0]);
+        crate::util::flip_bit(b.bytes_mut(), 7, 7); // sign bit of second elt
+        assert_eq!(b.as_f32().unwrap()[1], -2.0);
+        assert_eq!(b.as_f32().unwrap()[0], 1.0);
+    }
+
+    #[test]
+    fn deserialize_rejects_garbage() {
+        assert!(VarStore::deserialize(b"nope").is_err());
+        let s = sample_store();
+        let mut bytes = s.serialize();
+        bytes.truncate(bytes.len() - 3);
+        assert!(VarStore::deserialize(&bytes).is_err());
+    }
+
+    #[test]
+    fn scalar_helpers() {
+        let mut s = sample_store();
+        assert_eq!(s.scalar_i64("count").unwrap(), 42);
+        s.set_scalar_i64("count", 7).unwrap();
+        assert_eq!(s.scalar_i64("count").unwrap(), 7);
+    }
+
+    #[test]
+    fn store_byte_len_sums() {
+        let s = sample_store();
+        assert_eq!(s.byte_len(), 6 * 4 + 8 + 4);
+    }
+}

@@ -1,0 +1,97 @@
+//! Small shared utilities: deterministic PRNG, byte/bit helpers, a tiny
+//! stderr logger and human-readable formatting.
+
+pub mod logger;
+pub mod prng;
+
+use std::time::Duration;
+
+/// Flip bit `bit` (0..=7 within the addressed byte) of `bytes[byte_idx]`.
+///
+/// This is the primitive used by the fault injector: the paper emulates a
+/// transient bit-flip in a processor register by mutating one replica's copy
+/// of a variable (§4.2).
+pub fn flip_bit(bytes: &mut [u8], byte_idx: usize, bit: u8) {
+    assert!(bit < 8, "bit index out of range");
+    bytes[byte_idx] ^= 1 << bit;
+}
+
+/// Format a byte count for humans (`12.3 MiB`).
+pub fn human_bytes(n: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{n} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+/// Format a duration for humans (`1.24 ms`, `3.50 s`).
+pub fn human_duration(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.1} µs", s * 1e6)
+    }
+}
+
+/// Format seconds as the paper does in Tables 4/5: hours with 2 decimals.
+pub fn hours(seconds: f64) -> String {
+    format!("{:.2}", seconds / 3600.0)
+}
+
+/// Lower-hex encoding of a byte slice (used for digest display).
+pub fn hex(bytes: &[u8]) -> String {
+    let mut s = String::with_capacity(bytes.len() * 2);
+    for b in bytes {
+        s.push_str(&format!("{b:02x}"));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flip_bit_roundtrip() {
+        let mut b = vec![0u8; 4];
+        flip_bit(&mut b, 2, 7);
+        assert_eq!(b, [0, 0, 0x80, 0]);
+        flip_bit(&mut b, 2, 7);
+        assert_eq!(b, [0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn human_bytes_units() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(2048), "2.00 KiB");
+        assert_eq!(human_bytes(6016 * 1024 * 1024), "5.88 GiB");
+    }
+
+    #[test]
+    fn human_duration_scales() {
+        assert_eq!(human_duration(Duration::from_millis(1240)), "1.240 s");
+        assert_eq!(human_duration(Duration::from_micros(1240)), "1.240 ms");
+        assert_eq!(human_duration(Duration::from_nanos(900)), "0.9 µs");
+    }
+
+    #[test]
+    fn hex_encodes() {
+        assert_eq!(hex(&[0xde, 0xad, 0x01]), "dead01");
+    }
+
+    #[test]
+    fn hours_formats_like_paper() {
+        assert_eq!(hours(10.21 * 3600.0), "10.21");
+    }
+}

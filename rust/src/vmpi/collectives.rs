@@ -1,0 +1,268 @@
+//! Collective operations composed from point-to-point messages.
+//!
+//! Deterministic rank-ascending order everywhere: determinism is a SEDAR
+//! prerequisite (replicated executions must be bit-identical, §3.1). The tag
+//! space above [`COLLECTIVE_TAG_BASE`] is reserved for these internals; user
+//! code must use tags below it.
+
+use crate::error::{Result, SedarError};
+use crate::state::{Buf, Var};
+
+use super::Endpoint;
+
+/// First tag reserved for collective internals.
+pub const COLLECTIVE_TAG_BASE: u32 = 1 << 16;
+
+const TAG_BARRIER_IN: u32 = COLLECTIVE_TAG_BASE;
+const TAG_BARRIER_OUT: u32 = COLLECTIVE_TAG_BASE + 1;
+const TAG_SCATTER: u32 = COLLECTIVE_TAG_BASE + 2;
+const TAG_BCAST: u32 = COLLECTIVE_TAG_BASE + 3;
+const TAG_GATHER: u32 = COLLECTIVE_TAG_BASE + 4;
+const TAG_REDUCE: u32 = COLLECTIVE_TAG_BASE + 5;
+const TAG_ALLREDUCE_OUT: u32 = COLLECTIVE_TAG_BASE + 6;
+
+fn token() -> Var {
+    Var {
+        shape: vec![],
+        buf: Buf::U8(vec![0]),
+    }
+}
+
+impl Endpoint {
+    /// Dissemination-free centralized barrier: everyone checks in with the
+    /// root, the root releases everyone. O(n) messages, deterministic.
+    pub fn barrier(&self, root: usize) -> Result<()> {
+        if self.rank() == root {
+            for r in 0..self.nranks() {
+                if r != root {
+                    self.recv(r, TAG_BARRIER_IN)?;
+                }
+            }
+            for r in 0..self.nranks() {
+                if r != root {
+                    self.send(r, TAG_BARRIER_OUT, token())?;
+                }
+            }
+        } else {
+            self.send(root, TAG_BARRIER_IN, token())?;
+            self.recv(root, TAG_BARRIER_OUT)?;
+        }
+        Ok(())
+    }
+
+    /// Scatter: root holds `chunks` (one per rank, including itself) and
+    /// every rank returns its own chunk.
+    pub fn scatter(&self, root: usize, chunks: Option<Vec<Var>>) -> Result<Var> {
+        if self.rank() == root {
+            let chunks = chunks.ok_or_else(|| {
+                SedarError::Vmpi("scatter root must supply chunks".into())
+            })?;
+            if chunks.len() != self.nranks() {
+                return Err(SedarError::Vmpi(format!(
+                    "scatter needs {} chunks, got {}",
+                    self.nranks(),
+                    chunks.len()
+                )));
+            }
+            let mut own = None;
+            for (r, chunk) in chunks.into_iter().enumerate() {
+                if r == root {
+                    own = Some(chunk);
+                } else {
+                    self.send(r, TAG_SCATTER, chunk)?;
+                }
+            }
+            Ok(own.unwrap())
+        } else {
+            self.recv(root, TAG_SCATTER)
+        }
+    }
+
+    /// Broadcast from root. Root passes `Some(var)`, others `None`.
+    pub fn bcast(&self, root: usize, var: Option<Var>) -> Result<Var> {
+        if self.rank() == root {
+            let var =
+                var.ok_or_else(|| SedarError::Vmpi("bcast root must supply var".into()))?;
+            for r in 0..self.nranks() {
+                if r != root {
+                    self.send(r, TAG_BCAST, var.clone())?;
+                }
+            }
+            Ok(var)
+        } else {
+            self.recv(root, TAG_BCAST)
+        }
+    }
+
+    /// Gather every rank's `var` at root (rank-ascending order, root's own
+    /// contribution in place). Non-roots get `None`.
+    pub fn gather(&self, root: usize, var: Var) -> Result<Option<Vec<Var>>> {
+        if self.rank() == root {
+            let mut out = Vec::with_capacity(self.nranks());
+            for r in 0..self.nranks() {
+                if r == root {
+                    out.push(var.clone());
+                } else {
+                    out.push(self.recv(r, TAG_GATHER)?);
+                }
+            }
+            Ok(Some(out))
+        } else {
+            self.send(root, TAG_GATHER, var)?;
+            Ok(None)
+        }
+    }
+
+    /// Sum-reduce f32 buffers at root (deterministic rank-ascending
+    /// accumulation order). Non-roots get `None`.
+    pub fn reduce_sum_f32(&self, root: usize, var: Var) -> Result<Option<Var>> {
+        if self.rank() == root {
+            let mut acc: Vec<f32> = var.buf.as_f32()?.to_vec();
+            let shape = var.shape.clone();
+            for r in 0..self.nranks() {
+                if r == root {
+                    continue;
+                }
+                let other = self.recv(r, TAG_REDUCE)?;
+                let o = other.buf.as_f32()?;
+                if o.len() != acc.len() {
+                    return Err(SedarError::Vmpi(format!(
+                        "reduce length mismatch: {} vs {}",
+                        o.len(),
+                        acc.len()
+                    )));
+                }
+                for (a, b) in acc.iter_mut().zip(o) {
+                    *a += *b;
+                }
+            }
+            Ok(Some(Var::f32(&shape, acc)))
+        } else {
+            self.send(root, TAG_REDUCE, var)?;
+            Ok(None)
+        }
+    }
+
+    /// Allreduce = reduce at root + broadcast of the result.
+    pub fn allreduce_sum_f32(&self, root: usize, var: Var) -> Result<Var> {
+        let reduced = self.reduce_sum_f32(root, var)?;
+        if self.rank() == root {
+            let v = reduced.unwrap();
+            for r in 0..self.nranks() {
+                if r != root {
+                    self.send(r, TAG_ALLREDUCE_OUT, v.clone())?;
+                }
+            }
+            Ok(v)
+        } else {
+            self.recv(root, TAG_ALLREDUCE_OUT)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::vmpi::Network;
+
+    fn run_world<F>(n: usize, f: F)
+    where
+        F: Fn(Endpoint) + Send + Sync + 'static + Clone,
+    {
+        let net = Network::new(n);
+        let mut handles = Vec::new();
+        for r in 0..n {
+            let ep = net.endpoint(r);
+            let f = f.clone();
+            handles.push(std::thread::spawn(move || f(ep)));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn scatter_distributes_chunks() {
+        run_world(4, |ep| {
+            let chunks = if ep.rank() == 0 {
+                Some(
+                    (0..4)
+                        .map(|i| Var::f32(&[2], vec![i as f32, i as f32 + 0.5]))
+                        .collect(),
+                )
+            } else {
+                None
+            };
+            let mine = ep.scatter(0, chunks).unwrap();
+            let want = ep.rank() as f32;
+            assert_eq!(mine.buf.as_f32().unwrap(), &[want, want + 0.5]);
+        });
+    }
+
+    #[test]
+    fn bcast_delivers_to_all() {
+        run_world(4, |ep| {
+            let var = (ep.rank() == 1).then(|| Var::f32(&[3], vec![7.0, 8.0, 9.0]));
+            let got = ep.bcast(1, var).unwrap();
+            assert_eq!(got.buf.as_f32().unwrap(), &[7.0, 8.0, 9.0]);
+        });
+    }
+
+    #[test]
+    fn gather_collects_in_rank_order() {
+        run_world(4, |ep| {
+            let mine = Var::f32(&[1], vec![ep.rank() as f32 * 10.0]);
+            let all = ep.gather(0, mine).unwrap();
+            if ep.rank() == 0 {
+                let all = all.unwrap();
+                for (r, v) in all.iter().enumerate() {
+                    assert_eq!(v.buf.as_f32().unwrap(), &[r as f32 * 10.0]);
+                }
+            } else {
+                assert!(all.is_none());
+            }
+        });
+    }
+
+    #[test]
+    fn reduce_sums() {
+        run_world(4, |ep| {
+            let mine = Var::f32(&[2], vec![1.0, ep.rank() as f32]);
+            let out = ep.reduce_sum_f32(0, mine).unwrap();
+            if ep.rank() == 0 {
+                assert_eq!(out.unwrap().buf.as_f32().unwrap(), &[4.0, 6.0]);
+            }
+        });
+    }
+
+    #[test]
+    fn allreduce_everyone_gets_sum() {
+        run_world(3, |ep| {
+            let mine = Var::f32(&[1], vec![(ep.rank() + 1) as f32]);
+            let out = ep.allreduce_sum_f32(0, mine).unwrap();
+            assert_eq!(out.buf.as_f32().unwrap(), &[6.0]);
+        });
+    }
+
+    #[test]
+    fn barrier_orders_effects() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        use std::sync::Arc;
+        let before = Arc::new(AtomicUsize::new(0));
+        let net = Network::new(4);
+        let mut handles = Vec::new();
+        for r in 0..4 {
+            let ep = net.endpoint(r);
+            let before = Arc::clone(&before);
+            handles.push(std::thread::spawn(move || {
+                before.fetch_add(1, Ordering::SeqCst);
+                ep.barrier(0).unwrap();
+                // After the barrier, every rank must have incremented.
+                assert_eq!(before.load(Ordering::SeqCst), 4);
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+}

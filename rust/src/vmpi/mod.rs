@@ -1,0 +1,290 @@
+//! `vmpi` — the in-process message-passing substrate.
+//!
+//! Stand-in for MPICH on the paper's Blade cluster (DESIGN.md §2): ranks are
+//! OS threads inside one process; messages are typed [`crate::state::Var`]
+//! payloads moved through per-rank mailboxes with blocking, FIFO-per-pair,
+//! tag-matched semantics — exactly the subset of MPI semantics SEDAR's
+//! mechanisms rely on. Collectives (scatter/bcast/gather/reduce/barrier) are
+//! built from point-to-point sends in deterministic rank order, mirroring
+//! §4.2's note that the functional-validation implementation of SEDAR is
+//! point-to-point based.
+//!
+//! A network-wide **abort flag** implements SEDAR's safe-stop: when any rank
+//! reports a fault, the coordinator calls [`Network::abort`] and every
+//! blocked or future operation unwinds with [`SedarError::Aborted`], so all
+//! replica threads can be joined promptly.
+
+pub mod collectives;
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use crate::error::{Result, SedarError};
+use crate::state::Var;
+
+/// A message in flight.
+#[derive(Debug)]
+pub struct Envelope {
+    pub src: usize,
+    pub tag: u32,
+    pub payload: Var,
+}
+
+#[derive(Default)]
+struct Mailbox {
+    q: Mutex<VecDeque<Envelope>>,
+    cv: Condvar,
+}
+
+/// Byte / message accounting, kept per network (Table 3's communication
+/// characterization draws from these).
+#[derive(Debug, Default)]
+pub struct NetStats {
+    pub messages: AtomicU64,
+    pub bytes: AtomicU64,
+}
+
+/// The in-process interconnect for one application instance (one "MPI
+/// world"). A SEDAR run owns exactly one; the baseline strategy owns two.
+pub struct Network {
+    n: usize,
+    boxes: Vec<Mailbox>,
+    aborted: AtomicBool,
+    pub stats: NetStats,
+}
+
+impl Network {
+    pub fn new(nranks: usize) -> Arc<Network> {
+        assert!(nranks >= 1);
+        Arc::new(Network {
+            n: nranks,
+            boxes: (0..nranks).map(|_| Mailbox::default()).collect(),
+            aborted: AtomicBool::new(false),
+            stats: NetStats::default(),
+        })
+    }
+
+    pub fn nranks(&self) -> usize {
+        self.n
+    }
+
+    /// Safe-stop: wake every blocked receiver with [`SedarError::Aborted`].
+    pub fn abort(&self) {
+        self.aborted.store(true, Ordering::SeqCst);
+        for b in &self.boxes {
+            let _g = b.q.lock().unwrap();
+            b.cv.notify_all();
+        }
+    }
+
+    pub fn is_aborted(&self) -> bool {
+        self.aborted.load(Ordering::SeqCst)
+    }
+
+    /// Obtain the endpoint for `rank`.
+    pub fn endpoint(self: &Arc<Self>, rank: usize) -> Endpoint {
+        assert!(rank < self.n, "rank {rank} out of range");
+        Endpoint {
+            rank,
+            net: Arc::clone(self),
+        }
+    }
+}
+
+/// One rank's handle on the network.
+#[derive(Clone)]
+pub struct Endpoint {
+    rank: usize,
+    net: Arc<Network>,
+}
+
+impl Endpoint {
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn nranks(&self) -> usize {
+        self.net.n
+    }
+
+    pub fn network(&self) -> &Arc<Network> {
+        &self.net
+    }
+
+    fn check_abort(&self) -> Result<()> {
+        if self.net.is_aborted() {
+            Err(SedarError::Aborted)
+        } else {
+            Ok(())
+        }
+    }
+
+    /// Non-blocking buffered send (MPI eager mode).
+    pub fn send(&self, dst: usize, tag: u32, payload: Var) -> Result<()> {
+        self.check_abort()?;
+        if dst >= self.net.n {
+            return Err(SedarError::Vmpi(format!(
+                "send to invalid rank {dst} (world size {})",
+                self.net.n
+            )));
+        }
+        let bytes = payload.buf.byte_len() as u64;
+        let mbox = &self.net.boxes[dst];
+        {
+            let mut q = mbox.q.lock().unwrap();
+            q.push_back(Envelope {
+                src: self.rank,
+                tag,
+                payload,
+            });
+        }
+        mbox.cv.notify_all();
+        self.net.stats.messages.fetch_add(1, Ordering::Relaxed);
+        self.net.stats.bytes.fetch_add(bytes, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Blocking receive matching `(src, tag)`; FIFO among matching messages.
+    pub fn recv(&self, src: usize, tag: u32) -> Result<Var> {
+        self.recv_inner(src, tag, None)
+    }
+
+    /// Blocking receive with a deadline (used by watchdog paths).
+    pub fn recv_timeout(&self, src: usize, tag: u32, timeout: Duration) -> Result<Var> {
+        self.recv_inner(src, tag, Some(timeout))
+    }
+
+    fn recv_inner(&self, src: usize, tag: u32, timeout: Option<Duration>) -> Result<Var> {
+        let mbox = &self.net.boxes[self.rank];
+        let deadline = timeout.map(|t| std::time::Instant::now() + t);
+        let mut q = mbox.q.lock().unwrap();
+        loop {
+            if self.net.is_aborted() {
+                return Err(SedarError::Aborted);
+            }
+            if let Some(pos) = q.iter().position(|e| e.src == src && e.tag == tag) {
+                return Ok(q.remove(pos).unwrap().payload);
+            }
+            match deadline {
+                None => {
+                    q = mbox.cv.wait(q).unwrap();
+                }
+                Some(d) => {
+                    let now = std::time::Instant::now();
+                    if now >= d {
+                        return Err(SedarError::Vmpi(format!(
+                            "recv timeout waiting for src={src} tag={tag} at rank {}",
+                            self.rank
+                        )));
+                    }
+                    let (guard, _res) = mbox.cv.wait_timeout(q, d - now).unwrap();
+                    q = guard;
+                }
+            }
+        }
+    }
+
+    /// Count of queued (unmatched) messages — used by tests.
+    pub fn pending(&self) -> usize {
+        self.net.boxes[self.rank].q.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::state::Var;
+
+    fn v(data: &[f32]) -> Var {
+        Var::f32(&[data.len()], data.to_vec())
+    }
+
+    #[test]
+    fn send_recv_roundtrip() {
+        let net = Network::new(2);
+        let a = net.endpoint(0);
+        let b = net.endpoint(1);
+        a.send(1, 7, v(&[1.0, 2.0])).unwrap();
+        let got = b.recv(0, 7).unwrap();
+        assert_eq!(got.buf.as_f32().unwrap(), &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn tag_matching_skips_nonmatching() {
+        let net = Network::new(2);
+        let a = net.endpoint(0);
+        let b = net.endpoint(1);
+        a.send(1, 1, v(&[1.0])).unwrap();
+        a.send(1, 2, v(&[2.0])).unwrap();
+        // Receive tag 2 first even though tag 1 arrived first.
+        assert_eq!(b.recv(0, 2).unwrap().buf.as_f32().unwrap(), &[2.0]);
+        assert_eq!(b.recv(0, 1).unwrap().buf.as_f32().unwrap(), &[1.0]);
+    }
+
+    #[test]
+    fn fifo_within_same_src_tag() {
+        let net = Network::new(2);
+        let a = net.endpoint(0);
+        let b = net.endpoint(1);
+        for i in 0..10 {
+            a.send(1, 3, v(&[i as f32])).unwrap();
+        }
+        for i in 0..10 {
+            assert_eq!(b.recv(0, 3).unwrap().buf.as_f32().unwrap(), &[i as f32]);
+        }
+    }
+
+    #[test]
+    fn cross_thread_blocking_recv() {
+        let net = Network::new(2);
+        let b = net.endpoint(1);
+        let net2 = Arc::clone(&net);
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            net2.endpoint(0).send(1, 0, v(&[9.0])).unwrap();
+        });
+        let got = b.recv(0, 0).unwrap();
+        assert_eq!(got.buf.as_f32().unwrap(), &[9.0]);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn abort_wakes_blocked_receiver() {
+        let net = Network::new(2);
+        let b = net.endpoint(1);
+        let net2 = Arc::clone(&net);
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            net2.abort();
+        });
+        let err = b.recv(0, 0).unwrap_err();
+        assert!(matches!(err, SedarError::Aborted));
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn recv_timeout_expires() {
+        let net = Network::new(2);
+        let b = net.endpoint(1);
+        let err = b.recv_timeout(0, 0, Duration::from_millis(10)).unwrap_err();
+        assert!(matches!(err, SedarError::Vmpi(_)));
+    }
+
+    #[test]
+    fn send_to_invalid_rank_fails() {
+        let net = Network::new(2);
+        let a = net.endpoint(0);
+        assert!(a.send(5, 0, v(&[0.0])).is_err());
+    }
+
+    #[test]
+    fn stats_account_bytes() {
+        let net = Network::new(2);
+        let a = net.endpoint(0);
+        a.send(1, 0, v(&[0.0; 16])).unwrap();
+        assert_eq!(net.stats.messages.load(Ordering::Relaxed), 1);
+        assert_eq!(net.stats.bytes.load(Ordering::Relaxed), 64);
+    }
+}

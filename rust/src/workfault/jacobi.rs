@@ -1,0 +1,262 @@
+//! Workfault extension: detection latency vs. the SPMD communication
+//! pattern (the paper's §5 future-work item, built here).
+//!
+//! In the Jacobi solver, corruption injected `d` rows away from the
+//! nearest *exchanged* block edge contaminates that edge row after exactly
+//! `d` sweeps (the 5-point stencil propagates one row per iteration, and
+//! the contamination coefficient `(1/4)^d` of a high-exponent bit-flip
+//! stays far above the clean signal). The detection point is therefore
+//! **predictable**: the halo send of iteration `k + d`; if the run ends
+//! first, the corruption surfaces at GATHER (workers transmit their block)
+//! or — for the master's own block — at the final VALIDATE.
+//!
+//! [`predict`] encodes that dataflow argument; [`catalog`] sweeps injection
+//! iterations × depths × ranks; `rust/tests/jacobi_latency.rs` injects
+//! each scenario for real and checks the prediction, reproducing the
+//! "latency of detection depends on the communication pattern"
+//! relationship quantitatively.
+
+use std::sync::Arc;
+
+use crate::apps::jacobi::JacobiApp;
+use crate::apps::spec::AppSpec;
+use crate::config::{RunConfig, Strategy};
+use crate::coordinator::{RunOutcome, SedarRun};
+use crate::error::{FaultClass, Result};
+use crate::inject::{InjectKind, InjectPoint, InjectionSpec};
+use crate::recovery::ResumeFrom;
+
+use super::Rec;
+
+/// Predicted detection site for a Jacobi grid corruption.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JDetect {
+    /// Halo send of this iteration (TDC).
+    Iter(usize),
+    /// Never reached a halo before the loop ended; the block transmission
+    /// at GATHER catches it (TDC) — workers only.
+    Gather,
+    /// Master-local corruption that never crossed a message: final-result
+    /// comparison (FSC).
+    Validate,
+}
+
+impl JDetect {
+    pub fn site(&self) -> String {
+        match self {
+            JDetect::Iter(i) => format!("ITER{i}"),
+            JDetect::Gather => "GATHER".into(),
+            JDetect::Validate => "VALIDATE".into(),
+        }
+    }
+
+    pub fn class(&self) -> FaultClass {
+        match self {
+            JDetect::Validate => FaultClass::Fsc,
+            _ => FaultClass::Tdc,
+        }
+    }
+}
+
+/// One latency scenario: corrupt `grid[row][col]` of `rank`'s replica 1
+/// right before iteration `inject_iter`.
+#[derive(Debug, Clone)]
+pub struct JScenario {
+    pub inject_iter: usize,
+    pub rank: usize,
+    pub row: usize,
+    /// Interior column (edge columns are Dirichlet-restored every sweep).
+    pub col: usize,
+    // --- predictions ---
+    pub detect: JDetect,
+    pub latency_iters: usize,
+    pub n_roll: u32,
+    pub p_rec: Rec,
+}
+
+/// Rows of `rank`'s block that are actually exchanged, as distances.
+fn edge_distance(app: &JacobiApp, rank: usize, row: usize) -> usize {
+    let rows = app.rows();
+    let last = app.nranks - 1;
+    let d_top = row; // distance to the block's first row
+    let d_bot = rows - 1 - row;
+    match rank {
+        0 => d_bot,                   // only the bottom edge is exchanged
+        r if r == last => d_top,      // only the top edge
+        _ => d_top.min(d_bot),        // both
+    }
+}
+
+/// The dataflow prediction (see module docs).
+pub fn predict(app: &JacobiApp, inject_iter: usize, rank: usize, row: usize) -> JScenario {
+    let d = edge_distance(app, rank, row);
+    let detect_iter = inject_iter + d;
+    let detect = if detect_iter < app.iters {
+        JDetect::Iter(detect_iter)
+    } else if rank > 0 {
+        JDetect::Gather
+    } else {
+        JDetect::Validate
+    };
+
+    // Rollback arithmetic, identical to the matmul oracle: checkpoints
+    // stored in [injection, detection] are dirty.
+    let inj_phase = app.cursor_of(&format!("ITER{inject_iter}"));
+    let det_phase = app.cursor_of(&detect.site());
+    let cks = app.ckpt_phases();
+    let clean_before_inj = cks.iter().filter(|c| **c < inj_phase).count() as u64;
+    let stored_before_det = cks.iter().filter(|c| **c < det_phase).count() as u64;
+    let n_roll = (stored_before_det - clean_before_inj + 1) as u32;
+    let p_rec = if clean_before_inj > 0 {
+        Rec::Ck(clean_before_inj - 1)
+    } else {
+        Rec::Scratch
+    };
+
+    JScenario {
+        inject_iter,
+        rank,
+        row,
+        col: app.n / 2,
+        detect,
+        latency_iters: d,
+        n_roll,
+        p_rec,
+    }
+}
+
+/// Sweep of latency scenarios: every rank class (first / middle / last) ×
+/// depths from the exchanged edges × two injection iterations.
+pub fn catalog(app: &JacobiApp) -> Vec<JScenario> {
+    assert!(app.nranks >= 3);
+    let rows = app.rows();
+    let mut out = Vec::new();
+    for &inject_iter in &[0usize, app.ckpt_every + 1] {
+        for rank in [0, 1, app.nranks - 1] {
+            for row in [0, 1, rows / 2, rows - 2, rows - 1] {
+                out.push(predict(app, inject_iter, rank, row));
+            }
+        }
+    }
+    out
+}
+
+/// Inject one scenario for real (under the multiple-system-level-
+/// checkpoint strategy) and check every prediction.
+pub fn run_scenario(
+    app: &JacobiApp,
+    sc: &JScenario,
+    base_cfg: &RunConfig,
+) -> Result<(RunOutcome, Vec<String>)> {
+    let mut cfg = base_cfg.clone();
+    cfg.strategy = Strategy::SysCkpt;
+    cfg.run_dir = base_cfg.run_dir.join(format!(
+        "jl-i{}r{}w{}",
+        sc.inject_iter, sc.rank, sc.row
+    ));
+    let spec = InjectionSpec {
+        name: format!("jacobi-lat-i{}-r{}-row{}", sc.inject_iter, sc.rank, sc.row),
+        point: InjectPoint::BeforePhase(app.cursor_of(&format!("ITER{}", sc.inject_iter))),
+        rank: sc.rank,
+        replica: 1,
+        kind: InjectKind::BitFlip {
+            var: "grid".into(),
+            elem: sc.row * app.n + sc.col,
+            bit: 30, // exponent bit: the contamination dominates the signal
+        },
+    };
+    let outcome = SedarRun::new(Arc::new(app.clone()), cfg, Some(spec)).run()?;
+
+    let mut mismatches = Vec::new();
+    if outcome.result_correct != Some(true) {
+        mismatches.push(format!("result: {:?}", outcome.result_correct));
+    }
+    match outcome.detections.first() {
+        None => mismatches.push("nothing detected".into()),
+        Some(ev) => {
+            if ev.class != sc.detect.class() {
+                mismatches.push(format!(
+                    "class: predicted {}, got {}",
+                    sc.detect.class(),
+                    ev.class
+                ));
+            }
+            if ev.site != sc.detect.site() {
+                mismatches.push(format!(
+                    "site: predicted {}, got {}",
+                    sc.detect.site(),
+                    ev.site
+                ));
+            }
+        }
+    }
+    if outcome.restarts != sc.n_roll {
+        mismatches.push(format!(
+            "N_roll: predicted {}, got {}",
+            sc.n_roll, outcome.restarts
+        ));
+    }
+    match (sc.p_rec, outcome.resume_history.last()) {
+        (Rec::Ck(k), Some(ResumeFrom::SysCkpt(got))) if *got == k => {}
+        (Rec::Scratch, Some(ResumeFrom::Scratch)) => {}
+        (want, got) => mismatches.push(format!("P_rec: predicted {want}, got {got:?}")),
+    }
+    Ok((outcome, mismatches))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn app() -> JacobiApp {
+        JacobiApp::new(64, 4, 12, 4)
+    }
+
+    #[test]
+    fn edge_distances_respect_rank_position() {
+        let a = app(); // rows = 16
+        assert_eq!(edge_distance(&a, 0, 15), 0); // master: bottom edge
+        assert_eq!(edge_distance(&a, 0, 0), 15); // master's row 0 never sent
+        assert_eq!(edge_distance(&a, 1, 0), 0); // middle: both edges
+        assert_eq!(edge_distance(&a, 1, 8), 7);
+        assert_eq!(edge_distance(&a, 3, 0), 0); // last: top edge
+        assert_eq!(edge_distance(&a, 3, 15), 15);
+    }
+
+    #[test]
+    fn prediction_latency_is_distance() {
+        let a = app();
+        let sc = predict(&a, 1, 1, 5); // depth 5 from the top edge
+        assert_eq!(sc.latency_iters, 5);
+        assert_eq!(sc.detect, JDetect::Iter(6));
+        assert_eq!(sc.detect.class(), FaultClass::Tdc);
+    }
+
+    #[test]
+    fn deep_master_corruption_becomes_fsc() {
+        let a = app(); // 12 iters
+        // Master row 0, injected at iter 5: needs 15 sweeps → ends first.
+        let sc = predict(&a, 5, 0, 0);
+        assert_eq!(sc.detect, JDetect::Validate);
+        assert_eq!(sc.detect.class(), FaultClass::Fsc);
+    }
+
+    #[test]
+    fn deep_worker_corruption_caught_at_gather() {
+        let a = app();
+        let sc = predict(&a, 5, 3, 15); // depth 15, 7 iters left
+        assert_eq!(sc.detect, JDetect::Gather);
+    }
+
+    #[test]
+    fn catalog_covers_all_detection_kinds() {
+        let c = catalog(&app());
+        assert_eq!(c.len(), 30);
+        assert!(c.iter().any(|s| matches!(s.detect, JDetect::Iter(_))));
+        assert!(c.iter().any(|s| s.detect == JDetect::Gather));
+        assert!(c.iter().any(|s| s.detect == JDetect::Validate));
+        // Latency spectrum: immediate (d=0) through deep (d=15).
+        assert!(c.iter().any(|s| s.latency_iters == 0));
+        assert!(c.iter().any(|s| s.latency_iters >= 15));
+    }
+}

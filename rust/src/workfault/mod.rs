@@ -1,0 +1,587 @@
+//! The workfault: the complete set of 64 representative injection scenarios
+//! over the Master/Worker matmul test application (§4.1, Table 2).
+//!
+//! Each scenario names an injection *window* (the execution interval between
+//! two phases), a target process, and a target datum. From the application's
+//! dataflow, the **prediction oracle** ([`predict`]) derives — exactly as
+//! §4.1 does analytically —
+//!
+//! * the *effect* class (TDC / FSC / LE / TOE),
+//! * the detection point `P_det`,
+//! * the recovery point `P_rec` (the nearest *clean* checkpoint), and
+//! * `N_roll`, the number of restart attempts Algorithm 1 will need.
+//!
+//! The campaign runner ([`run_scenario`]) then injects the fault for real
+//! and checks observed behavior against the prediction — the paper's
+//! empirical validation (§4.2, Figure 3), mechanized for all 64 scenarios
+//! (`rust/tests/campaign64.rs`, `benches/table2_scenarios.rs`).
+
+pub mod jacobi;
+
+use std::sync::Arc;
+
+use crate::apps::matmul::{phases, MatmulApp};
+use crate::config::{RunConfig, Strategy};
+use crate::coordinator::{RunOutcome, SedarRun};
+use crate::error::{FaultClass, Result};
+use crate::inject::{InjectKind, InjectPoint, InjectionSpec};
+use crate::recovery::ResumeFrom;
+
+/// The execution intervals faults are injected into (the paper's `P_inj`
+/// column, e.g. "CK0 – SCATTER").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Window {
+    /// INIT → CK0 (before the first checkpoint: even CK0 is dirty).
+    InitCk0,
+    /// CK0 → SCATTER.
+    Ck0Scatter,
+    /// SCATTER → CK1.
+    ScatterCk1,
+    /// CK1 → BCAST.
+    Ck1Bcast,
+    /// BCAST → CK2.
+    BcastCk2,
+    /// During the MATMUL compute loop (index-corruption TOE scenarios).
+    DuringMatmul,
+    /// MATMUL → GATHER.
+    MatmulGather,
+    /// GATHER → CK3.
+    GatherCk3,
+    /// CK3 → VALIDATE.
+    Ck3Validate,
+}
+
+impl Window {
+    /// The phase cursor the injection fires before (or during).
+    pub fn inj_cursor(self) -> u64 {
+        match self {
+            Window::InitCk0 => phases::CK0,
+            Window::Ck0Scatter => phases::SCATTER,
+            Window::ScatterCk1 => phases::CK1,
+            Window::Ck1Bcast => phases::BCAST,
+            Window::BcastCk2 => phases::CK2,
+            Window::DuringMatmul => phases::MATMUL,
+            Window::MatmulGather => phases::GATHER,
+            Window::GatherCk3 => phases::CK3,
+            Window::Ck3Validate => phases::VALIDATE,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Window::InitCk0 => "INIT-CK0",
+            Window::Ck0Scatter => "CK0-SCATTER",
+            Window::ScatterCk1 => "SCATTER-CK1",
+            Window::Ck1Bcast => "CK1-BCAST",
+            Window::BcastCk2 => "BCAST-CK2",
+            Window::DuringMatmul => "MATMUL",
+            Window::MatmulGather => "MATMUL-GATHER",
+            Window::GatherCk3 => "GATHER-CK3",
+            Window::Ck3Validate => "CK3-VALIDATE",
+        }
+    }
+
+    const DATA_WINDOWS: [Window; 8] = [
+        Window::InitCk0,
+        Window::Ck0Scatter,
+        Window::ScatterCk1,
+        Window::Ck1Bcast,
+        Window::BcastCk2,
+        Window::MatmulGather,
+        Window::GatherCk3,
+        Window::Ck3Validate,
+    ];
+}
+
+/// What datum the bit-flip lands in (the paper's `Data` column: A(M), A(W),
+/// B, C(M), C(W), i(M), i(W)).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DataTarget {
+    /// Master's full `A`, element inside the master's own chunk rows — the
+    /// paper's `A(M)`.
+    AMasterPart,
+    /// Master's full `A`, element inside a worker's chunk rows — `A(W)`.
+    AWorkerPart,
+    /// The local `A_chunk` of the target process.
+    AChunk,
+    /// The `B` matrix of the target process.
+    B,
+    /// Master's result matrix `C`, element in the master's chunk — `C(M)`.
+    CMaster,
+    /// The local `C_chunk` of the target process.
+    CChunk,
+    /// A loop index during MATMUL — `i(M)` / `i(W)` (TOE).
+    Index,
+}
+
+impl DataTarget {
+    pub fn label(self, is_master: bool) -> &'static str {
+        match (self, is_master) {
+            (DataTarget::AMasterPart, _) => "A(M)",
+            (DataTarget::AWorkerPart, _) => "A(W)",
+            (DataTarget::AChunk, true) => "Ach(M)",
+            (DataTarget::AChunk, false) => "Ach(W)",
+            (DataTarget::B, true) => "B(M)",
+            (DataTarget::B, false) => "B(W)",
+            (DataTarget::CMaster, _) => "C(M)",
+            (DataTarget::CChunk, true) => "Cch(M)",
+            (DataTarget::CChunk, false) => "Cch(W)",
+            (DataTarget::Index, true) => "i(M)",
+            (DataTarget::Index, false) => "i(W)",
+        }
+    }
+}
+
+/// Predicted recovery point.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Rec {
+    /// No recovery needed (LE).
+    None,
+    /// Roll back to checkpoint `k` (the nearest clean one).
+    Ck(u64),
+    /// Relaunch from the beginning.
+    Scratch,
+}
+
+impl std::fmt::Display for Rec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Rec::None => write!(f, "-"),
+            Rec::Ck(k) => write!(f, "CK{k}"),
+            Rec::Scratch => write!(f, "start"),
+        }
+    }
+}
+
+/// One catalog entry: the scenario definition plus its §4.1 prediction.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub id: u32,
+    pub window: Window,
+    /// Injected rank (0 = Master).
+    pub rank: usize,
+    pub data: DataTarget,
+    // ---- predictions (the analytical model of §4.1) ----
+    pub effect: FaultClass,
+    pub p_det: Option<&'static str>,
+    pub p_rec: Rec,
+    pub n_roll: u32,
+}
+
+impl Scenario {
+    pub fn is_master(&self) -> bool {
+        self.rank == 0
+    }
+
+    /// Table-2-style row.
+    pub fn row(&self) -> String {
+        format!(
+            "| {} | {} | {} | {} | {} | {} | {} | {} |",
+            self.id,
+            self.window.label(),
+            if self.is_master() {
+                "Master".to_string()
+            } else {
+                format!("Worker{}", self.rank)
+            },
+            self.data.label(self.is_master()),
+            self.effect,
+            self.p_det.unwrap_or("-"),
+            self.p_rec,
+            self.n_roll,
+        )
+    }
+}
+
+/// Checkpoint phase cursors of the matmul test app.
+const CKS: [u64; 4] = [phases::CK0, phases::CK1, phases::CK2, phases::CK3];
+
+/// The §4.1 prediction oracle: given where a fault lands and what it hits,
+/// derive effect, detection point and recovery cost from the dataflow of
+/// Algorithm 3.
+pub fn predict(window: Window, rank: usize, data: DataTarget) -> (FaultClass, Option<&'static str>, Rec, u32) {
+    use DataTarget as D;
+    use FaultClass as F;
+    use Window as W;
+    let master = rank == 0;
+    let w = window;
+
+    // Step 1: effect + detection phase, from the data's future use.
+    let (effect, det): (F, Option<(&'static str, u64)>) = match (data, master) {
+        // --- master's full A: used (only) by SCATTER.
+        (D::AWorkerPart, true) => match w {
+            W::InitCk0 | W::Ck0Scatter => (F::Tdc, Some(("SCATTER", phases::SCATTER))),
+            _ => (F::Le, None), // A unused after SCATTER
+        },
+        (D::AMasterPart, true) => match w {
+            // Master's own rows flow A → A_chunk → C_chunk → C, all local.
+            W::InitCk0 | W::Ck0Scatter => (F::Fsc, Some(("VALIDATE", phases::VALIDATE))),
+            _ => (F::Le, None),
+        },
+        // --- A_chunk: written at SCATTER, read at MATMUL.
+        (D::AChunk, true) => match w {
+            W::ScatterCk1 | W::Ck1Bcast | W::BcastCk2 => {
+                (F::Fsc, Some(("VALIDATE", phases::VALIDATE)))
+            }
+            _ => (F::Le, None), // overwritten by SCATTER / unused after MATMUL
+        },
+        (D::AChunk, false) => match w {
+            W::ScatterCk1 | W::Ck1Bcast | W::BcastCk2 => {
+                (F::Tdc, Some(("GATHER", phases::GATHER)))
+            }
+            _ => (F::Le, None),
+        },
+        // --- B: master's is transmitted at BCAST; workers' is received there.
+        (D::B, true) => match w {
+            W::InitCk0 | W::Ck0Scatter | W::ScatterCk1 | W::Ck1Bcast => {
+                (F::Tdc, Some(("BCAST", phases::BCAST)))
+            }
+            // Already sent: only the master's own compute uses it now.
+            W::BcastCk2 => (F::Fsc, Some(("VALIDATE", phases::VALIDATE))),
+            _ => (F::Le, None),
+        },
+        (D::B, false) => match w {
+            W::BcastCk2 => (F::Tdc, Some(("GATHER", phases::GATHER))),
+            _ => (F::Le, None), // overwritten by BCAST / unused after MATMUL
+        },
+        // --- C at the master: every element is (re)written at GATHER.
+        (D::CMaster, true) => match w {
+            W::GatherCk3 | W::Ck3Validate => (F::Fsc, Some(("VALIDATE", phases::VALIDATE))),
+            _ => (F::Le, None),
+        },
+        // --- C_chunk: written at MATMUL; master's lands in C locally,
+        //     workers' is transmitted at GATHER.
+        (D::CChunk, true) => match w {
+            W::MatmulGather => (F::Fsc, Some(("VALIDATE", phases::VALIDATE))),
+            _ => (F::Le, None),
+        },
+        (D::CChunk, false) => match w {
+            W::MatmulGather => (F::Tdc, Some(("GATHER", phases::GATHER))),
+            _ => (F::Le, None),
+        },
+        // --- loop index during MATMUL: one replica redoes work → TOE at
+        //     the next rendezvous (GATHER), master and worker alike.
+        (D::Index, _) => (F::Toe, Some(("GATHER", phases::GATHER))),
+        // Invalid combinations (A on a worker, C on a worker, …).
+        (D::AMasterPart, false) | (D::AWorkerPart, false) | (D::CMaster, false) => {
+            unreachable!("invalid scenario: {data:?} on worker")
+        }
+    };
+
+    // Step 2: rollback arithmetic. A checkpoint stored in [injection,
+    // detection] captured the corrupted state → dirty; Algorithm 1 walks
+    // back through all dirty ones to the nearest clean one (or scratch).
+    // TOE corrupts no state, so its checkpoints are all clean — the formula
+    // still holds because MATMUL and GATHER straddle no checkpoint.
+    match det {
+        None => (effect, None, Rec::None, 0),
+        Some((site, det_cursor)) => {
+            let inj_cursor = w.inj_cursor();
+            let clean_before_inj = CKS.iter().filter(|c| **c < inj_cursor).count() as u64;
+            let stored_before_det = CKS.iter().filter(|c| **c < det_cursor).count() as u64;
+            let n_roll = (stored_before_det - clean_before_inj + 1) as u32;
+            let p_rec = if clean_before_inj > 0 {
+                Rec::Ck(clean_before_inj - 1)
+            } else {
+                Rec::Scratch
+            };
+            (effect, Some(site), p_rec, n_roll)
+        }
+    }
+}
+
+/// Build the full 64-scenario catalog for a given matmul geometry.
+///
+/// Composition (matching §4.1's design criteria):
+/// * 8 data windows × master targets {A(M), A(W), B, C(M)}   = 32
+/// * 8 data windows × worker targets {A_chunk, B, C_chunk}   = 24
+/// * master A_chunk in the 3 windows where it is live + one LE window = 4
+/// * master C_chunk in {MATMUL→GATHER, GATHER→CK3}           = 2
+/// * index corruption during MATMUL on master and on a worker = 2
+pub fn catalog(app: &MatmulApp) -> Vec<Scenario> {
+    assert!(app.nranks >= 3, "catalog needs at least 2 workers");
+    let mut out = Vec::with_capacity(64);
+    let mut id = 0;
+    let mut push = |window: Window, rank: usize, data: DataTarget| {
+        id += 1;
+        let (effect, p_det, p_rec, n_roll) = predict(window, rank, data);
+        out.push(Scenario {
+            id,
+            window,
+            rank,
+            data,
+            effect,
+            p_det,
+            p_rec,
+            n_roll,
+        });
+    };
+
+    for wdw in Window::DATA_WINDOWS {
+        for data in [
+            DataTarget::AMasterPart,
+            DataTarget::AWorkerPart,
+            DataTarget::B,
+            DataTarget::CMaster,
+        ] {
+            push(wdw, 0, data);
+        }
+        // Representative worker, varied across windows.
+        let worker = 1 + (wdw.inj_cursor() as usize % (app.nranks - 1));
+        for data in [DataTarget::AChunk, DataTarget::B, DataTarget::CChunk] {
+            push(wdw, worker, data);
+        }
+    }
+    // Master's A_chunk: its three live windows + one latent window.
+    for wdw in [
+        Window::ScatterCk1,
+        Window::Ck1Bcast,
+        Window::BcastCk2,
+        Window::MatmulGather,
+    ] {
+        push(wdw, 0, DataTarget::AChunk);
+    }
+    // Master's C_chunk: live (FSC) and latent.
+    push(Window::MatmulGather, 0, DataTarget::CChunk);
+    push(Window::GatherCk3, 0, DataTarget::CChunk);
+    // Index corruption (TOE): i(M) and i(W).
+    push(Window::DuringMatmul, 0, DataTarget::Index);
+    push(Window::DuringMatmul, 1, DataTarget::Index);
+
+    assert_eq!(out.len(), 64, "the workfault must have exactly 64 scenarios");
+    out
+}
+
+/// Materialize the [`InjectionSpec`] that realizes a scenario on a concrete
+/// matmul geometry (element indices are picked inside the right region).
+pub fn injection_for(app: &MatmulApp, sc: &Scenario, cfg: &RunConfig) -> InjectionSpec {
+    let n = app.n;
+    let rows = app.chunk_rows();
+    let kind = match sc.data {
+        DataTarget::Index => InjectKind::IndexRollback {
+            redo_blocks: app.sub_blocks as u64,
+            // Comfortably exceed the TOE lapse so the sibling's rendezvous
+            // at GATHER expires deterministically.
+            extra_delay: cfg.toe_timeout * 3,
+        },
+        data => {
+            let (var, elem) = match data {
+                DataTarget::AMasterPart => ("A", (rows / 2) * n + 3),
+                // Land in worker 2's chunk of A.
+                DataTarget::AWorkerPart => ("A", (2 * rows + 1) * n + 5),
+                DataTarget::AChunk => ("A_chunk", n + 2),
+                DataTarget::B => ("B", 2 * n + 7),
+                DataTarget::CMaster => ("C", (rows / 2) * n + 9),
+                DataTarget::CChunk => ("C_chunk", n + 4),
+                DataTarget::Index => unreachable!(),
+            };
+            InjectKind::BitFlip {
+                var: var.to_string(),
+                elem,
+                // A high exponent bit: the corrupted value differs wildly,
+                // like the paper's register bit-flips.
+                bit: 30,
+            }
+        }
+    };
+    let point = match sc.window {
+        Window::DuringMatmul => InjectPoint::DuringPhase {
+            phase: phases::MATMUL,
+            after_subblock: 1,
+        },
+        w => InjectPoint::BeforePhase(w.inj_cursor()),
+    };
+    InjectionSpec {
+        name: format!("scenario-{}", sc.id),
+        point,
+        rank: sc.rank,
+        replica: 1,
+        kind,
+    }
+}
+
+/// What a campaign run observed, compared against the prediction.
+#[derive(Debug)]
+pub struct ScenarioResult {
+    pub scenario: Scenario,
+    pub outcome: RunOutcome,
+    pub pass: bool,
+    pub mismatches: Vec<String>,
+}
+
+/// Run one scenario under the multiple-system-level-checkpoint strategy and
+/// check every prediction column (the §4.2 validation, mechanized).
+pub fn run_scenario(
+    app: &MatmulApp,
+    sc: &Scenario,
+    base_cfg: &RunConfig,
+) -> Result<ScenarioResult> {
+    let mut cfg = base_cfg.clone();
+    cfg.strategy = Strategy::SysCkpt;
+    cfg.run_dir = base_cfg.run_dir.join(format!("sc{}", sc.id));
+    let spec = injection_for(app, sc, &cfg);
+    let run = SedarRun::new(Arc::new(app.clone()), cfg, Some(spec));
+    let outcome = run.run()?;
+
+    let mut mismatches = Vec::new();
+    if !outcome.completed {
+        mismatches.push("run did not complete".into());
+    }
+    if outcome.result_correct != Some(true) {
+        mismatches.push(format!(
+            "final result not correct: {:?}",
+            outcome.result_correct
+        ));
+    }
+    if !outcome.injected && sc.effect != FaultClass::Le {
+        mismatches.push("injection never fired".into());
+    }
+    if outcome.restarts != sc.n_roll {
+        mismatches.push(format!(
+            "N_roll: predicted {}, observed {}",
+            sc.n_roll, outcome.restarts
+        ));
+    }
+    match (sc.effect, outcome.detections.first()) {
+        (FaultClass::Le, None) => {}
+        (FaultClass::Le, Some(ev)) => {
+            mismatches.push(format!("predicted LE but detected {} at {}", ev.class, ev.site))
+        }
+        (want, None) => mismatches.push(format!("predicted {want} but nothing detected")),
+        (want, Some(ev)) => {
+            if ev.class != want {
+                mismatches.push(format!("effect: predicted {want}, observed {}", ev.class));
+            }
+            if let Some(site) = sc.p_det {
+                if ev.site != site {
+                    mismatches.push(format!(
+                        "P_det: predicted {site}, observed {}",
+                        ev.site
+                    ));
+                }
+            }
+        }
+    }
+    // Recovery point: the last resume of the run must match P_rec.
+    match (sc.p_rec, outcome.resume_history.last()) {
+        (Rec::None, None) => {}
+        (Rec::None, Some(r)) => mismatches.push(format!("predicted no rollback, got {r}")),
+        (Rec::Ck(k), Some(ResumeFrom::SysCkpt(got))) if *got == k => {}
+        (Rec::Scratch, Some(ResumeFrom::Scratch)) => {}
+        (want, got) => mismatches.push(format!("P_rec: predicted {want}, observed {got:?}")),
+    }
+
+    Ok(ScenarioResult {
+        scenario: sc.clone(),
+        pass: mismatches.is_empty(),
+        mismatches,
+        outcome,
+    })
+}
+
+/// The Table-2 header used by reports.
+pub fn table2_header() -> String {
+    "| Scenario | P_inj | Process | Data | Effect | P_det | P_rec | N_roll |\n\
+     |---|---|---|---|---|---|---|---|"
+        .to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::spec::AppSpec;
+
+    fn app() -> MatmulApp {
+        MatmulApp::new(64, 4)
+    }
+
+    #[test]
+    fn catalog_has_64_scenarios() {
+        let c = catalog(&app());
+        assert_eq!(c.len(), 64);
+        // All four effect classes are represented.
+        for class in [
+            FaultClass::Tdc,
+            FaultClass::Fsc,
+            FaultClass::Le,
+            FaultClass::Toe,
+        ] {
+            assert!(
+                c.iter().any(|s| s.effect == class),
+                "no scenario with effect {class}"
+            );
+        }
+    }
+
+    #[test]
+    fn paper_table2_rows_reproduced() {
+        // The four representative scenarios the paper details in Table 2.
+        // Scenario 2: CK0–SCATTER, Master, A(W) → TDC @SCATTER, CK0, 1 roll.
+        let (e, d, r, n) = predict(Window::Ck0Scatter, 0, DataTarget::AWorkerPart);
+        assert_eq!(
+            (e, d, r, n),
+            (FaultClass::Tdc, Some("SCATTER"), Rec::Ck(0), 1)
+        );
+        // Scenario 29: BCAST–CK2, Worker, C(W) → LE.
+        let (e, d, r, n) = predict(Window::BcastCk2, 2, DataTarget::CChunk);
+        assert_eq!((e, d, r, n), (FaultClass::Le, None, Rec::None, 0));
+        // Scenario 50: GATHER–CK3, Master, C(M) → FSC @VALIDATE, CK2, 2.
+        let (e, d, r, n) = predict(Window::GatherCk3, 0, DataTarget::CMaster);
+        assert_eq!(
+            (e, d, r, n),
+            (FaultClass::Fsc, Some("VALIDATE"), Rec::Ck(2), 2)
+        );
+        // Scenario 59: MATMUL, Worker, i(W) → TOE @GATHER, CK2, 1.
+        let (e, d, r, n) = predict(Window::DuringMatmul, 1, DataTarget::Index);
+        assert_eq!(
+            (e, d, r, n),
+            (FaultClass::Toe, Some("GATHER"), Rec::Ck(2), 1)
+        );
+    }
+
+    #[test]
+    fn pre_ck0_faults_force_scratch() {
+        let (e, _, r, n) = predict(Window::InitCk0, 0, DataTarget::AWorkerPart);
+        assert_eq!(e, FaultClass::Tdc);
+        assert_eq!(r, Rec::Scratch);
+        assert_eq!(n, 2); // try CK0 (dirty), then scratch
+    }
+
+    #[test]
+    fn deep_fsc_walks_whole_chain() {
+        // A(M) corrupted before CK0: every checkpoint is dirty; the walk
+        // goes CK3 → CK2 → CK1 → CK0 → scratch = 5 attempts.
+        let (e, d, r, n) = predict(Window::InitCk0, 0, DataTarget::AMasterPart);
+        assert_eq!(e, FaultClass::Fsc);
+        assert_eq!(d, Some("VALIDATE"));
+        assert_eq!(r, Rec::Scratch);
+        assert_eq!(n, 5);
+    }
+
+    #[test]
+    fn injections_target_valid_vars() {
+        let app = app();
+        let cfg = RunConfig::for_tests("wf-spec");
+        for sc in catalog(&app) {
+            let spec = injection_for(&app, &sc, &cfg);
+            if let InjectKind::BitFlip { var, elem, .. } = &spec.kind {
+                let store = app.init_store(sc.rank, 1);
+                let v = store.get(var).expect("target var exists on that rank");
+                assert!(
+                    *elem < v.numel(),
+                    "scenario {}: elem {} out of range for {var}",
+                    sc.id,
+                    elem
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rows_render() {
+        let c = catalog(&app());
+        let row = c[1].row();
+        assert!(row.starts_with("| 2 |"));
+        assert!(table2_header().contains("P_rec"));
+    }
+}

@@ -1,0 +1,75 @@
+//! The full 64-scenario workfault campaign (§4.1–4.2): every scenario is
+//! injected for real and every prediction column (effect, P_det, P_rec,
+//! N_roll) is checked. This is the paper's Table-2 validation, mechanized.
+
+use sedar::apps::matmul::MatmulApp;
+use sedar::config::RunConfig;
+use sedar::error::FaultClass;
+use sedar::workfault;
+
+#[test]
+fn all_64_scenarios_behave_as_predicted() {
+    let app = MatmulApp::new(64, 4);
+    let cfg = RunConfig::for_tests("campaign64");
+    let catalog = workfault::catalog(&app);
+    assert_eq!(catalog.len(), 64);
+
+    let mut failures = Vec::new();
+    for sc in &catalog {
+        let r = workfault::run_scenario(&app, sc, &cfg).unwrap();
+        if !r.pass {
+            failures.push(format!("scenario {}: {:?}", sc.id, r.mismatches));
+        }
+    }
+    assert!(
+        failures.is_empty(),
+        "{} scenario(s) diverged:\n{}",
+        failures.len(),
+        failures.join("\n")
+    );
+    let _ = std::fs::remove_dir_all(&cfg.run_dir);
+}
+
+#[test]
+fn effect_class_census_is_plausible() {
+    // The catalog must exercise all four §2 effect classes with the rough
+    // proportions the dataflow dictates (most injections are latent).
+    let app = MatmulApp::new(64, 4);
+    let catalog = workfault::catalog(&app);
+    let count = |c: FaultClass| catalog.iter().filter(|s| s.effect == c).count();
+    assert_eq!(count(FaultClass::Toe), 2); // i(M), i(W)
+    assert!(count(FaultClass::Tdc) >= 10);
+    assert!(count(FaultClass::Fsc) >= 8);
+    assert!(count(FaultClass::Le) >= 20);
+    assert_eq!(
+        count(FaultClass::Tdc) + count(FaultClass::Fsc) + count(FaultClass::Le) + 2,
+        64
+    );
+}
+
+#[test]
+fn scenario_50_trace_matches_figure3_shape() {
+    // Figure 3 of the paper: GATHER→CK3 C(M) corruption. The trace must
+    // show: injection, FSC at VALIDATE, restart from CK3, re-detection,
+    // restart from CK2, then a clean validation.
+    let app = MatmulApp::new(64, 4);
+    let cfg = RunConfig::for_tests("fig3");
+    let sc = workfault::catalog(&app)
+        .into_iter()
+        .find(|s| {
+            s.window == workfault::Window::GatherCk3
+                && s.rank == 0
+                && s.data == workfault::DataTarget::CMaster
+        })
+        .unwrap();
+    let r = workfault::run_scenario(&app, &sc, &cfg).unwrap();
+    assert!(r.pass, "{:?}", r.mismatches);
+    let t = &r.outcome.trace_dump;
+    let idx = |needle: &str| t.find(needle).unwrap_or_else(|| panic!("missing: {needle}"));
+    // Ordered like the paper's console output.
+    assert!(idx("INJECTED") < idx("FAULT FSC detected at VALIDATE"));
+    assert!(idx("FAULT FSC detected at VALIDATE") < idx("resume from sys-ck3"));
+    assert!(idx("resume from sys-ck3") < idx("resume from sys-ck2"));
+    assert!(idx("resume from sys-ck2") < t.rfind("final result replicas agree").unwrap());
+    let _ = std::fs::remove_dir_all(&cfg.run_dir);
+}

@@ -1,0 +1,113 @@
+//! Ablation of §4.2's collectives observation:
+//!
+//! > "in collective communications, the sender process also participates
+//! > […] If our test application just uses collective operations, the
+//! > corrupted data gets transmitted and hence it is validated. In this
+//! > way, only TDC scenarios remain and FSC scenarios should not be
+//! > present any longer."
+//!
+//! We run the *same* master-local corruption under both collective
+//! implementations: with point-to-point collectives it surfaces late as an
+//! FSC at VALIDATE; with native (optimized) collectives the root's own
+//! contribution is validated inside the collective, so the same fault is a
+//! TDC caught at GATHER — earlier, with a shorter rollback.
+
+use std::sync::Arc;
+
+use sedar::apps::matmul::{phases, MatmulApp};
+use sedar::apps::spec::AppSpec;
+use sedar::config::{CollectiveImpl, RunConfig, Strategy};
+use sedar::coordinator::SedarRun;
+use sedar::error::FaultClass;
+use sedar::inject::{InjectKind, InjectPoint, InjectionSpec};
+
+/// Corrupt the master's OWN result chunk right after compute — data that a
+/// p2p gather never transmits.
+fn master_local_corruption() -> InjectionSpec {
+    InjectionSpec {
+        name: "master-cchunk".into(),
+        point: InjectPoint::BeforePhase(phases::GATHER),
+        rank: 0,
+        replica: 1,
+        kind: InjectKind::BitFlip {
+            var: "C_chunk".into(),
+            elem: 4,
+            bit: 30,
+        },
+    }
+}
+
+fn run_with(collectives: CollectiveImpl, tag: &str) -> sedar::coordinator::RunOutcome {
+    let app: Arc<dyn AppSpec> = Arc::new(MatmulApp::new(64, 4));
+    let mut cfg = RunConfig::for_tests(tag);
+    cfg.strategy = Strategy::SysCkpt;
+    cfg.collectives = collectives;
+    SedarRun::new(app, cfg, Some(master_local_corruption()))
+        .run()
+        .unwrap()
+}
+
+#[test]
+fn p2p_collectives_leave_fsc_scenarios() {
+    let outcome = run_with(CollectiveImpl::PointToPoint, "abl-p2p");
+    assert_eq!(outcome.result_correct, Some(true));
+    let first = &outcome.detections[0];
+    // Not transmitted → detected only by the final-result comparison.
+    assert_eq!(first.class, FaultClass::Fsc);
+    assert_eq!(first.site, "VALIDATE");
+    // CK3 captured the corrupt C → dirty → two rollbacks.
+    assert_eq!(outcome.restarts, 2);
+}
+
+#[test]
+fn native_collectives_turn_fsc_into_tdc() {
+    let outcome = run_with(CollectiveImpl::Native, "abl-native");
+    assert_eq!(outcome.result_correct, Some(true));
+    let first = &outcome.detections[0];
+    // The gather validates the root's own contribution too → caught at the
+    // collective itself, before the dirty checkpoint even exists.
+    assert_eq!(first.class, FaultClass::Tdc);
+    assert_eq!(first.site, "GATHER");
+    // Detection latency shrank: CK2 is the last stored ckpt and it is
+    // clean → a single rollback.
+    assert_eq!(outcome.restarts, 1);
+}
+
+#[test]
+fn both_modes_agree_on_fault_free_results() {
+    let app: Arc<dyn AppSpec> = Arc::new(MatmulApp::new(64, 4));
+    let mut results = Vec::new();
+    for (mode, tag) in [
+        (CollectiveImpl::PointToPoint, "abl-clean-p2p"),
+        (CollectiveImpl::Native, "abl-clean-nat"),
+    ] {
+        let mut cfg = RunConfig::for_tests(tag);
+        cfg.strategy = Strategy::UserCkpt;
+        cfg.collectives = mode;
+        let outcome = SedarRun::new(app.clone(), cfg, None).run().unwrap();
+        assert_eq!(outcome.result_correct, Some(true));
+        results.push(outcome.attempts);
+    }
+    assert_eq!(results, vec![1, 1]);
+}
+
+#[test]
+fn native_mode_full_campaign_smoke() {
+    // A slice of the workfault under native collectives: TDC rows keep
+    // their predictions (transmission-validated either way); LE rows stay
+    // latent. (FSC rows intentionally differ — that is the ablation.)
+    let app = MatmulApp::new(64, 4);
+    let mut cfg = RunConfig::for_tests("abl-campaign");
+    cfg.collectives = CollectiveImpl::Native;
+    for sc in sedar::workfault::catalog(&app) {
+        if sc.effect == FaultClass::Tdc || sc.effect == FaultClass::Le {
+            let r = sedar::workfault::run_scenario(&app, &sc, &cfg).unwrap();
+            assert!(
+                r.pass,
+                "scenario {} under native collectives: {:?}",
+                sc.id, r.mismatches
+            );
+        }
+    }
+    let _ = std::fs::remove_dir_all(&cfg.run_dir);
+}

@@ -1,0 +1,44 @@
+//! Detection latency vs. the SPMD communication pattern — the Jacobi
+//! latency workfault (paper §5 future-work item, mechanized; see
+//! `sedar::workfault::jacobi`). 30 scenarios sweeping injection depth from
+//! the exchanged block edges: detection must occur at exactly the
+//! predicted halo exchange (latency = stencil distance), or at
+//! GATHER/VALIDATE when the loop ends first, with the predicted rollback
+//! counts.
+
+use sedar::apps::jacobi::JacobiApp;
+use sedar::config::RunConfig;
+use sedar::workfault::jacobi as jl;
+
+#[test]
+fn latency_catalog_behaves_as_predicted() {
+    let app = JacobiApp::new(64, 4, 12, 4);
+    let cfg = RunConfig::for_tests("jacobi-latency");
+    let mut failures = Vec::new();
+    let mut latencies = Vec::new();
+    for sc in jl::catalog(&app) {
+        let (outcome, mismatches) = jl::run_scenario(&app, &sc, &cfg).unwrap();
+        if !mismatches.is_empty() {
+            failures.push(format!(
+                "inject_iter={} rank={} row={}: {:?}",
+                sc.inject_iter, sc.rank, sc.row, mismatches
+            ));
+        }
+        if let jl::JDetect::Iter(i) = sc.detect {
+            latencies.push((sc.latency_iters, i - sc.inject_iter));
+            assert!(outcome.completed);
+        }
+    }
+    assert!(
+        failures.is_empty(),
+        "{} latency scenario(s) diverged:\n{}",
+        failures.len(),
+        failures.join("\n")
+    );
+    // The headline relationship: observed latency == stencil distance for
+    // every in-loop detection.
+    for (predicted_d, observed_d) in latencies {
+        assert_eq!(predicted_d, observed_d);
+    }
+    let _ = std::fs::remove_dir_all(&cfg.run_dir);
+}

@@ -1,0 +1,135 @@
+//! The analytical model vs the paper's published numbers.
+//!
+//! Feeding the Table-3 parameters into Equations 1–14 must regenerate
+//! Table 4 and Table 5 of the paper to rounding tolerance (±0.02 h — the
+//! paper prints 2 decimals of hours computed from unrounded measurements),
+//! and the §4.4 thresholds to < 1 percentage point.
+
+use sedar::model::equations::*;
+use sedar::model::params::PaperApp;
+use sedar::model::tables::{table4, table5, threshold_x};
+
+const H: f64 = 3600.0;
+const TOL: f64 = 0.02; // hours
+
+fn check(label: &str, got_h: f64, want_h: f64) {
+    assert!(
+        (got_h - want_h).abs() <= TOL,
+        "{label}: got {got_h:.3} h, paper says {want_h:.2} h"
+    );
+}
+
+/// The paper's Table 4, verbatim (hours).
+const PAPER_TABLE4: [(&str, [f64; 3]); 12] = [
+    ("baseline fa", [10.22, 8.92, 11.15]),
+    ("baseline fp", [20.45, 17.85, 22.35]),
+    ("detect fa", [10.23, 8.97, 11.16]),
+    ("detect fp x=30", [13.29, 11.67, 14.50]),
+    ("detect fp x=50", [15.33, 13.46, 16.73]),
+    ("detect fp x=80", [18.39, 16.16, 20.08]),
+    ("sys fa", [10.26, 9.00, 11.17]),
+    ("sys fp k=0", [10.77, 9.50, 11.66]),
+    ("sys fp k=1", [12.27, 11.01, 13.17]),
+    ("sys fp k=4", [22.79, 21.53, 23.67]),
+    ("user fa", [10.37, 8.99, 11.16]),
+    ("user fp", [10.87, 9.50, 11.66]),
+];
+
+#[test]
+fn table4_reproduces_paper_values() {
+    let cols: Vec<(&str, sedar::model::Params)> = PaperApp::ALL
+        .iter()
+        .map(|a| (a.label(), a.paper_params()))
+        .collect();
+    let rows = table4(&cols);
+    assert_eq!(rows.len(), PAPER_TABLE4.len());
+    for (row, (label, want)) in rows.iter().zip(PAPER_TABLE4.iter()) {
+        for (col, (got, want)) in row.hours.iter().zip(want.iter()).enumerate() {
+            // The paper's own rounding wobbles by one hundredth in a few
+            // cells (values computed from unrounded measurements); the
+            // published SW baseline-fp cell (22.35) disagrees with its own
+            // Equation 2 inputs by 0.05 h — tolerate 0.06 there.
+            let tol = if *label == "baseline fp" { 0.06 } else { TOL };
+            assert!(
+                (got - want).abs() <= tol,
+                "Table4 '{label}' col {col}: got {got:.3}, paper {want:.2}"
+            );
+        }
+    }
+}
+
+#[test]
+fn table5_reproduces_paper_values_and_na_cells() {
+    let p = PaperApp::Jacobi.paper_params();
+    let t = table5(&p, &[0.3, 0.5, 0.8], 4);
+
+    // Only-detection column (Equation 4): 11.66 / 13.46 / 16.16.
+    check("t5 only-det x=30", t.only_detection[0], 11.66);
+    check("t5 only-det x=50", t.only_detection[1], 13.46);
+    check("t5 only-det x=80", t.only_detection[2], 16.16);
+
+    // Rollback columns (Equation 14): 9.50, 11.01, 13.52, 17.02, 21.53 —
+    // independent of X where admissible.
+    let want = [9.50, 11.01, 13.52, 17.02, 21.53];
+    for (k, want) in want.iter().enumerate() {
+        // X = 80 %: everything admissible.
+        let got = t.rollback[2][k].expect("admissible at x=80");
+        check(&format!("t5 k={k}"), got, *want);
+    }
+    // NA pattern: X=30 % admits k ≤ 1; X=50 % admits k ≤ 3.
+    assert!(t.rollback[0][0].is_some() && t.rollback[0][1].is_some());
+    assert!(t.rollback[0][2].is_none() && t.rollback[0][4].is_none());
+    assert!(t.rollback[1][3].is_some() && t.rollback[1][4].is_none());
+}
+
+#[test]
+fn section_4_4_thresholds() {
+    // "X ≤ 5.88 %", "X ≥ 22.67 %", "X ≥ 50.61 %" for the Jacobi parameters.
+    let p = PaperApp::Jacobi.paper_params();
+    let x0 = threshold_x(&p, 0) * 100.0;
+    let x1 = threshold_x(&p, 1) * 100.0;
+    let x2 = threshold_x(&p, 2) * 100.0;
+    assert!((x0 - 5.88).abs() < 1.0, "k=0 crossover: {x0:.2}% vs 5.88%");
+    assert!((x1 - 22.67).abs() < 1.0, "k=1 crossover: {x1:.2}% vs 22.67%");
+    assert!((x2 - 50.61).abs() < 1.0, "k=2 crossover: {x2:.2}% vs 50.61%");
+    // And §4.4's qualitative reading holds exactly:
+    // below x0 stop-and-relaunch wins over k=0 rollback.
+    assert!(eq4_detect_fp(&p, x0 / 100.0 * 0.9) < eq6_sys_fp(&p, 0));
+    assert!(eq4_detect_fp(&p, x0 / 100.0 * 1.1) > eq6_sys_fp(&p, 0));
+}
+
+#[test]
+fn table4_qualitative_claims() {
+    // §4.3's prose, checked as inequalities over the model:
+    for app in PaperApp::ALL {
+        let p = app.paper_params();
+        // "the detection mechanism performs better than the baseline for
+        //  all the applications, regardless of the time of detection"
+        for x in [0.3, 0.5, 0.8] {
+            assert!(eq4_detect_fp(&p, x) < eq2_baseline_fp(&p), "{}", app.label());
+        }
+        // "as long as the number of rollbacks is greater than 4, the time
+        //  spent in reworking is longer than the baseline strategy"
+        assert!(eq6_sys_fp(&p, 4) > eq2_baseline_fp(&p), "{}", app.label());
+        assert!(eq6_sys_fp(&p, 1) < eq2_baseline_fp(&p), "{}", app.label());
+        // "recovery from the last valid application-level checkpoint is
+        //  almost equal to recovery from the last system-level checkpoint"
+        assert!((eq8_user_fp(&p) - eq6_sys_fp(&p, 0)).abs() / H < 0.15, "{}", app.label());
+    }
+}
+
+#[test]
+fn aet_orders_strategies_at_high_fault_rates() {
+    // At MTBE ≈ job length, checkpointing strategies must beat both the
+    // baseline and detection-only on average execution time.
+    let p = PaperApp::Jacobi.paper_params();
+    let mtbe = p.t_prog; // one expected fault per run
+    let aet_base = sedar::model::aet(eq1_baseline_fa(&p), eq2_baseline_fp(&p), p.t_prog, mtbe);
+    let aet_det = sedar::model::aet(eq3_detect_fa(&p), eq4_detect_fp(&p, 0.5), p.t_prog, mtbe);
+    let aet_sys = sedar::model::aet(eq5_sys_fa(&p), eq6_sys_fp(&p, 0), p.t_prog, mtbe);
+    let aet_user = sedar::model::aet(eq7_user_fa(&p), eq8_user_fp(&p), p.t_prog, mtbe);
+    assert!(aet_sys < aet_det && aet_sys < aet_base);
+    assert!(aet_user < aet_det && aet_user < aet_base);
+    // And detection-only still beats the blind baseline.
+    assert!(aet_det < aet_base);
+}

@@ -1,0 +1,171 @@
+//! PJRT runtime integration: load the AOT HLO-text artifacts, execute them
+//! from rust, and check the numerics against the pure-rust fallbacks —
+//! the cross-layer contract (L1 Pallas == L2 jnp == L3 rust).
+//!
+//! These tests are skipped (not failed) when `artifacts/` has not been
+//! built; `make artifacts` generates it.
+
+use sedar::apps::oracle;
+use sedar::runtime::Engine;
+use sedar::state::Var;
+use sedar::util::prng::SplitMix64;
+
+fn engine() -> Option<Engine> {
+    let dir = Engine::default_artifact_dir();
+    if !Engine::artifacts_available(&dir) {
+        eprintln!("skipping: no artifacts at {} (run `make artifacts`)", dir.display());
+        return None;
+    }
+    Some(Engine::start(&dir).expect("engine starts"))
+}
+
+fn rand_f32(seed: u64, n: usize) -> Vec<f32> {
+    let mut rng = SplitMix64::new(seed);
+    let mut v = vec![0f32; n];
+    rng.fill_f32(&mut v);
+    v
+}
+
+#[test]
+fn matmul_artifact_matches_rust_oracle() {
+    let Some(engine) = engine() else { return };
+    let h = engine.handle();
+    let (r, n) = (4usize, 64usize);
+    let a = rand_f32(1, r * n);
+    let b = rand_f32(2, n * n);
+    let out = h
+        .execute(
+            "matmul_r4_n64",
+            vec![Var::f32(&[r, n], a.clone()), Var::f32(&[n, n], b.clone())],
+        )
+        .unwrap();
+    assert_eq!(out.len(), 1);
+    let got = out[0].buf.as_f32().unwrap();
+    let want = oracle::matmul_seq(&a, &b, r, n, n);
+    for (g, w) in got.iter().zip(&want) {
+        assert!((g - w).abs() <= 1e-3_f32.max(w.abs() * 1e-5), "{g} vs {w}");
+    }
+}
+
+#[test]
+fn jacobi_artifact_matches_rust_stencil() {
+    let Some(engine) = engine() else { return };
+    let h = engine.handle();
+    let (rows, n) = (16usize, 64usize);
+    let padded = rand_f32(3, (rows + 2) * n);
+    let out = h
+        .execute("jacobi_r16_n64", vec![Var::f32(&[rows + 2, n], padded.clone())])
+        .unwrap();
+    let got = out[0].buf.as_f32().unwrap();
+    // The rust fallback stencil from apps::jacobi (inline here).
+    for i in 0..rows {
+        let pi = i + 1;
+        for j in 0..n {
+            let left = if j > 0 { padded[pi * n + j - 1] } else { 0.0 };
+            let right = if j < n - 1 { padded[pi * n + j + 1] } else { 0.0 };
+            let want =
+                0.25 * (padded[(pi - 1) * n + j] + padded[(pi + 1) * n + j] + left + right);
+            let g = got[i * n + j];
+            assert!((g - want).abs() < 1e-5, "({i},{j}): {g} vs {want}");
+        }
+    }
+}
+
+#[test]
+fn sw_artifact_matches_rust_dp_block() {
+    let Some(engine) = engine() else { return };
+    let h = engine.handle();
+    let (br, bw) = (16usize, 16usize);
+    let mut rng = SplitMix64::new(4);
+    let s1: Vec<f32> = (0..br).map(|_| rng.below(4) as f32).collect();
+    let s2: Vec<f32> = (0..bw).map(|_| rng.below(4) as f32).collect();
+    let prev = vec![0f32; bw];
+    let left = vec![0f32; br + 1];
+    let out = h
+        .execute(
+            "sw_b16_w16",
+            vec![
+                Var::f32(&[br], s1.clone()),
+                Var::f32(&[bw], s2.clone()),
+                Var::f32(&[bw], prev.clone()),
+                Var::f32(&[br + 1], left.clone()),
+            ],
+        )
+        .unwrap();
+    assert_eq!(out.len(), 3);
+    // Rust scalar DP (the SwApp fallback, inlined).
+    let mut prev_r = prev.clone();
+    let mut frontier = vec![0f32; br + 1];
+    let mut best = 0f32;
+    let mut cur = vec![0f32; bw];
+    for i in 0..br {
+        for j in 0..bw {
+            let s = if s1[i] == s2[j] { 2.0 } else { -1.0 };
+            let diag = if j == 0 { left[i] } else { prev_r[j - 1] };
+            let up = prev_r[j];
+            let lf = if j == 0 { left[i + 1] } else { cur[j - 1] };
+            cur[j] = (diag + s).max(up - 1.0).max(lf - 1.0).max(0.0);
+            best = best.max(cur[j]);
+        }
+        prev_r.copy_from_slice(&cur);
+        frontier[i + 1] = cur[bw - 1];
+    }
+    assert_eq!(out[0].buf.as_f32().unwrap(), &prev_r[..], "prev_row");
+    let got_frontier = out[1].buf.as_f32().unwrap();
+    assert_eq!(&got_frontier[1..], &frontier[1..], "frontier");
+    assert_eq!(out[2].buf.as_f32().unwrap()[0], best, "block max");
+}
+
+#[test]
+fn validate_artifact_counts_mismatches() {
+    let Some(engine) = engine() else { return };
+    let h = engine.handle();
+    let n = 4096usize;
+    let a = rand_f32(7, n);
+    let mut b = a.clone();
+    b[100] += 1.0;
+    b[3000] -= 2.0;
+    let out = h
+        .execute(
+            "validate_n4096",
+            vec![Var::f32(&[n], a.clone()), Var::f32(&[n], b)],
+        )
+        .unwrap();
+    assert_eq!(out[0].buf.as_f32().unwrap()[0], 2.0);
+    // Checksum of `a` = sum a[i]*(i+1).
+    let want: f32 = a.iter().enumerate().map(|(i, x)| x * (i as f32 + 1.0)).sum();
+    let got = out[1].buf.as_f32().unwrap()[0];
+    assert!((got - want).abs() <= want.abs() * 1e-3 + 1e-2, "{got} vs {want}");
+}
+
+#[test]
+fn engine_reports_missing_artifacts() {
+    let Some(engine) = engine() else { return };
+    let h = engine.handle();
+    assert!(h.warm("no_such_artifact").is_err());
+    assert!(h.execute("no_such_artifact", vec![]).is_err());
+}
+
+#[test]
+fn engine_is_shareable_across_threads() {
+    let Some(engine) = engine() else { return };
+    let h = engine.handle();
+    let mut handles = Vec::new();
+    for t in 0..4 {
+        let h = h.clone();
+        handles.push(std::thread::spawn(move || {
+            let a = rand_f32(t, 4 * 64);
+            let b = rand_f32(t + 10, 64 * 64);
+            let out = h
+                .execute(
+                    "matmul_r4_n64",
+                    vec![Var::f32(&[4, 64], a), Var::f32(&[64, 64], b)],
+                )
+                .unwrap();
+            out[0].buf.as_f32().unwrap().len()
+        }));
+    }
+    for h in handles {
+        assert_eq!(h.join().unwrap(), 4 * 64);
+    }
+}

@@ -1,0 +1,261 @@
+//! End-to-end runs: every application × every strategy, fault-free and
+//! with injected faults, p2p and native collectives.
+
+use std::sync::Arc;
+
+use sedar::apps::spec::AppSpec;
+use sedar::apps::{JacobiApp, MatmulApp, SwApp};
+use sedar::config::{CollectiveImpl, RunConfig, Strategy};
+use sedar::coordinator::SedarRun;
+use sedar::error::FaultClass;
+use sedar::inject::{InjectKind, InjectPoint, InjectionSpec};
+
+fn cfg(tag: &str, strategy: Strategy) -> RunConfig {
+    let mut c = RunConfig::for_tests(tag);
+    c.strategy = strategy;
+    c
+}
+
+fn apps() -> Vec<Arc<dyn AppSpec>> {
+    vec![
+        Arc::new(MatmulApp::new(64, 4)),
+        Arc::new(JacobiApp::new(64, 4, 6, 3)),
+        Arc::new(SwApp::new(64, 4, 16, 2)),
+    ]
+}
+
+#[test]
+fn every_app_every_strategy_fault_free() {
+    for app in apps() {
+        for strategy in [
+            Strategy::Baseline,
+            Strategy::DetectOnly,
+            Strategy::SysCkpt,
+            Strategy::UserCkpt,
+        ] {
+            let tag = format!("e2e-{}-{}", app.name(), strategy.label());
+            let outcome = SedarRun::new(app.clone(), cfg(&tag, strategy), None)
+                .run()
+                .unwrap();
+            assert!(outcome.completed, "{tag}: did not complete");
+            assert_eq!(outcome.result_correct, Some(true), "{tag}: wrong result");
+            assert_eq!(outcome.restarts, 0, "{tag}: unexpected restarts");
+            assert!(outcome.detections.is_empty(), "{tag}: spurious detection");
+        }
+    }
+}
+
+#[test]
+fn native_collectives_fault_free_all_apps() {
+    for app in apps() {
+        let mut c = cfg(&format!("e2e-native-{}", app.name()), Strategy::SysCkpt);
+        c.collectives = CollectiveImpl::Native;
+        let outcome = SedarRun::new(app.clone(), c, None).run().unwrap();
+        assert_eq!(outcome.result_correct, Some(true), "{}", app.name());
+    }
+}
+
+fn matmul_fsc_spec() -> InjectionSpec {
+    // C(M) corrupted between GATHER and CK3 (the paper's Scenario 50).
+    InjectionSpec {
+        name: "fsc-c".into(),
+        point: InjectPoint::BeforePhase(sedar::apps::matmul::phases::CK3),
+        rank: 0,
+        replica: 1,
+        kind: InjectKind::BitFlip {
+            var: "C".into(),
+            elem: 11,
+            bit: 30,
+        },
+    }
+}
+
+#[test]
+fn detect_only_safe_stops_then_relaunches() {
+    let app: Arc<dyn AppSpec> = Arc::new(MatmulApp::new(64, 4));
+    let outcome = SedarRun::new(
+        app,
+        cfg("detect-fsc", Strategy::DetectOnly),
+        Some(matmul_fsc_spec()),
+    )
+    .run()
+    .unwrap();
+    assert!(outcome.completed);
+    assert_eq!(outcome.result_correct, Some(true));
+    assert_eq!(outcome.restarts, 1); // one relaunch from scratch
+    assert_eq!(outcome.detections.len(), 1);
+    assert_eq!(outcome.detections[0].class, FaultClass::Fsc);
+    assert_eq!(outcome.detections[0].site, "VALIDATE");
+    assert!(matches!(
+        outcome.resume_history[0],
+        sedar::recovery::ResumeFrom::Scratch
+    ));
+}
+
+#[test]
+fn sysckpt_walks_dirty_checkpoint() {
+    let app: Arc<dyn AppSpec> = Arc::new(MatmulApp::new(64, 4));
+    let outcome = SedarRun::new(
+        app,
+        cfg("sys-fsc", Strategy::SysCkpt),
+        Some(matmul_fsc_spec()),
+    )
+    .run()
+    .unwrap();
+    // Figure 2(b): CK3 dirty → 2 rollbacks, recovery from CK2.
+    assert_eq!(outcome.restarts, 2);
+    assert_eq!(outcome.result_correct, Some(true));
+    assert_eq!(outcome.detections.len(), 2);
+    assert!(matches!(
+        outcome.resume_history.last().unwrap(),
+        sedar::recovery::ResumeFrom::SysCkpt(2)
+    ));
+}
+
+#[test]
+fn userckpt_catches_corruption_at_checkpoint_validation() {
+    let app: Arc<dyn AppSpec> = Arc::new(MatmulApp::new(64, 4));
+    let outcome = SedarRun::new(
+        app,
+        cfg("user-fsc", Strategy::UserCkpt),
+        Some(matmul_fsc_spec()),
+    )
+    .run()
+    .unwrap();
+    // Algorithm 2: the corrupted candidate is caught AT CK3, never stored;
+    // exactly one rollback to the last valid checkpoint (CK2).
+    assert_eq!(outcome.restarts, 1);
+    assert_eq!(outcome.result_correct, Some(true));
+    assert_eq!(outcome.detections[0].class, FaultClass::CkptCorrupt);
+    assert_eq!(outcome.detections[0].site, "CK3");
+    assert!(matches!(
+        outcome.resume_history[0],
+        sedar::recovery::ResumeFrom::UserCkpt(2)
+    ));
+}
+
+#[test]
+fn baseline_votes_out_a_corrupted_instance() {
+    let app: Arc<dyn AppSpec> = Arc::new(MatmulApp::new(64, 4));
+    // Corrupt instance 1's C near the end: the two instances disagree at
+    // the final comparison, the third run + vote picks the clean pair.
+    let spec = InjectionSpec {
+        replica: 1, // instance 1
+        ..matmul_fsc_spec()
+    };
+    let outcome = SedarRun::new(app, cfg("baseline-vote", Strategy::Baseline), Some(spec))
+        .run()
+        .unwrap();
+    assert!(outcome.completed);
+    assert_eq!(outcome.attempts, 3); // two instances + tie-breaker
+    assert_eq!(outcome.result_correct, Some(true));
+}
+
+#[test]
+fn jacobi_tdc_detected_at_next_halo_exchange() {
+    let app = JacobiApp::new(64, 4, 6, 3);
+    let phase = app.cursor_of("ITER4");
+    let spec = InjectionSpec {
+        name: "jacobi-halo".into(),
+        point: InjectPoint::BeforePhase(phase),
+        rank: 1,
+        replica: 1,
+        kind: InjectKind::BitFlip {
+            var: "grid".into(),
+            elem: 3, // row 0 → goes out with the next top-halo send
+            bit: 30,
+        },
+    };
+    let outcome = SedarRun::new(
+        Arc::new(app),
+        cfg("jacobi-tdc", Strategy::SysCkpt),
+        Some(spec),
+    )
+    .run()
+    .unwrap();
+    assert_eq!(outcome.result_correct, Some(true));
+    assert_eq!(outcome.detections[0].class, FaultClass::Tdc);
+    assert_eq!(outcome.detections[0].site, "ITER4");
+    assert_eq!(outcome.restarts, 1); // CK0 (after ITER2) is clean
+}
+
+#[test]
+fn sw_frontier_corruption_detected_downstream_send() {
+    let app = SwApp::new(64, 4, 16, 2);
+    let phase = app.cursor_of("BLOCK2");
+    let spec = InjectionSpec {
+        name: "sw-front".into(),
+        point: InjectPoint::BeforePhase(phase),
+        rank: 1,
+        replica: 1,
+        kind: InjectKind::BitFlip {
+            // The band's last-column carry: its value at block entry is
+            // copied verbatim into frontier[0] of the outgoing message, so
+            // the corruption is guaranteed to reach the downstream compare
+            // (an interior element can be absorbed by the DP's max/clamp).
+            var: "prev_row".into(),
+            elem: 15, // band_width - 1
+            bit: 30,
+        },
+    };
+    let outcome = SedarRun::new(
+        Arc::new(app),
+        cfg("sw-tdc", Strategy::SysCkpt),
+        Some(spec),
+    )
+    .run()
+    .unwrap();
+    assert_eq!(outcome.result_correct, Some(true));
+    assert_eq!(outcome.detections[0].class, FaultClass::Tdc);
+    assert_eq!(outcome.detections[0].site, "BLOCK2");
+}
+
+#[test]
+fn exhausted_attempts_give_up_cleanly() {
+    // A fault is detected on every attempt when max_attempts is too small
+    // to reach a clean re-execution: the coordinator must give up with a
+    // truthful outcome rather than loop or panic.
+    let app: Arc<dyn AppSpec> = Arc::new(MatmulApp::new(64, 4));
+    let mut cfg = cfg("give-up", Strategy::SysCkpt);
+    cfg.max_attempts = 1; // detection on attempt 1 → no budget to recover
+    let outcome = SedarRun::new(app, cfg, Some(matmul_fsc_spec()))
+        .run()
+        .unwrap();
+    assert!(!outcome.completed);
+    assert_eq!(outcome.attempts, 1);
+    assert_eq!(outcome.detections.len(), 1);
+    assert_eq!(outcome.result_correct, None);
+    assert!(outcome.summary().contains("GAVE UP"));
+}
+
+#[test]
+fn sha256_validation_mode_detects_too() {
+    // The RedMPI-style hashed validation catches the same divergence.
+    let app: Arc<dyn AppSpec> = Arc::new(MatmulApp::new(64, 4));
+    let mut cfg = cfg("sha-mode", Strategy::SysCkpt);
+    cfg.validation = sedar::detect::ValidationMode::Sha256;
+    let outcome = SedarRun::new(app, cfg, Some(matmul_fsc_spec()))
+        .run()
+        .unwrap();
+    assert_eq!(outcome.result_correct, Some(true));
+    assert_eq!(outcome.detections[0].class, FaultClass::Fsc);
+    assert_eq!(outcome.restarts, 2);
+}
+
+#[test]
+fn run_summary_is_informative() {
+    let app: Arc<dyn AppSpec> = Arc::new(MatmulApp::new(64, 4));
+    let outcome = SedarRun::new(app, cfg("summary", Strategy::SysCkpt), Some(matmul_fsc_spec()))
+        .run()
+        .unwrap();
+    let s = outcome.summary();
+    assert!(s.contains("matmul"));
+    assert!(s.contains("sys-ckpt"));
+    assert!(s.contains("FSC@VALIDATE"));
+    assert!(s.contains("CORRECT"));
+    // Figure-3-style trace exists and mentions the key events.
+    assert!(outcome.trace_dump.contains("INJECTED"));
+    assert!(outcome.trace_dump.contains("system checkpoint #3 stored"));
+    assert!(outcome.trace_dump.contains("FAULT FSC detected at VALIDATE"));
+    assert!(outcome.trace_dump.contains("resume from sys-ck2"));
+}

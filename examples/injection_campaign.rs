@@ -1,9 +1,11 @@
-//! The 64-scenario injection campaign (§4.1–4.2, Table 2 + Figure 3).
+//! The parallel injection campaign (§4.1–4.2, Table 2 + Figure 3).
 //!
-//! Builds the full workfault catalog over the matmul test application,
-//! injects every scenario for real under the multiple-system-level-
-//! checkpoint strategy, and checks the observed effect, detection point,
-//! recovery point and rollback count against the analytical predictions.
+//! Runs the 64-scenario workfault over the matmul test application under
+//! the multiple-system-level-checkpoint strategy through the campaign
+//! engine (`sedar::campaign`): a worker pool fans the scenarios out, each
+//! in an isolated world, and the aggregated report is checked against the
+//! §4.1 prediction oracle. With a scenario id argument, a single scenario
+//! runs serially and the Figure-3-style execution trace is printed.
 //!
 //! ```text
 //! cargo run --release --example injection_campaign            # all 64
@@ -12,46 +14,58 @@
 //!                                                             # style trace
 //! ```
 
-use sedar::apps::matmul::MatmulApp;
+use sedar::campaign::{self, CampaignSpec};
 use sedar::config::RunConfig;
+use sedar::error::SedarError;
 use sedar::workfault;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> sedar::Result<()> {
     let only: Option<u32> = std::env::args().nth(1).and_then(|s| s.parse().ok());
-    let app = MatmulApp::new(64, 4);
-    let mut cfg = RunConfig::default();
-    cfg.run_dir = format!("runs/example-campaign-{}", std::process::id()).into();
 
-    let catalog = workfault::catalog(&app);
-    println!("{}", workfault::table2_header());
-    let mut passed = 0;
-    let mut failed = 0;
-    for sc in &catalog {
-        if let Some(id) = only {
-            if sc.id != id {
-                continue;
-            }
-        }
-        let r = workfault::run_scenario(&app, sc, &cfg)?;
+    if let Some(id) = only {
+        // Single-scenario mode: serial run, full Figure-3 trace.
+        let app = campaign::campaign_matmul();
+        let cfg = RunConfig {
+            run_dir: format!("runs/example-campaign-{}", std::process::id()).into(),
+            ..RunConfig::default()
+        };
+        let sc = workfault::catalog(&app)
+            .into_iter()
+            .find(|s| s.id == id)
+            .ok_or_else(|| SedarError::Config(format!("no scenario {id}")))?;
+        println!("{}", workfault::table2_header());
+        let r = workfault::run_scenario(&app, &sc, &cfg)?;
         println!("{}  →  {}", sc.row(), if r.pass { "OK" } else { "MISMATCH" });
         for m in &r.mismatches {
             println!("    ! {m}");
         }
-        if only.is_some() {
-            // The Figure-3 artifact: the full event log of this experiment.
-            println!("\n--- execution trace (cf. paper Figure 3) ---");
-            println!("{}", r.outcome.trace_dump);
+        println!("\n--- execution trace (cf. paper Figure 3) ---");
+        println!("{}", r.outcome.trace_dump);
+        let _ = std::fs::remove_dir_all(&cfg.run_dir);
+        if !r.pass {
+            return Err(SedarError::Config(
+                "scenario diverged from the prediction".into(),
+            ));
         }
-        if r.pass {
-            passed += 1
-        } else {
-            failed += 1
-        }
+        return Ok(());
     }
-    println!("\ncampaign: {passed} passed, {failed} failed");
-    let _ = std::fs::remove_dir_all(&cfg.run_dir);
-    if failed > 0 {
-        anyhow::bail!("{failed} scenario(s) diverged from the prediction");
+
+    // Full campaign: matmul × sys-ckpt × all 64 scenarios, in parallel.
+    let mut spec = CampaignSpec::new(0xC0FFEE);
+    spec.apply_filter("app=matmul,strategy=sys")?;
+    spec.jobs = CampaignSpec::default_jobs();
+    spec.echo = true;
+    spec.base.run_dir = format!("runs/example-campaign-{}", std::process::id()).into();
+
+    let report = campaign::run_campaign(&spec)?;
+    println!("{}", report.deterministic_report());
+    println!("\n{}", report.summary_line());
+    let _ = std::fs::remove_dir_all(&spec.base.run_dir);
+    if !report.verdict() {
+        return Err(SedarError::Config(format!(
+            "{} scenario(s) diverged from the prediction",
+            report.failed()
+        )));
     }
     Ok(())
 }

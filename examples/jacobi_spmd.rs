@@ -16,11 +16,12 @@ use sedar::apps::spec::AppSpec;
 use sedar::apps::JacobiApp;
 use sedar::config::{RunConfig, Strategy};
 use sedar::coordinator::SedarRun;
+use sedar::error::SedarError;
 use sedar::inject::{InjectKind, InjectPoint, InjectionSpec};
 use sedar::report::Table;
 use sedar::runtime::Engine;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> sedar::Result<()> {
     let app = Arc::new(JacobiApp::new(128, 4, 24, 8)); // 24 iters, ck every 8
     let artifacts = Engine::default_artifact_dir();
     let use_xla = Engine::artifacts_available(&artifacts);
@@ -44,18 +45,23 @@ fn main() -> anyhow::Result<()> {
         },
     };
 
-    let mut table = Table::new(&["strategy", "attempts", "restarts", "detected", "resumes", "wall"]);
+    let mut table = Table::new(&[
+        "strategy", "attempts", "restarts", "detected", "resumes", "wall",
+    ]);
     for strategy in [Strategy::DetectOnly, Strategy::SysCkpt, Strategy::UserCkpt] {
-        let mut cfg = RunConfig::default();
-        cfg.strategy = strategy;
-        cfg.use_xla = use_xla;
-        cfg.run_dir = format!("runs/example-jacobi-{}", strategy.label()).into();
+        let cfg = RunConfig {
+            strategy,
+            use_xla,
+            run_dir: format!("runs/example-jacobi-{}", strategy.label()).into(),
+            ..RunConfig::default()
+        };
         let outcome = SedarRun::new(app.clone(), cfg, Some(spec.clone())).run()?;
-        anyhow::ensure!(
-            outcome.result_correct == Some(true),
-            "{}: wrong result",
-            strategy.label()
-        );
+        if outcome.result_correct != Some(true) {
+            return Err(SedarError::Config(format!(
+                "{}: wrong result",
+                strategy.label()
+            )));
+        }
         table.row(&[
             strategy.label().to_string(),
             outcome.attempts.to_string(),

@@ -44,7 +44,7 @@ fn fsc_injection() -> InjectionSpec {
     }
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> sedar::Result<()> {
     let n = 256;
     let nranks = 4;
     let app = Arc::new(MatmulApp::new(n, nranks));
@@ -69,24 +69,29 @@ fn main() -> anyhow::Result<()> {
         "wall",
     ]);
 
-    let mut run_one = |strategy: Strategy, inject: bool| -> anyhow::Result<()> {
-        let mut cfg = RunConfig::default();
-        cfg.strategy = strategy;
-        cfg.use_xla = use_xla;
-        cfg.artifact_dir = artifacts.clone();
-        cfg.run_dir = PathBuf::from(format!(
-            "runs/quickstart-{}-{}",
-            strategy.label(),
-            if inject { "fault" } else { "clean" }
-        ));
-        cfg.echo_trace = inject && strategy == Strategy::SysCkpt;
+    let mut run_one = |strategy: Strategy, inject: bool| -> sedar::Result<()> {
+        let cfg = RunConfig {
+            strategy,
+            use_xla,
+            artifact_dir: artifacts.clone(),
+            run_dir: PathBuf::from(format!(
+                "runs/quickstart-{}-{}",
+                strategy.label(),
+                if inject { "fault" } else { "clean" }
+            )),
+            echo_trace: inject && strategy == Strategy::SysCkpt,
+            ..RunConfig::default()
+        };
         let injection = inject.then(fsc_injection);
         if cfg.echo_trace {
             println!("\n--- live trace: {} with injected FSC ---", strategy.label());
         }
         let outcome = SedarRun::new(app.clone(), cfg, injection).run()?;
         if outcome.result_correct != Some(true) {
-            anyhow::bail!("{}: wrong result!", strategy.label());
+            return Err(sedar::SedarError::Config(format!(
+                "{}: wrong result!",
+                strategy.label()
+            )));
         }
         table.row(&[
             strategy.label().to_string(),

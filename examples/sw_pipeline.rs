@@ -16,11 +16,12 @@ use sedar::apps::spec::AppSpec;
 use sedar::apps::SwApp;
 use sedar::config::{RunConfig, Strategy};
 use sedar::coordinator::SedarRun;
+use sedar::error::SedarError;
 use sedar::inject::{InjectKind, InjectPoint, InjectionSpec};
 use sedar::report::Table;
 use sedar::runtime::Engine;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> sedar::Result<()> {
     // 512-symbol sequences, 4 column bands of width 128, 8 row blocks of 64,
     // checkpoint every 2 blocks.
     let app = Arc::new(SwApp::new(512, 4, 64, 2));
@@ -52,16 +53,19 @@ fn main() -> anyhow::Result<()> {
 
     let mut table = Table::new(&["strategy", "attempts", "restarts", "detected", "wall"]);
     for strategy in [Strategy::DetectOnly, Strategy::SysCkpt, Strategy::UserCkpt] {
-        let mut cfg = RunConfig::default();
-        cfg.strategy = strategy;
-        cfg.use_xla = use_xla;
-        cfg.run_dir = format!("runs/example-sw-{}", strategy.label()).into();
+        let cfg = RunConfig {
+            strategy,
+            use_xla,
+            run_dir: format!("runs/example-sw-{}", strategy.label()).into(),
+            ..RunConfig::default()
+        };
         let outcome = SedarRun::new(app.clone(), cfg, Some(spec.clone())).run()?;
-        anyhow::ensure!(
-            outcome.result_correct == Some(true),
-            "{}: wrong result",
-            strategy.label()
-        );
+        if outcome.result_correct != Some(true) {
+            return Err(SedarError::Config(format!(
+                "{}: wrong result",
+                strategy.label()
+            )));
+        }
         table.row(&[
             strategy.label().to_string(),
             outcome.attempts.to_string(),

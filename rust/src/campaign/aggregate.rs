@@ -1,0 +1,233 @@
+//! Campaign aggregation: merge per-task outcomes — in task order, never in
+//! completion order — into the paper's Table-2-style report rows, a per-
+//! (app × strategy) summary, and the campaign-level verdict.
+//!
+//! The rendered report is **deterministic by construction**: it contains no
+//! wall-clock content, and every row derives from fields the shard computed
+//! from seeds and dataflow alone. Two sweeps with the same spec must render
+//! byte-identical reports whatever `--jobs` was.
+
+use crate::error::FaultClass;
+use crate::report::Table;
+
+use super::shard::TaskOutcome;
+
+/// The aggregated result of a campaign.
+#[derive(Debug)]
+pub struct CampaignReport {
+    pub seed: u64,
+    /// All task outcomes, sorted by task index.
+    pub outcomes: Vec<TaskOutcome>,
+}
+
+/// Merge outcome shards (e.g. from partial sweeps run elsewhere) into the
+/// canonical task order. Idempotent on already-sorted input.
+pub fn merge(shards: Vec<Vec<TaskOutcome>>) -> Vec<TaskOutcome> {
+    let mut all: Vec<TaskOutcome> = shards.into_iter().flatten().collect();
+    all.sort_by_key(|o| o.index);
+    all
+}
+
+impl CampaignReport {
+    pub fn new(seed: u64, outcomes: Vec<TaskOutcome>) -> CampaignReport {
+        let outcomes = merge(vec![outcomes]);
+        CampaignReport { seed, outcomes }
+    }
+
+    pub fn passed(&self) -> usize {
+        self.outcomes.iter().filter(|o| o.pass).count()
+    }
+
+    pub fn failed(&self) -> usize {
+        self.outcomes.len() - self.passed()
+    }
+
+    /// Campaign-level verdict against the §4.1 oracle: every cell behaved.
+    pub fn verdict(&self) -> bool {
+        self.failed() == 0
+    }
+
+    /// One-line operator summary.
+    pub fn summary_line(&self) -> String {
+        format!(
+            "campaign seed {}: {} task(s), {} passed, {} failed",
+            self.seed,
+            self.outcomes.len(),
+            self.passed(),
+            self.failed()
+        )
+    }
+
+    /// Per-(app × strategy) rollup, in task order of first appearance.
+    fn rollup(&self) -> Table {
+        let mut keys: Vec<(String, String)> = Vec::new();
+        for o in &self.outcomes {
+            let k = (o.app.label().to_string(), o.strategy.label().to_string());
+            if !keys.contains(&k) {
+                keys.push(k);
+            }
+        }
+        let mut t = Table::new(&[
+            "app", "strategy", "tasks", "passed", "failed", "TDC", "FSC", "TOE", "CKPT", "latent",
+        ]);
+        for (app, strategy) in keys {
+            let cell: Vec<&TaskOutcome> = self
+                .outcomes
+                .iter()
+                .filter(|o| o.app.label() == app && o.strategy.label() == strategy)
+                .collect();
+            let by_class = |c: FaultClass| {
+                cell.iter()
+                    .filter(|o| matches!(&o.first_detection, Some((got, _)) if *got == c))
+                    .count()
+            };
+            let latent = cell.iter().filter(|o| o.first_detection.is_none()).count();
+            t.row(&[
+                app.clone(),
+                strategy.clone(),
+                cell.len().to_string(),
+                cell.iter().filter(|o| o.pass).count().to_string(),
+                cell.iter().filter(|o| !o.pass).count().to_string(),
+                by_class(FaultClass::Tdc).to_string(),
+                by_class(FaultClass::Fsc).to_string(),
+                by_class(FaultClass::Toe).to_string(),
+                by_class(FaultClass::CkptCorrupt).to_string(),
+                latent.to_string(),
+            ]);
+        }
+        t
+    }
+
+    /// Per-task observed rows (the Table-2/4/5 shape: scenario, cell,
+    /// observed effect and site, recovery path, verdict).
+    fn rows(&self) -> Table {
+        let mut t = Table::new(&[
+            "task", "sc", "app", "strategy", "observed", "site", "resume", "N_roll", "result",
+            "verdict",
+        ]);
+        for o in &self.outcomes {
+            let (class, site) = match &o.first_detection {
+                Some((c, s)) => (c.to_string(), s.clone()),
+                None => ("-".to_string(), "-".to_string()),
+            };
+            t.row(&[
+                o.index.to_string(),
+                o.scenario_id.to_string(),
+                o.app.label().to_string(),
+                o.strategy.label().to_string(),
+                class,
+                site,
+                o.last_resume
+                    .map(|r| r.to_string())
+                    .unwrap_or_else(|| "-".to_string()),
+                o.restarts.to_string(),
+                match o.correct {
+                    Some(true) => "correct",
+                    Some(false) => "WRONG",
+                    None => "n/a",
+                }
+                .to_string(),
+                if o.pass { "OK" } else { "MISMATCH" }.to_string(),
+            ]);
+        }
+        t
+    }
+
+    /// The full deterministic report (markdown). No wall-clock content.
+    pub fn deterministic_report(&self) -> String {
+        let mut s = format!(
+            "# SEDAR campaign report\n\nseed: {}\ntasks: {}\npassed: {}\nfailed: {}\n\n\
+             ## Per app × strategy\n\n{}\n## Per task\n\n{}",
+            self.seed,
+            self.outcomes.len(),
+            self.passed(),
+            self.failed(),
+            self.rollup().markdown(),
+            self.rows().markdown(),
+        );
+        let failures: Vec<&TaskOutcome> = self.outcomes.iter().filter(|o| !o.pass).collect();
+        if !failures.is_empty() {
+            s.push_str("\n## Mismatches\n\n");
+            for o in failures {
+                for m in &o.mismatches {
+                    s.push_str(&format!(
+                        "- task {} (sc{} {} × {}): {}\n",
+                        o.index,
+                        o.scenario_id,
+                        o.app.label(),
+                        o.strategy.label(),
+                        m
+                    ));
+                }
+            }
+        }
+        s
+    }
+
+    /// The per-task rows as CSV (same determinism contract).
+    pub fn csv(&self) -> String {
+        self.rows().csv()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::time::Duration;
+
+    use super::*;
+    use crate::campaign::CampaignApp;
+    use crate::config::Strategy;
+
+    fn outcome(index: usize, pass: bool) -> TaskOutcome {
+        TaskOutcome {
+            index,
+            scenario_id: index as u32 + 1,
+            app: CampaignApp::Matmul,
+            strategy: Strategy::SysCkpt,
+            completed: true,
+            restarts: 1,
+            injected: true,
+            correct: Some(true),
+            first_detection: Some((FaultClass::Tdc, "SCATTER".into())),
+            last_resume: None,
+            pass,
+            mismatches: if pass { vec![] } else { vec!["boom".into()] },
+            wall: Duration::from_millis(index as u64),
+        }
+    }
+
+    #[test]
+    fn merge_restores_task_order() {
+        let merged = merge(vec![
+            vec![outcome(3, true), outcome(1, true)],
+            vec![outcome(0, true), outcome(2, true)],
+        ]);
+        let idx: Vec<usize> = merged.iter().map(|o| o.index).collect();
+        assert_eq!(idx, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn report_counts_and_verdict() {
+        let r = CampaignReport::new(9, vec![outcome(0, true), outcome(1, false)]);
+        assert_eq!(r.passed(), 1);
+        assert_eq!(r.failed(), 1);
+        assert!(!r.verdict());
+        let text = r.deterministic_report();
+        assert!(text.contains("## Mismatches"));
+        assert!(text.contains("boom"));
+        assert!(r.summary_line().contains("1 failed"));
+    }
+
+    #[test]
+    fn report_excludes_wall_clock() {
+        // Two outcomes identical but for wall time must render identically.
+        let mut a = outcome(0, true);
+        let mut b = outcome(0, true);
+        a.wall = Duration::from_millis(1);
+        b.wall = Duration::from_millis(999);
+        let ra = CampaignReport::new(1, vec![a]).deterministic_report();
+        let rb = CampaignReport::new(1, vec![b]).deterministic_report();
+        assert_eq!(ra, rb);
+        assert!(CampaignReport::new(1, vec![outcome(0, true)]).csv().contains("SCATTER"));
+    }
+}

@@ -1,0 +1,326 @@
+//! The parallel campaign engine: the 64-scenario workfault catalog (§4.1)
+//! swept across the three benchmark applications and the three SEDAR
+//! protection strategies, fanned over a bounded worker pool.
+//!
+//! The paper validates SEDAR by exhaustively exercising every scenario of
+//! the workfault against each application and protection level (§4.1–§4.2).
+//! This module makes that sweep a first-class subsystem:
+//!
+//! * [`CampaignSpec`] names the cross-product to run (scenarios × apps ×
+//!   strategies) plus the base [`RunConfig`] every task derives from;
+//! * [`shard`] executes one task in an isolated `SedarRun` world, with a
+//!   deterministic per-task seed derived as
+//!   `hash(campaign_seed, scenario, app, strategy)` — no wall-clock in any
+//!   decision path;
+//! * [`scheduler`] fans tasks across `jobs` workers pulling from a shared
+//!   queue, all worlds borrowing one injected engine handle
+//!   ([`crate::coordinator::RunDeps`]);
+//! * [`aggregate`] merges per-task outcomes in task order — independent of
+//!   completion order — into the paper's Table-2-style report rows and a
+//!   campaign-level verdict against the §4.1 prediction oracle.
+//!
+//! Determinism contract: the same spec (seed, filters) produces a
+//! byte-identical [`aggregate::CampaignReport::deterministic_report`]
+//! regardless of `jobs` (`rust/tests/campaign_determinism.rs`).
+
+pub mod aggregate;
+pub mod scheduler;
+pub mod shard;
+
+pub use aggregate::CampaignReport;
+pub use scheduler::run_campaign;
+pub use shard::{CampaignTask, TaskOutcome};
+
+use std::sync::Arc;
+
+use crate::apps::spec::AppSpec;
+use crate::apps::{JacobiApp, MatmulApp, SwApp};
+use crate::config::{RunConfig, Strategy};
+use crate::error::{Result, SedarError};
+use crate::util::prng::SplitMix64;
+use crate::workfault::{self, Scenario};
+
+/// Which benchmark application a campaign task drives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum CampaignApp {
+    Matmul,
+    Jacobi,
+    Sw,
+}
+
+impl CampaignApp {
+    pub const ALL: [CampaignApp; 3] = [CampaignApp::Matmul, CampaignApp::Jacobi, CampaignApp::Sw];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            CampaignApp::Matmul => "matmul",
+            CampaignApp::Jacobi => "jacobi",
+            CampaignApp::Sw => "sw",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<CampaignApp> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "matmul" => CampaignApp::Matmul,
+            "jacobi" => CampaignApp::Jacobi,
+            "sw" => CampaignApp::Sw,
+            other => {
+                return Err(SedarError::Config(format!(
+                    "unknown app '{other}' (matmul|jacobi|sw)"
+                )))
+            }
+        })
+    }
+
+    /// Stable ordinal, folded into the per-task seed.
+    pub fn ordinal(self) -> u64 {
+        match self {
+            CampaignApp::Matmul => 0,
+            CampaignApp::Jacobi => 1,
+            CampaignApp::Sw => 2,
+        }
+    }
+
+    /// The campaign-geometry instance: small enough that the full 576-task
+    /// sweep completes in minutes, large enough that every scenario is live
+    /// (matmul needs ≥ 2 workers for the catalog; jacobi/sw need mid-run
+    /// checkpoints for the recovery strategies to differ).
+    pub fn instantiate(self) -> Arc<dyn AppSpec> {
+        match self {
+            CampaignApp::Matmul => Arc::new(campaign_matmul()),
+            CampaignApp::Jacobi => Arc::new(JacobiApp::new(64, 4, 8, 4)),
+            CampaignApp::Sw => Arc::new(SwApp::new(64, 4, 16, 2)),
+        }
+    }
+}
+
+/// The matmul geometry the scenario catalog is materialized over.
+pub fn campaign_matmul() -> MatmulApp {
+    MatmulApp::new(64, 4)
+}
+
+/// The three protection strategies the sweep covers (§4.2). The baseline is
+/// excluded: it has no detection machinery to validate.
+pub const STRATEGIES: [Strategy; 3] = [
+    Strategy::DetectOnly,
+    Strategy::SysCkpt,
+    Strategy::UserCkpt,
+];
+
+/// Stable strategy ordinal, folded into the per-task seed.
+pub fn strategy_ordinal(s: Strategy) -> u64 {
+    match s {
+        Strategy::Baseline => 0,
+        Strategy::DetectOnly => 1,
+        Strategy::SysCkpt => 2,
+        Strategy::UserCkpt => 3,
+    }
+}
+
+/// Fold one field into a running hash (SplitMix64 finalizer — the same
+/// generator the workload seeds use, so the whole campaign stays
+/// reproducible from one number).
+fn fold(h: u64, v: u64) -> u64 {
+    SplitMix64::new(h ^ v.wrapping_mul(0x9E37_79B9_7F4A_7C15)).next_u64()
+}
+
+/// The per-task deterministic seed:
+/// `hash(campaign_seed, scenario_id, app, strategy)`.
+///
+/// Every task's workload generation, injection-site choice and run
+/// directory derive from this value alone — never from wall-clock time or
+/// scheduling order — which is what makes the aggregated report invariant
+/// under `--jobs`.
+pub fn task_seed(
+    campaign_seed: u64,
+    scenario_id: u32,
+    app: CampaignApp,
+    strategy: Strategy,
+) -> u64 {
+    let h = fold(campaign_seed, 0x5EDA_2C01);
+    let h = fold(h, scenario_id as u64 + 1);
+    let h = fold(h, app.ordinal() + 1);
+    fold(h, strategy_ordinal(strategy) + 1)
+}
+
+/// What to sweep and how wide to fan out.
+#[derive(Debug, Clone)]
+pub struct CampaignSpec {
+    /// Campaign master seed (every task seed derives from it).
+    pub seed: u64,
+    /// Worker threads (each runs one isolated world at a time).
+    pub jobs: usize,
+    /// Applications to sweep (task order follows this list's order).
+    pub apps: Vec<CampaignApp>,
+    /// Strategies to sweep (task order follows this list's order).
+    pub strategies: Vec<Strategy>,
+    /// Keep only these scenario ids (`None` = the full 64).
+    pub scenarios: Option<Vec<u32>>,
+    /// Base config every task derives from. `base.run_dir` is the campaign
+    /// root (each task gets an isolated subdirectory); `base.strategy` and
+    /// `base.seed` are overridden per task.
+    pub base: RunConfig,
+    /// Print one progress line per finished task.
+    pub echo: bool,
+}
+
+impl CampaignSpec {
+    /// The full sweep: 64 scenarios × 3 apps × 3 strategies.
+    pub fn new(seed: u64) -> CampaignSpec {
+        let base = RunConfig {
+            // Generous rendezvous lapse: a loaded worker pool must never
+            // turn a healthy-but-descheduled sibling into a spurious TOE
+            // (that would break the jobs-invariance of the report).
+            toe_timeout: std::time::Duration::from_millis(2000),
+            run_dir: std::path::PathBuf::from("runs/campaign"),
+            ..RunConfig::default()
+        };
+        CampaignSpec {
+            seed,
+            jobs: 1,
+            apps: CampaignApp::ALL.to_vec(),
+            strategies: STRATEGIES.to_vec(),
+            scenarios: None,
+            base,
+            echo: false,
+        }
+    }
+
+    /// Sensible worker-pool width for interactive use: the machine's
+    /// parallelism, capped at 8 (beyond that the tiny worlds contend more
+    /// than they gain).
+    pub fn default_jobs() -> usize {
+        std::thread::available_parallelism()
+            .map(|n| n.get().min(8))
+            .unwrap_or(1)
+    }
+
+    /// Apply one comma-separated filter string, e.g.
+    /// `app=matmul,strategy=sys,scenario=1-8`. Repeated keys accumulate
+    /// (`app=matmul,app=sw` keeps both).
+    pub fn apply_filter(&mut self, filter: &str) -> Result<()> {
+        let mut apps: Vec<CampaignApp> = Vec::new();
+        let mut strategies: Vec<Strategy> = Vec::new();
+        let mut scenarios: Vec<u32> = Vec::new();
+        for term in filter.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+            let (key, value) = term.split_once('=').ok_or_else(|| {
+                SedarError::Config(format!("filter term '{term}': expected key=value"))
+            })?;
+            match key.trim() {
+                "app" => apps.push(CampaignApp::parse(value.trim())?),
+                "strategy" => strategies.push(Strategy::parse(value.trim())?),
+                "scenario" => {
+                    let v = value.trim();
+                    if let Some((lo, hi)) = v.split_once('-') {
+                        let lo: u32 = lo.parse().map_err(|e| {
+                            SedarError::Config(format!("scenario range '{v}': {e}"))
+                        })?;
+                        let hi: u32 = hi.parse().map_err(|e| {
+                            SedarError::Config(format!("scenario range '{v}': {e}"))
+                        })?;
+                        if lo > hi {
+                            return Err(SedarError::Config(format!(
+                                "scenario range '{v}' is reversed (use {hi}-{lo})"
+                            )));
+                        }
+                        scenarios.extend(lo..=hi);
+                    } else {
+                        scenarios.push(v.parse().map_err(|e| {
+                            SedarError::Config(format!("scenario '{v}': {e}"))
+                        })?);
+                    }
+                }
+                other => {
+                    return Err(SedarError::Config(format!(
+                        "unknown filter key '{other}' (app|strategy|scenario)"
+                    )))
+                }
+            }
+        }
+        if !apps.is_empty() {
+            self.apps = apps;
+        }
+        if !strategies.is_empty() {
+            self.strategies = strategies;
+        }
+        if !scenarios.is_empty() {
+            self.scenarios = Some(scenarios);
+        }
+        Ok(())
+    }
+}
+
+/// Materialize the task list: scenario-major, then app, then strategy, in
+/// the spec's declared order. Task indices are the positions in this list —
+/// the canonical aggregation order.
+pub fn build_tasks(spec: &CampaignSpec) -> Vec<CampaignTask> {
+    let catalog: Vec<Scenario> = workfault::catalog(&campaign_matmul())
+        .into_iter()
+        .filter(|sc| match &spec.scenarios {
+            None => true,
+            Some(keep) => keep.contains(&sc.id),
+        })
+        .collect();
+    let mut tasks = Vec::with_capacity(catalog.len() * spec.apps.len() * spec.strategies.len());
+    for sc in &catalog {
+        for &app in &spec.apps {
+            for &strategy in &spec.strategies {
+                tasks.push(CampaignTask {
+                    index: tasks.len(),
+                    scenario: sc.clone(),
+                    app,
+                    strategy,
+                    seed: task_seed(spec.seed, sc.id, app, strategy),
+                });
+            }
+        }
+    }
+    tasks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn task_seed_depends_on_every_field() {
+        let base = task_seed(42, 1, CampaignApp::Matmul, Strategy::SysCkpt);
+        assert_ne!(base, task_seed(43, 1, CampaignApp::Matmul, Strategy::SysCkpt));
+        assert_ne!(base, task_seed(42, 2, CampaignApp::Matmul, Strategy::SysCkpt));
+        assert_ne!(base, task_seed(42, 1, CampaignApp::Jacobi, Strategy::SysCkpt));
+        assert_ne!(base, task_seed(42, 1, CampaignApp::Matmul, Strategy::UserCkpt));
+        // And it is a pure function.
+        assert_eq!(base, task_seed(42, 1, CampaignApp::Matmul, Strategy::SysCkpt));
+    }
+
+    #[test]
+    fn full_sweep_is_576_tasks() {
+        let tasks = build_tasks(&CampaignSpec::new(7));
+        assert_eq!(tasks.len(), 64 * 3 * 3);
+        // Indices are dense and ordered.
+        for (i, t) in tasks.iter().enumerate() {
+            assert_eq!(t.index, i);
+        }
+    }
+
+    #[test]
+    fn filters_narrow_the_sweep() {
+        let mut spec = CampaignSpec::new(7);
+        spec.apply_filter("app=matmul,strategy=sys,scenario=1-8").unwrap();
+        let tasks = build_tasks(&spec);
+        assert_eq!(tasks.len(), 8);
+        assert!(tasks.iter().all(|t| t.app == CampaignApp::Matmul));
+        assert!(tasks.iter().all(|t| t.strategy == Strategy::SysCkpt));
+        assert!(tasks.iter().all(|t| t.scenario.id <= 8));
+    }
+
+    #[test]
+    fn filter_rejects_garbage() {
+        let mut spec = CampaignSpec::new(7);
+        assert!(spec.apply_filter("app").is_err());
+        assert!(spec.apply_filter("app=nope").is_err());
+        assert!(spec.apply_filter("color=red").is_err());
+        assert!(spec.apply_filter("scenario=x").is_err());
+        assert!(spec.apply_filter("scenario=8-1").is_err());
+    }
+}

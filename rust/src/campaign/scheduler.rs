@@ -1,0 +1,93 @@
+//! The campaign worker pool.
+//!
+//! `jobs` workers pull tasks from a shared queue (an atomic cursor over the
+//! canonical task list — idle workers steal whatever work is left, so the
+//! pool load-balances without any per-worker partitioning). Every worker
+//! runs one isolated world at a time, all borrowing the same injected
+//! engine deps; results land in per-index slots, which is what makes the
+//! aggregate independent of completion order.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::coordinator::RunDeps;
+use crate::error::{Result, SedarError};
+
+use super::aggregate::CampaignReport;
+use super::shard::{self, TaskOutcome};
+use super::{build_tasks, CampaignSpec};
+
+/// Run the whole campaign described by `spec` and aggregate the outcomes.
+pub fn run_campaign(spec: &CampaignSpec) -> Result<CampaignReport> {
+    let tasks = build_tasks(spec);
+    if tasks.is_empty() {
+        return Err(SedarError::Config(
+            "campaign filter selects no tasks".into(),
+        ));
+    }
+    let jobs = spec.jobs.clamp(1, tasks.len());
+
+    // One shared engine process for every world in the sweep (the tentpole
+    // refactor: runs borrow deps, they do not own engines). Warming is
+    // all-or-nothing across the union of the swept apps' artifacts: one
+    // missing artifact degrades the whole sweep to the pure-rust fallback,
+    // which keeps every cell on the same (deterministic) compute path.
+    let artifacts: Vec<String> = spec
+        .apps
+        .iter()
+        .flat_map(|a| a.instantiate().artifacts())
+        .collect();
+    let (deps, _engine) = RunDeps::start(spec.base.use_xla, &spec.base.artifact_dir, &artifacts);
+
+    let root = spec.base.run_dir.clone();
+    std::fs::create_dir_all(&root)?;
+
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<TaskOutcome>>> =
+        tasks.iter().map(|_| Mutex::new(None)).collect();
+
+    std::thread::scope(|s| {
+        for w in 0..jobs {
+            let tasks = &tasks;
+            let slots = &slots;
+            let next = &next;
+            let root = &root;
+            let worker_deps = deps.clone();
+            let base = &spec.base;
+            let echo = spec.echo;
+            s.spawn(move || {
+                loop {
+                    let i = next.fetch_add(1, Ordering::SeqCst);
+                    if i >= tasks.len() {
+                        break;
+                    }
+                    let task = &tasks[i];
+                    let out = shard::run_task(task, root, &worker_deps, base);
+                    if echo {
+                        eprintln!(
+                            "[w{w}] {:>3}/{} sc{:02} {:>6} × {:<11} → {}",
+                            i + 1,
+                            tasks.len(),
+                            task.scenario.id,
+                            task.app.label(),
+                            task.strategy.label(),
+                            if out.pass { "OK" } else { "MISMATCH" }
+                        );
+                    }
+                    *slots[i].lock().unwrap() = Some(out);
+                }
+            });
+        }
+    });
+
+    let outcomes: Vec<TaskOutcome> = slots
+        .into_iter()
+        .map(|slot| {
+            slot.into_inner()
+                .expect("campaign slot mutex poisoned")
+                .expect("every task slot filled when the pool drains")
+        })
+        .collect();
+
+    Ok(CampaignReport::new(spec.seed, outcomes))
+}

@@ -5,6 +5,12 @@
 //! A token starting with `--` is a switch if the next token is absent or is
 //! itself a flag; otherwise it consumes the next token as its value. Use
 //! `--flag=value` to force value binding.
+//!
+//! The `campaign` subcommand drives [`crate::campaign`]: `sedar campaign
+//! --jobs 8 --seed 42 [--filter app=matmul,strategy=sys,scenario=1-8]`
+//! fans the 64-scenario workfault × apps × strategies over a worker pool;
+//! the same `--seed` yields a byte-identical report for any `--jobs`. The
+//! full flag list is in the `HELP` text of `src/main.rs`.
 
 use std::collections::HashMap;
 

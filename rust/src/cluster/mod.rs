@@ -115,12 +115,23 @@ pub struct Placement {
     pub ranks: Vec<RankPlacement>,
 }
 
-#[derive(Debug, thiserror::Error)]
-#[error("placement: requested {requested} ranks but topology has only {available} replica slots")]
+#[derive(Debug)]
 pub struct PlacementError {
     pub requested: usize,
     pub available: usize,
 }
+
+impl std::fmt::Display for PlacementError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "placement: requested {} ranks but topology has only {} replica slots",
+            self.requested, self.available
+        )
+    }
+}
+
+impl std::error::Error for PlacementError {}
 
 impl Placement {
     /// SEDAR placement (§3.1): rank *r*'s leading thread goes on the even

@@ -13,6 +13,7 @@
 
 pub mod trace;
 
+use std::path::Path;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -90,6 +91,76 @@ impl RunOutcome {
     }
 }
 
+/// Injected run dependencies.
+///
+/// A [`SedarRun`] *borrows* its engine handle instead of owning an engine
+/// process: the caller builds one `RunDeps` and lends it to as many
+/// concurrent runs as it likes, so a whole campaign's worlds share a single
+/// serialized compute engine in one process. [`SedarRun::run`] remains the
+/// single-run convenience wrapper that builds (and keeps alive) a private
+/// engine.
+#[derive(Clone, Default)]
+pub struct RunDeps {
+    /// Handle to a live engine service thread, if XLA compute is available.
+    pub engine: Option<EngineHandle>,
+    /// Notes accumulated while constructing (engine degradation and the
+    /// like); forwarded into each run's trace.
+    pub notes: Vec<String>,
+}
+
+impl RunDeps {
+    /// No engine: every run uses the pure-rust compute fallback.
+    pub fn none() -> RunDeps {
+        RunDeps::default()
+    }
+
+    /// Start an engine serving `artifact_dir` and warm `artifacts`.
+    ///
+    /// Any failure (engine start, missing artifact) degrades to the
+    /// pure-rust path with a note rather than failing the run — the same
+    /// contract the coordinator always had. The returned [`Engine`] owner
+    /// must be kept alive for as long as the deps are used.
+    pub fn start(
+        use_xla: bool,
+        artifact_dir: &Path,
+        artifacts: &[String],
+    ) -> (RunDeps, Option<Engine>) {
+        if !use_xla {
+            return (RunDeps::none(), None);
+        }
+        match Engine::start(artifact_dir) {
+            Ok(engine) => {
+                let handle = engine.handle();
+                for art in artifacts {
+                    if let Err(err) = handle.warm(art) {
+                        let deps = RunDeps {
+                            engine: None,
+                            notes: vec![format!(
+                                "artifact '{art}' unavailable ({err}); using rust fallback"
+                            )],
+                        };
+                        return (deps, None);
+                    }
+                }
+                (
+                    RunDeps {
+                        engine: Some(handle),
+                        notes: Vec::new(),
+                    },
+                    Some(engine),
+                )
+            }
+            Err(err) => (
+                RunDeps {
+                    engine: None,
+                    notes: vec![format!("XLA engine unavailable ({err}); rust fallback")],
+                },
+                None,
+            ),
+        }
+    }
+}
+
 /// A configured SEDAR execution.
 pub struct SedarRun {
     pub app: Arc<dyn AppSpec>,
@@ -140,8 +211,20 @@ impl SedarRun {
         }
     }
 
-    /// Execute the run to completion (or give up after `max_attempts`).
+    /// Execute the run to completion (or give up after `max_attempts`),
+    /// building (and keeping alive) a private engine per the config.
     pub fn run(&self) -> Result<RunOutcome> {
+        let (deps, _engine) = RunDeps::start(
+            self.cfg.use_xla,
+            &self.cfg.artifact_dir,
+            &self.app.artifacts(),
+        );
+        self.run_with(&deps)
+    }
+
+    /// Execute the run with *borrowed* dependencies: the caller owns the
+    /// engine (if any) and may lend the same deps to many concurrent runs.
+    pub fn run_with(&self, deps: &RunDeps) -> Result<RunOutcome> {
         let t_run = Instant::now();
         // Fresh working directory.
         let _ = std::fs::remove_dir_all(&self.cfg.run_dir);
@@ -184,41 +267,15 @@ impl SedarRun {
             _ => None,
         };
 
-        // XLA engine (optional). A failure to start or warm degrades to the
-        // pure-rust compute path rather than failing the run.
-        let engine_holder;
+        // Borrowed XLA engine (optional): the deps owner keeps it alive.
+        for note in &deps.notes {
+            trace.coord(note.clone());
+        }
         let engine: Option<EngineHandle> = if self.cfg.use_xla {
-            match Engine::start(&self.cfg.artifact_dir) {
-                Ok(e) => {
-                    let mut ok = true;
-                    for art in self.app.artifacts() {
-                        if let Err(err) = e.handle().warm(&art) {
-                            trace.coord(format!(
-                                "artifact '{art}' unavailable ({err}); using rust fallback"
-                            ));
-                            ok = false;
-                            break;
-                        }
-                    }
-                    if ok {
-                        engine_holder = Some(e);
-                        engine_holder.as_ref().map(|e| e.handle())
-                    } else {
-                        engine_holder = None;
-                        None
-                    }
-                }
-                Err(err) => {
-                    trace.coord(format!("XLA engine unavailable ({err}); rust fallback"));
-                    engine_holder = None;
-                    None
-                }
-            }
+            deps.engine.clone()
         } else {
-            engine_holder = None;
             None
         };
-        let _keep_engine_alive = &engine_holder;
 
         let shared = Shared {
             app: Arc::clone(&self.app),

@@ -10,8 +10,6 @@
 //! * [`SedarError::Aborted`] — another rank already reported a fault and the
 //!   coordinator tore the network down; blocked operations unwind with this.
 
-use thiserror::Error;
-
 /// The four transient-fault effect classes of the paper (§2).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum FaultClass {
@@ -45,10 +43,12 @@ impl std::fmt::Display for FaultClass {
 }
 
 /// Everything that can go wrong inside a SEDAR run.
-#[derive(Debug, Error)]
+///
+/// Display / Error / From are hand-implemented: the crate builds with zero
+/// external dependencies so the offline toolchain needs no registry.
+#[derive(Debug)]
 pub enum SedarError {
     /// A replica divergence / timeout was detected at `site` by `rank`.
-    #[error("fault detected: {class} at {site} (rank {rank})")]
     FaultDetected {
         class: FaultClass,
         rank: usize,
@@ -56,27 +56,53 @@ pub enum SedarError {
     },
 
     /// The run was torn down because some (other) rank detected a fault.
-    #[error("run aborted (fault detected elsewhere)")]
     Aborted,
 
     /// Message-passing substrate failure (mismatched shapes, bad peer, …).
-    #[error("vmpi: {0}")]
     Vmpi(String),
 
     /// Checkpoint storage / framing failure.
-    #[error("checkpoint: {0}")]
     Checkpoint(String),
 
     /// XLA/PJRT runtime failure.
-    #[error("runtime: {0}")]
     Runtime(String),
 
     /// Configuration / CLI error.
-    #[error("config: {0}")]
     Config(String),
 
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
+    /// Filesystem / OS failure.
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for SedarError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SedarError::FaultDetected { class, rank, site } => {
+                write!(f, "fault detected: {class} at {site} (rank {rank})")
+            }
+            SedarError::Aborted => write!(f, "run aborted (fault detected elsewhere)"),
+            SedarError::Vmpi(m) => write!(f, "vmpi: {m}"),
+            SedarError::Checkpoint(m) => write!(f, "checkpoint: {m}"),
+            SedarError::Runtime(m) => write!(f, "runtime: {m}"),
+            SedarError::Config(m) => write!(f, "config: {m}"),
+            SedarError::Io(e) => write!(f, "io: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for SedarError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            SedarError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for SedarError {
+    fn from(e: std::io::Error) -> Self {
+        SedarError::Io(e)
+    }
 }
 
 pub type Result<T> = std::result::Result<T, SedarError>;

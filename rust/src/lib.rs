@@ -38,6 +38,7 @@
 //! | [`checkpoint`] | system-level chain + user-level validated checkpoints |
 //! | [`recovery`] | Algorithms 1 and 2: rollback orchestration |
 //! | [`coordinator`] | the SEDAR run controller (strategy × app × injection) |
+//! | [`campaign`] | parallel sweep of the workfault × apps × strategies |
 //! | [`apps`] | matmul (Master/Worker), Jacobi (SPMD), Smith-Waterman (pipeline) |
 //! | [`workfault`] | the 64-scenario workfault catalog + prediction oracle (§4.1) |
 //! | [`model`] | analytical temporal model: Equations 1–14 + AET (§3.4, §4.3-4.4) |
@@ -47,6 +48,7 @@
 //! | [`prop`] | in-repo property-based testing mini-framework |
 
 pub mod apps;
+pub mod campaign;
 pub mod checkpoint;
 pub mod cli;
 pub mod cluster;

@@ -4,7 +4,8 @@
 //! sedar run      --app matmul|jacobi|sw --strategy baseline|detect|sysckpt|userckpt
 //!                [--n 256] [--nranks 4] [--iters 32] [--scenario 50] [--xla]
 //!                [--trace] [--seed 7] [--collectives p2p|native] [--run-dir DIR]
-//! sedar campaign [--limit 64] [--scenario K] [--trace]    # the 64-scenario workfault
+//! sedar campaign [--jobs 8] [--seed 42] [--filter app=matmul,strategy=sys,scenario=1-8]
+//!                [--report md|csv] [--xla] [--run-dir DIR] [--quiet]
 //! sedar catalog                                           # print Table 2 (all 64 rows)
 //! sedar model    [--table 4|5] [--thresholds] [--aet]     # the analytical model
 //! sedar help
@@ -13,6 +14,7 @@
 use std::sync::Arc;
 
 use sedar::apps::{AppSpec, JacobiApp, MatmulApp, SwApp};
+use sedar::campaign::{self, CampaignSpec};
 use sedar::cli::Args;
 use sedar::config::{RunConfig, Strategy};
 use sedar::coordinator::SedarRun;
@@ -56,12 +58,26 @@ sedar — soft-error detection and automatic recovery (SEDAR, FGCS 2020)
 commands:
   run       run an application under a protection strategy (optionally
             injecting one of the 64 workfault scenarios)
-  campaign  run the 64-scenario injection campaign and check every
-            prediction (effect, P_det, P_rec, N_roll)
+  campaign  run the parallel injection campaign: the 64-scenario workfault
+            × {matmul, jacobi, sw} × {detect-only, sys-ckpt, user-ckpt},
+            fanned over a worker pool, graded against the §4.1 oracle
   catalog   print the full scenario catalog (the paper's Table 2)
   model     evaluate the analytical temporal model (Tables 4/5, thresholds,
             AET-vs-MTBE sweeps)
   help      this text
+
+campaign flags:
+  --jobs N      worker threads (default: available cores, capped at 8)
+  --seed S      campaign master seed; every task seed derives from it as
+                hash(seed, scenario, app, strategy) — same seed ⇒ byte-
+                identical report, whatever --jobs is (default 42)
+  --filter F    comma-separated cell filter, e.g.
+                app=matmul,strategy=sys,scenario=1-8 (repeat keys to widen)
+  --scenario K  shorthand for --filter scenario=K
+  --report FMT  md (default) or csv
+  --xla         compute through the AOT artifacts (needs the pjrt feature)
+  --run-dir D   campaign working directory (default runs/campaign-<pid>)
+  --quiet       suppress per-task progress lines
 
 run `sedar <cmd>` flag semantics are documented in rust/src/main.rs.
 ";
@@ -154,50 +170,41 @@ fn cmd_run(args: &Args) -> Result<()> {
 }
 
 fn cmd_campaign(args: &Args) -> Result<()> {
-    let n = args.usize_or("n", 64)?;
-    let nranks = args.usize_or("nranks", 4)?;
-    let app = MatmulApp::new(n, nranks);
-    let mut cfg = RunConfig::default();
-    cfg.run_dir = format!("runs/campaign-{}", std::process::id()).into();
-    cfg.echo_trace = false;
-    cfg.use_xla = args.has("xla");
-    cfg.seed = args.u64_or("seed", cfg.seed)?;
-
-    let cat = workfault::catalog(&app);
-    let only: Option<u32> = args.get("scenario").and_then(|s| s.parse().ok());
-    let limit = args.usize_or("limit", cat.len())?;
-
-    println!("{}", workfault::table2_header());
-    let mut passed = 0;
-    let mut failed = 0;
-    for sc in cat.iter().take(limit) {
-        if let Some(id) = only {
-            if sc.id != id {
-                continue;
-            }
-        }
-        let r = workfault::run_scenario(&app, sc, &cfg)?;
-        println!(
-            "{}  →  {}",
-            sc.row(),
-            if r.pass { "OK" } else { "MISMATCH" }
-        );
-        if args.has("trace") && only.is_some() {
-            println!("\n-- trace --\n{}", r.outcome.trace_dump);
-        }
-        if r.pass {
-            passed += 1;
-        } else {
-            failed += 1;
-            for m in &r.mismatches {
-                println!("    ! {m}");
-            }
-        }
+    // Validate the output format up front: a typo must not cost a full
+    // sweep's worth of work.
+    let report_fmt = args.get_or("report", "md");
+    if !matches!(report_fmt, "md" | "csv") {
+        return Err(SedarError::Config(format!(
+            "unknown report '{report_fmt}' (md|csv)"
+        )));
     }
-    println!("\ncampaign: {passed} passed, {failed} failed");
-    let _ = std::fs::remove_dir_all(&cfg.run_dir);
-    if failed > 0 {
-        return Err(SedarError::Config(format!("{failed} scenarios mismatched")));
+    let mut spec = CampaignSpec::new(args.u64_or("seed", 42)?);
+    spec.jobs = args.usize_or("jobs", CampaignSpec::default_jobs())?;
+    if let Some(f) = args.get("filter") {
+        spec.apply_filter(f)?;
+    }
+    if let Some(k) = args.get("scenario") {
+        spec.apply_filter(&format!("scenario={k}"))?;
+    }
+    spec.base.use_xla = args.has("xla");
+    spec.base.run_dir = match args.get("run-dir") {
+        Some(d) => d.into(),
+        None => format!("runs/campaign-{}", std::process::id()).into(),
+    };
+    spec.echo = !args.has("quiet");
+
+    let report = campaign::run_campaign(&spec)?;
+    match report_fmt {
+        "csv" => print!("{}", report.csv()),
+        _ => println!("{}", report.deterministic_report()),
+    }
+    println!("\n{}", report.summary_line());
+    let _ = std::fs::remove_dir_all(&spec.base.run_dir);
+    if !report.verdict() {
+        return Err(SedarError::Config(format!(
+            "{} campaign task(s) diverged from the oracle",
+            report.failed()
+        )));
     }
     Ok(())
 }

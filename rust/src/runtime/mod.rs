@@ -19,14 +19,27 @@
 //! same output bytes, trivially, since there is exactly one compute stream).
 //! The perf pass measures the dispatch overhead in
 //! `benches/micro_hotpath.rs`.
+//!
+//! ## The `pjrt` feature
+//!
+//! The PJRT client binds the external `xla` crate (xla_extension C++),
+//! which is not part of the offline dependency set. The binding is gated
+//! behind the off-by-default `pjrt` cargo feature: without it the engine
+//! fails to start with a clear message and every caller degrades to the
+//! bit-deterministic pure-rust compute fallbacks (the coordinator already
+//! treats engine start/warm failure as "use the fallback"). Enabling
+//! `pjrt` requires adding the `xla` dependency locally.
 
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::mpsc;
 use std::sync::Mutex;
 
 use crate::error::{Result, SedarError};
-use crate::state::{Buf, Var};
+#[cfg(feature = "pjrt")]
+use crate::state::Buf;
+use crate::state::Var;
 
 /// A compute request: run artifact `name` on `inputs`.
 struct ExecRequest {
@@ -135,6 +148,39 @@ impl Drop for Engine {
 
 // ---------------------------------------------------------------- service
 
+/// Without the `pjrt` feature there is no PJRT client to serve: fail the
+/// ready handshake so `Engine::start` errors out and callers fall back to
+/// the pure-rust compute path.
+#[cfg(not(feature = "pjrt"))]
+fn service_main(_dir: PathBuf, rx: mpsc::Receiver<Msg>, ready: mpsc::Sender<Result<()>>) {
+    let _ = ready.send(Err(SedarError::Runtime(
+        "sedar was built without the `pjrt` feature; XLA engine unavailable".into(),
+    )));
+    // Answer any stray requests with the same error so senders never hang.
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            Msg::Shutdown => break,
+            Msg::Warm(name, resp) => {
+                let _ = resp.send(Err(SedarError::Runtime(format!(
+                    "pjrt disabled: cannot warm '{name}'"
+                ))));
+            }
+            Msg::Exec(req) => {
+                let ExecRequest {
+                    artifact,
+                    inputs,
+                    resp,
+                } = req;
+                drop(inputs);
+                let _ = resp.send(Err(SedarError::Runtime(format!(
+                    "pjrt disabled: cannot execute '{artifact}'"
+                ))));
+            }
+        }
+    }
+}
+
+#[cfg(feature = "pjrt")]
 fn service_main(dir: PathBuf, rx: mpsc::Receiver<Msg>, ready: mpsc::Sender<Result<()>>) {
     let client = match xla::PjRtClient::cpu() {
         Ok(c) => {
@@ -165,6 +211,7 @@ fn service_main(dir: PathBuf, rx: mpsc::Receiver<Msg>, ready: mpsc::Sender<Resul
     }
 }
 
+#[cfg(feature = "pjrt")]
 fn ensure<'a>(
     client: &xla::PjRtClient,
     dir: &Path,
@@ -185,6 +232,7 @@ fn ensure<'a>(
     Ok(cache.get(name).unwrap())
 }
 
+#[cfg(feature = "pjrt")]
 fn to_literal(v: &Var) -> Result<xla::Literal> {
     let lit = match &v.buf {
         Buf::F32(data) => xla::Literal::vec1(data.as_slice()),
@@ -204,6 +252,7 @@ fn to_literal(v: &Var) -> Result<xla::Literal> {
         .map_err(|e| SedarError::Runtime(format!("reshape input: {e}")))
 }
 
+#[cfg(feature = "pjrt")]
 fn from_literal(lit: &xla::Literal) -> Result<Var> {
     let shape = lit
         .array_shape()
@@ -234,6 +283,7 @@ fn from_literal(lit: &xla::Literal) -> Result<Var> {
     Ok(Var { shape: dims, buf })
 }
 
+#[cfg(feature = "pjrt")]
 fn exec_one(
     client: &xla::PjRtClient,
     dir: &Path,
@@ -263,6 +313,7 @@ mod tests {
     // Full engine tests (needing artifacts) live in rust/tests/runtime_xla.rs;
     // here we cover the host-side marshalling only.
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn literal_roundtrip_f32() {
         let v = Var::f32(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
@@ -271,6 +322,7 @@ mod tests {
         assert_eq!(back, v);
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn u8_inputs_rejected() {
         let v = Var {
@@ -278,6 +330,13 @@ mod tests {
             buf: Buf::U8(vec![1]),
         };
         assert!(to_literal(&v).is_err());
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn engine_start_fails_cleanly_without_pjrt() {
+        let err = Engine::start(Path::new("artifacts")).map(|_| ()).unwrap_err();
+        assert!(err.to_string().contains("pjrt"));
     }
 
     #[test]

@@ -199,7 +199,11 @@ const CKS: [u64; 4] = [phases::CK0, phases::CK1, phases::CK2, phases::CK3];
 /// The §4.1 prediction oracle: given where a fault lands and what it hits,
 /// derive effect, detection point and recovery cost from the dataflow of
 /// Algorithm 3.
-pub fn predict(window: Window, rank: usize, data: DataTarget) -> (FaultClass, Option<&'static str>, Rec, u32) {
+pub fn predict(
+    window: Window,
+    rank: usize,
+    data: DataTarget,
+) -> (FaultClass, Option<&'static str>, Rec, u32) {
     use DataTarget as D;
     use FaultClass as F;
     use Window as W;
@@ -409,20 +413,12 @@ pub struct ScenarioResult {
     pub mismatches: Vec<String>,
 }
 
-/// Run one scenario under the multiple-system-level-checkpoint strategy and
-/// check every prediction column (the §4.2 validation, mechanized).
-pub fn run_scenario(
-    app: &MatmulApp,
-    sc: &Scenario,
-    base_cfg: &RunConfig,
-) -> Result<ScenarioResult> {
-    let mut cfg = base_cfg.clone();
-    cfg.strategy = Strategy::SysCkpt;
-    cfg.run_dir = base_cfg.run_dir.join(format!("sc{}", sc.id));
-    let spec = injection_for(app, sc, &cfg);
-    let run = SedarRun::new(Arc::new(app.clone()), cfg, Some(spec));
-    let outcome = run.run()?;
-
+/// Check every §4.1 prediction column against an observed outcome of a run
+/// under the multiple-system-level-checkpoint strategy. Returns the list of
+/// divergences (empty = the scenario behaved exactly as predicted). Shared
+/// by [`run_scenario`] and the parallel campaign shard
+/// ([`crate::campaign::shard`]).
+pub fn check_prediction(sc: &Scenario, outcome: &RunOutcome) -> Vec<String> {
     let mut mismatches = Vec::new();
     if !outcome.completed {
         mismatches.push("run did not complete".into());
@@ -470,6 +466,23 @@ pub fn run_scenario(
         (Rec::Scratch, Some(ResumeFrom::Scratch)) => {}
         (want, got) => mismatches.push(format!("P_rec: predicted {want}, observed {got:?}")),
     }
+    mismatches
+}
+
+/// Run one scenario under the multiple-system-level-checkpoint strategy and
+/// check every prediction column (the §4.2 validation, mechanized).
+pub fn run_scenario(
+    app: &MatmulApp,
+    sc: &Scenario,
+    base_cfg: &RunConfig,
+) -> Result<ScenarioResult> {
+    let mut cfg = base_cfg.clone();
+    cfg.strategy = Strategy::SysCkpt;
+    cfg.run_dir = base_cfg.run_dir.join(format!("sc{}", sc.id));
+    let spec = injection_for(app, sc, &cfg);
+    let run = SedarRun::new(Arc::new(app.clone()), cfg, Some(spec));
+    let outcome = run.run()?;
+    let mismatches = check_prediction(sc, &outcome);
 
     Ok(ScenarioResult {
         scenario: sc.clone(),

@@ -1,33 +1,34 @@
 //! The full 64-scenario workfault campaign (§4.1–4.2): every scenario is
 //! injected for real and every prediction column (effect, P_det, P_rec,
-//! N_roll) is checked. This is the paper's Table-2 validation, mechanized.
+//! N_roll) is checked. This is the paper's Table-2 validation, mechanized —
+//! and since the campaign engine landed, fanned over a worker pool (each
+//! scenario in an isolated world, graded by the same prediction oracle).
 
 use sedar::apps::matmul::MatmulApp;
+use sedar::campaign::{run_campaign, CampaignSpec};
 use sedar::config::RunConfig;
 use sedar::error::FaultClass;
 use sedar::workfault;
 
 #[test]
 fn all_64_scenarios_behave_as_predicted() {
-    let app = MatmulApp::new(64, 4);
-    let cfg = RunConfig::for_tests("campaign64");
-    let catalog = workfault::catalog(&app);
-    assert_eq!(catalog.len(), 64);
-
-    let mut failures = Vec::new();
-    for sc in &catalog {
-        let r = workfault::run_scenario(&app, sc, &cfg).unwrap();
-        if !r.pass {
-            failures.push(format!("scenario {}: {:?}", sc.id, r.mismatches));
-        }
-    }
+    let mut spec = CampaignSpec::new(0xC0FFEE);
+    spec.apply_filter("app=matmul,strategy=sys").unwrap();
+    spec.jobs = 4;
+    let toe_timeout = spec.base.toe_timeout;
+    spec.base = RunConfig::for_tests("campaign64");
+    // Keep the campaign's generous rendezvous lapse: a loaded pool must
+    // never turn a descheduled-but-healthy sibling into a spurious TOE.
+    spec.base.toe_timeout = toe_timeout;
+    let report = run_campaign(&spec).unwrap();
+    assert_eq!(report.outcomes.len(), 64);
     assert!(
-        failures.is_empty(),
+        report.verdict(),
         "{} scenario(s) diverged:\n{}",
-        failures.len(),
-        failures.join("\n")
+        report.failed(),
+        report.deterministic_report()
     );
-    let _ = std::fs::remove_dir_all(&cfg.run_dir);
+    let _ = std::fs::remove_dir_all(&spec.base.run_dir);
 }
 
 #[test]

@@ -2,8 +2,11 @@
 //! from rust, and check the numerics against the pure-rust fallbacks —
 //! the cross-layer contract (L1 Pallas == L2 jnp == L3 rust).
 //!
-//! These tests are skipped (not failed) when `artifacts/` has not been
-//! built; `make artifacts` generates it.
+//! These tests are `#[ignore]`d by default: they need the AOT artifacts
+//! (`make artifacts`) *and* a binary built with the `pjrt` feature (the
+//! external `xla` binding is not in the offline dependency set). Run them
+//! with `cargo test --features pjrt -- --ignored`. Even when invoked, they
+//! self-skip (not fail) if `artifacts/` is absent.
 
 use sedar::apps::oracle;
 use sedar::runtime::Engine;
@@ -27,6 +30,7 @@ fn rand_f32(seed: u64, n: usize) -> Vec<f32> {
 }
 
 #[test]
+#[ignore = "requires PJRT artifacts + the pjrt feature; see module docs"]
 fn matmul_artifact_matches_rust_oracle() {
     let Some(engine) = engine() else { return };
     let h = engine.handle();
@@ -48,6 +52,7 @@ fn matmul_artifact_matches_rust_oracle() {
 }
 
 #[test]
+#[ignore = "requires PJRT artifacts + the pjrt feature; see module docs"]
 fn jacobi_artifact_matches_rust_stencil() {
     let Some(engine) = engine() else { return };
     let h = engine.handle();
@@ -72,6 +77,7 @@ fn jacobi_artifact_matches_rust_stencil() {
 }
 
 #[test]
+#[ignore = "requires PJRT artifacts + the pjrt feature; see module docs"]
 fn sw_artifact_matches_rust_dp_block() {
     let Some(engine) = engine() else { return };
     let h = engine.handle();
@@ -117,6 +123,7 @@ fn sw_artifact_matches_rust_dp_block() {
 }
 
 #[test]
+#[ignore = "requires PJRT artifacts + the pjrt feature; see module docs"]
 fn validate_artifact_counts_mismatches() {
     let Some(engine) = engine() else { return };
     let h = engine.handle();
@@ -139,6 +146,7 @@ fn validate_artifact_counts_mismatches() {
 }
 
 #[test]
+#[ignore = "requires PJRT artifacts + the pjrt feature; see module docs"]
 fn engine_reports_missing_artifacts() {
     let Some(engine) = engine() else { return };
     let h = engine.handle();
@@ -147,6 +155,7 @@ fn engine_reports_missing_artifacts() {
 }
 
 #[test]
+#[ignore = "requires PJRT artifacts + the pjrt feature; see module docs"]
 fn engine_is_shareable_across_threads() {
     let Some(engine) = engine() else { return };
     let h = engine.handle();

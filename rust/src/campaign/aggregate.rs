@@ -7,10 +7,11 @@
 //! from seeds and dataflow alone. Two sweeps with the same spec must render
 //! byte-identical reports whatever `--jobs` was.
 
-use crate::error::FaultClass;
+use crate::error::{FaultClass, Result, SedarError};
 use crate::report::Table;
 
 use super::shard::TaskOutcome;
+use super::validation_label;
 
 /// The aggregated result of a campaign.
 #[derive(Debug)]
@@ -20,18 +21,55 @@ pub struct CampaignReport {
     pub outcomes: Vec<TaskOutcome>,
 }
 
-/// Merge outcome shards (e.g. from partial sweeps run elsewhere) into the
-/// canonical task order. Idempotent on already-sorted input.
-pub fn merge(shards: Vec<Vec<TaskOutcome>>) -> Vec<TaskOutcome> {
+/// Merge outcome shards (partial sweeps run in other processes or machines)
+/// into the canonical task order. Sorting is stable and key-based, so the
+/// merge is idempotent and commutative over shard order.
+///
+/// Overlapping shards are **rejected**, never deduplicated: a duplicate
+/// task index means two shard files claim the same cell, and silently
+/// keeping either (or worse, both — the pre-hardening behavior, which
+/// double-counted rollup rows) would corrupt the merged verdict. The caller
+/// fixes the shard set; the merge does not guess.
+pub fn merge(shards: Vec<Vec<TaskOutcome>>) -> Result<Vec<TaskOutcome>> {
     let mut all: Vec<TaskOutcome> = shards.into_iter().flatten().collect();
     all.sort_by_key(|o| o.index);
-    all
+    let mut dups: Vec<usize> = all
+        .windows(2)
+        .filter(|w| w[0].index == w[1].index)
+        .map(|w| w[0].index)
+        .collect();
+    if !dups.is_empty() {
+        dups.dedup();
+        let shown: Vec<String> = dups.iter().take(8).map(|i| i.to_string()).collect();
+        let suffix = if dups.len() > 8 { ", …" } else { "" };
+        return Err(SedarError::Config(format!(
+            "merge: {} duplicate task index(es) across shards ({}{suffix}) — \
+             overlapping shard artifacts are rejected, not deduplicated",
+            dups.len(),
+            shown.join(", ")
+        )));
+    }
+    Ok(all)
 }
 
 impl CampaignReport {
-    pub fn new(seed: u64, outcomes: Vec<TaskOutcome>) -> CampaignReport {
-        let outcomes = merge(vec![outcomes]);
+    /// Aggregate one sweep's outcomes (unique indices by construction — the
+    /// scheduler fills one slot per task).
+    pub fn new(seed: u64, mut outcomes: Vec<TaskOutcome>) -> CampaignReport {
+        outcomes.sort_by_key(|o| o.index);
+        debug_assert!(
+            outcomes.windows(2).all(|w| w[0].index != w[1].index),
+            "CampaignReport::new fed duplicate task indices; use from_shards"
+        );
         CampaignReport { seed, outcomes }
+    }
+
+    /// Aggregate outcomes merged from several shards, rejecting overlaps.
+    pub fn from_shards(seed: u64, shards: Vec<Vec<TaskOutcome>>) -> Result<CampaignReport> {
+        Ok(CampaignReport {
+            seed,
+            outcomes: merge(shards)?,
+        })
     }
 
     pub fn passed(&self) -> usize {
@@ -102,8 +140,8 @@ impl CampaignReport {
     /// observed effect and site, recovery path, verdict).
     fn rows(&self) -> Table {
         let mut t = Table::new(&[
-            "task", "sc", "app", "strategy", "observed", "site", "resume", "N_roll", "result",
-            "verdict",
+            "task", "sc", "app", "strategy", "val", "faults", "observed", "site", "resume",
+            "N_roll", "result", "verdict",
         ]);
         for o in &self.outcomes {
             let (class, site) = match &o.first_detection {
@@ -115,6 +153,8 @@ impl CampaignReport {
                 o.scenario_id.to_string(),
                 o.app.label().to_string(),
                 o.strategy.label().to_string(),
+                validation_label(o.validation).to_string(),
+                o.faults.to_string(),
                 class,
                 site,
                 o.last_resume
@@ -184,6 +224,8 @@ mod tests {
             scenario_id: index as u32 + 1,
             app: CampaignApp::Matmul,
             strategy: Strategy::SysCkpt,
+            validation: crate::detect::ValidationMode::Full,
+            faults: 1,
             completed: true,
             restarts: 1,
             injected: true,
@@ -201,9 +243,40 @@ mod tests {
         let merged = merge(vec![
             vec![outcome(3, true), outcome(1, true)],
             vec![outcome(0, true), outcome(2, true)],
-        ]);
+        ])
+        .unwrap();
         let idx: Vec<usize> = merged.iter().map(|o| o.index).collect();
         assert_eq!(idx, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn merge_rejects_overlapping_shards() {
+        let err = merge(vec![
+            vec![outcome(0, true), outcome(1, true)],
+            vec![outcome(1, true), outcome(2, true)],
+        ])
+        .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("duplicate task index"), "got: {msg}");
+        assert!(msg.contains('1'), "should name the colliding index: {msg}");
+        // Even a byte-identical duplicate is rejected — the policy is
+        // explicit rejection, not dedup.
+        assert!(merge(vec![vec![outcome(5, true)], vec![outcome(5, true)]]).is_err());
+        // And from_shards surfaces the same error.
+        assert!(CampaignReport::from_shards(
+            1,
+            vec![vec![outcome(0, true)], vec![outcome(0, true)]]
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn merge_is_commutative_over_shard_order() {
+        let a = vec![outcome(0, true), outcome(2, false)];
+        let b = vec![outcome(1, true), outcome(3, true)];
+        let ab = CampaignReport::from_shards(9, vec![a.clone(), b.clone()]).unwrap();
+        let ba = CampaignReport::from_shards(9, vec![b, a]).unwrap();
+        assert_eq!(ab.deterministic_report(), ba.deterministic_report());
     }
 
     #[test]

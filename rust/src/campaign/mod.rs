@@ -7,11 +7,12 @@
 //! This module makes that sweep a first-class subsystem:
 //!
 //! * [`CampaignSpec`] names the cross-product to run (scenarios × apps ×
-//!   strategies) plus the base [`RunConfig`] every task derives from;
+//!   strategies, plus the beyond-paper validation-mode and faults-per-cell
+//!   axes) and the base [`RunConfig`] every task derives from;
 //! * [`shard`] executes one task in an isolated `SedarRun` world, with a
 //!   deterministic per-task seed derived as
-//!   `hash(campaign_seed, scenario, app, strategy)` — no wall-clock in any
-//!   decision path;
+//!   `hash(campaign_seed, scenario, app, strategy, validation, faults)` —
+//!   no wall-clock in any decision path;
 //! * [`scheduler`] fans tasks across `jobs` workers pulling from a shared
 //!   queue, all worlds borrowing one injected engine handle
 //!   ([`crate::coordinator::RunDeps`]);
@@ -21,14 +22,16 @@
 //!
 //! Determinism contract: the same spec (seed, filters) produces a
 //! byte-identical [`aggregate::CampaignReport::deterministic_report`]
-//! regardless of `jobs` (`rust/tests/campaign_determinism.rs`).
+//! regardless of `jobs` (`rust/tests/campaign_determinism.rs`) — and, via
+//! [`crate::fleet`], regardless of how the sweep is split into
+//! multi-process shards (`rust/tests/fleet_shard_equivalence.rs`).
 
 pub mod aggregate;
 pub mod scheduler;
 pub mod shard;
 
 pub use aggregate::CampaignReport;
-pub use scheduler::run_campaign;
+pub use scheduler::{run_campaign, run_tasks};
 pub use shard::{CampaignTask, TaskOutcome};
 
 use std::sync::Arc;
@@ -36,6 +39,7 @@ use std::sync::Arc;
 use crate::apps::spec::AppSpec;
 use crate::apps::{JacobiApp, MatmulApp, SwApp};
 use crate::config::{RunConfig, Strategy};
+use crate::detect::ValidationMode;
 use crate::error::{Result, SedarError};
 use crate::util::prng::SplitMix64;
 use crate::workfault::{self, Scenario};
@@ -72,13 +76,19 @@ impl CampaignApp {
         })
     }
 
-    /// Stable ordinal, folded into the per-task seed.
+    /// Stable ordinal, folded into the per-task seed and persisted in shard
+    /// artifacts ([`crate::fleet::artifact`]).
     pub fn ordinal(self) -> u64 {
         match self {
             CampaignApp::Matmul => 0,
             CampaignApp::Jacobi => 1,
             CampaignApp::Sw => 2,
         }
+    }
+
+    /// Inverse of [`CampaignApp::ordinal`] (artifact decoding).
+    pub fn from_ordinal(ord: u64) -> Option<CampaignApp> {
+        CampaignApp::ALL.into_iter().find(|a| a.ordinal() == ord)
     }
 
     /// The campaign-geometry instance: small enough that the full 576-task
@@ -117,6 +127,43 @@ pub fn strategy_ordinal(s: Strategy) -> u64 {
     }
 }
 
+/// Inverse of [`strategy_ordinal`] (artifact decoding).
+pub fn strategy_from_ordinal(ord: u64) -> Option<Strategy> {
+    [
+        Strategy::Baseline,
+        Strategy::DetectOnly,
+        Strategy::SysCkpt,
+        Strategy::UserCkpt,
+    ]
+    .into_iter()
+    .find(|s| strategy_ordinal(*s) == ord)
+}
+
+/// Stable validation-mode ordinal, folded into the per-task seed.
+pub fn validation_ordinal(v: ValidationMode) -> u64 {
+    match v {
+        ValidationMode::Full => 0,
+        ValidationMode::Sha256 => 1,
+    }
+}
+
+/// Inverse of [`validation_ordinal`] (artifact decoding).
+pub fn validation_from_ordinal(ord: u64) -> Option<ValidationMode> {
+    [ValidationMode::Full, ValidationMode::Sha256]
+        .into_iter()
+        .find(|v| validation_ordinal(*v) == ord)
+}
+
+/// Short label for report rows and filters (see [`ValidationMode::label`]).
+pub fn validation_label(v: ValidationMode) -> &'static str {
+    v.label()
+}
+
+/// Most faults a single campaign cell may arm (each extra fault is an
+/// independent seed-derived bit-flip; beyond a handful the cell stops
+/// telling us anything new about recovery and just burns wall-clock).
+pub const MAX_FAULTS: u32 = 4;
+
 /// Fold one field into a running hash (SplitMix64 finalizer — the same
 /// generator the workload seeds use, so the whole campaign stays
 /// reproducible from one number).
@@ -125,22 +172,29 @@ fn fold(h: u64, v: u64) -> u64 {
 }
 
 /// The per-task deterministic seed:
-/// `hash(campaign_seed, scenario_id, app, strategy)`.
+/// `hash(campaign_seed, scenario_id, app, strategy, validation, faults)`.
 ///
 /// Every task's workload generation, injection-site choice and run
-/// directory derive from this value alone — never from wall-clock time or
-/// scheduling order — which is what makes the aggregated report invariant
-/// under `--jobs`.
+/// directory derive from this value alone — never from wall-clock time,
+/// scheduling order or *shard assignment* — which is what makes the
+/// aggregated report invariant under `--jobs` and under any `--shard i/N`
+/// split of the sweep.
 pub fn task_seed(
     campaign_seed: u64,
     scenario_id: u32,
     app: CampaignApp,
     strategy: Strategy,
+    validation: ValidationMode,
+    faults: u32,
 ) -> u64 {
-    let h = fold(campaign_seed, 0x5EDA_2C01);
+    // Domain tag bumped (…02) when the validation/faults axes joined the
+    // fold set, so cross-version artifacts can never alias.
+    let h = fold(campaign_seed, 0x5EDA_2C02);
     let h = fold(h, scenario_id as u64 + 1);
     let h = fold(h, app.ordinal() + 1);
-    fold(h, strategy_ordinal(strategy) + 1)
+    let h = fold(h, strategy_ordinal(strategy) + 1);
+    let h = fold(h, validation_ordinal(validation) + 1);
+    fold(h, faults as u64)
 }
 
 /// What to sweep and how wide to fan out.
@@ -154,6 +208,15 @@ pub struct CampaignSpec {
     pub apps: Vec<CampaignApp>,
     /// Strategies to sweep (task order follows this list's order).
     pub strategies: Vec<Strategy>,
+    /// Validation modes to sweep (beyond-paper axis; default `[Full]`, the
+    /// paper's §4.2 message validation — add `sha256` for RedMPI-style
+    /// digest comparison cells).
+    pub validations: Vec<ValidationMode>,
+    /// Armed-faults-per-cell counts to sweep (beyond-paper axis; default
+    /// `[1]`, the paper's single-fault campaign — higher counts arm extra
+    /// independent seed-derived bit-flips per §3.2's multi-fault
+    /// discussion).
+    pub fault_counts: Vec<u32>,
     /// Keep only these scenario ids (`None` = the full 64).
     pub scenarios: Option<Vec<u32>>,
     /// Base config every task derives from. `base.run_dir` is the campaign
@@ -180,6 +243,8 @@ impl CampaignSpec {
             jobs: 1,
             apps: CampaignApp::ALL.to_vec(),
             strategies: STRATEGIES.to_vec(),
+            validations: vec![ValidationMode::Full],
+            fault_counts: vec![1],
             scenarios: None,
             base,
             echo: false,
@@ -196,11 +261,13 @@ impl CampaignSpec {
     }
 
     /// Apply one comma-separated filter string, e.g.
-    /// `app=matmul,strategy=sys,scenario=1-8`. Repeated keys accumulate
-    /// (`app=matmul,app=sw` keeps both).
+    /// `app=matmul,strategy=sys,scenario=1-8,validation=sha256,faults=2`.
+    /// Repeated keys accumulate (`app=matmul,app=sw` keeps both).
     pub fn apply_filter(&mut self, filter: &str) -> Result<()> {
         let mut apps: Vec<CampaignApp> = Vec::new();
         let mut strategies: Vec<Strategy> = Vec::new();
+        let mut validations: Vec<ValidationMode> = Vec::new();
+        let mut fault_counts: Vec<u32> = Vec::new();
         let mut scenarios: Vec<u32> = Vec::new();
         for term in filter.split(',').map(str::trim).filter(|t| !t.is_empty()) {
             let (key, value) = term.split_once('=').ok_or_else(|| {
@@ -209,6 +276,18 @@ impl CampaignSpec {
             match key.trim() {
                 "app" => apps.push(CampaignApp::parse(value.trim())?),
                 "strategy" => strategies.push(Strategy::parse(value.trim())?),
+                "validation" => validations.push(ValidationMode::parse(value.trim())?),
+                "faults" => {
+                    let k: u32 = value.trim().parse().map_err(|e| {
+                        SedarError::Config(format!("faults '{}': {e}", value.trim()))
+                    })?;
+                    if k == 0 || k > MAX_FAULTS {
+                        return Err(SedarError::Config(format!(
+                            "faults={k} out of range (1..={MAX_FAULTS})"
+                        )));
+                    }
+                    fault_counts.push(k);
+                }
                 "scenario" => {
                     let v = value.trim();
                     if let Some((lo, hi)) = v.split_once('-') {
@@ -232,7 +311,8 @@ impl CampaignSpec {
                 }
                 other => {
                     return Err(SedarError::Config(format!(
-                        "unknown filter key '{other}' (app|strategy|scenario)"
+                        "unknown filter key '{other}' \
+                         (app|strategy|scenario|validation|faults)"
                     )))
                 }
             }
@@ -243,6 +323,12 @@ impl CampaignSpec {
         if !strategies.is_empty() {
             self.strategies = strategies;
         }
+        if !validations.is_empty() {
+            self.validations = validations;
+        }
+        if !fault_counts.is_empty() {
+            self.fault_counts = fault_counts;
+        }
         if !scenarios.is_empty() {
             self.scenarios = Some(scenarios);
         }
@@ -250,9 +336,11 @@ impl CampaignSpec {
     }
 }
 
-/// Materialize the task list: scenario-major, then app, then strategy, in
-/// the spec's declared order. Task indices are the positions in this list —
-/// the canonical aggregation order.
+/// Materialize the task list: scenario-major, then app, strategy,
+/// validation and fault count, in the spec's declared order. Task indices
+/// are the positions in this list — the canonical aggregation order, and
+/// the key the fleet's shard plans partition over
+/// ([`crate::fleet::plan::ShardPlan`]).
 pub fn build_tasks(spec: &CampaignSpec) -> Vec<CampaignTask> {
     let catalog: Vec<Scenario> = workfault::catalog(&campaign_matmul())
         .into_iter()
@@ -261,36 +349,104 @@ pub fn build_tasks(spec: &CampaignSpec) -> Vec<CampaignTask> {
             Some(keep) => keep.contains(&sc.id),
         })
         .collect();
-    let mut tasks = Vec::with_capacity(catalog.len() * spec.apps.len() * spec.strategies.len());
+    let cells = spec.apps.len()
+        * spec.strategies.len()
+        * spec.validations.len()
+        * spec.fault_counts.len();
+    let mut tasks = Vec::with_capacity(catalog.len() * cells);
     for sc in &catalog {
         for &app in &spec.apps {
             for &strategy in &spec.strategies {
-                tasks.push(CampaignTask {
-                    index: tasks.len(),
-                    scenario: sc.clone(),
-                    app,
-                    strategy,
-                    seed: task_seed(spec.seed, sc.id, app, strategy),
-                });
+                for &validation in &spec.validations {
+                    for &faults in &spec.fault_counts {
+                        tasks.push(CampaignTask {
+                            index: tasks.len(),
+                            scenario: sc.clone(),
+                            app,
+                            strategy,
+                            validation,
+                            faults,
+                            seed: task_seed(spec.seed, sc.id, app, strategy, validation, faults),
+                        });
+                    }
+                }
             }
         }
     }
     tasks
 }
 
+/// Order-sensitive fingerprint of a sweep's canonical task list: folds the
+/// campaign seed and every task's cell coordinates. Two sweeps agree on
+/// this value iff they agree on seed, filters and axis order — the
+/// identity a shard artifact and a resume journal carry so `sedar merge`
+/// and `--journal` can refuse to mix different sweeps even when seed and
+/// task counts coincide.
+pub fn sweep_fingerprint(seed: u64, tasks: &[CampaignTask]) -> u64 {
+    let mut h = fold(seed, 0x5EDA_F1E7);
+    for t in tasks {
+        h = fold(h, t.index as u64 + 1);
+        h = fold(h, t.scenario.id as u64 + 1);
+        h = fold(h, t.app.ordinal() + 1);
+        h = fold(h, strategy_ordinal(t.strategy) + 1);
+        h = fold(h, validation_ordinal(t.validation) + 1);
+        h = fold(h, t.faults as u64);
+    }
+    h
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    fn seed_of(
+        campaign_seed: u64,
+        scenario_id: u32,
+        app: CampaignApp,
+        strategy: Strategy,
+    ) -> u64 {
+        task_seed(
+            campaign_seed,
+            scenario_id,
+            app,
+            strategy,
+            ValidationMode::Full,
+            1,
+        )
+    }
+
     #[test]
     fn task_seed_depends_on_every_field() {
-        let base = task_seed(42, 1, CampaignApp::Matmul, Strategy::SysCkpt);
-        assert_ne!(base, task_seed(43, 1, CampaignApp::Matmul, Strategy::SysCkpt));
-        assert_ne!(base, task_seed(42, 2, CampaignApp::Matmul, Strategy::SysCkpt));
-        assert_ne!(base, task_seed(42, 1, CampaignApp::Jacobi, Strategy::SysCkpt));
-        assert_ne!(base, task_seed(42, 1, CampaignApp::Matmul, Strategy::UserCkpt));
+        let base = seed_of(42, 1, CampaignApp::Matmul, Strategy::SysCkpt);
+        assert_ne!(base, seed_of(43, 1, CampaignApp::Matmul, Strategy::SysCkpt));
+        assert_ne!(base, seed_of(42, 2, CampaignApp::Matmul, Strategy::SysCkpt));
+        assert_ne!(base, seed_of(42, 1, CampaignApp::Jacobi, Strategy::SysCkpt));
+        assert_ne!(base, seed_of(42, 1, CampaignApp::Matmul, Strategy::UserCkpt));
+        // The beyond-paper axes are part of the fold set too.
+        assert_ne!(
+            base,
+            task_seed(
+                42,
+                1,
+                CampaignApp::Matmul,
+                Strategy::SysCkpt,
+                ValidationMode::Sha256,
+                1
+            )
+        );
+        assert_ne!(
+            base,
+            task_seed(
+                42,
+                1,
+                CampaignApp::Matmul,
+                Strategy::SysCkpt,
+                ValidationMode::Full,
+                2
+            )
+        );
         // And it is a pure function.
-        assert_eq!(base, task_seed(42, 1, CampaignApp::Matmul, Strategy::SysCkpt));
+        assert_eq!(base, seed_of(42, 1, CampaignApp::Matmul, Strategy::SysCkpt));
     }
 
     #[test]
@@ -315,6 +471,26 @@ mod tests {
     }
 
     #[test]
+    fn beyond_paper_axes_widen_the_sweep() {
+        let mut spec = CampaignSpec::new(7);
+        spec.apply_filter(
+            "app=matmul,strategy=sys,scenario=1-4,\
+             validation=full,validation=sha256,faults=1,faults=2",
+        )
+        .unwrap();
+        let tasks = build_tasks(&spec);
+        // 4 scenarios × 1 app × 1 strategy × 2 validations × 2 fault counts.
+        assert_eq!(tasks.len(), 16);
+        assert!(tasks.iter().any(|t| t.validation == ValidationMode::Sha256));
+        assert!(tasks.iter().any(|t| t.faults == 2));
+        // Every cell gets a distinct seed.
+        let mut seeds: Vec<u64> = tasks.iter().map(|t| t.seed).collect();
+        seeds.sort_unstable();
+        seeds.dedup();
+        assert_eq!(seeds.len(), 16);
+    }
+
+    #[test]
     fn filter_rejects_garbage() {
         let mut spec = CampaignSpec::new(7);
         assert!(spec.apply_filter("app").is_err());
@@ -322,5 +498,47 @@ mod tests {
         assert!(spec.apply_filter("color=red").is_err());
         assert!(spec.apply_filter("scenario=x").is_err());
         assert!(spec.apply_filter("scenario=8-1").is_err());
+        assert!(spec.apply_filter("validation=crc").is_err());
+        assert!(spec.apply_filter("faults=0").is_err());
+        assert!(spec.apply_filter("faults=99").is_err());
+        assert!(spec.apply_filter("faults=two").is_err());
+    }
+
+    #[test]
+    fn fingerprint_sees_seed_and_every_filter_axis() {
+        let tasks_of = |seed: u64, filter: &str| {
+            let mut spec = CampaignSpec::new(seed);
+            spec.apply_filter(filter).unwrap();
+            sweep_fingerprint(seed, &build_tasks(&spec))
+        };
+        let base = tasks_of(42, "scenario=1-12");
+        assert_eq!(base, tasks_of(42, "scenario=1-12"));
+        assert_ne!(base, tasks_of(43, "scenario=1-12"));
+        // Same seed, same task COUNT, different cells — the drift the
+        // fingerprint exists to catch.
+        assert_ne!(base, tasks_of(42, "scenario=13-24"));
+        assert_ne!(base, tasks_of(42, "scenario=1-12,validation=sha256"));
+        assert_ne!(base, tasks_of(42, "scenario=1-12,faults=2"));
+    }
+
+    #[test]
+    fn ordinal_roundtrips() {
+        for app in CampaignApp::ALL {
+            assert_eq!(CampaignApp::from_ordinal(app.ordinal()), Some(app));
+        }
+        for s in [
+            Strategy::Baseline,
+            Strategy::DetectOnly,
+            Strategy::SysCkpt,
+            Strategy::UserCkpt,
+        ] {
+            assert_eq!(strategy_from_ordinal(strategy_ordinal(s)), Some(s));
+        }
+        for v in [ValidationMode::Full, ValidationMode::Sha256] {
+            assert_eq!(validation_from_ordinal(validation_ordinal(v)), Some(v));
+        }
+        assert_eq!(CampaignApp::from_ordinal(99), None);
+        assert_eq!(strategy_from_ordinal(99), None);
+        assert_eq!(validation_from_ordinal(99), None);
     }
 }

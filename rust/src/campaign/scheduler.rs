@@ -6,6 +6,11 @@
 //! runs one isolated world at a time, all borrowing the same injected
 //! engine deps; results land in per-index slots, which is what makes the
 //! aggregate independent of completion order.
+//!
+//! [`run_tasks`] is the reusable core: it executes an arbitrary task list —
+//! the full sweep, or one shard's slice of it ([`crate::fleet`]) — and
+//! reports each finished task through a caller-supplied sink (journaling,
+//! live status, …). [`run_campaign`] stays the one-call full sweep.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -14,8 +19,18 @@ use crate::coordinator::RunDeps;
 use crate::error::{Result, SedarError};
 
 use super::aggregate::CampaignReport;
-use super::shard::{self, TaskOutcome};
+use super::shard::{self, CampaignTask, TaskOutcome};
 use super::{build_tasks, CampaignSpec};
+
+/// Called after each finished task with `(done_so_far, total, outcome)`.
+/// Invoked from worker threads — implementations must be `Sync` and are
+/// responsible for their own locking (e.g. a mutex around a journal file).
+pub type TaskSink<'a> = &'a (dyn Fn(usize, usize, &TaskOutcome) + Sync);
+
+/// A sink that ignores every event.
+pub fn null_sink() -> impl Fn(usize, usize, &TaskOutcome) + Sync {
+    |_, _, _| {}
+}
 
 /// Run the whole campaign described by `spec` and aggregate the outcomes.
 pub fn run_campaign(spec: &CampaignSpec) -> Result<CampaignReport> {
@@ -25,13 +40,29 @@ pub fn run_campaign(spec: &CampaignSpec) -> Result<CampaignReport> {
             "campaign filter selects no tasks".into(),
         ));
     }
+    let outcomes = run_tasks(spec, &tasks, &null_sink())?;
+    Ok(CampaignReport::new(spec.seed, outcomes))
+}
+
+/// Execute `tasks` (any subset of the spec's canonical task list, e.g. one
+/// shard's slice) over the worker pool. Outcomes come back ordered by the
+/// tasks' positions in the given slice; their `index` fields keep the
+/// canonical campaign indices.
+pub fn run_tasks(
+    spec: &CampaignSpec,
+    tasks: &[CampaignTask],
+    sink: TaskSink,
+) -> Result<Vec<TaskOutcome>> {
+    if tasks.is_empty() {
+        return Ok(Vec::new());
+    }
     let jobs = spec.jobs.clamp(1, tasks.len());
 
-    // One shared engine process for every world in the sweep (the tentpole
-    // refactor: runs borrow deps, they do not own engines). Warming is
-    // all-or-nothing across the union of the swept apps' artifacts: one
-    // missing artifact degrades the whole sweep to the pure-rust fallback,
-    // which keeps every cell on the same (deterministic) compute path.
+    // One shared engine process for every world in the sweep (runs borrow
+    // deps, they do not own engines). Warming is all-or-nothing across the
+    // union of the swept apps' artifacts: one missing artifact degrades the
+    // whole sweep to the pure-rust fallback, which keeps every cell on the
+    // same (deterministic) compute path.
     let artifacts: Vec<String> = spec
         .apps
         .iter()
@@ -43,14 +74,15 @@ pub fn run_campaign(spec: &CampaignSpec) -> Result<CampaignReport> {
     std::fs::create_dir_all(&root)?;
 
     let next = AtomicUsize::new(0);
+    let done = AtomicUsize::new(0);
     let slots: Vec<Mutex<Option<TaskOutcome>>> =
         tasks.iter().map(|_| Mutex::new(None)).collect();
 
     std::thread::scope(|s| {
         for w in 0..jobs {
-            let tasks = &tasks;
             let slots = &slots;
             let next = &next;
+            let done = &done;
             let root = &root;
             let worker_deps = deps.clone();
             let base = &spec.base;
@@ -63,17 +95,20 @@ pub fn run_campaign(spec: &CampaignSpec) -> Result<CampaignReport> {
                     }
                     let task = &tasks[i];
                     let out = shard::run_task(task, root, &worker_deps, base);
+                    let finished = done.fetch_add(1, Ordering::SeqCst) + 1;
                     if echo {
                         eprintln!(
-                            "[w{w}] {:>3}/{} sc{:02} {:>6} × {:<11} → {}",
-                            i + 1,
+                            "[w{w}] {:>3}/{} t{:03} sc{:02} {:>6} × {:<11} → {}",
+                            finished,
                             tasks.len(),
+                            task.index,
                             task.scenario.id,
                             task.app.label(),
                             task.strategy.label(),
                             if out.pass { "OK" } else { "MISMATCH" }
                         );
                     }
+                    sink(finished, tasks.len(), &out);
                     *slots[i].lock().unwrap() = Some(out);
                 }
             });
@@ -89,5 +124,5 @@ pub fn run_campaign(spec: &CampaignSpec) -> Result<CampaignReport> {
         })
         .collect();
 
-    Ok(CampaignReport::new(spec.seed, outcomes))
+    Ok(outcomes)
 }

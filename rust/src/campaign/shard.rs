@@ -22,6 +22,7 @@ use std::time::Duration;
 
 use crate::config::{RunConfig, Strategy};
 use crate::coordinator::{RunDeps, RunOutcome, SedarRun};
+use crate::detect::ValidationMode;
 use crate::error::FaultClass;
 use crate::inject::{InjectKind, InjectPoint, InjectionSpec};
 use crate::recovery::ResumeFrom;
@@ -30,7 +31,7 @@ use crate::workfault::{self, Scenario};
 
 use super::{campaign_matmul, CampaignApp};
 
-/// One (scenario × app × strategy) cell of the sweep.
+/// One (scenario × app × strategy × validation × faults) cell of the sweep.
 #[derive(Debug, Clone)]
 pub struct CampaignTask {
     /// Position in the canonical task order (the aggregation key).
@@ -38,8 +39,12 @@ pub struct CampaignTask {
     pub scenario: Scenario,
     pub app: CampaignApp,
     pub strategy: Strategy,
-    /// `hash(campaign_seed, scenario, app, strategy)` — drives the
-    /// workload, the transplanted injection site, nothing else.
+    /// Message-validation mode the cell runs under (beyond-paper axis).
+    pub validation: ValidationMode,
+    /// How many independent faults the cell arms (1 = the paper's sweep).
+    pub faults: u32,
+    /// `hash(campaign_seed, scenario, app, strategy, validation, faults)` —
+    /// drives the workload, the transplanted injection sites, nothing else.
     pub seed: u64,
 }
 
@@ -52,6 +57,8 @@ pub struct TaskOutcome {
     pub scenario_id: u32,
     pub app: CampaignApp,
     pub strategy: Strategy,
+    pub validation: ValidationMode,
+    pub faults: u32,
     pub completed: bool,
     pub restarts: u32,
     pub injected: bool,
@@ -73,7 +80,28 @@ pub fn generic_injection(
     task: &CampaignTask,
     app: &dyn crate::apps::spec::AppSpec,
 ) -> InjectionSpec {
-    let mut rng = SplitMix64::new(task.seed);
+    seeded_injection(task, app, task.seed, 0)
+}
+
+/// The `k`-th extra armed fault of a multi-fault cell: the same
+/// seed-derived bit-flip construction as [`generic_injection`], drawn from
+/// a per-fault sub-seed so every armed fault lands independently.
+pub fn extra_injection(
+    task: &CampaignTask,
+    app: &dyn crate::apps::spec::AppSpec,
+    k: u32,
+) -> InjectionSpec {
+    let sub_seed = SplitMix64::new(task.seed ^ (0xFA17_0000 + k as u64)).next_u64();
+    seeded_injection(task, app, sub_seed, k)
+}
+
+fn seeded_injection(
+    task: &CampaignTask,
+    app: &dyn crate::apps::spec::AppSpec,
+    seed: u64,
+    fault_no: u32,
+) -> InjectionSpec {
+    let mut rng = SplitMix64::new(seed);
     let rank = task.scenario.rank % app.nranks();
     let store = app.init_store(rank, task.seed);
     let vars: Vec<String> = app
@@ -88,7 +116,11 @@ pub fn generic_injection(
     // the sweep, exactly as in the matmul catalog.
     let phase = 1 + rng.below(app.n_phases() - 1);
     InjectionSpec {
-        name: format!("campaign-{}-sc{}", app.name(), task.scenario.id),
+        name: format!(
+            "campaign-{}-sc{}-f{fault_no}",
+            app.name(),
+            task.scenario.id
+        ),
         point: InjectPoint::BeforePhase(phase),
         rank,
         replica: 1,
@@ -102,6 +134,7 @@ pub fn generic_injection(
 pub fn run_task(task: &CampaignTask, root: &Path, deps: &RunDeps, base: &RunConfig) -> TaskOutcome {
     let cfg = RunConfig {
         strategy: task.strategy,
+        validation: task.validation,
         seed: task.seed,
         run_dir: root.join(format!(
             "t{:04}-sc{}-{}-{}",
@@ -113,20 +146,26 @@ pub fn run_task(task: &CampaignTask, root: &Path, deps: &RunDeps, base: &RunConf
         ..base.clone()
     };
 
-    let (app, spec) = match task.app {
+    let (app, mut specs) = match task.app {
         CampaignApp::Matmul => {
             let m = campaign_matmul();
             let spec = workfault::injection_for(&m, &task.scenario, &cfg);
-            (task.app.instantiate(), spec)
+            (task.app.instantiate(), vec![spec])
         }
         _ => {
             let app = task.app.instantiate();
             let spec = generic_injection(task, app.as_ref());
-            (app, spec)
+            (app, vec![spec])
         }
     };
+    // Beyond-paper multi-fault cells arm extra independent bit-flips on top
+    // of the scenario's canonical fault (§3.2's discussion: recovery stays
+    // correct, possibly at sub-optimal rollback cost).
+    for k in 1..task.faults {
+        specs.push(extra_injection(task, app.as_ref(), k));
+    }
 
-    let run = SedarRun::new(app, cfg, Some(spec));
+    let run = SedarRun::new_multi(app, cfg, specs);
     // A panicking world (a poisoned assertion deep in a replica path, say)
     // must surface as one failed cell, not abort the pool and discard every
     // completed outcome.
@@ -153,6 +192,8 @@ fn failed_outcome(task: &CampaignTask, mismatch: String) -> TaskOutcome {
         scenario_id: task.scenario.id,
         app: task.app,
         strategy: task.strategy,
+        validation: task.validation,
+        faults: task.faults,
         completed: false,
         restarts: 0,
         injected: false,
@@ -165,14 +206,23 @@ fn failed_outcome(task: &CampaignTask, mismatch: String) -> TaskOutcome {
     }
 }
 
-/// Grade an observed outcome per the task's (app × strategy) cell.
+/// Grade an observed outcome per the task's cell. Paper cells (full
+/// validation, single fault) are held to the strict §4.1 oracle / §3.x
+/// strategy guarantees; beyond-paper cells (sha256 validation or
+/// multi-fault) have no Table-2 prediction, so the verdict is end-to-end
+/// with the recovery-cost bounds the algorithms still guarantee.
 fn grade(task: &CampaignTask, outcome: &RunOutcome) -> TaskOutcome {
     let sc = &task.scenario;
-    let mut mismatches = match (task.app, task.strategy) {
-        (CampaignApp::Matmul, Strategy::SysCkpt) => workfault::check_prediction(sc, outcome),
-        (CampaignApp::Matmul, Strategy::DetectOnly) => grade_matmul_detect_only(sc, outcome),
-        (CampaignApp::Matmul, Strategy::UserCkpt) => grade_matmul_user(sc, outcome),
-        _ => grade_end_to_end(task.strategy, outcome),
+    let beyond_paper = task.validation != ValidationMode::Full || task.faults != 1;
+    let mut mismatches = if beyond_paper {
+        grade_beyond_paper(task, outcome)
+    } else {
+        match (task.app, task.strategy) {
+            (CampaignApp::Matmul, Strategy::SysCkpt) => workfault::check_prediction(sc, outcome),
+            (CampaignApp::Matmul, Strategy::DetectOnly) => grade_matmul_detect_only(sc, outcome),
+            (CampaignApp::Matmul, Strategy::UserCkpt) => grade_matmul_user(sc, outcome),
+            _ => grade_end_to_end(task.strategy, outcome),
+        }
     };
     // Universal floor for every cell: a task that gave up is a failure.
     if !outcome.completed && mismatches.is_empty() {
@@ -183,6 +233,8 @@ fn grade(task: &CampaignTask, outcome: &RunOutcome) -> TaskOutcome {
         scenario_id: sc.id,
         app: task.app,
         strategy: task.strategy,
+        validation: task.validation,
+        faults: task.faults,
         completed: outcome.completed,
         restarts: outcome.restarts,
         injected: outcome.injected,
@@ -295,6 +347,44 @@ fn grade_end_to_end(strategy: Strategy, o: &RunOutcome) -> Vec<String> {
         m.push(format!(
             "{}: expected at most 1 restart, observed {}",
             strategy.label(),
+            o.restarts
+        ));
+    }
+    m
+}
+
+/// Beyond-paper cells (sha256 validation and/or multiple armed faults):
+/// the sweep asserts SEDAR's end-to-end promise — the protected run absorbs
+/// whatever was armed and finishes with the oracle's answer — plus the
+/// recovery-cost bounds that survive multiple faults: detect-only relaunches
+/// at most once per fault, user-ckpt rolls back at most once per fault
+/// (Algorithm 2 applied fault-by-fault; see `rust/tests/multi_fault.rs`).
+/// Sys-ckpt's `N_roll` may legitimately exceed the fault count (Algorithm 1
+/// walks the checkpoint chain), so it carries no restart bound here.
+fn grade_beyond_paper(task: &CampaignTask, o: &RunOutcome) -> Vec<String> {
+    let mut m = Vec::new();
+    if !o.completed {
+        m.push("run did not complete".into());
+    }
+    if o.result_correct != Some(true) {
+        m.push(format!("final result not correct: {:?}", o.result_correct));
+    }
+    // `injected` is all-latches-fired; a matmul LE scenario's canonical
+    // fault may legitimately never fire (its window can be unreachable), so
+    // only non-LE paper scenarios pin it. Transplanted and extra faults
+    // always fire at reachable phase boundaries.
+    let le_scenario = task.app == CampaignApp::Matmul && task.scenario.effect == FaultClass::Le;
+    if !o.injected && !le_scenario {
+        m.push("not every armed injection fired".into());
+    }
+    if matches!(task.strategy, Strategy::DetectOnly | Strategy::UserCkpt)
+        && o.restarts > task.faults
+    {
+        m.push(format!(
+            "{}: expected at most {} restart(s) for {} armed fault(s), observed {}",
+            task.strategy.label(),
+            task.faults,
+            task.faults,
             o.restarts
         ));
     }

@@ -7,21 +7,24 @@
 //! +--------+---------+-------+----------------+----------------+---------+
 //! ```
 //!
-//! `flags & 1` ⇒ body is DEFLATE-compressed. The CRC is over the
-//! *uncompressed* payload, so storage corruption is always detected at
-//! restart time — distinct from SEDAR's *silent* checkpoint corruption,
-//! which is corrupt-but-consistent data faithfully captured from a faulty
-//! replica (the frame CRC is valid in that case; only the replica-vs-replica
-//! comparison can catch it, which is the whole point of §3.3).
+//! `flags & 1` ⇒ body is compressed with the crate's own LZSS codec
+//! ([`crate::util::codec`] — the offline dependency set has no compression
+//! crate, so "deflate" here names the policy knob, not RFC 1951). The CRC
+//! is over the *uncompressed* payload, so storage corruption is always
+//! detected at restart time — distinct from SEDAR's *silent* checkpoint
+//! corruption, which is corrupt-but-consistent data faithfully captured
+//! from a faulty replica (the frame CRC is valid in that case; only the
+//! replica-vs-replica comparison can catch it, which is the whole point of
+//! §3.3).
+//!
+//! Beyond checkpoints, the same frame wraps the fleet's durable shard
+//! artifacts ([`crate::fleet::artifact`]) — one codec guards every byte the
+//! system persists.
 
-use std::io::{Read, Write};
 use std::path::Path;
 
-use flate2::read::DeflateDecoder;
-use flate2::write::DeflateEncoder;
-use flate2::Compression;
-
 use crate::error::{Result, SedarError};
+use crate::util::codec::{compress, crc32, decompress};
 
 const MAGIC: &[u8; 4] = b"SDCK";
 const VERSION: u32 = 1;
@@ -36,7 +39,8 @@ pub enum Codec {
     /// EXPERIMENTS.md §Perf). Use [`Codec::Deflate`] for workloads with
     /// compressible state (sparse/integer-heavy).
     Raw,
-    /// DEFLATE at the given level (0–9).
+    /// Compress at the given effort level (1–9; the name predates the
+    /// zero-dep LZSS codec that now backs it).
     Deflate(u32),
 }
 
@@ -48,17 +52,10 @@ impl Default for Codec {
 
 /// Serialize `payload` into a frame at `path` (atomic: write + rename).
 pub fn write_frame(path: &Path, payload: &[u8], codec: Codec) -> Result<()> {
-    let crc = crc32fast::hash(payload);
+    let crc = crc32(payload);
     let (flags, body) = match codec {
         Codec::Raw => (0u32, payload.to_vec()),
-        Codec::Deflate(level) => {
-            let mut enc = DeflateEncoder::new(
-                Vec::with_capacity(payload.len() / 2),
-                Compression::new(level),
-            );
-            enc.write_all(payload)?;
-            (FLAG_DEFLATE, enc.finish()?)
-        }
+        Codec::Deflate(level) => (FLAG_DEFLATE, compress(payload, level)),
     };
     let mut out = Vec::with_capacity(24 + body.len());
     out.extend_from_slice(MAGIC);
@@ -95,10 +92,18 @@ pub fn read_frame(path: &Path) -> Result<Vec<u8>> {
     let len = u64::from_le_bytes(data[16..24].try_into().unwrap()) as usize;
     let body = &data[24..];
     let payload = if flags & FLAG_DEFLATE != 0 {
-        let mut dec = DeflateDecoder::new(body);
-        let mut out = Vec::with_capacity(len);
-        dec.read_to_end(&mut out)?;
-        out
+        // A corrupt length field must fail cleanly, not allocate the moon:
+        // the LZSS stream expands at most ~86× (one 3-byte token → 258
+        // bytes), so anything beyond that bound is not a valid frame.
+        if len > body.len().saturating_mul(128) + 1024 {
+            return Err(SedarError::Checkpoint(format!(
+                "{}: implausible payload length {len} for {}-byte body",
+                path.display(),
+                body.len()
+            )));
+        }
+        decompress(body, len)
+            .map_err(|e| SedarError::Checkpoint(format!("{}: {e}", path.display())))?
     } else {
         body.to_vec()
     };
@@ -109,7 +114,7 @@ pub fn read_frame(path: &Path) -> Result<Vec<u8>> {
             payload.len()
         )));
     }
-    let actual_crc = crc32fast::hash(&payload);
+    let actual_crc = crc32(&payload);
     if actual_crc != crc {
         return Err(SedarError::Checkpoint(format!(
             "{}: CRC mismatch (storage corruption)",

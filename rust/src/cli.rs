@@ -9,8 +9,13 @@
 //! The `campaign` subcommand drives [`crate::campaign`]: `sedar campaign
 //! --jobs 8 --seed 42 [--filter app=matmul,strategy=sys,scenario=1-8]`
 //! fans the 64-scenario workfault × apps × strategies over a worker pool;
-//! the same `--seed` yields a byte-identical report for any `--jobs`. The
-//! full flag list is in the `HELP` text of `src/main.rs`.
+//! the same `--seed` yields a byte-identical report for any `--jobs`.
+//! Fleet mode ([`crate::fleet`]) rides the same grammar: `--shard i/N`
+//! runs one deterministic slice, `--out`/`--journal` make it durable and
+//! resumable, `--status-port` serves live progress, and the `merge`
+//! subcommand (`sedar merge s1.bin s2.bin`) recombines shard artifacts
+//! into the byte-identical full report. The full flag list is in the
+//! `HELP` text of `src/main.rs`.
 
 use std::collections::HashMap;
 

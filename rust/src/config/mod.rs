@@ -138,17 +138,7 @@ impl RunConfig {
     pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
         match key {
             "strategy" => self.strategy = Strategy::parse(value)?,
-            "validation" => {
-                self.validation = match value {
-                    "full" => ValidationMode::Full,
-                    "sha256" | "hash" => ValidationMode::Sha256,
-                    other => {
-                        return Err(SedarError::Config(format!(
-                            "unknown validation '{other}' (full|sha256)"
-                        )))
-                    }
-                }
-            }
+            "validation" => self.validation = ValidationMode::parse(value)?,
             "collectives" => {
                 self.collectives = match value {
                     "p2p" | "point-to-point" => CollectiveImpl::PointToPoint,

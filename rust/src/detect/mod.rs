@@ -15,8 +15,6 @@
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
-use sha2::{Digest, Sha256};
-
 use crate::error::{FaultClass, SedarError};
 use crate::vmpi::Network;
 
@@ -29,6 +27,30 @@ pub enum ValidationMode {
     /// SHA-256 digest comparison (the paper's hash-based validation used for
     /// application-level checkpoints, and RedMPI-style message hashing).
     Sha256,
+}
+
+impl ValidationMode {
+    /// The single parser behind the config key and the campaign filter —
+    /// one set of accepted spellings.
+    pub fn parse(s: &str) -> crate::error::Result<ValidationMode> {
+        Ok(match s {
+            "full" => ValidationMode::Full,
+            "sha256" | "hash" => ValidationMode::Sha256,
+            other => {
+                return Err(SedarError::Config(format!(
+                    "unknown validation '{other}' (full|sha256)"
+                )))
+            }
+        })
+    }
+
+    /// Short label for report rows and filters.
+    pub fn label(self) -> &'static str {
+        match self {
+            ValidationMode::Full => "full",
+            ValidationMode::Sha256 => "sha256",
+        }
+    }
 }
 
 /// Fast byte-equality: compares 8 bytes at a time, then the tail.
@@ -52,11 +74,11 @@ pub fn buffers_equal(a: &[u8], b: &[u8]) -> bool {
     a[words * 8..] == b[words * 8..]
 }
 
-/// SHA-256 digest of a buffer (user-level checkpoint validation).
+/// SHA-256 digest of a buffer (user-level checkpoint validation). The
+/// implementation is the crate's own ([`crate::util::sha256`]) — the
+/// offline dependency set has no hashing crate.
 pub fn sha256(bytes: &[u8]) -> [u8; 32] {
-    let mut h = Sha256::new();
-    h.update(bytes);
-    h.finalize().into()
+    crate::util::sha256::sha256(bytes)
 }
 
 /// The comparison token two replicas exchange: either the full buffer or its

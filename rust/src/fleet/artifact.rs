@@ -1,0 +1,425 @@
+//! Durable shard artifacts: one file per fleet member, holding the
+//! [`TaskOutcome`]s of that member's slice of the sweep.
+//!
+//! The payload is a versioned binary record stream wrapped in the same
+//! length-prefixed, CRC-checked frame the checkpoints use
+//! ([`crate::checkpoint::snapshot`]) — zero new formats to audit, and
+//! storage corruption of a shard file surfaces as a recoverable error at
+//! merge time, exactly like a corrupt checkpoint at restart time.
+//!
+//! ```text
+//! frame payload:
+//!   "SDSH" | version u32 | seed u64 | shard u32 | of u32 | total u64
+//!   | spec_hash u64 | n u64 | then n × outcome records (encode_outcome)
+//! ```
+//!
+//! Every field of [`TaskOutcome`] round-trips — including the mismatch
+//! notes (arbitrary UTF-8) and the informational wall time — so a merged
+//! report is byte-identical to the single-process run's.
+
+use std::path::Path;
+
+use crate::campaign::shard::TaskOutcome;
+use crate::campaign::{
+    strategy_from_ordinal, strategy_ordinal, validation_from_ordinal, validation_ordinal,
+    CampaignApp,
+};
+use crate::checkpoint::snapshot::{read_frame, write_frame, Codec};
+use crate::error::{FaultClass, Result, SedarError};
+use crate::recovery::ResumeFrom;
+
+const MAGIC: &[u8; 4] = b"SDSH";
+const VERSION: u32 = 1;
+
+/// Identity of a shard artifact: which sweep it belongs to and which slice
+/// it claims. `total_tasks` is the canonical task-list length of the sweep
+/// (after filters), so a merge can tell "complete" from "partial";
+/// `spec_hash` ([`crate::campaign::sweep_fingerprint`]) pins the exact
+/// cell list, so shards of same-seed, same-width but differently-filtered
+/// sweeps can never be silently mixed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardMeta {
+    pub seed: u64,
+    /// 0-based member index of the producing [`super::plan::ShardPlan`].
+    pub shard_index: u32,
+    pub shard_count: u32,
+    pub total_tasks: u64,
+    /// Fingerprint of the sweep's canonical task list (seed + filters).
+    pub spec_hash: u64,
+}
+
+/// Bounds-checked little-endian reader over a decoded payload.
+pub struct ByteReader<'a> {
+    data: &'a [u8],
+    pos: usize,
+    /// Context for error messages ("shard artifact", "fleet journal", …).
+    what: &'static str,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(data: &'a [u8], what: &'static str) -> ByteReader<'a> {
+        ByteReader { data, pos: 0, what }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.data.len() - self.pos
+    }
+
+    fn truncated<T>(&self) -> Result<T> {
+        Err(SedarError::Checkpoint(format!(
+            "{} truncated at offset {}",
+            self.what, self.pos
+        )))
+    }
+
+    pub fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            return self.truncated();
+        }
+        let s = &self.data[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.bytes(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
+    }
+
+    pub fn string(&mut self) -> Result<String> {
+        let len = self.u32()? as usize;
+        // Defensive cap: a corrupt length must not allocate the moon. Any
+        // legitimate site/mismatch string is far below this.
+        if len > 1 << 20 {
+            return Err(SedarError::Checkpoint(format!(
+                "{}: implausible string length {len}",
+                self.what
+            )));
+        }
+        let raw = self.bytes(len)?;
+        String::from_utf8(raw.to_vec()).map_err(|_| {
+            SedarError::Checkpoint(format!("{}: non-UTF-8 string payload", self.what))
+        })
+    }
+}
+
+fn push_string(out: &mut Vec<u8>, s: &str) {
+    out.extend_from_slice(&(s.len() as u32).to_le_bytes());
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn fault_class_ordinal(c: FaultClass) -> u8 {
+    match c {
+        FaultClass::Tdc => 0,
+        FaultClass::Fsc => 1,
+        FaultClass::Le => 2,
+        FaultClass::Toe => 3,
+        FaultClass::CkptCorrupt => 4,
+    }
+}
+
+fn fault_class_from_ordinal(ord: u8) -> Option<FaultClass> {
+    [
+        FaultClass::Tdc,
+        FaultClass::Fsc,
+        FaultClass::Le,
+        FaultClass::Toe,
+        FaultClass::CkptCorrupt,
+    ]
+    .into_iter()
+    .find(|c| fault_class_ordinal(*c) == ord)
+}
+
+/// Append one outcome's binary record to `out`.
+pub fn encode_outcome(o: &TaskOutcome, out: &mut Vec<u8>) {
+    out.extend_from_slice(&(o.index as u64).to_le_bytes());
+    out.extend_from_slice(&o.scenario_id.to_le_bytes());
+    out.push(o.app.ordinal() as u8);
+    out.push(strategy_ordinal(o.strategy) as u8);
+    out.push(validation_ordinal(o.validation) as u8);
+    out.extend_from_slice(&o.faults.to_le_bytes());
+    out.push(o.completed as u8);
+    out.push(o.injected as u8);
+    out.push(match o.correct {
+        None => 0,
+        Some(false) => 1,
+        Some(true) => 2,
+    });
+    out.extend_from_slice(&o.restarts.to_le_bytes());
+    match &o.first_detection {
+        None => out.push(0),
+        Some((class, site)) => {
+            out.push(1 + fault_class_ordinal(*class));
+            push_string(out, site);
+        }
+    }
+    match o.last_resume {
+        None => out.push(0),
+        Some(ResumeFrom::Scratch) => out.push(1),
+        Some(ResumeFrom::SysCkpt(k)) => {
+            out.push(2);
+            out.extend_from_slice(&k.to_le_bytes());
+        }
+        Some(ResumeFrom::UserCkpt(k)) => {
+            out.push(3);
+            out.extend_from_slice(&k.to_le_bytes());
+        }
+    }
+    out.push(o.pass as u8);
+    out.extend_from_slice(&(o.mismatches.len() as u32).to_le_bytes());
+    for m in &o.mismatches {
+        push_string(out, m);
+    }
+    let wall_nanos = u64::try_from(o.wall.as_nanos()).unwrap_or(u64::MAX);
+    out.extend_from_slice(&wall_nanos.to_le_bytes());
+}
+
+fn bool_from(b: u8, what: &str) -> Result<bool> {
+    match b {
+        0 => Ok(false),
+        1 => Ok(true),
+        other => Err(SedarError::Checkpoint(format!(
+            "{what}: bad bool byte {other}"
+        ))),
+    }
+}
+
+/// Decode one outcome record from `r`.
+pub fn decode_outcome(r: &mut ByteReader<'_>) -> Result<TaskOutcome> {
+    let what = r.what;
+    let bad = |field: &str, v: u64| {
+        SedarError::Checkpoint(format!("{what}: bad {field} ordinal {v}"))
+    };
+    let index = r.u64()? as usize;
+    let scenario_id = r.u32()?;
+    let app_ord = r.u8()? as u64;
+    let app = CampaignApp::from_ordinal(app_ord).ok_or_else(|| bad("app", app_ord))?;
+    let strat_ord = r.u8()? as u64;
+    let strategy = strategy_from_ordinal(strat_ord).ok_or_else(|| bad("strategy", strat_ord))?;
+    let val_ord = r.u8()? as u64;
+    let validation = validation_from_ordinal(val_ord).ok_or_else(|| bad("validation", val_ord))?;
+    let faults = r.u32()?;
+    let completed = bool_from(r.u8()?, what)?;
+    let injected = bool_from(r.u8()?, what)?;
+    let correct = match r.u8()? {
+        0 => None,
+        1 => Some(false),
+        2 => Some(true),
+        other => return Err(bad("correct", other as u64)),
+    };
+    let restarts = r.u32()?;
+    let first_detection = match r.u8()? {
+        0 => None,
+        tag => {
+            let class = fault_class_from_ordinal(tag - 1)
+                .ok_or_else(|| bad("fault class", tag as u64))?;
+            Some((class, r.string()?))
+        }
+    };
+    let last_resume = match r.u8()? {
+        0 => None,
+        1 => Some(ResumeFrom::Scratch),
+        2 => Some(ResumeFrom::SysCkpt(r.u64()?)),
+        3 => Some(ResumeFrom::UserCkpt(r.u64()?)),
+        other => return Err(bad("resume", other as u64)),
+    };
+    let pass = bool_from(r.u8()?, what)?;
+    let n_mismatches = r.u32()?;
+    if n_mismatches > 1 << 16 {
+        return Err(SedarError::Checkpoint(format!(
+            "{what}: implausible mismatch count {n_mismatches}"
+        )));
+    }
+    let mut mismatches = Vec::with_capacity(n_mismatches as usize);
+    for _ in 0..n_mismatches {
+        mismatches.push(r.string()?);
+    }
+    let wall = std::time::Duration::from_nanos(r.u64()?);
+    Ok(TaskOutcome {
+        index,
+        scenario_id,
+        app,
+        strategy,
+        validation,
+        faults,
+        completed,
+        restarts,
+        injected,
+        correct,
+        first_detection,
+        last_resume,
+        pass,
+        mismatches,
+        wall,
+    })
+}
+
+/// Serialize a shard's outcomes to `path` (atomically, via the snapshot
+/// frame's write-then-rename).
+pub fn write_artifact(path: &Path, meta: &ShardMeta, outcomes: &[TaskOutcome]) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    let mut payload = Vec::with_capacity(64 + outcomes.len() * 64);
+    payload.extend_from_slice(MAGIC);
+    payload.extend_from_slice(&VERSION.to_le_bytes());
+    payload.extend_from_slice(&meta.seed.to_le_bytes());
+    payload.extend_from_slice(&meta.shard_index.to_le_bytes());
+    payload.extend_from_slice(&meta.shard_count.to_le_bytes());
+    payload.extend_from_slice(&meta.total_tasks.to_le_bytes());
+    payload.extend_from_slice(&meta.spec_hash.to_le_bytes());
+    payload.extend_from_slice(&(outcomes.len() as u64).to_le_bytes());
+    for o in outcomes {
+        encode_outcome(o, &mut payload);
+    }
+    write_frame(path, &payload, Codec::Raw)
+}
+
+/// Read a shard artifact back, verifying frame CRC, magic and version.
+pub fn read_artifact(path: &Path) -> Result<(ShardMeta, Vec<TaskOutcome>)> {
+    let payload = read_frame(path)?;
+    let mut r = ByteReader::new(&payload, "shard artifact");
+    if r.bytes(4)? != MAGIC {
+        return Err(SedarError::Checkpoint(format!(
+            "{}: not a shard artifact (bad magic)",
+            path.display()
+        )));
+    }
+    let version = r.u32()?;
+    if version != VERSION {
+        return Err(SedarError::Checkpoint(format!(
+            "{}: unsupported shard artifact version {version}",
+            path.display()
+        )));
+    }
+    let meta = ShardMeta {
+        seed: r.u64()?,
+        shard_index: r.u32()?,
+        shard_count: r.u32()?,
+        total_tasks: r.u64()?,
+        spec_hash: r.u64()?,
+    };
+    let n = r.u64()?;
+    // A shard can never hold more outcomes than the sweep has tasks, and
+    // every record is ≥ 32 bytes — both bounds are cheap to check before
+    // trusting `n` with an allocation.
+    if n > meta.total_tasks || n as usize > r.remaining() / 32 + 1 {
+        return Err(SedarError::Checkpoint(format!(
+            "{}: implausible outcome count {n}",
+            path.display()
+        )));
+    }
+    let mut outcomes = Vec::with_capacity(n as usize);
+    for _ in 0..n {
+        outcomes.push(decode_outcome(&mut r)?);
+    }
+    if r.remaining() != 0 {
+        return Err(SedarError::Checkpoint(format!(
+            "{}: {} trailing byte(s) after last record",
+            path.display(),
+            r.remaining()
+        )));
+    }
+    Ok((meta, outcomes))
+}
+
+/// Combine shard artifacts into one outcome list in canonical task order.
+///
+/// Rejects shards from different sweeps (mismatched seed or total-task
+/// count) and overlapping slices (duplicate task indices — see
+/// [`crate::campaign::aggregate::merge`]'s policy). Returns
+/// `(seed, total_tasks, outcomes)`; the caller decides whether a partial
+/// union (fewer outcomes than `total_tasks`) is acceptable.
+pub fn merge_artifacts(
+    shards: Vec<(ShardMeta, Vec<TaskOutcome>)>,
+) -> Result<(u64, u64, Vec<TaskOutcome>)> {
+    let first = shards
+        .first()
+        .map(|(m, _)| *m)
+        .ok_or_else(|| SedarError::Config("merge: no shard artifacts given".into()))?;
+    for (m, _) in &shards {
+        if m.seed != first.seed {
+            return Err(SedarError::Config(format!(
+                "merge: shard seeds differ ({} vs {}) — artifacts from different sweeps",
+                first.seed, m.seed
+            )));
+        }
+        if m.total_tasks != first.total_tasks {
+            return Err(SedarError::Config(format!(
+                "merge: shard task totals differ ({} vs {}) — artifacts from different \
+                 filters or specs",
+                first.total_tasks, m.total_tasks
+            )));
+        }
+        if m.spec_hash != first.spec_hash {
+            return Err(SedarError::Config(
+                "merge: shard spec fingerprints differ — artifacts were produced \
+                 under different --filter sets and cannot be combined"
+                    .into(),
+            ));
+        }
+    }
+    let outcomes = crate::campaign::aggregate::merge(
+        shards.into_iter().map(|(_, outcomes)| outcomes).collect(),
+    )?;
+    Ok((first.seed, first.total_tasks, outcomes))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(index: usize) -> TaskOutcome {
+        TaskOutcome {
+            index,
+            scenario_id: 7,
+            app: CampaignApp::Sw,
+            strategy: crate::config::Strategy::UserCkpt,
+            validation: crate::detect::ValidationMode::Sha256,
+            faults: 2,
+            completed: true,
+            restarts: 1,
+            injected: true,
+            correct: Some(true),
+            first_detection: Some((FaultClass::Tdc, "GATHER|rank1".into())),
+            last_resume: Some(ResumeFrom::UserCkpt(3)),
+            pass: false,
+            mismatches: vec!["ошибка №1 — 错误".into(), String::new()],
+            wall: std::time::Duration::from_micros(1234),
+        }
+    }
+
+    #[test]
+    fn record_roundtrip() {
+        let mut buf = Vec::new();
+        encode_outcome(&sample(42), &mut buf);
+        let mut r = ByteReader::new(&buf, "test");
+        let back = decode_outcome(&mut r).unwrap();
+        assert_eq!(r.remaining(), 0);
+        assert_eq!(format!("{:?}", back), format!("{:?}", sample(42)));
+    }
+
+    #[test]
+    fn decode_rejects_bad_ordinals_and_truncation() {
+        let mut buf = Vec::new();
+        encode_outcome(&sample(1), &mut buf);
+        // Truncation at every prefix must error, never panic.
+        for cut in 0..buf.len() {
+            let mut r = ByteReader::new(&buf[..cut], "test");
+            assert!(decode_outcome(&mut r).is_err(), "prefix {cut} decoded");
+        }
+        // Corrupt the app ordinal (offset 12: u64 index + u32 scenario).
+        let mut bad = buf.clone();
+        bad[12] = 99;
+        assert!(decode_outcome(&mut ByteReader::new(&bad, "test")).is_err());
+    }
+}

@@ -1,0 +1,314 @@
+//! The fleet's resume journal: the sweep validator checkpointing itself.
+//!
+//! SEDAR level 2 protects the *application* by journaling recoverable
+//! state as it goes; the fleet applies the same idea to the *validation
+//! campaign*. As each task of a shard completes, its [`TaskOutcome`] is
+//! appended to an on-disk journal — length-prefixed and CRC-guarded per
+//! record — so a killed shard re-run recovers every finished task, skips
+//! re-executing it, and still renders the byte-identical report (outcomes
+//! are pure functions of the task seed, so a journaled outcome *is* the
+//! outcome a re-run would have produced).
+//!
+//! ```text
+//! file   := header-record record*
+//! record := len u32 | crc32(body) u32 | body
+//! ```
+//!
+//! Record 0's body is a header binding the journal to one sweep — seed,
+//! shard plan and filtered task total — so a stale journal from a different
+//! seed or filter can never leak foreign outcomes into a report. A torn
+//! tail record (the process died mid-append) is detected by its length/CRC
+//! and dropped; everything before it is recovered.
+
+use std::fs::OpenOptions;
+use std::io::{Seek, SeekFrom, Write};
+use std::path::Path;
+
+use crate::campaign::shard::TaskOutcome;
+use crate::error::{Result, SedarError};
+use crate::util::codec::crc32;
+
+use super::artifact::{decode_outcome, encode_outcome, ByteReader, ShardMeta};
+
+const MAGIC: &[u8; 4] = b"SDJL";
+const VERSION: u32 = 1;
+/// Sanity cap on a single record body; real outcome records are ≪ this.
+const MAX_RECORD: usize = 1 << 24;
+
+/// An open, append-positioned journal.
+pub struct Journal {
+    file: std::fs::File,
+}
+
+/// `Some((body, end_offset))` if a whole, CRC-valid record starts at `pos`.
+fn next_record(data: &[u8], pos: usize) -> Option<(&[u8], usize)> {
+    if data.len() - pos < 8 {
+        return None;
+    }
+    let len = u32::from_le_bytes(data[pos..pos + 4].try_into().unwrap()) as usize;
+    let crc = u32::from_le_bytes(data[pos + 4..pos + 8].try_into().unwrap());
+    if len > MAX_RECORD || data.len() - pos - 8 < len {
+        return None;
+    }
+    let body = &data[pos + 8..pos + 8 + len];
+    if crc32(body) != crc {
+        return None;
+    }
+    Some((body, pos + 8 + len))
+}
+
+fn header_body(meta: &ShardMeta) -> Vec<u8> {
+    let mut b = Vec::with_capacity(48);
+    b.extend_from_slice(MAGIC);
+    b.extend_from_slice(&VERSION.to_le_bytes());
+    b.extend_from_slice(&meta.seed.to_le_bytes());
+    b.extend_from_slice(&meta.shard_index.to_le_bytes());
+    b.extend_from_slice(&meta.shard_count.to_le_bytes());
+    b.extend_from_slice(&meta.total_tasks.to_le_bytes());
+    b.extend_from_slice(&meta.spec_hash.to_le_bytes());
+    b
+}
+
+fn parse_header(body: &[u8]) -> Result<ShardMeta> {
+    let mut r = ByteReader::new(body, "fleet journal header");
+    if r.bytes(4)? != MAGIC {
+        return Err(SedarError::Checkpoint(
+            "not a fleet journal (bad header magic)".into(),
+        ));
+    }
+    let version = r.u32()?;
+    if version != VERSION {
+        return Err(SedarError::Checkpoint(format!(
+            "unsupported fleet journal version {version}"
+        )));
+    }
+    Ok(ShardMeta {
+        seed: r.u64()?,
+        shard_index: r.u32()?,
+        shard_count: r.u32()?,
+        total_tasks: r.u64()?,
+        spec_hash: r.u64()?,
+    })
+}
+
+impl Journal {
+    /// Open (creating if absent) the journal at `path` for `meta`'s sweep.
+    ///
+    /// Returns the append-positioned journal plus every outcome recovered
+    /// from a previous run of the same shard. The valid prefix is kept; a
+    /// torn tail record is truncated away. A journal whose header names a
+    /// different sweep (other seed, plan or filter width) is an error — as
+    /// is a non-empty file that is not a journal at all; this function
+    /// never truncates a file it cannot positively identify as its own.
+    pub fn open(path: &Path, meta: &ShardMeta) -> Result<(Journal, Vec<TaskOutcome>)> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        let existing = match std::fs::read(path) {
+            Ok(data) => data,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Vec::new(),
+            Err(e) => return Err(e.into()),
+        };
+
+        let mut recovered: Vec<TaskOutcome> = Vec::new();
+        let mut valid_len = 0usize;
+        if !existing.is_empty() {
+            let Some((header, end)) = next_record(&existing, 0) else {
+                return Err(SedarError::Checkpoint(format!(
+                    "{}: unreadable journal header (torn or foreign file); \
+                     delete it to start the shard from scratch",
+                    path.display()
+                )));
+            };
+            let found = parse_header(header)?;
+            if found != *meta {
+                let drift = if found.spec_hash != meta.spec_hash
+                    && (found.seed, found.shard_index, found.shard_count, found.total_tasks)
+                        == (meta.seed, meta.shard_index, meta.shard_count, meta.total_tasks)
+                {
+                    " — same seed and plan but a different --filter set"
+                } else {
+                    ""
+                };
+                return Err(SedarError::Checkpoint(format!(
+                    "{}: journal belongs to a different sweep \
+                     (journal seed {} shard {}/{} of {} tasks; \
+                     this run is seed {} shard {}/{} of {} tasks){drift}",
+                    path.display(),
+                    found.seed,
+                    found.shard_index + 1,
+                    found.shard_count,
+                    found.total_tasks,
+                    meta.seed,
+                    meta.shard_index + 1,
+                    meta.shard_count,
+                    meta.total_tasks
+                )));
+            }
+            valid_len = end;
+            let mut pos = end;
+            while let Some((body, end)) = next_record(&existing, pos) {
+                let mut r = ByteReader::new(body, "fleet journal");
+                match decode_outcome(&mut r) {
+                    Ok(o) if r.remaining() == 0 => recovered.push(o),
+                    // A record that frames correctly but no longer decodes
+                    // ends the valid prefix, like a torn tail.
+                    _ => break,
+                }
+                valid_len = end;
+                pos = end;
+            }
+            // Keep the first occurrence if a record was ever duplicated
+            // (outcomes are deterministic, so duplicates are benign here;
+            // the *merge* layer is where overlap is a hard error).
+            let mut seen = std::collections::HashSet::new();
+            recovered.retain(|o| seen.insert(o.index));
+        }
+
+        let file = OpenOptions::new()
+            .create(true)
+            .write(true)
+            .truncate(false)
+            .open(path)?;
+        file.set_len(valid_len as u64)?;
+        let mut journal = Journal { file };
+        journal.file.seek(SeekFrom::End(0))?;
+        if valid_len == 0 {
+            journal.write_record(&header_body(meta))?;
+        }
+        Ok((journal, recovered))
+    }
+
+    /// Durably append one finished task (synced before returning, so a kill
+    /// immediately after completion cannot lose the record).
+    pub fn append(&mut self, outcome: &TaskOutcome) -> Result<()> {
+        let mut body = Vec::with_capacity(128);
+        encode_outcome(outcome, &mut body);
+        self.write_record(&body)
+    }
+
+    fn write_record(&mut self, body: &[u8]) -> Result<()> {
+        let mut rec = Vec::with_capacity(8 + body.len());
+        rec.extend_from_slice(&(body.len() as u32).to_le_bytes());
+        rec.extend_from_slice(&crc32(body).to_le_bytes());
+        rec.extend_from_slice(body);
+        self.file.write_all(&rec)?;
+        self.file.sync_data()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::campaign::CampaignApp;
+    use crate::config::Strategy;
+    use crate::detect::ValidationMode;
+
+    fn meta() -> ShardMeta {
+        ShardMeta {
+            seed: 42,
+            shard_index: 0,
+            shard_count: 2,
+            total_tasks: 8,
+            spec_hash: 0xF1E7,
+        }
+    }
+
+    fn outcome(index: usize) -> TaskOutcome {
+        TaskOutcome {
+            index,
+            scenario_id: index as u32,
+            app: CampaignApp::Matmul,
+            strategy: Strategy::SysCkpt,
+            validation: ValidationMode::Full,
+            faults: 1,
+            completed: true,
+            restarts: 0,
+            injected: true,
+            correct: Some(true),
+            first_detection: None,
+            last_resume: None,
+            pass: true,
+            mismatches: vec![],
+            wall: std::time::Duration::ZERO,
+        }
+    }
+
+    fn tmp(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!(
+            "sedar-journal-{tag}-{}-{:?}.bin",
+            std::process::id(),
+            std::thread::current().id()
+        ))
+    }
+
+    #[test]
+    fn append_then_recover() {
+        let p = tmp("roundtrip");
+        let _ = std::fs::remove_file(&p);
+        {
+            let (mut j, recovered) = Journal::open(&p, &meta()).unwrap();
+            assert!(recovered.is_empty());
+            j.append(&outcome(0)).unwrap();
+            j.append(&outcome(2)).unwrap();
+        }
+        let (_, recovered) = Journal::open(&p, &meta()).unwrap();
+        let idx: Vec<usize> = recovered.iter().map(|o| o.index).collect();
+        assert_eq!(idx, vec![0, 2]);
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn torn_tail_is_dropped() {
+        let p = tmp("torn");
+        let _ = std::fs::remove_file(&p);
+        {
+            let (mut j, _) = Journal::open(&p, &meta()).unwrap();
+            j.append(&outcome(0)).unwrap();
+            j.append(&outcome(2)).unwrap();
+        }
+        // Simulate a crash mid-append: chop bytes off the last record.
+        let data = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &data[..data.len() - 5]).unwrap();
+        let (mut j, recovered) = Journal::open(&p, &meta()).unwrap();
+        assert_eq!(recovered.len(), 1);
+        assert_eq!(recovered[0].index, 0);
+        // The journal must be appendable after truncation, and the new
+        // record must land cleanly where the torn one was.
+        j.append(&outcome(4)).unwrap();
+        drop(j);
+        let (_, recovered) = Journal::open(&p, &meta()).unwrap();
+        let idx: Vec<usize> = recovered.iter().map(|o| o.index).collect();
+        assert_eq!(idx, vec![0, 4]);
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn foreign_sweep_rejected() {
+        let p = tmp("foreign");
+        let _ = std::fs::remove_file(&p);
+        {
+            let (mut j, _) = Journal::open(&p, &meta()).unwrap();
+            j.append(&outcome(0)).unwrap();
+        }
+        let mut other = meta();
+        other.seed = 43;
+        assert!(Journal::open(&p, &other).is_err());
+        let mut other = meta();
+        other.shard_index = 1;
+        assert!(Journal::open(&p, &other).is_err());
+        // Same seed and plan but a different filter set (spec fingerprint).
+        let mut other = meta();
+        other.spec_hash = 0xDEAD;
+        let err = Journal::open(&p, &other).unwrap_err();
+        assert!(err.to_string().contains("--filter"), "got: {err}");
+        // A non-journal file is refused, not truncated.
+        std::fs::write(&p, b"definitely not a journal").unwrap();
+        assert!(Journal::open(&p, &meta()).is_err());
+        assert_eq!(std::fs::read(&p).unwrap(), b"definitely not a journal");
+        std::fs::remove_file(&p).unwrap();
+    }
+}

@@ -1,0 +1,136 @@
+//! Deterministic shard plans: which slice of the canonical task list a
+//! fleet member owns.
+//!
+//! A plan is `i/N` — member `i` of an `N`-way split (1-based on the command
+//! line, 0-based internally). Ownership is round-robin over the canonical
+//! task index: shard `i` owns every task whose `index % N == i - 1`. Round-
+//! robin (rather than contiguous ranges) interleaves scenarios, apps and
+//! strategies across shards, so every shard carries a representative mix
+//! and the slowest cells (TOE scenarios, multi-fault cells) spread evenly
+//! instead of landing on one unlucky member.
+//!
+//! The plan is a pure function of `(task index, i, N)` — no coordination,
+//! no state — which is what lets N processes on N machines partition one
+//! sweep with nothing shared but the spec.
+
+use crate::campaign::CampaignTask;
+use crate::error::{Result, SedarError};
+
+/// One member's slice of an `N`-way split.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardPlan {
+    /// 0-based member index (`< count`).
+    pub index: usize,
+    /// Total members in the split (≥ 1).
+    pub count: usize,
+}
+
+impl ShardPlan {
+    /// The trivial plan: one member owning everything.
+    pub fn full() -> ShardPlan {
+        ShardPlan { index: 0, count: 1 }
+    }
+
+    /// Parse the CLI form `i/N` (1-based `i`, e.g. `--shard 2/4`).
+    pub fn parse(s: &str) -> Result<ShardPlan> {
+        let bad = |why: &str| {
+            SedarError::Config(format!("shard '{s}': {why} (expected i/N, e.g. 2/4)"))
+        };
+        let (i, n) = s.trim().split_once('/').ok_or_else(|| bad("missing '/'"))?;
+        let i: usize = i.trim().parse().map_err(|_| bad("bad member index"))?;
+        let n: usize = n.trim().parse().map_err(|_| bad("bad member count"))?;
+        if n == 0 {
+            return Err(bad("member count must be >= 1"));
+        }
+        if i == 0 || i > n {
+            return Err(bad("member index is 1-based and must be <= N"));
+        }
+        Ok(ShardPlan {
+            index: i - 1,
+            count: n,
+        })
+    }
+
+    /// The CLI/display form (1-based).
+    pub fn label(&self) -> String {
+        format!("{}/{}", self.index + 1, self.count)
+    }
+
+    /// Does this member own canonical task index `task_index`?
+    pub fn owns(&self, task_index: usize) -> bool {
+        task_index % self.count == self.index
+    }
+
+    /// This member's slice of the canonical task list, in task order.
+    pub fn slice(&self, tasks: &[CampaignTask]) -> Vec<CampaignTask> {
+        tasks
+            .iter()
+            .filter(|t| self.owns(t.index))
+            .cloned()
+            .collect()
+    }
+}
+
+impl std::fmt::Display for ShardPlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.label())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::campaign::{build_tasks, CampaignSpec};
+
+    #[test]
+    fn parse_accepts_one_based_forms() {
+        assert_eq!(ShardPlan::parse("1/1").unwrap(), ShardPlan::full());
+        assert_eq!(
+            ShardPlan::parse(" 2/4 ").unwrap(),
+            ShardPlan { index: 1, count: 4 }
+        );
+        assert_eq!(ShardPlan::parse("4/4").unwrap().label(), "4/4");
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        for bad in ["", "2", "0/4", "5/4", "a/4", "2/b", "2/0", "-1/4"] {
+            assert!(ShardPlan::parse(bad).is_err(), "accepted '{bad}'");
+        }
+    }
+
+    #[test]
+    fn every_split_partitions_the_sweep() {
+        let mut spec = CampaignSpec::new(3);
+        spec.apply_filter("scenario=1-8").unwrap();
+        let tasks = build_tasks(&spec);
+        for n in 1..=7usize {
+            let mut seen = vec![0u32; tasks.len()];
+            for i in 0..n {
+                let plan = ShardPlan { index: i, count: n };
+                for t in plan.slice(&tasks) {
+                    seen[t.index] += 1;
+                }
+            }
+            assert!(
+                seen.iter().all(|&c| c == 1),
+                "split {n}: tasks not covered exactly once: {seen:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn round_robin_interleaves_cells() {
+        let spec = CampaignSpec::new(3);
+        let tasks = build_tasks(&spec);
+        let plan = ShardPlan { index: 0, count: 2 };
+        let slice = plan.slice(&tasks);
+        // Each shard of a 2-way split sees every app and every strategy.
+        for app in crate::campaign::CampaignApp::ALL {
+            assert!(slice.iter().any(|t| t.app == app), "missing {app:?}");
+        }
+        for s in crate::campaign::STRATEGIES {
+            assert!(slice.iter().any(|t| t.strategy == s), "missing {s:?}");
+        }
+    }
+}

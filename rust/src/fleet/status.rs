@@ -1,0 +1,299 @@
+//! Live progress for long sweeps: a std-only TCP endpoint.
+//!
+//! A full 576-task sweep (or a wider beyond-paper one) runs for minutes to
+//! hours; an operator driving N shard processes across machines needs to
+//! see progress without grepping stderr. [`StatusBoard`] is the shared
+//! counter the scheduler sink updates per finished task;
+//! [`StatusServer::spawn`] serves a snapshot of it over plain HTTP —
+//! `GET /` for human-readable text, `GET /json` for machine-readable JSON —
+//! with nothing but `std::net`.
+//!
+//! The endpoint is observational only: it reads atomics and a small mutex-
+//! guarded rollup, never touches the deterministic report path, and dies
+//! with the sweep.
+
+use std::collections::BTreeMap;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::campaign::shard::TaskOutcome;
+use crate::campaign::CampaignTask;
+use crate::error::{Result, SedarError};
+use crate::report::json_escape;
+
+/// Per-(app × strategy) progress cell.
+#[derive(Debug, Default, Clone)]
+struct Cell {
+    total: usize,
+    done: usize,
+    passed: usize,
+}
+
+/// Shared progress state of one shard's sweep.
+pub struct StatusBoard {
+    label: String,
+    seed: u64,
+    total: usize,
+    done: AtomicUsize,
+    passed: AtomicUsize,
+    failed: AtomicUsize,
+    cells: Mutex<BTreeMap<(String, String), Cell>>,
+}
+
+impl StatusBoard {
+    /// A board sized for `tasks` (this shard's slice), labelled for the
+    /// operator (e.g. `"shard 2/4"`).
+    pub fn new(label: &str, seed: u64, tasks: &[CampaignTask]) -> StatusBoard {
+        let mut cells: BTreeMap<(String, String), Cell> = BTreeMap::new();
+        for t in tasks {
+            cells
+                .entry((t.app.label().to_string(), t.strategy.label().to_string()))
+                .or_default()
+                .total += 1;
+        }
+        StatusBoard {
+            label: label.to_string(),
+            seed,
+            total: tasks.len(),
+            done: AtomicUsize::new(0),
+            passed: AtomicUsize::new(0),
+            failed: AtomicUsize::new(0),
+            cells: Mutex::new(cells),
+        }
+    }
+
+    /// Record one finished (or journal-recovered) task.
+    pub fn record(&self, outcome: &TaskOutcome) {
+        self.done.fetch_add(1, Ordering::SeqCst);
+        if outcome.pass {
+            self.passed.fetch_add(1, Ordering::SeqCst);
+        } else {
+            self.failed.fetch_add(1, Ordering::SeqCst);
+        }
+        let key = (
+            outcome.app.label().to_string(),
+            outcome.strategy.label().to_string(),
+        );
+        let mut cells = self.cells.lock().unwrap();
+        let cell = cells.entry(key).or_default();
+        cell.done += 1;
+        if outcome.pass {
+            cell.passed += 1;
+        }
+    }
+
+    /// Human-readable snapshot (the `GET /` body).
+    pub fn text_snapshot(&self) -> String {
+        let done = self.done.load(Ordering::SeqCst);
+        let passed = self.passed.load(Ordering::SeqCst);
+        let failed = self.failed.load(Ordering::SeqCst);
+        let mut s = format!(
+            "SEDAR fleet {} seed {}\ndone {done}/{} (pass {passed}, fail {failed})\n",
+            self.label, self.seed, self.total
+        );
+        for ((app, strategy), cell) in self.cells.lock().unwrap().iter() {
+            s.push_str(&format!(
+                "  {app} × {strategy}: {}/{} done, {} passed\n",
+                cell.done, cell.total, cell.passed
+            ));
+        }
+        s
+    }
+
+    /// Machine-readable snapshot (the `GET /json` body).
+    pub fn json_snapshot(&self) -> String {
+        let done = self.done.load(Ordering::SeqCst);
+        let passed = self.passed.load(Ordering::SeqCst);
+        let failed = self.failed.load(Ordering::SeqCst);
+        let cells: Vec<String> = self
+            .cells
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|((app, strategy), cell)| {
+                format!(
+                    "{{\"app\":\"{}\",\"strategy\":\"{}\",\"total\":{},\"done\":{},\"passed\":{}}}",
+                    json_escape(app),
+                    json_escape(strategy),
+                    cell.total,
+                    cell.done,
+                    cell.passed
+                )
+            })
+            .collect();
+        format!(
+            "{{\"fleet\":\"{}\",\"seed\":{},\"total\":{},\"done\":{done},\
+             \"passed\":{passed},\"failed\":{failed},\"cells\":[{}]}}",
+            json_escape(&self.label),
+            self.seed,
+            self.total,
+            cells.join(",")
+        )
+    }
+}
+
+/// The listener thread serving a [`StatusBoard`]. Dropping the handle stops
+/// the thread (it polls a stop flag between accepts).
+pub struct StatusServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl StatusServer {
+    /// Bind `127.0.0.1:port` (port 0 = OS-assigned; see [`StatusServer::addr`])
+    /// and serve `board` until dropped.
+    pub fn spawn(port: u16, board: Arc<StatusBoard>) -> Result<StatusServer> {
+        let listener = TcpListener::bind(("127.0.0.1", port))
+            .map_err(|e| SedarError::Config(format!("--status-port {port}: cannot bind: {e}")))?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_flag = stop.clone();
+        let handle = std::thread::Builder::new()
+            .name("sedar-status".into())
+            .spawn(move || {
+                loop {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            // One request per connection; errors on a single
+                            // connection never take the endpoint down.
+                            let _ = serve_one(stream, &board);
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            if stop_flag.load(Ordering::SeqCst) {
+                                break;
+                            }
+                            std::thread::sleep(Duration::from_millis(25));
+                        }
+                        Err(_) => {
+                            if stop_flag.load(Ordering::SeqCst) {
+                                break;
+                            }
+                            std::thread::sleep(Duration::from_millis(25));
+                        }
+                    }
+                }
+            })?;
+        Ok(StatusServer {
+            addr,
+            stop,
+            handle: Some(handle),
+        })
+    }
+
+    /// The bound address (useful with port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+}
+
+impl Drop for StatusServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn serve_one(mut stream: TcpStream, board: &StatusBoard) -> std::io::Result<()> {
+    use std::io::{Read, Write};
+    stream.set_nonblocking(false)?;
+    stream.set_read_timeout(Some(Duration::from_millis(500)))?;
+    let mut buf = [0u8; 1024];
+    let n = stream.read(&mut buf).unwrap_or(0);
+    let request_line = String::from_utf8_lossy(&buf[..n]);
+    let want_json = request_line
+        .lines()
+        .next()
+        .map(|l| l.split_whitespace().nth(1).unwrap_or("/") == "/json")
+        .unwrap_or(false);
+    let (content_type, body) = if want_json {
+        ("application/json", board.json_snapshot())
+    } else {
+        ("text/plain; charset=utf-8", board.text_snapshot())
+    };
+    let response = format!(
+        "HTTP/1.0 200 OK\r\nContent-Type: {content_type}\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(response.as_bytes())?;
+    stream.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::campaign::{build_tasks, CampaignSpec};
+
+    fn sample_board() -> (StatusBoard, Vec<crate::campaign::CampaignTask>) {
+        let mut spec = CampaignSpec::new(5);
+        spec.apply_filter("scenario=1-2").unwrap();
+        let tasks = build_tasks(&spec);
+        (StatusBoard::new("shard 1/1", 5, &tasks), tasks)
+    }
+
+    fn fake_outcome(t: &crate::campaign::CampaignTask, pass: bool) -> TaskOutcome {
+        TaskOutcome {
+            index: t.index,
+            scenario_id: t.scenario.id,
+            app: t.app,
+            strategy: t.strategy,
+            validation: t.validation,
+            faults: t.faults,
+            completed: true,
+            restarts: 0,
+            injected: true,
+            correct: Some(true),
+            first_detection: None,
+            last_resume: None,
+            pass,
+            mismatches: vec![],
+            wall: Duration::ZERO,
+        }
+    }
+
+    #[test]
+    fn board_counts_and_snapshots() {
+        let (board, tasks) = sample_board();
+        board.record(&fake_outcome(&tasks[0], true));
+        board.record(&fake_outcome(&tasks[1], false));
+        let text = board.text_snapshot();
+        assert!(text.contains("done 2/18"), "got: {text}");
+        assert!(text.contains("pass 1, fail 1"), "got: {text}");
+        let json = board.json_snapshot();
+        assert!(json.contains("\"done\":2"), "got: {json}");
+        assert!(json.contains("\"seed\":5"), "got: {json}");
+        assert!(json.contains("\"app\":\"matmul\""), "got: {json}");
+    }
+
+    #[test]
+    fn endpoint_serves_text_and_json() {
+        use std::io::{Read, Write};
+        let (board, tasks) = sample_board();
+        let board = Arc::new(board);
+        board.record(&fake_outcome(&tasks[0], true));
+        let server = StatusServer::spawn(0, board.clone()).unwrap();
+
+        let fetch = |path: &str| -> String {
+            let mut conn = TcpStream::connect(server.addr()).unwrap();
+            conn.write_all(format!("GET {path} HTTP/1.0\r\n\r\n").as_bytes())
+                .unwrap();
+            let mut out = String::new();
+            conn.read_to_string(&mut out).unwrap();
+            out
+        };
+
+        let text = fetch("/");
+        assert!(text.starts_with("HTTP/1.0 200 OK"), "got: {text}");
+        assert!(text.contains("done 1/18"), "got: {text}");
+        let json = fetch("/json");
+        assert!(json.contains("application/json"), "got: {json}");
+        assert!(json.contains("\"done\":1"), "got: {json}");
+        drop(server); // must join cleanly, not hang
+    }
+}

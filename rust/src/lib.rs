@@ -39,6 +39,7 @@
 //! | [`recovery`] | Algorithms 1 and 2: rollback orchestration |
 //! | [`coordinator`] | the SEDAR run controller (strategy × app × injection) |
 //! | [`campaign`] | parallel sweep of the workfault × apps × strategies |
+//! | [`fleet`] | sharded multi-process sweeps: shard plans, durable artifacts, resume journal, status endpoint |
 //! | [`apps`] | matmul (Master/Worker), Jacobi (SPMD), Smith-Waterman (pipeline) |
 //! | [`workfault`] | the 64-scenario workfault catalog + prediction oracle (§4.1) |
 //! | [`model`] | analytical temporal model: Equations 1–14 + AET (§3.4, §4.3-4.4) |
@@ -56,6 +57,7 @@ pub mod config;
 pub mod coordinator;
 pub mod detect;
 pub mod error;
+pub mod fleet;
 pub mod inject;
 pub mod metrics;
 pub mod model;

@@ -6,6 +6,10 @@
 //!                [--trace] [--seed 7] [--collectives p2p|native] [--run-dir DIR]
 //! sedar campaign [--jobs 8] [--seed 42] [--filter app=matmul,strategy=sys,scenario=1-8]
 //!                [--report md|csv] [--xla] [--run-dir DIR] [--quiet]
+//!                [--shard i/N] [--out shard.bin] [--journal sweep.journal]
+//!                [--status-port 8080] [--report-out report.md]
+//! sedar merge    shard1.bin shard2.bin … [--report md|csv] [--report-out report.md]
+//!                [--allow-partial]
 //! sedar catalog                                           # print Table 2 (all 64 rows)
 //! sedar model    [--table 4|5] [--thresholds] [--aet]     # the analytical model
 //! sedar help
@@ -14,8 +18,9 @@
 use std::sync::Arc;
 
 use sedar::apps::{AppSpec, JacobiApp, MatmulApp, SwApp};
-use sedar::campaign::{self, CampaignSpec};
+use sedar::campaign::{CampaignReport, CampaignSpec};
 use sedar::cli::Args;
+use sedar::fleet::{self, plan::ShardPlan, FleetOptions};
 use sedar::config::{RunConfig, Strategy};
 use sedar::coordinator::SedarRun;
 use sedar::error::{Result, SedarError};
@@ -40,6 +45,7 @@ fn dispatch(args: &Args) -> Result<()> {
     match args.command.as_deref() {
         Some("run") => cmd_run(args),
         Some("campaign") => cmd_campaign(args),
+        Some("merge") => cmd_merge(args),
         Some("catalog") => cmd_catalog(),
         Some("model") => cmd_model(args),
         Some("help") | None => {
@@ -60,7 +66,11 @@ commands:
             injecting one of the 64 workfault scenarios)
   campaign  run the parallel injection campaign: the 64-scenario workfault
             × {matmul, jacobi, sw} × {detect-only, sys-ckpt, user-ckpt},
-            fanned over a worker pool, graded against the §4.1 oracle
+            fanned over a worker pool, graded against the §4.1 oracle;
+            optionally as one shard of a multi-process fleet
+  merge     combine shard artifacts written by `campaign --shard i/N --out F`
+            into the full sweep's report (byte-identical to a single-process
+            run with the same --seed)
   catalog   print the full scenario catalog (the paper's Table 2)
   model     evaluate the analytical temporal model (Tables 4/5, thresholds,
             AET-vs-MTBE sweeps)
@@ -69,15 +79,34 @@ commands:
 campaign flags:
   --jobs N      worker threads (default: available cores, capped at 8)
   --seed S      campaign master seed; every task seed derives from it as
-                hash(seed, scenario, app, strategy) — same seed ⇒ byte-
-                identical report, whatever --jobs is (default 42)
+                hash(seed, scenario, app, strategy, validation, faults) —
+                same seed ⇒ byte-identical report, whatever --jobs or
+                --shard split is used (default 42)
   --filter F    comma-separated cell filter, e.g.
-                app=matmul,strategy=sys,scenario=1-8 (repeat keys to widen)
+                app=matmul,strategy=sys,scenario=1-8 (repeat keys to widen);
+                beyond-paper axes: validation=full|sha256, faults=1..4
   --scenario K  shorthand for --filter scenario=K
   --report FMT  md (default) or csv
   --xla         compute through the AOT artifacts (needs the pjrt feature)
   --run-dir D   campaign working directory (default runs/campaign-<pid>)
   --quiet       suppress per-task progress lines
+
+fleet flags (sharded / resumable / observable sweeps):
+  --shard i/N      run only member i of an N-way deterministic split
+                   (1-based; round-robin over canonical task indices)
+  --out FILE       write this shard's durable outcome artifact (merge the
+                   N artifacts with `sedar merge`)
+  --journal FILE   journal completed tasks; a re-run with the same journal
+                   resumes, skipping every finished task
+  --status-port P  serve live progress on http://127.0.0.1:P/ (text) and
+                   /json while the sweep runs (0 = OS-assigned)
+  --report-out F   also write the deterministic report to F (handy for
+                   byte-diffing sharded vs single-process runs)
+
+merge flags:
+  --report FMT     md (default) or csv
+  --report-out F   also write the deterministic report to F
+  --allow-partial  render even if the shards do not cover the whole sweep
 
 run `sedar <cmd>` flag semantics are documented in rust/src/main.rs.
 ";
@@ -170,14 +199,27 @@ fn cmd_run(args: &Args) -> Result<()> {
 }
 
 fn cmd_campaign(args: &Args) -> Result<()> {
-    // Validate the output format up front: a typo must not cost a full
-    // sweep's worth of work.
+    // Validate the output format and fleet wiring up front: a typo must
+    // not cost a full sweep's worth of work.
     let report_fmt = args.get_or("report", "md");
     if !matches!(report_fmt, "md" | "csv") {
         return Err(SedarError::Config(format!(
             "unknown report '{report_fmt}' (md|csv)"
         )));
     }
+    let opts = FleetOptions {
+        plan: args.get("shard").map(ShardPlan::parse).transpose()?,
+        journal_path: args.get("journal").map(Into::into),
+        artifact_path: args.get("out").map(Into::into),
+        status_port: match args.get("status-port") {
+            None => None,
+            Some(p) => Some(
+                p.parse()
+                    .map_err(|e| SedarError::Config(format!("--status-port: {e}")))?,
+            ),
+        },
+    };
+
     let mut spec = CampaignSpec::new(args.u64_or("seed", 42)?);
     spec.jobs = args.usize_or("jobs", CampaignSpec::default_jobs())?;
     if let Some(f) = args.get("filter") {
@@ -193,13 +235,76 @@ fn cmd_campaign(args: &Args) -> Result<()> {
     };
     spec.echo = !args.has("quiet");
 
-    let report = campaign::run_campaign(&spec)?;
+    let sharded = opts.plan.map(|p| p.count > 1).unwrap_or(false);
+    let run = fleet::run_shard(&spec, &opts)?;
+    if sharded || run.resumed > 0 {
+        eprintln!("{}", run.summary_line());
+    }
+    let report = CampaignReport::new(spec.seed, run.outcomes);
+    emit_report(args, report_fmt, &report)?;
+    println!("\n{}", report.summary_line());
+    if let Some(path) = &run.artifact_path {
+        println!("shard artifact: {}", path.display());
+    }
+    let _ = std::fs::remove_dir_all(&spec.base.run_dir);
+    if !report.verdict() {
+        return Err(SedarError::Config(format!(
+            "{} campaign task(s) diverged from the oracle",
+            report.failed()
+        )));
+    }
+    Ok(())
+}
+
+/// Print the report in the chosen format and honor `--report-out` (the
+/// deterministic markdown report, byte-diffable across shardings).
+fn emit_report(args: &Args, report_fmt: &str, report: &CampaignReport) -> Result<()> {
+    if let Some(path) = args.get("report-out") {
+        std::fs::write(path, report.deterministic_report())?;
+    }
     match report_fmt {
         "csv" => print!("{}", report.csv()),
         _ => println!("{}", report.deterministic_report()),
     }
+    Ok(())
+}
+
+fn cmd_merge(args: &Args) -> Result<()> {
+    let report_fmt = args.get_or("report", "md");
+    if !matches!(report_fmt, "md" | "csv") {
+        return Err(SedarError::Config(format!(
+            "unknown report '{report_fmt}' (md|csv)"
+        )));
+    }
+    // The CLI grammar binds the token after a `--switch` as its value, so
+    // `merge --allow-partial s1.bin s2.bin` parses s1.bin as the switch's
+    // value — reclaim it as a shard path instead of silently dropping it.
+    let mut paths: Vec<&str> = Vec::new();
+    if let Some(v) = args.get("allow-partial") {
+        paths.push(v);
+    }
+    paths.extend(args.positional.iter().map(|s| s.as_str()));
+    if paths.is_empty() {
+        return Err(SedarError::Config(
+            "merge: name at least one shard artifact (sedar merge s1.bin s2.bin …)".into(),
+        ));
+    }
+    let mut shards = Vec::with_capacity(paths.len());
+    for path in &paths {
+        shards.push(sedar::fleet::artifact::read_artifact(std::path::Path::new(path))?);
+    }
+    let (seed, total_tasks, outcomes) = sedar::fleet::artifact::merge_artifacts(shards)?;
+    if (outcomes.len() as u64) < total_tasks && !args.has("allow-partial") {
+        return Err(SedarError::Config(format!(
+            "merge: shards cover {} of {} task(s) — some shard artifacts are \
+             missing (pass --allow-partial to render the union anyway)",
+            outcomes.len(),
+            total_tasks
+        )));
+    }
+    let report = CampaignReport::new(seed, outcomes);
+    emit_report(args, report_fmt, &report)?;
     println!("\n{}", report.summary_line());
-    let _ = std::fs::remove_dir_all(&spec.base.run_dir);
     if !report.verdict() {
         return Err(SedarError::Config(format!(
             "{} campaign task(s) diverged from the oracle",

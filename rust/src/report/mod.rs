@@ -76,6 +76,25 @@ impl Table {
     }
 }
 
+/// Minimal JSON string escaping (quotes, backslashes, control bytes) for
+/// the hand-rolled JSON emitters (no serde in the offline dependency set);
+/// used by the fleet status endpoint.
+pub fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
 /// Format seconds as `H.HH` hours (paper table style).
 pub fn fmt_hours(seconds: f64) -> String {
     format!("{:.2}", seconds / 3600.0)
@@ -122,5 +141,15 @@ mod tests {
         assert_eq!(fmt_hours(36756.0), "10.21");
         assert_eq!(fmt_pct(0.006), "0.60%");
         assert_eq!(fmt_pct(0.0001), "0.010%");
+    }
+
+    #[test]
+    fn json_escaping() {
+        assert_eq!(json_escape("plain"), "plain");
+        assert_eq!(json_escape("a\"b\\c"), "a\\\"b\\\\c");
+        assert_eq!(json_escape("line\nbreak\ttab"), "line\\nbreak\\ttab");
+        assert_eq!(json_escape("\u{1}"), "\\u0001");
+        // Non-ASCII passes through untouched (JSON is UTF-8).
+        assert_eq!(json_escape("héllo"), "héllo");
     }
 }

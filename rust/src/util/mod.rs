@@ -1,8 +1,11 @@
-//! Small shared utilities: deterministic PRNG, byte/bit helpers, a tiny
-//! stderr logger and human-readable formatting.
+//! Small shared utilities: deterministic PRNG, byte/bit helpers, hashing
+//! and compression codecs, a tiny stderr logger and human-readable
+//! formatting.
 
+pub mod codec;
 pub mod logger;
 pub mod prng;
+pub mod sha256;
 
 use std::time::Duration;
 

@@ -1,0 +1,80 @@
+//! Beyond-paper campaign axes (ROADMAP: "campaign coverage beyond the
+//! paper"): `validation=sha256` and multi-fault cells run through the same
+//! engine, the same filter machinery and the same deterministic report —
+//! so fleet sweeps can cover more scenarios than Table 2.
+
+use sedar::campaign::{build_tasks, run_campaign, CampaignSpec};
+use sedar::config::RunConfig;
+use sedar::detect::ValidationMode;
+
+fn spec(tag: &str, filter: &str) -> CampaignSpec {
+    let mut spec = CampaignSpec::new(11);
+    spec.apply_filter(filter).unwrap();
+    spec.jobs = 2;
+    let toe_timeout = spec.base.toe_timeout;
+    let mut base = RunConfig::for_tests(tag);
+    base.run_dir = std::env::temp_dir().join(format!(
+        "sedar-axes-{tag}-{}-{:?}",
+        std::process::id(),
+        std::thread::current().id()
+    ));
+    base.toe_timeout = toe_timeout;
+    spec.base = base;
+    spec
+}
+
+#[test]
+fn sha256_validation_cells_pass_end_to_end() {
+    // One TDC scenario, every app × strategy, under digest validation.
+    let spec = spec("sha", "scenario=2,validation=sha256");
+    let tasks = build_tasks(&spec);
+    assert_eq!(tasks.len(), 9);
+    assert!(tasks.iter().all(|t| t.validation == ValidationMode::Sha256));
+    let report = run_campaign(&spec).unwrap();
+    assert!(
+        report.verdict(),
+        "sha256 cells diverged:\n{}",
+        report.deterministic_report()
+    );
+    // The axis is visible in the rendered rows.
+    assert!(report.deterministic_report().contains("sha256"));
+    let _ = std::fs::remove_dir_all(&spec.base.run_dir);
+}
+
+#[test]
+fn multi_fault_cells_recover_and_stay_correct() {
+    // Two armed faults per cell, matmul only (the jacobi/sw transplants
+    // already run under their own seeds in the main determinism suite).
+    let spec = spec("mf", "scenario=2,app=matmul,faults=2");
+    let tasks = build_tasks(&spec);
+    assert_eq!(tasks.len(), 3);
+    assert!(tasks.iter().all(|t| t.faults == 2));
+    let report = run_campaign(&spec).unwrap();
+    assert!(
+        report.verdict(),
+        "multi-fault cells diverged:\n{}",
+        report.deterministic_report()
+    );
+    let _ = std::fs::remove_dir_all(&spec.base.run_dir);
+}
+
+#[test]
+fn widened_axes_multiply_cells_and_stay_deterministic() {
+    // Both axes at once, narrowed to one app × strategy to stay fast:
+    // 1 scenario × 2 validations × 2 fault counts = 4 cells.
+    let filter = "scenario=2,app=matmul,strategy=sys,\
+                  validation=full,validation=sha256,faults=1,faults=2";
+    let spec_a = spec("wide-a", filter);
+    let spec_b = spec("wide-b", filter);
+    assert_eq!(build_tasks(&spec_a).len(), 4);
+    let a = run_campaign(&spec_a).unwrap();
+    let b = run_campaign(&spec_b).unwrap();
+    assert_eq!(
+        a.deterministic_report(),
+        b.deterministic_report(),
+        "widened sweeps must stay byte-deterministic"
+    );
+    assert!(a.verdict(), "failures:\n{}", a.deterministic_report());
+    let _ = std::fs::remove_dir_all(&spec_a.base.run_dir);
+    let _ = std::fs::remove_dir_all(&spec_b.base.run_dir);
+}

@@ -1,0 +1,183 @@
+//! Durable shard artifacts: encode→decode round-trips (including
+//! non-ASCII mismatch notes and empty shards), merge idempotence and
+//! commutativity across shard orders, and rejection of truncated or
+//! corrupted frames.
+
+use std::time::Duration;
+
+use sedar::campaign::shard::TaskOutcome;
+use sedar::campaign::{CampaignApp, CampaignReport};
+use sedar::config::Strategy;
+use sedar::detect::ValidationMode;
+use sedar::error::FaultClass;
+use sedar::fleet::artifact::{merge_artifacts, read_artifact, write_artifact, ShardMeta};
+use sedar::recovery::ResumeFrom;
+
+fn tmpfile(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!(
+        "sedar-artifact-{tag}-{}-{:?}.bin",
+        std::process::id(),
+        std::thread::current().id()
+    ))
+}
+
+fn meta(index: u32, count: u32) -> ShardMeta {
+    ShardMeta {
+        seed: 42,
+        shard_index: index,
+        shard_count: count,
+        total_tasks: 6,
+        spec_hash: 0xF1E7_0001,
+    }
+}
+
+/// An outcome exercising every optional field and non-ASCII text.
+fn ornate(index: usize) -> TaskOutcome {
+    TaskOutcome {
+        index,
+        scenario_id: 50,
+        app: CampaignApp::Jacobi,
+        strategy: Strategy::SysCkpt,
+        validation: ValidationMode::Sha256,
+        faults: 3,
+        completed: true,
+        restarts: 2,
+        injected: true,
+        correct: Some(false),
+        first_detection: Some((FaultClass::Fsc, "VALIDATE→rank0".into())),
+        last_resume: Some(ResumeFrom::SysCkpt(2)),
+        pass: false,
+        mismatches: vec![
+            "résultat faux: ≠ oracle".into(),
+            "νote with emoji ✗ and cyrillic ошибка".into(),
+        ],
+        wall: Duration::from_millis(12),
+    }
+}
+
+/// A minimal all-defaults outcome.
+fn plain(index: usize) -> TaskOutcome {
+    TaskOutcome {
+        index,
+        scenario_id: 1,
+        app: CampaignApp::Matmul,
+        strategy: Strategy::DetectOnly,
+        validation: ValidationMode::Full,
+        faults: 1,
+        completed: true,
+        restarts: 0,
+        injected: true,
+        correct: Some(true),
+        first_detection: None,
+        last_resume: None,
+        pass: true,
+        mismatches: vec![],
+        wall: Duration::ZERO,
+    }
+}
+
+#[test]
+fn file_roundtrip_preserves_everything() {
+    let p = tmpfile("roundtrip");
+    let outcomes = vec![plain(0), ornate(2), plain(4)];
+    write_artifact(&p, &meta(0, 2), &outcomes).unwrap();
+    let (m, back) = read_artifact(&p).unwrap();
+    assert_eq!(m, meta(0, 2));
+    assert_eq!(back.len(), 3);
+    // Field-for-field equality via Debug (TaskOutcome has no PartialEq).
+    for (a, b) in outcomes.iter().zip(&back) {
+        assert_eq!(format!("{a:?}"), format!("{b:?}"));
+    }
+    std::fs::remove_file(&p).unwrap();
+}
+
+#[test]
+fn empty_shard_roundtrips() {
+    let p = tmpfile("empty");
+    write_artifact(&p, &meta(1, 2), &[]).unwrap();
+    let (m, back) = read_artifact(&p).unwrap();
+    assert_eq!(m.shard_index, 1);
+    assert!(back.is_empty());
+    std::fs::remove_file(&p).unwrap();
+}
+
+#[test]
+fn merge_is_idempotent_and_commutative_over_shard_order() {
+    let a = (meta(0, 2), vec![plain(0), ornate(2), plain(4)]);
+    let b = (meta(1, 2), vec![plain(1), plain(3), plain(5)]);
+    let (seed_ab, total_ab, ab) = merge_artifacts(vec![a.clone(), b.clone()]).unwrap();
+    let (seed_ba, total_ba, ba) = merge_artifacts(vec![b.clone(), a.clone()]).unwrap();
+    assert_eq!((seed_ab, total_ab), (seed_ba, total_ba));
+    assert_eq!(
+        CampaignReport::new(seed_ab, ab).deterministic_report(),
+        CampaignReport::new(seed_ba, ba).deterministic_report(),
+        "merge must be commutative over shard order"
+    );
+    // Idempotent: merging the merged set with nothing new changes nothing.
+    let (_, _, once) = merge_artifacts(vec![a.clone(), b.clone()]).unwrap();
+    let (_, _, again) = merge_artifacts(vec![(meta(0, 1), once.clone())]).unwrap();
+    assert_eq!(format!("{once:?}"), format!("{again:?}"));
+}
+
+#[test]
+fn merge_rejects_overlap_seed_and_spec_drift() {
+    // Overlapping task indices.
+    let err = merge_artifacts(vec![
+        (meta(0, 2), vec![plain(0)]),
+        (meta(1, 2), vec![plain(0)]),
+    ])
+    .unwrap_err();
+    assert!(err.to_string().contains("duplicate task index"), "{err}");
+
+    // Mismatched seeds.
+    let mut other_seed = meta(1, 2);
+    other_seed.seed = 43;
+    assert!(merge_artifacts(vec![(meta(0, 2), vec![plain(0)]), (other_seed, vec![plain(1)])])
+        .is_err());
+
+    // Mismatched filtered-sweep widths.
+    let mut other_total = meta(1, 2);
+    other_total.total_tasks = 7;
+    assert!(merge_artifacts(vec![(meta(0, 2), vec![plain(0)]), (other_total, vec![plain(1)])])
+        .is_err());
+
+    // Same seed and width, different filter set (spec fingerprint drift —
+    // e.g. scenario=1-12 vs scenario=13-24 both yield 12 tasks).
+    let mut other_spec = meta(1, 2);
+    other_spec.spec_hash = 0xF1E7_0002;
+    let err = merge_artifacts(vec![(meta(0, 2), vec![plain(0)]), (other_spec, vec![plain(1)])])
+        .unwrap_err();
+    assert!(err.to_string().contains("--filter"), "got: {err}");
+
+    // No shards at all.
+    assert!(merge_artifacts(vec![]).is_err());
+}
+
+#[test]
+fn truncated_and_corrupted_files_are_rejected() {
+    let p = tmpfile("corrupt");
+    write_artifact(&p, &meta(0, 2), &[plain(0), ornate(2)]).unwrap();
+    let pristine = std::fs::read(&p).unwrap();
+
+    // Truncation at any point of the frame must error, never panic.
+    for cut in [0, 5, 23, pristine.len() / 2, pristine.len() - 1] {
+        std::fs::write(&p, &pristine[..cut]).unwrap();
+        assert!(read_artifact(&p).is_err(), "accepted {cut}-byte prefix");
+    }
+
+    // A single flipped payload byte trips the frame CRC.
+    let mut bent = pristine.clone();
+    let last = bent.len() - 3;
+    bent[last] ^= 0x40;
+    std::fs::write(&p, &bent).unwrap();
+    assert!(read_artifact(&p).is_err(), "corrupted payload accepted");
+
+    // Garbage that is not a frame at all.
+    std::fs::write(&p, b"not a shard artifact").unwrap();
+    assert!(read_artifact(&p).is_err());
+
+    // And the pristine bytes still read fine (the writer is not at fault).
+    std::fs::write(&p, &pristine).unwrap();
+    assert!(read_artifact(&p).is_ok());
+    std::fs::remove_file(&p).unwrap();
+}

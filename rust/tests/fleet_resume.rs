@@ -1,0 +1,140 @@
+//! Resume semantics: a shard killed mid-sweep re-runs from its journal,
+//! skips every finished task, and still renders the byte-identical report.
+//! The kill is simulated by pre-populating a journal with a prefix of the
+//! outcomes — exactly the on-disk state a real kill leaves behind (the
+//! journal is synced per record, and its torn-tail handling is unit-tested
+//! in `fleet::journal`).
+
+use sedar::campaign::{build_tasks, sweep_fingerprint, CampaignReport, CampaignSpec};
+use sedar::config::RunConfig;
+use sedar::fleet::artifact::ShardMeta;
+use sedar::fleet::journal::Journal;
+use sedar::fleet::{run_shard, FleetOptions};
+
+/// One scenario across every app × strategy: 9 tasks — enough to split
+/// into "finished before the kill" and "still to do", small enough to run
+/// twice in this suite.
+fn spec(tag: &str) -> CampaignSpec {
+    let mut spec = CampaignSpec::new(77);
+    spec.apply_filter("scenario=2").unwrap();
+    spec.jobs = 2;
+    let toe_timeout = spec.base.toe_timeout;
+    let mut base = RunConfig::for_tests(tag);
+    base.run_dir = std::env::temp_dir().join(format!(
+        "sedar-fleet-resume-{tag}-{}-{:?}",
+        std::process::id(),
+        std::thread::current().id()
+    ));
+    base.toe_timeout = toe_timeout;
+    spec.base = base;
+    spec
+}
+
+fn tmpfile(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!(
+        "sedar-fleet-resume-{tag}-{}-{:?}.bin",
+        std::process::id(),
+        std::thread::current().id()
+    ))
+}
+
+#[test]
+fn journal_resume_skips_finished_tasks_and_reproduces_the_report() {
+    // Reference: an uninterrupted, journaled run.
+    let spec_a = spec("full");
+    let journal_a = tmpfile("journal-full");
+    let _ = std::fs::remove_file(&journal_a);
+    let run_a = run_shard(
+        &spec_a,
+        &FleetOptions {
+            journal_path: Some(journal_a.clone()),
+            ..FleetOptions::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(run_a.owned, 9);
+    assert_eq!(run_a.resumed, 0);
+    assert_eq!(run_a.executed, 9);
+    let report_a = CampaignReport::new(spec_a.seed, run_a.outcomes.clone());
+    let _ = std::fs::remove_dir_all(&spec_a.base.run_dir);
+
+    // An idempotent re-run over the completed journal executes nothing and
+    // renders the same bytes.
+    let spec_b = spec("idempotent");
+    let run_b = run_shard(
+        &spec_b,
+        &FleetOptions {
+            journal_path: Some(journal_a.clone()),
+            ..FleetOptions::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(run_b.resumed, 9);
+    assert_eq!(run_b.executed, 0, "a complete journal re-executes nothing");
+    assert_eq!(
+        CampaignReport::new(spec_b.seed, run_b.outcomes).deterministic_report(),
+        report_a.deterministic_report()
+    );
+    let _ = std::fs::remove_dir_all(&spec_b.base.run_dir);
+
+    // Simulate the kill: a journal holding only the first 4 outcomes. The
+    // meta must carry the sweep's real fingerprint or run_shard will
+    // (correctly) refuse the journal.
+    let journal_c = tmpfile("journal-killed");
+    let _ = std::fs::remove_file(&journal_c);
+    let spec_for_meta = spec("meta");
+    let meta = ShardMeta {
+        seed: 77,
+        shard_index: 0,
+        shard_count: 1,
+        total_tasks: 9,
+        spec_hash: sweep_fingerprint(77, &build_tasks(&spec_for_meta)),
+    };
+    {
+        let (mut j, recovered) = Journal::open(&journal_c, &meta).unwrap();
+        assert!(recovered.is_empty());
+        for o in run_a.outcomes.iter().take(4) {
+            j.append(o).unwrap();
+        }
+    }
+
+    // The re-run resumes: only the 5 unfinished tasks execute, and the
+    // final report is byte-identical to the uninterrupted run's.
+    let spec_c = spec("resumed");
+    let run_c = run_shard(
+        &spec_c,
+        &FleetOptions {
+            journal_path: Some(journal_c.clone()),
+            ..FleetOptions::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(run_c.resumed, 4);
+    assert_eq!(run_c.executed, 5, "journaled tasks must not re-execute");
+    assert_eq!(
+        CampaignReport::new(spec_c.seed, run_c.outcomes).deterministic_report(),
+        report_a.deterministic_report(),
+        "resumed run must render the byte-identical report"
+    );
+    let _ = std::fs::remove_dir_all(&spec_c.base.run_dir);
+
+    // A journal from a different sweep is refused outright.
+    let mut spec_d = spec("wrong-seed");
+    spec_d.seed = 78;
+    let err = run_shard(
+        &spec_d,
+        &FleetOptions {
+            journal_path: Some(journal_c.clone()),
+            ..FleetOptions::default()
+        },
+    )
+    .unwrap_err();
+    assert!(
+        err.to_string().contains("different sweep"),
+        "got: {err}"
+    );
+    let _ = std::fs::remove_dir_all(&spec_d.base.run_dir);
+
+    let _ = std::fs::remove_file(journal_a);
+    let _ = std::fs::remove_file(journal_c);
+}

@@ -1,0 +1,112 @@
+//! The fleet's headline invariant: splitting the sweep into any `N`
+//! shards, writing durable artifacts, merging them and rendering must
+//! produce a report **byte-identical** to the single-process run with the
+//! same `--seed`. Task outcomes are pure functions of task seeds, and task
+//! seeds never see shard geometry — so sharding is pure partition.
+//!
+//! (The CLI-level twin of this test is the CI sharded-sweep smoke job,
+//! which runs `sedar campaign --shard i/2 --out` twice, `sedar merge`s the
+//! artifacts and `diff`s against the single-process report.)
+
+use sedar::campaign::{run_campaign, CampaignReport, CampaignSpec};
+use sedar::config::RunConfig;
+use sedar::fleet::plan::ShardPlan;
+use sedar::fleet::{artifact, run_shard, FleetOptions};
+
+/// The representative slice the determinism suite uses: one TDC, one LE
+/// and one FSC scenario across every app and strategy (27 tasks).
+fn small_spec(tag: &str) -> CampaignSpec {
+    let mut spec = CampaignSpec::new(42);
+    spec.apply_filter("scenario=2,scenario=29,scenario=50").unwrap();
+    spec.jobs = 2;
+    let toe_timeout = spec.base.toe_timeout;
+    let mut base = RunConfig::for_tests(tag);
+    base.run_dir = std::env::temp_dir().join(format!(
+        "sedar-fleet-eq-{tag}-{}-{:?}",
+        std::process::id(),
+        std::thread::current().id()
+    ));
+    // Keep the campaign's generous rendezvous lapse: a loaded pool must
+    // never turn a descheduled-but-healthy sibling into a spurious TOE.
+    base.toe_timeout = toe_timeout;
+    spec.base = base;
+    spec
+}
+
+fn tmpfile(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!(
+        "sedar-fleet-eq-{tag}-{}-{:?}.bin",
+        std::process::id(),
+        std::thread::current().id()
+    ))
+}
+
+#[test]
+fn two_way_split_merges_byte_identical() {
+    // Single-process reference run.
+    let spec_single = small_spec("single");
+    let reference = run_campaign(&spec_single).unwrap();
+    assert_eq!(reference.outcomes.len(), 27);
+
+    // The same sweep as two shard processes, each writing an artifact.
+    let mut paths = Vec::new();
+    for i in 1..=2usize {
+        let spec = small_spec(&format!("shard{i}"));
+        let out = tmpfile(&format!("shard{i}"));
+        let _ = std::fs::remove_file(&out);
+        let run = run_shard(
+            &spec,
+            &FleetOptions {
+                plan: Some(ShardPlan::parse(&format!("{i}/2")).unwrap()),
+                artifact_path: Some(out.clone()),
+                ..FleetOptions::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(run.executed, run.owned, "no journal: everything executes");
+        assert!(out.exists(), "shard artifact must be written");
+        paths.push(out);
+        let _ = std::fs::remove_dir_all(&spec.base.run_dir);
+    }
+
+    // Merge the durable artifacts (in reversed order, to also exercise
+    // commutativity at the file level) and compare every rendered byte.
+    let shards: Vec<_> = paths
+        .iter()
+        .rev()
+        .map(|p| artifact::read_artifact(p).unwrap())
+        .collect();
+    let (seed, total, outcomes) = artifact::merge_artifacts(shards).unwrap();
+    assert_eq!(seed, 42);
+    assert_eq!(total, 27);
+    assert_eq!(outcomes.len(), 27);
+    let merged = CampaignReport::new(seed, outcomes);
+    assert_eq!(
+        merged.deterministic_report(),
+        reference.deterministic_report(),
+        "sharded + merged report must be byte-identical to the single-process run"
+    );
+    assert_eq!(merged.csv(), reference.csv());
+
+    // Overlapping shards must be rejected at merge time: feed shard 1's
+    // artifact twice.
+    let dup = vec![
+        artifact::read_artifact(&paths[0]).unwrap(),
+        artifact::read_artifact(&paths[0]).unwrap(),
+    ];
+    assert!(artifact::merge_artifacts(dup).is_err());
+
+    // A lone shard is an incomplete union — the merge surface reports the
+    // coverage so `sedar merge` can refuse without --allow-partial.
+    let lone = vec![artifact::read_artifact(&paths[0]).unwrap()];
+    let (_, total, outcomes) = artifact::merge_artifacts(lone).unwrap();
+    assert!(
+        (outcomes.len() as u64) < total,
+        "a single shard of a 2-way split cannot cover the sweep"
+    );
+
+    for p in paths {
+        let _ = std::fs::remove_file(p);
+    }
+    let _ = std::fs::remove_dir_all(&spec_single.base.run_dir);
+}

@@ -2,21 +2,23 @@
 //! deliverable's measurement substrate (EXPERIMENTS.md §Perf).
 //!
 //! Covers: replica-buffer comparison (full vs SHA-256, by message size),
-//! pair rendezvous latency, vmpi point-to-point latency/bandwidth,
-//! checkpoint frame write/read by codec, VarStore serialization, and —
-//! when artifacts are present — the PJRT dispatch overhead.
+//! borrowed comparison-token construction, pair rendezvous latency, vmpi
+//! point-to-point latency/bandwidth, checkpoint frame write/read by codec,
+//! VarStore serialization, and — when artifacts are present — the PJRT
+//! dispatch overhead.
 //!
-//! (`cargo bench --bench micro_hotpath`; `SEDAR_BENCH_QUICK=1` shrinks it)
+//! (`cargo bench --bench micro_hotpath`; `SEDAR_BENCH_QUICK=1` shrinks it;
+//! `-- --json` suppresses the tables and emits the `sedar-bench/1` JSON
+//! document on stdout — what the CI bench-smoke job archives.)
 
 use std::sync::atomic::AtomicBool;
 use std::sync::Arc;
 use std::time::Duration;
 
 use sedar::checkpoint::snapshot::{read_frame, write_frame, Codec};
-use sedar::detect::{buffers_equal, comparison_token, sha256, ValidationMode};
+use sedar::detect::{buffers_equal, sha256, Token, ValidationMode};
 use sedar::replica::pair::PairSync;
-use sedar::report::benchkit::{bench, black_box, quick, Stats};
-use sedar::report::Table;
+use sedar::report::benchkit::{bench, black_box, print_table, quick, JsonReport, Stats};
 use sedar::runtime::Engine;
 use sedar::state::{Var, VarStore};
 use sedar::util::prng::SplitMix64;
@@ -27,21 +29,18 @@ fn rand_bytes(seed: u64, n: usize) -> Vec<u8> {
     (0..n).map(|_| (rng.next_u64() & 0xff) as u8).collect()
 }
 
-fn print_stats(title: &str, rows: &[(Stats, Option<usize>)]) {
-    println!("\n=== {title} ===\n");
-    let mut t = Table::new(&["case", "iters", "min", "mean", "p50", "p95", "throughput"]);
-    for (s, bytes) in rows {
-        let mut row = s.row();
-        row.push(match bytes {
-            Some(b) => format!("{:.2} GiB/s", s.gib_per_s(*b)),
-            None => "-".to_string(),
-        });
-        t.row(&row);
+fn print_stats(echo: bool, title: &str, rows: &[(Stats, Option<usize>)]) {
+    if echo {
+        print_table(title, rows);
     }
-    print!("{}", t.markdown());
 }
 
 fn main() {
+    let json = std::env::args().any(|a| a == "--json");
+    let echo = !json;
+    let mut jr = JsonReport::new();
+    jr.meta("bench", "\"micro_hotpath\"");
+    jr.meta("quick", if quick() { "true" } else { "false" });
     let iters = if quick() { 20 } else { 200 };
 
     // ---------------- buffer comparison (the per-message detection cost) --
@@ -74,30 +73,40 @@ fn main() {
             None,
         ));
     }
-    print_stats("replica-buffer comparison", &rows);
-    println!(
-        "\ncrossover guidance: full comparison beats hashing at every size on\n\
-         this host (compare is bandwidth-bound, sha256 is compute-bound); the\n\
-         paper's full-content message validation is the right default, hashes\n\
-         pay off only for checkpoint-sized payloads crossing a network."
-    );
+    for (s, b) in &rows {
+        jr.push_stats("compare", s, *b);
+    }
+    print_stats(echo, "replica-buffer comparison", &rows);
+    if echo {
+        println!(
+            "\ncrossover guidance: full comparison beats hashing at every size on\n\
+             this host (compare is bandwidth-bound, sha256 is compute-bound); the\n\
+             paper's full-content message validation is the right default, hashes\n\
+             pay off only for checkpoint-sized payloads crossing a network."
+        );
+    }
 
     // ---------------- comparison-token build (ValidationMode) -------------
+    // `Token::new` in Full mode borrows the buffer — the timing asserts the
+    // send path allocates nothing for its token.
     let mut rows = Vec::new();
     let msg = rand_bytes(3, 1 << 16);
     rows.push((
-        bench("token full 64KiB", 3, iters, || {
-            black_box(comparison_token(ValidationMode::Full, &msg));
+        bench("token full 64KiB (borrowed)", 3, iters, || {
+            black_box(Token::new(ValidationMode::Full, &msg).len());
         }),
         Some(msg.len()),
     ));
     rows.push((
         bench("token sha256 64KiB", 3, iters, || {
-            black_box(comparison_token(ValidationMode::Sha256, &msg));
+            black_box(Token::new(ValidationMode::Sha256, &msg).len());
         }),
         Some(msg.len()),
     ));
-    print_stats("comparison-token construction", &rows);
+    for (s, b) in &rows {
+        jr.push_stats("token", s, *b);
+    }
+    print_stats(echo, "comparison-token construction", &rows);
 
     // ---------------- pair rendezvous latency ------------------------------
     {
@@ -107,20 +116,32 @@ fn main() {
         let n_rounds = if quick() { 2_000 } else { 20_000 };
         let sibling = std::thread::spawn(move || {
             for _ in 0..n_rounds {
-                let _ = p2.exchange(1, vec![1u8; 32], Duration::from_secs(5)).unwrap();
+                let _ = p2
+                    .exchange(1, vec![1u8; 32].into(), Duration::from_secs(5))
+                    .unwrap();
             }
         });
         let s = bench("pair exchange (32 B token)", 0, 1, || {
             for _ in 0..n_rounds {
-                let _ = pair.exchange(0, vec![1u8; 32], Duration::from_secs(5)).unwrap();
+                let _ = pair
+                    .exchange(0, vec![1u8; 32].into(), Duration::from_secs(5))
+                    .unwrap();
             }
         });
         sibling.join().unwrap();
-        println!(
-            "\n=== replica rendezvous ===\n\n  {n_rounds} round-trips in {} → {:.2} µs / rendezvous",
-            sedar::util::human_duration(s.min),
-            s.min.as_secs_f64() * 1e6 / n_rounds as f64
-        );
+        jr.push_raw(format!(
+            "{{\"group\":\"rendezvous\",\"case\":\"pair exchange 32B\",\"rounds\":{n_rounds},\
+             \"wall_ns\":{},\"ns_per_round\":{:.1}}}",
+            s.min.as_nanos(),
+            s.min.as_nanos() as f64 / n_rounds as f64
+        ));
+        if echo {
+            println!(
+                "\n=== replica rendezvous ===\n\n  {n_rounds} round-trips in {} → {:.2} µs / rendezvous",
+                sedar::util::human_duration(s.min),
+                s.min.as_secs_f64() * 1e6 / n_rounds as f64
+            );
+        }
     }
 
     // ---------------- vmpi point-to-point ----------------------------------
@@ -129,8 +150,8 @@ fn main() {
         let a = net.endpoint(0);
         let b = net.endpoint(1);
         let n_msgs = if quick() { 2_000 } else { 20_000 };
-        let payload = vec![0f32; 1 << 14]; // 64 KiB
-        let bytes = payload.len() * 4 * n_msgs;
+        let payload = Var::f32(&[1 << 14], vec![0f32; 1 << 14]); // 64 KiB
+        let bytes = (1 << 16) * n_msgs;
         let recv_thread = {
             let b = b.clone();
             std::thread::spawn(move || {
@@ -139,18 +160,28 @@ fn main() {
                 }
             })
         };
+        // Shared payload: each send clones a reference, not 64 KiB.
         let s = bench("vmpi send+recv 64KiB", 0, 1, || {
             for _ in 0..n_msgs {
-                a.send(1, 1, Var::f32(&[payload.len()], payload.clone())).unwrap();
+                a.send(1, 1, payload.clone()).unwrap();
             }
         });
         recv_thread.join().unwrap();
-        println!(
-            "\n=== vmpi point-to-point ===\n\n  {n_msgs} × 64 KiB in {} → {:.2} GiB/s, {:.2} µs/msg",
-            sedar::util::human_duration(s.min),
-            bytes as f64 / s.min.as_secs_f64() / (1 << 30) as f64,
+        jr.push_raw(format!(
+            "{{\"group\":\"transport\",\"case\":\"p2p 64KiB\",\"msgs\":{n_msgs},\
+             \"wall_ns\":{},\"gib_per_s\":{:.3},\"us_per_msg\":{:.2}}}",
+            s.min.as_nanos(),
+            bytes as f64 / s.min.as_secs_f64() / (1u64 << 30) as f64,
             s.min.as_secs_f64() * 1e6 / n_msgs as f64
-        );
+        ));
+        if echo {
+            println!(
+                "\n=== vmpi point-to-point ===\n\n  {n_msgs} × 64 KiB in {} → {:.2} GiB/s, {:.2} µs/msg",
+                sedar::util::human_duration(s.min),
+                bytes as f64 / s.min.as_secs_f64() / (1u64 << 30) as f64,
+                s.min.as_secs_f64() * 1e6 / n_msgs as f64
+            );
+        }
     }
 
     // ---------------- snapshot framing -------------------------------------
@@ -187,7 +218,10 @@ fn main() {
         }),
         Some(payload.len()),
     ));
-    print_stats("checkpoint substrate (t_cs drivers)", &rows);
+    for (s, b) in &rows {
+        jr.push_stats("ckpt_frame", s, *b);
+    }
+    print_stats(echo, "checkpoint substrate (t_cs drivers)", &rows);
     let _ = std::fs::remove_dir_all(&dir);
 
     // ---------------- PJRT dispatch ----------------------------------------
@@ -210,15 +244,22 @@ fn main() {
                 .unwrap(),
             );
         });
-        println!(
-            "\n=== PJRT dispatch (compute hot path) ===\n\n  warm execute: min {} mean {}  \
-             (2·r·n² = {} flop → {:.2} MFLOP/s incl. marshalling)",
-            sedar::util::human_duration(s.min),
-            sedar::util::human_duration(s.mean),
-            2 * 4 * 64 * 64,
-            (2.0 * 4.0 * 64.0 * 64.0) / s.min.as_secs_f64() / 1e6
-        );
-    } else {
+        jr.push_stats("pjrt", &s, None);
+        if echo {
+            println!(
+                "\n=== PJRT dispatch (compute hot path) ===\n\n  warm execute: min {} mean {}  \
+                 (2·r·n² = {} flop → {:.2} MFLOP/s incl. marshalling)",
+                sedar::util::human_duration(s.min),
+                sedar::util::human_duration(s.mean),
+                2 * 4 * 64 * 64,
+                (2.0 * 4.0 * 64.0 * 64.0) / s.min.as_secs_f64() / 1e6
+            );
+        }
+    } else if echo {
         println!("\n(PJRT dispatch bench skipped: no artifacts — run `make artifacts`)");
+    }
+
+    if json {
+        print!("{}", jr.render());
     }
 }

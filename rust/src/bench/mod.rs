@@ -1,0 +1,289 @@
+//! `sedar bench` — the in-binary performance suite behind the
+//! machine-readable bench trajectory (`BENCH_*.json`).
+//!
+//! Four sections cover the hot paths the perf PRs optimize, so successive
+//! PRs diff numbers instead of re-guessing them:
+//!
+//! 1. **msg_validation** — per-message detection cost by payload size:
+//!    borrowed full-contents token construction (allocation-free),
+//!    replica-buffer comparison, and SHA-256 digest tokens;
+//! 2. **p2p / bcast** — vmpi transport latency/throughput by payload size
+//!    (payloads are shared buffers: a send moves a reference);
+//! 3. **ckpt_frame** — single-pass checkpoint frame write/read MB/s by
+//!    codec (`Raw`, `Deflate(1)`, `Deflate(6)`);
+//! 4. **campaign** — end-to-end wall time of the 576-task injection sweep
+//!    (the system-level number everything above feeds).
+//!
+//! `--json` renders the `sedar-bench/1` document
+//! ([`crate::report::benchkit::JsonReport`]); `--quick` (or
+//! `SEDAR_BENCH_QUICK=1`) shrinks sizes and iteration counts to
+//! CI-friendly scale. Human-readable tables go to stdout unless JSON is
+//! requested on stdout; progress lines go to stderr.
+
+use std::time::Instant;
+
+use crate::campaign::{run_campaign, CampaignSpec};
+use crate::checkpoint::snapshot::{read_frame, write_frame, Codec};
+use crate::detect::{buffers_equal, Token, ValidationMode};
+use crate::error::Result;
+use crate::report::benchkit::{bench, black_box, print_table, JsonReport, Stats};
+use crate::state::{Var, VarStore};
+use crate::util::prng::SplitMix64;
+use crate::vmpi::Network;
+
+/// What to run and how big.
+pub struct BenchOpts {
+    /// CI-friendly scale (also set by `SEDAR_BENCH_QUICK=1`).
+    pub quick: bool,
+    /// Include the end-to-end campaign section (the slow one).
+    pub campaign: bool,
+    /// Worker threads for the campaign section.
+    pub jobs: usize,
+    /// Campaign master seed.
+    pub seed: u64,
+    /// Print human-readable tables to stdout as sections finish.
+    pub echo: bool,
+}
+
+fn rand_bytes(seed: u64, n: usize) -> Vec<u8> {
+    let mut rng = SplitMix64::new(seed);
+    (0..n).map(|_| (rng.next_u64() & 0xff) as u8).collect()
+}
+
+fn size_label(n: usize) -> String {
+    crate::util::human_bytes(n as u64)
+}
+
+fn print_section(echo: bool, title: &str, rows: &[(Stats, Option<usize>)]) {
+    if echo {
+        print_table(title, rows);
+    }
+}
+
+/// Run the suite; returns the populated JSON report (rendered or not by the
+/// caller).
+pub fn run_suite(opts: &BenchOpts) -> Result<JsonReport> {
+    let mut jr = JsonReport::new();
+    jr.meta("quick", if opts.quick { "true" } else { "false" });
+    jr.meta(
+        "cores",
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .to_string(),
+    );
+    jr.meta("os", format!("\"{}\"", crate::report::json_escape(std::env::consts::OS)));
+
+    msg_validation_section(opts, &mut jr);
+    transport_section(opts, &mut jr);
+    ckpt_frame_section(opts, &mut jr);
+    if opts.campaign {
+        campaign_section(opts, &mut jr)?;
+    }
+    Ok(jr)
+}
+
+/// Per-message detection cost: what every validated send pays, by size and
+/// validation mode (ns/MiB is the headline column of the trajectory).
+fn msg_validation_section(opts: &BenchOpts, jr: &mut JsonReport) {
+    eprintln!("bench: msg_validation");
+    let iters = if opts.quick { 20 } else { 200 };
+    let sizes: &[usize] = if opts.quick {
+        &[1 << 16, 1 << 20]
+    } else {
+        &[1 << 16, 1 << 20, 1 << 22]
+    };
+    let mut rows = Vec::new();
+    for &size in sizes {
+        let msg = rand_bytes(1, size);
+        let peer = msg.clone();
+        let label = size_label(size);
+        // Borrowed full token: the send-path cost of "building" the
+        // comparison token in Full mode — must be O(1), no allocation.
+        rows.push((
+            bench(&format!("token full {label}"), 3, iters, || {
+                black_box(Token::new(ValidationMode::Full, &msg).len());
+            }),
+            Some(size),
+        ));
+        // The lead's in-place comparison against the sibling's shared view.
+        rows.push((
+            bench(&format!("compare equal {label}"), 3, iters, || {
+                black_box(buffers_equal(&msg, &peer));
+            }),
+            Some(size),
+        ));
+        // Digest-mode token (32-byte wire form, compute-bound).
+        rows.push((
+            bench(&format!("token sha256 {label}"), 3, iters.min(100), || {
+                black_box(Token::new(ValidationMode::Sha256, &msg).len());
+            }),
+            Some(size),
+        ));
+    }
+    for (s, b) in &rows {
+        jr.push_stats("msg_validation", s, *b);
+    }
+    print_section(opts.echo, "message validation (per-send detection cost)", &rows);
+}
+
+/// vmpi transport: point-to-point and broadcast by payload size. Payload
+/// buffers are shared, so these numbers are queue/rendezvous overhead —
+/// the bytes column reports *delivered* payload bytes.
+fn transport_section(opts: &BenchOpts, jr: &mut JsonReport) {
+    eprintln!("bench: transport");
+    let mut rows = Vec::new();
+    let msgs = if opts.quick { 1_000 } else { 10_000 };
+    for &size in &[1usize << 10, 1 << 16, 1 << 20] {
+        let elems = size / 4;
+        let payload = Var::f32(&[elems], vec![0.5f32; elems]);
+        let net = Network::new(2);
+        let a = net.endpoint(0);
+        let b = net.endpoint(1);
+        let recv = std::thread::spawn(move || {
+            for _ in 0..msgs {
+                b.recv(0, 1).unwrap();
+            }
+        });
+        let s = bench(&format!("p2p {}", size_label(size)), 0, 1, || {
+            for _ in 0..msgs {
+                a.send(1, 1, payload.clone()).unwrap();
+            }
+        });
+        recv.join().unwrap();
+        rows.push((s, Some(size * msgs)));
+    }
+
+    let rounds = if opts.quick { 200 } else { 2_000 };
+    for &size in &[1usize << 16, 1 << 20] {
+        let elems = size / 4;
+        let s = bench(&format!("bcast x4 {}", size_label(size)), 0, 1, || {
+            let net = Network::new(4);
+            let mut handles = Vec::new();
+            for r in 0..4 {
+                let ep = net.endpoint(r);
+                handles.push(std::thread::spawn(move || {
+                    let root_payload =
+                        (r == 0).then(|| Var::f32(&[elems], vec![0.25f32; elems]));
+                    for _ in 0..rounds {
+                        ep.bcast(0, root_payload.clone()).unwrap();
+                    }
+                }));
+            }
+            for h in handles {
+                h.join().unwrap();
+            }
+        });
+        // Delivered bytes: 3 receivers × rounds × size.
+        rows.push((s, Some(3 * rounds * size)));
+    }
+    for (s, b) in &rows {
+        jr.push_stats("transport", s, *b);
+    }
+    print_section(opts.echo, "vmpi transport (p2p / bcast)", &rows);
+}
+
+/// Checkpoint frame substrate: single-pass write and verify-read by codec.
+fn ckpt_frame_section(opts: &BenchOpts, jr: &mut JsonReport) {
+    eprintln!("bench: ckpt_frame");
+    let iters = if opts.quick { 10 } else { 30 };
+    let dir = std::env::temp_dir().join(format!("sedar-bench-frame-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    // A realistic checkpoint body: a rank's matrix state — f32 noise, the
+    // worst case for the compressing codecs.
+    let n = if opts.quick { 1 << 18 } else { 1 << 20 };
+    let mut store = VarStore::new();
+    let mut rng = SplitMix64::new(9);
+    let mut m = vec![0f32; n];
+    rng.fill_f32(&mut m);
+    store.insert("A", Var::f32(&[n], m));
+    let payload = store.serialize();
+    let label = size_label(payload.len());
+
+    let mut rows = Vec::new();
+    for codec in [Codec::Raw, Codec::Deflate(1), Codec::Deflate(6)] {
+        let p = dir.join("frame.bin");
+        let clabel = format!("{codec:?}");
+        rows.push((
+            bench(&format!("write {clabel} {label}"), 1, iters, || {
+                write_frame(&p, &payload, codec).unwrap();
+            }),
+            Some(payload.len()),
+        ));
+        rows.push((
+            bench(&format!("read  {clabel} {label}"), 1, iters, || {
+                black_box(read_frame(&p).unwrap());
+            }),
+            Some(payload.len()),
+        ));
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+    for (s, b) in &rows {
+        jr.push_stats("ckpt_frame", s, *b);
+    }
+    print_section(opts.echo, "checkpoint frame substrate (t_cs drivers)", &rows);
+}
+
+/// End-to-end: the full injection campaign, one wall-clock number.
+fn campaign_section(opts: &BenchOpts, jr: &mut JsonReport) -> Result<()> {
+    eprintln!("bench: campaign (e2e)");
+    let mut spec = CampaignSpec::new(opts.seed);
+    spec.jobs = opts.jobs.max(1);
+    spec.echo = false;
+    if opts.quick {
+        // A representative slice: every strategy, one app, 8 scenarios.
+        spec.apply_filter("app=matmul,scenario=1-8")?;
+    }
+    spec.base.run_dir =
+        std::env::temp_dir().join(format!("sedar-bench-campaign-{}", std::process::id()));
+    let t0 = Instant::now();
+    let report = run_campaign(&spec);
+    let wall = t0.elapsed();
+    let _ = std::fs::remove_dir_all(&spec.base.run_dir);
+    let report = report?;
+    let tasks = report.total();
+    jr.push_raw(format!(
+        "{{\"group\":\"campaign\",\"case\":\"e2e {tasks} tasks\",\"tasks\":{tasks},\
+         \"jobs\":{},\"wall_ms\":{},\"pass\":{}}}",
+        spec.jobs,
+        wall.as_millis(),
+        report.verdict()
+    ));
+    if opts.echo {
+        println!(
+            "\n=== campaign e2e ===\n\n  {tasks} tasks, {} jobs → {} ({})",
+            spec.jobs,
+            crate::util::human_duration(wall),
+            report.summary_line()
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The quick suite (campaign excluded — the e2e path is exercised by
+    /// the campaign integration tests) must produce a structurally sound
+    /// document covering every section.
+    #[test]
+    fn quick_suite_renders_all_sections() {
+        let opts = BenchOpts {
+            quick: true,
+            campaign: false,
+            jobs: 1,
+            seed: 7,
+            echo: false,
+        };
+        let jr = run_suite(&opts).unwrap();
+        let doc = jr.render();
+        assert!(doc.contains("\"schema\": \"sedar-bench/1\""));
+        for group in ["msg_validation", "transport", "ckpt_frame"] {
+            assert!(doc.contains(&format!("\"group\":\"{group}\"")), "missing {group}");
+        }
+        assert!(doc.contains("\"ns_per_mib\":"));
+        let opens = doc.matches(['{', '[']).count();
+        assert_eq!(opens, doc.matches(['}', ']']).count());
+    }
+}

@@ -72,6 +72,10 @@ impl CampaignReport {
         })
     }
 
+    pub fn total(&self) -> usize {
+        self.outcomes.len()
+    }
+
     pub fn passed(&self) -> usize {
         self.outcomes.iter().filter(|o| o.pass).count()
     }

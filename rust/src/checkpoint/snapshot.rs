@@ -20,11 +20,17 @@
 //! Beyond checkpoints, the same frame wraps the fleet's durable shard
 //! artifacts ([`crate::fleet::artifact`]) — one codec guards every byte the
 //! system persists.
+//!
+//! Writes are **single-pass**: [`encode_frame`] emits the body while
+//! folding CRC-32 (and, for validated user checkpoints, SHA-256 of the
+//! payload) over the same scan, instead of the historical
+//! hash-then-compress-then-concatenate triple walk. The frame bytes are
+//! unchanged — only the number of passes over the payload is.
 
 use std::path::Path;
 
 use crate::error::{Result, SedarError};
-use crate::util::codec::{compress, crc32, decompress};
+use crate::util::codec::{compress_fused, copy_fused, crc32, decompress, PassState};
 
 const MAGIC: &[u8; 4] = b"SDCK";
 const VERSION: u32 = 1;
@@ -50,23 +56,45 @@ impl Default for Codec {
     }
 }
 
-/// Serialize `payload` into a frame at `path` (atomic: write + rename).
-pub fn write_frame(path: &Path, payload: &[u8], codec: Codec) -> Result<()> {
-    let crc = crc32(payload);
-    let (flags, body) = match codec {
-        Codec::Raw => (0u32, payload.to_vec()),
-        Codec::Deflate(level) => (FLAG_DEFLATE, compress(payload, level)),
+/// Encode `payload` into a complete frame byte-string — in **one pass**
+/// over the payload. The body (raw copy or LZSS) is emitted straight into
+/// the frame buffer while CRC-32 (and, when `want_sha`, SHA-256 of the
+/// *payload* — Algorithm 2's checkpoint hash) fold over the same scan; the
+/// CRC header field is patched in afterwards. Output is byte-identical to
+/// the historical header + separate-CRC-pass + separate-compress-pass
+/// assembly (asserted by `fused_frame_matches_legacy_assembly` below).
+pub fn encode_frame(payload: &[u8], codec: Codec, want_sha: bool) -> (Vec<u8>, Option<[u8; 32]>) {
+    let (flags, cap_hint) = match codec {
+        Codec::Raw => (0u32, payload.len()),
+        Codec::Deflate(_) => (FLAG_DEFLATE, payload.len() / 2 + 16),
     };
-    let mut out = Vec::with_capacity(24 + body.len());
+    let mut out = Vec::with_capacity(24 + cap_hint);
     out.extend_from_slice(MAGIC);
     out.extend_from_slice(&VERSION.to_le_bytes());
     out.extend_from_slice(&flags.to_le_bytes());
-    out.extend_from_slice(&crc.to_le_bytes());
+    out.extend_from_slice(&0u32.to_le_bytes()); // CRC, patched below
     out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
-    out.extend_from_slice(&body);
 
+    let mut pass = PassState::new(want_sha);
+    match codec {
+        Codec::Raw => copy_fused(payload, &mut out, &mut pass),
+        Codec::Deflate(level) => compress_fused(payload, level, &mut out, &mut pass),
+    }
+    out[12..16].copy_from_slice(&pass.crc32().to_le_bytes());
+    (out, pass.sha256())
+}
+
+/// Serialize `payload` into a frame at `path` (atomic: write + rename;
+/// single-pass encode — see [`encode_frame`]).
+pub fn write_frame(path: &Path, payload: &[u8], codec: Codec) -> Result<()> {
+    let (frame, _) = encode_frame(payload, codec, false);
+    write_encoded(path, &frame)
+}
+
+/// Atomically store an already-encoded frame (from [`encode_frame`]).
+pub fn write_encoded(path: &Path, frame: &[u8]) -> Result<()> {
     let tmp = path.with_extension("tmp");
-    std::fs::write(&tmp, &out)?;
+    std::fs::write(&tmp, frame)?;
     std::fs::rename(&tmp, path)?;
     Ok(())
 }
@@ -127,6 +155,8 @@ pub fn read_frame(path: &Path) -> Result<Vec<u8>> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::codec::compress;
+    use crate::util::prng::SplitMix64;
 
     fn tmpdir(tag: &str) -> std::path::PathBuf {
         let d = std::env::temp_dir().join(format!("sedar-snap-{tag}-{}", std::process::id()));
@@ -152,6 +182,51 @@ mod tests {
         write_frame(&p, &payload, Codec::Deflate(6)).unwrap();
         // Compressible payload: frame should be smaller than the raw body.
         assert!(std::fs::metadata(&p).unwrap().len() < payload.len() as u64);
+        assert_eq!(read_frame(&p).unwrap(), payload);
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    /// The single-pass fusion must not change a single frame byte: assemble
+    /// the frame the historical way (separate CRC pass, separate compress
+    /// pass, then concatenate) and compare.
+    #[test]
+    fn fused_frame_matches_legacy_assembly() {
+        let mut rng = SplitMix64::new(21);
+        let mut payloads: Vec<Vec<u8>> = vec![
+            vec![],
+            b"short".to_vec(),
+            (0..100_000u32).map(|i| (i % 251) as u8).collect(),
+        ];
+        payloads.push((0..50_000).map(|_| rng.next_u64() as u8).collect());
+        for payload in &payloads {
+            for codec in [Codec::Raw, Codec::Deflate(1), Codec::Deflate(6)] {
+                let (frame, sha) = encode_frame(payload, codec, true);
+                let (flags, body) = match codec {
+                    Codec::Raw => (0u32, payload.clone()),
+                    Codec::Deflate(level) => (FLAG_DEFLATE, compress(payload, level)),
+                };
+                let mut legacy = Vec::with_capacity(24 + body.len());
+                legacy.extend_from_slice(MAGIC);
+                legacy.extend_from_slice(&VERSION.to_le_bytes());
+                legacy.extend_from_slice(&flags.to_le_bytes());
+                legacy.extend_from_slice(&crc32(payload).to_le_bytes());
+                legacy.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+                legacy.extend_from_slice(&body);
+                assert_eq!(frame, legacy, "codec {codec:?}, len {}", payload.len());
+                // The fused digest is the payload hash, not the body hash.
+                assert_eq!(sha.unwrap(), crate::util::sha256::sha256(payload));
+            }
+        }
+    }
+
+    #[test]
+    fn encoded_frame_write_roundtrips() {
+        let d = tmpdir("digest");
+        let p = d.join("f.bin");
+        let payload: Vec<u8> = (0..10_000u32).map(|i| (i % 13) as u8).collect();
+        let (frame, sha) = encode_frame(&payload, Codec::Deflate(1), true);
+        write_encoded(&p, &frame).unwrap();
+        assert_eq!(sha.unwrap(), crate::util::sha256::sha256(&payload));
         assert_eq!(read_frame(&p).unwrap(), payload);
         std::fs::remove_dir_all(&d).unwrap();
     }

@@ -22,7 +22,7 @@ use std::path::{Path, PathBuf};
 use crate::error::{Result, SedarError};
 use crate::state::VarStore;
 
-use super::snapshot::{read_frame, write_frame, Codec};
+use super::snapshot::{self, read_frame, write_frame, Codec};
 
 /// The payload of a user-level checkpoint: the phase cursor + the filtered
 /// (significant-variables-only) store.
@@ -127,6 +127,27 @@ impl UserChain {
     /// Store a pre-assembled payload (see [`UserSnapshot::serialize_parts`]).
     pub fn write_valid_payload(&self, no: u64, rank: usize, payload: &[u8]) -> Result<()> {
         write_frame(&self.uck_path(no, rank), payload, self.codec)
+    }
+
+    /// The chain's frame codec (the replica layer gates the fused encode
+    /// on it: only cheap codecs may run before the digest rendezvous).
+    pub fn codec(&self) -> Codec {
+        self.codec
+    }
+
+    /// Single-pass candidate encode (Algorithm 2's hot path): one scan over
+    /// the payload yields both the ready-to-store frame bytes and
+    /// SHA-256(payload) — the digest the replicas cross-validate *before*
+    /// deciding whether the frame may be stored. Pair with
+    /// [`UserChain::write_valid_frame`] once the verdict is in.
+    pub fn encode_valid(&self, payload: &[u8]) -> (Vec<u8>, [u8; 32]) {
+        let (frame, sha) = snapshot::encode_frame(payload, self.codec, true);
+        (frame, sha.expect("sha requested from encode_frame"))
+    }
+
+    /// Store a frame produced by [`UserChain::encode_valid`].
+    pub fn write_valid_frame(&self, no: u64, rank: usize, frame: &[u8]) -> Result<()> {
+        snapshot::write_encoded(&self.uck_path(no, rank), frame)
     }
 
     /// Promote checkpoint `no` to "the" valid checkpoint and discard the
@@ -241,6 +262,31 @@ mod tests {
         assert!(c.read(1, 0).is_err());
         assert_eq!(c.read(0, 0).unwrap(), usnap(2, 1.0));
         std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn encode_valid_frame_equals_write_valid_payload() {
+        // The fused encode+store path must leave on-disk bytes identical to
+        // the two-pass write (the campaign's byte-identical-report invariant
+        // reaches through checkpoint files via recovery timings, so the
+        // formats must never fork).
+        for codec in [Codec::Raw, Codec::Deflate(1)] {
+            let dir = tmpdir(match codec {
+                Codec::Raw => "fuseraw",
+                _ => "fusedefl",
+            });
+            let c = UserChain::create(&dir, 1, codec).unwrap();
+            let payload = usnap(6, 3.5).serialize();
+            c.write_valid_payload(7, 0, &payload).unwrap();
+            let legacy = std::fs::read(c.uck_path(7, 0)).unwrap();
+            let (frame, sha) = c.encode_valid(&payload);
+            assert_eq!(frame, legacy);
+            assert_eq!(sha, crate::util::sha256::sha256(&payload));
+            c.write_valid_frame(8, 0, &frame).unwrap();
+            assert_eq!(std::fs::read(c.uck_path(8, 0)).unwrap(), legacy);
+            assert_eq!(c.read(8, 0).unwrap(), usnap(6, 3.5));
+            std::fs::remove_dir_all(&dir).unwrap();
+        }
     }
 
     #[test]

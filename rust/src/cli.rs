@@ -14,8 +14,9 @@
 //! runs one deterministic slice, `--out`/`--journal` make it durable and
 //! resumable, `--status-port` serves live progress, and the `merge`
 //! subcommand (`sedar merge s1.bin s2.bin`) recombines shard artifacts
-//! into the byte-identical full report. The full flag list is in the
-//! `HELP` text of `src/main.rs`.
+//! into the byte-identical full report. `sedar bench --json` emits the
+//! machine-readable perf trajectory ([`crate::bench`]). The full flag
+//! list is in the `HELP` text of `src/main.rs`.
 
 use std::collections::HashMap;
 

@@ -81,12 +81,52 @@ pub fn sha256(bytes: &[u8]) -> [u8; 32] {
     crate::util::sha256::sha256(bytes)
 }
 
-/// The comparison token two replicas exchange: either the full buffer or its
-/// digest, per [`ValidationMode`].
-pub fn comparison_token(mode: ValidationMode, bytes: &[u8]) -> Vec<u8> {
-    match mode {
-        ValidationMode::Full => bytes.to_vec(),
-        ValidationMode::Sha256 => sha256(bytes).to_vec(),
+/// The comparison token a replica contributes at a validation rendezvous —
+/// **borrowing**: `Full` is a zero-copy view of the outgoing buffer (the
+/// paper's full-contents message validation allocates nothing on the send
+/// path), `Digest` is 32 stack bytes computed from it. Bytes are only
+/// materialized when a token must actually cross a channel
+/// ([`Token::to_wire`]) — and for `Digest` that is 32 bytes regardless of
+/// payload size.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Token<'a> {
+    Full(&'a [u8]),
+    Digest([u8; 32]),
+}
+
+impl<'a> Token<'a> {
+    pub fn new(mode: ValidationMode, bytes: &'a [u8]) -> Token<'a> {
+        match mode {
+            ValidationMode::Full => Token::Full(bytes),
+            ValidationMode::Sha256 => Token::Digest(sha256(bytes)),
+        }
+    }
+
+    /// The bytes a peer compares against.
+    pub fn as_bytes(&self) -> &[u8] {
+        match *self {
+            Token::Full(b) => b,
+            Token::Digest(ref d) => &d[..],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.as_bytes().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.as_bytes().is_empty()
+    }
+
+    /// Owned wire form for crossing a channel — the only place this type
+    /// copies anything.
+    pub fn to_wire(&self) -> Vec<u8> {
+        self.as_bytes().to_vec()
+    }
+
+    /// Compare against a peer token's wire form.
+    pub fn matches(&self, peer: &[u8]) -> bool {
+        buffers_equal(self.as_bytes(), peer)
     }
 }
 
@@ -241,8 +281,90 @@ mod tests {
     #[test]
     fn token_modes() {
         let data = vec![1u8, 2, 3];
-        assert_eq!(comparison_token(ValidationMode::Full, &data), data);
-        assert_eq!(comparison_token(ValidationMode::Sha256, &data).len(), 32);
+        let full = Token::new(ValidationMode::Full, &data);
+        assert!(matches!(full, Token::Full(_)), "full token must borrow");
+        assert_eq!(full.as_bytes(), &data[..]);
+        assert_eq!(full.as_bytes().as_ptr(), data.as_ptr(), "no copy");
+        let dig = Token::new(ValidationMode::Sha256, &data);
+        assert_eq!(dig.len(), 32);
+        assert!(dig.matches(&Token::new(ValidationMode::Sha256, &data).to_wire()));
+        assert!(!dig.matches(&Token::new(ValidationMode::Sha256, b"other").to_wire()));
+        assert!(full.matches(&data));
+        assert!(!full.matches(&[1, 2]));
+    }
+
+    // ---- buffers_equal boundary coverage: the function reads 8-byte words
+    // with `read_unaligned`, so lengths straddling the word boundary and
+    // misaligned slice starts are exactly where a bug would hide.
+
+    #[test]
+    fn boundary_lengths_across_the_word_edge() {
+        for n in 0..=16usize {
+            let a: Vec<u8> = (0..n as u8).collect();
+            assert!(buffers_equal(&a, &a.clone()), "equal len {n}");
+            for i in 0..n {
+                for bit in 0..8u8 {
+                    let mut b = a.clone();
+                    b[i] ^= 1 << bit;
+                    assert!(
+                        !buffers_equal(&a, &b),
+                        "missed flip at len {n} byte {i} bit {bit}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn equal_prefix_differing_tail() {
+        // Whole words equal; the difference lives only in the sub-word tail.
+        for n in [9usize, 15, 17, 31, 63, 65, 127] {
+            let a = vec![0xA5u8; n];
+            let tail_start = n - (n % 8).max(1);
+            for i in [tail_start, n - 1] {
+                let mut b = a.clone();
+                b[i] ^= 0x01;
+                assert!(!buffers_equal(&a, &b), "missed tail flip at len {n} byte {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn misaligned_slices_compare_correctly() {
+        // Every start-offset combination: contents of base[o..o+64] differ
+        // between offsets (strictly increasing bytes), so equality must hold
+        // exactly when the offsets match — whatever the alignment.
+        let base: Vec<u8> = (0..200u8).collect();
+        for off_a in 0..8usize {
+            let a = &base[off_a..off_a + 64];
+            for off_b in 0..8usize {
+                let b = &base[off_b..off_b + 64];
+                assert_eq!(
+                    buffers_equal(a, b),
+                    off_a == off_b,
+                    "offsets {off_a}/{off_b}"
+                );
+            }
+            // A misaligned view equals its aligned copy.
+            let copy = a.to_vec();
+            assert!(buffers_equal(a, &copy));
+        }
+    }
+
+    #[test]
+    fn agrees_with_slice_eq_on_random_cases() {
+        use crate::util::prng::SplitMix64;
+        let mut rng = SplitMix64::new(3);
+        for _ in 0..500 {
+            let n = (rng.next_u64() % 40) as usize;
+            let a: Vec<u8> = (0..n).map(|_| rng.next_u64() as u8).collect();
+            let mut b = a.clone();
+            if n > 0 && rng.next_u64() % 2 == 0 {
+                let i = (rng.next_u64() as usize) % n;
+                b[i] ^= 1 << (rng.next_u64() % 8);
+            }
+            assert_eq!(buffers_equal(&a, &b), a == b);
+        }
     }
 
     #[test]

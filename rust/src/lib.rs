@@ -46,9 +46,11 @@
 //! | [`runtime`] | PJRT engine: loads `artifacts/*.hlo.txt`, executes from rust |
 //! | [`metrics`] | timers and derived execution parameters (Table 3) |
 //! | [`report`] | markdown / CSV table emitters for the experiment harness |
+//! | [`bench`] | `sedar bench`: the machine-readable perf trajectory (`BENCH_*.json`) |
 //! | [`prop`] | in-repo property-based testing mini-framework |
 
 pub mod apps;
+pub mod bench;
 pub mod campaign;
 pub mod checkpoint;
 pub mod cli;

@@ -12,6 +12,7 @@
 //!                [--allow-partial]
 //! sedar catalog                                           # print Table 2 (all 64 rows)
 //! sedar model    [--table 4|5] [--thresholds] [--aet]     # the analytical model
+//! sedar bench    [--json] [--out FILE] [--quick] [--no-campaign] [--jobs N]
 //! sedar help
 //! ```
 
@@ -48,6 +49,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("merge") => cmd_merge(args),
         Some("catalog") => cmd_catalog(),
         Some("model") => cmd_model(args),
+        Some("bench") => cmd_bench(args),
         Some("help") | None => {
             print!("{}", HELP);
             Ok(())
@@ -74,6 +76,9 @@ commands:
   catalog   print the full scenario catalog (the paper's Table 2)
   model     evaluate the analytical temporal model (Tables 4/5, thresholds,
             AET-vs-MTBE sweeps)
+  bench     measure the hot paths (message validation, vmpi transport,
+            checkpoint frames, end-to-end campaign) and emit the
+            machine-readable perf trajectory
   help      this text
 
 campaign flags:
@@ -107,6 +112,16 @@ merge flags:
   --report FMT     md (default) or csv
   --report-out F   also write the deterministic report to F
   --allow-partial  render even if the shards do not cover the whole sweep
+
+bench flags:
+  --json           emit the sedar-bench/1 JSON document on stdout (tables
+                   are suppressed; progress goes to stderr)
+  --out FILE       write the JSON document to FILE instead of stdout
+                   (how BENCH_pr3.json is produced)
+  --quick          CI-scale sizes/iterations (also: SEDAR_BENCH_QUICK=1)
+  --no-campaign    skip the end-to-end campaign section (the slow one)
+  --jobs N         campaign worker threads (default: as for campaign)
+  --seed S         campaign master seed (default 42)
 
 run `sedar <cmd>` flag semantics are documented in rust/src/main.rs.
 ";
@@ -319,6 +334,31 @@ fn cmd_catalog() -> Result<()> {
     println!("{}", workfault::table2_header());
     for sc in workfault::catalog(&app) {
         println!("{}", sc.row());
+    }
+    Ok(())
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    let json = args.has("json") || args.get("out").is_some();
+    let opts = sedar::bench::BenchOpts {
+        quick: args.has("quick") || sedar::report::benchkit::quick(),
+        campaign: !args.has("no-campaign"),
+        jobs: args.usize_or("jobs", CampaignSpec::default_jobs())?,
+        seed: args.u64_or("seed", 42)?,
+        // Human tables share stdout with the JSON document; suppress them
+        // when JSON goes there so the output stays parseable.
+        echo: !json || args.get("out").is_some(),
+    };
+    let report = sedar::bench::run_suite(&opts)?;
+    if json {
+        let doc = report.render();
+        match args.get("out") {
+            Some(path) => {
+                std::fs::write(path, &doc)?;
+                eprintln!("bench: wrote {path}");
+            }
+            None => print!("{doc}"),
+        }
     }
     Ok(())
 }

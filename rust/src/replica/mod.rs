@@ -17,6 +17,13 @@
 //!
 //! A divergence anywhere reports to the [`Detector`], which safe-stops the
 //! whole run; the coordinator then drives recovery.
+//!
+//! Detection is **allocation-free on the send path**: store buffers are
+//! shared ([`crate::util::bytes::SharedBuf`]), so the lead's payload clone
+//! is a reference bump, full-contents comparison borrows both stores in
+//! place, and the replica's comparison token crosses the rendezvous as a
+//! shared view ([`TokenBuf::Shared`]) — see `benches/micro_hotpath.rs` and
+//! `BENCH_pr3.json` for the measured effect.
 
 pub mod driver;
 pub mod pair;
@@ -24,16 +31,18 @@ pub mod pair;
 use std::sync::Arc;
 use std::time::Instant;
 
+use crate::checkpoint::snapshot::Codec;
 use crate::checkpoint::user::UserSnapshot;
 use crate::checkpoint::{RankSnapshot, SystemChain, UserChain};
 use crate::config::{CollectiveImpl, RunConfig, Strategy};
 use crate::coordinator::trace::Trace;
-use crate::detect::{buffers_equal, comparison_token, sha256, Detector, ValidationMode};
+use crate::detect::{buffers_equal, sha256, Detector, Token, ValidationMode};
 use crate::error::{FaultClass, Result, SedarError};
 use crate::inject::Injector;
 use crate::metrics::RunMetrics;
 use crate::runtime::EngineHandle;
 use crate::state::{Buf, DType, Var, VarStore};
+use crate::util::bytes::TokenBuf;
 use crate::vmpi::Endpoint;
 
 use pair::{PairError, PairSync};
@@ -175,7 +184,7 @@ impl ReplicaCtx {
 
     /// Rendezvous with the sibling, exchanging `token`. Converts a missing
     /// sibling into a TOE detection at `site`.
-    fn pair_exchange(&self, token: Vec<u8>, site: &str) -> Result<Vec<u8>> {
+    fn pair_exchange(&self, token: TokenBuf, site: &str) -> Result<TokenBuf> {
         if self.solo {
             return Ok(token);
         }
@@ -197,9 +206,9 @@ impl ReplicaCtx {
         }
     }
 
-    fn pop_from_sibling(&self, site: &str) -> Result<Vec<u8>> {
+    fn pop_from_sibling(&self, site: &str) -> Result<TokenBuf> {
         if self.solo {
-            return Ok(vec![1]);
+            return Ok(vec![1].into());
         }
         let t0 = Instant::now();
         let r = self.pair.pop_mine(self.replica, self.cfg.toe_timeout);
@@ -216,7 +225,7 @@ impl ReplicaCtx {
         }
     }
 
-    fn push_to_sibling(&self, token: Vec<u8>) {
+    fn push_to_sibling(&self, token: TokenBuf) {
         if self.solo {
             return;
         }
@@ -226,16 +235,37 @@ impl ReplicaCtx {
     /// Compare this replica's buffer against the sibling's and classify a
     /// mismatch as `class` at `site`. Returns Ok(()) on agreement.
     ///
-    /// Protocol (perf change P3, EXPERIMENTS.md §Perf): in `Full` mode the
-    /// transfer is one-way — the replica ships its bytes, the leader
-    /// compares them against its own buffer in place and ships back a
-    /// 1-byte verdict. This halves the copied bytes per validation versus
-    /// the naive both-ways exchange while preserving the rendezvous (and
-    /// therefore TOE detection) in both directions. `Sha256` mode exchanges
-    /// 32-byte digests symmetrically.
-    fn compare_with_sibling(
+    /// Protocol (perf changes P3 + P7, EXPERIMENTS.md §Perf): in `Full`
+    /// mode the transfer is one-way **and zero-copy** — the replica ships a
+    /// shared view of its buffer ([`TokenBuf::Shared`]; a reference, not
+    /// bytes), the leader compares it against its own buffer in place and
+    /// ships back a 1-byte verdict. No payload bytes are copied or
+    /// allocated anywhere on this path, while the rendezvous (and therefore
+    /// TOE detection) is preserved in both directions. `Sha256` mode
+    /// exchanges 32-byte digests symmetrically — the digest crosses the
+    /// channel exactly once (the historical build-then-clone double
+    /// allocation is gone).
+    fn compare_with_sibling(&self, buf: &Buf, site: &str, class: FaultClass) -> Result<()> {
+        self.compare_with_sibling_inner(buf.bytes(), Some(buf), site, class)
+    }
+
+    /// [`Self::compare_with_sibling`] for ad-hoc byte strings with no
+    /// shared storage behind them (the Native-scatter concatenated
+    /// payload): the lead still compares in place with zero copies; only
+    /// the replica's token falls back to an owned copy.
+    fn compare_bytes_with_sibling(
         &self,
         bytes: &[u8],
+        site: &str,
+        class: FaultClass,
+    ) -> Result<()> {
+        self.compare_with_sibling_inner(bytes, None, site, class)
+    }
+
+    fn compare_with_sibling_inner(
+        &self,
+        bytes: &[u8],
+        shared: Option<&Buf>,
         site: &str,
         class: FaultClass,
     ) -> Result<()> {
@@ -247,27 +277,31 @@ impl ReplicaCtx {
                 if self.is_lead() {
                     let peer = self.pop_from_sibling_site(site)?;
                     let t0 = Instant::now();
-                    let eq = buffers_equal(bytes, &peer);
+                    let eq = buffers_equal(bytes, peer.as_bytes());
                     self.metrics
                         .add_duration(&self.metrics.compare_ns, t0.elapsed());
-                    self.push_to_sibling(vec![eq as u8]);
+                    self.push_to_sibling(vec![eq as u8].into());
                     eq
                 } else {
-                    self.push_to_sibling(bytes.to_vec());
+                    let token = match shared {
+                        Some(buf) => TokenBuf::Shared(buf.share()),
+                        None => TokenBuf::Owned(bytes.to_vec()),
+                    };
+                    self.push_to_sibling(token);
                     let verdict = self.pop_from_sibling_site(site)?;
-                    verdict[0] == 1
+                    verdict.as_bytes()[0] == 1
                 }
             }
             ValidationMode::Sha256 => {
                 let token = {
                     let t0 = Instant::now();
-                    let tok = comparison_token(ValidationMode::Sha256, bytes);
+                    let tok = Token::new(ValidationMode::Sha256, bytes);
                     self.metrics
                         .add_duration(&self.metrics.compare_ns, t0.elapsed());
                     tok
                 };
-                let peer = self.pair_exchange(token.clone(), site)?;
-                buffers_equal(&token, &peer)
+                let peer = self.pair_exchange(token.to_wire().into(), site)?;
+                token.matches(peer.as_bytes())
             }
         };
         self.metrics.add(&self.metrics.compare_bytes, bytes.len() as u64);
@@ -282,7 +316,7 @@ impl ReplicaCtx {
 
     /// `pop_from_sibling` with the TOE classification at `site` (alias kept
     /// for the compare protocol's readability).
-    fn pop_from_sibling_site(&self, site: &str) -> Result<Vec<u8>> {
+    fn pop_from_sibling_site(&self, site: &str) -> Result<TokenBuf> {
         self.pop_from_sibling(site)
     }
 
@@ -291,20 +325,20 @@ impl ReplicaCtx {
     /// Validated send (§3.1): compare the outgoing contents between
     /// replicas; on agreement the leading replica sends one copy.
     ///
-    /// Only the lead clones the payload (it must hand ownership to the
-    /// network); the replica compares straight out of its store (perf
-    /// change P6).
+    /// Zero payload copies end to end: the lead's `clone` is a reference
+    /// bump into the shared buffer it hands the network, the comparison
+    /// borrows both stores in place, and the replica's token is a shared
+    /// view (perf changes P6 + P7).
     pub fn sedar_send(&mut self, dst: usize, tag: u32, var: &str, site: &str) -> Result<()> {
         if self.is_lead() {
             let v = self.store.get(var)?.clone();
-            self.compare_with_sibling(v.buf.bytes(), site, FaultClass::Tdc)?;
+            self.compare_with_sibling(&v.buf, site, FaultClass::Tdc)?;
             self.ep.send(dst, tag, v)?;
         } else {
             let v = self.store.get(var)?;
-            let bytes = v.buf.bytes();
-            // SAFETY-free reborrow dance: compare takes &self, store borrow
-            // is immutable — both coexist.
-            self.compare_with_sibling(bytes, site, FaultClass::Tdc)?;
+            // Reborrow dance: compare takes &self, store borrow is
+            // immutable — both coexist.
+            self.compare_with_sibling(&v.buf, site, FaultClass::Tdc)?;
         }
         Ok(())
     }
@@ -318,7 +352,7 @@ impl ReplicaCtx {
         v: &Var,
         site: &str,
     ) -> Result<()> {
-        self.compare_with_sibling(v.buf.bytes(), site, FaultClass::Tdc)?;
+        self.compare_with_sibling(&v.buf, site, FaultClass::Tdc)?;
         if self.is_lead() {
             self.ep.send(dst, tag, v.clone())?;
         }
@@ -338,13 +372,13 @@ impl ReplicaCtx {
             };
             // Hand the copy to the sibling, then wait for its check-in token
             // (the receiver-side synchronization of Figure 1).
-            self.push_to_sibling(encode_var(&v));
+            self.push_to_sibling(encode_var(&v).into());
             self.pop_from_sibling(site)?;
             v
         } else {
-            self.push_to_sibling(vec![1]); // check-in token
+            self.push_to_sibling(vec![1].into()); // check-in token
             let bytes = self.pop_from_sibling(site)?;
-            decode_var(&bytes)?
+            decode_var(bytes.as_bytes())?
         };
         self.store.insert(into, v.clone());
         Ok(v)
@@ -373,19 +407,19 @@ impl ReplicaCtx {
                 // hence it is validated").
                 if self.rank == root {
                     let v = self.store.get(var)?.clone();
-                    self.compare_with_sibling(v.buf.bytes(), site, FaultClass::Tdc)?;
+                    self.compare_with_sibling(&v.buf, site, FaultClass::Tdc)?;
                     if self.is_lead() {
                         self.ep.bcast(root, Some(v))?;
                     }
                 } else {
                     let v = if self.is_lead() {
                         let v = self.ep.bcast(root, None)?;
-                        self.push_to_sibling(encode_var(&v));
+                        self.push_to_sibling(encode_var(&v).into());
                         self.pop_from_sibling(site)?;
                         v
                     } else {
-                        self.push_to_sibling(vec![1]);
-                        decode_var(&self.pop_from_sibling(site)?)?
+                        self.push_to_sibling(vec![1].into());
+                        decode_var(self.pop_from_sibling(site)?.as_bytes())?
                     };
                     self.store.insert(var, v);
                 }
@@ -432,7 +466,7 @@ impl ReplicaCtx {
                     for c in &chunks {
                         all.extend_from_slice(c.buf.bytes());
                     }
-                    self.compare_with_sibling(&all, site, FaultClass::Tdc)?;
+                    self.compare_bytes_with_sibling(&all, site, FaultClass::Tdc)?;
                     let own = chunks[root].clone();
                     if self.is_lead() {
                         self.ep.scatter(root, Some(chunks))?;
@@ -441,12 +475,12 @@ impl ReplicaCtx {
                 } else {
                     let v = if self.is_lead() {
                         let v = self.ep.scatter(root, None)?;
-                        self.push_to_sibling(encode_var(&v));
+                        self.push_to_sibling(encode_var(&v).into());
                         self.pop_from_sibling(site)?;
                         v
                     } else {
-                        self.push_to_sibling(vec![1]);
-                        decode_var(&self.pop_from_sibling(site)?)?
+                        self.push_to_sibling(vec![1].into());
+                        decode_var(self.pop_from_sibling(site)?.as_bytes())?
                     };
                     self.store.insert(into, v);
                 }
@@ -483,7 +517,7 @@ impl ReplicaCtx {
             CollectiveImpl::Native => {
                 // Every rank validates its contribution — root's included.
                 let v = self.store.get(var)?.clone();
-                self.compare_with_sibling(v.buf.bytes(), site, FaultClass::Tdc)?;
+                self.compare_with_sibling(&v.buf, site, FaultClass::Tdc)?;
                 if self.rank == root {
                     if self.is_lead() {
                         let parts = self.ep.gather(root, v)?.unwrap();
@@ -495,12 +529,13 @@ impl ReplicaCtx {
                             blob.extend_from_slice(&(e.len() as u64).to_le_bytes());
                             blob.extend_from_slice(&e);
                         }
-                        self.push_to_sibling(blob);
+                        self.push_to_sibling(blob.into());
                         self.pop_from_sibling(site)?;
                         Ok(Some(parts))
                     } else {
-                        self.push_to_sibling(vec![1]);
-                        let blob = self.pop_from_sibling(site)?;
+                        self.push_to_sibling(vec![1].into());
+                        let tok = self.pop_from_sibling(site)?;
+                        let blob = tok.as_bytes();
                         let mut parts = Vec::new();
                         let n =
                             u32::from_le_bytes(blob[0..4].try_into().unwrap()) as usize;
@@ -528,13 +563,13 @@ impl ReplicaCtx {
     /// A plain barrier across ranks (both replicas rendezvous, leaders run
     /// the network barrier).
     pub fn barrier(&mut self, site: &str) -> Result<()> {
-        self.pair_exchange(vec![1], site)?;
+        self.pair_exchange(vec![1].into(), site)?;
         if self.is_lead() {
             self.ep.barrier(0)?;
         }
         // Second rendezvous so the sibling does not run ahead of the global
         // barrier point.
-        self.pair_exchange(vec![2], site)?;
+        self.pair_exchange(vec![2].into(), site)?;
         Ok(())
     }
 
@@ -545,7 +580,7 @@ impl ReplicaCtx {
     /// that owns the result (the Master).
     pub fn validate_result(&mut self, var: &str, site: &str) -> Result<()> {
         let v = self.store.get(var)?.clone();
-        self.compare_with_sibling(v.buf.bytes(), site, FaultClass::Fsc)?;
+        self.compare_with_sibling(&v.buf, site, FaultClass::Fsc)?;
         self.trace(format!("{site}: final result replicas agree"));
         Ok(())
     }
@@ -578,7 +613,7 @@ impl ReplicaCtx {
             let peer_bytes = self.pop_from_sibling(site)?;
             let my_bytes = self.store.serialize();
             let payload =
-                RankSnapshot::serialize_parts(resume_cursor, &my_bytes, &peer_bytes);
+                RankSnapshot::serialize_parts(resume_cursor, &my_bytes, peer_bytes.as_bytes());
             let payload_len = payload.len();
             // Coordinated: all leaders enter, write, then the master commits.
             self.ep.barrier(0)?;
@@ -594,12 +629,12 @@ impl ReplicaCtx {
                 .add(&self.metrics.sys_ckpt_bytes, payload_len as u64);
             self.metrics.add(&self.metrics.sys_ckpts, 1);
             // Release the sibling.
-            self.push_to_sibling(vec![1]);
+            self.push_to_sibling(vec![1].into());
             if self.rank == 0 {
                 self.trace(format!("{site}: system checkpoint #{ck_no} stored"));
             }
         } else {
-            self.push_to_sibling(self.store.serialize());
+            self.push_to_sibling(self.store.serialize().into());
             // Wait for the leader to finish the coordinated store. Uses the
             // (long) checkpoint lapse, not the TOE lapse: disk writes are
             // legitimately slow.
@@ -641,33 +676,48 @@ impl ReplicaCtx {
             self.cursor + 1,
             &self.store.serialize_filtered(Some(&sig)),
         );
-        let digest = sha256(&payload);
+        // Single-pass candidate encode (perf change P8): the lead's one scan
+        // over the payload yields the digest to cross-validate AND the
+        // ready-to-store frame (body + CRC fused); the sibling — which never
+        // writes — computes only the digest, exactly as before. Gated on a
+        // cheap codec: the digest must reach the sibling's rendezvous within
+        // `toe_timeout`, so only `Codec::Raw` (a memcpy-cost pass, symmetric
+        // with the sibling's sha256) may encode up front. Compressing codecs
+        // keep the historical order — encode only *after* the verdict, under
+        // the long `ckpt_timeout`, and never for an invalid candidate.
+        let fuse = self.is_lead() && chain.codec() == Codec::Raw;
+        let (frame, digest) = if fuse {
+            let (frame, digest) = chain.encode_valid(&payload);
+            (Some(frame), digest)
+        } else {
+            (None, sha256(&payload))
+        };
         self.detector.note_comparison(payload.len());
 
         // Hash cross-validation between replicas (Algorithm 2 lines 4–10).
-        let peer_digest = self.pair_exchange(digest.to_vec(), site)?;
-        let local_valid = buffers_equal(&digest, &peer_digest);
+        // The 32-byte digest crosses the channel exactly once.
+        let peer_digest = self.pair_exchange(digest.to_vec().into(), site)?;
+        let local_valid = buffers_equal(&digest, peer_digest.as_bytes());
 
         // Global verdict: every rank must have a valid candidate, because
         // the checkpoint set is only usable if coordinated-consistent.
         let global_valid = if self.is_lead() {
-            let verdict = Var {
-                shape: vec![],
-                buf: Buf::F32(vec![if local_valid { 1.0 } else { 0.0 }]),
-            };
+            let verdict = Var::f32(&[], vec![if local_valid { 1.0 } else { 0.0 }]);
             let g = self.ep.allreduce_sum_f32(0, verdict)?;
             let ok = g.buf.as_f32()?[0] as usize == self.nranks;
-            self.push_to_sibling(vec![ok as u8]);
+            self.push_to_sibling(vec![ok as u8].into());
             ok
         } else {
-            self.pop_from_sibling(site)?[0] == 1
+            self.pop_from_sibling(site)?.as_bytes()[0] == 1
         };
 
         if global_valid {
             if self.is_lead() {
-                chain
-                    .write_valid_payload(ck_no, self.rank, &payload)
-                    .map_err(|e| SedarError::Checkpoint(format!("uck{ck_no}: {e}")))?;
+                match &frame {
+                    Some(f) => chain.write_valid_frame(ck_no, self.rank, f),
+                    None => chain.write_valid_payload(ck_no, self.rank, &payload),
+                }
+                .map_err(|e| SedarError::Checkpoint(format!("uck{ck_no}: {e}")))?;
                 self.ep.barrier(0)?;
                 if self.rank == 0 {
                     chain.commit_valid(ck_no)?;
@@ -676,7 +726,7 @@ impl ReplicaCtx {
                     ));
                 }
                 self.ep.barrier(0)?;
-                self.push_to_sibling(vec![1]);
+                self.push_to_sibling(vec![1].into());
                 self.metrics
                     .add(&self.metrics.user_ckpt_bytes, payload.len() as u64);
                 self.metrics.add(&self.metrics.user_ckpts, 1);

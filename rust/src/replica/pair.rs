@@ -14,11 +14,18 @@
 //! Error (§3.1: "if an appreciable delay is noticed between the two
 //! replicas, it is considered that a silent error has caused the separation
 //! of their flows").
+//!
+//! Tokens are [`TokenBuf`]s: small control blobs stay owned vectors, while
+//! full-payload comparison tokens cross as zero-copy
+//! [`crate::util::bytes::SharedBuf`] views — the channel moves a reference,
+//! never the message bytes.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
+
+pub use crate::util::bytes::TokenBuf;
 
 /// Why a rendezvous pop failed.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -31,7 +38,7 @@ pub enum PairError {
 
 #[derive(Default)]
 struct Cell {
-    q: Mutex<VecDeque<Vec<u8>>>,
+    q: Mutex<VecDeque<TokenBuf>>,
     cv: Condvar,
     /// Queue depth mirror — lets the consumer spin without touching the
     /// mutex (no contention with the producer).
@@ -83,7 +90,7 @@ impl PairSync {
     }
 
     /// Deposit a token for the *other* replica. Never blocks.
-    pub fn push_to_peer(&self, me: usize, token: Vec<u8>) {
+    pub fn push_to_peer(&self, me: usize, token: TokenBuf) {
         debug_assert!(me < 2);
         let cell = &self.cells[1 - me];
         {
@@ -100,7 +107,7 @@ impl PairSync {
     /// microseconds of each other, so we spin briefly before parking on the
     /// condvar — saves the futex round trip on the detection hot path
     /// (EXPERIMENTS.md §Perf, change P2).
-    pub fn pop_mine(&self, me: usize, lapse: Duration) -> Result<Vec<u8>, PairError> {
+    pub fn pop_mine(&self, me: usize, lapse: Duration) -> Result<TokenBuf, PairError> {
         debug_assert!(me < 2);
         let cell = &self.cells[me];
         // Spin phase: watch the lock-free depth mirror; only touch the
@@ -142,9 +149,9 @@ impl PairSync {
     pub fn exchange(
         &self,
         me: usize,
-        token: Vec<u8>,
+        token: TokenBuf,
         lapse: Duration,
-    ) -> Result<Vec<u8>, PairError> {
+    ) -> Result<TokenBuf, PairError> {
         self.push_to_peer(me, token);
         self.pop_mine(me, lapse)
     }
@@ -164,15 +171,15 @@ mod tests {
         let (p, _) = pair();
         let p2 = Arc::clone(&p);
         let h = std::thread::spawn(move || {
-            p2.exchange(1, b"from-1".to_vec(), Duration::from_secs(1))
+            p2.exchange(1, b"from-1".to_vec().into(), Duration::from_secs(1))
                 .unwrap()
         });
         let got0 = p
-            .exchange(0, b"from-0".to_vec(), Duration::from_secs(1))
+            .exchange(0, b"from-0".to_vec().into(), Duration::from_secs(1))
             .unwrap();
         let got1 = h.join().unwrap();
-        assert_eq!(got0, b"from-1");
-        assert_eq!(got1, b"from-0");
+        assert_eq!(got0.as_bytes(), b"from-1");
+        assert_eq!(got1.as_bytes(), b"from-0");
     }
 
     #[test]
@@ -182,14 +189,16 @@ mod tests {
         let h = std::thread::spawn(move || {
             for i in 0..20u8 {
                 let got = p2
-                    .exchange(1, vec![100 + i], Duration::from_secs(1))
+                    .exchange(1, vec![100 + i].into(), Duration::from_secs(1))
                     .unwrap();
-                assert_eq!(got, vec![i]);
+                assert_eq!(got.as_bytes(), &[i]);
             }
         });
         for i in 0..20u8 {
-            let got = p.exchange(0, vec![i], Duration::from_secs(1)).unwrap();
-            assert_eq!(got, vec![100 + i]);
+            let got = p
+                .exchange(0, vec![i].into(), Duration::from_secs(1))
+                .unwrap();
+            assert_eq!(got.as_bytes(), &[100 + i]);
         }
         h.join().unwrap();
     }
@@ -219,8 +228,24 @@ mod tests {
     #[test]
     fn asymmetric_push_pop() {
         let (p, _) = pair();
-        p.push_to_peer(0, b"copy".to_vec()); // replica 0 → replica 1
+        p.push_to_peer(0, b"copy".to_vec().into()); // replica 0 → replica 1
         let got = p.pop_mine(1, Duration::from_millis(100)).unwrap();
-        assert_eq!(got, b"copy");
+        assert_eq!(got.as_bytes(), b"copy");
+    }
+
+    #[test]
+    fn shared_token_crosses_without_copying() {
+        use crate::util::bytes::SharedBuf;
+        let (p, _) = pair();
+        let payload = SharedBuf::from_bytes(&[7u8; 1024]);
+        p.push_to_peer(0, payload.clone().into());
+        let got = p.pop_mine(1, Duration::from_millis(100)).unwrap();
+        match &got {
+            TokenBuf::Shared(s) => {
+                assert!(SharedBuf::ptr_eq(s, &payload), "token must share the allocation")
+            }
+            TokenBuf::Owned(_) => panic!("shared token arrived as an owned copy"),
+        }
+        assert_eq!(got.as_bytes(), &[7u8; 1024][..]);
     }
 }

@@ -1,14 +1,21 @@
 //! Minimal benchmarking kit (in-repo criterion substitute — the offline
 //! crate set has no criterion). Used by the `harness = false` targets in
-//! `rust/benches/`.
+//! `rust/benches/` and by `sedar bench`.
 //!
 //! Method: `warmup` untimed iterations, then `iters` timed ones; reports
 //! min / mean / p50 / p95. Deliberately simple — the experiment benches
 //! measure *seconds-scale end-to-end runs* where statistical machinery
 //! adds nothing, and the micro benches report throughput where min is the
 //! meaningful roofline figure.
+//!
+//! [`JsonReport`] renders results as the machine-readable `sedar-bench/1`
+//! document (the `BENCH_*.json` trajectory committed per perf PR, so later
+//! PRs can diff hot-path numbers instead of guessing); schema documented in
+//! the README's "Performance" section.
 
 use std::time::{Duration, Instant};
+
+use crate::report::json_escape;
 
 /// Timing summary of one benchmark case.
 #[derive(Debug, Clone)]
@@ -41,6 +48,120 @@ impl Stats {
     pub fn gib_per_s(&self, bytes: usize) -> f64 {
         bytes as f64 / self.min.as_secs_f64() / (1024.0 * 1024.0 * 1024.0)
     }
+
+    /// One `sedar-bench/1` entry object. `group` buckets related cases;
+    /// `bytes` (payload bytes per iteration) adds the derived `ns_per_mib`
+    /// and `gib_per_s` throughput fields.
+    pub fn json_obj(&self, group: &str, bytes: Option<usize>) -> String {
+        let mut s = format!(
+            "{{\"group\":\"{}\",\"case\":\"{}\",\"iters\":{},\
+             \"min_ns\":{},\"mean_ns\":{},\"p50_ns\":{},\"p95_ns\":{}",
+            json_escape(group),
+            json_escape(&self.name),
+            self.iters,
+            self.min.as_nanos(),
+            self.mean.as_nanos(),
+            self.p50.as_nanos(),
+            self.p95.as_nanos(),
+        );
+        if let Some(b) = bytes {
+            s.push_str(&format!(",\"bytes\":{b}"));
+            // Derived throughput only when both operands are non-zero: a
+            // sub-clock-resolution min (0 ns) would otherwise format as
+            // `inf`, which is not JSON.
+            if b > 0 && self.min.as_nanos() > 0 {
+                s.push_str(&format!(
+                    ",\"ns_per_mib\":{:.1},\"gib_per_s\":{:.3}",
+                    self.min.as_nanos() as f64 * (1024.0 * 1024.0) / b as f64,
+                    self.gib_per_s(b)
+                ));
+            }
+        }
+        s.push('}');
+        s
+    }
+}
+
+/// Accumulates bench entries into one `sedar-bench/1` JSON document.
+#[derive(Debug, Default)]
+pub struct JsonReport {
+    meta: Vec<(String, String)>,
+    entries: Vec<String>,
+}
+
+impl JsonReport {
+    pub fn new() -> JsonReport {
+        JsonReport::default()
+    }
+
+    /// Attach a top-level metadata field. `value_json` must already be
+    /// valid JSON — quote strings with [`crate::report::json_escape`].
+    pub fn meta(&mut self, key: &str, value_json: impl Into<String>) {
+        self.meta.push((key.to_string(), value_json.into()));
+    }
+
+    /// Add one benchmark case.
+    pub fn push_stats(&mut self, group: &str, s: &Stats, bytes: Option<usize>) {
+        self.entries.push(s.json_obj(group, bytes));
+    }
+
+    /// Add a pre-rendered entry object (e.g. the campaign wall-time record,
+    /// whose fields do not fit the Stats shape).
+    pub fn push_raw(&mut self, json_obj: impl Into<String>) {
+        self.entries.push(json_obj.into());
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Render the complete document.
+    pub fn render(&self) -> String {
+        let mut s = String::from("{\n  \"schema\": \"sedar-bench/1\"");
+        for (k, v) in &self.meta {
+            s.push_str(&format!(",\n  \"{}\": {}", json_escape(k), v));
+        }
+        s.push_str(",\n  \"entries\": [\n");
+        for (i, e) in self.entries.iter().enumerate() {
+            s.push_str("    ");
+            s.push_str(e);
+            if i + 1 < self.entries.len() {
+                s.push(',');
+            }
+            s.push('\n');
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+}
+
+/// Print one section of `(Stats, payload bytes)` rows as an aligned
+/// markdown table on stdout — the shared presenter behind `sedar bench`
+/// and the `harness = false` bench targets.
+pub fn print_table(title: &str, rows: &[(Stats, Option<usize>)]) {
+    println!("\n=== {title} ===\n");
+    let mut t = crate::report::Table::new(&[
+        "case",
+        "iters",
+        "min",
+        "mean",
+        "p50",
+        "p95",
+        "throughput",
+    ]);
+    for (s, bytes) in rows {
+        let mut row = s.row();
+        row.push(match bytes {
+            // Same sub-clock-resolution guard as Stats::json_obj: a 0 ns
+            // min would print "inf GiB/s".
+            Some(b) if *b > 0 && s.min.as_nanos() > 0 => {
+                format!("{:.2} GiB/s", s.gib_per_s(*b))
+            }
+            _ => "-".to_string(),
+        });
+        t.row(&row);
+    }
+    print!("{}", t.markdown());
 }
 
 /// Time `f` with warmup; returns stats.
@@ -93,6 +214,43 @@ mod tests {
         assert!(s.min <= s.p50);
         assert!(s.p50 <= s.p95);
         assert_eq!(s.iters, 20);
+    }
+
+    #[test]
+    fn json_report_shape() {
+        let s = bench("token full 1 MiB", 0, 5, || {
+            black_box((0..64).sum::<u64>());
+        });
+        let mut jr = JsonReport::new();
+        jr.meta("pr", "3");
+        jr.meta("quick", "true");
+        jr.push_stats("msg_validation", &s, Some(1 << 20));
+        jr.push_raw("{\"group\":\"campaign\",\"case\":\"e2e\",\"tasks\":576,\"wall_ms\":1}");
+        let doc = jr.render();
+        assert!(doc.starts_with("{\n  \"schema\": \"sedar-bench/1\""));
+        assert!(doc.ends_with("  ]\n}\n"));
+        assert!(doc.contains("\"pr\": 3"));
+        assert!(doc.contains("\"group\":\"msg_validation\""));
+        assert!(doc.contains("\"bytes\":1048576"));
+        assert!(doc.contains("\"ns_per_mib\":"));
+        assert!(doc.contains("\"tasks\":576"));
+        // Balanced braces/brackets — the cheap well-formedness proxy the
+        // offline dependency set allows (no JSON parser crate).
+        let opens = doc.matches(['{', '[']).count();
+        let closes = doc.matches(['}', ']']).count();
+        assert_eq!(opens, closes);
+        // Exactly one separating comma between the two entries.
+        assert_eq!(doc.matches("},\n    {").count(), 1);
+    }
+
+    #[test]
+    fn json_obj_without_bytes_has_no_throughput() {
+        let s = bench("t", 0, 3, || {
+            black_box(1 + 1);
+        });
+        let o = s.json_obj("g", None);
+        assert!(!o.contains("gib_per_s"));
+        assert!(o.contains("\"min_ns\":"));
     }
 
     #[test]

@@ -38,7 +38,7 @@ use std::sync::Mutex;
 
 use crate::error::{Result, SedarError};
 #[cfg(feature = "pjrt")]
-use crate::state::Buf;
+use crate::state::{Buf, DType};
 use crate::state::Var;
 
 /// A compute request: run artifact `name` on `inputs`.
@@ -234,11 +234,11 @@ fn ensure<'a>(
 
 #[cfg(feature = "pjrt")]
 fn to_literal(v: &Var) -> Result<xla::Literal> {
-    let lit = match &v.buf {
-        Buf::F32(data) => xla::Literal::vec1(data.as_slice()),
-        Buf::F64(data) => xla::Literal::vec1(data.as_slice()),
-        Buf::I64(data) => xla::Literal::vec1(data.as_slice()),
-        Buf::U8(_) => {
+    let lit = match v.buf.dtype() {
+        DType::F32 => xla::Literal::vec1(v.buf.as_f32()?),
+        DType::F64 => xla::Literal::vec1(v.buf.as_f64()?),
+        DType::I64 => xla::Literal::vec1(v.buf.as_i64()?),
+        DType::U8 => {
             return Err(SedarError::Runtime(
                 "u8 buffers are not executable inputs".into(),
             ))
@@ -262,16 +262,16 @@ fn from_literal(lit: &xla::Literal) -> Result<Var> {
         .ty()
         .map_err(|e| SedarError::Runtime(format!("output type: {e}")))?;
     let buf = match ty {
-        xla::ElementType::F32 => Buf::F32(
-            lit.to_vec::<f32>()
+        xla::ElementType::F32 => Buf::f32(
+            &lit.to_vec::<f32>()
                 .map_err(|e| SedarError::Runtime(format!("read f32: {e}")))?,
         ),
-        xla::ElementType::F64 => Buf::F64(
-            lit.to_vec::<f64>()
+        xla::ElementType::F64 => Buf::f64(
+            &lit.to_vec::<f64>()
                 .map_err(|e| SedarError::Runtime(format!("read f64: {e}")))?,
         ),
-        xla::ElementType::S64 => Buf::I64(
-            lit.to_vec::<i64>()
+        xla::ElementType::S64 => Buf::i64(
+            &lit.to_vec::<i64>()
                 .map_err(|e| SedarError::Runtime(format!("read i64: {e}")))?,
         ),
         other => {
@@ -327,7 +327,7 @@ mod tests {
     fn u8_inputs_rejected() {
         let v = Var {
             shape: vec![1],
-            buf: Buf::U8(vec![1]),
+            buf: Buf::u8(&[1]),
         };
         assert!(to_literal(&v).is_err());
     }

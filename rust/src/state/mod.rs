@@ -14,6 +14,7 @@
 use std::collections::BTreeMap;
 
 use crate::error::{Result, SedarError};
+use crate::util::bytes::SharedBuf;
 
 /// Element type of a variable.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -58,122 +59,145 @@ impl DType {
     }
 }
 
-/// Typed storage. Buffers are kept natively typed (not raw bytes) so the
-/// compute paths get aligned slices for free; byte views for hashing,
-/// comparison and injection are produced on demand.
-#[derive(Debug, Clone, PartialEq)]
-pub enum Buf {
-    F32(Vec<f32>),
-    F64(Vec<f64>),
-    I64(Vec<i64>),
-    U8(Vec<u8>),
+/// Typed storage over a shared, word-aligned byte buffer
+/// ([`crate::util::bytes::SharedBuf`]).
+///
+/// Cloning a `Buf` is a reference-count bump — a broadcast payload, a
+/// mailbox envelope and the sender's store variable are all views of one
+/// allocation. Mutation (`bytes_mut`, `as_*_mut`) is copy-on-write, so
+/// holders of a shared buffer never observe each other's writes. The
+/// storage is 8-byte aligned by construction, so the typed views are plain
+/// pointer casts — byte views for hashing, comparison and injection are
+/// the same bytes, produced for free.
+#[derive(Clone, PartialEq)]
+pub struct Buf {
+    dtype: DType,
+    data: SharedBuf,
 }
 
 impl Buf {
-    pub fn dtype(&self) -> DType {
-        match self {
-            Buf::F32(_) => DType::F32,
-            Buf::F64(_) => DType::F64,
-            Buf::I64(_) => DType::I64,
-            Buf::U8(_) => DType::U8,
+    pub fn f32(v: &[f32]) -> Buf {
+        Buf {
+            dtype: DType::F32,
+            data: SharedBuf::from_bytes(raw_bytes(v)),
         }
     }
 
-    pub fn len(&self) -> usize {
-        match self {
-            Buf::F32(v) => v.len(),
-            Buf::F64(v) => v.len(),
-            Buf::I64(v) => v.len(),
-            Buf::U8(v) => v.len(),
+    pub fn f64(v: &[f64]) -> Buf {
+        Buf {
+            dtype: DType::F64,
+            data: SharedBuf::from_bytes(raw_bytes(v)),
         }
+    }
+
+    pub fn i64(v: &[i64]) -> Buf {
+        Buf {
+            dtype: DType::I64,
+            data: SharedBuf::from_bytes(raw_bytes(v)),
+        }
+    }
+
+    pub fn u8(v: &[u8]) -> Buf {
+        Buf {
+            dtype: DType::U8,
+            data: SharedBuf::from_bytes(v),
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        self.dtype
+    }
+
+    /// Element count.
+    pub fn len(&self) -> usize {
+        self.data.len() / self.dtype.size_of()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.len() == 0
+        self.data.is_empty()
     }
 
     pub fn byte_len(&self) -> usize {
-        self.len() * self.dtype().size_of()
+        self.data.len()
     }
 
-    /// Immutable little-endian byte view of the raw buffer contents.
-    ///
-    /// Safety: widening the alignment requirement downwards (f32→u8) is
-    /// always valid; x86-64/aarch64 are little-endian so the view *is* the
-    /// serialized form.
+    /// Immutable little-endian byte view of the raw buffer contents
+    /// (x86-64/aarch64 are little-endian, so the view *is* the serialized
+    /// form).
     pub fn bytes(&self) -> &[u8] {
-        unsafe {
-            match self {
-                Buf::F32(v) => {
-                    std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
-                }
-                Buf::F64(v) => {
-                    std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 8)
-                }
-                Buf::I64(v) => {
-                    std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 8)
-                }
-                Buf::U8(v) => v.as_slice(),
-            }
-        }
+        self.data.as_bytes()
     }
 
-    /// Mutable byte view (the fault injector's entry point).
+    /// Mutable byte view (the fault injector's entry point). Copy-on-write:
+    /// a shared buffer is privatized before the first write.
     pub fn bytes_mut(&mut self) -> &mut [u8] {
-        unsafe {
-            match self {
-                Buf::F32(v) => {
-                    std::slice::from_raw_parts_mut(v.as_mut_ptr() as *mut u8, v.len() * 4)
-                }
-                Buf::F64(v) => {
-                    std::slice::from_raw_parts_mut(v.as_mut_ptr() as *mut u8, v.len() * 8)
-                }
-                Buf::I64(v) => {
-                    std::slice::from_raw_parts_mut(v.as_mut_ptr() as *mut u8, v.len() * 8)
-                }
-                Buf::U8(v) => v.as_mut_slice(),
-            }
+        self.data.make_mut()
+    }
+
+    /// Zero-copy handle to the underlying shared storage (for crossing a
+    /// channel without touching the payload bytes).
+    pub fn share(&self) -> SharedBuf {
+        self.data.clone()
+    }
+
+    /// Do two buffers view one allocation? (What the zero-copy broadcast
+    /// and send tests assert on.)
+    pub fn shares_allocation(&self, other: &Buf) -> bool {
+        SharedBuf::ptr_eq(&self.data, &other.data)
+    }
+
+    fn expect(&self, want: DType) -> Result<()> {
+        if self.dtype == want {
+            Ok(())
+        } else {
+            Err(SedarError::Vmpi(format!(
+                "expected {want:?} buffer, found {:?}",
+                self.dtype
+            )))
         }
     }
 
     pub fn as_f32(&self) -> Result<&[f32]> {
-        match self {
-            Buf::F32(v) => Ok(v),
-            other => Err(SedarError::Vmpi(format!(
-                "expected f32 buffer, found {:?}",
-                other.dtype()
-            ))),
-        }
+        self.expect(DType::F32)?;
+        let b = self.data.as_bytes();
+        // Safety: storage is 8-byte aligned; length is a multiple of 4 by
+        // construction (`from_bytes` validates, typed constructors trivially).
+        Ok(unsafe { std::slice::from_raw_parts(b.as_ptr().cast::<f32>(), b.len() / 4) })
     }
 
-    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
-        match self {
-            Buf::F32(v) => Ok(v),
-            other => Err(SedarError::Vmpi(format!(
-                "expected f32 buffer, found {:?}",
-                other.dtype()
-            ))),
-        }
+    pub fn as_f64(&self) -> Result<&[f64]> {
+        self.expect(DType::F64)?;
+        let b = self.data.as_bytes();
+        // Safety: as for `as_f32`, with 8-byte elements.
+        Ok(unsafe { std::slice::from_raw_parts(b.as_ptr().cast::<f64>(), b.len() / 8) })
     }
 
     pub fn as_i64(&self) -> Result<&[i64]> {
-        match self {
-            Buf::I64(v) => Ok(v),
-            other => Err(SedarError::Vmpi(format!(
-                "expected i64 buffer, found {:?}",
-                other.dtype()
-            ))),
-        }
+        self.expect(DType::I64)?;
+        let b = self.data.as_bytes();
+        // Safety: as for `as_f32`, with 8-byte elements.
+        Ok(unsafe { std::slice::from_raw_parts(b.as_ptr().cast::<i64>(), b.len() / 8) })
+    }
+
+    pub fn as_u8(&self) -> Result<&[u8]> {
+        self.expect(DType::U8)?;
+        Ok(self.data.as_bytes())
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        self.expect(DType::F32)?;
+        let b = self.data.make_mut();
+        let n = b.len() / 4;
+        // Safety: as for `as_f32`, plus exclusivity via `make_mut`.
+        Ok(unsafe { std::slice::from_raw_parts_mut(b.as_mut_ptr().cast::<f32>(), n) })
     }
 
     pub fn as_i64_mut(&mut self) -> Result<&mut [i64]> {
-        match self {
-            Buf::I64(v) => Ok(v),
-            other => Err(SedarError::Vmpi(format!(
-                "expected i64 buffer, found {:?}",
-                other.dtype()
-            ))),
-        }
+        self.expect(DType::I64)?;
+        let b = self.data.make_mut();
+        let n = b.len() / 8;
+        // Safety: as for `as_i64`, plus exclusivity via `make_mut`.
+        Ok(unsafe { std::slice::from_raw_parts_mut(b.as_mut_ptr().cast::<i64>(), n) })
     }
 
     /// Reconstruct a typed buffer from its byte view.
@@ -185,44 +209,31 @@ impl Buf {
                 bytes.len()
             )));
         }
-        let n = bytes.len() / esz;
-        Ok(match dtype {
-            DType::F32 => {
-                let mut v = vec![0f32; n];
-                unsafe {
-                    std::ptr::copy_nonoverlapping(
-                        bytes.as_ptr(),
-                        v.as_mut_ptr() as *mut u8,
-                        bytes.len(),
-                    )
-                }
-                Buf::F32(v)
-            }
-            DType::F64 => {
-                let mut v = vec![0f64; n];
-                unsafe {
-                    std::ptr::copy_nonoverlapping(
-                        bytes.as_ptr(),
-                        v.as_mut_ptr() as *mut u8,
-                        bytes.len(),
-                    )
-                }
-                Buf::F64(v)
-            }
-            DType::I64 => {
-                let mut v = vec![0i64; n];
-                unsafe {
-                    std::ptr::copy_nonoverlapping(
-                        bytes.as_ptr(),
-                        v.as_mut_ptr() as *mut u8,
-                        bytes.len(),
-                    )
-                }
-                Buf::I64(v)
-            }
-            DType::U8 => Buf::U8(bytes.to_vec()),
+        Ok(Buf {
+            dtype,
+            data: SharedBuf::from_bytes(bytes),
         })
     }
+}
+
+impl std::fmt::Debug for Buf {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "Buf<{:?}>[{} el, {} B, rc {}]",
+            self.dtype,
+            self.len(),
+            self.byte_len(),
+            self.data.refcount()
+        )
+    }
+}
+
+/// Little-endian byte view of a typed slice (alignment only ever narrows).
+fn raw_bytes<T>(v: &[T]) -> &[u8] {
+    // Safety: any initialized T is a valid sequence of bytes; u8 has no
+    // alignment requirement.
+    unsafe { std::slice::from_raw_parts(v.as_ptr().cast::<u8>(), std::mem::size_of_val(v)) }
 }
 
 /// A named, shaped buffer.
@@ -237,14 +248,14 @@ impl Var {
         assert_eq!(shape.iter().product::<usize>(), data.len());
         Var {
             shape: shape.to_vec(),
-            buf: Buf::F32(data),
+            buf: Buf::f32(&data),
         }
     }
 
     pub fn i64_scalar(v: i64) -> Self {
         Var {
             shape: vec![],
-            buf: Buf::I64(vec![v]),
+            buf: Buf::i64(&[v]),
         }
     }
 
@@ -437,7 +448,7 @@ mod tests {
             "raw",
             Var {
                 shape: vec![4],
-                buf: Buf::U8(vec![9, 8, 7, 6]),
+                buf: Buf::u8(&[9, 8, 7, 6]),
             },
         );
         s
@@ -462,16 +473,49 @@ mod tests {
 
     #[test]
     fn byte_view_matches_values() {
-        let v = Buf::F32(vec![1.0f32]);
+        let v = Buf::f32(&[1.0f32]);
         assert_eq!(v.bytes(), 1.0f32.to_le_bytes());
     }
 
     #[test]
     fn bit_flip_via_bytes_mut_changes_value() {
-        let mut b = Buf::F32(vec![1.0f32, 2.0]);
+        let mut b = Buf::f32(&[1.0f32, 2.0]);
         crate::util::flip_bit(b.bytes_mut(), 7, 7); // sign bit of second elt
         assert_eq!(b.as_f32().unwrap()[1], -2.0);
         assert_eq!(b.as_f32().unwrap()[0], 1.0);
+    }
+
+    #[test]
+    fn clone_is_zero_copy_until_written() {
+        let a = Var::f32(&[3], vec![1.0, 2.0, 3.0]);
+        let b = a.clone();
+        assert!(b.buf.shares_allocation(&a.buf), "clone must share the allocation");
+        // Copy-on-write: mutating the clone detaches it, the original is
+        // untouched (replica isolation through shared payloads).
+        let mut c = a.clone();
+        c.buf.as_f32_mut().unwrap()[0] = -1.0;
+        assert!(!c.buf.shares_allocation(&a.buf));
+        assert_eq!(a.buf.as_f32().unwrap(), &[1.0, 2.0, 3.0]);
+        assert_eq!(c.buf.as_f32().unwrap(), &[-1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn typed_views_cover_all_dtypes() {
+        assert_eq!(Buf::f64(&[1.5, -2.5]).as_f64().unwrap(), &[1.5, -2.5]);
+        assert_eq!(Buf::i64(&[7, -9]).as_i64().unwrap(), &[7, -9]);
+        assert_eq!(Buf::u8(&[1, 2, 3]).as_u8().unwrap(), &[1, 2, 3]);
+        // Wrong-dtype access is an error, not a cast.
+        assert!(Buf::u8(&[1, 2, 3, 4]).as_f32().is_err());
+        assert!(Buf::f32(&[1.0]).as_i64().is_err());
+    }
+
+    #[test]
+    fn from_bytes_validates_and_aligns() {
+        let b = Buf::from_bytes(DType::F32, &1.25f32.to_le_bytes()).unwrap();
+        assert_eq!(b.as_f32().unwrap(), &[1.25]);
+        assert_eq!(b.as_f32().unwrap().as_ptr() as usize % 4, 0);
+        assert!(Buf::from_bytes(DType::F32, &[0u8; 6]).is_err());
+        assert!(Buf::from_bytes(DType::I64, &[0u8; 12]).is_err());
     }
 
     #[test]

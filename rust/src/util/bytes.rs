@@ -1,0 +1,248 @@
+//! Shared, immutable byte buffers — the zero-copy payload substrate.
+//!
+//! Every message payload and store variable in the system is backed by a
+//! [`SharedBuf`]: an `Arc`-shared, word-aligned byte allocation. Cloning one
+//! is a reference-count bump, so a broadcast shares **one** allocation
+//! across all ranks and a validated send hands the network the same bytes
+//! the store holds. Mutation is copy-on-write ([`SharedBuf::make_mut`]):
+//! writers that hold the only reference mutate in place for free; writers
+//! of a shared buffer get a private copy first, so replicas can never
+//! observe each other's in-progress writes through a shared payload.
+//!
+//! Storage is a `u64` word array, which guarantees 8-byte alignment — every
+//! element type the [`crate::state`] layer supports (f32/f64/i64/u8) can be
+//! viewed directly over these bytes without realignment copies.
+//!
+//! [`TokenBuf`] is the companion type for the replica rendezvous channels
+//! ([`crate::replica::pair::PairSync`]): small control tokens stay owned
+//! `Vec<u8>`s, full-payload comparison tokens cross as `SharedBuf` views —
+//! which is what makes full-contents message validation copy-free on the
+//! send path.
+
+use std::sync::Arc;
+
+/// Shared, immutable, 8-byte-aligned byte buffer with O(1) clone and
+/// copy-on-write mutation.
+pub struct SharedBuf {
+    /// Word storage; the last word may be partially used.
+    words: Arc<[u64]>,
+    /// Valid byte length (`<= words.len() * 8`).
+    len: usize,
+}
+
+impl SharedBuf {
+    /// An empty buffer (no allocation shared with anything).
+    pub fn empty() -> SharedBuf {
+        SharedBuf {
+            words: Vec::new().into(),
+            len: 0,
+        }
+    }
+
+    /// Copy `bytes` into a fresh word-aligned shared allocation.
+    pub fn from_bytes(bytes: &[u8]) -> SharedBuf {
+        let mut words = vec![0u64; bytes.len().div_ceil(8)];
+        if !bytes.is_empty() {
+            // Safety: the destination spans ceil(len/8) words >= len bytes,
+            // and u8 writes have no alignment requirement.
+            unsafe {
+                std::ptr::copy_nonoverlapping(
+                    bytes.as_ptr(),
+                    words.as_mut_ptr().cast::<u8>(),
+                    bytes.len(),
+                );
+            }
+        }
+        SharedBuf {
+            words: words.into(),
+            len: bytes.len(),
+        }
+    }
+
+    /// A zero-filled buffer of `len` bytes.
+    pub fn zeroed(len: usize) -> SharedBuf {
+        SharedBuf {
+            words: vec![0u64; len.div_ceil(8)].into(),
+            len,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Immutable byte view. The base pointer is 8-byte aligned by
+    /// construction (word storage), so typed views over these bytes are
+    /// alignment-safe for every supported element width.
+    pub fn as_bytes(&self) -> &[u8] {
+        // Safety: the words allocation holds at least `len` initialized
+        // bytes; u8 has no alignment requirement.
+        unsafe { std::slice::from_raw_parts(self.words.as_ptr().cast::<u8>(), self.len) }
+    }
+
+    /// Mutable byte view, copy-on-write: in place when this is the only
+    /// reference, otherwise the contents are copied into a private
+    /// allocation first (other holders keep seeing the old bytes).
+    pub fn make_mut(&mut self) -> &mut [u8] {
+        if Arc::get_mut(&mut self.words).is_none() {
+            let copy: Vec<u64> = self.words.to_vec();
+            self.words = copy.into();
+        }
+        let words = Arc::get_mut(&mut self.words).expect("unique after copy-on-write");
+        // Safety: as for `as_bytes`, plus exclusive access via `get_mut`.
+        unsafe { std::slice::from_raw_parts_mut(words.as_mut_ptr().cast::<u8>(), self.len) }
+    }
+
+    /// Do two buffers share one allocation? (The observability hook the
+    /// zero-copy tests assert on.)
+    pub fn ptr_eq(a: &SharedBuf, b: &SharedBuf) -> bool {
+        Arc::ptr_eq(&a.words, &b.words)
+    }
+
+    /// Number of live references to the allocation.
+    pub fn refcount(&self) -> usize {
+        Arc::strong_count(&self.words)
+    }
+}
+
+impl Clone for SharedBuf {
+    /// O(1): bumps the reference count; no bytes move.
+    fn clone(&self) -> SharedBuf {
+        SharedBuf {
+            words: Arc::clone(&self.words),
+            len: self.len,
+        }
+    }
+}
+
+impl PartialEq for SharedBuf {
+    fn eq(&self, other: &SharedBuf) -> bool {
+        self.len == other.len
+            && (SharedBuf::ptr_eq(self, other) || self.as_bytes() == other.as_bytes())
+    }
+}
+
+impl Eq for SharedBuf {}
+
+impl std::fmt::Debug for SharedBuf {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "SharedBuf({} B, rc {})", self.len, self.refcount())
+    }
+}
+
+/// A token crossing a replica rendezvous channel: either a small owned
+/// control blob or a zero-copy view of a shared payload.
+#[derive(Debug, Clone)]
+pub enum TokenBuf {
+    /// Owned bytes (control tokens, digests, encoded vars).
+    Owned(Vec<u8>),
+    /// A shared view — pushing one across the channel moves a reference,
+    /// never the payload bytes.
+    Shared(SharedBuf),
+}
+
+impl TokenBuf {
+    pub fn as_bytes(&self) -> &[u8] {
+        match self {
+            TokenBuf::Owned(v) => v,
+            TokenBuf::Shared(s) => s.as_bytes(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.as_bytes().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.as_bytes().is_empty()
+    }
+}
+
+impl From<Vec<u8>> for TokenBuf {
+    fn from(v: Vec<u8>) -> TokenBuf {
+        TokenBuf::Owned(v)
+    }
+}
+
+impl From<SharedBuf> for TokenBuf {
+    fn from(s: SharedBuf) -> TokenBuf {
+        TokenBuf::Shared(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_and_alignment() {
+        for n in [0usize, 1, 7, 8, 9, 63, 64, 65, 1000] {
+            let src: Vec<u8> = (0..n).map(|i| (i * 7 + 3) as u8).collect();
+            let b = SharedBuf::from_bytes(&src);
+            assert_eq!(b.len(), n);
+            assert_eq!(b.as_bytes(), &src[..]);
+            assert_eq!(b.as_bytes().as_ptr() as usize % 8, 0, "len {n} misaligned");
+        }
+    }
+
+    #[test]
+    fn clone_shares_allocation() {
+        let a = SharedBuf::from_bytes(&[1, 2, 3, 4, 5]);
+        let b = a.clone();
+        assert!(SharedBuf::ptr_eq(&a, &b));
+        assert_eq!(a.refcount(), 2);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn cow_preserves_other_holders() {
+        let mut a = SharedBuf::from_bytes(&[10, 20, 30]);
+        let b = a.clone();
+        a.make_mut()[1] = 99;
+        assert_eq!(a.as_bytes(), &[10, 99, 30]);
+        assert_eq!(b.as_bytes(), &[10, 20, 30], "shared holder must see old bytes");
+        assert!(!SharedBuf::ptr_eq(&a, &b), "write must have detached the copy");
+    }
+
+    #[test]
+    fn unique_mutation_is_in_place() {
+        let mut a = SharedBuf::from_bytes(&[1, 2, 3]);
+        let before = a.as_bytes().as_ptr();
+        a.make_mut()[0] = 9;
+        assert_eq!(a.as_bytes().as_ptr(), before, "unique write must not reallocate");
+        assert_eq!(a.as_bytes(), &[9, 2, 3]);
+    }
+
+    #[test]
+    fn equality_is_by_contents() {
+        let a = SharedBuf::from_bytes(b"same");
+        let b = SharedBuf::from_bytes(b"same");
+        assert!(!SharedBuf::ptr_eq(&a, &b));
+        assert_eq!(a, b);
+        assert_ne!(a, SharedBuf::from_bytes(b"diff"));
+        assert_ne!(a, SharedBuf::from_bytes(b"sam"));
+    }
+
+    #[test]
+    fn empty_and_zeroed() {
+        let e = SharedBuf::empty();
+        assert!(e.is_empty());
+        assert_eq!(e.as_bytes(), &[] as &[u8]);
+        let z = SharedBuf::zeroed(17);
+        assert_eq!(z.as_bytes(), &[0u8; 17][..]);
+    }
+
+    #[test]
+    fn token_buf_views() {
+        let o = TokenBuf::from(vec![1u8, 2]);
+        assert_eq!(o.as_bytes(), &[1, 2]);
+        assert_eq!(o.len(), 2);
+        let s = TokenBuf::from(SharedBuf::from_bytes(&[3u8; 40]));
+        assert_eq!(s.as_bytes(), &[3u8; 40][..]);
+        assert!(!s.is_empty());
+    }
+}

@@ -10,6 +10,20 @@
 //! bytes — `len - 3` (match lengths 3..=258) followed by a little-endian
 //! u16 back-distance (1..=65535). The decoder stops exactly at the declared
 //! uncompressed length, which the enclosing frame always carries.
+//!
+//! Two perf properties back the single-pass checkpoint pipeline
+//! ([`crate::checkpoint::snapshot::encode_frame`]):
+//!
+//! * the [`Matcher`] hash-chain arena is allocated once per thread and
+//!   recycled across frames (reset is an `O(window)` fill, not a fresh
+//!   384 KiB allocation per call);
+//! * a [`PassState`] can be folded over the input **in the same scan** that
+//!   encodes it, so CRC-32 and (optionally) SHA-256 come out of one pass
+//!   over memory instead of two or three.
+
+use std::cell::RefCell;
+
+use crate::util::sha256::Sha256;
 
 const CRC_TABLE: [u32; 256] = build_crc_table();
 
@@ -33,13 +47,53 @@ const fn build_crc_table() -> [u32; 256] {
     table
 }
 
+/// Fold `bytes` into a raw CRC-32 state (no init/xorout — streaming form).
+pub fn crc32_feed(mut state: u32, bytes: &[u8]) -> u32 {
+    for &b in bytes {
+        state = CRC_TABLE[((state ^ b as u32) & 0xFF) as usize] ^ (state >> 8);
+    }
+    state
+}
+
 /// CRC-32 of a buffer (IEEE polynomial, init/xorout `0xFFFF_FFFF`).
 pub fn crc32(bytes: &[u8]) -> u32 {
-    let mut c = 0xFFFF_FFFFu32;
-    for &b in bytes {
-        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    crc32_feed(0xFFFF_FFFF, bytes) ^ 0xFFFF_FFFF
+}
+
+/// Digest state folded over the encoder's single scan of the payload:
+/// CRC-32 always, SHA-256 on request (the user-checkpoint path needs both;
+/// system checkpoints and fleet artifacts need only the CRC).
+pub struct PassState {
+    crc: u32,
+    sha: Option<Sha256>,
+}
+
+impl PassState {
+    pub fn new(want_sha: bool) -> PassState {
+        PassState {
+            crc: 0xFFFF_FFFF,
+            sha: if want_sha { Some(Sha256::new()) } else { None },
+        }
     }
-    c ^ 0xFFFF_FFFF
+
+    /// Fold one span of payload bytes (called by the encoders while the
+    /// span is still cache-hot from the encoding read).
+    pub fn absorb(&mut self, bytes: &[u8]) {
+        self.crc = crc32_feed(self.crc, bytes);
+        if let Some(sha) = &mut self.sha {
+            sha.update(bytes);
+        }
+    }
+
+    /// Finalized CRC-32 of everything absorbed so far.
+    pub fn crc32(&self) -> u32 {
+        self.crc ^ 0xFFFF_FFFF
+    }
+
+    /// Finalized SHA-256 (if requested at construction).
+    pub fn sha256(self) -> Option<[u8; 32]> {
+        self.sha.map(|s| s.finalize())
+    }
 }
 
 const MIN_MATCH: usize = 3;
@@ -54,94 +108,179 @@ fn hash3(data: &[u8], i: usize) -> usize {
 
 const NIL: u32 = u32::MAX;
 
-/// LZSS-compress `data`. `level` (clamped to 1..=9) scales how many match
-/// candidates are examined per position; the format is level-independent.
-pub fn compress(data: &[u8], level: u32) -> Vec<u8> {
-    let tries = level.clamp(1, 9) as usize * 8;
-    let mut out = Vec::with_capacity(data.len() / 2 + 16);
-    // Chained hash over 3-byte prefixes. The prev links live in a 64 KiB
-    // ring (zlib-style): distances beyond MAX_DIST are unusable anyway, so
-    // the chain memory is O(window), not O(payload). Ring aliasing can
-    // surface a stale candidate; the strictly-descending check below drops
-    // the chain at that point (a missed match costs ratio, never
-    // correctness — every candidate is byte-verified). Positions are u32:
-    // beyond 4 GiB the matcher switches off and bytes pass through as
-    // literals (still a valid stream).
-    let matchable = data.len() < NIL as usize;
-    let mut head = vec![NIL; 1 << HASH_BITS];
-    let mut prev = vec![NIL; 1 << 16];
+/// Reusable LZSS match-finding workspace. The hash-head and chain arrays
+/// (~384 KiB) are allocated once and recycled across frames — the
+/// checkpoint hot loop writes a frame per interval, and reallocating the
+/// arena per call was measurable against the actual matching work.
+pub struct Matcher {
+    head: Vec<u32>,
+    prev: Vec<u32>,
+}
 
-    let mut flags = 0u8;
-    let mut ntok = 0u32;
-    let mut group: Vec<u8> = Vec::with_capacity(8 * 3);
+impl Default for Matcher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
 
-    let mut i = 0;
-    while i < data.len() {
-        let mut best_len = 0usize;
-        let mut best_dist = 0usize;
-        if matchable && i + MIN_MATCH <= data.len() {
-            let mut cand = head[hash3(data, i)];
-            let mut examined = 0;
-            while cand != NIL && examined < tries {
-                let c = cand as usize;
-                if c >= i || i - c > MAX_DIST {
-                    break;
-                }
-                let limit = (data.len() - i).min(MAX_MATCH);
-                let mut l = 0;
-                while l < limit && data[c + l] == data[i + l] {
-                    l += 1;
-                }
-                if l > best_len {
-                    best_len = l;
-                    best_dist = i - c;
-                    if l == limit {
+impl Matcher {
+    pub fn new() -> Matcher {
+        Matcher {
+            head: vec![NIL; 1 << HASH_BITS],
+            prev: vec![NIL; 1 << 16],
+        }
+    }
+
+    /// Clear the chains so the next frame sees exactly the state a fresh
+    /// arena would — output stays byte-identical to a cold matcher.
+    fn reset(&mut self) {
+        self.head.fill(NIL);
+        self.prev.fill(NIL);
+    }
+
+    /// LZSS-compress `data` into `out`. `level` (clamped to 1..=9) scales
+    /// how many match candidates are examined per position; the format is
+    /// level-independent. When `pass` is given, its digests are folded over
+    /// the input in the same scan (the single-pass frame pipeline).
+    pub fn compress_into(
+        &mut self,
+        data: &[u8],
+        level: u32,
+        out: &mut Vec<u8>,
+        mut pass: Option<&mut PassState>,
+    ) {
+        self.reset();
+        let tries = level.clamp(1, 9) as usize * 8;
+        out.reserve(data.len() / 2 + 16);
+        // Chained hash over 3-byte prefixes. The prev links live in a 64 KiB
+        // ring (zlib-style): distances beyond MAX_DIST are unusable anyway,
+        // so the chain memory is O(window), not O(payload). Ring aliasing
+        // can surface a stale candidate; the strictly-descending check below
+        // drops the chain at that point (a missed match costs ratio, never
+        // correctness — every candidate is byte-verified). Positions are
+        // u32: beyond 4 GiB the matcher switches off and bytes pass through
+        // as literals (still a valid stream).
+        let matchable = data.len() < NIL as usize;
+        let head = &mut self.head;
+        let prev = &mut self.prev;
+
+        let mut flags = 0u8;
+        let mut ntok = 0u32;
+        let mut group: Vec<u8> = Vec::with_capacity(8 * 3);
+        // Digest spans are folded in ≥16 KiB chunks (still cache-resident
+        // from the match scan), not per token — literal-heavy input would
+        // otherwise pay a crc/sha call per byte.
+        const DIGEST_SPAN: usize = 16 * 1024;
+        let mut digested = 0usize;
+
+        let mut i = 0;
+        while i < data.len() {
+            let mut best_len = 0usize;
+            let mut best_dist = 0usize;
+            if matchable && i + MIN_MATCH <= data.len() {
+                let mut cand = head[hash3(data, i)];
+                let mut examined = 0;
+                while cand != NIL && examined < tries {
+                    let c = cand as usize;
+                    if c >= i || i - c > MAX_DIST {
                         break;
                     }
+                    let limit = (data.len() - i).min(MAX_MATCH);
+                    let mut l = 0;
+                    while l < limit && data[c + l] == data[i + l] {
+                        l += 1;
+                    }
+                    if l > best_len {
+                        best_len = l;
+                        best_dist = i - c;
+                        if l == limit {
+                            break;
+                        }
+                    }
+                    let next = prev[c & 0xFFFF];
+                    if next == NIL || next as usize >= c {
+                        break;
+                    }
+                    cand = next;
+                    examined += 1;
                 }
-                let next = prev[c & 0xFFFF];
-                if next == NIL || next as usize >= c {
-                    break;
+            }
+
+            let step = if best_len >= MIN_MATCH {
+                group.push((best_len - MIN_MATCH) as u8);
+                group.extend_from_slice(&(best_dist as u16).to_le_bytes());
+                best_len
+            } else {
+                flags |= 1 << ntok;
+                group.push(data[i]);
+                1
+            };
+            ntok += 1;
+            if ntok == 8 {
+                out.push(flags);
+                out.extend_from_slice(&group);
+                flags = 0;
+                ntok = 0;
+                group.clear();
+            }
+
+            // Enter every position the token covered into the hash chains.
+            let end = i + step;
+            while i < end {
+                if matchable && i + MIN_MATCH <= data.len() {
+                    let h = hash3(data, i);
+                    prev[i & 0xFFFF] = head[h];
+                    head[h] = i as u32;
                 }
-                cand = next;
-                examined += 1;
+                i += 1;
+            }
+
+            // Fold the digests over the accumulated span once it is large
+            // enough to amortize the call.
+            if i - digested >= DIGEST_SPAN {
+                if let Some(p) = &mut pass {
+                    p.absorb(&data[digested..i]);
+                }
+                digested = i;
             }
         }
-
-        let step = if best_len >= MIN_MATCH {
-            group.push((best_len - MIN_MATCH) as u8);
-            group.extend_from_slice(&(best_dist as u16).to_le_bytes());
-            best_len
-        } else {
-            flags |= 1 << ntok;
-            group.push(data[i]);
-            1
-        };
-        ntok += 1;
-        if ntok == 8 {
+        if ntok > 0 {
             out.push(flags);
             out.extend_from_slice(&group);
-            flags = 0;
-            ntok = 0;
-            group.clear();
         }
+        if let Some(p) = &mut pass {
+            p.absorb(&data[digested..]);
+        }
+    }
+}
 
-        // Enter every position the token covered into the hash chains.
-        let end = i + step;
-        while i < end {
-            if matchable && i + MIN_MATCH <= data.len() {
-                let h = hash3(data, i);
-                prev[i & 0xFFFF] = head[h];
-                head[h] = i as u32;
-            }
-            i += 1;
-        }
-    }
-    if ntok > 0 {
-        out.push(flags);
-        out.extend_from_slice(&group);
-    }
+thread_local! {
+    /// Per-thread matcher arena shared by every frame this thread encodes.
+    static TL_MATCHER: RefCell<Matcher> = RefCell::new(Matcher::new());
+}
+
+/// LZSS-compress `data` (thread-local arena; see [`Matcher`]).
+pub fn compress(data: &[u8], level: u32) -> Vec<u8> {
+    let mut out = Vec::with_capacity(data.len() / 2 + 16);
+    TL_MATCHER.with(|m| m.borrow_mut().compress_into(data, level, &mut out, None));
     out
+}
+
+/// LZSS-compress into `out` while folding `pass` digests over the input in
+/// the same scan (thread-local arena).
+pub fn compress_fused(data: &[u8], level: u32, out: &mut Vec<u8>, pass: &mut PassState) {
+    TL_MATCHER.with(|m| m.borrow_mut().compress_into(data, level, out, Some(pass)));
+}
+
+/// Stream `data` into `out` uncompressed while folding `pass` digests —
+/// the `Codec::Raw` arm of the single-pass frame writer. Chunked so every
+/// block is digested while still cache-hot from the copy.
+pub fn copy_fused(data: &[u8], out: &mut Vec<u8>, pass: &mut PassState) {
+    out.reserve(data.len());
+    for chunk in data.chunks(64 * 1024) {
+        pass.absorb(chunk);
+        out.extend_from_slice(chunk);
+    }
 }
 
 /// Decompress an LZSS stream produced by [`compress`] into exactly
@@ -207,18 +346,9 @@ mod tests {
 
     #[test]
     fn roundtrip_assorted() {
-        let mut rng = SplitMix64::new(7);
-        let mut cases: Vec<Vec<u8>> = vec![
-            vec![],
-            b"a".to_vec(),
-            b"ab".to_vec(),
-            b"abcabcabcabcabc".to_vec(),
-            (0..100_000u32).map(|i| (i % 251) as u8).collect(),
-            vec![0u8; 70_000],
-        ];
-        // Incompressible random bytes must round-trip too.
-        cases.push((0..10_000).map(|_| rng.next_u64() as u8).collect());
-        for payload in cases {
+        // The corpus ends with incompressible random bytes — those must
+        // round-trip too.
+        for payload in assorted_corpus() {
             for level in [1, 6, 9] {
                 let packed = compress(&payload, level);
                 let back = decompress(&packed, payload.len()).unwrap();
@@ -237,6 +367,83 @@ mod tests {
             payload.len(),
             packed.len()
         );
+    }
+
+    /// The corpus `roundtrip_assorted` sweeps, reused by the streaming-sink
+    /// equivalence tests below.
+    fn assorted_corpus() -> Vec<Vec<u8>> {
+        let mut rng = SplitMix64::new(7);
+        let mut cases: Vec<Vec<u8>> = vec![
+            vec![],
+            b"a".to_vec(),
+            b"ab".to_vec(),
+            b"abcabcabcabcabc".to_vec(),
+            (0..100_000u32).map(|i| (i % 251) as u8).collect(),
+            vec![0u8; 70_000],
+        ];
+        cases.push((0..10_000).map(|_| rng.next_u64() as u8).collect());
+        cases
+    }
+
+    #[test]
+    fn crc32_feed_is_chunking_invariant() {
+        let data: Vec<u8> = (0..10_000u32).map(|i| (i * 31) as u8).collect();
+        for step in [1usize, 7, 64, 4096, 10_000] {
+            let mut state = 0xFFFF_FFFFu32;
+            for chunk in data.chunks(step) {
+                state = crc32_feed(state, chunk);
+            }
+            assert_eq!(state ^ 0xFFFF_FFFF, crc32(&data), "step {step}");
+        }
+    }
+
+    #[test]
+    fn streaming_sink_matches_one_shot_compress() {
+        // A dedicated (reused!) matcher, with digest fusion on, must emit
+        // byte-identical streams to the one-shot API — on every corpus
+        // entry, across levels, without resetting between payloads by hand.
+        let mut m = Matcher::new();
+        for payload in assorted_corpus() {
+            for level in [1, 6, 9] {
+                let mut out = Vec::new();
+                let mut pass = PassState::new(true);
+                m.compress_into(&payload, level, &mut out, Some(&mut pass));
+                assert_eq!(
+                    out,
+                    compress(&payload, level),
+                    "stream/one-shot divergence at level {level}, len {}",
+                    payload.len()
+                );
+                // Fused digests must equal the standalone ones.
+                assert_eq!(pass.crc32(), crc32(&payload));
+                assert_eq!(
+                    pass.sha256().unwrap(),
+                    crate::util::sha256::sha256(&payload)
+                );
+                // And the stream still round-trips.
+                assert_eq!(decompress(&out, payload.len()).unwrap(), payload);
+            }
+        }
+    }
+
+    #[test]
+    fn copy_fused_digests_match() {
+        for payload in assorted_corpus() {
+            let mut out = Vec::new();
+            let mut pass = PassState::new(true);
+            copy_fused(&payload, &mut out, &mut pass);
+            assert_eq!(out, payload);
+            assert_eq!(pass.crc32(), crc32(&payload));
+            assert_eq!(pass.sha256().unwrap(), crate::util::sha256::sha256(&payload));
+        }
+    }
+
+    #[test]
+    fn pass_state_without_sha_is_crc_only() {
+        let mut pass = PassState::new(false);
+        pass.absorb(b"123456789");
+        assert_eq!(pass.crc32(), 0xCBF4_3926);
+        assert!(pass.sha256().is_none());
     }
 
     #[test]

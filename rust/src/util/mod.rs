@@ -1,7 +1,8 @@
-//! Small shared utilities: deterministic PRNG, byte/bit helpers, hashing
-//! and compression codecs, a tiny stderr logger and human-readable
-//! formatting.
+//! Small shared utilities: deterministic PRNG, byte/bit helpers, shared
+//! zero-copy buffers, hashing and compression codecs, a tiny stderr logger
+//! and human-readable formatting.
 
+pub mod bytes;
 pub mod codec;
 pub mod logger;
 pub mod prng;

@@ -3,8 +3,10 @@
 //! The crate builds with zero external dependencies, so the digest used by
 //! hash-based message validation and user-level checkpoint cross-validation
 //! ([`crate::detect::ValidationMode::Sha256`], Algorithm 2's `hash(ckpt)`)
-//! is implemented here. Single-shot only — every caller hashes a complete
-//! buffer — so no streaming state is exposed.
+//! is implemented here. Exposed both as the one-shot [`sha256`] and as the
+//! incremental [`Sha256`] state, which the single-pass checkpoint pipeline
+//! ([`crate::util::codec::PassState`]) folds over payload bytes in the same
+//! scan that encodes and CRC-checks them.
 
 /// Initial hash values: first 32 bits of the fractional parts of the square
 /// roots of the first 8 primes.
@@ -76,32 +78,88 @@ fn compress(state: &mut [u32; 8], block: &[u8]) {
     state[7] = state[7].wrapping_add(h);
 }
 
+/// Incremental SHA-256: feed bytes in any chunking, finalize once. The
+/// digest is identical to [`sha256`] over the concatenation.
+#[derive(Clone)]
+pub struct Sha256 {
+    state: [u32; 8],
+    /// Unprocessed sub-block bytes carried between `update` calls.
+    tail: [u8; 64],
+    tail_len: usize,
+    /// Total message bytes absorbed so far.
+    total: u64,
+}
+
+impl Default for Sha256 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Sha256 {
+    pub fn new() -> Sha256 {
+        Sha256 {
+            state: H0,
+            tail: [0u8; 64],
+            tail_len: 0,
+            total: 0,
+        }
+    }
+
+    /// Absorb `bytes` (any chunk size, including empty).
+    pub fn update(&mut self, mut bytes: &[u8]) {
+        self.total = self.total.wrapping_add(bytes.len() as u64);
+        // Top up a carried partial block first.
+        if self.tail_len > 0 {
+            let take = (64 - self.tail_len).min(bytes.len());
+            self.tail[self.tail_len..self.tail_len + take].copy_from_slice(&bytes[..take]);
+            self.tail_len += take;
+            bytes = &bytes[take..];
+            if self.tail_len < 64 {
+                return;
+            }
+            let block = self.tail;
+            compress(&mut self.state, &block);
+            self.tail_len = 0;
+        }
+        let mut chunks = bytes.chunks_exact(64);
+        for block in &mut chunks {
+            compress(&mut self.state, block);
+        }
+        let rem = chunks.remainder();
+        self.tail[..rem.len()].copy_from_slice(rem);
+        self.tail_len = rem.len();
+    }
+
+    /// Apply FIPS padding and return the digest.
+    pub fn finalize(mut self) -> [u8; 32] {
+        // Padding: 0x80, zeros, then the 64-bit big-endian *bit* length,
+        // block-aligned. The tail spills into a second block when < 9 bytes
+        // of the block remain.
+        let bit_len = self.total.wrapping_mul(8);
+        let rem_len = self.tail_len;
+        let mut tail = [0u8; 128];
+        tail[..rem_len].copy_from_slice(&self.tail[..rem_len]);
+        tail[rem_len] = 0x80;
+        let tail_blocks = if rem_len + 9 <= 64 { 1 } else { 2 };
+        tail[tail_blocks * 64 - 8..tail_blocks * 64].copy_from_slice(&bit_len.to_be_bytes());
+        for block in tail[..tail_blocks * 64].chunks_exact(64) {
+            compress(&mut self.state, block);
+        }
+
+        let mut out = [0u8; 32];
+        for (i, word) in self.state.iter().enumerate() {
+            out[i * 4..i * 4 + 4].copy_from_slice(&word.to_be_bytes());
+        }
+        out
+    }
+}
+
 /// SHA-256 digest of a complete buffer.
 pub fn sha256(bytes: &[u8]) -> [u8; 32] {
-    let mut state = H0;
-    let mut chunks = bytes.chunks_exact(64);
-    for block in &mut chunks {
-        compress(&mut state, block);
-    }
-
-    // Padding: 0x80, zeros, then the 64-bit big-endian *bit* length, block-
-    // aligned. The tail spills into a second block when < 9 bytes remain.
-    let rem = chunks.remainder();
-    let bit_len = (bytes.len() as u64).wrapping_mul(8);
-    let mut tail = [0u8; 128];
-    tail[..rem.len()].copy_from_slice(rem);
-    tail[rem.len()] = 0x80;
-    let tail_blocks = if rem.len() + 9 <= 64 { 1 } else { 2 };
-    tail[tail_blocks * 64 - 8..tail_blocks * 64].copy_from_slice(&bit_len.to_be_bytes());
-    for block in tail[..tail_blocks * 64].chunks_exact(64) {
-        compress(&mut state, block);
-    }
-
-    let mut out = [0u8; 32];
-    for (i, word) in state.iter().enumerate() {
-        out[i * 4..i * 4 + 4].copy_from_slice(&word.to_be_bytes());
-    }
-    out
+    let mut h = Sha256::new();
+    h.update(bytes);
+    h.finalize()
 }
 
 #[cfg(test)]
@@ -134,6 +192,29 @@ mod tests {
         for n in 0..=130usize {
             let buf = vec![0xA5u8; n];
             assert!(seen.insert(sha256(&buf)), "collision at length {n}");
+        }
+    }
+
+    #[test]
+    fn streaming_matches_one_shot_for_any_chunking() {
+        // Every (length, split-pattern) combination around the 64-byte block
+        // boundary must agree with the one-shot digest.
+        let data: Vec<u8> = (0..300usize).map(|i| (i * 131 + 17) as u8).collect();
+        for len in [0usize, 1, 55, 56, 63, 64, 65, 127, 128, 129, 300] {
+            let want = sha256(&data[..len]);
+            for step in [1usize, 3, 7, 63, 64, 65, 300] {
+                let mut h = Sha256::new();
+                for chunk in data[..len].chunks(step) {
+                    h.update(chunk);
+                }
+                assert_eq!(h.finalize(), want, "len {len} step {step}");
+            }
+            // Interleaved empty updates must be no-ops.
+            let mut h = Sha256::new();
+            h.update(&[]);
+            h.update(&data[..len]);
+            h.update(&[]);
+            assert_eq!(h.finalize(), want, "len {len} with empty updates");
         }
     }
 

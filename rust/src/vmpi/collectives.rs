@@ -24,7 +24,7 @@ const TAG_ALLREDUCE_OUT: u32 = COLLECTIVE_TAG_BASE + 6;
 fn token() -> Var {
     Var {
         shape: vec![],
-        buf: Buf::U8(vec![0]),
+        buf: Buf::u8(&[0]),
     }
 }
 
@@ -79,6 +79,12 @@ impl Endpoint {
     }
 
     /// Broadcast from root. Root passes `Some(var)`, others `None`.
+    ///
+    /// Zero-copy fan-out: payload buffers are shared
+    /// ([`crate::util::bytes::SharedBuf`]-backed), so the per-destination
+    /// `var.clone()` is a reference-count bump — one allocation serves the
+    /// root and every receiver, whatever the world size (asserted by
+    /// `bcast_shares_one_allocation` below).
     pub fn bcast(&self, root: usize, var: Option<Var>) -> Result<Var> {
         if self.rank() == root {
             let var =
@@ -143,7 +149,8 @@ impl Endpoint {
         }
     }
 
-    /// Allreduce = reduce at root + broadcast of the result.
+    /// Allreduce = reduce at root + broadcast of the result. Like `bcast`,
+    /// the result fan-out shares one allocation across all ranks.
     pub fn allreduce_sum_f32(&self, root: usize, var: Var) -> Result<Var> {
         let reduced = self.reduce_sum_f32(root, var)?;
         if self.rank() == root {
@@ -242,6 +249,35 @@ mod tests {
             let out = ep.allreduce_sum_f32(0, mine).unwrap();
             assert_eq!(out.buf.as_f32().unwrap(), &[6.0]);
         });
+    }
+
+    #[test]
+    fn bcast_shares_one_allocation() {
+        use std::sync::{Arc, Mutex};
+        let bufs: Arc<Mutex<Vec<(usize, crate::state::Buf)>>> = Arc::new(Mutex::new(Vec::new()));
+        let net = Network::new(4);
+        let mut handles = Vec::new();
+        for r in 0..4 {
+            let ep = net.endpoint(r);
+            let bufs = Arc::clone(&bufs);
+            handles.push(std::thread::spawn(move || {
+                let var = (r == 0).then(|| Var::f32(&[256], vec![0.5; 256]));
+                let got = ep.bcast(0, var).unwrap();
+                bufs.lock().unwrap().push((r, got.buf));
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let bufs = bufs.lock().unwrap();
+        assert_eq!(bufs.len(), 4);
+        let root = &bufs.iter().find(|(r, _)| *r == 0).unwrap().1;
+        for (r, b) in bufs.iter() {
+            assert!(
+                b.shares_allocation(root),
+                "rank {r} received a copy instead of the shared payload"
+            );
+        }
     }
 
     #[test]

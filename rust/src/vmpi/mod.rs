@@ -4,7 +4,10 @@
 //! OS threads inside one process; messages are typed [`crate::state::Var`]
 //! payloads moved through per-rank mailboxes with blocking, FIFO-per-pair,
 //! tag-matched semantics — exactly the subset of MPI semantics SEDAR's
-//! mechanisms rely on. Collectives (scatter/bcast/gather/reduce/barrier) are
+//! mechanisms rely on. Payload buffers are shared and immutable
+//! ([`crate::util::bytes::SharedBuf`]-backed), so a send moves a reference
+//! through the mailbox, never the bytes, and collective fan-outs share one
+//! allocation across every destination. Collectives (scatter/bcast/gather/reduce/barrier) are
 //! built from point-to-point sends in deterministic rank order, mirroring
 //! §4.2's note that the functional-validation implementation of SEDAR is
 //! point-to-point based.
@@ -277,6 +280,20 @@ mod tests {
         let net = Network::new(2);
         let a = net.endpoint(0);
         assert!(a.send(5, 0, v(&[0.0])).is_err());
+    }
+
+    #[test]
+    fn send_shares_payload_allocation() {
+        let net = Network::new(2);
+        let a = net.endpoint(0);
+        let b = net.endpoint(1);
+        let v = Var::f32(&[4], vec![1.0, 2.0, 3.0, 4.0]);
+        a.send(1, 9, v.clone()).unwrap();
+        let got = b.recv(0, 9).unwrap();
+        assert!(
+            got.buf.shares_allocation(&v.buf),
+            "transport must move a reference, not copy the payload"
+        );
     }
 
     #[test]

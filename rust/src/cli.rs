@@ -2,9 +2,11 @@
 //! offline dependency set).
 //!
 //! Grammar: `sedar <command> [positional…] [--flag value…] [--switch…]`.
-//! A token starting with `--` is a switch if the next token is absent or is
-//! itself a flag; otherwise it consumes the next token as its value. Use
-//! `--flag=value` to force value binding.
+//! Boolean switches are a declared, closed set ([`SWITCHES`]): a `--name`
+//! in that set never consumes the next token, so
+//! `sedar merge --allow-partial s1.bin s2.bin` keeps both positionals. Any
+//! other `--flag` binds the next non-`--` token as its value (absent that,
+//! it degrades to a switch). Use `--flag=value` to force value binding.
 //!
 //! The `campaign` subcommand drives [`crate::campaign`]: `sedar campaign
 //! --jobs 8 --seed 42 [--filter app=matmul,strategy=sys,scenario=1-8]`
@@ -21,6 +23,22 @@
 use std::collections::HashMap;
 
 use crate::error::{Result, SedarError};
+
+/// Every boolean switch any `sedar` subcommand understands. Parsing
+/// consults this set so a switch can never swallow the token after it
+/// (which is how `merge --allow-partial s1.bin s2.bin` once lost
+/// `s1.bin`). A flag that takes a value must NOT be listed here.
+pub const SWITCHES: &[&str] = &[
+    "aet",
+    "allow-partial",
+    "json",
+    "no-campaign",
+    "quick",
+    "quiet",
+    "thresholds",
+    "trace",
+    "xla",
+];
 
 /// Parsed command line.
 #[derive(Debug, Default)]
@@ -42,6 +60,8 @@ impl Args {
             if let Some(name) = t.strip_prefix("--") {
                 if let Some((k, v)) = name.split_once('=') {
                     args.values.insert(k.to_string(), v.to_string());
+                } else if SWITCHES.contains(&name) {
+                    args.switches.push(name.to_string());
                 } else if i + 1 < toks.len() && !toks[i + 1].starts_with("--") {
                     args.values.insert(name.to_string(), toks[i + 1].clone());
                     i += 1;
@@ -130,6 +150,52 @@ mod tests {
     fn switch_before_flag() {
         let a = parse("run --xla --n 64");
         assert!(a.has("xla"));
+        assert_eq!(a.usize_or("n", 0).unwrap(), 64);
+    }
+
+    #[test]
+    fn switches_never_consume_positionals() {
+        // The bug class this guards: `merge --allow-partial s1.bin s2.bin`
+        // used to bind s1.bin as the switch's value and drop it from the
+        // positional list.
+        let a = parse("merge --allow-partial s1.bin s2.bin");
+        assert!(a.has("allow-partial"));
+        assert_eq!(a.get("allow-partial"), None);
+        assert_eq!(a.positional, vec!["s1.bin", "s2.bin"]);
+
+        // Every declared switch holds the invariant.
+        for switch in SWITCHES {
+            let a = parse(&format!("cmd --{switch} keepme"));
+            assert!(a.has(switch), "--{switch} not registered");
+            assert_eq!(a.get(switch), None, "--{switch} bound a value");
+            assert_eq!(a.positional, vec!["keepme"], "--{switch} ate a positional");
+        }
+
+        // Switches mixed among value flags stay inert.
+        let a = parse("bench --json --out trajectory.json --quick --jobs 4");
+        assert!(a.has("json") && a.has("quick"));
+        assert_eq!(a.get("out"), Some("trajectory.json"));
+        assert_eq!(a.usize_or("jobs", 0).unwrap(), 4);
+        assert!(a.positional.is_empty());
+
+        // `--switch=value` still force-binds (the explicit form wins).
+        let a = parse("campaign --quiet=yes next");
+        assert!(a.has("quiet"));
+        assert_eq!(a.get("quiet"), Some("yes"));
+        assert_eq!(a.positional, vec!["next"]);
+    }
+
+    #[test]
+    fn unknown_flags_keep_value_binding_heuristic() {
+        // Flags outside the switch set still bind the next token — the
+        // pre-existing grammar for value flags is unchanged.
+        let a = parse("campaign --filter app=matmul --shard 1/2 tail");
+        assert_eq!(a.get("filter"), Some("app=matmul"));
+        assert_eq!(a.get("shard"), Some("1/2"));
+        assert_eq!(a.positional, vec!["tail"]);
+        // …and degrade to switches at end-of-line or before another flag.
+        let a = parse("run --mystery --n 64");
+        assert!(a.has("mystery"));
         assert_eq!(a.usize_or("n", 0).unwrap(), 64);
     }
 

@@ -281,7 +281,11 @@ pub fn write_artifact(path: &Path, meta: &ShardMeta, outcomes: &[TaskOutcome]) -
     for o in outcomes {
         encode_outcome(o, &mut payload);
     }
-    write_frame(path, &payload, Codec::Raw)
+    write_frame(path, &payload, Codec::Raw)?;
+    // The frame write is atomic (write + rename), but the rename itself
+    // lives in the directory: sync it so a crash immediately after cannot
+    // lose the artifact's name.
+    super::sync_parent_dir(path)
 }
 
 /// Read a shard artifact back, verifying frame CRC, magic and version.

@@ -177,6 +177,10 @@ impl Journal {
         journal.file.seek(SeekFrom::End(0))?;
         if valid_len == 0 {
             journal.write_record(&header_body(meta))?;
+            // A fresh journal's directory entry must survive a crash too:
+            // without this, a kill right after creation can lose the whole
+            // file even though every record inside it was synced.
+            super::sync_parent_dir(path)?;
         }
         Ok((journal, recovered))
     }
@@ -284,6 +288,32 @@ mod tests {
         let idx: Vec<usize> = recovered.iter().map(|o| o.index).collect();
         assert_eq!(idx, vec![0, 4]);
         std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn created_journal_in_fresh_directory_reopens() {
+        // Creation in a freshly made nested directory exercises the
+        // create → header write → parent-directory fsync path; the reopen
+        // proves the journal those steps left behind is well-formed.
+        let dir = std::env::temp_dir().join(format!(
+            "sedar-journal-dirsync-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let p = dir.join("deep").join("sweep.journal");
+        {
+            let (mut j, recovered) = Journal::open(&p, &meta()).unwrap();
+            assert!(recovered.is_empty());
+            j.append(&outcome(0)).unwrap();
+        }
+        let (_, recovered) = Journal::open(&p, &meta()).unwrap();
+        assert_eq!(recovered.len(), 1);
+        assert_eq!(recovered[0].index, 0);
+        // The helper itself must tolerate a parentless (cwd-relative)
+        // path — it syncs "." rather than erroring.
+        crate::fleet::sync_parent_dir(std::path::Path::new("bare-name.journal")).unwrap();
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

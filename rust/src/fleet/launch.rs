@@ -1,0 +1,653 @@
+//! The self-healing fleet driver: `sedar fleet launch --shards N`.
+//!
+//! The paper's pitch is detection plus *automatic* recovery (§1): a failed
+//! replica is noticed and restarted from durable state without an operator
+//! in the loop. The fleet layer already had the durable halves — shard
+//! artifacts, CRC'd resume journals, live status endpoints — but a crashed
+//! shard still needed a human to notice and re-run it. This module closes
+//! that loop, applying SEDAR's own recovery discipline (level 2:
+//! redundancy + checkpointing beats re-execution from scratch) to the
+//! validation campaign itself:
+//!
+//! * [`run_launch`] spawns `N` `sedar campaign --shard i/N` child
+//!   processes, each with its own journal, artifact path and OS-assigned
+//!   status port under one run directory (`--status-addr-file` is the
+//!   port-discovery handshake);
+//! * the supervisor polls each child's `/json` status snapshot and exit
+//!   code; a child that **dies** (any exit before its artifact is
+//!   complete) or **stalls** (its monotone `heartbeat` counter stops
+//!   advancing for longer than the stall timeout) is killed if needed and
+//!   relaunched — journal resume makes every relaunch skip the tasks that
+//!   already finished, so the retry cost is bounded by the work actually
+//!   lost;
+//! * restarts are bounded per shard; a shard that exhausts its budget
+//!   fails the whole launch with a pointer to its log;
+//! * on completion the shard artifacts are auto-merged into the final
+//!   report — byte-identical to the single-process run with the same
+//!   `--seed` (`rust/tests/fleet_launch.rs` proves this survives a
+//!   mid-sweep SIGKILL).
+//!
+//! The stall detector compares heartbeats across polls: the counter ticks
+//! once per finished task, so "no advance" means the worker pool is wedged
+//! (or the process is gone — then the poll itself fails and the exit path
+//! fires first). The timeout must therefore exceed the slowest single
+//! task; the default is generous and CLI-tunable (`--stall-secs`).
+
+use std::fs::OpenOptions;
+use std::net::SocketAddr;
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use crate::campaign::{build_tasks, sweep_fingerprint, CampaignReport, CampaignSpec};
+use crate::error::{Result, SedarError};
+
+use super::artifact::{self, ShardMeta};
+use super::plan::ShardPlan;
+use super::status::http_get;
+
+/// Per-poll timeout for one status GET (children live on loopback — a
+/// healthy endpoint answers in microseconds, a dead one refuses at once).
+const HTTP_TIMEOUT: Duration = Duration::from_millis(400);
+
+/// How the supervisor runs the fleet.
+#[derive(Debug, Clone)]
+pub struct LaunchOptions {
+    /// Number of shard processes (the `N` of `--shard i/N`).
+    pub shards: usize,
+    /// Worker threads per shard (`0` = split the machine's default budget
+    /// evenly across the shards, at least 1 each).
+    pub jobs: usize,
+    /// Campaign master seed (forwarded to every child).
+    pub seed: u64,
+    /// Campaign `--filter` expression (forwarded verbatim).
+    pub filter: Option<String>,
+    /// Campaign `--scenario` shorthand (forwarded verbatim).
+    pub scenario: Option<String>,
+    /// Run directory: journals, artifacts, logs, pid/addr files and the
+    /// children's working dirs all live here.
+    pub dir: PathBuf,
+    /// Relaunch budget per shard; exceeding it fails the launch.
+    pub max_restarts: usize,
+    /// No heartbeat advance for this long ⇒ the shard is stalled and gets
+    /// killed + relaunched. Must exceed the slowest single task.
+    pub stall_timeout: Duration,
+    /// Supervisor poll cadence.
+    pub poll_interval: Duration,
+    /// The `sedar` binary to spawn (`None` = this executable).
+    pub bin: Option<PathBuf>,
+    /// Suppress the live aggregate progress line (restart notices and the
+    /// final summary still print).
+    pub quiet: bool,
+}
+
+impl Default for LaunchOptions {
+    fn default() -> LaunchOptions {
+        LaunchOptions {
+            shards: 2,
+            jobs: 0,
+            seed: 42,
+            filter: None,
+            scenario: None,
+            dir: PathBuf::from("runs/fleet"),
+            max_restarts: 3,
+            stall_timeout: Duration::from_secs(300),
+            poll_interval: Duration::from_millis(200),
+            bin: None,
+            quiet: false,
+        }
+    }
+}
+
+/// What one shard looked like when the fleet finished.
+#[derive(Debug, Clone)]
+pub struct ShardStat {
+    /// The plan label (`"2/4"`).
+    pub label: String,
+    /// Tasks this shard owned.
+    pub owned: usize,
+    /// Times the supervisor had to relaunch it.
+    pub restarts: usize,
+    /// Resumed/executed split of its *last observed* status snapshot —
+    /// best-effort (a shard that finishes between polls keeps the
+    /// previous snapshot's split).
+    pub resumed: usize,
+    pub executed: usize,
+}
+
+/// The supervisor's result: per-shard restart accounting plus the merged,
+/// deterministic campaign report.
+pub struct LaunchReport {
+    pub shards: Vec<ShardStat>,
+    pub report: CampaignReport,
+}
+
+impl LaunchReport {
+    /// Restarts across the whole fleet.
+    pub fn total_restarts(&self) -> usize {
+        self.shards.iter().map(|s| s.restarts).sum()
+    }
+
+    /// Operator summary: one line per shard plus the fleet totals.
+    pub fn summary(&self) -> String {
+        let mut s = format!(
+            "fleet launch: {} shard(s), {} task(s), {} restart(s)",
+            self.shards.len(),
+            self.report.total(),
+            self.total_restarts()
+        );
+        for st in &self.shards {
+            s.push_str(&format!(
+                "\n  shard {}: {} task(s), {} restart(s), last snapshot {} resumed / {} executed",
+                st.label, st.owned, st.restarts, st.resumed, st.executed
+            ));
+        }
+        s
+    }
+}
+
+/// Shard-level scalars of one `/json` status snapshot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct Snapshot {
+    done: usize,
+    passed: usize,
+    failed: usize,
+    resumed: usize,
+    executed: usize,
+    heartbeat: u64,
+}
+
+/// First occurrence of `"key":<digits>` in `body`. The board emits every
+/// shard-level scalar before the `cells` array, so the first occurrence is
+/// always the shard-level value even though cells repeat `done`/`total`.
+fn json_u64_field(body: &str, key: &str) -> Option<u64> {
+    let pat = format!("\"{key}\":");
+    let at = body.find(&pat)? + pat.len();
+    let digits: String = body[at..]
+        .chars()
+        .take_while(|c| c.is_ascii_digit())
+        .collect();
+    digits.parse().ok()
+}
+
+impl Snapshot {
+    fn parse(body: &str) -> Option<Snapshot> {
+        Some(Snapshot {
+            done: json_u64_field(body, "done")? as usize,
+            passed: json_u64_field(body, "passed")? as usize,
+            failed: json_u64_field(body, "failed")? as usize,
+            resumed: json_u64_field(body, "resumed")? as usize,
+            executed: json_u64_field(body, "executed")? as usize,
+            heartbeat: json_u64_field(body, "heartbeat")?,
+        })
+    }
+}
+
+/// Where one shard's files live under the launch directory.
+struct ShardPaths {
+    artifact: PathBuf,
+    journal: PathBuf,
+    addr: PathBuf,
+    pid: PathBuf,
+    log: PathBuf,
+    run_dir: PathBuf,
+}
+
+impl ShardPaths {
+    fn new(dir: &Path, member: usize) -> ShardPaths {
+        ShardPaths {
+            artifact: dir.join(format!("shard-{member}.bin")),
+            journal: dir.join(format!("shard-{member}.journal")),
+            addr: dir.join(format!("shard-{member}.addr")),
+            pid: dir.join(format!("shard-{member}.pid")),
+            log: dir.join(format!("shard-{member}.log")),
+            run_dir: dir.join(format!("run-{member}")),
+        }
+    }
+}
+
+/// What every (re)spawn needs: the launch options plus the resolved
+/// binary path and per-shard worker budget.
+struct SpawnCtx<'a> {
+    opts: &'a LaunchOptions,
+    bin: &'a Path,
+    jobs: usize,
+}
+
+/// One supervised shard process (its current incarnation, if any).
+struct ShardProc {
+    plan: ShardPlan,
+    owned: usize,
+    expect: ShardMeta,
+    paths: ShardPaths,
+    child: Option<Child>,
+    restarts: usize,
+    addr: Option<SocketAddr>,
+    snap: Option<Snapshot>,
+    last_heartbeat: Option<u64>,
+    last_advance: Instant,
+    finished: bool,
+}
+
+impl Drop for ShardProc {
+    fn drop(&mut self) {
+        // An early supervisor exit (error path) must not leak children.
+        if let Some(mut c) = self.child.take() {
+            let _ = c.kill();
+            let _ = c.wait();
+        }
+    }
+}
+
+impl ShardProc {
+    /// Spawn (or respawn) this shard's `sedar campaign` child. The journal
+    /// and artifact paths are stable across incarnations — that is what
+    /// makes a relaunch a *resume*.
+    fn spawn(&mut self, ctx: &SpawnCtx<'_>) -> Result<()> {
+        let _ = std::fs::remove_file(&self.paths.addr);
+        let log = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&self.paths.log)?;
+        let mut cmd = Command::new(ctx.bin);
+        cmd.arg("campaign")
+            .arg("--seed")
+            .arg(ctx.opts.seed.to_string())
+            .arg("--jobs")
+            .arg(ctx.jobs.to_string())
+            .arg("--shard")
+            .arg(self.plan.label())
+            .arg("--out")
+            .arg(&self.paths.artifact)
+            .arg("--journal")
+            .arg(&self.paths.journal)
+            .arg("--status-port")
+            .arg("0")
+            .arg("--status-addr-file")
+            .arg(&self.paths.addr)
+            .arg("--run-dir")
+            .arg(&self.paths.run_dir)
+            .arg("--quiet");
+        if let Some(f) = &ctx.opts.filter {
+            cmd.arg("--filter").arg(f);
+        }
+        if let Some(k) = &ctx.opts.scenario {
+            cmd.arg("--scenario").arg(k);
+        }
+        cmd.stdin(Stdio::null())
+            .stdout(Stdio::from(log.try_clone()?))
+            .stderr(Stdio::from(log));
+        let child = cmd.spawn().map_err(|e| {
+            SedarError::Config(format!(
+                "fleet launch: cannot spawn shard {} ({}): {e}",
+                self.plan.label(),
+                ctx.bin.display()
+            ))
+        })?;
+        let pid = child.id();
+        // Track the handle before any further fallible step: a pid-file
+        // write failure must fail the launch without orphaning the child
+        // just spawned (Drop kills whatever `self.child` holds).
+        self.child = Some(child);
+        self.addr = None;
+        self.last_heartbeat = None;
+        self.last_advance = Instant::now();
+        // The pid file is observability (and what the e2e kill test aims
+        // at), not control flow — the supervisor holds the Child handle.
+        std::fs::write(&self.paths.pid, format!("{pid}\n"))?;
+        Ok(())
+    }
+
+    /// Is this shard's durable artifact a complete record of its slice?
+    /// (The completion criterion: exit codes alone cannot distinguish "died
+    /// mid-sweep" from "finished but the report verdict failed".)
+    fn artifact_complete(&self) -> bool {
+        match artifact::read_artifact(&self.paths.artifact) {
+            Ok((meta, outcomes)) => meta == self.expect && outcomes.len() == self.owned,
+            Err(_) => false,
+        }
+    }
+
+    /// Bounded relaunch, or give up and fail the launch.
+    fn relaunch(&mut self, why: &str, ctx: &SpawnCtx<'_>) -> Result<()> {
+        if self.restarts >= ctx.opts.max_restarts {
+            return Err(SedarError::Config(format!(
+                "fleet launch: shard {} {why} and exhausted its restart budget \
+                 ({}) — see {}",
+                self.plan.label(),
+                ctx.opts.max_restarts,
+                self.paths.log.display()
+            )));
+        }
+        self.restarts += 1;
+        eprintln!(
+            "fleet: shard {} {why} — relaunch {}/{} (journal resume skips finished tasks)",
+            self.plan.label(),
+            self.restarts,
+            ctx.opts.max_restarts
+        );
+        self.spawn(ctx)
+    }
+
+    /// One supervision step: reap an exit, or poll status and check for a
+    /// stall — relaunching as needed.
+    fn step(&mut self, ctx: &SpawnCtx<'_>) -> Result<()> {
+        let exited = match self.child.as_mut() {
+            None => None,
+            Some(c) => c.try_wait()?,
+        };
+        if let Some(status) = exited {
+            self.child = None;
+            if self.artifact_complete() {
+                self.finished = true;
+                if !status.success() {
+                    eprintln!(
+                        "fleet: shard {} finished its slice with a failing verdict \
+                         ({status}) — the merged report will carry it; see {}",
+                        self.plan.label(),
+                        self.paths.log.display()
+                    );
+                }
+                return Ok(());
+            }
+            let why = format!("exited ({status}) before its slice was durable");
+            return self.relaunch(&why, ctx);
+        }
+
+        // Alive: learn the OS-assigned endpoint, then poll it.
+        if self.addr.is_none() {
+            if let Ok(s) = std::fs::read_to_string(&self.paths.addr) {
+                self.addr = s.trim().parse().ok();
+            }
+        }
+        if let Some(addr) = self.addr {
+            if let Ok(body) = http_get(addr, "/json", HTTP_TIMEOUT) {
+                if let Some(snap) = Snapshot::parse(&body) {
+                    if self.last_heartbeat != Some(snap.heartbeat) {
+                        self.last_heartbeat = Some(snap.heartbeat);
+                        self.last_advance = Instant::now();
+                    }
+                    self.snap = Some(snap);
+                }
+            }
+        }
+        if self.last_advance.elapsed() > ctx.opts.stall_timeout {
+            if let Some(mut c) = self.child.take() {
+                let _ = c.kill();
+                let _ = c.wait();
+            }
+            let secs = ctx.opts.stall_timeout.as_secs();
+            let why = format!("stalled (no heartbeat advance in {secs}s)");
+            return self.relaunch(&why, ctx);
+        }
+        Ok(())
+    }
+}
+
+/// Aggregate progress across the fleet, one line.
+fn progress_line(fleet: &[ShardProc], total: usize) -> String {
+    let mut done = 0usize;
+    let mut passed = 0usize;
+    let mut failed = 0usize;
+    let mut restarts = 0usize;
+    let mut parts = Vec::with_capacity(fleet.len());
+    for p in fleet {
+        let (d, pa, fa) = match &p.snap {
+            Some(s) => (s.done, s.passed, s.failed),
+            None => (0, 0, 0),
+        };
+        // A finished shard's last snapshot can be stale; its artifact is
+        // complete by definition.
+        let d = if p.finished { p.owned } else { d };
+        done += d;
+        passed += pa;
+        failed += fa;
+        restarts += p.restarts;
+        let marker = if p.restarts > 0 {
+            format!("(r{})", p.restarts)
+        } else {
+            String::new()
+        };
+        parts.push(format!("{}:{d}/{}{marker}", p.plan.label(), p.owned));
+    }
+    format!(
+        "fleet: {done}/{total} task(s) done ({passed} pass, {failed} fail) \
+         | {} | {restarts} restart(s)",
+        parts.join(" ")
+    )
+}
+
+/// Run the whole fleet: spawn, supervise, relaunch, merge. Blocks until
+/// every shard's slice is durable, then returns the merged report (or the
+/// first unrecoverable error — children are killed on the way out).
+pub fn run_launch(opts: &LaunchOptions) -> Result<LaunchReport> {
+    if opts.shards == 0 {
+        return Err(SedarError::Config(
+            "fleet launch: --shards must be >= 1".into(),
+        ));
+    }
+    // Build the spec exactly as every child will, so the supervisor knows
+    // each slice's size and identity (and can verify artifacts against the
+    // same sweep fingerprint the children stamp into them).
+    let mut spec = CampaignSpec::new(opts.seed);
+    if let Some(f) = &opts.filter {
+        spec.apply_filter(f)?;
+    }
+    if let Some(k) = &opts.scenario {
+        spec.apply_filter(&format!("scenario={k}"))?;
+    }
+    let tasks = build_tasks(&spec);
+    if tasks.is_empty() {
+        return Err(SedarError::Config(
+            "campaign filter selects no tasks".into(),
+        ));
+    }
+    let total = tasks.len();
+    let fingerprint = sweep_fingerprint(opts.seed, &tasks);
+    std::fs::create_dir_all(&opts.dir)?;
+    let bin = match &opts.bin {
+        Some(b) => b.clone(),
+        None => std::env::current_exe()?,
+    };
+    let jobs = if opts.jobs > 0 {
+        opts.jobs
+    } else {
+        (CampaignSpec::default_jobs() / opts.shards).max(1)
+    };
+
+    let mut fleet: Vec<ShardProc> = (0..opts.shards)
+        .map(|i| {
+            let plan = ShardPlan {
+                index: i,
+                count: opts.shards,
+            };
+            ShardProc {
+                owned: plan.slice(&tasks).len(),
+                expect: ShardMeta {
+                    seed: opts.seed,
+                    shard_index: i as u32,
+                    shard_count: opts.shards as u32,
+                    total_tasks: total as u64,
+                    spec_hash: fingerprint,
+                },
+                paths: ShardPaths::new(&opts.dir, i + 1),
+                child: None,
+                restarts: 0,
+                addr: None,
+                snap: None,
+                last_heartbeat: None,
+                last_advance: Instant::now(),
+                finished: false,
+                plan,
+            }
+        })
+        .collect();
+    let ctx = SpawnCtx {
+        opts,
+        bin: &bin,
+        jobs,
+    };
+    for p in fleet.iter_mut() {
+        p.spawn(&ctx)?;
+    }
+    eprintln!(
+        "fleet: launched {} shard(s) over {total} task(s) ({jobs} job(s) per shard, dir {})",
+        opts.shards,
+        opts.dir.display()
+    );
+
+    let mut last_line = String::new();
+    let mut last_emit = Instant::now();
+    loop {
+        let mut all_done = true;
+        for p in fleet.iter_mut() {
+            if p.finished {
+                continue;
+            }
+            all_done = false;
+            p.step(&ctx)?;
+        }
+        if all_done {
+            break;
+        }
+        if !opts.quiet {
+            let line = progress_line(&fleet, total);
+            if line != last_line && last_emit.elapsed() >= Duration::from_millis(900) {
+                eprintln!("{line}");
+                last_line = line;
+                last_emit = Instant::now();
+            }
+        }
+        std::thread::sleep(opts.poll_interval);
+    }
+
+    // Every slice is durable: auto-merge into the final report. The merge
+    // layer re-verifies sweep identity and rejects overlaps; the coverage
+    // check below is the completeness half.
+    let mut shard_files = Vec::with_capacity(fleet.len());
+    for p in &fleet {
+        shard_files.push(artifact::read_artifact(&p.paths.artifact)?);
+    }
+    let (seed, total_tasks, outcomes) = artifact::merge_artifacts(shard_files)?;
+    if outcomes.len() as u64 != total_tasks {
+        return Err(SedarError::Config(format!(
+            "fleet launch: merged union covers {} of {total_tasks} task(s) — \
+             a shard artifact is incomplete",
+            outcomes.len()
+        )));
+    }
+    let stats = fleet
+        .iter()
+        .map(|p| ShardStat {
+            label: p.plan.label(),
+            owned: p.owned,
+            restarts: p.restarts,
+            resumed: p.snap.as_ref().map(|s| s.resumed).unwrap_or(0),
+            executed: p.snap.as_ref().map(|s| s.executed).unwrap_or(0),
+        })
+        .collect();
+    Ok(LaunchReport {
+        shards: stats,
+        report: CampaignReport::new(seed, outcomes),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_parses_shard_level_scalars_not_cell_fields() {
+        // A realistic board document: the cells repeat `done`/`total`/
+        // `passed` keys with *different* values — the first (shard-level)
+        // occurrence must win.
+        let body = "{\"fleet\":\"shard 1/2\",\"seed\":7,\"total\":18,\"done\":5,\
+                    \"passed\":4,\"failed\":1,\"executed\":3,\"resumed\":2,\
+                    \"heartbeat\":5,\"cells\":[{\"app\":\"matmul\",\
+                    \"strategy\":\"sys-ckpt\",\"total\":9,\"done\":9,\"passed\":9}]}";
+        let s = Snapshot::parse(body).unwrap();
+        assert_eq!(s.done, 5);
+        assert_eq!(s.passed, 4);
+        assert_eq!(s.failed, 1);
+        assert_eq!(s.executed, 3);
+        assert_eq!(s.resumed, 2);
+        assert_eq!(s.heartbeat, 5);
+    }
+
+    #[test]
+    fn snapshot_parse_rejects_incomplete_documents() {
+        // A pre-extension snapshot (no heartbeat/resumed fields) must not
+        // parse into zeros that defeat stall detection.
+        let old = "{\"fleet\":\"shard 1/2\",\"seed\":7,\"total\":18,\"done\":5,\
+                   \"passed\":4,\"failed\":1,\"cells\":[]}";
+        assert!(Snapshot::parse(old).is_none());
+        assert!(Snapshot::parse("").is_none());
+        assert!(Snapshot::parse("not json at all").is_none());
+    }
+
+    #[test]
+    fn launch_rejects_empty_fleets_and_empty_sweeps() {
+        let opts = LaunchOptions {
+            shards: 0,
+            ..LaunchOptions::default()
+        };
+        assert!(run_launch(&opts).is_err());
+        let opts = LaunchOptions {
+            filter: Some("scenario=999".into()),
+            dir: std::env::temp_dir().join(format!(
+                "sedar-launch-empty-{}-{:?}",
+                std::process::id(),
+                std::thread::current().id()
+            )),
+            ..LaunchOptions::default()
+        };
+        let err = run_launch(&opts).unwrap_err();
+        assert!(err.to_string().contains("no tasks"), "got: {err}");
+        let _ = std::fs::remove_dir_all(&opts.dir);
+    }
+
+    #[test]
+    fn progress_line_aggregates_and_marks_restarts() {
+        let dir = std::env::temp_dir();
+        let mk = |i: usize, snap: Option<Snapshot>, restarts: usize, finished: bool| ShardProc {
+            plan: ShardPlan { index: i, count: 2 },
+            owned: 5,
+            expect: ShardMeta {
+                seed: 1,
+                shard_index: i as u32,
+                shard_count: 2,
+                total_tasks: 10,
+                spec_hash: 0,
+            },
+            paths: ShardPaths::new(&dir, i + 1),
+            child: None,
+            restarts,
+            addr: None,
+            snap,
+            last_heartbeat: None,
+            last_advance: Instant::now(),
+            finished,
+        };
+        let fleet = vec![
+            mk(
+                0,
+                Some(Snapshot {
+                    done: 3,
+                    passed: 2,
+                    failed: 1,
+                    resumed: 0,
+                    executed: 3,
+                    heartbeat: 3,
+                }),
+                1,
+                false,
+            ),
+            mk(1, None, 0, true),
+        ];
+        let line = progress_line(&fleet, 10);
+        assert!(line.contains("8/10"), "got: {line}");
+        assert!(line.contains("1/2:3/5(r1)"), "got: {line}");
+        assert!(line.contains("2/2:5/5"), "got: {line}");
+        assert!(line.contains("1 restart(s)"), "got: {line}");
+    }
+}

@@ -30,6 +30,7 @@
 
 pub mod artifact;
 pub mod journal;
+pub mod launch;
 pub mod plan;
 pub mod status;
 
@@ -48,6 +49,27 @@ use journal::Journal;
 use plan::ShardPlan;
 use status::{StatusBoard, StatusServer};
 
+/// Fsync the directory holding `path`, so a crash right after a file is
+/// created (or renamed into place) cannot lose the *directory entry* —
+/// per-record `sync_data` protects a journal's bytes, but until the
+/// parent directory is synced the file's name itself is volatile. Unix
+/// only; elsewhere this is a no-op (NTFS journals metadata itself).
+pub(crate) fn sync_parent_dir(path: &std::path::Path) -> Result<()> {
+    #[cfg(unix)]
+    {
+        let parent = match path.parent() {
+            Some(p) if !p.as_os_str().is_empty() => p,
+            _ => std::path::Path::new("."),
+        };
+        std::fs::File::open(parent)?.sync_all()?;
+    }
+    #[cfg(not(unix))]
+    {
+        let _ = path;
+    }
+    Ok(())
+}
+
 /// How a shard run is wired to the world (all optional — the defaults are
 /// a plain single-process sweep).
 #[derive(Debug, Clone, Default)]
@@ -62,6 +84,10 @@ pub struct FleetOptions {
     /// Serve live progress on `127.0.0.1:port` while the sweep runs
     /// (port 0 = OS-assigned).
     pub status_port: Option<u16>,
+    /// After the status server binds, atomically write its actual address
+    /// (`127.0.0.1:port`) to this file — the handshake that lets a
+    /// supervisor ([`launch`]) find a child whose port was OS-assigned.
+    pub status_addr_file: Option<PathBuf>,
 }
 
 /// What a finished shard run reports back.
@@ -184,13 +210,20 @@ pub fn run_shard(spec: &CampaignSpec, opts: &FleetOptions) -> Result<ShardRun> {
     let label = format!("shard {}", plan.label());
     let board = Arc::new(StatusBoard::new(&label, spec.seed, &owned));
     for o in &recovered {
-        board.record(o);
+        board.record_resumed(o);
     }
     let _server: Option<StatusServer> = match opts.status_port {
         None => None,
         Some(port) => {
             let server = StatusServer::spawn(port, board.clone())?;
             eprintln!("status endpoint: http://{}/ (and /json)", server.addr());
+            if let Some(path) = &opts.status_addr_file {
+                // Write-then-rename: the supervisor polls for this file
+                // and must never observe a half-written address.
+                let tmp = path.with_extension("addr-tmp");
+                std::fs::write(&tmp, format!("{}\n", server.addr()))?;
+                std::fs::rename(&tmp, path)?;
+            }
             Some(server)
         }
     };

@@ -11,12 +11,19 @@
 //! The endpoint is observational only: it reads atomics and a small mutex-
 //! guarded rollup, never touches the deterministic report path, and dies
 //! with the sweep.
+//!
+//! Snapshots carry what a *supervisor* needs, not just an operator: the
+//! shard label, the `executed`/`resumed` split (how much of the progress
+//! was recovered from the journal vs run in this process), and a
+//! monotonically increasing `heartbeat` counter — one tick per progress
+//! event — that [`crate::fleet::launch`] watches for stall detection.
+//! [`http_get`] is the matching std-only client half.
 
 use std::collections::BTreeMap;
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::campaign::shard::TaskOutcome;
 use crate::campaign::CampaignTask;
@@ -39,6 +46,15 @@ pub struct StatusBoard {
     done: AtomicUsize,
     passed: AtomicUsize,
     failed: AtomicUsize,
+    /// Of `done`, how many were recovered from the journal (not executed
+    /// in this process). A supervisor reads the split to tell "this
+    /// relaunch is skipping finished work" from "it is redoing it".
+    resumed: AtomicUsize,
+    /// Bumped on every progress event. Strictly monotonic while the sweep
+    /// advances, frozen when it does not — the signal a supervisor's stall
+    /// detector compares across polls (a wedged worker pool stops beating
+    /// even while this serving thread stays healthy).
+    heartbeat: AtomicU64,
     cells: Mutex<BTreeMap<(String, String), Cell>>,
 }
 
@@ -60,13 +76,28 @@ impl StatusBoard {
             done: AtomicUsize::new(0),
             passed: AtomicUsize::new(0),
             failed: AtomicUsize::new(0),
+            resumed: AtomicUsize::new(0),
+            heartbeat: AtomicU64::new(0),
             cells: Mutex::new(cells),
         }
     }
 
-    /// Record one finished (or journal-recovered) task.
+    /// Record one task executed in this process.
     pub fn record(&self, outcome: &TaskOutcome) {
+        self.record_inner(outcome, false);
+    }
+
+    /// Record one task recovered from the journal (counted as done, and
+    /// in the `resumed` split).
+    pub fn record_resumed(&self, outcome: &TaskOutcome) {
+        self.record_inner(outcome, true);
+    }
+
+    fn record_inner(&self, outcome: &TaskOutcome, resumed: bool) {
         self.done.fetch_add(1, Ordering::SeqCst);
+        if resumed {
+            self.resumed.fetch_add(1, Ordering::SeqCst);
+        }
         if outcome.pass {
             self.passed.fetch_add(1, Ordering::SeqCst);
         } else {
@@ -76,12 +107,15 @@ impl StatusBoard {
             outcome.app.label().to_string(),
             outcome.strategy.label().to_string(),
         );
-        let mut cells = self.cells.lock().unwrap();
-        let cell = cells.entry(key).or_default();
-        cell.done += 1;
-        if outcome.pass {
-            cell.passed += 1;
+        {
+            let mut cells = self.cells.lock().unwrap();
+            let cell = cells.entry(key).or_default();
+            cell.done += 1;
+            if outcome.pass {
+                cell.passed += 1;
+            }
         }
+        self.heartbeat.fetch_add(1, Ordering::SeqCst);
     }
 
     /// Human-readable snapshot (the `GET /` body).
@@ -89,9 +123,14 @@ impl StatusBoard {
         let done = self.done.load(Ordering::SeqCst);
         let passed = self.passed.load(Ordering::SeqCst);
         let failed = self.failed.load(Ordering::SeqCst);
+        let resumed = self.resumed.load(Ordering::SeqCst);
         let mut s = format!(
-            "SEDAR fleet {} seed {}\ndone {done}/{} (pass {passed}, fail {failed})\n",
-            self.label, self.seed, self.total
+            "SEDAR fleet {} seed {}\ndone {done}/{} (pass {passed}, fail {failed}; \
+             {resumed} resumed, {} executed)\n",
+            self.label,
+            self.seed,
+            self.total,
+            done.saturating_sub(resumed)
         );
         for ((app, strategy), cell) in self.cells.lock().unwrap().iter() {
             s.push_str(&format!(
@@ -102,11 +141,16 @@ impl StatusBoard {
         s
     }
 
-    /// Machine-readable snapshot (the `GET /json` body).
+    /// Machine-readable snapshot (the `GET /json` body). Scalar fields
+    /// come before `cells`, so a key's first occurrence in the document is
+    /// always the shard-level value (the supervisor's field extractor
+    /// relies on this).
     pub fn json_snapshot(&self) -> String {
         let done = self.done.load(Ordering::SeqCst);
         let passed = self.passed.load(Ordering::SeqCst);
         let failed = self.failed.load(Ordering::SeqCst);
+        let resumed = self.resumed.load(Ordering::SeqCst);
+        let heartbeat = self.heartbeat.load(Ordering::SeqCst);
         let cells: Vec<String> = self
             .cells
             .lock()
@@ -125,10 +169,12 @@ impl StatusBoard {
             .collect();
         format!(
             "{{\"fleet\":\"{}\",\"seed\":{},\"total\":{},\"done\":{done},\
-             \"passed\":{passed},\"failed\":{failed},\"cells\":[{}]}}",
+             \"passed\":{passed},\"failed\":{failed},\"executed\":{},\
+             \"resumed\":{resumed},\"heartbeat\":{heartbeat},\"cells\":[{}]}}",
             json_escape(&self.label),
             self.seed,
             self.total,
+            done.saturating_sub(resumed),
             cells.join(",")
         )
     }
@@ -199,30 +245,79 @@ impl Drop for StatusServer {
     }
 }
 
+/// Hard cap on request bytes read before giving up on finding the end of
+/// the request line (a client streaming garbage must not pin the thread).
+const MAX_REQUEST: usize = 8 * 1024;
+
 fn serve_one(mut stream: TcpStream, board: &StatusBoard) -> std::io::Result<()> {
-    use std::io::{Read, Write};
+    use std::io::{ErrorKind, Read, Write};
     stream.set_nonblocking(false)?;
     stream.set_read_timeout(Some(Duration::from_millis(500)))?;
-    let mut buf = [0u8; 1024];
-    let n = stream.read(&mut buf).unwrap_or(0);
-    let request_line = String::from_utf8_lossy(&buf[..n]);
-    let want_json = request_line
+    // Read until the request line is complete: a request split across TCP
+    // segments must parse exactly like one that arrives whole (a single
+    // fixed-size read() used to misroute segmented requests to the text
+    // page). Bounded in bytes AND wall time — the accept loop serves
+    // connections sequentially, so a byte-dribbling client must not pin
+    // the endpoint (and thereby starve a supervisor's stall detector).
+    let deadline = Instant::now() + Duration::from_secs(2);
+    let mut buf: Vec<u8> = Vec::with_capacity(256);
+    let mut chunk = [0u8; 512];
+    while !buf.contains(&b'\n') && buf.len() < MAX_REQUEST && Instant::now() < deadline {
+        match stream.read(&mut chunk) {
+            Ok(0) => break,
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => break,
+            Err(e) => return Err(e),
+        }
+    }
+    let text = String::from_utf8_lossy(&buf);
+    let target = text
         .lines()
         .next()
-        .map(|l| l.split_whitespace().nth(1).unwrap_or("/") == "/json")
-        .unwrap_or(false);
-    let (content_type, body) = if want_json {
-        ("application/json", board.json_snapshot())
-    } else {
-        ("text/plain; charset=utf-8", board.text_snapshot())
+        .and_then(|l| l.split_whitespace().nth(1))
+        .unwrap_or("/");
+    // Route on the path component alone: `/json?since=3` is still /json.
+    let path = target.split(['?', '#']).next().unwrap_or("/");
+    let (status, content_type, body) = match path {
+        "/" => ("200 OK", "text/plain; charset=utf-8", board.text_snapshot()),
+        "/json" => ("200 OK", "application/json", board.json_snapshot()),
+        other => (
+            "404 Not Found",
+            "text/plain; charset=utf-8",
+            format!("no such path: {other} (try / or /json)\n"),
+        ),
     };
     let response = format!(
-        "HTTP/1.0 200 OK\r\nContent-Type: {content_type}\r\n\
+        "HTTP/1.0 {status}\r\nContent-Type: {content_type}\r\n\
          Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
         body.len()
     );
     stream.write_all(response.as_bytes())?;
     stream.flush()
+}
+
+/// Minimal std-only HTTP GET against a status endpoint: one HTTP/1.0
+/// request, the whole response read to EOF, the body returned iff the
+/// status line says 200. The fleet supervisor's poll path and the tests
+/// share this helper.
+pub fn http_get(addr: SocketAddr, path: &str, timeout: Duration) -> std::io::Result<String> {
+    use std::io::{Read, Write};
+    let mut conn = TcpStream::connect_timeout(&addr, timeout)?;
+    conn.set_read_timeout(Some(timeout))?;
+    conn.set_write_timeout(Some(timeout))?;
+    conn.write_all(format!("GET {path} HTTP/1.0\r\nConnection: close\r\n\r\n").as_bytes())?;
+    let mut raw = String::new();
+    conn.read_to_string(&mut raw)?;
+    let (head, body) = raw
+        .split_once("\r\n\r\n")
+        .ok_or_else(|| std::io::Error::other("malformed HTTP response (no header break)"))?;
+    let status_line = head.lines().next().unwrap_or("");
+    if status_line.split_whitespace().nth(1) != Some("200") {
+        return Err(std::io::Error::other(format!(
+            "HTTP status not 200: {status_line}"
+        )));
+    }
+    Ok(body.to_string())
 }
 
 #[cfg(test)]
@@ -272,6 +367,26 @@ mod tests {
     }
 
     #[test]
+    fn resumed_split_and_heartbeat_advance() {
+        let (board, tasks) = sample_board();
+        board.record_resumed(&fake_outcome(&tasks[0], true));
+        let json = board.json_snapshot();
+        assert!(json.contains("\"done\":1"), "got: {json}");
+        assert!(json.contains("\"resumed\":1"), "got: {json}");
+        assert!(json.contains("\"executed\":0"), "got: {json}");
+        assert!(json.contains("\"heartbeat\":1"), "got: {json}");
+        board.record(&fake_outcome(&tasks[1], true));
+        board.record(&fake_outcome(&tasks[2], false));
+        let json = board.json_snapshot();
+        assert!(json.contains("\"resumed\":1"), "got: {json}");
+        assert!(json.contains("\"executed\":2"), "got: {json}");
+        // One tick per progress event, resumed or executed.
+        assert!(json.contains("\"heartbeat\":3"), "got: {json}");
+        let text = board.text_snapshot();
+        assert!(text.contains("1 resumed, 2 executed"), "got: {text}");
+    }
+
+    #[test]
     fn endpoint_serves_text_and_json() {
         use std::io::{Read, Write};
         let (board, tasks) = sample_board();
@@ -295,5 +410,51 @@ mod tests {
         assert!(json.contains("application/json"), "got: {json}");
         assert!(json.contains("\"done\":1"), "got: {json}");
         drop(server); // must join cleanly, not hang
+    }
+
+    #[test]
+    fn segmented_requests_query_strings_and_404s() {
+        use std::io::{Read, Write};
+        let (board, tasks) = sample_board();
+        let board = Arc::new(board);
+        board.record(&fake_outcome(&tasks[0], true));
+        let server = StatusServer::spawn(0, board.clone()).unwrap();
+
+        // A request split across TCP segments must parse like a whole one
+        // (the old single-read parser fell back to the text page here).
+        let mut conn = TcpStream::connect(server.addr()).unwrap();
+        conn.write_all(b"GET /js").unwrap();
+        conn.flush().unwrap();
+        std::thread::sleep(Duration::from_millis(30));
+        conn.write_all(b"on HTTP/1.0\r\n\r\n").unwrap();
+        let mut out = String::new();
+        conn.read_to_string(&mut out).unwrap();
+        assert!(out.contains("application/json"), "got: {out}");
+        assert!(out.contains("\"done\":1"), "got: {out}");
+
+        let fetch = |path: &str| -> String {
+            let mut conn = TcpStream::connect(server.addr()).unwrap();
+            conn.write_all(format!("GET {path} HTTP/1.0\r\n\r\n").as_bytes())
+                .unwrap();
+            let mut out = String::new();
+            conn.read_to_string(&mut out).unwrap();
+            out
+        };
+
+        // The path component routes; query strings must not demote /json
+        // to the text fallback.
+        let json = fetch("/json?since=3");
+        assert!(json.contains("application/json"), "got: {json}");
+        assert!(json.contains("\"heartbeat\":"), "got: {json}");
+
+        // Unknown paths are a 404, not silently the text page.
+        let missing = fetch("/nope");
+        assert!(missing.starts_with("HTTP/1.0 404"), "got: {missing}");
+
+        // The std-only client helper round-trips against the same server.
+        let body = http_get(server.addr(), "/json", Duration::from_secs(2)).unwrap();
+        assert!(body.starts_with('{') && body.contains("\"done\":1"), "got: {body}");
+        assert!(http_get(server.addr(), "/nope", Duration::from_secs(2)).is_err());
+        drop(server);
     }
 }

@@ -8,6 +8,9 @@
 //!                [--report md|csv] [--xla] [--run-dir DIR] [--quiet]
 //!                [--shard i/N] [--out shard.bin] [--journal sweep.journal]
 //!                [--status-port 8080] [--report-out report.md]
+//! sedar fleet launch --shards N [--jobs J] [--seed S] [--filter …] [--dir D]
+//!                [--max-restarts R] [--stall-secs T] [--poll-ms P]
+//!                [--report md|csv] [--report-out report.md] [--quiet]
 //! sedar merge    shard1.bin shard2.bin … [--report md|csv] [--report-out report.md]
 //!                [--allow-partial]
 //! sedar catalog                                           # print Table 2 (all 64 rows)
@@ -46,6 +49,7 @@ fn dispatch(args: &Args) -> Result<()> {
     match args.command.as_deref() {
         Some("run") => cmd_run(args),
         Some("campaign") => cmd_campaign(args),
+        Some("fleet") => cmd_fleet(args),
         Some("merge") => cmd_merge(args),
         Some("catalog") => cmd_catalog(),
         Some("model") => cmd_model(args),
@@ -70,6 +74,11 @@ commands:
             × {matmul, jacobi, sw} × {detect-only, sys-ckpt, user-ckpt},
             fanned over a worker pool, graded against the §4.1 oracle;
             optionally as one shard of a multi-process fleet
+  fleet     drive a whole multi-process fleet with one command:
+            `fleet launch` spawns N shard processes, monitors their status
+            endpoints and exit codes, relaunches any shard that dies or
+            stalls (journal resume skips finished tasks), and auto-merges
+            the artifacts into the final report
   merge     combine shard artifacts written by `campaign --shard i/N --out F`
             into the full sweep's report (byte-identical to a single-process
             run with the same --seed)
@@ -105,8 +114,30 @@ fleet flags (sharded / resumable / observable sweeps):
                    resumes, skipping every finished task
   --status-port P  serve live progress on http://127.0.0.1:P/ (text) and
                    /json while the sweep runs (0 = OS-assigned)
+  --status-addr-file F  atomically write the endpoint's actual address to F
+                   once it binds (implies --status-port 0 if no port was
+                   given) — how `fleet launch` discovers its children
   --report-out F   also write the deterministic report to F (handy for
                    byte-diffing sharded vs single-process runs)
+
+fleet launch flags (one-command self-healing fleets):
+  --shards N       spawn N `campaign --shard i/N` child processes, each
+                   with a journal, artifact and status endpoint under the
+                   run directory (default 2)
+  --jobs J         worker threads per shard (default: the machine's
+                   default budget split evenly across shards)
+  --seed S / --filter F / --scenario K   as for campaign (forwarded)
+  --dir D          run directory for journals, artifacts, logs, pid and
+                   addr files (default runs/fleet-<pid>)
+  --max-restarts R relaunch budget per shard; a shard that dies or stalls
+                   is relaunched (resuming from its journal) at most R
+                   times before the launch fails (default 3)
+  --stall-secs T   no status heartbeat advance for T seconds counts as a
+                   stall -> kill + relaunch; must exceed the slowest
+                   single task (default 300)
+  --poll-ms P      supervisor poll cadence (default 200)
+  --report FMT / --report-out F          as for campaign (merged report)
+  --quiet          suppress the live aggregate progress line
 
 merge flags:
   --report FMT     md (default) or csv
@@ -117,7 +148,7 @@ bench flags:
   --json           emit the sedar-bench/1 JSON document on stdout (tables
                    are suppressed; progress goes to stderr)
   --out FILE       write the JSON document to FILE instead of stdout
-                   (how BENCH_pr3.json is produced)
+                   (how the committed BENCH_pr<N>.json files are produced)
   --quick          CI-scale sizes/iterations (also: SEDAR_BENCH_QUICK=1)
   --no-campaign    skip the end-to-end campaign section (the slow one)
   --jobs N         campaign worker threads (default: as for campaign)
@@ -227,12 +258,16 @@ fn cmd_campaign(args: &Args) -> Result<()> {
         journal_path: args.get("journal").map(Into::into),
         artifact_path: args.get("out").map(Into::into),
         status_port: match args.get("status-port") {
-            None => None,
+            // `--status-addr-file` without an explicit port implies an
+            // OS-assigned one (the supervisor's handshake needs nothing
+            // more).
+            None => args.get("status-addr-file").map(|_| 0),
             Some(p) => Some(
                 p.parse()
                     .map_err(|e| SedarError::Config(format!("--status-port: {e}")))?,
             ),
         },
+        status_addr_file: args.get("status-addr-file").map(Into::into),
     };
 
     let mut spec = CampaignSpec::new(args.u64_or("seed", 42)?);
@@ -271,6 +306,54 @@ fn cmd_campaign(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_fleet(args: &Args) -> Result<()> {
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("launch") => cmd_fleet_launch(args),
+        Some(other) => Err(SedarError::Config(format!(
+            "unknown fleet subcommand '{other}' (try 'sedar fleet launch --shards 2')"
+        ))),
+        None => Err(SedarError::Config(
+            "usage: sedar fleet launch --shards N [--jobs J --seed S --filter … --dir D]".into(),
+        )),
+    }
+}
+
+fn cmd_fleet_launch(args: &Args) -> Result<()> {
+    let report_fmt = args.get_or("report", "md");
+    if !matches!(report_fmt, "md" | "csv") {
+        return Err(SedarError::Config(format!(
+            "unknown report '{report_fmt}' (md|csv)"
+        )));
+    }
+    let opts = sedar::fleet::launch::LaunchOptions {
+        shards: args.usize_or("shards", 2)?,
+        jobs: args.usize_or("jobs", 0)?,
+        seed: args.u64_or("seed", 42)?,
+        filter: args.get("filter").map(String::from),
+        scenario: args.get("scenario").map(String::from),
+        dir: match args.get("dir") {
+            Some(d) => d.into(),
+            None => format!("runs/fleet-{}", std::process::id()).into(),
+        },
+        max_restarts: args.usize_or("max-restarts", 3)?,
+        stall_timeout: std::time::Duration::from_secs(args.u64_or("stall-secs", 300)?),
+        poll_interval: std::time::Duration::from_millis(args.u64_or("poll-ms", 200)?.max(10)),
+        bin: None,
+        quiet: args.has("quiet"),
+    };
+    let launch = sedar::fleet::launch::run_launch(&opts)?;
+    emit_report(args, report_fmt, &launch.report)?;
+    println!("\n{}", launch.report.summary_line());
+    println!("{}", launch.summary());
+    if !launch.report.verdict() {
+        return Err(SedarError::Config(format!(
+            "{} campaign task(s) diverged from the oracle",
+            launch.report.failed()
+        )));
+    }
+    Ok(())
+}
+
 /// Print the report in the chosen format and honor `--report-out` (the
 /// deterministic markdown report, byte-diffable across shardings).
 fn emit_report(args: &Args, report_fmt: &str, report: &CampaignReport) -> Result<()> {
@@ -291,14 +374,7 @@ fn cmd_merge(args: &Args) -> Result<()> {
             "unknown report '{report_fmt}' (md|csv)"
         )));
     }
-    // The CLI grammar binds the token after a `--switch` as its value, so
-    // `merge --allow-partial s1.bin s2.bin` parses s1.bin as the switch's
-    // value — reclaim it as a shard path instead of silently dropping it.
-    let mut paths: Vec<&str> = Vec::new();
-    if let Some(v) = args.get("allow-partial") {
-        paths.push(v);
-    }
-    paths.extend(args.positional.iter().map(|s| s.as_str()));
+    let paths: Vec<&str> = args.positional.iter().map(|s| s.as_str()).collect();
     if paths.is_empty() {
         return Err(SedarError::Config(
             "merge: name at least one shard artifact (sedar merge s1.bin s2.bin …)".into(),

@@ -1,0 +1,157 @@
+//! End-to-end proof of the self-healing fleet driver: a shard process
+//! SIGKILLed mid-sweep is relaunched by `sedar fleet launch`, resumes from
+//! its journal (skipping every task that finished before the kill), and
+//! the auto-merged final report is **byte-identical** to the
+//! single-process `sedar campaign` run with the same `--seed` — SEDAR's
+//! detection + automatic-recovery discipline applied to the validation
+//! campaign itself.
+//!
+//! Everything here goes through the real CLI binary (driver and children
+//! alike), so the test covers the spawn/monitor/relaunch/merge path the
+//! operator actually runs — not a library approximation of it.
+#![cfg(unix)]
+
+use std::path::PathBuf;
+use std::process::{Command, Stdio};
+use std::time::{Duration, Instant};
+
+/// 16 matmul × sys-ckpt tasks: 8 per shard in a 2-way split — enough that
+/// the kill below always lands mid-slice (the watcher fires after the
+/// *first* journaled outcome, leaving 7 tasks of window).
+const FILTER: &str = "app=matmul,strategy=sys,scenario=1-16";
+const SEED: &str = "11";
+
+/// Journal bytes before the first outcome record: 8 bytes of framing plus
+/// the 40-byte sweep-identity header (see `fleet::journal`).
+const JOURNAL_HEADER_LEN: u64 = 48;
+
+fn bin() -> &'static str {
+    env!("CARGO_BIN_EXE_sedar")
+}
+
+fn tdir() -> PathBuf {
+    std::env::temp_dir().join(format!(
+        "sedar-fleet-launch-{}-{:?}",
+        std::process::id(),
+        std::thread::current().id()
+    ))
+}
+
+#[test]
+fn killed_shard_is_relaunched_and_merged_report_is_byte_identical() {
+    let dir = tdir();
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // Reference: the single-process CLI run with the same seed + filter.
+    let ref_md = dir.join("ref.md");
+    let status = Command::new(bin())
+        .args(["campaign", "--seed", SEED, "--filter", FILTER, "--quiet"])
+        .args(["--jobs", "2"])
+        .arg("--report-out")
+        .arg(&ref_md)
+        .arg("--run-dir")
+        .arg(dir.join("ref-run"))
+        .stdout(Stdio::null())
+        .stderr(Stdio::null())
+        .status()
+        .unwrap();
+    assert!(status.success(), "single-process reference run failed");
+
+    // The fleet: 2 shards under one run directory, driven by the real
+    // supervisor. --jobs 1 keeps each shard's slice strictly sequential so
+    // the journal length tracks progress one task at a time.
+    let fleet_dir = dir.join("fleet");
+    let merged_md = dir.join("merged.md");
+    let driver_stdout = dir.join("driver.stdout");
+    let driver_stderr = dir.join("driver.stderr");
+    let mut driver = Command::new(bin())
+        .args(["fleet", "launch", "--shards", "2", "--jobs", "1"])
+        .args(["--seed", SEED, "--filter", FILTER, "--poll-ms", "25", "--quiet"])
+        .arg("--dir")
+        .arg(&fleet_dir)
+        .arg("--report-out")
+        .arg(&merged_md)
+        .stdout(Stdio::from(std::fs::File::create(&driver_stdout).unwrap()))
+        .stderr(Stdio::from(std::fs::File::create(&driver_stderr).unwrap()))
+        .spawn()
+        .unwrap();
+
+    // Watch shard 1's journal; the per-record sync means a growing file is
+    // a truthful progress signal. Once at least one outcome is durable,
+    // SIGKILL the shard process named by its pid file — exactly the
+    // failure the driver exists to heal.
+    let journal = fleet_dir.join("shard-1.journal");
+    let pidfile = fleet_dir.join("shard-1.pid");
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        assert!(
+            Instant::now() < deadline,
+            "shard 1 never journaled an outcome"
+        );
+        assert!(
+            driver.try_wait().unwrap().is_none(),
+            "driver exited before the kill landed"
+        );
+        let journaled = journal
+            .metadata()
+            .map(|m| m.len() > JOURNAL_HEADER_LEN)
+            .unwrap_or(false);
+        if journaled && pidfile.exists() {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    let pid = std::fs::read_to_string(&pidfile).unwrap().trim().to_string();
+    let killed = Command::new("kill").args(["-9", pid.as_str()]).status().unwrap();
+    assert!(killed.success(), "kill -9 {pid} failed");
+
+    let status = driver.wait().unwrap();
+    let stdout = std::fs::read_to_string(&driver_stdout).unwrap();
+    let stderr = std::fs::read_to_string(&driver_stderr).unwrap();
+    assert!(
+        status.success(),
+        "driver failed.\n-- stdout --\n{stdout}\n-- stderr --\n{stderr}"
+    );
+
+    // Recovery proof 1: the supervisor noticed the death and relaunched.
+    assert!(
+        stderr.contains("relaunch"),
+        "no relaunch notice in driver stderr:\n{stderr}"
+    );
+    assert!(
+        stdout.contains("1 restart(s)"),
+        "launch summary does not report the restart:\n{stdout}"
+    );
+
+    // Recovery proof 2: the relaunched incarnation *resumed* — its shard
+    // summary line counts journal-recovered tasks it did not re-execute.
+    let shard_log = std::fs::read_to_string(fleet_dir.join("shard-1.log")).unwrap();
+    let resumed = shard_log
+        .lines()
+        .filter_map(|l| {
+            let prefix = l.split(" resumed from journal").next()?;
+            if prefix == l {
+                return None; // marker absent on this line
+            }
+            prefix.rsplit(' ').next()?.parse::<usize>().ok()
+        })
+        .max()
+        .unwrap_or(0);
+    assert!(
+        resumed >= 1,
+        "relaunched shard did not resume from its journal:\n{shard_log}"
+    );
+
+    // The headline invariant: the auto-merged report is byte-identical to
+    // the single-process run's.
+    let reference = std::fs::read(&ref_md).unwrap();
+    let merged = std::fs::read(&merged_md).unwrap();
+    assert!(!reference.is_empty());
+    assert_eq!(
+        reference, merged,
+        "fleet-launch merged report differs from the single-process run"
+    );
+
+    let _ = std::fs::remove_dir_all(&dir);
+}

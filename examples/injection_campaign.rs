@@ -50,7 +50,8 @@ fn main() -> sedar::Result<()> {
         return Ok(());
     }
 
-    // Full campaign: matmul × sys-ckpt × all 64 scenarios, in parallel.
+    // Full campaign: matmul × sys-ckpt × all 64 scenarios × both
+    // collective implementations (128 worlds), in parallel.
     let mut spec = CampaignSpec::new(0xC0FFEE);
     spec.apply_filter("app=matmul,strategy=sys")?;
     spec.jobs = CampaignSpec::default_jobs();

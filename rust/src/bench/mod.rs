@@ -11,8 +11,10 @@
 //!    (payloads are shared buffers: a send moves a reference);
 //! 3. **ckpt_frame** — single-pass checkpoint frame write/read MB/s by
 //!    codec (`Raw`, `Deflate(1)`, `Deflate(6)`);
-//! 4. **campaign** — end-to-end wall time of the 576-task injection sweep
-//!    (the system-level number everything above feeds).
+//! 4. **campaign** — end-to-end wall time of the 1152-task injection sweep
+//!    (64 scenarios × 3 apps × 3 strategies × 2 collectives modes — the
+//!    system-level number everything above feeds, and the sweep the
+//!    pooled-world arena keeps allocation-flat).
 //!
 //! `--json` renders the `sedar-bench/1` document
 //! ([`crate::report::benchkit::JsonReport`]); `--quick` (or
@@ -231,7 +233,8 @@ fn campaign_section(opts: &BenchOpts, jr: &mut JsonReport) -> Result<()> {
     spec.jobs = opts.jobs.max(1);
     spec.echo = false;
     if opts.quick {
-        // A representative slice: every strategy, one app, 8 scenarios.
+        // A representative slice: every strategy and both collectives
+        // modes, one app, 8 scenarios (48 worlds).
         spec.apply_filter("app=matmul,scenario=1-8")?;
     }
     spec.base.run_dir =

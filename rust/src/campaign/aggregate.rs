@@ -11,7 +11,7 @@ use crate::error::{FaultClass, Result, SedarError};
 use crate::report::Table;
 
 use super::shard::TaskOutcome;
-use super::validation_label;
+use super::{collective_label, validation_label};
 
 /// The aggregated result of a campaign.
 #[derive(Debug)]
@@ -100,23 +100,36 @@ impl CampaignReport {
         )
     }
 
-    /// Per-(app × strategy) rollup, in task order of first appearance.
+    /// Per-(app × strategy × collectives) rollup, in task order of first
+    /// appearance. The collectives axis gets its own rollup rows because
+    /// the detection-class census is exactly what differs between modes
+    /// (§4.2: FSC rows become TDC under native collectives) — folding both
+    /// modes into one row would hide the effect the axis exists to show.
     fn rollup(&self) -> Table {
-        let mut keys: Vec<(String, String)> = Vec::new();
+        let mut keys: Vec<(String, String, String)> = Vec::new();
         for o in &self.outcomes {
-            let k = (o.app.label().to_string(), o.strategy.label().to_string());
+            let k = (
+                o.app.label().to_string(),
+                o.strategy.label().to_string(),
+                collective_label(o.collectives).to_string(),
+            );
             if !keys.contains(&k) {
                 keys.push(k);
             }
         }
         let mut t = Table::new(&[
-            "app", "strategy", "tasks", "passed", "failed", "TDC", "FSC", "TOE", "CKPT", "latent",
+            "app", "strategy", "coll", "tasks", "passed", "failed", "TDC", "FSC", "TOE", "CKPT",
+            "latent",
         ]);
-        for (app, strategy) in keys {
+        for (app, strategy, coll) in keys {
             let cell: Vec<&TaskOutcome> = self
                 .outcomes
                 .iter()
-                .filter(|o| o.app.label() == app && o.strategy.label() == strategy)
+                .filter(|o| {
+                    o.app.label() == app
+                        && o.strategy.label() == strategy
+                        && collective_label(o.collectives) == coll
+                })
                 .collect();
             let by_class = |c: FaultClass| {
                 cell.iter()
@@ -127,6 +140,7 @@ impl CampaignReport {
             t.row(&[
                 app.clone(),
                 strategy.clone(),
+                coll.clone(),
                 cell.len().to_string(),
                 cell.iter().filter(|o| o.pass).count().to_string(),
                 cell.iter().filter(|o| !o.pass).count().to_string(),
@@ -144,7 +158,7 @@ impl CampaignReport {
     /// observed effect and site, recovery path, verdict).
     fn rows(&self) -> Table {
         let mut t = Table::new(&[
-            "task", "sc", "app", "strategy", "val", "faults", "observed", "site", "resume",
+            "task", "sc", "app", "strategy", "coll", "val", "faults", "observed", "site", "resume",
             "N_roll", "result", "verdict",
         ]);
         for o in &self.outcomes {
@@ -157,6 +171,7 @@ impl CampaignReport {
                 o.scenario_id.to_string(),
                 o.app.label().to_string(),
                 o.strategy.label().to_string(),
+                collective_label(o.collectives).to_string(),
                 validation_label(o.validation).to_string(),
                 o.faults.to_string(),
                 class,
@@ -228,6 +243,7 @@ mod tests {
             scenario_id: index as u32 + 1,
             app: CampaignApp::Matmul,
             strategy: Strategy::SysCkpt,
+            collectives: crate::config::CollectiveImpl::PointToPoint,
             validation: crate::detect::ValidationMode::Full,
             faults: 1,
             completed: true,

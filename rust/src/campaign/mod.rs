@@ -7,12 +7,13 @@
 //! This module makes that sweep a first-class subsystem:
 //!
 //! * [`CampaignSpec`] names the cross-product to run (scenarios × apps ×
-//!   strategies, plus the beyond-paper validation-mode and faults-per-cell
-//!   axes) and the base [`RunConfig`] every task derives from;
+//!   strategies × collective implementations, plus the beyond-paper
+//!   validation-mode and faults-per-cell axes) and the base [`RunConfig`]
+//!   every task derives from;
 //! * [`shard`] executes one task in an isolated `SedarRun` world, with a
 //!   deterministic per-task seed derived as
-//!   `hash(campaign_seed, scenario, app, strategy, validation, faults)` —
-//!   no wall-clock in any decision path;
+//!   `hash(campaign_seed, scenario, app, strategy, collectives,
+//!   validation, faults)` — no wall-clock in any decision path;
 //! * [`scheduler`] fans tasks across `jobs` workers pulling from a shared
 //!   queue, all worlds borrowing one injected engine handle
 //!   ([`crate::coordinator::RunDeps`]);
@@ -38,7 +39,7 @@ use std::sync::Arc;
 
 use crate::apps::spec::AppSpec;
 use crate::apps::{JacobiApp, MatmulApp, SwApp};
-use crate::config::{RunConfig, Strategy};
+use crate::config::{CollectiveImpl, RunConfig, Strategy};
 use crate::detect::ValidationMode;
 use crate::error::{Result, SedarError};
 use crate::util::prng::SplitMix64;
@@ -91,8 +92,9 @@ impl CampaignApp {
         CampaignApp::ALL.into_iter().find(|a| a.ordinal() == ord)
     }
 
-    /// The campaign-geometry instance: small enough that the full 576-task
-    /// sweep completes in minutes, large enough that every scenario is live
+    /// The campaign-geometry instance: small enough that the full
+    /// 1152-task sweep completes in minutes, large enough that every
+    /// scenario is live
     /// (matmul needs ≥ 2 workers for the catalog; jacobi/sw need mid-run
     /// checkpoints for the recovery strategies to differ).
     pub fn instantiate(self) -> Arc<dyn AppSpec> {
@@ -139,6 +141,29 @@ pub fn strategy_from_ordinal(ord: u64) -> Option<Strategy> {
     .find(|s| strategy_ordinal(*s) == ord)
 }
 
+/// Both collective implementations, in sweep order (§4.2: the functional
+/// point-to-point validation first, then the optimized native one).
+pub const COLLECTIVES: [CollectiveImpl; 2] =
+    [CollectiveImpl::PointToPoint, CollectiveImpl::Native];
+
+/// Stable collectives ordinal, folded into the per-task seed.
+pub fn collective_ordinal(c: CollectiveImpl) -> u64 {
+    match c {
+        CollectiveImpl::PointToPoint => 0,
+        CollectiveImpl::Native => 1,
+    }
+}
+
+/// Inverse of [`collective_ordinal`] (artifact decoding).
+pub fn collective_from_ordinal(ord: u64) -> Option<CollectiveImpl> {
+    COLLECTIVES.into_iter().find(|c| collective_ordinal(*c) == ord)
+}
+
+/// Short label for report rows and filters (see [`CollectiveImpl::label`]).
+pub fn collective_label(c: CollectiveImpl) -> &'static str {
+    c.label()
+}
+
 /// Stable validation-mode ordinal, folded into the per-task seed.
 pub fn validation_ordinal(v: ValidationMode) -> u64 {
     match v {
@@ -172,27 +197,32 @@ fn fold(h: u64, v: u64) -> u64 {
 }
 
 /// The per-task deterministic seed:
-/// `hash(campaign_seed, scenario_id, app, strategy, validation, faults)`.
+/// `hash(campaign_seed, scenario_id, app, strategy, collectives,
+/// validation, faults)`.
 ///
 /// Every task's workload generation, injection-site choice and run
 /// directory derive from this value alone — never from wall-clock time,
 /// scheduling order or *shard assignment* — which is what makes the
 /// aggregated report invariant under `--jobs` and under any `--shard i/N`
 /// split of the sweep.
+#[allow(clippy::too_many_arguments)]
 pub fn task_seed(
     campaign_seed: u64,
     scenario_id: u32,
     app: CampaignApp,
     strategy: Strategy,
+    collectives: CollectiveImpl,
     validation: ValidationMode,
     faults: u32,
 ) -> u64 {
-    // Domain tag bumped (…02) when the validation/faults axes joined the
-    // fold set, so cross-version artifacts can never alias.
-    let h = fold(campaign_seed, 0x5EDA_2C02);
+    // Domain tag bumped (…03) when the collectives axis joined the fold
+    // set (…02 added validation/faults), so cross-version artifacts can
+    // never alias.
+    let h = fold(campaign_seed, 0x5EDA_2C03);
     let h = fold(h, scenario_id as u64 + 1);
     let h = fold(h, app.ordinal() + 1);
     let h = fold(h, strategy_ordinal(strategy) + 1);
+    let h = fold(h, collective_ordinal(collectives) + 1);
     let h = fold(h, validation_ordinal(validation) + 1);
     fold(h, faults as u64)
 }
@@ -208,6 +238,11 @@ pub struct CampaignSpec {
     pub apps: Vec<CampaignApp>,
     /// Strategies to sweep (task order follows this list's order).
     pub strategies: Vec<Strategy>,
+    /// Collective implementations to sweep (§4.2 axis; default **both** —
+    /// the functional point-to-point validation and the optimized native
+    /// collectives, whose detection coverage differs at scatter/gather
+    /// roots). Narrow with `collectives=p2p` or `collectives=native`.
+    pub collectives: Vec<CollectiveImpl>,
     /// Validation modes to sweep (beyond-paper axis; default `[Full]`, the
     /// paper's §4.2 message validation — add `sha256` for RedMPI-style
     /// digest comparison cells).
@@ -228,7 +263,8 @@ pub struct CampaignSpec {
 }
 
 impl CampaignSpec {
-    /// The full sweep: 64 scenarios × 3 apps × 3 strategies.
+    /// The full sweep: 64 scenarios × 3 apps × 3 strategies × 2 collective
+    /// implementations = 1152 worlds.
     pub fn new(seed: u64) -> CampaignSpec {
         let base = RunConfig {
             // Generous rendezvous lapse: a loaded worker pool must never
@@ -243,6 +279,7 @@ impl CampaignSpec {
             jobs: 1,
             apps: CampaignApp::ALL.to_vec(),
             strategies: STRATEGIES.to_vec(),
+            collectives: COLLECTIVES.to_vec(),
             validations: vec![ValidationMode::Full],
             fault_counts: vec![1],
             scenarios: None,
@@ -261,11 +298,13 @@ impl CampaignSpec {
     }
 
     /// Apply one comma-separated filter string, e.g.
-    /// `app=matmul,strategy=sys,scenario=1-8,validation=sha256,faults=2`.
+    /// `app=matmul,strategy=sys,scenario=1-8,collectives=native,
+    /// validation=sha256,faults=2`.
     /// Repeated keys accumulate (`app=matmul,app=sw` keeps both).
     pub fn apply_filter(&mut self, filter: &str) -> Result<()> {
         let mut apps: Vec<CampaignApp> = Vec::new();
         let mut strategies: Vec<Strategy> = Vec::new();
+        let mut collectives: Vec<CollectiveImpl> = Vec::new();
         let mut validations: Vec<ValidationMode> = Vec::new();
         let mut fault_counts: Vec<u32> = Vec::new();
         let mut scenarios: Vec<u32> = Vec::new();
@@ -276,6 +315,7 @@ impl CampaignSpec {
             match key.trim() {
                 "app" => apps.push(CampaignApp::parse(value.trim())?),
                 "strategy" => strategies.push(Strategy::parse(value.trim())?),
+                "collectives" => collectives.push(CollectiveImpl::parse(value.trim())?),
                 "validation" => validations.push(ValidationMode::parse(value.trim())?),
                 "faults" => {
                     let k: u32 = value.trim().parse().map_err(|e| {
@@ -312,7 +352,7 @@ impl CampaignSpec {
                 other => {
                     return Err(SedarError::Config(format!(
                         "unknown filter key '{other}' \
-                         (app|strategy|scenario|validation|faults)"
+                         (app|strategy|scenario|collectives|validation|faults)"
                     )))
                 }
             }
@@ -322,6 +362,9 @@ impl CampaignSpec {
         }
         if !strategies.is_empty() {
             self.strategies = strategies;
+        }
+        if !collectives.is_empty() {
+            self.collectives = collectives;
         }
         if !validations.is_empty() {
             self.validations = validations;
@@ -337,9 +380,9 @@ impl CampaignSpec {
 }
 
 /// Materialize the task list: scenario-major, then app, strategy,
-/// validation and fault count, in the spec's declared order. Task indices
-/// are the positions in this list — the canonical aggregation order, and
-/// the key the fleet's shard plans partition over
+/// collectives, validation and fault count, in the spec's declared order.
+/// Task indices are the positions in this list — the canonical aggregation
+/// order, and the key the fleet's shard plans partition over
 /// ([`crate::fleet::plan::ShardPlan`]).
 pub fn build_tasks(spec: &CampaignSpec) -> Vec<CampaignTask> {
     let catalog: Vec<Scenario> = workfault::catalog(&campaign_matmul())
@@ -351,23 +394,35 @@ pub fn build_tasks(spec: &CampaignSpec) -> Vec<CampaignTask> {
         .collect();
     let cells = spec.apps.len()
         * spec.strategies.len()
+        * spec.collectives.len()
         * spec.validations.len()
         * spec.fault_counts.len();
     let mut tasks = Vec::with_capacity(catalog.len() * cells);
     for sc in &catalog {
         for &app in &spec.apps {
             for &strategy in &spec.strategies {
-                for &validation in &spec.validations {
-                    for &faults in &spec.fault_counts {
-                        tasks.push(CampaignTask {
-                            index: tasks.len(),
-                            scenario: sc.clone(),
-                            app,
-                            strategy,
-                            validation,
-                            faults,
-                            seed: task_seed(spec.seed, sc.id, app, strategy, validation, faults),
-                        });
+                for &collectives in &spec.collectives {
+                    for &validation in &spec.validations {
+                        for &faults in &spec.fault_counts {
+                            tasks.push(CampaignTask {
+                                index: tasks.len(),
+                                scenario: sc.clone(),
+                                app,
+                                strategy,
+                                collectives,
+                                validation,
+                                faults,
+                                seed: task_seed(
+                                    spec.seed,
+                                    sc.id,
+                                    app,
+                                    strategy,
+                                    collectives,
+                                    validation,
+                                    faults,
+                                ),
+                            });
+                        }
                     }
                 }
             }
@@ -383,12 +438,13 @@ pub fn build_tasks(spec: &CampaignSpec) -> Vec<CampaignTask> {
 /// and `--journal` can refuse to mix different sweeps even when seed and
 /// task counts coincide.
 pub fn sweep_fingerprint(seed: u64, tasks: &[CampaignTask]) -> u64 {
-    let mut h = fold(seed, 0x5EDA_F1E7);
+    let mut h = fold(seed, 0x5EDA_F1E8);
     for t in tasks {
         h = fold(h, t.index as u64 + 1);
         h = fold(h, t.scenario.id as u64 + 1);
         h = fold(h, t.app.ordinal() + 1);
         h = fold(h, strategy_ordinal(t.strategy) + 1);
+        h = fold(h, collective_ordinal(t.collectives) + 1);
         h = fold(h, validation_ordinal(t.validation) + 1);
         h = fold(h, t.faults as u64);
     }
@@ -410,6 +466,7 @@ mod tests {
             scenario_id,
             app,
             strategy,
+            CollectiveImpl::PointToPoint,
             ValidationMode::Full,
             1,
         )
@@ -422,7 +479,8 @@ mod tests {
         assert_ne!(base, seed_of(42, 2, CampaignApp::Matmul, Strategy::SysCkpt));
         assert_ne!(base, seed_of(42, 1, CampaignApp::Jacobi, Strategy::SysCkpt));
         assert_ne!(base, seed_of(42, 1, CampaignApp::Matmul, Strategy::UserCkpt));
-        // The beyond-paper axes are part of the fold set too.
+        // The collectives and beyond-paper axes are part of the fold set
+        // too.
         assert_ne!(
             base,
             task_seed(
@@ -430,6 +488,19 @@ mod tests {
                 1,
                 CampaignApp::Matmul,
                 Strategy::SysCkpt,
+                CollectiveImpl::Native,
+                ValidationMode::Full,
+                1
+            )
+        );
+        assert_ne!(
+            base,
+            task_seed(
+                42,
+                1,
+                CampaignApp::Matmul,
+                Strategy::SysCkpt,
+                CollectiveImpl::PointToPoint,
                 ValidationMode::Sha256,
                 1
             )
@@ -441,6 +512,7 @@ mod tests {
                 1,
                 CampaignApp::Matmul,
                 Strategy::SysCkpt,
+                CollectiveImpl::PointToPoint,
                 ValidationMode::Full,
                 2
             )
@@ -450,36 +522,45 @@ mod tests {
     }
 
     #[test]
-    fn full_sweep_is_576_tasks() {
+    fn full_sweep_is_1152_tasks() {
         let tasks = build_tasks(&CampaignSpec::new(7));
-        assert_eq!(tasks.len(), 64 * 3 * 3);
-        // Indices are dense and ordered.
+        assert_eq!(tasks.len(), 64 * 3 * 3 * 2);
+        // Indices are dense and ordered, and both collective modes appear.
         for (i, t) in tasks.iter().enumerate() {
             assert_eq!(t.index, i);
+        }
+        for c in COLLECTIVES {
+            assert!(tasks.iter().any(|t| t.collectives == c), "missing {c:?}");
         }
     }
 
     #[test]
     fn filters_narrow_the_sweep() {
         let mut spec = CampaignSpec::new(7);
-        spec.apply_filter("app=matmul,strategy=sys,scenario=1-8").unwrap();
+        spec.apply_filter("app=matmul,strategy=sys,scenario=1-8,collectives=p2p").unwrap();
         let tasks = build_tasks(&spec);
         assert_eq!(tasks.len(), 8);
         assert!(tasks.iter().all(|t| t.app == CampaignApp::Matmul));
         assert!(tasks.iter().all(|t| t.strategy == Strategy::SysCkpt));
+        assert!(tasks.iter().all(|t| t.collectives == CollectiveImpl::PointToPoint));
         assert!(tasks.iter().all(|t| t.scenario.id <= 8));
+        // Without the collectives term the same filter doubles: both modes.
+        let mut both = CampaignSpec::new(7);
+        both.apply_filter("app=matmul,strategy=sys,scenario=1-8").unwrap();
+        assert_eq!(build_tasks(&both).len(), 16);
     }
 
     #[test]
     fn beyond_paper_axes_widen_the_sweep() {
         let mut spec = CampaignSpec::new(7);
         spec.apply_filter(
-            "app=matmul,strategy=sys,scenario=1-4,\
+            "app=matmul,strategy=sys,scenario=1-4,collectives=p2p,\
              validation=full,validation=sha256,faults=1,faults=2",
         )
         .unwrap();
         let tasks = build_tasks(&spec);
-        // 4 scenarios × 1 app × 1 strategy × 2 validations × 2 fault counts.
+        // 4 scenarios × 1 app × 1 strategy × 1 collectives × 2 validations
+        // × 2 fault counts.
         assert_eq!(tasks.len(), 16);
         assert!(tasks.iter().any(|t| t.validation == ValidationMode::Sha256));
         assert!(tasks.iter().any(|t| t.faults == 2));
@@ -498,6 +579,7 @@ mod tests {
         assert!(spec.apply_filter("color=red").is_err());
         assert!(spec.apply_filter("scenario=x").is_err());
         assert!(spec.apply_filter("scenario=8-1").is_err());
+        assert!(spec.apply_filter("collectives=mpi").is_err());
         assert!(spec.apply_filter("validation=crc").is_err());
         assert!(spec.apply_filter("faults=0").is_err());
         assert!(spec.apply_filter("faults=99").is_err());
@@ -517,6 +599,8 @@ mod tests {
         // Same seed, same task COUNT, different cells — the drift the
         // fingerprint exists to catch.
         assert_ne!(base, tasks_of(42, "scenario=13-24"));
+        assert_ne!(base, tasks_of(42, "scenario=1-12,collectives=native"));
+        assert_ne!(base, tasks_of(42, "scenario=1-12,collectives=p2p"));
         assert_ne!(base, tasks_of(42, "scenario=1-12,validation=sha256"));
         assert_ne!(base, tasks_of(42, "scenario=1-12,faults=2"));
     }
@@ -537,8 +621,12 @@ mod tests {
         for v in [ValidationMode::Full, ValidationMode::Sha256] {
             assert_eq!(validation_from_ordinal(validation_ordinal(v)), Some(v));
         }
+        for c in COLLECTIVES {
+            assert_eq!(collective_from_ordinal(collective_ordinal(c)), Some(c));
+        }
         assert_eq!(CampaignApp::from_ordinal(99), None);
         assert_eq!(strategy_from_ordinal(99), None);
         assert_eq!(validation_from_ordinal(99), None);
+        assert_eq!(collective_from_ordinal(99), None);
     }
 }

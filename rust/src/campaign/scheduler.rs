@@ -98,13 +98,14 @@ pub fn run_tasks(
                     let finished = done.fetch_add(1, Ordering::SeqCst) + 1;
                     if echo {
                         eprintln!(
-                            "[w{w}] {:>3}/{} t{:03} sc{:02} {:>6} × {:<11} → {}",
+                            "[w{w}] {:>4}/{} t{:04} sc{:02} {:>6} × {:<11} {:<6} → {}",
                             finished,
                             tasks.len(),
                             task.index,
                             task.scenario.id,
                             task.app.label(),
                             task.strategy.label(),
+                            task.collectives.label(),
                             if out.pass { "OK" } else { "MISMATCH" }
                         );
                     }

@@ -20,7 +20,7 @@
 use std::path::Path;
 use std::time::Duration;
 
-use crate::config::{RunConfig, Strategy};
+use crate::config::{CollectiveImpl, RunConfig, Strategy};
 use crate::coordinator::{RunDeps, RunOutcome, SedarRun};
 use crate::detect::ValidationMode;
 use crate::error::FaultClass;
@@ -31,7 +31,8 @@ use crate::workfault::{self, Scenario};
 
 use super::{campaign_matmul, CampaignApp};
 
-/// One (scenario × app × strategy × validation × faults) cell of the sweep.
+/// One (scenario × app × strategy × collectives × validation × faults)
+/// cell of the sweep.
 #[derive(Debug, Clone)]
 pub struct CampaignTask {
     /// Position in the canonical task order (the aggregation key).
@@ -39,12 +40,17 @@ pub struct CampaignTask {
     pub scenario: Scenario,
     pub app: CampaignApp,
     pub strategy: Strategy,
+    /// Collective implementation the cell runs under (§4.2 axis: the
+    /// detection coverage at scatter/gather roots differs between modes,
+    /// so each mode is its own verified cell).
+    pub collectives: CollectiveImpl,
     /// Message-validation mode the cell runs under (beyond-paper axis).
     pub validation: ValidationMode,
     /// How many independent faults the cell arms (1 = the paper's sweep).
     pub faults: u32,
-    /// `hash(campaign_seed, scenario, app, strategy, validation, faults)` —
-    /// drives the workload, the transplanted injection sites, nothing else.
+    /// `hash(campaign_seed, scenario, app, strategy, collectives,
+    /// validation, faults)` — drives the workload, the transplanted
+    /// injection sites, nothing else.
     pub seed: u64,
 }
 
@@ -57,6 +63,7 @@ pub struct TaskOutcome {
     pub scenario_id: u32,
     pub app: CampaignApp,
     pub strategy: Strategy,
+    pub collectives: CollectiveImpl,
     pub validation: ValidationMode,
     pub faults: u32,
     pub completed: bool,
@@ -134,14 +141,16 @@ fn seeded_injection(
 pub fn run_task(task: &CampaignTask, root: &Path, deps: &RunDeps, base: &RunConfig) -> TaskOutcome {
     let cfg = RunConfig {
         strategy: task.strategy,
+        collectives: task.collectives,
         validation: task.validation,
         seed: task.seed,
         run_dir: root.join(format!(
-            "t{:04}-sc{}-{}-{}",
+            "t{:04}-sc{}-{}-{}-{}",
             task.index,
             task.scenario.id,
             task.app.label(),
-            task.strategy.label()
+            task.strategy.label(),
+            task.collectives.label()
         )),
         ..base.clone()
     };
@@ -192,6 +201,7 @@ fn failed_outcome(task: &CampaignTask, mismatch: String) -> TaskOutcome {
         scenario_id: task.scenario.id,
         app: task.app,
         strategy: task.strategy,
+        collectives: task.collectives,
         validation: task.validation,
         faults: task.faults,
         completed: false,
@@ -208,19 +218,30 @@ fn failed_outcome(task: &CampaignTask, mismatch: String) -> TaskOutcome {
 
 /// Grade an observed outcome per the task's cell. Paper cells (full
 /// validation, single fault) are held to the strict §4.1 oracle / §3.x
-/// strategy guarantees; beyond-paper cells (sha256 validation or
-/// multi-fault) have no Table-2 prediction, so the verdict is end-to-end
-/// with the recovery-cost bounds the algorithms still guarantee.
+/// strategy guarantees — with the prediction columns taken **under the
+/// cell's collectives mode** ([`workfault::scenario_under`]): native
+/// collectives close the FSC window at scatter/gather roots, so the same
+/// scenario legitimately grades as a different class/site/rollback there.
+/// Beyond-paper cells (sha256 validation or multi-fault) have no Table-2
+/// prediction, so the verdict is end-to-end with the recovery-cost bounds
+/// the algorithms still guarantee.
 fn grade(task: &CampaignTask, outcome: &RunOutcome) -> TaskOutcome {
     let sc = &task.scenario;
     let beyond_paper = task.validation != ValidationMode::Full || task.faults != 1;
     let mut mismatches = if beyond_paper {
         grade_beyond_paper(task, outcome)
     } else {
+        let effective = workfault::scenario_under(task.collectives, sc);
         match (task.app, task.strategy) {
-            (CampaignApp::Matmul, Strategy::SysCkpt) => workfault::check_prediction(sc, outcome),
-            (CampaignApp::Matmul, Strategy::DetectOnly) => grade_matmul_detect_only(sc, outcome),
-            (CampaignApp::Matmul, Strategy::UserCkpt) => grade_matmul_user(sc, outcome),
+            (CampaignApp::Matmul, Strategy::SysCkpt) => {
+                workfault::check_prediction(&effective, outcome)
+            }
+            (CampaignApp::Matmul, Strategy::DetectOnly) => {
+                grade_matmul_detect_only(&effective, outcome)
+            }
+            (CampaignApp::Matmul, Strategy::UserCkpt) => {
+                grade_matmul_user(&effective, outcome)
+            }
             _ => grade_end_to_end(task.strategy, outcome),
         }
     };
@@ -233,6 +254,7 @@ fn grade(task: &CampaignTask, outcome: &RunOutcome) -> TaskOutcome {
         scenario_id: sc.id,
         app: task.app,
         strategy: task.strategy,
+        collectives: task.collectives,
         validation: task.validation,
         faults: task.faults,
         completed: outcome.completed,

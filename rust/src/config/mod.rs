@@ -58,13 +58,40 @@ impl Strategy {
 /// How SEDAR's communication wrappers implement collectives (§4.2: the
 /// functional validation uses point-to-point; optimized native collectives
 /// exist for the temporal evaluation).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub enum CollectiveImpl {
     /// Compose scatter/gather/bcast from validated point-to-point sends.
     /// More comparison points ⇒ FSC scenarios become visible (§4.2).
     PointToPoint,
-    /// Validate once, then use the substrate's native collective.
+    /// Validate once, then use the substrate's native collective. The
+    /// sender's own contribution crosses the wire too, so root-local
+    /// corruption is validated *at the collective* — the FSC window closes
+    /// at scatter/gather roots (§4.2).
     Native,
+}
+
+impl CollectiveImpl {
+    /// The single parser behind the config key and the campaign filter —
+    /// one set of accepted spellings.
+    pub fn parse(s: &str) -> Result<CollectiveImpl> {
+        Ok(match s {
+            "p2p" | "point-to-point" => CollectiveImpl::PointToPoint,
+            "native" | "optimized" => CollectiveImpl::Native,
+            other => {
+                return Err(SedarError::Config(format!(
+                    "unknown collectives '{other}' (p2p|native)"
+                )))
+            }
+        })
+    }
+
+    /// Short label for report rows and filters.
+    pub fn label(self) -> &'static str {
+        match self {
+            CollectiveImpl::PointToPoint => "p2p",
+            CollectiveImpl::Native => "native",
+        }
+    }
 }
 
 /// Full configuration of one SEDAR run.
@@ -139,17 +166,7 @@ impl RunConfig {
         match key {
             "strategy" => self.strategy = Strategy::parse(value)?,
             "validation" => self.validation = ValidationMode::parse(value)?,
-            "collectives" => {
-                self.collectives = match value {
-                    "p2p" | "point-to-point" => CollectiveImpl::PointToPoint,
-                    "native" | "optimized" => CollectiveImpl::Native,
-                    other => {
-                        return Err(SedarError::Config(format!(
-                            "unknown collectives '{other}' (p2p|native)"
-                        )))
-                    }
-                }
-            }
+            "collectives" => self.collectives = CollectiveImpl::parse(value)?,
             "toe_timeout_ms" => {
                 self.toe_timeout = Duration::from_millis(parse_num(key, value)?)
             }

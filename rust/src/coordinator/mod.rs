@@ -52,6 +52,13 @@ pub struct RunOutcome {
     pub resume_history: Vec<ResumeFrom>,
     /// Final result matches the sequential oracle (None if not completed).
     pub result_correct: Option<bool>,
+    /// The master's final result variable (None if not completed). Carried
+    /// so cross-configuration runs can be compared **bit-exactly** — the
+    /// p2p-vs-native equivalence suite asserts identical final stores, not
+    /// just identical oracle verdicts. A `Var` clone is a refcount bump
+    /// into the shared store buffer, so carrying it costs no copy on the
+    /// campaign hot path.
+    pub final_result: Option<crate::state::Var>,
     /// Whether the configured injection actually fired.
     pub injected: bool,
     pub wall: Duration,
@@ -328,6 +335,7 @@ impl SedarRun {
             match result {
                 AttemptResult::Completed(master_store) => {
                     let correct = self.check_oracle(&master_store)?;
+                    let final_result = master_store.get(self.app.result_var())?.clone();
                     trace.coord(format!(
                         "attempt {attempts}: COMPLETED (result {})",
                         if correct { "correct" } else { "WRONG" }
@@ -341,6 +349,7 @@ impl SedarRun {
                         detections,
                         resume_history,
                         result_correct: Some(correct),
+                        final_result: Some(final_result),
                         injected: injector.injected(),
                         wall: t_run.elapsed(),
                         attempt_walls,
@@ -365,6 +374,7 @@ impl SedarRun {
                             detections,
                             resume_history,
                             result_correct: None,
+                            final_result: None,
                             injected: injector.injected(),
                             wall: t_run.elapsed(),
                             attempt_walls,
@@ -492,8 +502,14 @@ impl SedarRun {
     ) -> Result<([VarStore; 2], u64)> {
         match resume {
             ResumeFrom::Scratch => {
+                // Both replicas start from the identical deterministic
+                // store; the clone is a per-buffer refcount bump (COW keeps
+                // replica isolation: the first write — injected or computed
+                // — privatizes the touched buffer). Halves the init work
+                // and, with the pooled-world arena, lets a campaign worker
+                // recycle one set of allocations across world builds.
                 let s0 = shared.app.init_store(rank, shared.cfg.seed);
-                let s1 = shared.app.init_store(rank, shared.cfg.seed);
+                let s1 = s0.clone();
                 Ok(([s0, s1], 0))
             }
             ResumeFrom::SysCkpt(k) => {
@@ -512,14 +528,14 @@ impl SedarRun {
                 let snap = chain.read(k, rank)?;
                 // User-level restore loads the single VALIDATED copy into
                 // both replicas (overlaid on a fresh base store), wiping any
-                // divergence (§3.3).
+                // divergence (§3.3). Overlay once, then COW-clone for the
+                // sibling — same sharing discipline as the scratch path.
                 let mut base0 = shared.app.init_store(rank, shared.cfg.seed);
-                let mut base1 = shared.app.init_store(rank, shared.cfg.seed);
                 for name in snap.store.names() {
                     let v = snap.store.get(name)?;
                     base0.insert(name, v.clone());
-                    base1.insert(name, v.clone());
                 }
+                let base1 = base0.clone();
                 Ok(([base0, base1], snap.cursor))
             }
         }
@@ -582,6 +598,7 @@ impl SedarRun {
             final_store = if matches0 { c0 } else { c1 };
         }
         let correct = self.check_oracle(&final_store)?;
+        let final_result = final_store.get(self.app.result_var())?.clone();
         Ok(RunOutcome {
             app: self.app.name().to_string(),
             strategy: Strategy::Baseline,
@@ -591,6 +608,7 @@ impl SedarRun {
             detections: Vec::new(),
             resume_history: Vec::new(),
             result_correct: Some(correct),
+            final_result: Some(final_result),
             injected: shared.injector.injected(),
             wall: t_run.elapsed(),
             attempt_walls,

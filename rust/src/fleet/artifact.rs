@@ -21,15 +21,18 @@ use std::path::Path;
 
 use crate::campaign::shard::TaskOutcome;
 use crate::campaign::{
-    strategy_from_ordinal, strategy_ordinal, validation_from_ordinal, validation_ordinal,
-    CampaignApp,
+    collective_from_ordinal, collective_ordinal, strategy_from_ordinal, strategy_ordinal,
+    validation_from_ordinal, validation_ordinal, CampaignApp,
 };
 use crate::checkpoint::snapshot::{read_frame, write_frame, Codec};
 use crate::error::{FaultClass, Result, SedarError};
 use crate::recovery::ResumeFrom;
 
 const MAGIC: &[u8; 4] = b"SDSH";
-const VERSION: u32 = 1;
+/// Bumped to 2 when the collectives axis joined the outcome record (a
+/// per-record ordinal byte after the strategy's); version-1 artifacts
+/// cannot carry the axis and are rejected rather than mis-decoded.
+const VERSION: u32 = 2;
 
 /// Identity of a shard artifact: which sweep it belongs to and which slice
 /// it claims. `total_tasks` is the canonical task-list length of the sweep
@@ -143,6 +146,7 @@ pub fn encode_outcome(o: &TaskOutcome, out: &mut Vec<u8>) {
     out.extend_from_slice(&o.scenario_id.to_le_bytes());
     out.push(o.app.ordinal() as u8);
     out.push(strategy_ordinal(o.strategy) as u8);
+    out.push(collective_ordinal(o.collectives) as u8);
     out.push(validation_ordinal(o.validation) as u8);
     out.extend_from_slice(&o.faults.to_le_bytes());
     out.push(o.completed as u8);
@@ -203,6 +207,9 @@ pub fn decode_outcome(r: &mut ByteReader<'_>) -> Result<TaskOutcome> {
     let app = CampaignApp::from_ordinal(app_ord).ok_or_else(|| bad("app", app_ord))?;
     let strat_ord = r.u8()? as u64;
     let strategy = strategy_from_ordinal(strat_ord).ok_or_else(|| bad("strategy", strat_ord))?;
+    let coll_ord = r.u8()? as u64;
+    let collectives =
+        collective_from_ordinal(coll_ord).ok_or_else(|| bad("collectives", coll_ord))?;
     let val_ord = r.u8()? as u64;
     let validation = validation_from_ordinal(val_ord).ok_or_else(|| bad("validation", val_ord))?;
     let faults = r.u32()?;
@@ -247,6 +254,7 @@ pub fn decode_outcome(r: &mut ByteReader<'_>) -> Result<TaskOutcome> {
         scenario_id,
         app,
         strategy,
+        collectives,
         validation,
         faults,
         completed,
@@ -388,6 +396,7 @@ mod tests {
             scenario_id: 7,
             app: CampaignApp::Sw,
             strategy: crate::config::Strategy::UserCkpt,
+            collectives: crate::config::CollectiveImpl::Native,
             validation: crate::detect::ValidationMode::Sha256,
             faults: 2,
             completed: true,

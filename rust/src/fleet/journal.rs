@@ -31,7 +31,10 @@ use crate::util::codec::crc32;
 use super::artifact::{decode_outcome, encode_outcome, ByteReader, ShardMeta};
 
 const MAGIC: &[u8; 4] = b"SDJL";
-const VERSION: u32 = 1;
+/// Bumped to 2 with the collectives axis: the outcome record format gained
+/// a per-record ordinal byte ([`encode_outcome`]), so a version-1 journal
+/// is unreadable by construction and must be refused, never mis-decoded.
+const VERSION: u32 = 2;
 /// Sanity cap on a single record body; real outcome records are ≪ this.
 const MAX_RECORD: usize = 1 << 24;
 
@@ -227,6 +230,7 @@ mod tests {
             scenario_id: index as u32,
             app: CampaignApp::Matmul,
             strategy: Strategy::SysCkpt,
+            collectives: crate::config::CollectiveImpl::PointToPoint,
             validation: ValidationMode::Full,
             faults: 1,
             completed: true,

@@ -39,8 +39,8 @@ use std::sync::{Arc, Mutex};
 
 use crate::campaign::shard::TaskOutcome;
 use crate::campaign::{
-    aggregate, build_tasks, scheduler, sweep_fingerprint, validation_label, CampaignSpec,
-    CampaignTask,
+    aggregate, build_tasks, collective_label, scheduler, sweep_fingerprint, validation_label,
+    CampaignSpec, CampaignTask,
 };
 use crate::error::{Result, SedarError};
 
@@ -127,22 +127,25 @@ fn verify_recovered(o: &TaskOutcome, task: &CampaignTask) -> Result<()> {
     if o.scenario_id != task.scenario.id
         || o.app != task.app
         || o.strategy != task.strategy
+        || o.collectives != task.collectives
         || o.validation != task.validation
         || o.faults != task.faults
     {
         return Err(SedarError::Config(format!(
             "journal record for task {} does not match this sweep's task list \
-             (journal: sc{} {} × {} val={} faults={}; \
-             spec: sc{} {} × {} val={} faults={}) — was the --filter changed?",
+             (journal: sc{} {} × {} coll={} val={} faults={}; \
+             spec: sc{} {} × {} coll={} val={} faults={}) — was the --filter changed?",
             o.index,
             o.scenario_id,
             o.app.label(),
             o.strategy.label(),
+            collective_label(o.collectives),
             validation_label(o.validation),
             o.faults,
             task.scenario.id,
             task.app.label(),
             task.strategy.label(),
+            collective_label(task.collectives),
             validation_label(task.validation),
             task.faults
         )));

@@ -1,6 +1,6 @@
 //! Live progress for long sweeps: a std-only TCP endpoint.
 //!
-//! A full 576-task sweep (or a wider beyond-paper one) runs for minutes to
+//! A full 1152-task sweep (or a wider beyond-paper one) runs for minutes to
 //! hours; an operator driving N shard processes across machines needs to
 //! see progress without grepping stderr. [`StatusBoard`] is the shared
 //! counter the scheduler sink updates per finished task;
@@ -338,6 +338,7 @@ mod tests {
             scenario_id: t.scenario.id,
             app: t.app,
             strategy: t.strategy,
+            collectives: t.collectives,
             validation: t.validation,
             faults: t.faults,
             completed: true,
@@ -358,7 +359,7 @@ mod tests {
         board.record(&fake_outcome(&tasks[0], true));
         board.record(&fake_outcome(&tasks[1], false));
         let text = board.text_snapshot();
-        assert!(text.contains("done 2/18"), "got: {text}");
+        assert!(text.contains("done 2/36"), "got: {text}");
         assert!(text.contains("pass 1, fail 1"), "got: {text}");
         let json = board.json_snapshot();
         assert!(json.contains("\"done\":2"), "got: {json}");
@@ -405,7 +406,7 @@ mod tests {
 
         let text = fetch("/");
         assert!(text.starts_with("HTTP/1.0 200 OK"), "got: {text}");
-        assert!(text.contains("done 1/18"), "got: {text}");
+        assert!(text.contains("done 1/36"), "got: {text}");
         let json = fetch("/json");
         assert!(json.contains("application/json"), "got: {json}");
         assert!(json.contains("\"done\":1"), "got: {json}");

@@ -71,9 +71,12 @@ commands:
   run       run an application under a protection strategy (optionally
             injecting one of the 64 workfault scenarios)
   campaign  run the parallel injection campaign: the 64-scenario workfault
-            × {matmul, jacobi, sw} × {detect-only, sys-ckpt, user-ckpt},
-            fanned over a worker pool, graded against the §4.1 oracle;
-            optionally as one shard of a multi-process fleet
+            × {matmul, jacobi, sw} × {detect-only, sys-ckpt, user-ckpt}
+            × {p2p, native} collectives = 1152 worlds, fanned over a worker
+            pool, graded against the §4.1/§4.2 oracle (native collectives
+            get their own prediction columns: root-FSC rows flip to TDC at
+            the collective); optionally as one shard of a multi-process
+            fleet
   fleet     drive a whole multi-process fleet with one command:
             `fleet launch` spawns N shard processes, monitors their status
             endpoints and exit codes, relaunches any shard that dies or
@@ -93,12 +96,14 @@ commands:
 campaign flags:
   --jobs N      worker threads (default: available cores, capped at 8)
   --seed S      campaign master seed; every task seed derives from it as
-                hash(seed, scenario, app, strategy, validation, faults) —
-                same seed ⇒ byte-identical report, whatever --jobs or
-                --shard split is used (default 42)
+                hash(seed, scenario, app, strategy, collectives,
+                validation, faults) — same seed ⇒ byte-identical report,
+                whatever --jobs or --shard split is used (default 42)
   --filter F    comma-separated cell filter, e.g.
                 app=matmul,strategy=sys,scenario=1-8 (repeat keys to widen);
-                beyond-paper axes: validation=full|sha256, faults=1..4
+                collectives=p2p|native narrows the §4.2 axis (default:
+                both); beyond-paper axes: validation=full|sha256,
+                faults=1..4
   --scenario K  shorthand for --filter scenario=K
   --report FMT  md (default) or csv
   --xla         compute through the AOT artifacts (needs the pjrt feature)

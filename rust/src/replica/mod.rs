@@ -65,6 +65,71 @@ pub fn encode_var(v: &Var) -> Vec<u8> {
     out
 }
 
+/// Wire encoding of a native-gather result set: the root's leading replica
+/// ships every gathered part to its sibling in one blob.
+///
+/// ```text
+/// blob := n u32 | n × ( len u64 | encode_var bytes )
+/// ```
+pub fn encode_gather_parts(parts: &[Var]) -> Vec<u8> {
+    let mut blob = Vec::with_capacity(4 + parts.len() * 32);
+    blob.extend_from_slice(&(parts.len() as u32).to_le_bytes());
+    for p in parts {
+        let e = encode_var(p);
+        blob.extend_from_slice(&(e.len() as u64).to_le_bytes());
+        blob.extend_from_slice(&e);
+    }
+    blob
+}
+
+/// Inverse of [`encode_gather_parts`], with every read bounds-checked: a
+/// torn or short blob (the sibling died mid-push, a corrupted token) must
+/// surface as a [`SedarError`] that safe-stops this world — the historical
+/// unchecked indexing panicked the follower thread, which took down the
+/// whole campaign worker instead of failing one cell.
+pub fn decode_gather_parts(blob: &[u8]) -> Result<Vec<Var>> {
+    let truncated = |what: &str, off: usize| {
+        SedarError::Vmpi(format!(
+            "gather blob truncated at {what} (offset {off}, {} byte(s) total)",
+            blob.len()
+        ))
+    };
+    if blob.len() < 4 {
+        return Err(truncated("part count", 0));
+    }
+    let n = u32::from_le_bytes(blob[0..4].try_into().unwrap()) as usize;
+    // A gather never collects more parts than ranks; a corrupt count must
+    // not drive a giant allocation. Each part costs ≥ 10 bytes on the wire
+    // (8-byte length prefix + 2-byte minimum encode_var).
+    if n > blob.len().saturating_sub(4) / 10 {
+        return Err(SedarError::Vmpi(format!(
+            "gather blob declares {n} part(s) but holds only {} byte(s)",
+            blob.len()
+        )));
+    }
+    let mut off = 4usize;
+    let mut parts = Vec::with_capacity(n);
+    for _ in 0..n {
+        if blob.len() - off < 8 {
+            return Err(truncated("part length", off));
+        }
+        let len = u64::from_le_bytes(blob[off..off + 8].try_into().unwrap()) as usize;
+        off += 8;
+        if blob.len() - off < len {
+            return Err(truncated("part payload", off));
+        }
+        parts.push(decode_var(&blob[off..off + len])?);
+        off += len;
+    }
+    if off != blob.len() {
+        return Err(SedarError::Vmpi(format!(
+            "gather blob has {} trailing byte(s) after the last part",
+            blob.len() - off
+        )));
+    }
+    Ok(parts)
+}
+
 /// Inverse of [`encode_var`].
 pub fn decode_var(data: &[u8]) -> Result<Var> {
     if data.len() < 2 {
@@ -428,6 +493,27 @@ impl ReplicaCtx {
         Ok(())
     }
 
+    /// Validate a scatter root's chunk list **before** any rank commits to
+    /// the collective. A short (or long) list used to slip straight into
+    /// the send loop: the unserved ranks then blocked forever inside
+    /// [`Self::sedar_recv`] until the rendezvous lapse converted the hang
+    /// into a bogus TOE verdict — and the native arm's `chunks[root]`
+    /// indexing panicked outright when `chunks.len() <= root`. Failing up
+    /// front (like [`Endpoint::scatter`] does one layer down) turns both
+    /// into an ordinary error that safe-stops the world.
+    fn expect_scatter_chunks(&self, chunks: Option<Vec<Var>>) -> Result<Vec<Var>> {
+        let chunks =
+            chunks.ok_or_else(|| SedarError::Vmpi("scatter root needs chunks".into()))?;
+        if chunks.len() != self.nranks {
+            return Err(SedarError::Vmpi(format!(
+                "scatter root needs {} chunks (one per rank), got {}",
+                self.nranks,
+                chunks.len()
+            )));
+        }
+        Ok(chunks)
+    }
+
     /// Scatter row-chunks of root's `src_var` into each rank's `into`.
     /// `chunks` is produced by the caller on the root (it knows the
     /// decomposition); non-roots pass `None`.
@@ -441,8 +527,7 @@ impl ReplicaCtx {
         match self.cfg.collectives {
             CollectiveImpl::PointToPoint => {
                 if self.rank == root {
-                    let chunks = chunks
-                        .ok_or_else(|| SedarError::Vmpi("scatter root needs chunks".into()))?;
+                    let chunks = self.expect_scatter_chunks(chunks)?;
                     // Root's own chunk stays local — and therefore
                     // UNVALIDATED in p2p mode: this is what makes the FSC
                     // injection scenarios possible (§4.2).
@@ -459,8 +544,7 @@ impl ReplicaCtx {
             }
             CollectiveImpl::Native => {
                 if self.rank == root {
-                    let chunks = chunks
-                        .ok_or_else(|| SedarError::Vmpi("scatter root needs chunks".into()))?;
+                    let chunks = self.expect_scatter_chunks(chunks)?;
                     // Validate the WHOLE scatter payload, own chunk included.
                     let mut all = Vec::new();
                     for c in &chunks {
@@ -522,32 +606,13 @@ impl ReplicaCtx {
                     if self.is_lead() {
                         let parts = self.ep.gather(root, v)?.unwrap();
                         // Share the gathered parts with the sibling.
-                        let mut blob = Vec::new();
-                        blob.extend_from_slice(&(parts.len() as u32).to_le_bytes());
-                        for p in &parts {
-                            let e = encode_var(p);
-                            blob.extend_from_slice(&(e.len() as u64).to_le_bytes());
-                            blob.extend_from_slice(&e);
-                        }
-                        self.push_to_sibling(blob.into());
+                        self.push_to_sibling(encode_gather_parts(&parts).into());
                         self.pop_from_sibling(site)?;
                         Ok(Some(parts))
                     } else {
                         self.push_to_sibling(vec![1].into());
                         let tok = self.pop_from_sibling(site)?;
-                        let blob = tok.as_bytes();
-                        let mut parts = Vec::new();
-                        let n =
-                            u32::from_le_bytes(blob[0..4].try_into().unwrap()) as usize;
-                        let mut off = 4;
-                        for _ in 0..n {
-                            let len = u64::from_le_bytes(
-                                blob[off..off + 8].try_into().unwrap(),
-                            ) as usize;
-                            off += 8;
-                            parts.push(decode_var(&blob[off..off + len])?);
-                            off += len;
-                        }
+                        let parts = decode_gather_parts(tok.as_bytes())?;
                         Ok(Some(parts))
                     }
                 } else {
@@ -795,6 +860,31 @@ impl ReplicaCtx {
     }
 }
 
+/// The [`tag_for`] formula's parameters, named once so the compile-time
+/// bound below is derived from the SAME constants the formula uses: user
+/// tags start above the small hand-assigned app tags (`TAG_USER_BASE`),
+/// fold the site name into one of `TAG_SITE_BUCKETS` buckets, and reserve
+/// `TAG_PEER_SLOTS` tags per bucket for the peer index.
+const TAG_USER_BASE: u32 = 64;
+const TAG_SITE_BUCKETS: u32 = 1000;
+const TAG_PEER_SLOTS: u32 = 64;
+
+/// Highest tag [`tag_for`] can produce. The compile-time proof below is
+/// the tag-space guard: user-site tags must stay strictly under
+/// [`crate::vmpi::collectives::COLLECTIVE_TAG_BASE`], or a new app's send
+/// would silently alias a collective-internal tag like `TAG_BARRIER_IN`
+/// and deadlock or cross-deliver. Because the bound and the formula share
+/// the constants above, widening either parameter past the tag space
+/// fails to compile; the `debug_assert` re-checks the invariant on every
+/// generated tag in debug builds (belt and braces against a structural
+/// formula edit).
+const TAG_FOR_MAX: u32 =
+    TAG_USER_BASE + (TAG_SITE_BUCKETS - 1) * TAG_PEER_SLOTS + (TAG_PEER_SLOTS - 1);
+const _: () = assert!(
+    TAG_FOR_MAX < crate::vmpi::collectives::COLLECTIVE_TAG_BASE,
+    "user-site tag formula must stay below the collective tag space"
+);
+
 fn tag_for(site: &str, peer: usize) -> u32 {
     // User tags must stay below the collective tag space (1 << 16) and above
     // the small hand-assigned tags apps use (< 64); fold the site name in so
@@ -803,7 +893,14 @@ fn tag_for(site: &str, peer: usize) -> u32 {
     for b in site.bytes() {
         h = (h ^ b as u32).wrapping_mul(16777619);
     }
-    64 + (h % 1000) * 64 + (peer as u32 % 64)
+    let tag = TAG_USER_BASE
+        + (h % TAG_SITE_BUCKETS) * TAG_PEER_SLOTS
+        + (peer as u32 % TAG_PEER_SLOTS);
+    debug_assert!(
+        tag < crate::vmpi::collectives::COLLECTIVE_TAG_BASE,
+        "user-site tag {tag} for '{site}' aliases the collective tag space"
+    );
+    tag
 }
 
 fn gather_tmp(rank: usize) -> String {
@@ -839,5 +936,70 @@ mod tests {
         assert_ne!(tag_for("SCATTER", 1), tag_for("GATHER", 1));
         assert_ne!(tag_for("SCATTER", 1), tag_for("SCATTER", 2));
         assert!(tag_for("BCAST", 63) < crate::vmpi::collectives::COLLECTIVE_TAG_BASE);
+    }
+
+    #[test]
+    fn every_user_site_tag_stays_below_the_collective_space() {
+        use crate::vmpi::collectives::COLLECTIVE_TAG_BASE;
+        // Arbitrary site strings a new app could invent — including ones
+        // chosen to push the FNV hash around — must never alias the
+        // reserved collective tags, for any peer index.
+        let sites = [
+            "", "A", "SCATTER", "GATHER", "BCAST", "REDUCE", "VALIDATE", "HALO-EXCHANGE",
+            "a-very-long-site-name-a-new-app-might-pick", "ünïcode-sité", "\u{10FFFF}",
+        ];
+        for site in sites {
+            for peer in [0usize, 1, 63, 64, 65, 1000, usize::MAX] {
+                let tag = tag_for(site, peer);
+                assert!(
+                    (64..COLLECTIVE_TAG_BASE).contains(&tag),
+                    "site '{site}' peer {peer} produced tag {tag}"
+                );
+            }
+        }
+        assert!(TAG_FOR_MAX < COLLECTIVE_TAG_BASE);
+    }
+
+    #[test]
+    fn gather_blob_roundtrip() {
+        let parts = vec![
+            Var::f32(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]),
+            Var::i64_scalar(-7),
+            Var::f32(&[0], vec![]),
+        ];
+        let blob = encode_gather_parts(&parts);
+        let back = decode_gather_parts(&blob).unwrap();
+        assert_eq!(back, parts);
+        assert!(decode_gather_parts(&encode_gather_parts(&[])).unwrap().is_empty());
+    }
+
+    #[test]
+    fn malformed_gather_blob_errors_instead_of_panicking() {
+        let parts = vec![
+            Var::f32(&[2], vec![1.0, 2.0]),
+            Var::f32(&[3], vec![4.0, 5.0, 6.0]),
+        ];
+        let blob = encode_gather_parts(&parts);
+        // Every truncation point — including mid-count, mid-length and
+        // mid-payload — must be a recoverable error, never a panic.
+        for cut in 0..blob.len() {
+            assert!(
+                decode_gather_parts(&blob[..cut]).is_err(),
+                "prefix of {cut} byte(s) decoded"
+            );
+        }
+        // A count far beyond what the blob can hold is rejected before any
+        // allocation is sized from it.
+        let mut lying = blob.clone();
+        lying[0..4].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode_gather_parts(&lying).is_err());
+        // Trailing garbage after the declared parts is refused too.
+        let mut padded = blob.clone();
+        padded.push(0xEE);
+        assert!(decode_gather_parts(&padded).is_err());
+        // A part length pointing past the end is caught.
+        let mut overrun = blob;
+        overrun[4..12].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(decode_gather_parts(&overrun).is_err());
     }
 }

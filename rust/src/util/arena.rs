@@ -1,0 +1,217 @@
+//! The pooled-world arena: a per-thread free list of word buffers.
+//!
+//! A campaign sweep builds and tears down over a thousand isolated worlds
+//! (`64 scenarios × 3 apps × 3 strategies × 2 collectives modes = 1152`),
+//! and every world's stores, payloads and rendezvous tokens are backed by
+//! [`crate::util::bytes::SharedBuf`] word allocations of the **same few
+//! shapes** — the campaign geometry is fixed, only the seeds differ. Before
+//! this arena existed each world build churned those identical-shape
+//! allocations through the global allocator; now a worker thread recycles
+//! them across the worlds it runs, exactly like the thread-local LZSS
+//! [`crate::util::codec::Matcher`] recycles its hash-chain arena across
+//! checkpoint frames.
+//!
+//! Shape of the mechanism:
+//!
+//! * [`take_words`] hands out a `Vec<u64>` of the requested word length —
+//!   best-fit from the thread's free list when possible (no allocation, no
+//!   zeroing), freshly zero-allocated otherwise;
+//! * [`give_words`] returns a buffer to the free list (bounded: at most
+//!   [`MAX_POOLED`] buffers of at most [`MAX_POOL_WORDS`] words each, so an
+//!   unusually large world can never pin unbounded memory on a worker);
+//! * `SharedBuf`'s `Drop` calls [`give_words`] when it holds the **last**
+//!   reference — so the recycle point needs no cooperation from any caller,
+//!   and a buffer still shared (a zero-copy broadcast payload, say) is
+//!   never touched.
+//!
+//! Worlds are built on the campaign worker thread ([`crate::campaign::
+//! scheduler`]) and their stores come back to it at join time, so the pool
+//! that served a world's construction is the one its teardown refills —
+//! per-worker, no cross-thread traffic, no locks. Replica threads are
+//! short-lived; whatever their own pools accumulate is freed with them.
+//!
+//! Recycled buffers are handed out **without re-zeroing**: a `SharedBuf`
+//! only ever exposes `len` bytes, every constructor overwrites exactly
+//! those bytes, and the slack tail beyond `len` is unreachable through any
+//! API — so stale words are unobservable (asserted by the round-trip tests
+//! in [`crate::util::bytes`]).
+
+use std::cell::RefCell;
+
+/// Most buffers a thread keeps pooled.
+pub const MAX_POOLED: usize = 64;
+/// Largest buffer (in words) the pool will retain — 1 MiB. Campaign-world
+/// stores are far below this; anything bigger goes back to the allocator.
+pub const MAX_POOL_WORDS: usize = (1 << 20) / 8;
+/// Largest acceptable fit: a pooled buffer serves a request only when its
+/// span is at most this factor above it. Without the bound, one small take
+/// could consume (and pin, and on every give-back re-zero) the pool's
+/// biggest buffer while large requests fall through to the allocator.
+pub const MAX_FIT_FACTOR: usize = 4;
+
+#[derive(Default)]
+struct Pool {
+    free: Vec<Vec<u64>>,
+    hits: u64,
+    misses: u64,
+}
+
+thread_local! {
+    static POOL: RefCell<Pool> = RefCell::new(Pool::default());
+}
+
+/// A `Vec<u64>` of exactly `nwords` initialized words: recycled from this
+/// thread's pool when a large-enough buffer is free (contents are stale —
+/// see the module docs for why that is unobservable), freshly
+/// zero-allocated otherwise.
+pub fn take_words(nwords: usize) -> Vec<u64> {
+    if nwords == 0 {
+        return Vec::new();
+    }
+    // `try_with` so a drop running during thread teardown (after the pool's
+    // own destructor) degrades to a plain allocation instead of panicking.
+    POOL.try_with(|p| {
+        let mut p = p.borrow_mut();
+        let cap = nwords.saturating_mul(MAX_FIT_FACTOR);
+        let mut best: Option<usize> = None;
+        for (i, v) in p.free.iter().enumerate() {
+            if v.len() >= nwords && v.len() <= cap {
+                match best {
+                    Some(b) if p.free[b].len() <= v.len() => {}
+                    _ => best = Some(i),
+                }
+            }
+        }
+        match best {
+            Some(i) => {
+                p.hits += 1;
+                let mut v = p.free.swap_remove(i);
+                // Shrink to the requested length: the prefix is initialized
+                // (it was the previous holder's live region or better).
+                v.truncate(nwords);
+                v
+            }
+            None => {
+                p.misses += 1;
+                vec![0u64; nwords]
+            }
+        }
+    })
+    .unwrap_or_else(|_| vec![0u64; nwords])
+}
+
+/// Return a buffer to this thread's pool (no-op for empty or oversized
+/// buffers, or when the pool is full).
+pub fn give_words(mut v: Vec<u64>) {
+    // Pool the FULL allocated span, not the last holder's length: a
+    // best-fit take may have truncated `len` below `capacity`, and pooling
+    // by the truncated length would gradually shred large buffers into
+    // small-looking entries that pin memory without ever serving a large
+    // request again. `resize` to capacity never reallocates and only
+    // zero-fills the never-initialized gap (a no-op when len == capacity),
+    // and sizing the MAX_POOL_WORDS check by capacity bounds the memory
+    // actually pinned.
+    let full = v.capacity();
+    if full == 0 || full > MAX_POOL_WORDS {
+        return;
+    }
+    v.resize(full, 0);
+    let _ = POOL.try_with(|p| {
+        let mut p = p.borrow_mut();
+        if p.free.len() < MAX_POOLED {
+            p.free.push(v);
+        }
+    });
+}
+
+/// `(hits, misses)` of this thread's pool since thread start — the
+/// observability hook the recycling tests assert on.
+pub fn stats() -> (u64, u64) {
+    POOL.try_with(|p| {
+        let p = p.borrow();
+        (p.hits, p.misses)
+    })
+    .unwrap_or((0, 0))
+}
+
+/// Test hook: clear this thread's pool and counters, so pool-sensitive
+/// assertions hold whatever ran before them on this thread (under
+/// `--test-threads=1` every lib test shares the main thread's pool).
+#[cfg(test)]
+pub(crate) fn reset_for_tests() {
+    let _ = POOL.try_with(|p| *p.borrow_mut() = Pool::default());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recycles_same_shape() {
+        reset_for_tests();
+        let (h0, _) = stats();
+        let a = take_words(100);
+        assert_eq!(a.len(), 100);
+        give_words(a);
+        let b = take_words(100);
+        assert_eq!(b.len(), 100);
+        let (h1, _) = stats();
+        assert!(h1 > h0, "second same-shape take must hit the pool");
+    }
+
+    #[test]
+    fn shrinks_larger_buffers_within_the_fit_bound() {
+        reset_for_tests();
+        give_words(vec![7u64; 64]);
+        // Within MAX_FIT_FACTOR: reuse and shrink.
+        let v = take_words(32);
+        assert_eq!(v.len(), 32);
+        give_words(v); // restored to its full 64-word span
+        // Beyond the bound: a tiny request must NOT consume (pin, and
+        // later re-zero) the big buffer — it misses instead.
+        let (h0, _) = stats();
+        let tiny = take_words(2);
+        let (h1, _) = stats();
+        assert_eq!(tiny.len(), 2);
+        assert_eq!(h1, h0, "tiny take must miss rather than pin a big buffer");
+    }
+
+    #[test]
+    fn small_take_does_not_shred_a_large_buffer() {
+        // A pooled large buffer must survive interleaved small requests at
+        // its FULL span: the small take misses (bounded fit), and a
+        // truncated-then-returned buffer is re-pooled at capacity — so the
+        // next large request still hits.
+        reset_for_tests();
+        give_words(vec![3u64; 4096]);
+        let truncated = take_words(2048);
+        assert_eq!(truncated.len(), 2048);
+        give_words(truncated); // back at the full 4096-word span
+        let small = take_words(1);
+        assert_eq!(small.len(), 1);
+        give_words(small);
+        let (h0, _) = stats();
+        let large = take_words(4096);
+        let (h1, _) = stats();
+        assert_eq!(large.len(), 4096);
+        assert!(h1 > h0, "the re-given buffer must serve the large take");
+    }
+
+    #[test]
+    fn zero_and_oversize_are_not_pooled() {
+        reset_for_tests();
+        give_words(Vec::new());
+        let big = vec![0u64; MAX_POOL_WORDS + 1];
+        give_words(big);
+        let v = take_words(MAX_POOL_WORDS + 1);
+        assert_eq!(v.len(), MAX_POOL_WORDS + 1);
+        assert!(v.iter().all(|&w| w == 0), "oversize take must be fresh");
+    }
+
+    #[test]
+    fn fresh_takes_are_zeroed() {
+        reset_for_tests();
+        let v = take_words(33);
+        assert!(v.iter().all(|&w| w == 0));
+    }
+}

@@ -21,11 +21,24 @@
 
 use std::sync::Arc;
 
+use super::arena;
+
 /// Shared, immutable, 8-byte-aligned byte buffer with O(1) clone and
 /// copy-on-write mutation.
+///
+/// Word storage comes from the per-thread pooled-world arena
+/// ([`crate::util::arena`]): constructors recycle a free buffer of the
+/// right shape when one exists, and dropping the **last** reference gives
+/// the words back to the dropping thread's pool — so a campaign worker
+/// rebuilding world after world of identical geometry stops churning the
+/// global allocator. The partial tail beyond `len` of a recycled buffer may
+/// hold stale words; no API exposes bytes past `len`, so they are
+/// unobservable (see `recycled_storage_is_unobservable` below).
 pub struct SharedBuf {
-    /// Word storage; the last word may be partially used.
-    words: Arc<[u64]>,
+    /// Word storage; the last word may be partially used. `Arc<Vec<u64>>`
+    /// rather than `Arc<[u64]>` so the final holder can take the `Vec` back
+    /// out and recycle it through the arena.
+    words: Arc<Vec<u64>>,
     /// Valid byte length (`<= words.len() * 8`).
     len: usize,
 }
@@ -34,14 +47,15 @@ impl SharedBuf {
     /// An empty buffer (no allocation shared with anything).
     pub fn empty() -> SharedBuf {
         SharedBuf {
-            words: Vec::new().into(),
+            words: Arc::new(Vec::new()),
             len: 0,
         }
     }
 
-    /// Copy `bytes` into a fresh word-aligned shared allocation.
+    /// Copy `bytes` into a word-aligned shared allocation (recycled from
+    /// the thread's arena when an identical-shape buffer is free).
     pub fn from_bytes(bytes: &[u8]) -> SharedBuf {
-        let mut words = vec![0u64; bytes.len().div_ceil(8)];
+        let mut words = arena::take_words(bytes.len().div_ceil(8));
         if !bytes.is_empty() {
             // Safety: the destination spans ceil(len/8) words >= len bytes,
             // and u8 writes have no alignment requirement.
@@ -54,15 +68,19 @@ impl SharedBuf {
             }
         }
         SharedBuf {
-            words: words.into(),
+            words: Arc::new(words),
             len: bytes.len(),
         }
     }
 
     /// A zero-filled buffer of `len` bytes.
     pub fn zeroed(len: usize) -> SharedBuf {
+        let mut words = arena::take_words(len.div_ceil(8));
+        // A recycled buffer carries stale words; `zeroed` promises zeros
+        // over the full visible length.
+        words.fill(0);
         SharedBuf {
-            words: vec![0u64; len.div_ceil(8)].into(),
+            words: Arc::new(words),
             len,
         }
     }
@@ -89,8 +107,9 @@ impl SharedBuf {
     /// allocation first (other holders keep seeing the old bytes).
     pub fn make_mut(&mut self) -> &mut [u8] {
         if Arc::get_mut(&mut self.words).is_none() {
-            let copy: Vec<u64> = self.words.to_vec();
-            self.words = copy.into();
+            let mut copy = arena::take_words(self.words.len());
+            copy.copy_from_slice(&self.words);
+            self.words = Arc::new(copy);
         }
         let words = Arc::get_mut(&mut self.words).expect("unique after copy-on-write");
         // Safety: as for `as_bytes`, plus exclusive access via `get_mut`.
@@ -115,6 +134,18 @@ impl Clone for SharedBuf {
         SharedBuf {
             words: Arc::clone(&self.words),
             len: self.len,
+        }
+    }
+}
+
+impl Drop for SharedBuf {
+    /// The last holder recycles the word storage into the dropping
+    /// thread's arena — the pooled-world reclaim point. A still-shared
+    /// buffer (any other live clone) is left untouched; `Arc::get_mut`
+    /// is the uniqueness test (strong == 1, no weak refs exist here).
+    fn drop(&mut self) {
+        if let Some(words) = Arc::get_mut(&mut self.words) {
+            arena::give_words(std::mem::take(words));
         }
     }
 }
@@ -234,6 +265,47 @@ mod tests {
         assert_eq!(e.as_bytes(), &[] as &[u8]);
         let z = SharedBuf::zeroed(17);
         assert_eq!(z.as_bytes(), &[0u8; 17][..]);
+    }
+
+    #[test]
+    fn recycled_storage_is_unobservable() {
+        // Fill the thread pool with a poisoned buffer, then build a shorter
+        // buffer that straddles a word boundary: the visible bytes must be
+        // exactly the constructor's, stale tail words notwithstanding.
+        crate::util::arena::reset_for_tests();
+        drop(SharedBuf::from_bytes(&[0xAAu8; 64]));
+        let src: Vec<u8> = (0..13u8).collect();
+        let b = SharedBuf::from_bytes(&src);
+        assert_eq!(b.as_bytes(), &src[..]);
+        assert_eq!(b, SharedBuf::from_bytes(&src));
+        // `zeroed` must re-zero a recycled buffer over its whole length.
+        drop(SharedBuf::from_bytes(&[0xFFu8; 64]));
+        let z = SharedBuf::zeroed(33);
+        assert_eq!(z.as_bytes(), &[0u8; 33][..]);
+        // COW of a recycled-storage buffer keeps both views correct.
+        let mut c = b.clone();
+        c.make_mut()[0] = 99;
+        assert_eq!(b.as_bytes()[0], 0);
+        assert_eq!(c.as_bytes()[0], 99);
+    }
+
+    #[test]
+    fn drop_of_last_reference_recycles() {
+        use crate::util::arena;
+        // Order-independence: earlier tests on this thread (single-threaded
+        // libtest runs share one pool) must not pre-fill or exhaust it.
+        arena::reset_for_tests();
+        let src = vec![2u8; 777];
+        drop(SharedBuf::from_bytes(&src));
+        let (h0, _) = arena::stats();
+        let again = SharedBuf::from_bytes(&src);
+        let (h1, _) = arena::stats();
+        assert!(h1 > h0, "same-shape rebuild must reuse the dropped words");
+        // A *shared* buffer's drop must not recycle (the clone lives on).
+        let keep = again.clone();
+        drop(again);
+        assert_eq!(keep.as_bytes(), &src[..]);
+        assert_eq!(keep.refcount(), 1);
     }
 
     #[test]

@@ -2,6 +2,7 @@
 //! zero-copy buffers, hashing and compression codecs, a tiny stderr logger
 //! and human-readable formatting.
 
+pub mod arena;
 pub mod bytes;
 pub mod codec;
 pub mod logger;

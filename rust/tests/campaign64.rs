@@ -14,6 +14,9 @@ use sedar::workfault;
 fn all_64_scenarios_behave_as_predicted() {
     let mut spec = CampaignSpec::new(0xC0FFEE);
     spec.apply_filter("app=matmul,strategy=sys").unwrap();
+    // Both collective implementations stay in the sweep: every scenario is
+    // graded against its p2p prediction AND its native one (root-FSC rows
+    // flip to TDC at the collective — workfault::predict_native).
     spec.jobs = 4;
     let toe_timeout = spec.base.toe_timeout;
     spec.base = RunConfig::for_tests("campaign64");
@@ -21,7 +24,7 @@ fn all_64_scenarios_behave_as_predicted() {
     // never turn a descheduled-but-healthy sibling into a spurious TOE.
     spec.base.toe_timeout = toe_timeout;
     let report = run_campaign(&spec).unwrap();
-    assert_eq!(report.outcomes.len(), 64);
+    assert_eq!(report.outcomes.len(), 128);
     assert!(
         report.verdict(),
         "{} scenario(s) diverged:\n{}",

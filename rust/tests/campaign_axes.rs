@@ -25,10 +25,11 @@ fn spec(tag: &str, filter: &str) -> CampaignSpec {
 
 #[test]
 fn sha256_validation_cells_pass_end_to_end() {
-    // One TDC scenario, every app × strategy, under digest validation.
+    // One TDC scenario, every app × strategy × collectives mode, under
+    // digest validation.
     let spec = spec("sha", "scenario=2,validation=sha256");
     let tasks = build_tasks(&spec);
-    assert_eq!(tasks.len(), 9);
+    assert_eq!(tasks.len(), 18);
     assert!(tasks.iter().all(|t| t.validation == ValidationMode::Sha256));
     let report = run_campaign(&spec).unwrap();
     assert!(
@@ -47,7 +48,7 @@ fn multi_fault_cells_recover_and_stay_correct() {
     // already run under their own seeds in the main determinism suite).
     let spec = spec("mf", "scenario=2,app=matmul,faults=2");
     let tasks = build_tasks(&spec);
-    assert_eq!(tasks.len(), 3);
+    assert_eq!(tasks.len(), 6);
     assert!(tasks.iter().all(|t| t.faults == 2));
     let report = run_campaign(&spec).unwrap();
     assert!(
@@ -60,9 +61,10 @@ fn multi_fault_cells_recover_and_stay_correct() {
 
 #[test]
 fn widened_axes_multiply_cells_and_stay_deterministic() {
-    // Both axes at once, narrowed to one app × strategy to stay fast:
-    // 1 scenario × 2 validations × 2 fault counts = 4 cells.
-    let filter = "scenario=2,app=matmul,strategy=sys,\
+    // Both axes at once, narrowed to one app × strategy × collectives
+    // mode to stay fast: 1 scenario × 2 validations × 2 fault counts = 4
+    // cells.
+    let filter = "scenario=2,app=matmul,strategy=sys,collectives=p2p,\
                   validation=full,validation=sha256,faults=1,faults=2";
     let spec_a = spec("wide-a", filter);
     let spec_b = spec("wide-b", filter);

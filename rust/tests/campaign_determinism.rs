@@ -14,7 +14,7 @@ use sedar::config::RunConfig;
 
 /// A small but representative slice: one TDC, one LE and one FSC scenario
 /// (ids 2, 29, 50 — the rows the paper details in Table 2) across every
-/// app and every strategy.
+/// app, every strategy and both collective implementations (54 cells).
 fn small_spec(tag: &str, jobs: usize) -> CampaignSpec {
     let mut spec = CampaignSpec::new(42);
     spec.apply_filter("scenario=2,scenario=29,scenario=50")
@@ -41,7 +41,7 @@ fn same_seed_twice_is_byte_identical() {
     let spec_b = small_spec("rerun-b", 2);
     let a = run_campaign(&spec_a).unwrap();
     let b = run_campaign(&spec_b).unwrap();
-    assert_eq!(a.outcomes.len(), 3 * 3 * 3);
+    assert_eq!(a.outcomes.len(), 3 * 3 * 3 * 2);
     assert_eq!(
         a.deterministic_report(),
         b.deterministic_report(),
@@ -83,7 +83,7 @@ fn different_seeds_change_task_seeds_but_not_the_verdict_shape() {
     let mut spec = small_spec("seed7", 2);
     spec.seed = 7;
     let r = run_campaign(&spec).unwrap();
-    assert_eq!(r.outcomes.len(), 27);
+    assert_eq!(r.outcomes.len(), 54);
     assert!(r.verdict(), "campaign failures:\n{}", r.deterministic_report());
     let _ = std::fs::remove_dir_all(&spec.base.run_dir);
 }

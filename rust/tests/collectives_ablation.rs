@@ -95,7 +95,10 @@ fn both_modes_agree_on_fault_free_results() {
 fn native_mode_full_campaign_smoke() {
     // A slice of the workfault under native collectives: TDC rows keep
     // their predictions (transmission-validated either way); LE rows stay
-    // latent. (FSC rows intentionally differ — that is the ablation.)
+    // latent. FSC rows intentionally differ — `run_scenario` now grades
+    // against the native oracle (`workfault::predict_native`), and the
+    // full both-mode catalog runs in `rust/tests/campaign64.rs` and the
+    // equivalence suite; this smoke keeps the unchanged classes honest.
     let app = MatmulApp::new(64, 4);
     let mut cfg = RunConfig::for_tests("abl-campaign");
     cfg.collectives = CollectiveImpl::Native;

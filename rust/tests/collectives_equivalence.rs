@@ -1,0 +1,275 @@
+//! The p2p-vs-native equivalence suite (§4.2).
+//!
+//! The paper's claim has two halves, and this suite mechanizes both:
+//!
+//! 1. **Equal coverage** where the corrupted datum is transmitted (TDC),
+//!    never used (LE) or desynchronizes the replicas (TOE): the same
+//!    scenario under the same seed must behave *identically* in both
+//!    collective implementations — same detection class and site, same
+//!    rollback count, and a **bit-identical final store**.
+//! 2. **Strictly better coverage** where the corruption is root-local: the
+//!    FSC scenarios whose data feeds a scatter/gather root contribution
+//!    flip from "undetected until the final-result comparison" (p2p) to
+//!    "detected at the collective itself" (native), with the shorter
+//!    rollback `predict_native` derives.
+//!
+//! A third regression pins the scatter deadlock fix: a root handing the
+//! collective a short chunk list must fail fast with an error — not strand
+//! the unserved ranks in `sedar_recv` until the rendezvous lapse mints a
+//! bogus TOE verdict (p2p), nor panic on `chunks[root]` (native).
+
+use std::sync::Arc;
+
+use sedar::apps::matmul::MatmulApp;
+use sedar::apps::spec::AppSpec;
+use sedar::config::{CollectiveImpl, RunConfig, Strategy};
+use sedar::coordinator::{RunOutcome, SedarRun};
+use sedar::error::{FaultClass, Result, SedarError};
+use sedar::replica::ReplicaCtx;
+use sedar::state::{Var, VarStore};
+use sedar::workfault::{self, Scenario};
+
+fn run_scenario_under(
+    sc: &Scenario,
+    collectives: CollectiveImpl,
+    tag: &str,
+) -> RunOutcome {
+    let app = MatmulApp::new(64, 4);
+    let mut cfg = RunConfig::for_tests(tag);
+    cfg.strategy = Strategy::SysCkpt;
+    cfg.collectives = collectives;
+    let spec = workfault::injection_for(&app, sc, &cfg);
+    let outcome = SedarRun::new(Arc::new(app), cfg.clone(), Some(spec))
+        .run()
+        .unwrap();
+    let _ = std::fs::remove_dir_all(&cfg.run_dir);
+    outcome
+}
+
+/// Scenarios whose predictions agree across modes (every TDC, LE and TOE
+/// row — `predict_native` only ever rewrites FSC rows).
+fn equal_coverage_sample() -> Vec<Scenario> {
+    let app = MatmulApp::new(64, 4);
+    workfault::catalog(&app)
+        .into_iter()
+        .filter(|sc| sc.effect != FaultClass::Fsc)
+        // Subsample for wall time, but keep every class: all TOE rows, the
+        // paper's Table-2 representatives (2, 29), and every third row.
+        .filter(|sc| sc.effect == FaultClass::Toe || sc.id == 2 || sc.id == 29 || sc.id % 3 == 0)
+        .collect()
+}
+
+#[test]
+fn equal_coverage_classes_behave_identically_across_modes() {
+    let sample = equal_coverage_sample();
+    assert!(sample.len() >= 15, "sample too thin: {}", sample.len());
+    for class in [FaultClass::Tdc, FaultClass::Le, FaultClass::Toe] {
+        assert!(
+            sample.iter().any(|sc| sc.effect == class),
+            "sample must cover {class}"
+        );
+    }
+    for sc in sample {
+        let p2p = run_scenario_under(&sc, CollectiveImpl::PointToPoint, "eqv-p2p");
+        let nat = run_scenario_under(&sc, CollectiveImpl::Native, "eqv-nat");
+        // Identical fault verdicts…
+        assert_eq!(
+            p2p.detections.first().map(|d| (d.class, d.site.clone())),
+            nat.detections.first().map(|d| (d.class, d.site.clone())),
+            "sc{}: first detection differs across modes",
+            sc.id
+        );
+        assert_eq!(p2p.restarts, nat.restarts, "sc{}: N_roll differs", sc.id);
+        assert_eq!(
+            p2p.resume_history, nat.resume_history,
+            "sc{}: recovery path differs",
+            sc.id
+        );
+        // …and identical final stores, bit for bit.
+        assert_eq!(p2p.result_correct, Some(true), "sc{}", sc.id);
+        assert_eq!(nat.result_correct, Some(true), "sc{}", sc.id);
+        let a = p2p.final_result.as_ref().expect("p2p completed");
+        let b = nat.final_result.as_ref().expect("native completed");
+        let (a, b) = (a.buf.as_f32().unwrap(), b.buf.as_f32().unwrap());
+        assert_eq!(a.len(), b.len());
+        assert!(
+            a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits()),
+            "sc{}: final stores differ between collectives modes",
+            sc.id
+        );
+        // Both graded against their own mode's oracle.
+        let graded = [
+            (&p2p, CollectiveImpl::PointToPoint),
+            (&nat, CollectiveImpl::Native),
+        ];
+        for (outcome, mode) in graded {
+            let eff = workfault::scenario_under(mode, &sc);
+            let mismatches = workfault::check_prediction(&eff, outcome);
+            assert!(
+                mismatches.is_empty(),
+                "sc{} under {:?}: {mismatches:?}",
+                sc.id,
+                mode
+            );
+        }
+    }
+}
+
+#[test]
+fn root_fsc_scenarios_flip_from_validate_to_collective_detection() {
+    let app = MatmulApp::new(64, 4);
+    let flips: Vec<Scenario> = workfault::catalog(&app)
+        .into_iter()
+        .filter(|sc| {
+            sc.effect == FaultClass::Fsc
+                && workfault::scenario_under(CollectiveImpl::Native, sc).effect == FaultClass::Tdc
+        })
+        .collect();
+    assert!(!flips.is_empty(), "the catalog must contain root-FSC rows");
+    // One representative per flipped detection site keeps the suite fast
+    // while exercising both the scatter and the gather flip paths.
+    let mut picked: Vec<Scenario> = Vec::new();
+    for sc in &flips {
+        let native = workfault::scenario_under(CollectiveImpl::Native, sc);
+        if !picked
+            .iter()
+            .any(|p| workfault::scenario_under(CollectiveImpl::Native, p).p_det == native.p_det)
+        {
+            picked.push(sc.clone());
+        }
+    }
+    assert!(picked.len() >= 2, "need a SCATTER flip and a GATHER flip");
+    for sc in picked {
+        let native_pred = workfault::scenario_under(CollectiveImpl::Native, &sc);
+        // Undetected-until-VALIDATE under p2p…
+        let p2p = run_scenario_under(&sc, CollectiveImpl::PointToPoint, "flip-p2p");
+        let first = p2p.detections.first().expect("p2p run detects at VALIDATE");
+        assert_eq!(first.class, FaultClass::Fsc, "sc{}", sc.id);
+        assert_eq!(first.site, "VALIDATE", "sc{}", sc.id);
+        assert_eq!(p2p.restarts, sc.n_roll, "sc{}", sc.id);
+        // …detected at the collective under native, with the shorter
+        // rollback the native oracle predicts.
+        let nat = run_scenario_under(&sc, CollectiveImpl::Native, "flip-nat");
+        let first = nat.detections.first().expect("native run detects early");
+        assert_eq!(first.class, FaultClass::Tdc, "sc{}", sc.id);
+        assert_eq!(Some(first.site.as_str()), native_pred.p_det, "sc{}", sc.id);
+        assert_eq!(nat.restarts, native_pred.n_roll, "sc{}", sc.id);
+        assert!(
+            nat.restarts <= p2p.restarts,
+            "sc{}: native detection must never cost more rollbacks",
+            sc.id
+        );
+        // Both still end correct — coverage changed, correctness did not.
+        assert_eq!(p2p.result_correct, Some(true));
+        assert_eq!(nat.result_correct, Some(true));
+    }
+}
+
+#[test]
+fn surviving_fsc_rows_stay_fsc_under_native() {
+    // C(M) corrupted after GATHER is never transmitted again: §4.2's flip
+    // does not apply, and the native run must still detect at VALIDATE.
+    let app = MatmulApp::new(64, 4);
+    let sc = workfault::catalog(&app)
+        .into_iter()
+        .find(|sc| {
+            sc.effect == FaultClass::Fsc
+                && workfault::scenario_under(CollectiveImpl::Native, sc).effect == FaultClass::Fsc
+        })
+        .expect("a post-GATHER FSC row exists");
+    let nat = run_scenario_under(&sc, CollectiveImpl::Native, "fsc-stays");
+    let first = nat.detections.first().expect("detected at VALIDATE");
+    assert_eq!(first.class, FaultClass::Fsc);
+    assert_eq!(first.site, "VALIDATE");
+    assert_eq!(nat.result_correct, Some(true));
+}
+
+// ---------------------------------------------------------------- deadlock
+
+/// A minimal app whose scatter root hands over a deliberately short chunk
+/// list — the exact misuse that used to strand non-root ranks in
+/// `sedar_recv` (p2p) or panic on `chunks[root]` (native). The root is
+/// rank 1 with a single chunk, so `chunks.len() <= root` and the
+/// historical native arm indexed out of bounds.
+struct ShortScatterApp {
+    nranks: usize,
+}
+
+impl AppSpec for ShortScatterApp {
+    fn name(&self) -> &'static str {
+        "short-scatter"
+    }
+
+    fn nranks(&self) -> usize {
+        self.nranks
+    }
+
+    fn n_phases(&self) -> u64 {
+        2
+    }
+
+    fn phase_name(&self, phase: u64) -> String {
+        match phase {
+            0 => "INIT".into(),
+            _ => "SCATTER".into(),
+        }
+    }
+
+    fn init_store(&self, _rank: usize, seed: u64) -> VarStore {
+        let mut s = VarStore::new();
+        s.insert("out", Var::f32(&[2], vec![seed as f32, 0.0]));
+        s
+    }
+
+    fn run_phase(&self, ctx: &mut ReplicaCtx, phase: u64) -> Result<()> {
+        if phase == 0 {
+            return Ok(());
+        }
+        // Root rank 1 supplies ONE chunk for a 4-rank world: shorter than
+        // the world size AND shorter than the root index itself.
+        let chunks = (ctx.rank == 1).then(|| vec![Var::f32(&[2], vec![1.0, 2.0])]);
+        ctx.scatter(1, chunks, "out", "SCATTER")?;
+        Ok(())
+    }
+
+    fn significant_vars(&self, _rank: usize) -> Vec<String> {
+        vec!["out".into()]
+    }
+
+    fn result_var(&self) -> &'static str {
+        "out"
+    }
+
+    fn expected_result(&self, seed: u64) -> Vec<f32> {
+        vec![seed as f32, 0.0]
+    }
+
+    fn ckpt_phases(&self) -> Vec<u64> {
+        vec![]
+    }
+}
+
+#[test]
+fn short_chunk_list_fails_fast_instead_of_deadlocking() {
+    for (mode, tag) in [
+        (CollectiveImpl::PointToPoint, "short-p2p"),
+        (CollectiveImpl::Native, "short-nat"),
+    ] {
+        let mut cfg = RunConfig::for_tests(tag);
+        cfg.strategy = Strategy::DetectOnly;
+        cfg.collectives = mode;
+        let run_dir = cfg.run_dir.clone();
+        let result = SedarRun::new(Arc::new(ShortScatterApp { nranks: 4 }), cfg, None).run();
+        // A real error — before the fix this was Ok(a gave-up outcome whose
+        // every attempt carried a bogus TOE verdict) in p2p mode and a
+        // replica-thread panic (`chunks[root]` out of bounds) in native
+        // mode; now the root refuses the malformed chunk list up front.
+        let err = result.expect_err("short chunk list must be an error, not a verdict");
+        assert!(
+            matches!(err, SedarError::Vmpi(_)),
+            "{tag}: expected a Vmpi error, got {err}"
+        );
+        assert!(err.to_string().contains("chunks"), "{tag}: {err}");
+        let _ = std::fs::remove_dir_all(&run_dir);
+    }
+}

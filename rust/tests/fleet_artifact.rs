@@ -7,7 +7,7 @@ use std::time::Duration;
 
 use sedar::campaign::shard::TaskOutcome;
 use sedar::campaign::{CampaignApp, CampaignReport};
-use sedar::config::Strategy;
+use sedar::config::{CollectiveImpl, Strategy};
 use sedar::detect::ValidationMode;
 use sedar::error::FaultClass;
 use sedar::fleet::artifact::{merge_artifacts, read_artifact, write_artifact, ShardMeta};
@@ -38,6 +38,7 @@ fn ornate(index: usize) -> TaskOutcome {
         scenario_id: 50,
         app: CampaignApp::Jacobi,
         strategy: Strategy::SysCkpt,
+        collectives: CollectiveImpl::Native,
         validation: ValidationMode::Sha256,
         faults: 3,
         completed: true,
@@ -62,6 +63,7 @@ fn plain(index: usize) -> TaskOutcome {
         scenario_id: 1,
         app: CampaignApp::Matmul,
         strategy: Strategy::DetectOnly,
+        collectives: CollectiveImpl::PointToPoint,
         validation: ValidationMode::Full,
         faults: 1,
         completed: true,

@@ -15,9 +15,10 @@ use std::path::PathBuf;
 use std::process::{Command, Stdio};
 use std::time::{Duration, Instant};
 
-/// 16 matmul × sys-ckpt tasks: 8 per shard in a 2-way split — enough that
-/// the kill below always lands mid-slice (the watcher fires after the
-/// *first* journaled outcome, leaving 7 tasks of window).
+/// 32 matmul × sys-ckpt tasks (16 scenarios × both collectives modes):
+/// 16 per shard in a 2-way split — enough that the kill below always
+/// lands mid-slice (the watcher fires after the *first* journaled
+/// outcome, leaving 15 tasks of window).
 const FILTER: &str = "app=matmul,strategy=sys,scenario=1-16";
 const SEED: &str = "11";
 

@@ -11,9 +11,9 @@ use sedar::fleet::artifact::ShardMeta;
 use sedar::fleet::journal::Journal;
 use sedar::fleet::{run_shard, FleetOptions};
 
-/// One scenario across every app × strategy: 9 tasks — enough to split
-/// into "finished before the kill" and "still to do", small enough to run
-/// twice in this suite.
+/// One scenario across every app × strategy × collectives mode: 18 tasks
+/// — enough to split into "finished before the kill" and "still to do",
+/// small enough to run twice in this suite.
 fn spec(tag: &str) -> CampaignSpec {
     let mut spec = CampaignSpec::new(77);
     spec.apply_filter("scenario=2").unwrap();
@@ -52,9 +52,9 @@ fn journal_resume_skips_finished_tasks_and_reproduces_the_report() {
         },
     )
     .unwrap();
-    assert_eq!(run_a.owned, 9);
+    assert_eq!(run_a.owned, 18);
     assert_eq!(run_a.resumed, 0);
-    assert_eq!(run_a.executed, 9);
+    assert_eq!(run_a.executed, 18);
     let report_a = CampaignReport::new(spec_a.seed, run_a.outcomes.clone());
     let _ = std::fs::remove_dir_all(&spec_a.base.run_dir);
 
@@ -69,7 +69,7 @@ fn journal_resume_skips_finished_tasks_and_reproduces_the_report() {
         },
     )
     .unwrap();
-    assert_eq!(run_b.resumed, 9);
+    assert_eq!(run_b.resumed, 18);
     assert_eq!(run_b.executed, 0, "a complete journal re-executes nothing");
     assert_eq!(
         CampaignReport::new(spec_b.seed, run_b.outcomes).deterministic_report(),
@@ -87,7 +87,7 @@ fn journal_resume_skips_finished_tasks_and_reproduces_the_report() {
         seed: 77,
         shard_index: 0,
         shard_count: 1,
-        total_tasks: 9,
+        total_tasks: 18,
         spec_hash: sweep_fingerprint(77, &build_tasks(&spec_for_meta)),
     };
     {
@@ -98,7 +98,7 @@ fn journal_resume_skips_finished_tasks_and_reproduces_the_report() {
         }
     }
 
-    // The re-run resumes: only the 5 unfinished tasks execute, and the
+    // The re-run resumes: only the 14 unfinished tasks execute, and the
     // final report is byte-identical to the uninterrupted run's.
     let spec_c = spec("resumed");
     let run_c = run_shard(
@@ -110,7 +110,7 @@ fn journal_resume_skips_finished_tasks_and_reproduces_the_report() {
     )
     .unwrap();
     assert_eq!(run_c.resumed, 4);
-    assert_eq!(run_c.executed, 5, "journaled tasks must not re-execute");
+    assert_eq!(run_c.executed, 14, "journaled tasks must not re-execute");
     assert_eq!(
         CampaignReport::new(spec_c.seed, run_c.outcomes).deterministic_report(),
         report_a.deterministic_report(),

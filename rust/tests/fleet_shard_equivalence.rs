@@ -14,7 +14,8 @@ use sedar::fleet::plan::ShardPlan;
 use sedar::fleet::{artifact, run_shard, FleetOptions};
 
 /// The representative slice the determinism suite uses: one TDC, one LE
-/// and one FSC scenario across every app and strategy (27 tasks).
+/// and one FSC scenario across every app, strategy and collectives mode
+/// (54 tasks).
 fn small_spec(tag: &str) -> CampaignSpec {
     let mut spec = CampaignSpec::new(42);
     spec.apply_filter("scenario=2,scenario=29,scenario=50").unwrap();
@@ -46,7 +47,7 @@ fn two_way_split_merges_byte_identical() {
     // Single-process reference run.
     let spec_single = small_spec("single");
     let reference = run_campaign(&spec_single).unwrap();
-    assert_eq!(reference.outcomes.len(), 27);
+    assert_eq!(reference.outcomes.len(), 54);
 
     // The same sweep as two shard processes, each writing an artifact.
     let mut paths = Vec::new();
@@ -78,8 +79,8 @@ fn two_way_split_merges_byte_identical() {
         .collect();
     let (seed, total, outcomes) = artifact::merge_artifacts(shards).unwrap();
     assert_eq!(seed, 42);
-    assert_eq!(total, 27);
-    assert_eq!(outcomes.len(), 27);
+    assert_eq!(total, 54);
+    assert_eq!(outcomes.len(), 54);
     let merged = CampaignReport::new(seed, outcomes);
     assert_eq!(
         merged.deterministic_report(),

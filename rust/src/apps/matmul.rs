@@ -203,7 +203,10 @@ impl AppSpec for MatmulApp {
                     // variable is knocked back, the replica redoes work and
                     // arrives late at GATHER.
                     if let Some((redo, delay)) = ctx.maybe_index_rollback(phases::MATMUL, sb) {
-                        std::thread::sleep(delay);
+                        // Modeled-time delay: instant in wall terms under a
+                        // virtual clock, where the sibling's TOE lapse and
+                        // this delay resolve purely in ticks.
+                        ctx.sleep(delay);
                         sb = sb.saturating_sub(redo);
                         continue;
                     }

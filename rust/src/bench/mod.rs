@@ -226,39 +226,56 @@ fn ckpt_frame_section(opts: &BenchOpts, jr: &mut JsonReport) {
     print_section(opts.echo, "checkpoint frame substrate (t_cs drivers)", &rows);
 }
 
-/// End-to-end: the full injection campaign, one wall-clock number.
+/// End-to-end: the full injection campaign, one wall-clock number per
+/// clock mode. The wall-clock run is the paper-faithful baseline; the
+/// virtual-clock run is the same sweep (byte-identical report) with every
+/// modeled timeout collapsed to a quiescence jump — the delta between the
+/// two entries is exactly what virtual time buys.
 fn campaign_section(opts: &BenchOpts, jr: &mut JsonReport) -> Result<()> {
-    eprintln!("bench: campaign (e2e)");
-    let mut spec = CampaignSpec::new(opts.seed);
-    spec.jobs = opts.jobs.max(1);
-    spec.echo = false;
-    if opts.quick {
-        // A representative slice: every strategy and both collectives
-        // modes, one app, 8 scenarios (48 worlds).
-        spec.apply_filter("app=matmul,scenario=1-8")?;
-    }
-    spec.base.run_dir =
-        std::env::temp_dir().join(format!("sedar-bench-campaign-{}", std::process::id()));
-    let t0 = Instant::now();
-    let report = run_campaign(&spec);
-    let wall = t0.elapsed();
-    let _ = std::fs::remove_dir_all(&spec.base.run_dir);
-    let report = report?;
-    let tasks = report.total();
-    jr.push_raw(format!(
-        "{{\"group\":\"campaign\",\"case\":\"e2e {tasks} tasks\",\"tasks\":{tasks},\
-         \"jobs\":{},\"wall_ms\":{},\"pass\":{}}}",
-        spec.jobs,
-        wall.as_millis(),
-        report.verdict()
-    ));
-    if opts.echo {
-        println!(
-            "\n=== campaign e2e ===\n\n  {tasks} tasks, {} jobs → {} ({})",
+    use crate::util::clock::ClockMode;
+    for mode in [ClockMode::Wall, ClockMode::Virtual] {
+        eprintln!("bench: campaign (e2e, {} clock)", mode.label());
+        let mut spec = CampaignSpec::new(opts.seed);
+        spec.jobs = opts.jobs.max(1);
+        spec.echo = false;
+        spec.base.clock = mode;
+        if opts.quick {
+            // A representative slice: every strategy and both collectives
+            // modes, one app, 8 scenarios (48 worlds).
+            spec.apply_filter("app=matmul,scenario=1-8")?;
+        }
+        spec.base.run_dir = std::env::temp_dir().join(format!(
+            "sedar-bench-campaign-{}-{}",
+            mode.label(),
+            std::process::id()
+        ));
+        // The bench harness itself always measures real elapsed time —
+        // `Instant` here is the measurement, not a decision path.
+        let t0 = Instant::now();
+        let report = run_campaign(&spec);
+        let wall = t0.elapsed();
+        let _ = std::fs::remove_dir_all(&spec.base.run_dir);
+        let report = report?;
+        let tasks = report.total();
+        jr.push_raw(format!(
+            "{{\"group\":\"campaign\",\"case\":\"e2e {tasks} tasks ({} clock)\",\
+             \"tasks\":{tasks},\"jobs\":{},\"clock\":\"{}\",\"wall_ms\":{},\
+             \"pass\":{}}}",
+            mode.label(),
             spec.jobs,
-            crate::util::human_duration(wall),
-            report.summary_line()
-        );
+            mode.label(),
+            wall.as_millis(),
+            report.verdict()
+        ));
+        if opts.echo {
+            println!(
+                "\n=== campaign e2e ({} clock) ===\n\n  {tasks} tasks, {} jobs → {} ({})",
+                mode.label(),
+                spec.jobs,
+                crate::util::human_duration(wall),
+                report.summary_line()
+            );
+        }
     }
     Ok(())
 }

@@ -42,8 +42,39 @@ use crate::apps::{JacobiApp, MatmulApp, SwApp};
 use crate::config::{CollectiveImpl, RunConfig, Strategy};
 use crate::detect::ValidationMode;
 use crate::error::{Result, SedarError};
+use crate::util::clock::ClockMode;
 use crate::util::prng::SplitMix64;
 use crate::workfault::{self, Scenario};
+
+/// One enum axis of the sweep, described once: its filter key, the full
+/// decodable value domain (a superset of the default sweep set — e.g. the
+/// strategy axis can decode `Baseline` from old artifacts even though the
+/// sweep never schedules it), and the ordinal/parse/label functions every
+/// consumer (seed folding, artifact codecs, filters, report rows) shares.
+///
+/// Adding an axis value means extending the enum, its `parse`/`label`
+/// arms and the `domain` slice — the roundtrip test below checks nothing
+/// was missed; there is no per-consumer match to keep in sync.
+pub struct Axis<T: Copy + PartialEq + 'static> {
+    /// Filter key (`app=`, `strategy=`, …) in `apply_filter` strings.
+    pub key: &'static str,
+    /// Every decodable value, in ordinal order.
+    pub domain: &'static [T],
+    /// Stable ordinal, folded into per-task seeds and persisted in shard
+    /// artifacts — frozen forever once released.
+    pub ordinal: fn(T) -> u64,
+    /// Parse a filter/CLI spelling.
+    pub parse: fn(&str) -> Result<T>,
+    /// Short label for report rows.
+    pub label: fn(T) -> &'static str,
+}
+
+impl<T: Copy + PartialEq + 'static> Axis<T> {
+    /// Inverse of `ordinal` (artifact decoding): scans `domain`.
+    pub fn from_ordinal(&self, ord: u64) -> Option<T> {
+        self.domain.iter().copied().find(|v| (self.ordinal)(*v) == ord)
+    }
+}
 
 /// Which benchmark application a campaign task drives.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
@@ -89,7 +120,7 @@ impl CampaignApp {
 
     /// Inverse of [`CampaignApp::ordinal`] (artifact decoding).
     pub fn from_ordinal(ord: u64) -> Option<CampaignApp> {
-        CampaignApp::ALL.into_iter().find(|a| a.ordinal() == ord)
+        APP_AXIS.from_ordinal(ord)
     }
 
     /// The campaign-geometry instance: small enough that the full
@@ -119,6 +150,54 @@ pub const STRATEGIES: [Strategy; 3] = [
     Strategy::UserCkpt,
 ];
 
+/// Both collective implementations, in sweep order (§4.2: the functional
+/// point-to-point validation first, then the optimized native one).
+pub const COLLECTIVES: [CollectiveImpl; 2] =
+    [CollectiveImpl::PointToPoint, CollectiveImpl::Native];
+
+/// The app axis. `domain` doubles as the default sweep set
+/// ([`CampaignApp::ALL`]).
+pub static APP_AXIS: Axis<CampaignApp> = Axis {
+    key: "app",
+    domain: &CampaignApp::ALL,
+    ordinal: CampaignApp::ordinal,
+    parse: CampaignApp::parse,
+    label: CampaignApp::label,
+};
+
+/// The strategy axis. The domain includes `Baseline` (old artifacts may
+/// encode it) even though the sweep set [`STRATEGIES`] excludes it.
+pub static STRATEGY_AXIS: Axis<Strategy> = Axis {
+    key: "strategy",
+    domain: &[
+        Strategy::Baseline,
+        Strategy::DetectOnly,
+        Strategy::SysCkpt,
+        Strategy::UserCkpt,
+    ],
+    ordinal: strategy_ordinal,
+    parse: Strategy::parse,
+    label: strategy_label,
+};
+
+/// The collective-implementation axis (§4.2).
+pub static COLLECTIVES_AXIS: Axis<CollectiveImpl> = Axis {
+    key: "collectives",
+    domain: &COLLECTIVES,
+    ordinal: collective_ordinal,
+    parse: CollectiveImpl::parse,
+    label: CollectiveImpl::label,
+};
+
+/// The validation-mode axis (beyond-paper).
+pub static VALIDATION_AXIS: Axis<ValidationMode> = Axis {
+    key: "validation",
+    domain: &[ValidationMode::Full, ValidationMode::Sha256],
+    ordinal: validation_ordinal,
+    parse: ValidationMode::parse,
+    label: ValidationMode::label,
+};
+
 /// Stable strategy ordinal, folded into the per-task seed.
 pub fn strategy_ordinal(s: Strategy) -> u64 {
     match s {
@@ -131,20 +210,13 @@ pub fn strategy_ordinal(s: Strategy) -> u64 {
 
 /// Inverse of [`strategy_ordinal`] (artifact decoding).
 pub fn strategy_from_ordinal(ord: u64) -> Option<Strategy> {
-    [
-        Strategy::Baseline,
-        Strategy::DetectOnly,
-        Strategy::SysCkpt,
-        Strategy::UserCkpt,
-    ]
-    .into_iter()
-    .find(|s| strategy_ordinal(*s) == ord)
+    STRATEGY_AXIS.from_ordinal(ord)
 }
 
-/// Both collective implementations, in sweep order (§4.2: the functional
-/// point-to-point validation first, then the optimized native one).
-pub const COLLECTIVES: [CollectiveImpl; 2] =
-    [CollectiveImpl::PointToPoint, CollectiveImpl::Native];
+/// Short label for report rows and filters (see [`Strategy::label`]).
+pub fn strategy_label(s: Strategy) -> &'static str {
+    s.label()
+}
 
 /// Stable collectives ordinal, folded into the per-task seed.
 pub fn collective_ordinal(c: CollectiveImpl) -> u64 {
@@ -156,7 +228,7 @@ pub fn collective_ordinal(c: CollectiveImpl) -> u64 {
 
 /// Inverse of [`collective_ordinal`] (artifact decoding).
 pub fn collective_from_ordinal(ord: u64) -> Option<CollectiveImpl> {
-    COLLECTIVES.into_iter().find(|c| collective_ordinal(*c) == ord)
+    COLLECTIVES_AXIS.from_ordinal(ord)
 }
 
 /// Short label for report rows and filters (see [`CollectiveImpl::label`]).
@@ -174,14 +246,28 @@ pub fn validation_ordinal(v: ValidationMode) -> u64 {
 
 /// Inverse of [`validation_ordinal`] (artifact decoding).
 pub fn validation_from_ordinal(ord: u64) -> Option<ValidationMode> {
-    [ValidationMode::Full, ValidationMode::Sha256]
-        .into_iter()
-        .find(|v| validation_ordinal(*v) == ord)
+    VALIDATION_AXIS.from_ordinal(ord)
 }
 
 /// Short label for report rows and filters (see [`ValidationMode::label`]).
 pub fn validation_label(v: ValidationMode) -> &'static str {
     v.label()
+}
+
+/// Every key [`CampaignSpec::apply_filter`] accepts: the enum-axis table
+/// keys plus the two scalar keys (`scenario` ids/ranges, `faults` counts)
+/// that aren't enum axes. Error messages render this so the listing can
+/// never drift from the parser.
+pub fn filter_key_listing() -> String {
+    [
+        APP_AXIS.key,
+        STRATEGY_AXIS.key,
+        "scenario",
+        COLLECTIVES_AXIS.key,
+        VALIDATION_AXIS.key,
+        "faults",
+    ]
+    .join("|")
 }
 
 /// Most faults a single campaign cell may arm (each extra fault is an
@@ -271,6 +357,13 @@ impl CampaignSpec {
             // turn a healthy-but-descheduled sibling into a spurious TOE
             // (that would break the jobs-invariance of the report).
             toe_timeout: std::time::Duration::from_millis(2000),
+            // Campaign worlds default to the virtual clock: TOE lapses and
+            // injected delays resolve in modeled ticks at quiescence, so a
+            // timeout-heavy sweep costs no wall time waiting and verdicts
+            // are independent of host load. `--clock wall` restores the
+            // physical clock for comparison runs — the report is
+            // byte-identical either way.
+            clock: ClockMode::Virtual,
             run_dir: std::path::PathBuf::from("runs/campaign"),
             ..RunConfig::default()
         };
@@ -312,11 +405,18 @@ impl CampaignSpec {
             let (key, value) = term.split_once('=').ok_or_else(|| {
                 SedarError::Config(format!("filter term '{term}': expected key=value"))
             })?;
-            match key.trim() {
-                "app" => apps.push(CampaignApp::parse(value.trim())?),
-                "strategy" => strategies.push(Strategy::parse(value.trim())?),
-                "collectives" => collectives.push(CollectiveImpl::parse(value.trim())?),
-                "validation" => validations.push(ValidationMode::parse(value.trim())?),
+            let key = key.trim();
+            match key {
+                k if k == APP_AXIS.key => apps.push((APP_AXIS.parse)(value.trim())?),
+                k if k == STRATEGY_AXIS.key => {
+                    strategies.push((STRATEGY_AXIS.parse)(value.trim())?)
+                }
+                k if k == COLLECTIVES_AXIS.key => {
+                    collectives.push((COLLECTIVES_AXIS.parse)(value.trim())?)
+                }
+                k if k == VALIDATION_AXIS.key => {
+                    validations.push((VALIDATION_AXIS.parse)(value.trim())?)
+                }
                 "faults" => {
                     let k: u32 = value.trim().parse().map_err(|e| {
                         SedarError::Config(format!("faults '{}': {e}", value.trim()))
@@ -351,8 +451,8 @@ impl CampaignSpec {
                 }
                 other => {
                     return Err(SedarError::Config(format!(
-                        "unknown filter key '{other}' \
-                         (app|strategy|scenario|collectives|validation|faults)"
+                        "unknown filter key '{other}' ({})",
+                        filter_key_listing()
                     )))
                 }
             }
@@ -628,5 +728,43 @@ mod tests {
         assert_eq!(strategy_from_ordinal(99), None);
         assert_eq!(validation_from_ordinal(99), None);
         assert_eq!(collective_from_ordinal(99), None);
+    }
+
+    /// One generic check per axis: ordinals roundtrip through the table,
+    /// and every label is an accepted `parse` spelling (so report rows can
+    /// be pasted straight back into filters).
+    fn check_axis<T: Copy + PartialEq + std::fmt::Debug>(axis: &Axis<T>) {
+        for &v in axis.domain {
+            assert_eq!(axis.from_ordinal((axis.ordinal)(v)), Some(v));
+            assert_eq!((axis.parse)((axis.label)(v)).unwrap(), v);
+        }
+        assert_eq!(axis.from_ordinal(u64::MAX), None);
+        assert!((axis.parse)("no-such-value").is_err());
+    }
+
+    #[test]
+    fn axis_tables_cover_their_domains() {
+        check_axis(&APP_AXIS);
+        check_axis(&STRATEGY_AXIS);
+        check_axis(&COLLECTIVES_AXIS);
+        check_axis(&VALIDATION_AXIS);
+    }
+
+    #[test]
+    fn unknown_filter_key_lists_the_registry() {
+        let mut spec = CampaignSpec::new(7);
+        let err = match spec.apply_filter("color=red") {
+            Err(e) => format!("{e}"),
+            Ok(()) => panic!("bogus key accepted"),
+        };
+        assert!(
+            err.contains("app|strategy|scenario|collectives|validation|faults"),
+            "listing missing from: {err}"
+        );
+    }
+
+    #[test]
+    fn campaign_base_defaults_to_virtual_clock() {
+        assert_eq!(CampaignSpec::new(7).base.clock, ClockMode::Virtual);
     }
 }

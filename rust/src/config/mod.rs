@@ -12,6 +12,7 @@ use std::time::Duration;
 use crate::checkpoint::snapshot::Codec;
 use crate::detect::ValidationMode;
 use crate::error::{Result, SedarError};
+use crate::util::clock::ClockMode;
 
 /// The protection strategy — the three SEDAR levels plus the paper's
 /// baseline (§3).
@@ -103,6 +104,14 @@ pub struct RunConfig {
     pub validation: ValidationMode,
     /// Collective implementation.
     pub collectives: CollectiveImpl,
+    /// Clock the run's world lives on: `Wall` (real time; interactive and
+    /// bench default) or `Virtual` (logical ticks, quiescence-driven;
+    /// campaign default). Timeouts below are *modeled time* — under `Wall`
+    /// a `Duration` is real time, under `Virtual` it is the identical count
+    /// of 1 ns ticks (`util::clock::Clock::ticks` is the one conversion
+    /// point), so a given timeout means the same amount of modeled time in
+    /// both modes.
+    pub clock: ClockMode,
     /// Replica-rendezvous lapse after which a missing sibling is a TOE.
     pub toe_timeout: Duration,
     /// Rendezvous lapse for slow sites (checkpoint writes).
@@ -129,6 +138,7 @@ impl Default for RunConfig {
             strategy: Strategy::SysCkpt,
             validation: ValidationMode::Full,
             collectives: CollectiveImpl::PointToPoint,
+            clock: ClockMode::Wall,
             toe_timeout: Duration::from_millis(1500),
             ckpt_timeout: Duration::from_secs(60),
             run_dir: PathBuf::from("runs/default"),
@@ -161,48 +171,24 @@ impl RunConfig {
         }
     }
 
-    /// Apply one `key = value` assignment.
+    /// Apply one `key = value` assignment via the [`KEYS`] registry.
     pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
-        match key {
-            "strategy" => self.strategy = Strategy::parse(value)?,
-            "validation" => self.validation = ValidationMode::parse(value)?,
-            "collectives" => self.collectives = CollectiveImpl::parse(value)?,
-            "toe_timeout_ms" => {
-                self.toe_timeout = Duration::from_millis(parse_num(key, value)?)
-            }
-            "ckpt_timeout_ms" => {
-                self.ckpt_timeout = Duration::from_millis(parse_num(key, value)?)
-            }
-            "run_dir" => self.run_dir = PathBuf::from(value),
-            "codec" => {
-                self.codec = match value {
-                    "raw" => Codec::Raw,
-                    s if s.starts_with("deflate") => {
-                        let lvl = s
-                            .strip_prefix("deflate")
-                            .unwrap()
-                            .trim_matches(|c| c == '(' || c == ')')
-                            .parse()
-                            .unwrap_or(1);
-                        Codec::Deflate(lvl)
-                    }
-                    other => {
-                        return Err(SedarError::Config(format!(
-                            "unknown codec '{other}' (raw|deflateN)"
-                        )))
-                    }
-                }
-            }
-            "use_xla" => self.use_xla = parse_bool(key, value)?,
-            "artifact_dir" => self.artifact_dir = PathBuf::from(value),
-            "seed" => self.seed = parse_num(key, value)?,
-            "max_attempts" => self.max_attempts = parse_num(key, value)? as u32,
-            "echo_trace" => self.echo_trace = parse_bool(key, value)?,
-            other => {
-                return Err(SedarError::Config(format!("unknown config key '{other}'")))
-            }
+        match KEYS.iter().find(|k| k.name == key) {
+            Some(k) => (k.set)(self, value),
+            None => Err(SedarError::Config(format!(
+                "unknown config key '{key}' (valid: {})",
+                Self::key_listing()
+            ))),
         }
-        Ok(())
+    }
+
+    /// Every settable key with its value kind, e.g. `seed <count>` — used
+    /// in the unknown-key error and by `--help` style listings.
+    pub fn key_listing() -> String {
+        KEYS.iter()
+            .map(|k| format!("{} <{}>", k.name, k.kind))
+            .collect::<Vec<_>>()
+            .join(", ")
     }
 
     /// Parse a `key = value` config file body (`#` comments, blank lines ok).
@@ -219,6 +205,160 @@ impl RunConfig {
             cfg.set(k.trim(), v.trim())?;
         }
         Ok(cfg)
+    }
+}
+
+/// One settable config key: name, value kind (for self-describing error
+/// listings) and setter. A new key — like the virtual-clock additions — is
+/// one entry here; `set`, `from_kv` and the unknown-key message all follow.
+struct KeyDef {
+    name: &'static str,
+    /// Value kind shown in listings: `choice`, `duration-ms`, `ticks`,
+    /// `count`, `flag` or `path`.
+    kind: &'static str,
+    set: fn(&mut RunConfig, &str) -> Result<()>,
+}
+
+const KEYS: &[KeyDef] = &[
+    KeyDef {
+        name: "strategy",
+        kind: "choice",
+        set: |c, v| {
+            c.strategy = Strategy::parse(v)?;
+            Ok(())
+        },
+    },
+    KeyDef {
+        name: "validation",
+        kind: "choice",
+        set: |c, v| {
+            c.validation = ValidationMode::parse(v)?;
+            Ok(())
+        },
+    },
+    KeyDef {
+        name: "collectives",
+        kind: "choice",
+        set: |c, v| {
+            c.collectives = CollectiveImpl::parse(v)?;
+            Ok(())
+        },
+    },
+    KeyDef {
+        name: "clock",
+        kind: "choice",
+        set: |c, v| {
+            c.clock = ClockMode::parse(v)?;
+            Ok(())
+        },
+    },
+    KeyDef {
+        name: "toe_timeout_ms",
+        kind: "duration-ms",
+        set: |c, v| {
+            c.toe_timeout = Duration::from_millis(parse_num("toe_timeout_ms", v)?);
+            Ok(())
+        },
+    },
+    KeyDef {
+        // Tick-denominated twin of `toe_timeout_ms` (1 tick = 1 ns): lets
+        // virtual-clock configs state lapses in the clock's own unit.
+        name: "toe_timeout_ticks",
+        kind: "ticks",
+        set: |c, v| {
+            c.toe_timeout = Duration::from_nanos(parse_num("toe_timeout_ticks", v)?);
+            Ok(())
+        },
+    },
+    KeyDef {
+        name: "ckpt_timeout_ms",
+        kind: "duration-ms",
+        set: |c, v| {
+            c.ckpt_timeout = Duration::from_millis(parse_num("ckpt_timeout_ms", v)?);
+            Ok(())
+        },
+    },
+    KeyDef {
+        name: "ckpt_timeout_ticks",
+        kind: "ticks",
+        set: |c, v| {
+            c.ckpt_timeout = Duration::from_nanos(parse_num("ckpt_timeout_ticks", v)?);
+            Ok(())
+        },
+    },
+    KeyDef {
+        name: "run_dir",
+        kind: "path",
+        set: |c, v| {
+            c.run_dir = PathBuf::from(v);
+            Ok(())
+        },
+    },
+    KeyDef {
+        name: "codec",
+        kind: "choice",
+        set: |c, v| {
+            c.codec = parse_codec(v)?;
+            Ok(())
+        },
+    },
+    KeyDef {
+        name: "use_xla",
+        kind: "flag",
+        set: |c, v| {
+            c.use_xla = parse_bool("use_xla", v)?;
+            Ok(())
+        },
+    },
+    KeyDef {
+        name: "artifact_dir",
+        kind: "path",
+        set: |c, v| {
+            c.artifact_dir = PathBuf::from(v);
+            Ok(())
+        },
+    },
+    KeyDef {
+        name: "seed",
+        kind: "count",
+        set: |c, v| {
+            c.seed = parse_num("seed", v)?;
+            Ok(())
+        },
+    },
+    KeyDef {
+        name: "max_attempts",
+        kind: "count",
+        set: |c, v| {
+            c.max_attempts = parse_num("max_attempts", v)? as u32;
+            Ok(())
+        },
+    },
+    KeyDef {
+        name: "echo_trace",
+        kind: "flag",
+        set: |c, v| {
+            c.echo_trace = parse_bool("echo_trace", v)?;
+            Ok(())
+        },
+    },
+];
+
+fn parse_codec(value: &str) -> Result<Codec> {
+    match value {
+        "raw" => Ok(Codec::Raw),
+        s if s.starts_with("deflate") => {
+            let lvl = s
+                .strip_prefix("deflate")
+                .unwrap()
+                .trim_matches(|c| c == '(' || c == ')')
+                .parse()
+                .unwrap_or(1);
+            Ok(Codec::Deflate(lvl))
+        }
+        other => Err(SedarError::Config(format!(
+            "unknown codec '{other}' (raw|deflateN)"
+        ))),
     }
 }
 
@@ -274,5 +414,35 @@ mod tests {
         assert!(RunConfig::from_kv("nope = 1").is_err());
         assert!(RunConfig::from_kv("strategy").is_err());
         assert!(RunConfig::from_kv("use_xla = maybe").is_err());
+    }
+
+    #[test]
+    fn unknown_key_error_lists_the_registry() {
+        let err = RunConfig::from_kv("nope = 1").unwrap_err().to_string();
+        for name in ["strategy", "clock", "toe_timeout_ms", "toe_timeout_ticks"] {
+            assert!(err.contains(name), "'{name}' missing from: {err}");
+        }
+    }
+
+    #[test]
+    fn clock_and_tick_keys_parse() {
+        let cfg = RunConfig::from_kv(
+            "clock = virtual\n\
+             toe_timeout_ticks = 2000000\n\
+             ckpt_timeout_ticks = 5000000000\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.clock, ClockMode::Virtual);
+        assert_eq!(cfg.toe_timeout, Duration::from_millis(2));
+        assert_eq!(cfg.ckpt_timeout, Duration::from_secs(5));
+        assert!(RunConfig::from_kv("clock = sundial").is_err());
+    }
+
+    #[test]
+    fn ms_and_tick_spellings_agree() {
+        // 1 tick = 1 ns: the two spellings of the same lapse must coincide.
+        let a = RunConfig::from_kv("toe_timeout_ms = 250").unwrap();
+        let b = RunConfig::from_kv("toe_timeout_ticks = 250000000").unwrap();
+        assert_eq!(a.toe_timeout, b.toe_timeout);
     }
 }

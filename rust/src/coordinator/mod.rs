@@ -15,7 +15,7 @@ pub mod trace;
 
 use std::path::Path;
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use crate::apps::spec::AppSpec;
 use crate::checkpoint::snapshot::Codec;
@@ -31,6 +31,7 @@ use crate::replica::pair::PairSync;
 use crate::replica::{ReplicaCtx, ReplicaParts};
 use crate::runtime::{Engine, EngineHandle};
 use crate::state::VarStore;
+use crate::util::clock::{Clock, Tick};
 use crate::vmpi::Network;
 
 use trace::Trace;
@@ -184,6 +185,9 @@ struct Shared {
     engine: Option<EngineHandle>,
     metrics: Arc<RunMetrics>,
     trace: Arc<Trace>,
+    /// The world clock, created from `cfg.clock` and shared by the network,
+    /// every pair channel and every replica thread of this run.
+    clock: Clock,
 }
 
 enum AttemptResult {
@@ -232,12 +236,15 @@ impl SedarRun {
     /// Execute the run with *borrowed* dependencies: the caller owns the
     /// engine (if any) and may lend the same deps to many concurrent runs.
     pub fn run_with(&self, deps: &RunDeps) -> Result<RunOutcome> {
-        let t_run = Instant::now();
+        // One clock per run: wall for interactive/bench runs, virtual for
+        // campaign worlds. Every blocking primitive below routes through it.
+        let clock = Clock::new(self.cfg.clock);
+        let t_run = clock.now();
         // Fresh working directory.
         let _ = std::fs::remove_dir_all(&self.cfg.run_dir);
         std::fs::create_dir_all(&self.cfg.run_dir)?;
 
-        let trace = Arc::new(Trace::new(self.cfg.echo_trace));
+        let trace = Arc::new(Trace::with_clock(self.cfg.echo_trace, clock.clone()));
         let metrics = Arc::new(RunMetrics::new());
 
         // Fault injection latches (injected_<i>.txt), external to all
@@ -293,6 +300,7 @@ impl SedarRun {
             engine,
             metrics: Arc::clone(&metrics),
             trace: Arc::clone(&trace),
+            clock,
         };
 
         if self.cfg.strategy == Strategy::Baseline {
@@ -327,10 +335,10 @@ impl SedarRun {
 
         loop {
             attempts += 1;
-            let t_attempt = Instant::now();
+            let t_attempt = shared.clock.now();
             trace.coord(format!("attempt {attempts}: start from {resume}"));
             let result = self.attempt(&shared, resume)?;
-            attempt_walls.push(t_attempt.elapsed());
+            attempt_walls.push(shared.clock.since(t_attempt));
 
             match result {
                 AttemptResult::Completed(master_store) => {
@@ -351,7 +359,7 @@ impl SedarRun {
                         result_correct: Some(correct),
                         final_result: Some(final_result),
                         injected: injector.injected(),
-                        wall: t_run.elapsed(),
+                        wall: shared.clock.since(t_run),
                         attempt_walls,
                         metrics: metrics.snapshot(),
                         trace_dump: trace.dump(),
@@ -376,7 +384,7 @@ impl SedarRun {
                             result_correct: None,
                             final_result: None,
                             injected: injector.injected(),
-                            wall: t_run.elapsed(),
+                            wall: shared.clock.since(t_run),
                             attempt_walls,
                             metrics: metrics.snapshot(),
                             trace_dump: trace.dump(),
@@ -412,16 +420,18 @@ impl SedarRun {
     /// or first detection.
     fn attempt(&self, shared: &Shared, resume: ResumeFrom) -> Result<AttemptResult> {
         let nranks = self.app.nranks();
-        let net = Network::new(nranks);
+        let net = Network::with_clock(nranks, shared.clock.clone());
         let detector = Arc::new(Detector::new());
         detector.attach_network(Arc::clone(&net));
 
-        let mut handles = Vec::with_capacity(nranks * 2);
+        // Build every replica context before registering participants or
+        // spawning: a state-build error must not leave clock slots claimed.
+        let mut ctxs = Vec::with_capacity(nranks * 2);
         for rank in 0..nranks {
-            let pair = PairSync::new(detector.abort_flag());
+            let pair = PairSync::with_clock(detector.abort_flag(), shared.clock.clone());
             let (stores, cursor) = self.build_state(shared, rank, resume)?;
             for (replica, store) in stores.into_iter().enumerate() {
-                let ctx = ReplicaCtx::new(ReplicaParts {
+                ctxs.push(ReplicaCtx::new(ReplicaParts {
                     rank,
                     nranks,
                     replica,
@@ -437,27 +447,45 @@ impl SedarRun {
                     engine: shared.engine.clone(),
                     metrics: Arc::clone(&shared.metrics),
                     trace: Arc::clone(&shared.trace),
+                    clock: shared.clock.clone(),
                     significant: shared.app.significant_vars(rank),
                     solo: false,
-                });
-                let app = Arc::clone(&shared.app);
-                let det = Arc::clone(&detector);
-                handles.push(
-                    std::thread::Builder::new()
-                        .name(format!("r{rank}.{replica}"))
-                        .spawn(move || {
-                            let mut ctx = ctx;
-                            let r = replica_main(&*app, &mut ctx);
-                            if let Err(e) = &r {
-                                if !e.is_fault_signal() {
-                                    det.hard_abort();
-                                }
-                            }
-                            (r, ctx.rank, ctx.replica, ctx.store)
-                        })
-                        .map_err(|e| SedarError::Runtime(format!("spawn: {e}")))?,
-                );
+                }));
             }
+        }
+
+        // Register every replica thread with the world clock BEFORE any of
+        // them can run, so a not-yet-scheduled thread is never mistaken for
+        // a blocked one (which would let virtual time advance early). Each
+        // guard travels into its thread and releases the slot on drop —
+        // thread exit, panic unwind, or a failed spawn alike.
+        shared.clock.join_n(ctxs.len());
+        // Claim every guard up front: if a spawn fails halfway, dropping
+        // this vector (and the failed closure) releases every slot, so
+        // already-running replicas can still quiesce and time out instead
+        // of hanging on a world that never reaches quiescence.
+        let mut guards: Vec<_> = ctxs.iter().map(|_| shared.clock.guard()).collect();
+        let mut handles = Vec::with_capacity(ctxs.len());
+        for ctx in ctxs {
+            let app = Arc::clone(&shared.app);
+            let det = Arc::clone(&detector);
+            let participant = guards.pop().expect("one guard per ctx");
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("r{}.{}", ctx.rank, ctx.replica))
+                    .spawn(move || {
+                        let _participant = participant;
+                        let mut ctx = ctx;
+                        let r = replica_main(&*app, &mut ctx);
+                        if let Err(e) = &r {
+                            if !e.is_fault_signal() {
+                                det.hard_abort();
+                            }
+                        }
+                        (r, ctx.rank, ctx.replica, ctx.store)
+                    })
+                    .map_err(|e| SedarError::Runtime(format!("spawn: {e}")))?,
+            );
         }
 
         let mut master_store: Option<VarStore> = None;
@@ -560,19 +588,19 @@ impl SedarRun {
     /// The paper's baseline (§3): two independent unreplicated instances run
     /// simultaneously; their final results are compared; on mismatch a third
     /// run breaks the tie by majority vote.
-    fn run_baseline(&self, shared: &Shared, t_run: Instant) -> Result<RunOutcome> {
+    fn run_baseline(&self, shared: &Shared, t_run: Tick) -> Result<RunOutcome> {
         let trace = Arc::clone(&shared.trace);
         trace.coord(format!(
             "baseline: two independent instances of {}",
             self.app.name()
         ));
-        let t0 = Instant::now();
+        let t0 = shared.clock.now();
         let (r0, r1) = std::thread::scope(|s| {
             let h0 = s.spawn(|| self.solo_instance(shared, 0));
             let h1 = s.spawn(|| self.solo_instance(shared, 1));
             (h0.join().unwrap(), h1.join().unwrap())
         });
-        let wall_two = t0.elapsed();
+        let wall_two = shared.clock.since(t0);
         let c0 = r0?;
         let c1 = r1?;
         let equal = c0.f32(self.app.result_var())?.iter().zip(
@@ -588,9 +616,9 @@ impl SedarRun {
         } else {
             // Third run + vote (Equation 2's re-execution).
             trace.coord("baseline: MISMATCH — third run + majority vote".to_string());
-            let t2 = Instant::now();
+            let t2 = shared.clock.now();
             let c2 = self.solo_instance(shared, 2)?;
-            attempt_walls.push(t2.elapsed());
+            attempt_walls.push(shared.clock.since(t2));
             attempts = 3;
             let v2 = c2.f32(self.app.result_var())?;
             let matches0 = c0.f32(self.app.result_var())?.iter().zip(v2.iter())
@@ -610,7 +638,7 @@ impl SedarRun {
             result_correct: Some(correct),
             final_result: Some(final_result),
             injected: shared.injector.injected(),
-            wall: t_run.elapsed(),
+            wall: shared.clock.since(t_run),
             attempt_walls,
             metrics: shared.metrics.snapshot(),
             trace_dump: trace.dump(),
@@ -621,12 +649,17 @@ impl SedarRun {
     /// `instance` doubles as the injection "replica" id.
     fn solo_instance(&self, shared: &Shared, instance: usize) -> Result<VarStore> {
         let nranks = self.app.nranks();
-        let net = Network::new(nranks);
+        let net = Network::with_clock(nranks, shared.clock.clone());
         let detector = Arc::new(Detector::new());
         detector.attach_network(Arc::clone(&net));
+        // Same participant discipline as `attempt`: register all ranks of
+        // this instance up front, one pre-claimed guard per thread (a
+        // failed spawn drops the rest, keeping the slot count honest).
+        shared.clock.join_n(nranks);
+        let mut guards: Vec<_> = (0..nranks).map(|_| shared.clock.guard()).collect();
         let mut handles = Vec::with_capacity(nranks);
         for rank in 0..nranks {
-            let pair = PairSync::new(detector.abort_flag());
+            let pair = PairSync::with_clock(detector.abort_flag(), shared.clock.clone());
             let store = shared.app.init_store(rank, shared.cfg.seed);
             let ctx = ReplicaCtx::new(ReplicaParts {
                 rank,
@@ -644,15 +677,18 @@ impl SedarRun {
                 engine: shared.engine.clone(),
                 metrics: Arc::clone(&shared.metrics),
                 trace: Arc::clone(&shared.trace),
+                clock: shared.clock.clone(),
                 significant: Vec::new(),
                 solo: true,
             });
             let app = Arc::clone(&shared.app);
             let det = Arc::clone(&detector);
+            let participant = guards.pop().expect("one guard per rank");
             handles.push(
                 std::thread::Builder::new()
                     .name(format!("solo{instance}.r{rank}"))
                     .spawn(move || {
+                        let _participant = participant;
                         let mut ctx = ctx;
                         let r = replica_main(&*app, &mut ctx);
                         if r.is_err() {

@@ -5,9 +5,15 @@
 //! rollback attempts and the final successful validation. [`Trace`] records
 //! exactly that sequence with timestamps; `sedar run --trace` and the
 //! injection-campaign example print it.
+//!
+//! Timestamps come from the run's [`Clock`], so under a virtual clock every
+//! trace line is stamped in deterministic modeled time — two runs of the
+//! same seed produce identical stamps.
 
 use std::sync::Mutex;
-use std::time::{Duration, Instant};
+use std::time::Duration;
+
+use crate::util::clock::{Clock, Tick};
 
 /// One trace line.
 #[derive(Debug, Clone)]
@@ -37,15 +43,24 @@ impl TraceEvent {
 
 /// Append-only, thread-safe event log for one SEDAR run (across attempts).
 pub struct Trace {
-    start: Instant,
+    clock: Clock,
+    start: Tick,
     events: Mutex<Vec<TraceEvent>>,
     echo: bool,
 }
 
 impl Trace {
+    /// Wall-clock trace (tests and standalone callers).
     pub fn new(echo: bool) -> Trace {
+        Trace::with_clock(echo, Clock::wall())
+    }
+
+    /// Trace stamped from the run's clock.
+    pub fn with_clock(echo: bool, clock: Clock) -> Trace {
+        let start = clock.now();
         Trace {
-            start: Instant::now(),
+            clock,
+            start,
             events: Mutex::new(Vec::new()),
             echo,
         }
@@ -53,7 +68,7 @@ impl Trace {
 
     pub fn emit(&self, rank: usize, replica: usize, msg: impl Into<String>) {
         let ev = TraceEvent {
-            elapsed: self.start.elapsed(),
+            elapsed: self.clock.since(self.start),
             rank,
             replica,
             msg: msg.into(),
@@ -118,5 +133,21 @@ mod tests {
         assert!(s.contains("coord"));
         assert!(s.contains("hello"));
         assert!(s.contains("ms]"));
+    }
+
+    #[test]
+    fn virtual_clock_stamps_are_deterministic() {
+        let stamps = |_: usize| {
+            let c = Clock::virtual_clock();
+            c.join_n(1);
+            let _g = c.guard();
+            let t = Trace::with_clock(false, c.clone());
+            t.coord("begin");
+            c.sleep(Duration::from_millis(250));
+            t.coord("after-sleep");
+            t.dump()
+        };
+        assert_eq!(stamps(0), stamps(1));
+        assert!(stamps(0).contains("[  250.000 ms]"));
     }
 }

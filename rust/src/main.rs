@@ -105,6 +105,13 @@ campaign flags:
                 both); beyond-paper axes: validation=full|sha256,
                 faults=1..4
   --scenario K  shorthand for --filter scenario=K
+  --clock M     wall | virtual (default: virtual). Virtual runs the sweep
+                on per-world logical clocks: TOE lapses and injected delays
+                resolve in modeled ticks the instant a world quiesces, so
+                timeout-heavy cells cost no wall time and verdicts are
+                independent of host load. The report is byte-identical in
+                both modes. (`sedar run` takes --clock too; there the
+                default is wall.)
   --report FMT  md (default) or csv
   --xla         compute through the AOT artifacts (needs the pjrt feature)
   --run-dir D   campaign working directory (default runs/campaign-<pid>)
@@ -213,6 +220,9 @@ fn build_cfg(args: &Args) -> Result<RunConfig> {
     if let Some(ms) = args.get("toe-timeout-ms") {
         cfg.set("toe_timeout_ms", ms)?;
     }
+    if let Some(c) = args.get("clock") {
+        cfg.set("clock", c)?;
+    }
     Ok(cfg)
 }
 
@@ -284,6 +294,12 @@ fn cmd_campaign(args: &Args) -> Result<()> {
         spec.apply_filter(&format!("scenario={k}"))?;
     }
     spec.base.use_xla = args.has("xla");
+    // Campaigns default to the virtual clock (set in `CampaignSpec::new`);
+    // `--clock wall` restores the physical clock for comparison runs. The
+    // deterministic report is byte-identical either way.
+    if let Some(c) = args.get("clock") {
+        spec.base.set("clock", c)?;
+    }
     spec.base.run_dir = match args.get("run-dir") {
         Some(d) => d.into(),
         None => format!("runs/campaign-{}", std::process::id()).into(),

@@ -29,7 +29,7 @@ pub mod driver;
 pub mod pair;
 
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::Duration;
 
 use crate::checkpoint::snapshot::Codec;
 use crate::checkpoint::user::UserSnapshot;
@@ -43,6 +43,7 @@ use crate::metrics::RunMetrics;
 use crate::runtime::EngineHandle;
 use crate::state::{Buf, DType, Var, VarStore};
 use crate::util::bytes::TokenBuf;
+use crate::util::clock::Clock;
 use crate::vmpi::Endpoint;
 
 use pair::{PairError, PairSync};
@@ -176,6 +177,9 @@ pub struct ReplicaCtx {
     engine: Option<EngineHandle>,
     metrics: Arc<RunMetrics>,
     trace: Arc<Trace>,
+    /// The world's clock: every timing span and injected delay is modeled
+    /// time, so verdicts are load-independent under a virtual clock.
+    clock: Clock,
     /// Names of this rank's significant variables (user-level checkpoints).
     significant: Vec<String>,
     /// Solo (baseline) mode: no replica sibling exists. All pair
@@ -202,6 +206,7 @@ pub struct ReplicaParts {
     pub engine: Option<EngineHandle>,
     pub metrics: Arc<RunMetrics>,
     pub trace: Arc<Trace>,
+    pub clock: Clock,
     pub significant: Vec<String>,
     pub solo: bool,
 }
@@ -224,6 +229,7 @@ impl ReplicaCtx {
             engine: p.engine,
             metrics: p.metrics,
             trace: p.trace,
+            clock: p.clock,
             significant: p.significant,
             solo: p.solo,
         }
@@ -245,6 +251,16 @@ impl ReplicaCtx {
         &self.metrics
     }
 
+    pub fn clock(&self) -> &Clock {
+        &self.clock
+    }
+
+    /// Sleep for `d` of modeled time (instant in wall terms under a virtual
+    /// clock) — the injector's delay hook routes through here.
+    pub fn sleep(&self, d: Duration) {
+        self.clock.sleep(d);
+    }
+
     // ------------------------------------------------------------ internals
 
     /// Rendezvous with the sibling, exchanging `token`. Converts a missing
@@ -253,11 +269,12 @@ impl ReplicaCtx {
         if self.solo {
             return Ok(token);
         }
-        let t0 = Instant::now();
+        let t0 = self.clock.now();
         let r = self
             .pair
             .exchange(self.replica, token, self.cfg.toe_timeout);
-        self.metrics.add_duration(&self.metrics.sync_ns, t0.elapsed());
+        self.metrics
+            .add_duration(&self.metrics.sync_ns, self.clock.since(t0));
         self.metrics.add(&self.metrics.sync_events, 1);
         match r {
             Ok(tok) => Ok(tok),
@@ -275,9 +292,10 @@ impl ReplicaCtx {
         if self.solo {
             return Ok(vec![1].into());
         }
-        let t0 = Instant::now();
+        let t0 = self.clock.now();
         let r = self.pair.pop_mine(self.replica, self.cfg.toe_timeout);
-        self.metrics.add_duration(&self.metrics.sync_ns, t0.elapsed());
+        self.metrics
+            .add_duration(&self.metrics.sync_ns, self.clock.since(t0));
         match r {
             Ok(tok) => Ok(tok),
             Err(PairError::Aborted) => Err(SedarError::Aborted),
@@ -341,10 +359,10 @@ impl ReplicaCtx {
             ValidationMode::Full => {
                 if self.is_lead() {
                     let peer = self.pop_from_sibling_site(site)?;
-                    let t0 = Instant::now();
+                    let t0 = self.clock.now();
                     let eq = buffers_equal(bytes, peer.as_bytes());
                     self.metrics
-                        .add_duration(&self.metrics.compare_ns, t0.elapsed());
+                        .add_duration(&self.metrics.compare_ns, self.clock.since(t0));
                     self.push_to_sibling(vec![eq as u8].into());
                     eq
                 } else {
@@ -359,10 +377,10 @@ impl ReplicaCtx {
             }
             ValidationMode::Sha256 => {
                 let token = {
-                    let t0 = Instant::now();
+                    let t0 = self.clock.now();
                     let tok = Token::new(ValidationMode::Sha256, bytes);
                     self.metrics
-                        .add_duration(&self.metrics.compare_ns, t0.elapsed());
+                        .add_duration(&self.metrics.compare_ns, self.clock.since(t0));
                     tok
                 };
                 let peer = self.pair_exchange(token.to_wire().into(), site)?;
@@ -667,7 +685,7 @@ impl ReplicaCtx {
         let chain = Arc::clone(self.sys_chain.as_ref().ok_or_else(|| {
             SedarError::Checkpoint("system checkpoint without a chain".into())
         })?);
-        let t0 = Instant::now();
+        let t0 = self.clock.now();
         // The snapshot resumes at the phase AFTER this checkpoint.
         let resume_cursor = self.cursor + 1;
         if self.is_lead() {
@@ -703,10 +721,10 @@ impl ReplicaCtx {
             // Wait for the leader to finish the coordinated store. Uses the
             // (long) checkpoint lapse, not the TOE lapse: disk writes are
             // legitimately slow.
-            let t0w = Instant::now();
+            let t0w = self.clock.now();
             let r = self.pair.pop_mine(self.replica, self.cfg.ckpt_timeout);
             self.metrics
-                .add_duration(&self.metrics.sync_ns, t0w.elapsed());
+                .add_duration(&self.metrics.sync_ns, self.clock.since(t0w));
             match r {
                 Ok(_) => {}
                 Err(PairError::Aborted) => return Err(SedarError::Aborted),
@@ -721,7 +739,7 @@ impl ReplicaCtx {
             }
         }
         self.metrics
-            .add_duration(&self.metrics.sys_ckpt_ns, t0.elapsed());
+            .add_duration(&self.metrics.sys_ckpt_ns, self.clock.since(t0));
         Ok(())
     }
 
@@ -733,7 +751,7 @@ impl ReplicaCtx {
         let chain = Arc::clone(self.user_chain.as_ref().ok_or_else(|| {
             SedarError::Checkpoint("user checkpoint without a chain".into())
         })?);
-        let t0 = Instant::now();
+        let t0 = self.clock.now();
         let sig: Vec<&str> = self.significant.iter().map(|s| s.as_str()).collect();
         // Serialize the significant variables once; hash and (on the lead)
         // store those bytes directly (perf change P5).
@@ -802,7 +820,7 @@ impl ReplicaCtx {
                 }
             }
             self.metrics
-                .add_duration(&self.metrics.user_ckpt_ns, t0.elapsed());
+                .add_duration(&self.metrics.user_ckpt_ns, self.clock.since(t0));
             Ok(())
         } else {
             // Corrupted candidate: not stored; detection fires here (the
@@ -822,12 +840,13 @@ impl ReplicaCtx {
     where
         F: FnOnce(&[Var]) -> Result<Vec<Var>>,
     {
-        let t0 = Instant::now();
+        let t0 = self.clock.now();
         let out = match (&self.engine, self.cfg.use_xla) {
             (Some(engine), true) => engine.execute(artifact, inputs),
             _ => fallback(&inputs),
         };
-        self.metrics.add_duration(&self.metrics.exec_ns, t0.elapsed());
+        self.metrics
+            .add_duration(&self.metrics.exec_ns, self.clock.since(t0));
         self.metrics.add(&self.metrics.execs, 1);
         out
     }
@@ -847,7 +866,7 @@ impl ReplicaCtx {
     /// Compute-loop hook: index-corruption (TOE) injection. Returns the
     /// number of sub-blocks to redo; the app re-runs them and this replica
     /// arrives late at the next rendezvous.
-    pub fn maybe_index_rollback(&self, phase: u64, subblock: u64) -> Option<(u64, std::time::Duration)> {
+    pub fn maybe_index_rollback(&self, phase: u64, subblock: u64) -> Option<(u64, Duration)> {
         let r = self
             .injector
             .maybe_index_rollback(phase, subblock, self.rank, self.replica);

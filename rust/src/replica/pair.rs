@@ -13,7 +13,9 @@
 //! within the configured timeout, the waiting replica reports a Time-Out
 //! Error (§3.1: "if an appreciable delay is noticed between the two
 //! replicas, it is considered that a silent error has caused the separation
-//! of their flows").
+//! of their flows"). The lapse is modeled time on the world's
+//! [`Clock`] — real milliseconds under a wall clock, logical ticks under a
+//! virtual one, where a TOE fires the instant the world quiesces.
 //!
 //! Tokens are [`TokenBuf`]s: small control blobs stay owned vectors, while
 //! full-payload comparison tokens cross as zero-copy
@@ -21,9 +23,11 @@
 //! never the message bytes.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
-use std::time::{Duration, Instant};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::util::clock::{Clock, Wait};
 
 pub use crate::util::bytes::TokenBuf;
 
@@ -39,10 +43,9 @@ pub enum PairError {
 #[derive(Default)]
 struct Cell {
     q: Mutex<VecDeque<TokenBuf>>,
-    cv: Condvar,
     /// Queue depth mirror — lets the consumer spin without touching the
     /// mutex (no contention with the producer).
-    depth: std::sync::atomic::AtomicUsize,
+    depth: AtomicUsize,
 }
 
 /// Rendezvous + token-exchange channel between the two replicas of a rank.
@@ -50,18 +53,15 @@ pub struct PairSync {
     /// `cells[r]` holds tokens destined *for* replica `r`.
     cells: [Cell; 2],
     abort: Arc<AtomicBool>,
+    clock: Clock,
 }
-
-/// Poll quantum while blocked: bounds abort-detection latency without
-/// costing anything on the fast path (a present token is consumed without
-/// waiting; an arriving one wakes the waiter via the condvar immediately).
-const POLL_QUANTUM: Duration = Duration::from_millis(2);
 
 /// Spin iterations before parking in [`PairSync::pop_mine`]. Adaptive:
 /// spinning is only profitable when the sibling replica can actually run
 /// concurrently — on a single-core host it *starves* the sibling (measured
 /// 3.3 µs → 30 µs per rendezvous; EXPERIMENTS.md §Perf, change P2), so we
-/// park immediately there.
+/// park immediately there. Virtual-clock worlds never spin: a waiter must
+/// count as blocked for quiescence detection to see the world as idle.
 fn spin_rounds() -> u32 {
     use std::sync::OnceLock;
     static ROUNDS: OnceLock<u32> = OnceLock::new();
@@ -78,11 +78,24 @@ fn spin_rounds() -> u32 {
 }
 
 impl PairSync {
+    /// Wall-clock pair (interactive/test default).
     pub fn new(abort: Arc<AtomicBool>) -> Arc<PairSync> {
+        Self::with_clock(abort, Clock::wall())
+    }
+
+    /// Pair whose rendezvous waits route through `clock` — the coordinator
+    /// passes the per-world clock so detector aborts (which notify the same
+    /// clock via the network) wake pair waiters too.
+    pub fn with_clock(abort: Arc<AtomicBool>, clock: Clock) -> Arc<PairSync> {
         Arc::new(PairSync {
             cells: [Cell::default(), Cell::default()],
             abort,
+            clock,
         })
+    }
+
+    pub fn clock(&self) -> &Clock {
+        &self.clock
     }
 
     fn is_aborted(&self) -> bool {
@@ -98,51 +111,69 @@ impl PairSync {
             q.push_back(token);
             cell.depth.store(q.len(), Ordering::Release);
         }
-        cell.cv.notify_all();
+        self.clock.notify();
     }
 
-    /// Take the next token destined for me, waiting up to `lapse`.
+    /// Take the next token destined for me, waiting up to `lapse` of
+    /// modeled time.
     ///
-    /// Fast path: lockstep replicas arrive at rendezvous within
-    /// microseconds of each other, so we spin briefly before parking on the
-    /// condvar — saves the futex round trip on the detection hot path
+    /// Fast path (wall clocks only): lockstep replicas arrive at rendezvous
+    /// within microseconds of each other, so we spin briefly before parking
+    /// — saves the futex round trip on the detection hot path
     /// (EXPERIMENTS.md §Perf, change P2).
     pub fn pop_mine(&self, me: usize, lapse: Duration) -> Result<TokenBuf, PairError> {
         debug_assert!(me < 2);
         let cell = &self.cells[me];
-        // Spin phase: watch the lock-free depth mirror; only touch the
-        // mutex once a token is visible (no producer contention).
-        let mut spins = 0u32;
-        let max_spins = spin_rounds();
-        while spins < max_spins {
-            if cell.depth.load(Ordering::Acquire) > 0 {
-                break;
+        if !self.clock.is_virtual() {
+            // Spin phase: watch the lock-free depth mirror; only touch the
+            // mutex once a token is visible (no producer contention).
+            let mut spins = 0u32;
+            let max_spins = spin_rounds();
+            while spins < max_spins {
+                if cell.depth.load(Ordering::Acquire) > 0 {
+                    break;
+                }
+                if self.is_aborted() {
+                    return Err(PairError::Aborted);
+                }
+                std::hint::spin_loop();
+                spins += 1;
             }
-            if self.is_aborted() {
-                return Err(PairError::Aborted);
-            }
-            std::hint::spin_loop();
-            spins += 1;
         }
         // Park phase (or immediate pop after a successful spin).
-        let deadline = Instant::now() + lapse;
-        let mut q = cell.q.lock().unwrap();
+        let deadline = self.clock.deadline_after(lapse);
         loop {
-            if self.is_aborted() {
-                return Err(PairError::Aborted);
-            }
-            if let Some(tok) = q.pop_front() {
-                cell.depth.store(q.len(), Ordering::Release);
+            let gen = self.clock.subscribe();
+            if let Some(tok) = self.try_pop(cell)? {
                 return Ok(tok);
             }
-            let now = Instant::now();
-            if now >= deadline {
-                return Err(PairError::Timeout);
+            match self.clock.wait(gen, Some(deadline)) {
+                Wait::Notified => continue,
+                Wait::TimedOut => {
+                    // The lapse and the sibling's push can race; prefer the
+                    // token, exactly like a just-in-time arrival.
+                    match self.try_pop(cell)? {
+                        Some(tok) => return Ok(tok),
+                        None => return Err(PairError::Timeout),
+                    }
+                }
+                // A poisoned world cannot rendezvous again; unwind like a
+                // safe-stop so the replica thread exits promptly.
+                Wait::Poisoned => return Err(PairError::Aborted),
             }
-            let wait = POLL_QUANTUM.min(deadline - now);
-            let (guard, _) = cell.cv.wait_timeout(q, wait).unwrap();
-            q = guard;
         }
+    }
+
+    fn try_pop(&self, cell: &Cell) -> Result<Option<TokenBuf>, PairError> {
+        let mut q = cell.q.lock().unwrap();
+        if self.is_aborted() {
+            return Err(PairError::Aborted);
+        }
+        let tok = q.pop_front();
+        if tok.is_some() {
+            cell.depth.store(q.len(), Ordering::Release);
+        }
+        Ok(tok)
     }
 
     /// Symmetric rendezvous: deposit my token, take the sibling's.
@@ -206,19 +237,33 @@ mod tests {
     #[test]
     fn missing_sibling_times_out() {
         let (p, _) = pair();
-        let t0 = Instant::now();
         let err = p.pop_mine(0, Duration::from_millis(50)).unwrap_err();
         assert_eq!(err, PairError::Timeout);
-        assert!(t0.elapsed() >= Duration::from_millis(45));
+    }
+
+    #[test]
+    fn missing_sibling_times_out_instantly_under_virtual_clock() {
+        let clock = Clock::virtual_clock();
+        clock.join_n(1);
+        let _g = clock.guard();
+        let abort = Arc::new(AtomicBool::new(false));
+        let p = PairSync::with_clock(abort, clock.clone());
+        // A 10-minute TOE lapse costs zero wall time in an idle world.
+        let err = p.pop_mine(0, Duration::from_secs(600)).unwrap_err();
+        assert_eq!(err, PairError::Timeout);
+        assert!(clock.now() >= Clock::ticks(Duration::from_secs(600)));
     }
 
     #[test]
     fn abort_interrupts_wait() {
+        // Either interleaving passes: abort-before-pop fails fast, pop-
+        // before-abort is woken by the clock notification that production
+        // aborts issue (Network::abort notifies the shared world clock).
         let (p, abort) = pair();
-        let abort2 = Arc::clone(&abort);
+        let p2 = Arc::clone(&p);
         let h = std::thread::spawn(move || {
-            std::thread::sleep(Duration::from_millis(20));
-            abort2.store(true, Ordering::SeqCst);
+            abort.store(true, Ordering::SeqCst);
+            p2.clock().notify();
         });
         let err = p.pop_mine(0, Duration::from_secs(10)).unwrap_err();
         assert_eq!(err, PairError::Aborted);

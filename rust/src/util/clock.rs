@@ -1,0 +1,523 @@
+//! Logical time for SEDAR worlds.
+//!
+//! Every timeout-facing decision in the runtime (TOE rendezvous lapses,
+//! checkpoint watchdogs, injected delays) goes through a [`Clock`] handle
+//! instead of `std::time` directly. Two implementations share one API:
+//!
+//! * [`ClockMode::Wall`] — real time. `now()` is nanoseconds since the clock
+//!   was created and waits park on a condvar with a real deadline. This is
+//!   the default for interactive and bench runs.
+//! * [`ClockMode::Virtual`] — a per-world shared logical clock. Time never
+//!   flows on its own: whenever **every registered participant** of the world
+//!   is blocked in a clock wait, the clock jumps to the earliest pending
+//!   deadline (quiescence-driven advance). An idle world costs nothing and a
+//!   timeout verdict becomes a deterministic function of the dependency
+//!   structure, not of scheduler load.
+//!
+//! One tick is one nanosecond of modeled time, so `Duration` values convert
+//! exactly in both directions ([`Clock::ticks`] is the single conversion
+//! point). Under `Wall` the two notions coincide; under `Virtual` a
+//! "2000 ms" `toe_timeout` means 2×10⁹ ticks of logical time that elapse
+//! instantly in wall terms once the world quiesces.
+//!
+//! ## Waiter protocol (lost-wakeup free)
+//!
+//! Producers call [`Clock::notify`] after publishing state (a mailbox push,
+//! a pair-cell push, an abort flag). Consumers capture a generation with
+//! [`Clock::subscribe`] **before** re-checking their condition, then call
+//! [`Clock::wait`]; if the generation moved in between, the wait returns
+//! [`Wait::Notified`] immediately. This is exactly the condvar
+//! generation-counter idiom, centralized so the virtual clock can observe
+//! "every thread is blocked" without cooperation from call sites.
+//!
+//! ## Participants
+//!
+//! The virtual advance rule needs to know how many threads belong to the
+//! world: register them with [`Clock::join_n`] *before* spawning (so a
+//! not-yet-scheduled thread can never be mistaken for a blocked one) and
+//! claim one [`ClockGuard`] per thread, which leaves on drop — including
+//! during panic unwind, so a crashed replica cannot freeze the world's time.
+//! If the world quiesces with no pending deadline at all, no event can ever
+//! wake it; the clock poisons itself and every waiter unwinds with
+//! [`Wait::Poisoned`] instead of deadlocking the process.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::error::{Result, SedarError};
+
+/// Logical time stamp: nanoseconds of modeled time since the clock epoch.
+pub type Tick = u64;
+
+/// Which clock implementation a run uses. Campaigns default to `Virtual`;
+/// interactive/bench runs default to `Wall`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClockMode {
+    Wall,
+    Virtual,
+}
+
+impl ClockMode {
+    pub fn parse(s: &str) -> Result<ClockMode> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "wall" => Ok(ClockMode::Wall),
+            "virtual" => Ok(ClockMode::Virtual),
+            other => Err(SedarError::Config(format!(
+                "unknown clock mode '{other}' (expected wall|virtual)"
+            ))),
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            ClockMode::Wall => "wall",
+            ClockMode::Virtual => "virtual",
+        }
+    }
+}
+
+/// Outcome of a [`Clock::wait`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Wait {
+    /// The generation moved: re-check your condition.
+    Notified,
+    /// The deadline passed (really, or by virtual advance).
+    TimedOut,
+    /// Virtual only: the world quiesced with no pending deadline — a true
+    /// deadlock. Unwind with an error instead of hanging.
+    Poisoned,
+}
+
+struct WallInner {
+    epoch: Instant,
+    gen: Mutex<u64>,
+    cv: Condvar,
+}
+
+#[derive(Default)]
+struct VirtState {
+    now: Tick,
+    gen: u64,
+    /// Threads registered via `join_n` and not yet departed.
+    participants: usize,
+    /// Threads currently parked inside `wait`.
+    blocked: usize,
+    /// Pending deadlines (tick → number of waiters registered on it).
+    deadlines: BTreeMap<Tick, usize>,
+    poisoned: bool,
+}
+
+struct VirtInner {
+    state: Mutex<VirtState>,
+    cv: Condvar,
+}
+
+enum Inner {
+    Wall(WallInner),
+    Virtual(VirtInner),
+}
+
+/// Cheap-to-clone handle on a world's clock.
+pub struct Clock(Arc<Inner>);
+
+impl Clone for Clock {
+    fn clone(&self) -> Clock {
+        Clock(Arc::clone(&self.0))
+    }
+}
+
+impl std::fmt::Debug for Clock {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Clock({})", self.mode().label())
+    }
+}
+
+impl Clock {
+    pub fn new(mode: ClockMode) -> Clock {
+        match mode {
+            ClockMode::Wall => Clock::wall(),
+            ClockMode::Virtual => Clock::virtual_clock(),
+        }
+    }
+
+    /// Real time; `now()` starts at 0 at construction.
+    pub fn wall() -> Clock {
+        Clock(Arc::new(Inner::Wall(WallInner {
+            epoch: Instant::now(),
+            gen: Mutex::new(0),
+            cv: Condvar::new(),
+        })))
+    }
+
+    /// Logical time; `now()` starts at 0 and advances only at quiescence.
+    pub fn virtual_clock() -> Clock {
+        Clock(Arc::new(Inner::Virtual(VirtInner {
+            state: Mutex::new(VirtState::default()),
+            cv: Condvar::new(),
+        })))
+    }
+
+    pub fn mode(&self) -> ClockMode {
+        match &*self.0 {
+            Inner::Wall(_) => ClockMode::Wall,
+            Inner::Virtual(_) => ClockMode::Virtual,
+        }
+    }
+
+    pub fn is_virtual(&self) -> bool {
+        matches!(&*self.0, Inner::Virtual(_))
+    }
+
+    /// The single `Duration` → tick conversion point: 1 tick = 1 ns.
+    pub fn ticks(d: Duration) -> Tick {
+        u64::try_from(d.as_nanos()).unwrap_or(u64::MAX)
+    }
+
+    /// Current time in ticks since the clock epoch.
+    pub fn now(&self) -> Tick {
+        match &*self.0 {
+            Inner::Wall(w) => Self::wall_now(w),
+            Inner::Virtual(v) => v.state.lock().unwrap().now,
+        }
+    }
+
+    fn wall_now(w: &WallInner) -> Tick {
+        u64::try_from(w.epoch.elapsed().as_nanos()).unwrap_or(u64::MAX)
+    }
+
+    /// Absolute deadline `d` from now, saturating.
+    pub fn deadline_after(&self, d: Duration) -> Tick {
+        self.now().saturating_add(Self::ticks(d))
+    }
+
+    /// Elapsed modeled time since an earlier [`Clock::now`] reading.
+    pub fn since(&self, t0: Tick) -> Duration {
+        Duration::from_nanos(self.now().saturating_sub(t0))
+    }
+
+    // ------------------------------------------------------------------
+    // Producer / consumer protocol
+    // ------------------------------------------------------------------
+
+    /// Capture the current generation. Call **before** checking the
+    /// condition you intend to wait on.
+    pub fn subscribe(&self) -> u64 {
+        match &*self.0 {
+            Inner::Wall(w) => *w.gen.lock().unwrap(),
+            Inner::Virtual(v) => v.state.lock().unwrap().gen,
+        }
+    }
+
+    /// Publish: bump the generation and wake every waiter. Producers call
+    /// this after making state observable (push + unlock, abort store, ...).
+    pub fn notify(&self) {
+        match &*self.0 {
+            Inner::Wall(w) => {
+                *w.gen.lock().unwrap() += 1;
+                w.cv.notify_all();
+            }
+            Inner::Virtual(v) => {
+                v.state.lock().unwrap().gen += 1;
+                v.cv.notify_all();
+            }
+        }
+    }
+
+    /// Park until the generation moves past `gen` or `deadline` (absolute
+    /// ticks) passes. `None` waits indefinitely — under `Virtual` that is
+    /// only safe if some other participant holds a deadline or will produce
+    /// an event; a fully-quiescent deadline-free world poisons instead.
+    pub fn wait(&self, gen: u64, deadline: Option<Tick>) -> Wait {
+        match &*self.0 {
+            Inner::Wall(w) => Self::wall_wait(w, gen, deadline),
+            Inner::Virtual(v) => Self::virtual_wait(v, gen, deadline),
+        }
+    }
+
+    fn wall_wait(w: &WallInner, gen: u64, deadline: Option<Tick>) -> Wait {
+        let mut g = w.gen.lock().unwrap();
+        loop {
+            if *g != gen {
+                return Wait::Notified;
+            }
+            match deadline {
+                None => {
+                    g = w.cv.wait(g).unwrap();
+                }
+                Some(d) => {
+                    let now = Self::wall_now(w);
+                    if now >= d {
+                        return Wait::TimedOut;
+                    }
+                    let (guard, _res) = w
+                        .cv
+                        .wait_timeout(g, Duration::from_nanos(d - now))
+                        .unwrap();
+                    g = guard;
+                }
+            }
+        }
+    }
+
+    fn virtual_wait(v: &VirtInner, gen: u64, deadline: Option<Tick>) -> Wait {
+        let mut st = v.state.lock().unwrap();
+        if st.poisoned {
+            return Wait::Poisoned;
+        }
+        if st.gen != gen {
+            return Wait::Notified;
+        }
+        if let Some(d) = deadline {
+            if st.now >= d {
+                return Wait::TimedOut;
+            }
+            *st.deadlines.entry(d).or_insert(0) += 1;
+        }
+        st.blocked += 1;
+        let out = loop {
+            if st.poisoned {
+                break Wait::Poisoned;
+            }
+            if st.gen != gen {
+                break Wait::Notified;
+            }
+            if let Some(d) = deadline {
+                if st.now >= d {
+                    break Wait::TimedOut;
+                }
+            }
+            // Quiescence: every registered participant is parked here (>=
+            // covers unregistered standalone waiters, e.g. unit tests).
+            if st.blocked >= st.participants {
+                match st.deadlines.keys().next().copied() {
+                    Some(d) => {
+                        if d > st.now {
+                            st.now = d;
+                        }
+                        // The advance is itself an event: bump + broadcast so
+                        // every waiter (this one included) re-evaluates.
+                        st.gen += 1;
+                        v.cv.notify_all();
+                        continue;
+                    }
+                    None => {
+                        st.poisoned = true;
+                        v.cv.notify_all();
+                        break Wait::Poisoned;
+                    }
+                }
+            }
+            st = v.cv.wait(st).unwrap();
+        };
+        st.blocked -= 1;
+        if let Some(d) = deadline {
+            if let Some(c) = st.deadlines.get_mut(&d) {
+                *c -= 1;
+                if *c == 0 {
+                    st.deadlines.remove(&d);
+                }
+            }
+        }
+        out
+    }
+
+    /// Block until modeled time reaches `deadline` (absolute ticks).
+    pub fn wait_until(&self, deadline: Tick) {
+        loop {
+            let gen = self.subscribe();
+            if self.now() >= deadline {
+                return;
+            }
+            match self.wait(gen, Some(deadline)) {
+                Wait::Notified => continue,
+                Wait::TimedOut | Wait::Poisoned => return,
+            }
+        }
+    }
+
+    /// Sleep for `d` of modeled time (instantaneous in wall terms under
+    /// `Virtual` once the world quiesces).
+    pub fn sleep(&self, d: Duration) {
+        self.wait_until(self.deadline_after(d));
+    }
+
+    // ------------------------------------------------------------------
+    // Participant lifecycle (virtual advance bookkeeping)
+    // ------------------------------------------------------------------
+
+    /// Pre-register `k` participant slots **before** spawning their threads,
+    /// so a thread that has not been scheduled yet can never be mistaken for
+    /// a blocked one. No-op under `Wall`.
+    pub fn join_n(&self, k: usize) {
+        if let Inner::Virtual(v) = &*self.0 {
+            let mut st = v.state.lock().unwrap();
+            st.participants += k;
+        }
+    }
+
+    /// Claim one pre-registered slot; the returned guard releases it on
+    /// drop — including during panic unwind, so a crashed thread cannot
+    /// freeze the world's time.
+    pub fn guard(&self) -> ClockGuard {
+        ClockGuard {
+            clock: self.clone(),
+        }
+    }
+
+    fn leave(&self) {
+        if let Inner::Virtual(v) = &*self.0 {
+            let mut st = v.state.lock().unwrap();
+            st.participants = st.participants.saturating_sub(1);
+            // Departure can create quiescence among the remaining waiters.
+            st.gen += 1;
+            v.cv.notify_all();
+        }
+    }
+}
+
+/// Releases one participant slot on drop (see [`Clock::guard`]).
+pub struct ClockGuard {
+    clock: Clock,
+}
+
+impl Drop for ClockGuard {
+    fn drop(&mut self) {
+        self.clock.leave();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    #[test]
+    fn clock_mode_parses() {
+        assert_eq!(ClockMode::parse("wall").unwrap(), ClockMode::Wall);
+        assert_eq!(ClockMode::parse(" Virtual ").unwrap(), ClockMode::Virtual);
+        assert!(ClockMode::parse("cosmic").is_err());
+    }
+
+    #[test]
+    fn ticks_convert_exactly() {
+        assert_eq!(Clock::ticks(Duration::from_millis(2)), 2_000_000);
+        assert_eq!(Clock::ticks(Duration::from_secs(1)), 1_000_000_000);
+    }
+
+    #[test]
+    fn wall_clock_advances() {
+        let c = Clock::wall();
+        let t0 = c.now();
+        std::thread::yield_now();
+        assert!(c.now() >= t0);
+        assert_eq!(c.mode(), ClockMode::Wall);
+    }
+
+    #[test]
+    fn virtual_sleep_is_instant_in_wall_terms() {
+        let c = Clock::virtual_clock();
+        c.join_n(1);
+        let _g = c.guard();
+        let real = Instant::now();
+        c.sleep(Duration::from_secs(3600));
+        assert!(c.now() >= Clock::ticks(Duration::from_secs(3600)));
+        assert!(
+            real.elapsed() < Duration::from_secs(5),
+            "an hour of modeled time must not cost an hour of wall time"
+        );
+    }
+
+    #[test]
+    fn virtual_timeout_fires_at_quiescence() {
+        let c = Clock::virtual_clock();
+        c.join_n(1);
+        let _g = c.guard();
+        let gen = c.subscribe();
+        let deadline = c.deadline_after(Duration::from_millis(50));
+        assert_eq!(c.wait(gen, Some(deadline)), Wait::TimedOut);
+        assert_eq!(c.now(), deadline);
+    }
+
+    #[test]
+    fn notify_wakes_virtual_waiter_before_deadline() {
+        let c = Clock::virtual_clock();
+        c.join_n(2);
+        let flag = Arc::new(AtomicBool::new(false));
+        let c2 = c.clone();
+        let f2 = Arc::clone(&flag);
+        let h = std::thread::spawn(move || {
+            let _g = c2.guard();
+            f2.store(true, Ordering::SeqCst);
+            c2.notify();
+            // Park until the consumer's deadline (far future) or a wake;
+            // consumer departure bumps the generation and frees us.
+            let gen = c2.subscribe();
+            let _ = c2.wait(gen, Some(c2.deadline_after(Duration::from_secs(60))));
+        });
+        {
+            let _g = c.guard();
+            loop {
+                let gen = c.subscribe();
+                if flag.load(Ordering::SeqCst) {
+                    break;
+                }
+                let w = c.wait(gen, Some(c.deadline_after(Duration::from_secs(60))));
+                assert_ne!(w, Wait::Poisoned);
+            }
+        }
+        h.join().unwrap();
+        // The flag path, not the 60 s deadline, must have ended the loop.
+        assert!(c.now() < Clock::ticks(Duration::from_secs(60)));
+    }
+
+    #[test]
+    fn deadline_free_quiescence_poisons() {
+        let c = Clock::virtual_clock();
+        c.join_n(1);
+        let _g = c.guard();
+        let gen = c.subscribe();
+        assert_eq!(c.wait(gen, None), Wait::Poisoned);
+        // And stays poisoned for later waiters.
+        let gen = c.subscribe();
+        assert_eq!(c.wait(gen, Some(1)), Wait::Poisoned);
+    }
+
+    #[test]
+    fn guard_drop_releases_participant() {
+        let c = Clock::virtual_clock();
+        c.join_n(2);
+        let c2 = c.clone();
+        let h = std::thread::spawn(move || {
+            let _g = c2.guard();
+            // Leaves on drop; no clock interaction otherwise.
+        });
+        h.join().unwrap();
+        let _g = c.guard();
+        // With the other slot released, a single waiter quiesces the world.
+        let gen = c.subscribe();
+        let deadline = c.deadline_after(Duration::from_millis(5));
+        assert_eq!(c.wait(gen, Some(deadline)), Wait::TimedOut);
+    }
+
+    #[test]
+    fn earliest_deadline_wins() {
+        let c = Clock::virtual_clock();
+        c.join_n(2);
+        let c2 = c.clone();
+        let h = std::thread::spawn(move || {
+            let _g = c2.guard();
+            c2.sleep(Duration::from_millis(10));
+            c2.now()
+        });
+        let woke_at = {
+            let _g = c.guard();
+            c.sleep(Duration::from_millis(200));
+            c.now()
+        };
+        let early = h.join().unwrap();
+        assert!(early >= Clock::ticks(Duration::from_millis(10)));
+        assert!(early <= Clock::ticks(Duration::from_millis(200)));
+        assert!(woke_at >= Clock::ticks(Duration::from_millis(200)));
+    }
+}

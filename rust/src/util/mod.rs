@@ -4,6 +4,7 @@
 
 pub mod arena;
 pub mod bytes;
+pub mod clock;
 pub mod codec;
 pub mod logger;
 pub mod prng;

@@ -12,6 +12,12 @@
 //! §4.2's note that the functional-validation implementation of SEDAR is
 //! point-to-point based.
 //!
+//! All blocking goes through the world's [`Clock`]: a send or abort
+//! publishes via [`Clock::notify`], a receive parks via the
+//! generation-capture [`Clock::wait`] protocol. Under a virtual clock this
+//! is what lets `recv_timeout` deadlines fire in logical ticks the instant
+//! the world quiesces, instead of burning real time.
+//!
 //! A network-wide **abort flag** implements SEDAR's safe-stop: when any rank
 //! reports a fault, the coordinator calls [`Network::abort`] and every
 //! blocked or future operation unwinds with [`SedarError::Aborted`], so all
@@ -21,11 +27,12 @@ pub mod collectives;
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use crate::error::{Result, SedarError};
 use crate::state::Var;
+use crate::util::clock::{Clock, Wait};
 
 /// A message in flight.
 #[derive(Debug)]
@@ -38,7 +45,6 @@ pub struct Envelope {
 #[derive(Default)]
 struct Mailbox {
     q: Mutex<VecDeque<Envelope>>,
-    cv: Condvar,
 }
 
 /// Byte / message accounting, kept per network (Table 3's communication
@@ -55,16 +61,25 @@ pub struct Network {
     n: usize,
     boxes: Vec<Mailbox>,
     aborted: AtomicBool,
+    clock: Clock,
     pub stats: NetStats,
 }
 
 impl Network {
+    /// Wall-clock network (interactive/test default).
     pub fn new(nranks: usize) -> Arc<Network> {
+        Self::with_clock(nranks, Clock::wall())
+    }
+
+    /// Network whose blocking operations route through `clock` — the
+    /// coordinator passes the per-world clock here so every rank shares it.
+    pub fn with_clock(nranks: usize, clock: Clock) -> Arc<Network> {
         assert!(nranks >= 1);
         Arc::new(Network {
             n: nranks,
             boxes: (0..nranks).map(|_| Mailbox::default()).collect(),
             aborted: AtomicBool::new(false),
+            clock,
             stats: NetStats::default(),
         })
     }
@@ -73,13 +88,14 @@ impl Network {
         self.n
     }
 
+    pub fn clock(&self) -> &Clock {
+        &self.clock
+    }
+
     /// Safe-stop: wake every blocked receiver with [`SedarError::Aborted`].
     pub fn abort(&self) {
         self.aborted.store(true, Ordering::SeqCst);
-        for b in &self.boxes {
-            let _g = b.q.lock().unwrap();
-            b.cv.notify_all();
-        }
+        self.clock.notify();
     }
 
     pub fn is_aborted(&self) -> bool {
@@ -143,7 +159,7 @@ impl Endpoint {
                 payload,
             });
         }
-        mbox.cv.notify_all();
+        self.net.clock.notify();
         self.net.stats.messages.fetch_add(1, Ordering::Relaxed);
         self.net.stats.bytes.fetch_add(bytes, Ordering::Relaxed);
         Ok(())
@@ -154,36 +170,54 @@ impl Endpoint {
         self.recv_inner(src, tag, None)
     }
 
-    /// Blocking receive with a deadline (used by watchdog paths).
+    /// Blocking receive with a deadline (used by watchdog paths). The
+    /// timeout is modeled time: ticks under a virtual clock, real time
+    /// under a wall clock.
     pub fn recv_timeout(&self, src: usize, tag: u32, timeout: Duration) -> Result<Var> {
         self.recv_inner(src, tag, Some(timeout))
     }
 
+    fn try_take(&self, src: usize, tag: u32) -> Result<Option<Var>> {
+        let mut q = self.net.boxes[self.rank].q.lock().unwrap();
+        if self.net.is_aborted() {
+            return Err(SedarError::Aborted);
+        }
+        Ok(q
+            .iter()
+            .position(|e| e.src == src && e.tag == tag)
+            .map(|pos| q.remove(pos).unwrap().payload))
+    }
+
     fn recv_inner(&self, src: usize, tag: u32, timeout: Option<Duration>) -> Result<Var> {
-        let mbox = &self.net.boxes[self.rank];
-        let deadline = timeout.map(|t| std::time::Instant::now() + t);
-        let mut q = mbox.q.lock().unwrap();
+        let clock = &self.net.clock;
+        let deadline = timeout.map(|t| clock.deadline_after(t));
         loop {
-            if self.net.is_aborted() {
-                return Err(SedarError::Aborted);
+            // Generation first, queue check second: a send that lands after
+            // the check has already bumped the generation, so the wait below
+            // returns `Notified` instead of losing the wakeup.
+            let gen = clock.subscribe();
+            if let Some(v) = self.try_take(src, tag)? {
+                return Ok(v);
             }
-            if let Some(pos) = q.iter().position(|e| e.src == src && e.tag == tag) {
-                return Ok(q.remove(pos).unwrap().payload);
-            }
-            match deadline {
-                None => {
-                    q = mbox.cv.wait(q).unwrap();
-                }
-                Some(d) => {
-                    let now = std::time::Instant::now();
-                    if now >= d {
-                        return Err(SedarError::Vmpi(format!(
-                            "recv timeout waiting for src={src} tag={tag} at rank {}",
-                            self.rank
-                        )));
+            match clock.wait(gen, deadline) {
+                Wait::Notified => continue,
+                Wait::TimedOut => {
+                    // The deadline and a matching send can race; prefer the
+                    // message, exactly like a real just-in-time arrival.
+                    if let Some(v) = self.try_take(src, tag)? {
+                        return Ok(v);
                     }
-                    let (guard, _res) = mbox.cv.wait_timeout(q, d - now).unwrap();
-                    q = guard;
+                    return Err(SedarError::Vmpi(format!(
+                        "recv timeout waiting for src={src} tag={tag} at rank {}",
+                        self.rank
+                    )));
+                }
+                Wait::Poisoned => {
+                    return Err(SedarError::Vmpi(format!(
+                        "virtual-clock deadlock: all participants blocked with no \
+                         pending deadline (recv src={src} tag={tag} at rank {})",
+                        self.rank
+                    )));
                 }
             }
         }
@@ -241,11 +275,12 @@ mod tests {
 
     #[test]
     fn cross_thread_blocking_recv() {
+        // No ordering sleep needed: the receiver blocks until the sender's
+        // clock notification, whichever thread runs first.
         let net = Network::new(2);
         let b = net.endpoint(1);
         let net2 = Arc::clone(&net);
         let h = std::thread::spawn(move || {
-            std::thread::sleep(Duration::from_millis(20));
             net2.endpoint(0).send(1, 0, v(&[9.0])).unwrap();
         });
         let got = b.recv(0, 0).unwrap();
@@ -255,11 +290,12 @@ mod tests {
 
     #[test]
     fn abort_wakes_blocked_receiver() {
+        // Either interleaving passes: abort-before-recv fails fast, recv-
+        // before-abort is woken by the abort's clock notification.
         let net = Network::new(2);
         let b = net.endpoint(1);
         let net2 = Arc::clone(&net);
         let h = std::thread::spawn(move || {
-            std::thread::sleep(Duration::from_millis(20));
             net2.abort();
         });
         let err = b.recv(0, 0).unwrap_err();
@@ -273,6 +309,35 @@ mod tests {
         let b = net.endpoint(1);
         let err = b.recv_timeout(0, 0, Duration::from_millis(10)).unwrap_err();
         assert!(matches!(err, SedarError::Vmpi(_)));
+    }
+
+    #[test]
+    fn recv_timeout_fires_instantly_under_virtual_clock() {
+        let clock = Clock::virtual_clock();
+        clock.join_n(1);
+        let _g = clock.guard();
+        let net = Network::with_clock(2, clock.clone());
+        let b = net.endpoint(1);
+        // An hour of modeled waiting elapses the moment the world quiesces.
+        let err = b
+            .recv_timeout(0, 0, Duration::from_secs(3600))
+            .unwrap_err();
+        assert!(matches!(err, SedarError::Vmpi(_)));
+        assert!(clock.now() >= Clock::ticks(Duration::from_secs(3600)));
+    }
+
+    #[test]
+    fn deadline_free_virtual_recv_poisons_instead_of_hanging() {
+        let clock = Clock::virtual_clock();
+        clock.join_n(1);
+        let _g = clock.guard();
+        let net = Network::with_clock(2, clock);
+        let b = net.endpoint(1);
+        let err = b.recv(0, 0).unwrap_err();
+        match err {
+            SedarError::Vmpi(msg) => assert!(msg.contains("deadlock"), "got: {msg}"),
+            other => panic!("expected Vmpi deadlock error, got {other:?}"),
+        }
     }
 
     #[test]

@@ -1,0 +1,132 @@
+//! The virtual-time contract (PR 6):
+//!
+//! 1. a TOE scenario run twice under the virtual clock produces identical
+//!    verdicts AND identical modeled-time stamps on the key trace lines —
+//!    logical time is part of the deterministic state, not a measurement;
+//! 2. a multi-minute modeled rendezvous lapse costs (almost) no wall time:
+//!    the clock jumps to the deadline at quiescence instead of waiting;
+//! 3. the campaign64 sweep (64 scenarios × sys-ckpt × both collectives =
+//!    128 cells) renders a byte-identical deterministic report under the
+//!    wall and virtual clocks — the clock mode is an execution detail,
+//!    never an observable of the experiment.
+
+use std::sync::Arc;
+
+use sedar::apps::matmul::MatmulApp;
+use sedar::campaign::{run_campaign, CampaignSpec};
+use sedar::config::{RunConfig, Strategy};
+use sedar::coordinator::{RunOutcome, SedarRun};
+use sedar::error::FaultClass;
+use sedar::util::clock::ClockMode;
+use sedar::workfault;
+
+/// Run one index-corruption (TOE) scenario under the virtual clock with a
+/// deliberately huge rendezvous lapse: 60 s of modeled waiting, plus the
+/// injected delay that comfortably exceeds it. Under a wall clock this run
+/// would take minutes; under the virtual clock it must be near-instant.
+fn toe_run_virtual(tag: &str) -> RunOutcome {
+    let app = MatmulApp::new(64, 4);
+    let mut cfg = RunConfig::for_tests(tag);
+    cfg.strategy = Strategy::SysCkpt;
+    cfg.clock = ClockMode::Virtual;
+    cfg.toe_timeout = std::time::Duration::from_secs(60);
+    let cat = workfault::catalog(&app);
+    let sc = cat
+        .iter()
+        .find(|s| s.effect == FaultClass::Toe)
+        .expect("catalog has TOE scenarios");
+    let inj = workfault::injection_for(&app, sc, &cfg);
+    let out = SedarRun::new(Arc::new(app), cfg.clone(), Some(inj))
+        .run()
+        .unwrap();
+    let _ = std::fs::remove_dir_all(&cfg.run_dir);
+    out
+}
+
+/// The deterministic skeleton of a trace: the injection and detection
+/// lines, stamps included, sorted so benign cross-thread interleaving of
+/// unrelated lines cannot fail the comparison.
+fn key_lines(dump: &str) -> Vec<String> {
+    let mut lines: Vec<String> = dump
+        .lines()
+        .filter(|l| l.contains("INJECTED") || l.contains("TOE"))
+        .map(String::from)
+        .collect();
+    lines.sort();
+    lines
+}
+
+#[test]
+fn toe_under_virtual_clock_is_deterministic_and_instant() {
+    let t0 = std::time::Instant::now();
+    let a = toe_run_virtual("vclock-toe");
+    let b = toe_run_virtual("vclock-toe");
+    // 2× (60 s lapse + 180 s injected delay) of modeled time; if any of it
+    // leaked into wall time we would blow far past this bound.
+    assert!(
+        t0.elapsed() < std::time::Duration::from_secs(30),
+        "virtual-clock TOE runs took {:?} of wall time — modeled waiting \
+         is leaking into real waiting",
+        t0.elapsed()
+    );
+
+    // Identical verdicts...
+    assert_eq!(a.completed, b.completed);
+    assert_eq!(a.attempts, b.attempts);
+    assert_eq!(a.restarts, b.restarts);
+    assert_eq!(a.result_correct, b.result_correct);
+    assert!(a.injected && b.injected);
+    assert_eq!(format!("{:?}", a.detections), format!("{:?}", b.detections));
+    assert!(
+        a.detections.iter().any(|d| d.class == FaultClass::Toe),
+        "expected a TOE detection, got {:?}",
+        a.detections
+    );
+    // ...and identical modeled-time stamps on the key trace lines: under
+    // the virtual clock, *when* something happened is replayable state.
+    let (ka, kb) = (key_lines(&a.trace_dump), key_lines(&b.trace_dump));
+    assert!(!ka.is_empty(), "no INJECTED/TOE lines in:\n{}", a.trace_dump);
+    assert_eq!(ka, kb, "tick stamps or key events diverged between runs");
+    assert!(
+        ka.iter().all(|l| l.contains("ms]")),
+        "key lines lost their stamps: {ka:?}"
+    );
+    // The modeled run time saw the lapse even though the wall never did.
+    assert!(
+        a.wall >= std::time::Duration::from_secs(60),
+        "modeled run time {:?} is shorter than the TOE lapse",
+        a.wall
+    );
+}
+
+#[test]
+fn wall_and_virtual_campaigns_render_byte_identical_reports() {
+    let report_for = |mode: ClockMode, tag: &str| {
+        let mut spec = CampaignSpec::new(0xC0FFEE);
+        spec.apply_filter("app=matmul,strategy=sys").unwrap();
+        spec.jobs = 4;
+        let toe_timeout = spec.base.toe_timeout;
+        spec.base = RunConfig::for_tests(tag);
+        // Keep the campaign's generous rendezvous lapse: under the wall
+        // clock a loaded pool must never turn a descheduled-but-healthy
+        // sibling into a spurious TOE.
+        spec.base.toe_timeout = toe_timeout;
+        spec.base.clock = mode;
+        let report = run_campaign(&spec).unwrap();
+        let _ = std::fs::remove_dir_all(&spec.base.run_dir);
+        report
+    };
+    let virt = report_for(ClockMode::Virtual, "clockeq-virt");
+    let wall = report_for(ClockMode::Wall, "clockeq-wall");
+    assert_eq!(virt.outcomes.len(), 128);
+    assert!(
+        virt.verdict(),
+        "virtual-clock campaign diverged from the oracle:\n{}",
+        virt.deterministic_report()
+    );
+    assert_eq!(
+        wall.deterministic_report(),
+        virt.deterministic_report(),
+        "the clock mode leaked into the deterministic report"
+    );
+}

@@ -130,7 +130,10 @@ fn abort_unblocks_whole_world() {
             ep.recv((r + 1) % 4, 1)
         }));
     }
-    std::thread::sleep(std::time::Duration::from_millis(30));
+    // No grace sleep needed: the clock's gen-counter protocol makes
+    // abort-before-block and abort-while-blocked both race-free (a
+    // receiver that subscribed before the abort sees the gen bump; one
+    // that subscribes after sees the flag).
     net.abort();
     for h in handles {
         let err = h.join().unwrap().unwrap_err();

@@ -27,7 +27,7 @@ use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-use crate::util::clock::{Clock, Wait};
+use crate::util::clock::{Clock, Wait, WaitPoint};
 
 pub use crate::util::bytes::TokenBuf;
 
@@ -40,12 +40,25 @@ pub enum PairError {
     Aborted,
 }
 
-#[derive(Default)]
 struct Cell {
     q: Mutex<VecDeque<TokenBuf>>,
     /// Queue depth mirror — lets the consumer spin without touching the
     /// mutex (no contention with the producer).
     depth: AtomicUsize,
+    /// This cell's wakeup channel: the sibling's push notifies it, the
+    /// owning replica's pop parks on it (targeted under a wall clock, an
+    /// alias for the world clock under a virtual one).
+    wp: WaitPoint,
+}
+
+impl Cell {
+    fn new(wp: WaitPoint) -> Cell {
+        Cell {
+            q: Mutex::new(VecDeque::new()),
+            depth: AtomicUsize::new(0),
+            wp,
+        }
+    }
 }
 
 /// Rendezvous + token-exchange channel between the two replicas of a rank.
@@ -87,8 +100,12 @@ impl PairSync {
     /// passes the per-world clock so detector aborts (which notify the same
     /// clock via the network) wake pair waiters too.
     pub fn with_clock(abort: Arc<AtomicBool>, clock: Clock) -> Arc<PairSync> {
+        let cells = [
+            Cell::new(clock.wait_point()),
+            Cell::new(clock.wait_point()),
+        ];
         Arc::new(PairSync {
-            cells: [Cell::default(), Cell::default()],
+            cells,
             abort,
             clock,
         })
@@ -111,7 +128,7 @@ impl PairSync {
             q.push_back(token);
             cell.depth.store(q.len(), Ordering::Release);
         }
-        self.clock.notify();
+        cell.wp.notify();
     }
 
     /// Take the next token destined for me, waiting up to `lapse` of
@@ -143,11 +160,11 @@ impl PairSync {
         // Park phase (or immediate pop after a successful spin).
         let deadline = self.clock.deadline_after(lapse);
         loop {
-            let gen = self.clock.subscribe();
+            let gen = cell.wp.subscribe();
             if let Some(tok) = self.try_pop(cell)? {
                 return Ok(tok);
             }
-            match self.clock.wait(gen, Some(deadline)) {
+            match cell.wp.wait(gen, Some(deadline)) {
                 Wait::Notified => continue,
                 Wait::TimedOut => {
                     // The lapse and the sibling's push can race; prefer the

@@ -9,10 +9,14 @@
 //!   the default for interactive and bench runs.
 //! * [`ClockMode::Virtual`] — a per-world shared logical clock. Time never
 //!   flows on its own: whenever **every registered participant** of the world
-//!   is blocked in a clock wait, the clock jumps to the earliest pending
-//!   deadline (quiescence-driven advance). An idle world costs nothing and a
-//!   timeout verdict becomes a deterministic function of the dependency
-//!   structure, not of scheduler load.
+//!   is blocked in a clock wait **and no notified waiter still has its
+//!   wakeup in flight**, the clock jumps to the earliest pending deadline
+//!   (quiescence-driven advance). The in-flight condition keeps the advance
+//!   schedule-independent: a producer that notifies and immediately blocks
+//!   cannot drag time forward before the notified consumer has re-checked
+//!   its condition. An idle world costs nothing and a timeout verdict
+//!   becomes a deterministic function of the dependency structure, not of
+//!   scheduler load.
 //!
 //! One tick is one nanosecond of modeled time, so `Duration` values convert
 //! exactly in both directions ([`Clock::ticks`] is the single conversion
@@ -30,6 +34,14 @@
 //! generation-counter idiom, centralized so the virtual clock can observe
 //! "every thread is blocked" without cooperation from call sites.
 //!
+//! Hot producer/consumer pairs (a mailbox, a pair cell) run the same
+//! protocol over a [`WaitPoint`] from [`Clock::wait_point`]: under `Wall`
+//! the point has its own lock and condvar so a send wakes only its
+//! receiver, while under `Virtual` it aliases the world clock so
+//! quiescence detection still sees every waiter. The broadcast
+//! [`Clock::notify`] reaches both the world channel and every point —
+//! that is what lets one abort wake every blocked thread.
+//!
 //! ## Participants
 //!
 //! The virtual advance rule needs to know how many threads belong to the
@@ -42,7 +54,7 @@
 //! [`Wait::Poisoned`] instead of deadlocking the process.
 
 use std::collections::BTreeMap;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, Weak};
 use std::time::{Duration, Instant};
 
 use crate::error::{Result, SedarError};
@@ -82,17 +94,27 @@ impl ClockMode {
 pub enum Wait {
     /// The generation moved: re-check your condition.
     Notified,
-    /// The deadline passed (really, or by virtual advance).
+    /// The deadline passed (really, or by virtual advance). Reported even if
+    /// the generation moved too — callers re-check their condition once
+    /// before treating it as a timeout (the just-in-time-arrival pattern).
     TimedOut,
     /// Virtual only: the world quiesced with no pending deadline — a true
     /// deadlock. Unwind with an error instead of hanging.
     Poisoned,
 }
 
+struct WallPoint {
+    gen: Mutex<u64>,
+    cv: Condvar,
+}
+
 struct WallInner {
     epoch: Instant,
     gen: Mutex<u64>,
     cv: Condvar,
+    /// Targeted wakeup channels handed out by [`Clock::wait_point`]. The
+    /// broadcast [`Clock::notify`] (abort/safe-stop) must reach them all.
+    points: Mutex<Vec<Weak<WallPoint>>>,
 }
 
 #[derive(Default)]
@@ -103,9 +125,26 @@ struct VirtState {
     participants: usize,
     /// Threads currently parked inside `wait`.
     blocked: usize,
+    /// Blocked waiters whose captured generation predates `gen`: they have a
+    /// wakeup in flight and must re-check their condition before the world
+    /// can be considered quiescent. Advancing time while `stale > 0` would
+    /// jump past work a notified-but-not-yet-scheduled thread is about to do,
+    /// making virtual timestamps depend on OS scheduling.
+    stale: usize,
     /// Pending deadlines (tick → number of waiters registered on it).
     deadlines: BTreeMap<Tick, usize>,
     poisoned: bool,
+}
+
+impl VirtState {
+    /// Every generation bump makes every currently-parked waiter stale: they
+    /// all captured an older generation (a thread between `subscribe` and
+    /// `wait` is caught by the pre-block generation check instead and never
+    /// parks).
+    fn bump_gen(&mut self) {
+        self.gen += 1;
+        self.stale = self.blocked;
+    }
 }
 
 struct VirtInner {
@@ -147,6 +186,7 @@ impl Clock {
             epoch: Instant::now(),
             gen: Mutex::new(0),
             cv: Condvar::new(),
+            points: Mutex::new(Vec::new()),
         })))
     }
 
@@ -216,9 +256,20 @@ impl Clock {
             Inner::Wall(w) => {
                 *w.gen.lock().unwrap() += 1;
                 w.cv.notify_all();
+                // Broadcast must also reach every targeted wait point, so an
+                // abort wakes receivers parked on their own mailbox channel.
+                let points: Vec<Arc<WallPoint>> = {
+                    let mut pts = w.points.lock().unwrap();
+                    pts.retain(|p| p.strong_count() > 0);
+                    pts.iter().filter_map(Weak::upgrade).collect()
+                };
+                for p in points {
+                    *p.gen.lock().unwrap() += 1;
+                    p.cv.notify_all();
+                }
             }
             Inner::Virtual(v) => {
-                v.state.lock().unwrap().gen += 1;
+                v.state.lock().unwrap().bump_gen();
                 v.cv.notify_all();
             }
         }
@@ -236,24 +287,32 @@ impl Clock {
     }
 
     fn wall_wait(w: &WallInner, gen: u64, deadline: Option<Tick>) -> Wait {
-        let mut g = w.gen.lock().unwrap();
+        Self::wall_wait_on(w, &w.gen, &w.cv, gen, deadline)
+    }
+
+    fn wall_wait_on(
+        w: &WallInner,
+        genm: &Mutex<u64>,
+        cv: &Condvar,
+        gen: u64,
+        deadline: Option<Tick>,
+    ) -> Wait {
+        let mut g = genm.lock().unwrap();
         loop {
             if *g != gen {
                 return Wait::Notified;
             }
             match deadline {
                 None => {
-                    g = w.cv.wait(g).unwrap();
+                    g = cv.wait(g).unwrap();
                 }
                 Some(d) => {
                     let now = Self::wall_now(w);
                     if now >= d {
                         return Wait::TimedOut;
                     }
-                    let (guard, _res) = w
-                        .cv
-                        .wait_timeout(g, Duration::from_nanos(d - now))
-                        .unwrap();
+                    let dur = Duration::from_nanos(d - now);
+                    let (guard, _res) = cv.wait_timeout(g, dur).unwrap();
                     g = guard;
                 }
             }
@@ -279,17 +338,23 @@ impl Clock {
             if st.poisoned {
                 break Wait::Poisoned;
             }
-            if st.gen != gen {
-                break Wait::Notified;
-            }
+            // Deadline before generation: a quiescence advance bumps the
+            // generation as part of moving `now`, so a waiter whose own
+            // deadline was just reached must still report `TimedOut`, not
+            // `Notified` (callers re-check their condition on `TimedOut`
+            // anyway, so a racing notify is never lost).
             if let Some(d) = deadline {
                 if st.now >= d {
                     break Wait::TimedOut;
                 }
             }
+            if st.gen != gen {
+                break Wait::Notified;
+            }
             // Quiescence: every registered participant is parked here (>=
-            // covers unregistered standalone waiters, e.g. unit tests).
-            if st.blocked >= st.participants {
+            // covers unregistered standalone waiters, e.g. unit tests) and
+            // none of them has an unprocessed wakeup in flight.
+            if st.blocked >= st.participants && st.stale == 0 {
                 match st.deadlines.keys().next().copied() {
                     Some(d) => {
                         if d > st.now {
@@ -297,7 +362,7 @@ impl Clock {
                         }
                         // The advance is itself an event: bump + broadcast so
                         // every waiter (this one included) re-evaluates.
-                        st.gen += 1;
+                        st.bump_gen();
                         v.cv.notify_all();
                         continue;
                     }
@@ -311,6 +376,10 @@ impl Clock {
             st = v.cv.wait(st).unwrap();
         };
         st.blocked -= 1;
+        if st.gen != gen {
+            // This waiter was one of the stale ones; its re-check is done.
+            st.stale = st.stale.saturating_sub(1);
+        }
         if let Some(d) = deadline {
             if let Some(c) = st.deadlines.get_mut(&d) {
                 *c -= 1;
@@ -365,13 +434,92 @@ impl Clock {
         }
     }
 
+    // ------------------------------------------------------------------
+    // Targeted wakeup channels
+    // ------------------------------------------------------------------
+
+    /// A wakeup channel for one waiter group (a mailbox, a pair cell).
+    /// Producers notify the point their consumer waits on; the broadcast
+    /// [`Clock::notify`] still reaches every point.
+    ///
+    /// Under `Wall` each point owns a private generation counter and
+    /// condvar, so the send hot path locks only the target group's channel
+    /// and wakes only that group's waiters (the per-mailbox-condvar
+    /// behavior the runtime had before the Clock API — EXPERIMENTS.md §Perf
+    /// notes microsecond-level sensitivity on the rendezvous path). Under
+    /// `Virtual` the point is an alias for the world clock: quiescence
+    /// detection needs every blocked thread observable through one
+    /// protocol, and wakeup targeting buys nothing when threads block on
+    /// logical time.
+    pub fn wait_point(&self) -> WaitPoint {
+        let wall = match &*self.0 {
+            Inner::Wall(w) => {
+                let p = Arc::new(WallPoint {
+                    gen: Mutex::new(0),
+                    cv: Condvar::new(),
+                });
+                let mut pts = w.points.lock().unwrap();
+                pts.retain(|q| q.strong_count() > 0);
+                pts.push(Arc::downgrade(&p));
+                Some(p)
+            }
+            Inner::Virtual(_) => None,
+        };
+        WaitPoint {
+            clock: self.clone(),
+            wall,
+        }
+    }
+
     fn leave(&self) {
         if let Inner::Virtual(v) = &*self.0 {
             let mut st = v.state.lock().unwrap();
             st.participants = st.participants.saturating_sub(1);
             // Departure can create quiescence among the remaining waiters.
-            st.gen += 1;
+            st.bump_gen();
             v.cv.notify_all();
+        }
+    }
+}
+
+/// A targeted wakeup channel obtained from [`Clock::wait_point`]. Same
+/// `subscribe`/`notify`/`wait` protocol as the clock itself, scoped to one
+/// waiter group under a wall clock and transparently world-wide under a
+/// virtual one.
+pub struct WaitPoint {
+    clock: Clock,
+    wall: Option<Arc<WallPoint>>,
+}
+
+impl WaitPoint {
+    pub fn clock(&self) -> &Clock {
+        &self.clock
+    }
+
+    /// Capture this channel's generation (see [`Clock::subscribe`]).
+    pub fn subscribe(&self) -> u64 {
+        match &self.wall {
+            Some(p) => *p.gen.lock().unwrap(),
+            None => self.clock.subscribe(),
+        }
+    }
+
+    /// Wake this channel's waiters (see [`Clock::notify`]).
+    pub fn notify(&self) {
+        match &self.wall {
+            Some(p) => {
+                *p.gen.lock().unwrap() += 1;
+                p.cv.notify_all();
+            }
+            None => self.clock.notify(),
+        }
+    }
+
+    /// Park on this channel (see [`Clock::wait`]).
+    pub fn wait(&self, gen: u64, deadline: Option<Tick>) -> Wait {
+        match (&self.wall, &*self.clock.0) {
+            (Some(p), Inner::Wall(w)) => Clock::wall_wait_on(w, &p.gen, &p.cv, gen, deadline),
+            _ => self.clock.wait(gen, deadline),
         }
     }
 }
@@ -450,10 +598,12 @@ mod tests {
             let _g = c2.guard();
             f2.store(true, Ordering::SeqCst);
             c2.notify();
-            // Park until the consumer's deadline (far future) or a wake;
-            // consumer departure bumps the generation and frees us.
-            let gen = c2.subscribe();
-            let _ = c2.wait(gen, Some(c2.deadline_after(Duration::from_secs(60))));
+            // The guard drop (departure) also bumps the generation, so a
+            // consumer that parked before the flag store is woken either
+            // way. The producer must NOT park on a deadline of its own
+            // here: once the consumer departs it would be the sole
+            // participant and quiescence would legitimately advance time
+            // to that deadline, breaking the now() assertion below.
         });
         {
             let _g = c.guard();
@@ -469,6 +619,30 @@ mod tests {
         h.join().unwrap();
         // The flag path, not the 60 s deadline, must have ended the loop.
         assert!(c.now() < Clock::ticks(Duration::from_secs(60)));
+    }
+
+    #[test]
+    fn all_same_deadline_waiters_time_out() {
+        // The quiescence advance bumps the generation as part of moving
+        // `now`; both the advancing thread and the other waiter on the same
+        // deadline must still report TimedOut, not Notified.
+        let c = Clock::virtual_clock();
+        c.join_n(2);
+        let c2 = c.clone();
+        let deadline = Clock::ticks(Duration::from_millis(5));
+        let h = std::thread::spawn(move || {
+            let _g = c2.guard();
+            let gen = c2.subscribe();
+            c2.wait(gen, Some(deadline))
+        });
+        let mine = {
+            let _g = c.guard();
+            let gen = c.subscribe();
+            c.wait(gen, Some(deadline))
+        };
+        assert_eq!(mine, Wait::TimedOut);
+        assert_eq!(h.join().unwrap(), Wait::TimedOut);
+        assert_eq!(c.now(), deadline);
     }
 
     #[test]
@@ -498,6 +672,54 @@ mod tests {
         let gen = c.subscribe();
         let deadline = c.deadline_after(Duration::from_millis(5));
         assert_eq!(c.wait(gen, Some(deadline)), Wait::TimedOut);
+    }
+
+    #[test]
+    fn wall_point_notify_is_targeted() {
+        let c = Clock::wall();
+        let a = c.wait_point();
+        let b = c.wait_point();
+        // Notifying B moves B's generation but not A's: a waiter on A with
+        // a short deadline times out instead of waking spuriously.
+        let gen_a = a.subscribe();
+        let gen_b = b.subscribe();
+        b.notify();
+        assert_ne!(b.subscribe(), gen_b);
+        assert_eq!(a.subscribe(), gen_a);
+        let deadline = c.deadline_after(Duration::from_millis(10));
+        assert_eq!(a.wait(gen_a, Some(deadline)), Wait::TimedOut);
+    }
+
+    #[test]
+    fn wall_broadcast_reaches_points() {
+        // An abort-style Clock::notify must wake a receiver parked on its
+        // own mailbox channel.
+        let c = Clock::wall();
+        let p = c.wait_point();
+        let gen = p.subscribe();
+        let c2 = c.clone();
+        let h = std::thread::spawn(move || {
+            c2.notify();
+        });
+        let w = p.wait(gen, Some(c.deadline_after(Duration::from_secs(30))));
+        assert_eq!(w, Wait::Notified);
+        h.join().unwrap();
+        assert!(c.now() < Clock::ticks(Duration::from_secs(30)));
+    }
+
+    #[test]
+    fn virtual_point_wait_is_visible_to_quiescence() {
+        // Under a virtual clock the point aliases the world clock, so a
+        // point wait still counts as blocked and its deadline still drives
+        // the advance.
+        let c = Clock::virtual_clock();
+        c.join_n(1);
+        let _g = c.guard();
+        let p = c.wait_point();
+        let gen = p.subscribe();
+        let deadline = c.deadline_after(Duration::from_secs(600));
+        assert_eq!(p.wait(gen, Some(deadline)), Wait::TimedOut);
+        assert_eq!(c.now(), deadline);
     }
 
     #[test]

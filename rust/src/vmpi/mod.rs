@@ -12,11 +12,15 @@
 //! §4.2's note that the functional-validation implementation of SEDAR is
 //! point-to-point based.
 //!
-//! All blocking goes through the world's [`Clock`]: a send or abort
-//! publishes via [`Clock::notify`], a receive parks via the
-//! generation-capture [`Clock::wait`] protocol. Under a virtual clock this
-//! is what lets `recv_timeout` deadlines fire in logical ticks the instant
-//! the world quiesces, instead of burning real time.
+//! All blocking goes through the world's [`Clock`]: a send publishes via
+//! its destination mailbox's [`WaitPoint`] (a targeted wakeup — under a
+//! wall clock only the destination rank's receiver is woken, and the send
+//! hot path never takes a world-global lock), an abort broadcasts via
+//! [`Clock::notify`], and a receive parks via the generation-capture wait
+//! protocol on its own mailbox's point. Under a virtual clock the points
+//! alias the world clock, which is what lets `recv_timeout` deadlines fire
+//! in logical ticks the instant the world quiesces, instead of burning
+//! real time.
 //!
 //! A network-wide **abort flag** implements SEDAR's safe-stop: when any rank
 //! reports a fault, the coordinator calls [`Network::abort`] and every
@@ -32,7 +36,7 @@ use std::time::Duration;
 
 use crate::error::{Result, SedarError};
 use crate::state::Var;
-use crate::util::clock::{Clock, Wait};
+use crate::util::clock::{Clock, Wait, WaitPoint};
 
 /// A message in flight.
 #[derive(Debug)]
@@ -42,9 +46,11 @@ pub struct Envelope {
     pub payload: Var,
 }
 
-#[derive(Default)]
 struct Mailbox {
     q: Mutex<VecDeque<Envelope>>,
+    /// This mailbox's wakeup channel: senders notify it, the owning rank's
+    /// receives park on it.
+    wp: WaitPoint,
 }
 
 /// Byte / message accounting, kept per network (Table 3's communication
@@ -77,7 +83,12 @@ impl Network {
         assert!(nranks >= 1);
         Arc::new(Network {
             n: nranks,
-            boxes: (0..nranks).map(|_| Mailbox::default()).collect(),
+            boxes: (0..nranks)
+                .map(|_| Mailbox {
+                    q: Mutex::new(VecDeque::new()),
+                    wp: clock.wait_point(),
+                })
+                .collect(),
             aborted: AtomicBool::new(false),
             clock,
             stats: NetStats::default(),
@@ -159,7 +170,7 @@ impl Endpoint {
                 payload,
             });
         }
-        self.net.clock.notify();
+        mbox.wp.notify();
         self.net.stats.messages.fetch_add(1, Ordering::Relaxed);
         self.net.stats.bytes.fetch_add(bytes, Ordering::Relaxed);
         Ok(())
@@ -189,17 +200,17 @@ impl Endpoint {
     }
 
     fn recv_inner(&self, src: usize, tag: u32, timeout: Option<Duration>) -> Result<Var> {
-        let clock = &self.net.clock;
-        let deadline = timeout.map(|t| clock.deadline_after(t));
+        let wp = &self.net.boxes[self.rank].wp;
+        let deadline = timeout.map(|t| self.net.clock.deadline_after(t));
         loop {
             // Generation first, queue check second: a send that lands after
             // the check has already bumped the generation, so the wait below
             // returns `Notified` instead of losing the wakeup.
-            let gen = clock.subscribe();
+            let gen = wp.subscribe();
             if let Some(v) = self.try_take(src, tag)? {
                 return Ok(v);
             }
-            match clock.wait(gen, deadline) {
+            match wp.wait(gen, deadline) {
                 Wait::Notified => continue,
                 Wait::TimedOut => {
                     // The deadline and a matching send can race; prefer the

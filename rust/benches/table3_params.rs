@@ -78,11 +78,11 @@ fn measure(app: Arc<dyn AppSpec>, reps: usize) -> Measured {
         t_comp,
         t_cs: {
             let n = sys_m.sys_ckpts;
-            (n > 0).then(|| Duration::from_nanos(sys_m.sys_ckpt_ns / n))
+            (n > 0).then(|| Duration::from_nanos(sys_m.sys_ckpt_ticks / n))
         },
         t_ca: {
             let n = user_m.user_ckpts;
-            (n > 0).then(|| Duration::from_nanos(user_m.user_ckpt_ns / n))
+            (n > 0).then(|| Duration::from_nanos(user_m.user_ckpt_ticks / n))
         },
         w_bytes: store.byte_len() * app.nranks(),
     }

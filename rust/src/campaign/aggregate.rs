@@ -7,11 +7,14 @@
 //! from seeds and dataflow alone. Two sweeps with the same spec must render
 //! byte-identical reports whatever `--jobs` was.
 
+use crate::config::{CollectiveImpl, Strategy};
 use crate::error::{FaultClass, Result, SedarError};
+use crate::metrics::{cost, MetricsSnapshot};
+use crate::model::{self, PaperApp};
 use crate::report::Table;
 
 use super::shard::TaskOutcome;
-use super::{collective_label, validation_label};
+use super::{collective_label, validation_label, CampaignApp};
 
 /// The aggregated result of a campaign.
 #[derive(Debug)]
@@ -192,6 +195,80 @@ impl CampaignReport {
         t
     }
 
+    /// "Table 3 (measured vs model)": per (app × strategy × collectives)
+    /// cell, the detection/checkpoint cost parameters of §5 measured from
+    /// the sweep's work counters next to the analytical model's
+    /// prediction. Measured values are **modeled ticks** — cost-model
+    /// constants ([`crate::metrics::cost`]) times deterministic byte and
+    /// event counts — never clock-elapsed time, so the section renders
+    /// byte-identically across `--jobs`, shard splits and clock modes.
+    fn table3_measured(&self) -> Table {
+        let mut keys: Vec<(CampaignApp, Strategy, CollectiveImpl)> = Vec::new();
+        for o in &self.outcomes {
+            let k = (o.app, o.strategy, o.collectives);
+            if !keys.contains(&k) {
+                keys.push(k);
+            }
+        }
+        let mut t = Table::new(&[
+            "app",
+            "strategy",
+            "coll",
+            "execs",
+            "cmp_bytes",
+            "syncs",
+            "t_cs",
+            "t_ca",
+            "f_d (meas)",
+            "f_d (model)",
+            "ovh (meas)",
+            "ovh (model)",
+        ]);
+        for (app, strategy, coll) in keys {
+            let mut m = MetricsSnapshot::default();
+            for o in &self.outcomes {
+                if (o.app, o.strategy, o.collectives) == (app, strategy, coll) {
+                    m.merge(&o.metrics);
+                }
+            }
+            let t_exec = m.execs * cost::EXEC_TICKS_PER_LAUNCH;
+            let t_detect = m.compare_bytes * cost::COMPARE_TICKS_PER_BYTE
+                + m.sync_events * cost::SYNC_TICKS_PER_EVENT;
+            let t_cs_total = m.sys_ckpt_bytes * cost::CKPT_TICKS_PER_BYTE;
+            let t_ca_total = m.user_ckpt_bytes * cost::CKPT_TICKS_PER_BYTE;
+            let per_ckpt = |total: u64, n: u64| {
+                if n > 0 {
+                    (total / n).to_string()
+                } else {
+                    "-".to_string()
+                }
+            };
+            let vs_exec = |num: u64| {
+                if t_exec > 0 {
+                    ratio6(num, t_exec)
+                } else {
+                    "-".to_string()
+                }
+            };
+            let p = paper_app(app).paper_params();
+            t.row(&[
+                app.label().to_string(),
+                strategy.label().to_string(),
+                collective_label(coll).to_string(),
+                m.execs.to_string(),
+                m.compare_bytes.to_string(),
+                m.sync_events.to_string(),
+                per_ckpt(t_cs_total, m.sys_ckpts),
+                per_ckpt(t_ca_total, m.user_ckpts),
+                vs_exec(t_detect),
+                format!("{:.6}", p.f_d),
+                vs_exec(t_detect + t_cs_total + t_ca_total),
+                format!("{:.6}", model_overhead(strategy, &p)),
+            ]);
+        }
+        t
+    }
+
     /// The full deterministic report (markdown). No wall-clock content.
     pub fn deterministic_report(&self) -> String {
         let mut s = format!(
@@ -220,6 +297,10 @@ impl CampaignReport {
                 }
             }
         }
+        s.push_str(&format!(
+            "\n## Table 3 (measured vs model)\n\n{}",
+            self.table3_measured().markdown()
+        ));
         s
     }
 
@@ -227,6 +308,34 @@ impl CampaignReport {
     pub fn csv(&self) -> String {
         self.rows().csv()
     }
+}
+
+/// Fixed-point `num / den` with six decimals — integer math only, so the
+/// rendering is bit-stable across platforms.
+fn ratio6(num: u64, den: u64) -> String {
+    let q = (num as u128 * 1_000_000) / den as u128;
+    format!("{}.{:06}", q / 1_000_000, q % 1_000_000)
+}
+
+/// The §5 model application a campaign app's measured row is compared to.
+fn paper_app(app: CampaignApp) -> PaperApp {
+    match app {
+        CampaignApp::Matmul => PaperApp::Matmul,
+        CampaignApp::Jacobi => PaperApp::Jacobi,
+        CampaignApp::Sw => PaperApp::Sw,
+    }
+}
+
+/// The model's predicted overhead for one strategy: the matching
+/// fault-free equation over the baseline (Equation 1), minus one.
+fn model_overhead(strategy: Strategy, p: &model::Params) -> f64 {
+    let fa = match strategy {
+        Strategy::Baseline => return 0.0,
+        Strategy::DetectOnly => model::eq3_detect_fa(p),
+        Strategy::SysCkpt => model::eq5_sys_fa(p),
+        Strategy::UserCkpt => model::eq7_user_fa(p),
+    };
+    fa / model::eq1_baseline_fa(p) - 1.0
 }
 
 #[cfg(test)]
@@ -255,6 +364,14 @@ mod tests {
             pass,
             mismatches: if pass { vec![] } else { vec!["boom".into()] },
             wall: Duration::from_millis(index as u64),
+            metrics: MetricsSnapshot {
+                compare_bytes: 4096,
+                sync_events: 8,
+                sys_ckpt_bytes: 2048,
+                sys_ckpts: 2,
+                execs: 4,
+                ..Default::default()
+            },
         }
     }
 
@@ -322,5 +439,35 @@ mod tests {
         let rb = CampaignReport::new(1, vec![b]).deterministic_report();
         assert_eq!(ra, rb);
         assert!(CampaignReport::new(1, vec![outcome(0, true)]).csv().contains("SCATTER"));
+    }
+
+    #[test]
+    fn report_excludes_clock_elapsed_ticks() {
+        // Same work counters, wildly different clock-elapsed ticks (a wall
+        // vs virtual run, say) must render identically — only the
+        // deterministic work counters enter the measured table.
+        let mut a = outcome(0, true);
+        let mut b = outcome(0, true);
+        a.metrics.compare_ticks = 1;
+        a.metrics.sync_ticks = 5;
+        b.metrics.compare_ticks = 999_999;
+        b.metrics.exec_ticks = 777_777;
+        let ra = CampaignReport::new(1, vec![a]).deterministic_report();
+        let rb = CampaignReport::new(1, vec![b]).deterministic_report();
+        assert_eq!(ra, rb);
+    }
+
+    #[test]
+    fn table3_measured_prints_work_derived_parameters() {
+        let r = CampaignReport::new(9, vec![outcome(0, true), outcome(1, true)]);
+        let text = r.deterministic_report();
+        assert!(text.contains("## Table 3 (measured vs model)"));
+        // Two outcomes of one cell sum: T_exec = 8 execs × 1_000_000;
+        // T_detect = 2 × (4096·1 + 8·2000) = 40_192 → f_d = 0.005024.
+        assert!(text.contains("0.005024"), "measured f_d missing:\n{text}");
+        // t_cs = (2 × 2048 × 4) / 4 sys checkpoints = 4096 ticks.
+        assert!(text.contains("4096"), "measured t_cs missing:\n{text}");
+        // Model columns render the §5 prediction next to the measured one.
+        assert!(text.contains("f_d (model)"));
     }
 }

@@ -346,6 +346,9 @@ pub struct CampaignSpec {
     pub base: RunConfig,
     /// Print one progress line per finished task.
     pub echo: bool,
+    /// When set, every finished task writes its typed event log
+    /// ([`crate::obs`]) to `<dir>/task-NNNN.trace` (`--trace-out`).
+    pub trace_out: Option<std::path::PathBuf>,
 }
 
 impl CampaignSpec {
@@ -378,6 +381,7 @@ impl CampaignSpec {
             scenarios: None,
             base,
             echo: false,
+            trace_out: None,
         }
     }
 

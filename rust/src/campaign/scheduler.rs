@@ -72,6 +72,9 @@ pub fn run_tasks(
 
     let root = spec.base.run_dir.clone();
     std::fs::create_dir_all(&root)?;
+    if let Some(dir) = &spec.trace_out {
+        std::fs::create_dir_all(dir)?;
+    }
 
     let next = AtomicUsize::new(0);
     let done = AtomicUsize::new(0);
@@ -87,6 +90,7 @@ pub fn run_tasks(
             let worker_deps = deps.clone();
             let base = &spec.base;
             let echo = spec.echo;
+            let trace_out = spec.trace_out.as_deref();
             s.spawn(move || {
                 loop {
                     let i = next.fetch_add(1, Ordering::SeqCst);
@@ -94,7 +98,7 @@ pub fn run_tasks(
                         break;
                     }
                     let task = &tasks[i];
-                    let out = shard::run_task(task, root, &worker_deps, base);
+                    let out = shard::run_task(task, root, &worker_deps, base, trace_out);
                     let finished = done.fetch_add(1, Ordering::SeqCst) + 1;
                     if echo {
                         eprintln!(

@@ -77,6 +77,11 @@ pub struct TaskOutcome {
     pub mismatches: Vec<String>,
     /// Informational only: excluded from the deterministic report.
     pub wall: Duration,
+    /// The run's tick-based work counters — the "Table 3 (measured)"
+    /// inputs. Only the deterministic work counters (bytes, event counts)
+    /// enter the report; the clock-elapsed `*_ticks` fields are carried for
+    /// trace tooling.
+    pub metrics: crate::metrics::MetricsSnapshot,
 }
 
 /// Transplant a matmul-catalog scenario onto another application: a
@@ -138,7 +143,13 @@ fn seeded_injection(
 /// Execute one task in an isolated world under `root`, borrowing the
 /// campaign's shared engine deps. Run errors become failed outcomes, never
 /// panics — one broken world must not take the pool down.
-pub fn run_task(task: &CampaignTask, root: &Path, deps: &RunDeps, base: &RunConfig) -> TaskOutcome {
+pub fn run_task(
+    task: &CampaignTask,
+    root: &Path,
+    deps: &RunDeps,
+    base: &RunConfig,
+    trace_out: Option<&Path>,
+) -> TaskOutcome {
     let cfg = RunConfig {
         strategy: task.strategy,
         collectives: task.collectives,
@@ -179,7 +190,13 @@ pub fn run_task(task: &CampaignTask, root: &Path, deps: &RunDeps, base: &RunConf
     // must surface as one failed cell, not abort the pool and discard every
     // completed outcome.
     let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-        run.run_with(deps).map(|outcome| grade(task, &outcome))
+        run.run_with(deps).and_then(|outcome| {
+            if let Some(dir) = trace_out {
+                let path = dir.join(format!("task-{:04}.trace", task.index));
+                crate::obs::write_log(&path, &outcome.events, &outcome.spans)?;
+            }
+            Ok(grade(task, &outcome))
+        })
     }));
     match result {
         Ok(Ok(outcome)) => outcome,
@@ -213,6 +230,7 @@ fn failed_outcome(task: &CampaignTask, mismatch: String) -> TaskOutcome {
         pass: false,
         mismatches: vec![mismatch],
         wall: Duration::ZERO,
+        metrics: Default::default(),
     }
 }
 
@@ -269,6 +287,7 @@ fn grade(task: &CampaignTask, outcome: &RunOutcome) -> TaskOutcome {
         pass: mismatches.is_empty(),
         mismatches,
         wall: outcome.wall,
+        metrics: outcome.metrics.clone(),
     }
 }
 

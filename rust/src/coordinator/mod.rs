@@ -24,7 +24,8 @@ use crate::config::{RunConfig, Strategy};
 use crate::detect::{DetectionEvent, Detector};
 use crate::error::{Result, SedarError};
 use crate::inject::{Injector, InjectionSpec, Latch};
-use crate::metrics::{MetricsSnapshot, RunMetrics};
+use crate::metrics::{MetricsSnapshot, Phase, RunMetrics, Span};
+use crate::obs::{Event, EventKind};
 use crate::recovery::{decide_resume, ExternCounter, ResumeFrom};
 use crate::replica::driver::replica_main;
 use crate::replica::pair::PairSync;
@@ -66,6 +67,11 @@ pub struct RunOutcome {
     pub attempt_walls: Vec<Duration>,
     pub metrics: MetricsSnapshot,
     pub trace_dump: String,
+    /// The typed counterpart of `trace_dump`: the protocol moments as
+    /// [`crate::obs::Event`]s in canonical order (`--trace-out`).
+    pub events: Vec<Event>,
+    /// Begin/end tick pairs of every instrumented phase, canonical order.
+    pub spans: Vec<Span>,
 }
 
 impl RunOutcome {
@@ -245,7 +251,7 @@ impl SedarRun {
         std::fs::create_dir_all(&self.cfg.run_dir)?;
 
         let trace = Arc::new(Trace::with_clock(self.cfg.echo_trace, clock.clone()));
-        let metrics = Arc::new(RunMetrics::new());
+        let metrics = Arc::new(RunMetrics::new(clock.clone()));
 
         // Fault injection latches (injected_<i>.txt), external to all
         // checkpoints — the paper's injected.txt (§4.2).
@@ -317,26 +323,33 @@ impl SedarRun {
         let mut attempt_walls = Vec::new();
         let mut resume = ResumeFrom::Scratch;
 
-        trace.coord(format!(
-            "run start: app={} strategy={} nranks={} inject={}",
-            self.app.name(),
-            self.cfg.strategy.label(),
-            nranks,
-            if self.injections.is_empty() {
-                "none".to_string()
-            } else {
-                self.injections
-                    .iter()
-                    .map(|s| s.name.clone())
-                    .collect::<Vec<_>>()
-                    .join("+")
-            },
-        ));
+        trace.coord_event(
+            EventKind::RunStart,
+            format!(
+                "run start: app={} strategy={} nranks={} inject={}",
+                self.app.name(),
+                self.cfg.strategy.label(),
+                nranks,
+                if self.injections.is_empty() {
+                    "none".to_string()
+                } else {
+                    self.injections
+                        .iter()
+                        .map(|s| s.name.clone())
+                        .collect::<Vec<_>>()
+                        .join("+")
+                },
+            ),
+        );
 
         loop {
             attempts += 1;
+            trace.set_attempt(attempts);
             let t_attempt = shared.clock.now();
-            trace.coord(format!("attempt {attempts}: start from {resume}"));
+            trace.coord_event(
+                EventKind::AttemptStart,
+                format!("attempt {attempts}: start from {resume}"),
+            );
             let result = self.attempt(&shared, resume)?;
             attempt_walls.push(shared.clock.since(t_attempt));
 
@@ -344,10 +357,13 @@ impl SedarRun {
                 AttemptResult::Completed(master_store) => {
                     let correct = self.check_oracle(&master_store)?;
                     let final_result = master_store.get(self.app.result_var())?.clone();
-                    trace.coord(format!(
-                        "attempt {attempts}: COMPLETED (result {})",
-                        if correct { "correct" } else { "WRONG" }
-                    ));
+                    trace.coord_event(
+                        EventKind::Completed,
+                        format!(
+                            "attempt {attempts}: COMPLETED (result {})",
+                            if correct { "correct" } else { "WRONG" }
+                        ),
+                    );
                     return Ok(RunOutcome {
                         app: self.app.name().to_string(),
                         strategy: self.cfg.strategy,
@@ -363,16 +379,24 @@ impl SedarRun {
                         attempt_walls,
                         metrics: metrics.snapshot(),
                         trace_dump: trace.dump(),
+                        events: trace.typed_events(),
+                        spans: metrics.take_spans(),
                     });
                 }
                 AttemptResult::Fault(ev) => {
-                    trace.coord(format!(
-                        "attempt {attempts}: FAULT {} detected at {} (rank {})",
-                        ev.class, ev.site, ev.rank
-                    ));
+                    trace.coord_event(
+                        EventKind::Detected,
+                        format!(
+                            "attempt {attempts}: FAULT {} detected at {} (rank {})",
+                            ev.class, ev.site, ev.rank
+                        ),
+                    );
                     detections.push(ev);
                     if attempts >= self.cfg.max_attempts {
-                        trace.coord("max attempts exceeded: giving up".to_string());
+                        trace.coord_event(
+                            EventKind::GaveUp,
+                            "max attempts exceeded: giving up".to_string(),
+                        );
                         return Ok(RunOutcome {
                             app: self.app.name().to_string(),
                             strategy: self.cfg.strategy,
@@ -388,9 +412,13 @@ impl SedarRun {
                             attempt_walls,
                             metrics: metrics.snapshot(),
                             trace_dump: trace.dump(),
+                            events: trace.typed_events(),
+                            spans: metrics.take_spans(),
                         });
                     }
                     // Algorithm 1 / Algorithm 2 resume decision.
+                    let rb = metrics.span(Phase::Rollback, u32::MAX, 0);
+                    metrics.add(&metrics.rollbacks, 1);
                     let n_fail = counter.increment()?;
                     let sys_count = match &shared.sys_chain {
                         Some(c) => Some(c.count()?),
@@ -407,9 +435,11 @@ impl SedarRun {
                         // again during re-execution; logically truncate.
                         chain.truncate(k + 1)?;
                     }
-                    trace.coord(format!(
-                        "recovery: extern_counter={n_fail} → resume from {resume}"
-                    ));
+                    drop(rb);
+                    trace.coord_event(
+                        EventKind::Rollback,
+                        format!("recovery: extern_counter={n_fail} → resume from {resume}"),
+                    );
                     resume_history.push(resume);
                 }
             }
@@ -642,6 +672,8 @@ impl SedarRun {
             attempt_walls,
             metrics: shared.metrics.snapshot(),
             trace_dump: trace.dump(),
+            events: trace.typed_events(),
+            spans: shared.metrics.take_spans(),
         })
     }
 

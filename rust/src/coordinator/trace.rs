@@ -9,10 +9,17 @@
 //! Timestamps come from the run's [`Clock`], so under a virtual clock every
 //! trace line is stamped in deterministic modeled time — two runs of the
 //! same seed produce identical stamps.
+//!
+//! Alongside the human-readable lines, the key protocol moments are
+//! recorded as typed [`crate::obs::Event`]s via [`Trace::event`]: same
+//! message text, same single lock, plus the machine-readable kind /
+//! rank / replica / attempt / tick fields that `--trace-out` serializes.
 
+use std::sync::atomic::{AtomicU32, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
+use crate::obs::{Event, EventKind, COORD_RANK};
 use crate::util::clock::{Clock, Tick};
 
 /// One trace line.
@@ -41,11 +48,21 @@ impl TraceEvent {
     }
 }
 
+/// The two event logs one run accumulates, guarded by a single lock so a
+/// reader can never observe one without the matching state of the other.
+#[derive(Default)]
+struct TraceBuf {
+    lines: Vec<TraceEvent>,
+    typed: Vec<Event>,
+}
+
 /// Append-only, thread-safe event log for one SEDAR run (across attempts).
 pub struct Trace {
     clock: Clock,
     start: Tick,
-    events: Mutex<Vec<TraceEvent>>,
+    /// Current 1-based execution attempt (0 until the first attempt).
+    attempt: AtomicU32,
+    buf: Mutex<TraceBuf>,
     echo: bool,
 }
 
@@ -61,22 +78,58 @@ impl Trace {
         Trace {
             clock,
             start,
-            events: Mutex::new(Vec::new()),
+            attempt: AtomicU32::new(0),
+            buf: Mutex::new(TraceBuf::default()),
             echo,
         }
     }
 
-    pub fn emit(&self, rank: usize, replica: usize, msg: impl Into<String>) {
+    /// Tell the trace which execution attempt is running; typed events
+    /// emitted after this carry the value.
+    pub fn set_attempt(&self, attempt: u32) {
+        self.attempt.store(attempt, Ordering::Relaxed);
+    }
+
+    fn push(&self, rank: usize, replica: usize, msg: String, kind: Option<EventKind>) {
+        let elapsed = self.clock.since(self.start);
         let ev = TraceEvent {
-            elapsed: self.clock.since(self.start),
+            elapsed,
             rank,
             replica,
-            msg: msg.into(),
+            msg,
         };
         if self.echo {
             eprintln!("{}", ev.format());
         }
-        self.events.lock().unwrap().push(ev);
+        // One lock for both logs: the typed event and its line land
+        // atomically, so ordering assertions on one always agree with the
+        // other.
+        let mut buf = self.buf.lock().unwrap();
+        if let Some(kind) = kind {
+            buf.typed.push(Event {
+                tick: elapsed.as_nanos() as Tick,
+                rank: if rank == usize::MAX {
+                    COORD_RANK
+                } else {
+                    rank as u32
+                },
+                replica: replica as u32,
+                attempt: self.attempt.load(Ordering::Relaxed),
+                kind,
+                detail: ev.msg.clone(),
+            });
+        }
+        buf.lines.push(ev);
+    }
+
+    /// Record a plain trace line.
+    pub fn emit(&self, rank: usize, replica: usize, msg: impl Into<String>) {
+        self.push(rank, replica, msg.into(), None);
+    }
+
+    /// Record a trace line AND its typed [`Event`] (same text, one lock).
+    pub fn event(&self, rank: usize, replica: usize, kind: EventKind, msg: impl Into<String>) {
+        self.push(rank, replica, msg.into(), Some(kind));
     }
 
     /// Coordinator-level event.
@@ -84,26 +137,36 @@ impl Trace {
         self.emit(usize::MAX, 0, msg);
     }
 
-    pub fn events(&self) -> Vec<TraceEvent> {
-        self.events.lock().unwrap().clone()
+    /// Coordinator-level typed event.
+    pub fn coord_event(&self, kind: EventKind, msg: impl Into<String>) {
+        self.event(usize::MAX, 0, kind, msg);
+    }
+
+    /// Run `f` over the recorded lines under the log's lock — the one
+    /// accessor every reader shares, so no two readers can race an `emit`
+    /// between their own lock acquisitions.
+    pub fn with_events<R>(&self, f: impl FnOnce(&[TraceEvent]) -> R) -> R {
+        f(&self.buf.lock().unwrap().lines)
+    }
+
+    /// The typed events recorded so far, in canonical order
+    /// ([`crate::obs::canonicalize_events`]).
+    pub fn typed_events(&self) -> Vec<Event> {
+        let mut typed = self.buf.lock().unwrap().typed.clone();
+        crate::obs::canonicalize_events(&mut typed);
+        typed
     }
 
     /// Full log as text (the Figure-3 artifact).
     pub fn dump(&self) -> String {
-        self.events()
-            .iter()
-            .map(|e| e.format())
-            .collect::<Vec<_>>()
-            .join("\n")
+        self.with_events(|evs| {
+            evs.iter().map(|e| e.format()).collect::<Vec<_>>().join("\n")
+        })
     }
 
     /// True if some event message contains `needle` (test helper).
     pub fn contains(&self, needle: &str) -> bool {
-        self.events
-            .lock()
-            .unwrap()
-            .iter()
-            .any(|e| e.msg.contains(needle))
+        self.with_events(|evs| evs.iter().any(|e| e.msg.contains(needle)))
     }
 }
 
@@ -117,10 +180,11 @@ mod tests {
         t.coord("start");
         t.emit(2, 1, "INJECTED bit-flip");
         t.coord("end");
-        let evs = t.events();
-        assert_eq!(evs.len(), 3);
-        assert!(evs[0].msg.contains("start"));
-        assert_eq!(evs[1].rank, 2);
+        t.with_events(|evs| {
+            assert_eq!(evs.len(), 3);
+            assert!(evs[0].msg.contains("start"));
+            assert_eq!(evs[1].rank, 2);
+        });
         assert!(t.contains("INJECTED"));
         assert!(!t.contains("nothing"));
     }
@@ -136,6 +200,25 @@ mod tests {
     }
 
     #[test]
+    fn typed_events_mirror_their_lines() {
+        let t = Trace::new(false);
+        t.set_attempt(2);
+        t.coord_event(EventKind::RunStart, "run start");
+        t.event(1, 0, EventKind::Injected, "INJECTED [FSC] bit-flip");
+        t.emit(1, 0, "an untyped line");
+        let typed = t.typed_events();
+        // Only the typed sites produce events; the text is shared.
+        assert_eq!(typed.len(), 2);
+        assert_eq!(typed[0].kind, EventKind::RunStart);
+        assert_eq!(typed[0].rank, COORD_RANK);
+        assert_eq!(typed[1].kind, EventKind::Injected);
+        assert_eq!((typed[1].rank, typed[1].attempt), (1, 2));
+        assert_eq!(typed[1].detail, "INJECTED [FSC] bit-flip");
+        assert!(t.contains("INJECTED [FSC] bit-flip"));
+        t.with_events(|evs| assert_eq!(evs.len(), 3));
+    }
+
+    #[test]
     fn virtual_clock_stamps_are_deterministic() {
         let stamps = |_: usize| {
             let c = Clock::virtual_clock();
@@ -144,10 +227,12 @@ mod tests {
             let t = Trace::with_clock(false, c.clone());
             t.coord("begin");
             c.sleep(Duration::from_millis(250));
-            t.coord("after-sleep");
-            t.dump()
+            t.coord_event(EventKind::Completed, "after-sleep");
+            (t.dump(), t.typed_events())
         };
         assert_eq!(stamps(0), stamps(1));
-        assert!(stamps(0).contains("[  250.000 ms]"));
+        let (dump, typed) = stamps(0);
+        assert!(dump.contains("[  250.000 ms]"));
+        assert_eq!(typed[0].tick, 250_000_000);
     }
 }

@@ -32,7 +32,11 @@ const MAGIC: &[u8; 4] = b"SDSH";
 /// Bumped to 2 when the collectives axis joined the outcome record (a
 /// per-record ordinal byte after the strategy's); version-1 artifacts
 /// cannot carry the axis and are rejected rather than mis-decoded.
-const VERSION: u32 = 2;
+/// Bumped to 3 when the per-task [`crate::metrics::MetricsSnapshot`]
+/// joined the record (14 trailing u64 counters); version-2 artifacts
+/// cannot carry the observability fields and are rejected rather than
+/// mis-decoded.
+const VERSION: u32 = 3;
 
 /// Identity of a shard artifact: which sweep it belongs to and which slice
 /// it claims. `total_tasks` is the canonical task-list length of the sweep
@@ -183,6 +187,25 @@ pub fn encode_outcome(o: &TaskOutcome, out: &mut Vec<u8>) {
     }
     let wall_nanos = u64::try_from(o.wall.as_nanos()).unwrap_or(u64::MAX);
     out.extend_from_slice(&wall_nanos.to_le_bytes());
+    // v3: the observability counters, in MetricsSnapshot field order.
+    for v in [
+        o.metrics.compare_ticks,
+        o.metrics.compare_bytes,
+        o.metrics.sync_ticks,
+        o.metrics.sync_events,
+        o.metrics.sys_ckpt_ticks,
+        o.metrics.sys_ckpt_bytes,
+        o.metrics.sys_ckpts,
+        o.metrics.user_ckpt_ticks,
+        o.metrics.user_ckpt_bytes,
+        o.metrics.user_ckpts,
+        o.metrics.exec_ticks,
+        o.metrics.execs,
+        o.metrics.rollback_ticks,
+        o.metrics.rollbacks,
+    ] {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
 }
 
 fn bool_from(b: u8, what: &str) -> Result<bool> {
@@ -249,6 +272,22 @@ pub fn decode_outcome(r: &mut ByteReader<'_>) -> Result<TaskOutcome> {
         mismatches.push(r.string()?);
     }
     let wall = std::time::Duration::from_nanos(r.u64()?);
+    let metrics = crate::metrics::MetricsSnapshot {
+        compare_ticks: r.u64()?,
+        compare_bytes: r.u64()?,
+        sync_ticks: r.u64()?,
+        sync_events: r.u64()?,
+        sys_ckpt_ticks: r.u64()?,
+        sys_ckpt_bytes: r.u64()?,
+        sys_ckpts: r.u64()?,
+        user_ckpt_ticks: r.u64()?,
+        user_ckpt_bytes: r.u64()?,
+        user_ckpts: r.u64()?,
+        exec_ticks: r.u64()?,
+        execs: r.u64()?,
+        rollback_ticks: r.u64()?,
+        rollbacks: r.u64()?,
+    };
     Ok(TaskOutcome {
         index,
         scenario_id,
@@ -266,6 +305,7 @@ pub fn decode_outcome(r: &mut ByteReader<'_>) -> Result<TaskOutcome> {
         pass,
         mismatches,
         wall,
+        metrics,
     })
 }
 
@@ -309,7 +349,8 @@ pub fn read_artifact(path: &Path) -> Result<(ShardMeta, Vec<TaskOutcome>)> {
     let version = r.u32()?;
     if version != VERSION {
         return Err(SedarError::Checkpoint(format!(
-            "{}: unsupported shard artifact version {version}",
+            "{}: unsupported shard artifact version {version} (this build reads \
+             version {VERSION}) — regenerate the shard with this binary",
             path.display()
         )));
     }
@@ -408,6 +449,22 @@ mod tests {
             pass: false,
             mismatches: vec!["ошибка №1 — 错误".into(), String::new()],
             wall: std::time::Duration::from_micros(1234),
+            metrics: crate::metrics::MetricsSnapshot {
+                compare_ticks: 1,
+                compare_bytes: 2,
+                sync_ticks: 3,
+                sync_events: 4,
+                sys_ckpt_ticks: 5,
+                sys_ckpt_bytes: 6,
+                sys_ckpts: 7,
+                user_ckpt_ticks: 8,
+                user_ckpt_bytes: 9,
+                user_ckpts: 10,
+                exec_ticks: 11,
+                execs: 12,
+                rollback_ticks: 13,
+                rollbacks: 14,
+            },
         }
     }
 
@@ -434,5 +491,28 @@ mod tests {
         let mut bad = buf.clone();
         bad[12] = 99;
         assert!(decode_outcome(&mut ByteReader::new(&bad, "test")).is_err());
+    }
+
+    #[test]
+    fn v2_artifact_is_refused_naming_both_versions() {
+        // A hand-built version-2 payload (the pre-observability format):
+        // the reader must refuse it with an error naming the file's
+        // version AND the version this build reads, so mixed-version
+        // fleets fail fast instead of merging garbage.
+        let p = std::env::temp_dir().join(format!(
+            "sedar-artifact-v2-{}-{:?}.bin",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let mut payload = Vec::new();
+        payload.extend_from_slice(MAGIC);
+        payload.extend_from_slice(&2u32.to_le_bytes());
+        payload.extend_from_slice(&[0u8; 32]); // meta
+        payload.extend_from_slice(&0u64.to_le_bytes()); // n = 0
+        write_frame(&p, &payload, Codec::Raw).unwrap();
+        let err = read_artifact(&p).unwrap_err().to_string();
+        assert!(err.contains("version 2"), "missing file version: {err}");
+        assert!(err.contains("version 3"), "missing reader version: {err}");
+        std::fs::remove_file(&p).unwrap();
     }
 }

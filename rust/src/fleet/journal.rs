@@ -34,7 +34,9 @@ const MAGIC: &[u8; 4] = b"SDJL";
 /// Bumped to 2 with the collectives axis: the outcome record format gained
 /// a per-record ordinal byte ([`encode_outcome`]), so a version-1 journal
 /// is unreadable by construction and must be refused, never mis-decoded.
-const VERSION: u32 = 2;
+/// Bumped to 3 with the per-task observability counters (the trailing
+/// [`crate::metrics::MetricsSnapshot`] of each outcome record).
+const VERSION: u32 = 3;
 /// Sanity cap on a single record body; real outcome records are ≪ this.
 const MAX_RECORD: usize = 1 << 24;
 
@@ -82,7 +84,8 @@ fn parse_header(body: &[u8]) -> Result<ShardMeta> {
     let version = r.u32()?;
     if version != VERSION {
         return Err(SedarError::Checkpoint(format!(
-            "unsupported fleet journal version {version}"
+            "unsupported fleet journal version {version} (this build reads \
+             version {VERSION}) — delete the journal to re-run the shard"
         )));
     }
     Ok(ShardMeta {
@@ -242,6 +245,12 @@ mod tests {
             pass: true,
             mismatches: vec![],
             wall: std::time::Duration::ZERO,
+            metrics: crate::metrics::MetricsSnapshot {
+                compare_bytes: 64,
+                sync_events: 2,
+                execs: 1,
+                ..Default::default()
+            },
         }
     }
 
@@ -343,6 +352,33 @@ mod tests {
         std::fs::write(&p, b"definitely not a journal").unwrap();
         assert!(Journal::open(&p, &meta()).is_err());
         assert_eq!(std::fs::read(&p).unwrap(), b"definitely not a journal");
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn v2_journal_is_refused_naming_both_versions() {
+        // Hand-build a journal whose header claims version 2 (the
+        // pre-observability record format): the reader must refuse it
+        // with an error naming both versions, and must NOT truncate it.
+        let p = tmp("v2");
+        let _ = std::fs::remove_file(&p);
+        let mut body = Vec::new();
+        body.extend_from_slice(MAGIC);
+        body.extend_from_slice(&2u32.to_le_bytes());
+        body.extend_from_slice(&meta().seed.to_le_bytes());
+        body.extend_from_slice(&meta().shard_index.to_le_bytes());
+        body.extend_from_slice(&meta().shard_count.to_le_bytes());
+        body.extend_from_slice(&meta().total_tasks.to_le_bytes());
+        body.extend_from_slice(&meta().spec_hash.to_le_bytes());
+        let mut rec = Vec::new();
+        rec.extend_from_slice(&(body.len() as u32).to_le_bytes());
+        rec.extend_from_slice(&crc32(&body).to_le_bytes());
+        rec.extend_from_slice(&body);
+        std::fs::write(&p, &rec).unwrap();
+        let err = Journal::open(&p, &meta()).unwrap_err().to_string();
+        assert!(err.contains("version 2"), "missing file version: {err}");
+        assert!(err.contains("version 3"), "missing reader version: {err}");
+        assert_eq!(std::fs::read(&p).unwrap(), rec, "v2 journal was modified");
         std::fs::remove_file(&p).unwrap();
     }
 }

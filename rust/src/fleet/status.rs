@@ -18,6 +18,12 @@
 //! monotonically increasing `heartbeat` counter — one tick per progress
 //! event — that [`crate::fleet::launch`] watches for stall detection.
 //! [`http_get`] is the matching std-only client half.
+//!
+//! Beyond progress counts, the board aggregates each finished task's
+//! [`crate::metrics::MetricsSnapshot`] work counters live: cumulative
+//! compared bytes and checkpointed bytes ride in `/json`, and
+//! `GET /metrics` exposes the same numbers (plus a tasks/s rate) in
+//! Prometheus text format for scrape-based monitoring.
 
 use std::collections::BTreeMap;
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -55,6 +61,14 @@ pub struct StatusBoard {
     /// detector compares across polls (a wedged worker pool stops beating
     /// even while this serving thread stays healthy).
     heartbeat: AtomicU64,
+    /// Cumulative bytes compared between replicas across finished tasks.
+    compare_bytes: AtomicU64,
+    /// Cumulative checkpoint bytes (system + user) across finished tasks.
+    ckpt_bytes: AtomicU64,
+    /// When the board was created — the denominator of the tasks/s rate.
+    /// Wall time is fine here: the endpoint is observational, never on the
+    /// deterministic report path.
+    started: Instant,
     cells: Mutex<BTreeMap<(String, String), Cell>>,
 }
 
@@ -78,6 +92,9 @@ impl StatusBoard {
             failed: AtomicUsize::new(0),
             resumed: AtomicUsize::new(0),
             heartbeat: AtomicU64::new(0),
+            compare_bytes: AtomicU64::new(0),
+            ckpt_bytes: AtomicU64::new(0),
+            started: Instant::now(),
             cells: Mutex::new(cells),
         }
     }
@@ -103,6 +120,12 @@ impl StatusBoard {
         } else {
             self.failed.fetch_add(1, Ordering::SeqCst);
         }
+        self.compare_bytes
+            .fetch_add(outcome.metrics.compare_bytes, Ordering::SeqCst);
+        self.ckpt_bytes.fetch_add(
+            outcome.metrics.sys_ckpt_bytes + outcome.metrics.user_ckpt_bytes,
+            Ordering::SeqCst,
+        );
         let key = (
             outcome.app.label().to_string(),
             outcome.strategy.label().to_string(),
@@ -151,6 +174,8 @@ impl StatusBoard {
         let failed = self.failed.load(Ordering::SeqCst);
         let resumed = self.resumed.load(Ordering::SeqCst);
         let heartbeat = self.heartbeat.load(Ordering::SeqCst);
+        let compare_bytes = self.compare_bytes.load(Ordering::SeqCst);
+        let ckpt_bytes = self.ckpt_bytes.load(Ordering::SeqCst);
         let cells: Vec<String> = self
             .cells
             .lock()
@@ -170,13 +195,89 @@ impl StatusBoard {
         format!(
             "{{\"fleet\":\"{}\",\"seed\":{},\"total\":{},\"done\":{done},\
              \"passed\":{passed},\"failed\":{failed},\"executed\":{},\
-             \"resumed\":{resumed},\"heartbeat\":{heartbeat},\"cells\":[{}]}}",
+             \"resumed\":{resumed},\"heartbeat\":{heartbeat},\
+             \"tasks_per_sec\":{:.3},\"compare_bytes\":{compare_bytes},\
+             \"ckpt_bytes\":{ckpt_bytes},\"cells\":[{}]}}",
             json_escape(&self.label),
             self.seed,
             self.total,
             done.saturating_sub(resumed),
+            self.tasks_per_sec(),
             cells.join(",")
         )
+    }
+
+    /// Finished-tasks rate over the board's lifetime (resumed tasks
+    /// included — they are progress a supervisor sees).
+    fn tasks_per_sec(&self) -> f64 {
+        let done = self.done.load(Ordering::SeqCst) as f64;
+        done / self.started.elapsed().as_secs_f64().max(1e-3)
+    }
+
+    /// Prometheus text-format snapshot (the `GET /metrics` body).
+    pub fn prometheus_snapshot(&self) -> String {
+        let mut s = String::new();
+        let mut metric = |name: &str, kind: &str, help: &str, value: String| {
+            s.push_str(&format!(
+                "# HELP {name} {help}\n# TYPE {name} {kind}\n{name} {value}\n"
+            ));
+        };
+        let load = |a: &AtomicUsize| a.load(Ordering::SeqCst).to_string();
+        metric(
+            "sedar_tasks_total",
+            "gauge",
+            "Tasks in this shard's slice of the sweep.",
+            self.total.to_string(),
+        );
+        metric(
+            "sedar_tasks_done_total",
+            "counter",
+            "Finished tasks (executed + resumed).",
+            load(&self.done),
+        );
+        metric(
+            "sedar_tasks_passed_total",
+            "counter",
+            "Finished tasks that passed their cell's oracle.",
+            load(&self.passed),
+        );
+        metric(
+            "sedar_tasks_failed_total",
+            "counter",
+            "Finished tasks that mismatched their cell's oracle.",
+            load(&self.failed),
+        );
+        metric(
+            "sedar_tasks_resumed_total",
+            "counter",
+            "Finished tasks recovered from the journal, not executed here.",
+            load(&self.resumed),
+        );
+        metric(
+            "sedar_heartbeat_total",
+            "counter",
+            "Progress events (the stall-detection signal).",
+            self.heartbeat.load(Ordering::SeqCst).to_string(),
+        );
+        metric(
+            "sedar_compare_bytes_total",
+            "counter",
+            "Bytes compared between replicas across finished tasks.",
+            self.compare_bytes.load(Ordering::SeqCst).to_string(),
+        );
+        metric(
+            "sedar_ckpt_bytes_total",
+            "counter",
+            "Checkpoint bytes written (system + user) across finished tasks.",
+            self.ckpt_bytes.load(Ordering::SeqCst).to_string(),
+        );
+        metric(
+            "sedar_tasks_per_second",
+            "gauge",
+            "Finished-tasks rate over the board's lifetime.",
+            format!("{:.3}", self.tasks_per_sec()),
+        );
+        s
     }
 }
 
@@ -281,10 +382,15 @@ fn serve_one(mut stream: TcpStream, board: &StatusBoard) -> std::io::Result<()> 
     let (status, content_type, body) = match path {
         "/" => ("200 OK", "text/plain; charset=utf-8", board.text_snapshot()),
         "/json" => ("200 OK", "application/json", board.json_snapshot()),
+        "/metrics" => (
+            "200 OK",
+            "text/plain; version=0.0.4",
+            board.prometheus_snapshot(),
+        ),
         other => (
             "404 Not Found",
             "text/plain; charset=utf-8",
-            format!("no such path: {other} (try / or /json)\n"),
+            format!("no such path: {other} (try /, /json or /metrics)\n"),
         ),
     };
     let response = format!(
@@ -350,6 +456,12 @@ mod tests {
             pass,
             mismatches: vec![],
             wall: Duration::ZERO,
+            metrics: crate::metrics::MetricsSnapshot {
+                compare_bytes: 100,
+                sys_ckpt_bytes: 30,
+                user_ckpt_bytes: 10,
+                ..Default::default()
+            },
         }
     }
 
@@ -365,6 +477,25 @@ mod tests {
         assert!(json.contains("\"done\":2"), "got: {json}");
         assert!(json.contains("\"seed\":5"), "got: {json}");
         assert!(json.contains("\"app\":\"matmul\""), "got: {json}");
+        // Work counters aggregate across finished tasks.
+        assert!(json.contains("\"compare_bytes\":200"), "got: {json}");
+        assert!(json.contains("\"ckpt_bytes\":80"), "got: {json}");
+        assert!(json.contains("\"tasks_per_sec\":"), "got: {json}");
+    }
+
+    #[test]
+    fn prometheus_snapshot_exposes_counters() {
+        let (board, tasks) = sample_board();
+        board.record(&fake_outcome(&tasks[0], true));
+        board.record(&fake_outcome(&tasks[1], false));
+        let prom = board.prometheus_snapshot();
+        assert!(prom.contains("sedar_tasks_total 36"), "got: {prom}");
+        assert!(prom.contains("sedar_tasks_done_total 2"), "got: {prom}");
+        assert!(prom.contains("sedar_tasks_passed_total 1"), "got: {prom}");
+        assert!(prom.contains("sedar_compare_bytes_total 200"), "got: {prom}");
+        assert!(prom.contains("sedar_ckpt_bytes_total 80"), "got: {prom}");
+        assert!(prom.contains("# TYPE sedar_tasks_done_total counter"), "got: {prom}");
+        assert!(prom.contains("sedar_tasks_per_second "), "got: {prom}");
     }
 
     #[test]
@@ -451,6 +582,11 @@ mod tests {
         // Unknown paths are a 404, not silently the text page.
         let missing = fetch("/nope");
         assert!(missing.starts_with("HTTP/1.0 404"), "got: {missing}");
+
+        // The Prometheus route serves the text exposition format.
+        let prom = fetch("/metrics");
+        assert!(prom.starts_with("HTTP/1.0 200 OK"), "got: {prom}");
+        assert!(prom.contains("sedar_tasks_done_total 1"), "got: {prom}");
 
         // The std-only client helper round-trips against the same server.
         let body = http_get(server.addr(), "/json", Duration::from_secs(2)).unwrap();

@@ -44,7 +44,8 @@
 //! | [`workfault`] | the 64-scenario workfault catalog + prediction oracle (§4.1) |
 //! | [`model`] | analytical temporal model: Equations 1–14 + AET (§3.4, §4.3-4.4) |
 //! | [`runtime`] | PJRT engine: loads `artifacts/*.hlo.txt`, executes from rust |
-//! | [`metrics`] | timers and derived execution parameters (Table 3) |
+//! | [`metrics`] | tick-based phase counters/spans + measured Table-3 parameters |
+//! | [`obs`] | typed run events: CRC'd trace logs + Chrome/Perfetto export |
 //! | [`report`] | markdown / CSV table emitters for the experiment harness |
 //! | [`bench`] | `sedar bench`: the machine-readable perf trajectory (`BENCH_*.json`) |
 //! | [`prop`] | in-repo property-based testing mini-framework |
@@ -63,6 +64,7 @@ pub mod fleet;
 pub mod inject;
 pub mod metrics;
 pub mod model;
+pub mod obs;
 pub mod prop;
 pub mod recovery;
 pub mod replica;

@@ -3,11 +3,13 @@
 //! ```text
 //! sedar run      --app matmul|jacobi|sw --strategy baseline|detect|sysckpt|userckpt
 //!                [--n 256] [--nranks 4] [--iters 32] [--scenario 50] [--xla]
-//!                [--trace] [--seed 7] [--collectives p2p|native] [--run-dir DIR]
+//!                [--trace] [--trace-out FILE] [--seed 7]
+//!                [--collectives p2p|native] [--run-dir DIR]
 //! sedar campaign [--jobs 8] [--seed 42] [--filter app=matmul,strategy=sys,scenario=1-8]
 //!                [--report md|csv] [--xla] [--run-dir DIR] [--quiet]
 //!                [--shard i/N] [--out shard.bin] [--journal sweep.journal]
-//!                [--status-port 8080] [--report-out report.md]
+//!                [--status-port 8080] [--report-out report.md] [--trace-out DIR]
+//! sedar trace    export FILE [--format chrome] [--out trace.json]
 //! sedar fleet launch --shards N [--jobs J] [--seed S] [--filter …] [--dir D]
 //!                [--max-restarts R] [--stall-secs T] [--poll-ms P]
 //!                [--report md|csv] [--report-out report.md] [--quiet]
@@ -51,6 +53,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("campaign") => cmd_campaign(args),
         Some("fleet") => cmd_fleet(args),
         Some("merge") => cmd_merge(args),
+        Some("trace") => cmd_trace(args),
         Some("catalog") => cmd_catalog(),
         Some("model") => cmd_model(args),
         Some("bench") => cmd_bench(args),
@@ -85,6 +88,10 @@ commands:
   merge     combine shard artifacts written by `campaign --shard i/N --out F`
             into the full sweep's report (byte-identical to a single-process
             run with the same --seed)
+  trace     work with typed event logs written by `--trace-out`:
+            `trace export FILE --format chrome` emits Chrome trace-event
+            JSON (load it at ui.perfetto.dev or chrome://tracing; 1 tick =
+            1 ns of modeled time)
   catalog   print the full scenario catalog (the paper's Table 2)
   model     evaluate the analytical temporal model (Tables 4/5, thresholds,
             AET-vs-MTBE sweeps)
@@ -116,6 +123,12 @@ campaign flags:
   --xla         compute through the AOT artifacts (needs the pjrt feature)
   --run-dir D   campaign working directory (default runs/campaign-<pid>)
   --quiet       suppress per-task progress lines
+  --trace-out D write every task's typed event log to D/task-NNNN.trace
+                (export one with `sedar trace export`)
+
+trace flags:
+  --format F    export format: chrome (Chrome trace-event JSON; default)
+  --out FILE    write the export to FILE instead of stdout
 
 fleet flags (sharded / resumable / observable sweeps):
   --shard i/N      run only member i of an N-way deterministic split
@@ -253,6 +266,14 @@ fn cmd_run(args: &Args) -> Result<()> {
     if args.has("trace") {
         println!("\n-- trace --\n{}", outcome.trace_dump);
     }
+    if let Some(path) = args.get("trace-out") {
+        sedar::obs::write_log(std::path::Path::new(path), &outcome.events, &outcome.spans)?;
+        println!(
+            "trace log: {path} ({} event(s), {} span(s))",
+            outcome.events.len(),
+            outcome.spans.len()
+        );
+    }
     if outcome.result_correct == Some(false) {
         return Err(SedarError::Config("final result WRONG".into()));
     }
@@ -305,6 +326,7 @@ fn cmd_campaign(args: &Args) -> Result<()> {
         None => format!("runs/campaign-{}", std::process::id()).into(),
     };
     spec.echo = !args.has("quiet");
+    spec.trace_out = args.get("trace-out").map(Into::into);
 
     let sharded = opts.plan.map(|p| p.count > 1).unwrap_or(false);
     let run = fleet::run_shard(&spec, &opts)?;
@@ -422,6 +444,39 @@ fn cmd_merge(args: &Args) -> Result<()> {
             "{} campaign task(s) diverged from the oracle",
             report.failed()
         )));
+    }
+    Ok(())
+}
+
+/// `sedar trace export FILE [--format chrome] [--out F]`: decode a typed
+/// event log written by `--trace-out` and emit it in a viewer format.
+fn cmd_trace(args: &Args) -> Result<()> {
+    if args.positional.first().map(|s| s.as_str()) != Some("export") {
+        return Err(SedarError::Config(
+            "usage: sedar trace export FILE [--format chrome] [--out trace.json]".into(),
+        ));
+    }
+    let path = args.positional.get(1).ok_or_else(|| {
+        SedarError::Config("trace export: name a trace log written by --trace-out".into())
+    })?;
+    let fmt = args.get_or("format", "chrome");
+    if fmt != "chrome" {
+        return Err(SedarError::Config(format!(
+            "unknown trace format '{fmt}' (chrome)"
+        )));
+    }
+    let (events, spans) = sedar::obs::read_log(std::path::Path::new(path))?;
+    let json = sedar::obs::chrome_json(&events, &spans);
+    match args.get("out") {
+        Some(out) => {
+            std::fs::write(out, &json)?;
+            eprintln!(
+                "trace: {} event(s), {} span(s) → {out}",
+                events.len(),
+                spans.len()
+            );
+        }
+        None => print!("{json}"),
     }
     Ok(())
 }

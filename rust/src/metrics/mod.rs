@@ -1,62 +1,231 @@
-//! Run-time instrumentation.
+//! Run-time instrumentation in **modeled ticks**.
 //!
 //! Counters here feed the execution-parameter measurements of Table 3
 //! (`f_d`, `t_cs`, `t_ca`, `T_comp`, …) and the perf pass of
 //! EXPERIMENTS.md §Perf. Everything is atomic so replica threads update
 //! without locks on the hot path.
+//!
+//! Since PR 7 the module is clocked by the run's [`Clock`], never by
+//! `Instant`: elapsed time accumulates in ticks (1 tick = 1 ns of modeled
+//! time), so under `--clock virtual` every tick field is a deterministic
+//! replayable quantity — byte-identical across repeat runs, `--jobs`
+//! widths and shard splits — and the module sits inside the CI
+//! wall-clock grep gate instead of being exempt from it.
+//!
+//! Two families of fields coexist in [`MetricsSnapshot`]:
+//!
+//! * **work counters** (`compare_bytes`, `sync_events`, `sys_ckpts`, …):
+//!   pure counts of work performed. Identical under the wall and virtual
+//!   clocks, which is why the report's "Table 3 (measured)" section
+//!   derives from these alone (via the [`cost`] constants);
+//! * **tick accumulators** (`*_ticks`): modeled time spent per phase.
+//!   Deterministic under the virtual clock, physical under the wall
+//!   clock — excluded from the deterministic report for the same reason
+//!   wall time is.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::time::{Duration, Instant};
+use std::sync::Mutex;
+use std::time::Duration;
 
-/// Shared counters for one execution attempt.
-#[derive(Debug, Default)]
+use crate::util::clock::{Clock, Tick};
+
+/// The modeled per-unit costs that convert work counters into Table-3
+/// time parameters. One tick is one modeled nanosecond; the constants are
+/// calibration knobs of the reproduction, not measurements of this host —
+/// what matters is that they are fixed, documented, and applied
+/// identically to every cell, so measured-vs-model comparisons are
+/// apples-to-apples across the sweep.
+pub mod cost {
+    /// Ticks per byte run through the replica comparator (detection).
+    pub const COMPARE_TICKS_PER_BYTE: u64 = 1;
+    /// Ticks per replica rendezvous event (sync latency).
+    pub const SYNC_TICKS_PER_EVENT: u64 = 2_000;
+    /// Ticks per byte serialized into a checkpoint (system or user).
+    pub const CKPT_TICKS_PER_BYTE: u64 = 4;
+    /// Ticks per compute-engine launch (the workload quantum).
+    pub const EXEC_TICKS_PER_LAUNCH: u64 = 1_000_000;
+}
+
+/// The instrumented phases of a SEDAR run, one per span/counter family.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Compute-engine execution (XLA or fallback).
+    Exec,
+    /// Replica-pair buffer comparison (detection cost).
+    Compare,
+    /// Blocked in replica rendezvous (sync cost).
+    Sync,
+    /// Serializing + writing a system-level checkpoint.
+    SysCkpt,
+    /// Storing + validating a user-level checkpoint.
+    UserCkpt,
+    /// Coordinator recovery decision + chain truncation.
+    Rollback,
+}
+
+impl Phase {
+    pub const ALL: [Phase; 6] = [
+        Phase::Exec,
+        Phase::Compare,
+        Phase::Sync,
+        Phase::SysCkpt,
+        Phase::UserCkpt,
+        Phase::Rollback,
+    ];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Phase::Exec => "exec",
+            Phase::Compare => "compare",
+            Phase::Sync => "sync",
+            Phase::SysCkpt => "sys-ckpt",
+            Phase::UserCkpt => "user-ckpt",
+            Phase::Rollback => "rollback",
+        }
+    }
+
+    /// Stable ordinal, persisted in trace logs — frozen once released.
+    pub fn ordinal(self) -> u8 {
+        match self {
+            Phase::Exec => 0,
+            Phase::Compare => 1,
+            Phase::Sync => 2,
+            Phase::SysCkpt => 3,
+            Phase::UserCkpt => 4,
+            Phase::Rollback => 5,
+        }
+    }
+
+    /// Inverse of [`Phase::ordinal`] (trace-log decoding).
+    pub fn from_ordinal(ord: u8) -> Option<Phase> {
+        Phase::ALL.iter().copied().find(|p| p.ordinal() == ord)
+    }
+}
+
+/// One begin/end tick pair recorded by a [`ScopedTimer`]: which phase ran
+/// where, from when to when, in modeled ticks since the run started.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Span {
+    pub phase: Phase,
+    /// Rank that ran the phase; `u32::MAX` = the coordinator itself.
+    pub rank: u32,
+    pub replica: u32,
+    pub begin: Tick,
+    pub end: Tick,
+}
+
+/// Sort spans into their canonical order: by begin tick, then rank,
+/// replica, phase and end tick. The sort is stable, so same-key spans
+/// (possible only within one thread) keep their per-thread push order —
+/// cross-thread interleaving of the shared vector can never leak into the
+/// serialized log.
+pub fn canonicalize_spans(spans: &mut [Span]) {
+    spans.sort_by_key(|s| (s.begin, s.rank, s.replica, s.phase.ordinal(), s.end));
+}
+
+/// Shared counters for one execution run (across attempts), clocked by the
+/// run's [`Clock`].
+#[derive(Debug)]
 pub struct RunMetrics {
-    /// Nanoseconds spent in replica-pair buffer comparisons (detection cost).
-    pub compare_ns: AtomicU64,
+    clock: Clock,
+    /// Tick at which the run (and its tick origin) started.
+    start: Tick,
+    /// Ticks spent in replica-pair buffer comparisons (detection cost).
+    pub compare_ticks: AtomicU64,
     /// Bytes run through the comparator.
     pub compare_bytes: AtomicU64,
-    /// Nanoseconds spent blocked in replica rendezvous (sync cost).
-    pub sync_ns: AtomicU64,
+    /// Ticks spent blocked in replica rendezvous (sync cost).
+    pub sync_ticks: AtomicU64,
     /// Number of rendezvous events.
     pub sync_events: AtomicU64,
-    /// Nanoseconds spent serializing + writing system-level checkpoints.
-    pub sys_ckpt_ns: AtomicU64,
+    /// Ticks spent serializing + writing system-level checkpoints.
+    pub sys_ckpt_ticks: AtomicU64,
     /// Bytes written to system-level checkpoints.
     pub sys_ckpt_bytes: AtomicU64,
-    /// Number of system-level checkpoints stored (this attempt).
+    /// Number of system-level checkpoints stored.
     pub sys_ckpts: AtomicU64,
     /// Same, user-level.
-    pub user_ckpt_ns: AtomicU64,
+    pub user_ckpt_ticks: AtomicU64,
     pub user_ckpt_bytes: AtomicU64,
     pub user_ckpts: AtomicU64,
-    /// Nanoseconds in compute-engine execution (XLA or fallback).
-    pub exec_ns: AtomicU64,
+    /// Ticks in compute-engine execution (XLA or fallback).
+    pub exec_ticks: AtomicU64,
     /// Number of compute launches.
     pub execs: AtomicU64,
+    /// Ticks spent in coordinator rollback decisions.
+    pub rollback_ticks: AtomicU64,
+    /// Number of rollback decisions taken.
+    pub rollbacks: AtomicU64,
+    /// Begin/end tick pairs recorded by [`ScopedTimer`]s.
+    spans: Mutex<Vec<Span>>,
 }
 
 impl RunMetrics {
-    pub fn new() -> Self {
-        Self::default()
+    /// Metrics clocked by the run's clock; tick origin = `clock.now()`.
+    pub fn new(clock: Clock) -> Self {
+        let start = clock.now();
+        RunMetrics {
+            clock,
+            start,
+            compare_ticks: AtomicU64::new(0),
+            compare_bytes: AtomicU64::new(0),
+            sync_ticks: AtomicU64::new(0),
+            sync_events: AtomicU64::new(0),
+            sys_ckpt_ticks: AtomicU64::new(0),
+            sys_ckpt_bytes: AtomicU64::new(0),
+            sys_ckpts: AtomicU64::new(0),
+            user_ckpt_ticks: AtomicU64::new(0),
+            user_ckpt_bytes: AtomicU64::new(0),
+            user_ckpts: AtomicU64::new(0),
+            exec_ticks: AtomicU64::new(0),
+            execs: AtomicU64::new(0),
+            rollback_ticks: AtomicU64::new(0),
+            rollbacks: AtomicU64::new(0),
+            spans: Mutex::new(Vec::new()),
+        }
     }
 
     pub fn add(&self, counter: &AtomicU64, v: u64) {
         counter.fetch_add(v, Ordering::Relaxed);
     }
 
-    pub fn add_duration(&self, counter: &AtomicU64, d: Duration) {
-        counter.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+    /// Ticks elapsed since the run started (the span time base).
+    pub fn now(&self) -> Tick {
+        self.clock.since(self.start).as_nanos() as Tick
+    }
+
+    /// Open a phase span: ticks accumulate into the phase counter and a
+    /// begin/end [`Span`] is recorded when the returned timer drops.
+    pub fn span(&self, phase: Phase, rank: u32, replica: u32) -> ScopedTimer<'_> {
+        ScopedTimer {
+            metrics: self,
+            phase,
+            rank,
+            replica,
+            begin: self.now(),
+        }
+    }
+
+    fn phase_counter(&self, phase: Phase) -> &AtomicU64 {
+        match phase {
+            Phase::Exec => &self.exec_ticks,
+            Phase::Compare => &self.compare_ticks,
+            Phase::Sync => &self.sync_ticks,
+            Phase::SysCkpt => &self.sys_ckpt_ticks,
+            Phase::UserCkpt => &self.user_ckpt_ticks,
+            Phase::Rollback => &self.rollback_ticks,
+        }
     }
 
     /// Average cost of storing one system-level checkpoint — the measured
-    /// `t_cs` of Table 3.
+    /// `t_cs` of Table 3, in modeled time.
     pub fn t_cs(&self) -> Option<Duration> {
         let n = self.sys_ckpts.load(Ordering::Relaxed);
         if n == 0 {
             return None;
         }
         Some(Duration::from_nanos(
-            self.sys_ckpt_ns.load(Ordering::Relaxed) / n,
+            self.sys_ckpt_ticks.load(Ordering::Relaxed) / n,
         ))
     }
 
@@ -67,47 +236,109 @@ impl RunMetrics {
             return None;
         }
         Some(Duration::from_nanos(
-            self.user_ckpt_ns.load(Ordering::Relaxed) / n,
+            self.user_ckpt_ticks.load(Ordering::Relaxed) / n,
         ))
     }
 
     /// Snapshot all counters (for reports).
     pub fn snapshot(&self) -> MetricsSnapshot {
         MetricsSnapshot {
-            compare_ns: self.compare_ns.load(Ordering::Relaxed),
+            compare_ticks: self.compare_ticks.load(Ordering::Relaxed),
             compare_bytes: self.compare_bytes.load(Ordering::Relaxed),
-            sync_ns: self.sync_ns.load(Ordering::Relaxed),
+            sync_ticks: self.sync_ticks.load(Ordering::Relaxed),
             sync_events: self.sync_events.load(Ordering::Relaxed),
-            sys_ckpt_ns: self.sys_ckpt_ns.load(Ordering::Relaxed),
+            sys_ckpt_ticks: self.sys_ckpt_ticks.load(Ordering::Relaxed),
             sys_ckpt_bytes: self.sys_ckpt_bytes.load(Ordering::Relaxed),
             sys_ckpts: self.sys_ckpts.load(Ordering::Relaxed),
-            user_ckpt_ns: self.user_ckpt_ns.load(Ordering::Relaxed),
+            user_ckpt_ticks: self.user_ckpt_ticks.load(Ordering::Relaxed),
             user_ckpt_bytes: self.user_ckpt_bytes.load(Ordering::Relaxed),
             user_ckpts: self.user_ckpts.load(Ordering::Relaxed),
-            exec_ns: self.exec_ns.load(Ordering::Relaxed),
+            exec_ticks: self.exec_ticks.load(Ordering::Relaxed),
             execs: self.execs.load(Ordering::Relaxed),
+            rollback_ticks: self.rollback_ticks.load(Ordering::Relaxed),
+            rollbacks: self.rollbacks.load(Ordering::Relaxed),
         }
+    }
+
+    /// Drain the recorded spans in canonical order.
+    pub fn take_spans(&self) -> Vec<Span> {
+        let mut spans = std::mem::take(&mut *self.spans.lock().unwrap());
+        canonicalize_spans(&mut spans);
+        spans
     }
 }
 
-/// Plain-data copy of [`RunMetrics`] at a point in time.
-#[derive(Debug, Clone, Default)]
+/// Plain-data copy of [`RunMetrics`] at a point in time. All `*_ticks`
+/// fields are modeled ticks (1 tick = 1 ns); the rest are work counters.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct MetricsSnapshot {
-    pub compare_ns: u64,
+    pub compare_ticks: u64,
     pub compare_bytes: u64,
-    pub sync_ns: u64,
+    pub sync_ticks: u64,
     pub sync_events: u64,
-    pub sys_ckpt_ns: u64,
+    pub sys_ckpt_ticks: u64,
     pub sys_ckpt_bytes: u64,
     pub sys_ckpts: u64,
-    pub user_ckpt_ns: u64,
+    pub user_ckpt_ticks: u64,
     pub user_ckpt_bytes: u64,
     pub user_ckpts: u64,
-    pub exec_ns: u64,
+    pub exec_ticks: u64,
     pub execs: u64,
+    pub rollback_ticks: u64,
+    pub rollbacks: u64,
 }
 
 impl MetricsSnapshot {
+    /// Accumulate another snapshot into this one (report aggregation).
+    pub fn merge(&mut self, other: &MetricsSnapshot) {
+        self.compare_ticks += other.compare_ticks;
+        self.compare_bytes += other.compare_bytes;
+        self.sync_ticks += other.sync_ticks;
+        self.sync_events += other.sync_events;
+        self.sys_ckpt_ticks += other.sys_ckpt_ticks;
+        self.sys_ckpt_bytes += other.sys_ckpt_bytes;
+        self.sys_ckpts += other.sys_ckpts;
+        self.user_ckpt_ticks += other.user_ckpt_ticks;
+        self.user_ckpt_bytes += other.user_ckpt_bytes;
+        self.user_ckpts += other.user_ckpts;
+        self.exec_ticks += other.exec_ticks;
+        self.execs += other.execs;
+        self.rollback_ticks += other.rollback_ticks;
+        self.rollbacks += other.rollbacks;
+    }
+
+    /// Modeled execution time: launches × per-launch cost.
+    pub fn modeled_exec_ticks(&self) -> u64 {
+        self.execs * cost::EXEC_TICKS_PER_LAUNCH
+    }
+
+    /// Modeled detection time: comparator bytes + rendezvous events.
+    pub fn modeled_detect_ticks(&self) -> u64 {
+        self.compare_bytes * cost::COMPARE_TICKS_PER_BYTE
+            + self.sync_events * cost::SYNC_TICKS_PER_EVENT
+    }
+
+    /// Modeled total system-checkpoint time.
+    pub fn modeled_sys_ckpt_ticks(&self) -> u64 {
+        self.sys_ckpt_bytes * cost::CKPT_TICKS_PER_BYTE
+    }
+
+    /// Modeled total user-checkpoint time.
+    pub fn modeled_user_ckpt_ticks(&self) -> u64 {
+        self.user_ckpt_bytes * cost::CKPT_TICKS_PER_BYTE
+    }
+
+    /// Measured `t_cs` of Table 3: modeled ticks per system checkpoint.
+    /// `None` if the cell stored no system checkpoints.
+    pub fn measured_t_cs_ticks(&self) -> Option<u64> {
+        (self.sys_ckpts > 0).then(|| self.modeled_sys_ckpt_ticks() / self.sys_ckpts)
+    }
+
+    /// Measured `t_ca` of Table 3: modeled ticks per user checkpoint.
+    pub fn measured_t_ca_ticks(&self) -> Option<u64> {
+        (self.user_ckpts > 0).then(|| self.modeled_user_ckpt_ticks() / self.user_ckpts)
+    }
+
     pub fn markdown(&self) -> String {
         format!(
             "| metric | value |\n|---|---|\n\
@@ -115,42 +346,49 @@ impl MetricsSnapshot {
              | sync events | {} blocking {} |\n\
              | system ckpts | {} ({}, {}) |\n\
              | user ckpts | {} ({}, {}) |\n\
-             | compute launches | {} ({}) |\n",
+             | compute launches | {} ({}) |\n\
+             | rollbacks | {} ({}) |\n",
             crate::util::human_bytes(self.compare_bytes),
-            crate::util::human_duration(Duration::from_nanos(self.compare_ns)),
+            crate::util::human_duration(Duration::from_nanos(self.compare_ticks)),
             self.sync_events,
-            crate::util::human_duration(Duration::from_nanos(self.sync_ns)),
+            crate::util::human_duration(Duration::from_nanos(self.sync_ticks)),
             self.sys_ckpts,
             crate::util::human_bytes(self.sys_ckpt_bytes),
-            crate::util::human_duration(Duration::from_nanos(self.sys_ckpt_ns)),
+            crate::util::human_duration(Duration::from_nanos(self.sys_ckpt_ticks)),
             self.user_ckpts,
             crate::util::human_bytes(self.user_ckpt_bytes),
-            crate::util::human_duration(Duration::from_nanos(self.user_ckpt_ns)),
+            crate::util::human_duration(Duration::from_nanos(self.user_ckpt_ticks)),
             self.execs,
-            crate::util::human_duration(Duration::from_nanos(self.exec_ns)),
+            crate::util::human_duration(Duration::from_nanos(self.exec_ticks)),
+            self.rollbacks,
+            crate::util::human_duration(Duration::from_nanos(self.rollback_ticks)),
         )
     }
 }
 
-/// RAII timer that adds its elapsed time to an atomic counter on drop.
+/// RAII phase timer: on drop, adds its elapsed modeled ticks to the phase
+/// counter and records a begin/end [`Span`].
 pub struct ScopedTimer<'a> {
-    counter: &'a AtomicU64,
-    start: Instant,
-}
-
-impl<'a> ScopedTimer<'a> {
-    pub fn new(counter: &'a AtomicU64) -> Self {
-        ScopedTimer {
-            counter,
-            start: Instant::now(),
-        }
-    }
+    metrics: &'a RunMetrics,
+    phase: Phase,
+    rank: u32,
+    replica: u32,
+    begin: Tick,
 }
 
 impl Drop for ScopedTimer<'_> {
     fn drop(&mut self) {
-        self.counter
-            .fetch_add(self.start.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        let end = self.metrics.now();
+        self.metrics
+            .phase_counter(self.phase)
+            .fetch_add(end.saturating_sub(self.begin), Ordering::Relaxed);
+        self.metrics.spans.lock().unwrap().push(Span {
+            phase: self.phase,
+            rank: self.rank,
+            replica: self.replica,
+            begin: self.begin,
+            end,
+        });
     }
 }
 
@@ -158,31 +396,121 @@ impl Drop for ScopedTimer<'_> {
 mod tests {
     use super::*;
 
+    /// A virtual clock this thread participates in, so `sleep` advances
+    /// modeled time deterministically (the trace-test idiom).
+    fn vclock() -> (Clock, crate::util::clock::ClockGuard) {
+        let c = Clock::virtual_clock();
+        c.join_n(1);
+        let g = c.guard();
+        (c, g)
+    }
+
     #[test]
-    fn scoped_timer_accumulates() {
-        let c = AtomicU64::new(0);
+    fn span_accumulates_modeled_ticks_deterministically() {
+        let (c, _g) = vclock();
+        let m = RunMetrics::new(c.clone());
         {
-            let _t = ScopedTimer::new(&c);
-            std::thread::sleep(Duration::from_millis(5));
+            let _t = m.span(Phase::SysCkpt, 0, 1);
+            c.sleep(Duration::from_millis(5));
         }
-        assert!(c.load(Ordering::Relaxed) >= 4_000_000);
+        assert_eq!(m.sys_ckpt_ticks.load(Ordering::Relaxed), 5_000_000);
+        let spans = m.take_spans();
+        assert_eq!(spans.len(), 1);
+        assert_eq!(spans[0].phase, Phase::SysCkpt);
+        assert_eq!((spans[0].rank, spans[0].replica), (0, 1));
+        assert_eq!(spans[0].end - spans[0].begin, 5_000_000);
+        // Drained: a second take is empty.
+        assert!(m.take_spans().is_empty());
+    }
+
+    #[test]
+    fn spans_canonicalize_by_begin_then_rank() {
+        let mut spans = vec![
+            Span { phase: Phase::Sync, rank: 1, replica: 0, begin: 7, end: 9 },
+            Span { phase: Phase::Exec, rank: 0, replica: 0, begin: 7, end: 8 },
+            Span { phase: Phase::Exec, rank: 0, replica: 0, begin: 3, end: 5 },
+        ];
+        canonicalize_spans(&mut spans);
+        assert_eq!(spans[0].begin, 3);
+        assert_eq!((spans[1].rank, spans[2].rank), (0, 1));
     }
 
     #[test]
     fn t_cs_averages() {
-        let m = RunMetrics::new();
+        let (c, _g) = vclock();
+        let m = RunMetrics::new(c);
         assert!(m.t_cs().is_none());
         m.sys_ckpts.store(4, Ordering::Relaxed);
-        m.sys_ckpt_ns.store(4_000_000, Ordering::Relaxed);
+        m.sys_ckpt_ticks.store(4_000_000, Ordering::Relaxed);
         assert_eq!(m.t_cs().unwrap(), Duration::from_millis(1));
     }
 
     #[test]
-    fn snapshot_copies() {
-        let m = RunMetrics::new();
+    fn snapshot_copies_and_compares() {
+        let (c, _g) = vclock();
+        let m = RunMetrics::new(c);
         m.add(&m.compare_bytes, 128);
         let s = m.snapshot();
         assert_eq!(s.compare_bytes, 128);
         assert!(s.markdown().contains("128 B"));
+        // Snapshots are plain data: equality is field-for-field.
+        assert_eq!(s, m.snapshot());
+        assert_ne!(s, MetricsSnapshot::default());
+    }
+
+    #[test]
+    fn merge_sums_every_field() {
+        let a = MetricsSnapshot {
+            compare_ticks: 1,
+            compare_bytes: 2,
+            sync_ticks: 3,
+            sync_events: 4,
+            sys_ckpt_ticks: 5,
+            sys_ckpt_bytes: 6,
+            sys_ckpts: 7,
+            user_ckpt_ticks: 8,
+            user_ckpt_bytes: 9,
+            user_ckpts: 10,
+            exec_ticks: 11,
+            execs: 12,
+            rollback_ticks: 13,
+            rollbacks: 14,
+        };
+        let mut sum = a.clone();
+        sum.merge(&a);
+        assert_eq!(sum.compare_ticks, 2);
+        assert_eq!(sum.user_ckpts, 20);
+        assert_eq!(sum.rollbacks, 28);
+    }
+
+    #[test]
+    fn modeled_table3_values_derive_from_work_counters() {
+        let s = MetricsSnapshot {
+            compare_bytes: 1_000,
+            sync_events: 3,
+            sys_ckpt_bytes: 400,
+            sys_ckpts: 2,
+            user_ckpt_bytes: 100,
+            user_ckpts: 1,
+            execs: 4,
+            ..MetricsSnapshot::default()
+        };
+        assert_eq!(s.modeled_exec_ticks(), 4 * cost::EXEC_TICKS_PER_LAUNCH);
+        assert_eq!(
+            s.modeled_detect_ticks(),
+            1_000 * cost::COMPARE_TICKS_PER_BYTE + 3 * cost::SYNC_TICKS_PER_EVENT
+        );
+        assert_eq!(s.measured_t_cs_ticks(), Some(200 * cost::CKPT_TICKS_PER_BYTE));
+        assert_eq!(s.measured_t_ca_ticks(), Some(100 * cost::CKPT_TICKS_PER_BYTE));
+        assert_eq!(MetricsSnapshot::default().measured_t_cs_ticks(), None);
+    }
+
+    #[test]
+    fn phase_ordinals_roundtrip() {
+        for p in Phase::ALL {
+            assert_eq!(Phase::from_ordinal(p.ordinal()), Some(p));
+            assert!(!p.label().is_empty());
+        }
+        assert_eq!(Phase::from_ordinal(99), None);
     }
 }

@@ -1,0 +1,506 @@
+//! Typed observability events: the Figure-3 experiment log as data.
+//!
+//! [`crate::coordinator::trace::Trace`] renders the run's story as text;
+//! this module carries the same story as typed [`Event`]s — kind, rank,
+//! replica, attempt and the modeled tick at which it happened — so runs
+//! can be serialized, diffed byte-for-byte in CI, and exported to the
+//! Chrome trace-event JSON that Perfetto loads (`sedar trace export`).
+//!
+//! The on-disk log reuses the fleet journal's framing discipline
+//! (`len u32 | crc32 u32 | body` per record, a versioned magic header
+//! first), so storage corruption surfaces as a recoverable error, exactly
+//! like a corrupt shard artifact:
+//!
+//! ```text
+//! file   := header-record record*
+//! header := "SDTR" | version u32
+//! record := tag u8 (0 = event, 1 = span) | payload
+//! ```
+//!
+//! Ticks are modeled nanoseconds from the run's [`crate::util::clock`]:
+//! under `--clock virtual` two runs of the same seed serialize
+//! byte-identical logs, which the `obs-smoke` CI job diffs.
+
+use std::path::Path;
+
+use crate::error::{Result, SedarError};
+use crate::fleet::artifact::ByteReader;
+use crate::metrics::{Phase, Span};
+use crate::util::clock::Tick;
+use crate::util::codec::crc32;
+
+const MAGIC: &[u8; 4] = b"SDTR";
+const VERSION: u32 = 1;
+/// Sanity cap on a single record body; real records are ≪ this.
+const MAX_RECORD: usize = 1 << 24;
+
+/// Rank value that marks a coordinator-level event.
+pub const COORD_RANK: u32 = u32::MAX;
+
+/// What happened — the typed counterpart of a trace line.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// The run started (strategy and configuration in the detail).
+    RunStart,
+    /// One execution attempt began (resume point in the detail).
+    AttemptStart,
+    /// A fault was injected into a replica.
+    Injected,
+    /// A checkpoint was stored (system or user level; see detail).
+    CkptStored,
+    /// A user-level checkpoint failed its validation hash.
+    CkptCorrupt,
+    /// A replica divergence was detected (TDC/FSC class in the detail).
+    Detected,
+    /// A rendezvous timeout expired (the TOE detection path).
+    ToeExpired,
+    /// The coordinator decided a rollback / resume point.
+    Rollback,
+    /// The final result comparison succeeded.
+    Validated,
+    /// The run completed.
+    Completed,
+    /// The coordinator exhausted its restart budget.
+    GaveUp,
+}
+
+impl EventKind {
+    pub const ALL: [EventKind; 11] = [
+        EventKind::RunStart,
+        EventKind::AttemptStart,
+        EventKind::Injected,
+        EventKind::CkptStored,
+        EventKind::CkptCorrupt,
+        EventKind::Detected,
+        EventKind::ToeExpired,
+        EventKind::Rollback,
+        EventKind::Validated,
+        EventKind::Completed,
+        EventKind::GaveUp,
+    ];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            EventKind::RunStart => "run-start",
+            EventKind::AttemptStart => "attempt-start",
+            EventKind::Injected => "injected",
+            EventKind::CkptStored => "ckpt-stored",
+            EventKind::CkptCorrupt => "ckpt-corrupt",
+            EventKind::Detected => "detected",
+            EventKind::ToeExpired => "toe-expired",
+            EventKind::Rollback => "rollback",
+            EventKind::Validated => "validated",
+            EventKind::Completed => "completed",
+            EventKind::GaveUp => "gave-up",
+        }
+    }
+
+    /// Stable ordinal, persisted in trace logs — frozen once released.
+    pub fn ordinal(self) -> u8 {
+        match self {
+            EventKind::RunStart => 0,
+            EventKind::AttemptStart => 1,
+            EventKind::Injected => 2,
+            EventKind::CkptStored => 3,
+            EventKind::CkptCorrupt => 4,
+            EventKind::Detected => 5,
+            EventKind::ToeExpired => 6,
+            EventKind::Rollback => 7,
+            EventKind::Validated => 8,
+            EventKind::Completed => 9,
+            EventKind::GaveUp => 10,
+        }
+    }
+
+    /// Inverse of [`EventKind::ordinal`] (trace-log decoding).
+    pub fn from_ordinal(ord: u8) -> Option<EventKind> {
+        EventKind::ALL.iter().copied().find(|k| k.ordinal() == ord)
+    }
+}
+
+/// One typed run event, stamped in modeled ticks since run start.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Event {
+    pub tick: Tick,
+    /// Rank that emitted the event; [`COORD_RANK`] = the coordinator.
+    pub rank: u32,
+    pub replica: u32,
+    /// 1-based execution attempt the event belongs to (0 = pre-attempt).
+    pub attempt: u32,
+    pub kind: EventKind,
+    /// Human-readable detail — the text of the matching trace line.
+    pub detail: String,
+}
+
+/// Sort events into their canonical order: by tick, then rank, replica
+/// and kind. The sort is stable, so same-key events (possible only within
+/// one thread) keep their per-thread emission order — cross-thread
+/// interleaving of the shared log can never leak into the serialized
+/// bytes.
+pub fn canonicalize_events(events: &mut [Event]) {
+    events.sort_by_key(|e| (e.tick, e.rank, e.replica, e.kind.ordinal()));
+}
+
+fn push_string(out: &mut Vec<u8>, s: &str) {
+    out.extend_from_slice(&(s.len() as u32).to_le_bytes());
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn encode_event(e: &Event, out: &mut Vec<u8>) {
+    out.push(0); // record tag: event
+    out.extend_from_slice(&e.tick.to_le_bytes());
+    out.extend_from_slice(&e.rank.to_le_bytes());
+    out.extend_from_slice(&e.replica.to_le_bytes());
+    out.extend_from_slice(&e.attempt.to_le_bytes());
+    out.push(e.kind.ordinal());
+    push_string(out, &e.detail);
+}
+
+fn encode_span(s: &Span, out: &mut Vec<u8>) {
+    out.push(1); // record tag: span
+    out.push(s.phase.ordinal());
+    out.extend_from_slice(&s.rank.to_le_bytes());
+    out.extend_from_slice(&s.replica.to_le_bytes());
+    out.extend_from_slice(&s.begin.to_le_bytes());
+    out.extend_from_slice(&s.end.to_le_bytes());
+}
+
+fn decode_record(body: &[u8]) -> Result<RecordBody> {
+    let mut r = ByteReader::new(body, "trace log");
+    let tag = r.u8()?;
+    let rec = match tag {
+        0 => {
+            let tick = r.u64()?;
+            let rank = r.u32()?;
+            let replica = r.u32()?;
+            let attempt = r.u32()?;
+            let ord = r.u8()?;
+            let kind = EventKind::from_ordinal(ord).ok_or_else(|| {
+                SedarError::Checkpoint(format!("trace log: bad event kind ordinal {ord}"))
+            })?;
+            let detail = r.string()?;
+            RecordBody::Event(Event { tick, rank, replica, attempt, kind, detail })
+        }
+        1 => {
+            let ord = r.u8()?;
+            let phase = Phase::from_ordinal(ord).ok_or_else(|| {
+                SedarError::Checkpoint(format!("trace log: bad phase ordinal {ord}"))
+            })?;
+            let rank = r.u32()?;
+            let replica = r.u32()?;
+            let begin = r.u64()?;
+            let end = r.u64()?;
+            RecordBody::Span(Span { phase, rank, replica, begin, end })
+        }
+        other => {
+            return Err(SedarError::Checkpoint(format!(
+                "trace log: unknown record tag {other}"
+            )))
+        }
+    };
+    if r.remaining() != 0 {
+        return Err(SedarError::Checkpoint(format!(
+            "trace log: {} trailing byte(s) in record",
+            r.remaining()
+        )));
+    }
+    Ok(rec)
+}
+
+enum RecordBody {
+    Event(Event),
+    Span(Span),
+}
+
+fn frame(body: &[u8], out: &mut Vec<u8>) {
+    out.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    out.extend_from_slice(&crc32(body).to_le_bytes());
+    out.extend_from_slice(body);
+}
+
+/// Serialize a run's events and spans to their canonical byte form.
+/// Inputs are canonicalized first, so the bytes are independent of the
+/// emission interleaving — two same-seed virtual-clock runs agree on them
+/// exactly.
+pub fn encode_log(events: &[Event], spans: &[Span]) -> Vec<u8> {
+    let mut events: Vec<Event> = events.to_vec();
+    canonicalize_events(&mut events);
+    let mut spans: Vec<Span> = spans.to_vec();
+    crate::metrics::canonicalize_spans(&mut spans);
+
+    let mut out = Vec::with_capacity(16 + events.len() * 64 + spans.len() * 32);
+    let mut header = Vec::with_capacity(8);
+    header.extend_from_slice(MAGIC);
+    header.extend_from_slice(&VERSION.to_le_bytes());
+    frame(&header, &mut out);
+    let mut body = Vec::with_capacity(96);
+    for e in &events {
+        body.clear();
+        encode_event(e, &mut body);
+        frame(&body, &mut out);
+    }
+    for s in &spans {
+        body.clear();
+        encode_span(s, &mut body);
+        frame(&body, &mut out);
+    }
+    out
+}
+
+/// `Ok((body, end_offset))` for the CRC-valid record starting at `pos`.
+fn next_record(data: &[u8], pos: usize, what: &str) -> Result<(&[u8], usize)> {
+    if data.len() - pos < 8 {
+        return Err(SedarError::Checkpoint(format!(
+            "trace log truncated in {what} at offset {pos}"
+        )));
+    }
+    let len = u32::from_le_bytes(data[pos..pos + 4].try_into().unwrap()) as usize;
+    let crc = u32::from_le_bytes(data[pos + 4..pos + 8].try_into().unwrap());
+    if len > MAX_RECORD || data.len() - pos - 8 < len {
+        return Err(SedarError::Checkpoint(format!(
+            "trace log truncated in {what} at offset {pos}"
+        )));
+    }
+    let body = &data[pos + 8..pos + 8 + len];
+    if crc32(body) != crc {
+        return Err(SedarError::Checkpoint(format!(
+            "trace log CRC mismatch in {what} at offset {pos}"
+        )));
+    }
+    Ok((body, pos + 8 + len))
+}
+
+/// Parse trace-log bytes back into events and spans.
+pub fn decode_log(data: &[u8]) -> Result<(Vec<Event>, Vec<Span>)> {
+    let (header, mut pos) = next_record(data, 0, "header")?;
+    let mut r = ByteReader::new(header, "trace log header");
+    if r.bytes(4)? != MAGIC {
+        return Err(SedarError::Checkpoint(
+            "not a trace log (bad header magic)".into(),
+        ));
+    }
+    let version = r.u32()?;
+    if version != VERSION {
+        return Err(SedarError::Checkpoint(format!(
+            "unsupported trace log version {version} (this build reads \
+             version {VERSION})"
+        )));
+    }
+
+    let mut events = Vec::new();
+    let mut spans = Vec::new();
+    while pos < data.len() {
+        let (body, end) = next_record(data, pos, "record")?;
+        match decode_record(body)? {
+            RecordBody::Event(e) => events.push(e),
+            RecordBody::Span(s) => spans.push(s),
+        }
+        pos = end;
+    }
+    Ok((events, spans))
+}
+
+/// Write a run's trace log to `path` (canonical bytes; see [`encode_log`]).
+pub fn write_log(path: &Path, events: &[Event], spans: &[Span]) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::write(path, encode_log(events, spans))?;
+    Ok(())
+}
+
+/// Read a trace log back from `path`.
+pub fn read_log(path: &Path) -> Result<(Vec<Event>, Vec<Span>)> {
+    let data = std::fs::read(path)?;
+    decode_log(&data)
+}
+
+/// Microsecond timestamp string from a tick count: Chrome trace `ts`/`dur`
+/// fields are microseconds; a tick is one modeled nanosecond, rendered
+/// with fixed sub-µs precision so the JSON is byte-deterministic.
+fn micros(ticks: Tick) -> String {
+    format!("{}.{:03}", ticks / 1_000, ticks % 1_000)
+}
+
+fn chrome_pid(rank: u32) -> u32 {
+    if rank == COORD_RANK {
+        0
+    } else {
+        rank + 1
+    }
+}
+
+/// Render events + spans as Chrome trace-event JSON (the format Perfetto
+/// and `chrome://tracing` load). Each rank maps to a process (coordinator
+/// = pid 0), each replica to a thread; spans become complete (`"X"`)
+/// slices, events become thread-scoped instants (`"i"`).
+pub fn chrome_json(events: &[Event], spans: &[Span]) -> String {
+    let mut events: Vec<Event> = events.to_vec();
+    canonicalize_events(&mut events);
+    let mut spans: Vec<Span> = spans.to_vec();
+    crate::metrics::canonicalize_spans(&mut spans);
+
+    let mut entries: Vec<String> = Vec::with_capacity(events.len() + spans.len() + 4);
+
+    // Process-name metadata, one per pid in ascending order.
+    let mut pids: Vec<u32> = events
+        .iter()
+        .map(|e| chrome_pid(e.rank))
+        .chain(spans.iter().map(|s| chrome_pid(s.rank)))
+        .collect();
+    pids.sort_unstable();
+    pids.dedup();
+    for pid in pids {
+        let name = if pid == 0 {
+            "coord".to_string()
+        } else {
+            format!("rank {}", pid - 1)
+        };
+        entries.push(format!(
+            "{{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":{pid},\"tid\":0,\
+             \"args\":{{\"name\":\"{name}\"}}}}"
+        ));
+    }
+
+    for s in &spans {
+        entries.push(format!(
+            "{{\"name\":\"{}\",\"cat\":\"phase\",\"ph\":\"X\",\"ts\":{},\"dur\":{},\
+             \"pid\":{},\"tid\":{}}}",
+            s.phase.label(),
+            micros(s.begin),
+            micros(s.end.saturating_sub(s.begin)),
+            chrome_pid(s.rank),
+            s.replica
+        ));
+    }
+    for e in &events {
+        entries.push(format!(
+            "{{\"name\":\"{}\",\"cat\":\"event\",\"ph\":\"i\",\"s\":\"t\",\"ts\":{},\
+             \"pid\":{},\"tid\":{},\"args\":{{\"attempt\":{},\"detail\":\"{}\"}}}}",
+            e.kind.label(),
+            micros(e.tick),
+            chrome_pid(e.rank),
+            e.replica,
+            e.attempt,
+            crate::report::json_escape(&e.detail)
+        ));
+    }
+
+    format!(
+        "{{\"displayTimeUnit\":\"ns\",\"traceEvents\":[\n{}\n]}}\n",
+        entries.join(",\n")
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn event(tick: Tick, rank: u32, kind: EventKind, detail: &str) -> Event {
+        Event {
+            tick,
+            rank,
+            replica: 0,
+            attempt: 1,
+            kind,
+            detail: detail.into(),
+        }
+    }
+
+    fn sample() -> (Vec<Event>, Vec<Span>) {
+        let events = vec![
+            event(0, COORD_RANK, EventKind::RunStart, "run start: matmul"),
+            event(10, 1, EventKind::Injected, "INJECTED [FSC] bit-flip"),
+            event(20, 1, EventKind::Detected, "FSC divergence at VALIDATE"),
+            event(30, COORD_RANK, EventKind::Completed, "COMPLETED — résumé ✓"),
+        ];
+        let spans = vec![
+            Span { phase: Phase::Exec, rank: 0, replica: 0, begin: 0, end: 9 },
+            Span { phase: Phase::Compare, rank: 1, replica: 1, begin: 12, end: 19 },
+        ];
+        (events, spans)
+    }
+
+    #[test]
+    fn log_roundtrips_byte_exactly() {
+        let (events, spans) = sample();
+        let bytes = encode_log(&events, &spans);
+        let (back_e, back_s) = decode_log(&bytes).unwrap();
+        assert_eq!(back_e, events);
+        assert_eq!(back_s, spans);
+        // Canonical: re-encoding the decoded log is byte-identical.
+        assert_eq!(encode_log(&back_e, &back_s), bytes);
+    }
+
+    #[test]
+    fn encoding_is_independent_of_emission_interleaving() {
+        let (mut events, mut spans) = sample();
+        let forward = encode_log(&events, &spans);
+        events.reverse();
+        spans.reverse();
+        assert_eq!(encode_log(&events, &spans), forward);
+    }
+
+    #[test]
+    fn corruption_and_version_drift_are_refused() {
+        let (events, spans) = sample();
+        let bytes = encode_log(&events, &spans);
+        // Truncation at any point must error, never panic.
+        for cut in [0, 3, 11, bytes.len() / 2, bytes.len() - 1] {
+            assert!(decode_log(&bytes[..cut]).is_err(), "accepted {cut}-byte prefix");
+        }
+        // A flipped payload byte trips the record CRC.
+        let mut bent = bytes.clone();
+        let last = bent.len() - 2;
+        bent[last] ^= 0x10;
+        assert!(decode_log(&bent).is_err());
+        // A bumped header version is refused naming both versions.
+        let mut v9 = bytes.clone();
+        v9[12] = 9; // header body: magic(4) + version u32 at offset 8+4
+        let crc = crc32(&v9[8..16]);
+        v9[4..8].copy_from_slice(&crc.to_le_bytes());
+        let err = decode_log(&v9).unwrap_err().to_string();
+        assert!(err.contains("version 9"), "{err}");
+        assert!(err.contains("version 1"), "{err}");
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let p = std::env::temp_dir().join(format!(
+            "sedar-trace-{}-{:?}.log",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let (events, spans) = sample();
+        write_log(&p, &events, &spans).unwrap();
+        let (back_e, back_s) = read_log(&p).unwrap();
+        assert_eq!((back_e, back_s), (events, spans));
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn chrome_json_counts_and_shape() {
+        let (events, spans) = sample();
+        let json = chrome_json(&events, &spans);
+        assert_eq!(json.matches("\"ph\":\"i\"").count(), events.len());
+        assert_eq!(json.matches("\"ph\":\"X\"").count(), spans.len());
+        // pid 0 = coordinator, pid N+1 = rank N.
+        assert!(json.contains("\"args\":{\"name\":\"coord\"}"));
+        assert!(json.contains("\"args\":{\"name\":\"rank 1\"}"));
+        // Ticks render as microseconds with ns precision.
+        assert!(json.contains("\"ts\":0.010"), "{json}");
+        // Details are JSON-escaped, non-ASCII passes through.
+        assert!(json.contains("résumé"));
+    }
+
+    #[test]
+    fn kind_ordinals_roundtrip() {
+        for k in EventKind::ALL {
+            assert_eq!(EventKind::from_ordinal(k.ordinal()), Some(k));
+            assert!(!k.label().is_empty());
+        }
+        assert_eq!(EventKind::from_ordinal(99), None);
+    }
+}

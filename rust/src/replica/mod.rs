@@ -39,7 +39,8 @@ use crate::coordinator::trace::Trace;
 use crate::detect::{buffers_equal, sha256, Detector, Token, ValidationMode};
 use crate::error::{FaultClass, Result, SedarError};
 use crate::inject::Injector;
-use crate::metrics::RunMetrics;
+use crate::metrics::{Phase, RunMetrics, ScopedTimer};
+use crate::obs::EventKind;
 use crate::runtime::EngineHandle;
 use crate::state::{Buf, DType, Var, VarStore};
 use crate::util::bytes::TokenBuf;
@@ -247,6 +248,17 @@ impl ReplicaCtx {
         self.trace.emit(self.rank, self.replica, msg);
     }
 
+    /// [`Self::trace`] plus the typed [`crate::obs::Event`] (same text).
+    pub fn event(&self, kind: EventKind, msg: impl Into<String>) {
+        self.trace.event(self.rank, self.replica, kind, msg);
+    }
+
+    /// RAII tick span for `phase`, attributed to this rank/replica.
+    fn span(&self, phase: Phase) -> ScopedTimer<'_> {
+        self.metrics
+            .span(phase, self.rank as u32, self.replica as u32)
+    }
+
     pub fn metrics(&self) -> &RunMetrics {
         &self.metrics
     }
@@ -269,18 +281,20 @@ impl ReplicaCtx {
         if self.solo {
             return Ok(token);
         }
-        let t0 = self.clock.now();
-        let r = self
-            .pair
-            .exchange(self.replica, token, self.cfg.toe_timeout);
-        self.metrics
-            .add_duration(&self.metrics.sync_ns, self.clock.since(t0));
+        let r = {
+            let _sync = self.span(Phase::Sync);
+            self.pair
+                .exchange(self.replica, token, self.cfg.toe_timeout)
+        };
         self.metrics.add(&self.metrics.sync_events, 1);
         match r {
             Ok(tok) => Ok(tok),
             Err(PairError::Aborted) => Err(SedarError::Aborted),
             Err(PairError::Timeout) => {
-                self.trace(format!("TOE: sibling missed rendezvous at {site}"));
+                self.event(
+                    EventKind::ToeExpired,
+                    format!("TOE: sibling missed rendezvous at {site}"),
+                );
                 Err(self
                     .detector
                     .report(FaultClass::Toe, self.rank, site, self.cursor))
@@ -292,15 +306,18 @@ impl ReplicaCtx {
         if self.solo {
             return Ok(vec![1].into());
         }
-        let t0 = self.clock.now();
-        let r = self.pair.pop_mine(self.replica, self.cfg.toe_timeout);
-        self.metrics
-            .add_duration(&self.metrics.sync_ns, self.clock.since(t0));
+        let r = {
+            let _sync = self.span(Phase::Sync);
+            self.pair.pop_mine(self.replica, self.cfg.toe_timeout)
+        };
         match r {
             Ok(tok) => Ok(tok),
             Err(PairError::Aborted) => Err(SedarError::Aborted),
             Err(PairError::Timeout) => {
-                self.trace(format!("TOE: sibling missed rendezvous at {site}"));
+                self.event(
+                    EventKind::ToeExpired,
+                    format!("TOE: sibling missed rendezvous at {site}"),
+                );
                 Err(self
                     .detector
                     .report(FaultClass::Toe, self.rank, site, self.cursor))
@@ -359,10 +376,10 @@ impl ReplicaCtx {
             ValidationMode::Full => {
                 if self.is_lead() {
                     let peer = self.pop_from_sibling_site(site)?;
-                    let t0 = self.clock.now();
-                    let eq = buffers_equal(bytes, peer.as_bytes());
-                    self.metrics
-                        .add_duration(&self.metrics.compare_ns, self.clock.since(t0));
+                    let eq = {
+                        let _cmp = self.span(Phase::Compare);
+                        buffers_equal(bytes, peer.as_bytes())
+                    };
                     self.push_to_sibling(vec![eq as u8].into());
                     eq
                 } else {
@@ -377,11 +394,8 @@ impl ReplicaCtx {
             }
             ValidationMode::Sha256 => {
                 let token = {
-                    let t0 = self.clock.now();
-                    let tok = Token::new(ValidationMode::Sha256, bytes);
-                    self.metrics
-                        .add_duration(&self.metrics.compare_ns, self.clock.since(t0));
-                    tok
+                    let _cmp = self.span(Phase::Compare);
+                    Token::new(ValidationMode::Sha256, bytes)
                 };
                 let peer = self.pair_exchange(token.to_wire().into(), site)?;
                 token.matches(peer.as_bytes())
@@ -392,7 +406,10 @@ impl ReplicaCtx {
         if equal {
             Ok(())
         } else {
-            self.trace(format!("{class} divergence detected at {site}"));
+            self.event(
+                EventKind::Detected,
+                format!("{class} divergence detected at {site}"),
+            );
             Err(self.detector.report(class, self.rank, site, self.cursor))
         }
     }
@@ -664,7 +681,10 @@ impl ReplicaCtx {
     pub fn validate_result(&mut self, var: &str, site: &str) -> Result<()> {
         let v = self.store.get(var)?.clone();
         self.compare_with_sibling(&v.buf, site, FaultClass::Fsc)?;
-        self.trace(format!("{site}: final result replicas agree"));
+        self.event(
+            EventKind::Validated,
+            format!("{site}: final result replicas agree"),
+        );
         Ok(())
     }
 
@@ -685,7 +705,7 @@ impl ReplicaCtx {
         let chain = Arc::clone(self.sys_chain.as_ref().ok_or_else(|| {
             SedarError::Checkpoint("system checkpoint without a chain".into())
         })?);
-        let t0 = self.clock.now();
+        let _ck = self.span(Phase::SysCkpt);
         // The snapshot resumes at the phase AFTER this checkpoint.
         let resume_cursor = self.cursor + 1;
         if self.is_lead() {
@@ -714,17 +734,20 @@ impl ReplicaCtx {
             // Release the sibling.
             self.push_to_sibling(vec![1].into());
             if self.rank == 0 {
-                self.trace(format!("{site}: system checkpoint #{ck_no} stored"));
+                self.event(
+                    EventKind::CkptStored,
+                    format!("{site}: system checkpoint #{ck_no} stored"),
+                );
             }
         } else {
             self.push_to_sibling(self.store.serialize().into());
             // Wait for the leader to finish the coordinated store. Uses the
             // (long) checkpoint lapse, not the TOE lapse: disk writes are
             // legitimately slow.
-            let t0w = self.clock.now();
-            let r = self.pair.pop_mine(self.replica, self.cfg.ckpt_timeout);
-            self.metrics
-                .add_duration(&self.metrics.sync_ns, self.clock.since(t0w));
+            let r = {
+                let _sync = self.span(Phase::Sync);
+                self.pair.pop_mine(self.replica, self.cfg.ckpt_timeout)
+            };
             match r {
                 Ok(_) => {}
                 Err(PairError::Aborted) => return Err(SedarError::Aborted),
@@ -738,8 +761,6 @@ impl ReplicaCtx {
                 }
             }
         }
-        self.metrics
-            .add_duration(&self.metrics.sys_ckpt_ns, self.clock.since(t0));
         Ok(())
     }
 
@@ -751,7 +772,7 @@ impl ReplicaCtx {
         let chain = Arc::clone(self.user_chain.as_ref().ok_or_else(|| {
             SedarError::Checkpoint("user checkpoint without a chain".into())
         })?);
-        let t0 = self.clock.now();
+        let _ck = self.span(Phase::UserCkpt);
         let sig: Vec<&str> = self.significant.iter().map(|s| s.as_str()).collect();
         // Serialize the significant variables once; hash and (on the lead)
         // store those bytes directly (perf change P5).
@@ -804,9 +825,10 @@ impl ReplicaCtx {
                 self.ep.barrier(0)?;
                 if self.rank == 0 {
                     chain.commit_valid(ck_no)?;
-                    self.trace(format!(
-                        "{site}: user checkpoint #{ck_no} VALID (previous discarded)"
-                    ));
+                    self.event(
+                        EventKind::CkptStored,
+                        format!("{site}: user checkpoint #{ck_no} VALID (previous discarded)"),
+                    );
                 }
                 self.ep.barrier(0)?;
                 self.push_to_sibling(vec![1].into());
@@ -819,13 +841,14 @@ impl ReplicaCtx {
                     return Err(SedarError::Aborted);
                 }
             }
-            self.metrics
-                .add_duration(&self.metrics.user_ckpt_ns, self.clock.since(t0));
             Ok(())
         } else {
             // Corrupted candidate: not stored; detection fires here (the
             // fault happened within the last checkpoint interval).
-            self.trace(format!("{site}: user checkpoint #{ck_no} CORRUPTED"));
+            self.event(
+                EventKind::CkptCorrupt,
+                format!("{site}: user checkpoint #{ck_no} CORRUPTED"),
+            );
             Err(self
                 .detector
                 .report(FaultClass::CkptCorrupt, self.rank, site, self.cursor))
@@ -840,13 +863,13 @@ impl ReplicaCtx {
     where
         F: FnOnce(&[Var]) -> Result<Vec<Var>>,
     {
-        let t0 = self.clock.now();
-        let out = match (&self.engine, self.cfg.use_xla) {
-            (Some(engine), true) => engine.execute(artifact, inputs),
-            _ => fallback(&inputs),
+        let out = {
+            let _exec = self.span(Phase::Exec);
+            match (&self.engine, self.cfg.use_xla) {
+                (Some(engine), true) => engine.execute(artifact, inputs),
+                _ => fallback(&inputs),
+            }
         };
-        self.metrics
-            .add_duration(&self.metrics.exec_ns, self.clock.since(t0));
         self.metrics.add(&self.metrics.execs, 1);
         out
     }
@@ -859,7 +882,10 @@ impl ReplicaCtx {
             self.injector
                 .maybe_inject_at_phase(phase, self.rank, self.replica, &mut self.store)
         {
-            self.trace(format!("INJECTED [{}] {}", rec.name, rec.description));
+            self.event(
+                EventKind::Injected,
+                format!("INJECTED [{}] {}", rec.name, rec.description),
+            );
         }
     }
 
@@ -871,9 +897,12 @@ impl ReplicaCtx {
             .injector
             .maybe_index_rollback(phase, subblock, self.rank, self.replica);
         if let Some((redo, delay)) = r {
-            self.trace(format!(
-                "INJECTED index rollback at subblock {subblock}: redo {redo}, delay {delay:?}"
-            ));
+            self.event(
+                EventKind::Injected,
+                format!(
+                    "INJECTED index rollback at subblock {subblock}: redo {redo}, delay {delay:?}"
+                ),
+            );
         }
         r
     }

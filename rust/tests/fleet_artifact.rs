@@ -53,6 +53,22 @@ fn ornate(index: usize) -> TaskOutcome {
             "νote with emoji ✗ and cyrillic ошибка".into(),
         ],
         wall: Duration::from_millis(12),
+        metrics: sedar::metrics::MetricsSnapshot {
+            compare_ticks: 1,
+            compare_bytes: 2,
+            sync_ticks: 3,
+            sync_events: 4,
+            sys_ckpt_ticks: 5,
+            sys_ckpt_bytes: 6,
+            sys_ckpts: 7,
+            user_ckpt_ticks: 8,
+            user_ckpt_bytes: 9,
+            user_ckpts: 10,
+            exec_ticks: 11,
+            execs: 12,
+            rollback_ticks: 13,
+            rollbacks: 14,
+        },
     }
 }
 
@@ -75,6 +91,7 @@ fn plain(index: usize) -> TaskOutcome {
         pass: true,
         mismatches: vec![],
         wall: Duration::ZERO,
+        metrics: Default::default(),
     }
 }
 

@@ -1,0 +1,133 @@
+//! The observability layer's determinism contract (PR 7):
+//!
+//! 1. a TOE scenario run twice under the virtual clock produces a
+//!    byte-identical typed event log ([`sedar::obs`]) and an identical
+//!    [`sedar::metrics::MetricsSnapshot`] — the observability layer is
+//!    replayable state, not a measurement;
+//! 2. the Chrome trace export carries exactly one instant per typed event
+//!    (the round-trip the `sedar trace export` CLI relies on);
+//! 3. splitting a sweep into N shards and aggregating the pieces renders a
+//!    "Table 3 (measured vs model)" section byte-identical to the
+//!    single-process run — work counters merge associatively.
+
+use std::sync::Arc;
+
+use sedar::apps::matmul::MatmulApp;
+use sedar::campaign::scheduler::null_sink;
+use sedar::campaign::{build_tasks, run_campaign, run_tasks, CampaignReport, CampaignSpec};
+use sedar::config::{RunConfig, Strategy};
+use sedar::coordinator::{RunOutcome, SedarRun};
+use sedar::error::FaultClass;
+use sedar::util::clock::ClockMode;
+use sedar::workfault;
+
+/// One index-corruption (TOE) run under the virtual clock — the scenario
+/// with the richest event mix (injection, TOE expiry, rollback, resume).
+fn toe_run_virtual(tag: &str) -> RunOutcome {
+    let app = MatmulApp::new(64, 4);
+    let mut cfg = RunConfig::for_tests(tag);
+    cfg.strategy = Strategy::SysCkpt;
+    cfg.clock = ClockMode::Virtual;
+    cfg.toe_timeout = std::time::Duration::from_secs(60);
+    let cat = workfault::catalog(&app);
+    let sc = cat
+        .iter()
+        .find(|s| s.effect == FaultClass::Toe)
+        .expect("catalog has TOE scenarios");
+    let inj = workfault::injection_for(&app, sc, &cfg);
+    let out = SedarRun::new(Arc::new(app), cfg.clone(), Some(inj))
+        .run()
+        .unwrap();
+    let _ = std::fs::remove_dir_all(&cfg.run_dir);
+    out
+}
+
+#[test]
+fn typed_event_log_and_metrics_are_repeat_run_identical() {
+    let a = toe_run_virtual("obsdet-a");
+    let b = toe_run_virtual("obsdet-b");
+
+    assert!(!a.events.is_empty(), "TOE run produced no typed events");
+    assert!(!a.spans.is_empty(), "TOE run produced no phase spans");
+    assert_eq!(
+        a.metrics, b.metrics,
+        "repeat virtual-clock runs disagree on the metrics snapshot"
+    );
+    // The strongest form of the contract: the serialized log — ticks,
+    // ranks, kinds, details, span boundaries, CRCs — is byte-identical.
+    let log_a = sedar::obs::encode_log(&a.events, &a.spans);
+    let log_b = sedar::obs::encode_log(&b.events, &b.spans);
+    assert_eq!(
+        log_a, log_b,
+        "typed event logs diverged between identical virtual-clock runs"
+    );
+
+    // The Chrome export round-trips the event count: one "ph":"i" instant
+    // per typed event, one "ph":"X" slice per span.
+    let json = sedar::obs::chrome_json(&a.events, &a.spans);
+    assert_eq!(json.matches("\"ph\":\"i\"").count(), a.events.len());
+    assert_eq!(json.matches("\"ph\":\"X\"").count(), a.spans.len());
+}
+
+/// The `campaign_determinism` slice (scenarios 2, 29, 50 across every app,
+/// strategy and collective — 54 cells) with a per-test run dir.
+fn small_spec(tag: &str, jobs: usize) -> CampaignSpec {
+    let mut spec = CampaignSpec::new(42);
+    spec.apply_filter("scenario=2,scenario=29,scenario=50")
+        .unwrap();
+    spec.jobs = jobs;
+    let toe_timeout = spec.base.toe_timeout;
+    let mut base = RunConfig::for_tests(tag);
+    base.run_dir = std::env::temp_dir().join(format!(
+        "sedar-obsdet-{tag}-{}-{:?}",
+        std::process::id(),
+        std::thread::current().id()
+    ));
+    base.toe_timeout = toe_timeout;
+    spec.base = base;
+    spec
+}
+
+/// The "## Table 3 (measured vs model)" section of a deterministic report.
+fn table3_section(report: &str) -> &str {
+    let at = report
+        .find("## Table 3 (measured vs model)")
+        .expect("report is missing the measured Table 3 section");
+    &report[at..]
+}
+
+#[test]
+fn shard_split_table3_measured_matches_single_process_run() {
+    // Single-process reference sweep.
+    let spec_whole = small_spec("whole", 2);
+    let whole = run_campaign(&spec_whole).unwrap();
+    let report_whole = whole.deterministic_report();
+
+    // The same sweep as three shards, each run through the worker pool
+    // separately, then aggregated exactly like `sedar merge` does.
+    let spec_shards = small_spec("shards", 2);
+    let tasks = build_tasks(&spec_shards);
+    assert_eq!(tasks.len(), 54);
+    let mut outcomes = Vec::new();
+    for chunk in tasks.chunks(tasks.len().div_ceil(3)) {
+        outcomes.extend(run_tasks(&spec_shards, chunk, &null_sink()).unwrap());
+    }
+    let merged = CampaignReport::new(spec_shards.seed, outcomes);
+    let report_merged = merged.deterministic_report();
+
+    let t3 = table3_section(&report_whole);
+    assert!(
+        t3.contains("f_d (meas)") && t3.contains("ovh (model)"),
+        "measured Table 3 lost its columns:\n{t3}"
+    );
+    assert_eq!(
+        t3,
+        table3_section(&report_merged),
+        "shard split changed the measured Table 3"
+    );
+    // And not just the table: the whole report is shard-invariant.
+    assert_eq!(report_whole, report_merged);
+
+    let _ = std::fs::remove_dir_all(&spec_whole.base.run_dir);
+    let _ = std::fs::remove_dir_all(&spec_shards.base.run_dir);
+}

@@ -11,7 +11,10 @@
 //!    (payloads are shared buffers: a send moves a reference);
 //! 3. **ckpt_frame** — single-pass checkpoint frame write/read MB/s by
 //!    codec (`Raw`, `Deflate(1)`, `Deflate(6)`);
-//! 4. **campaign** — end-to-end wall time of the 1152-task injection sweep
+//! 4. **faultnet** — per-message fault-plan evaluation cost (the tax every
+//!    delivery pays when a [`crate::faultnet`] plan is installed) and the
+//!    end-to-end overhead of a perturbed vs clean p2p stream;
+//! 5. **campaign** — end-to-end wall time of the 1152-task injection sweep
 //!    (64 scenarios × 3 apps × 3 strategies × 2 collectives modes — the
 //!    system-level number everything above feeds, and the sweep the
 //!    pooled-world arena keeps allocation-flat).
@@ -79,6 +82,7 @@ pub fn run_suite(opts: &BenchOpts) -> Result<JsonReport> {
     msg_validation_section(opts, &mut jr);
     transport_section(opts, &mut jr);
     ckpt_frame_section(opts, &mut jr);
+    faultnet_section(opts, &mut jr);
     if opts.campaign {
         campaign_section(opts, &mut jr)?;
     }
@@ -226,6 +230,74 @@ fn ckpt_frame_section(opts: &BenchOpts, jr: &mut JsonReport) {
     print_section(opts.echo, "checkpoint frame substrate (t_cs drivers)", &rows);
 }
 
+/// Network fault layer: what a plan costs per message to evaluate, and
+/// what a perturbed transport costs end-to-end. The e2e pair uses the
+/// `Reorder` plan — delay-only, so the faulted stream still delivers every
+/// byte and the clean/faulted delta is pure perturbation overhead (drop
+/// and corrupt plans change *what* arrives, not just when, and belong to
+/// the campaign oracle rather than a throughput number).
+fn faultnet_section(opts: &BenchOpts, jr: &mut JsonReport) {
+    use crate::faultnet::{FaultLayer, FaultPlan, NetFaultMode};
+    use crate::util::clock::Clock;
+    use std::sync::Arc;
+    eprintln!("bench: faultnet");
+    let mut rows = Vec::new();
+    let evals: u64 = if opts.quick { 100_000 } else { 1_000_000 };
+    for mode in [NetFaultMode::Drop, NetFaultMode::Mixed] {
+        let plan = FaultPlan::new(mode, 42);
+        rows.push((
+            bench(&format!("plan eval {} x{evals}", mode.label()), 1, 5, || {
+                for seq in 0..evals {
+                    black_box(plan.action(0, 1, seq));
+                }
+            }),
+            None,
+        ));
+    }
+
+    let msgs = if opts.quick { 500 } else { 2_000 };
+    let size = 1usize << 16;
+    let elems = size / 4;
+    let variants: [(&str, Option<Arc<FaultLayer>>); 2] = [
+        ("clean", None),
+        (
+            "reorder",
+            Some(Arc::new(FaultLayer::new(
+                FaultPlan::new(NetFaultMode::Reorder, 7),
+                1,
+                None,
+            ))),
+        ),
+    ];
+    for (label, layer) in variants {
+        let payload = Var::f32(&[elems], vec![0.5f32; elems]);
+        let net = Network::with_faults(2, Clock::wall(), layer);
+        let a = net.endpoint(0);
+        let b = net.endpoint(1);
+        let recv = std::thread::spawn(move || {
+            for _ in 0..msgs {
+                b.recv(0, 64).unwrap();
+            }
+        });
+        let s = bench(
+            &format!("p2p {label} {}", size_label(size)),
+            0,
+            1,
+            || {
+                for _ in 0..msgs {
+                    a.send(1, 64, payload.clone()).unwrap();
+                }
+            },
+        );
+        recv.join().unwrap();
+        rows.push((s, Some(size * msgs)));
+    }
+    for (s, b) in &rows {
+        jr.push_stats("faultnet", s, *b);
+    }
+    print_section(opts.echo, "network fault layer (plan eval / perturbed p2p)", &rows);
+}
+
 /// End-to-end: the full injection campaign, one wall-clock number per
 /// clock mode. The wall-clock run is the paper-faithful baseline; the
 /// virtual-clock run is the same sweep (byte-identical report) with every
@@ -299,7 +371,7 @@ mod tests {
         let jr = run_suite(&opts).unwrap();
         let doc = jr.render();
         assert!(doc.contains("\"schema\": \"sedar-bench/1\""));
-        for group in ["msg_validation", "transport", "ckpt_frame"] {
+        for group in ["msg_validation", "transport", "ckpt_frame", "faultnet"] {
             assert!(doc.contains(&format!("\"group\":\"{group}\"")), "missing {group}");
         }
         assert!(doc.contains("\"ns_per_mib\":"));

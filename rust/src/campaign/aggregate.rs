@@ -14,7 +14,7 @@ use crate::model::{self, PaperApp};
 use crate::report::Table;
 
 use super::shard::TaskOutcome;
-use super::{collective_label, validation_label, CampaignApp};
+use super::{collective_label, netfault_label, validation_label, CampaignApp};
 
 /// The aggregated result of a campaign.
 #[derive(Debug)]
@@ -161,8 +161,8 @@ impl CampaignReport {
     /// observed effect and site, recovery path, verdict).
     fn rows(&self) -> Table {
         let mut t = Table::new(&[
-            "task", "sc", "app", "strategy", "coll", "val", "faults", "observed", "site", "resume",
-            "N_roll", "result", "verdict",
+            "task", "sc", "app", "strategy", "coll", "val", "faults", "net", "observed", "site",
+            "resume", "N_roll", "result", "verdict",
         ]);
         for o in &self.outcomes {
             let (class, site) = match &o.first_detection {
@@ -177,6 +177,7 @@ impl CampaignReport {
                 collective_label(o.collectives).to_string(),
                 validation_label(o.validation).to_string(),
                 o.faults.to_string(),
+                netfault_label(o.netfault).to_string(),
                 class,
                 site,
                 o.last_resume
@@ -355,6 +356,7 @@ mod tests {
             collectives: crate::config::CollectiveImpl::PointToPoint,
             validation: crate::detect::ValidationMode::Full,
             faults: 1,
+            netfault: crate::faultnet::NetFaultMode::None,
             completed: true,
             restarts: 1,
             injected: true,

@@ -42,6 +42,7 @@ use crate::apps::{JacobiApp, MatmulApp, SwApp};
 use crate::config::{CollectiveImpl, RunConfig, Strategy};
 use crate::detect::ValidationMode;
 use crate::error::{Result, SedarError};
+use crate::faultnet::NetFaultMode;
 use crate::util::clock::ClockMode;
 use crate::util::prng::SplitMix64;
 use crate::workfault::{self, Scenario};
@@ -198,6 +199,18 @@ pub static VALIDATION_AXIS: Axis<ValidationMode> = Axis {
     label: ValidationMode::label,
 };
 
+/// The network-fault axis (beyond-paper): which transport perturbation
+/// family each cell's world runs under ([`crate::faultnet`]). The default
+/// sweep set is `[None]` — the fault-free 1152-task geometry — so the
+/// axis only widens a sweep when asked for (`netfault=mixed`, …).
+pub static NETFAULT_AXIS: Axis<NetFaultMode> = Axis {
+    key: "netfault",
+    domain: &NetFaultMode::ALL,
+    ordinal: netfault_ordinal,
+    parse: NetFaultMode::parse,
+    label: netfault_label,
+};
+
 /// Stable strategy ordinal, folded into the per-task seed.
 pub fn strategy_ordinal(s: Strategy) -> u64 {
     match s {
@@ -254,6 +267,21 @@ pub fn validation_label(v: ValidationMode) -> &'static str {
     v.label()
 }
 
+/// Stable netfault ordinal, folded into the per-task seed.
+pub fn netfault_ordinal(m: NetFaultMode) -> u64 {
+    m.ordinal() as u64
+}
+
+/// Inverse of [`netfault_ordinal`] (artifact decoding).
+pub fn netfault_from_ordinal(ord: u64) -> Option<NetFaultMode> {
+    NETFAULT_AXIS.from_ordinal(ord)
+}
+
+/// Short label for report rows and filters (see [`NetFaultMode::label`]).
+pub fn netfault_label(m: NetFaultMode) -> &'static str {
+    m.label()
+}
+
 /// Every key [`CampaignSpec::apply_filter`] accepts: the enum-axis table
 /// keys plus the two scalar keys (`scenario` ids/ranges, `faults` counts)
 /// that aren't enum axes. Error messages render this so the listing can
@@ -266,6 +294,7 @@ pub fn filter_key_listing() -> String {
         COLLECTIVES_AXIS.key,
         VALIDATION_AXIS.key,
         "faults",
+        NETFAULT_AXIS.key,
     ]
     .join("|")
 }
@@ -284,7 +313,7 @@ fn fold(h: u64, v: u64) -> u64 {
 
 /// The per-task deterministic seed:
 /// `hash(campaign_seed, scenario_id, app, strategy, collectives,
-/// validation, faults)`.
+/// validation, faults, netfault)`.
 ///
 /// Every task's workload generation, injection-site choice and run
 /// directory derive from this value alone — never from wall-clock time,
@@ -300,17 +329,19 @@ pub fn task_seed(
     collectives: CollectiveImpl,
     validation: ValidationMode,
     faults: u32,
+    netfault: NetFaultMode,
 ) -> u64 {
-    // Domain tag bumped (…03) when the collectives axis joined the fold
-    // set (…02 added validation/faults), so cross-version artifacts can
-    // never alias.
-    let h = fold(campaign_seed, 0x5EDA_2C03);
+    // Domain tag bumped (…04) when the netfault axis joined the fold set
+    // (…03 added collectives, …02 validation/faults), so cross-version
+    // artifacts can never alias.
+    let h = fold(campaign_seed, 0x5EDA_2C04);
     let h = fold(h, scenario_id as u64 + 1);
     let h = fold(h, app.ordinal() + 1);
     let h = fold(h, strategy_ordinal(strategy) + 1);
     let h = fold(h, collective_ordinal(collectives) + 1);
     let h = fold(h, validation_ordinal(validation) + 1);
-    fold(h, faults as u64)
+    let h = fold(h, faults as u64);
+    fold(h, netfault_ordinal(netfault) + 1)
 }
 
 /// What to sweep and how wide to fan out.
@@ -338,6 +369,11 @@ pub struct CampaignSpec {
     /// independent seed-derived bit-flips per §3.2's multi-fault
     /// discussion).
     pub fault_counts: Vec<u32>,
+    /// Network-fault families to sweep (beyond-paper axis; default
+    /// `[None]`, the fault-free transport — `netfault=mixed` etc. widen
+    /// the sweep with [`crate::faultnet`]-perturbed worlds graded against
+    /// the safety oracle in [`shard::grade`]).
+    pub netfaults: Vec<NetFaultMode>,
     /// Keep only these scenario ids (`None` = the full 64).
     pub scenarios: Option<Vec<u32>>,
     /// Base config every task derives from. `base.run_dir` is the campaign
@@ -378,6 +414,7 @@ impl CampaignSpec {
             collectives: COLLECTIVES.to_vec(),
             validations: vec![ValidationMode::Full],
             fault_counts: vec![1],
+            netfaults: vec![NetFaultMode::None],
             scenarios: None,
             base,
             echo: false,
@@ -404,6 +441,7 @@ impl CampaignSpec {
         let mut collectives: Vec<CollectiveImpl> = Vec::new();
         let mut validations: Vec<ValidationMode> = Vec::new();
         let mut fault_counts: Vec<u32> = Vec::new();
+        let mut netfaults: Vec<NetFaultMode> = Vec::new();
         let mut scenarios: Vec<u32> = Vec::new();
         for term in filter.split(',').map(str::trim).filter(|t| !t.is_empty()) {
             let (key, value) = term.split_once('=').ok_or_else(|| {
@@ -420,6 +458,9 @@ impl CampaignSpec {
                 }
                 k if k == VALIDATION_AXIS.key => {
                     validations.push((VALIDATION_AXIS.parse)(value.trim())?)
+                }
+                k if k == NETFAULT_AXIS.key => {
+                    netfaults.push((NETFAULT_AXIS.parse)(value.trim())?)
                 }
                 "faults" => {
                     let k: u32 = value.trim().parse().map_err(|e| {
@@ -476,6 +517,9 @@ impl CampaignSpec {
         if !fault_counts.is_empty() {
             self.fault_counts = fault_counts;
         }
+        if !netfaults.is_empty() {
+            self.netfaults = netfaults;
+        }
         if !scenarios.is_empty() {
             self.scenarios = Some(scenarios);
         }
@@ -500,7 +544,8 @@ pub fn build_tasks(spec: &CampaignSpec) -> Vec<CampaignTask> {
         * spec.strategies.len()
         * spec.collectives.len()
         * spec.validations.len()
-        * spec.fault_counts.len();
+        * spec.fault_counts.len()
+        * spec.netfaults.len();
     let mut tasks = Vec::with_capacity(catalog.len() * cells);
     for sc in &catalog {
         for &app in &spec.apps {
@@ -508,24 +553,28 @@ pub fn build_tasks(spec: &CampaignSpec) -> Vec<CampaignTask> {
                 for &collectives in &spec.collectives {
                     for &validation in &spec.validations {
                         for &faults in &spec.fault_counts {
-                            tasks.push(CampaignTask {
-                                index: tasks.len(),
-                                scenario: sc.clone(),
-                                app,
-                                strategy,
-                                collectives,
-                                validation,
-                                faults,
-                                seed: task_seed(
-                                    spec.seed,
-                                    sc.id,
+                            for &netfault in &spec.netfaults {
+                                tasks.push(CampaignTask {
+                                    index: tasks.len(),
+                                    scenario: sc.clone(),
                                     app,
                                     strategy,
                                     collectives,
                                     validation,
                                     faults,
-                                ),
-                            });
+                                    netfault,
+                                    seed: task_seed(
+                                        spec.seed,
+                                        sc.id,
+                                        app,
+                                        strategy,
+                                        collectives,
+                                        validation,
+                                        faults,
+                                        netfault,
+                                    ),
+                                });
+                            }
                         }
                     }
                 }
@@ -542,7 +591,9 @@ pub fn build_tasks(spec: &CampaignSpec) -> Vec<CampaignTask> {
 /// and `--journal` can refuse to mix different sweeps even when seed and
 /// task counts coincide.
 pub fn sweep_fingerprint(seed: u64, tasks: &[CampaignTask]) -> u64 {
-    let mut h = fold(seed, 0x5EDA_F1E8);
+    // Domain tag bumped (…E9) when the netfault axis joined the fold set,
+    // so v3 artifacts can never alias a v4 fingerprint.
+    let mut h = fold(seed, 0x5EDA_F1E9);
     for t in tasks {
         h = fold(h, t.index as u64 + 1);
         h = fold(h, t.scenario.id as u64 + 1);
@@ -551,6 +602,7 @@ pub fn sweep_fingerprint(seed: u64, tasks: &[CampaignTask]) -> u64 {
         h = fold(h, collective_ordinal(t.collectives) + 1);
         h = fold(h, validation_ordinal(t.validation) + 1);
         h = fold(h, t.faults as u64);
+        h = fold(h, netfault_ordinal(t.netfault) + 1);
     }
     h
 }
@@ -573,6 +625,7 @@ mod tests {
             CollectiveImpl::PointToPoint,
             ValidationMode::Full,
             1,
+            NetFaultMode::None,
         )
     }
 
@@ -594,7 +647,8 @@ mod tests {
                 Strategy::SysCkpt,
                 CollectiveImpl::Native,
                 ValidationMode::Full,
-                1
+                1,
+                NetFaultMode::None,
             )
         );
         assert_ne!(
@@ -606,7 +660,8 @@ mod tests {
                 Strategy::SysCkpt,
                 CollectiveImpl::PointToPoint,
                 ValidationMode::Sha256,
-                1
+                1,
+                NetFaultMode::None,
             )
         );
         assert_ne!(
@@ -618,7 +673,21 @@ mod tests {
                 Strategy::SysCkpt,
                 CollectiveImpl::PointToPoint,
                 ValidationMode::Full,
-                2
+                2,
+                NetFaultMode::None,
+            )
+        );
+        assert_ne!(
+            base,
+            task_seed(
+                42,
+                1,
+                CampaignApp::Matmul,
+                Strategy::SysCkpt,
+                CollectiveImpl::PointToPoint,
+                ValidationMode::Full,
+                1,
+                NetFaultMode::Mixed,
             )
         );
         // And it is a pure function.
@@ -636,6 +705,28 @@ mod tests {
         for c in COLLECTIVES {
             assert!(tasks.iter().any(|t| t.collectives == c), "missing {c:?}");
         }
+        // The default sweep stays fault-free: the netfault axis widens a
+        // sweep only when a filter asks for it.
+        assert!(tasks.iter().all(|t| t.netfault == NetFaultMode::None));
+    }
+
+    #[test]
+    fn netfault_filter_widens_the_sweep() {
+        let mut spec = CampaignSpec::new(7);
+        spec.apply_filter(
+            "app=matmul,strategy=sys,scenario=1-4,collectives=p2p,\
+             netfault=none,netfault=mixed",
+        )
+        .unwrap();
+        let tasks = build_tasks(&spec);
+        // 4 scenarios × 1 app × 1 strategy × 1 collectives × 2 netfaults.
+        assert_eq!(tasks.len(), 8);
+        assert!(tasks.iter().any(|t| t.netfault == NetFaultMode::Mixed));
+        // Distinct seeds everywhere — the axis is part of the fold set.
+        let mut seeds: Vec<u64> = tasks.iter().map(|t| t.seed).collect();
+        seeds.sort_unstable();
+        seeds.dedup();
+        assert_eq!(seeds.len(), 8);
     }
 
     #[test]
@@ -688,6 +779,7 @@ mod tests {
         assert!(spec.apply_filter("faults=0").is_err());
         assert!(spec.apply_filter("faults=99").is_err());
         assert!(spec.apply_filter("faults=two").is_err());
+        assert!(spec.apply_filter("netfault=gamma-ray").is_err());
     }
 
     #[test]
@@ -707,6 +799,7 @@ mod tests {
         assert_ne!(base, tasks_of(42, "scenario=1-12,collectives=p2p"));
         assert_ne!(base, tasks_of(42, "scenario=1-12,validation=sha256"));
         assert_ne!(base, tasks_of(42, "scenario=1-12,faults=2"));
+        assert_ne!(base, tasks_of(42, "scenario=1-12,netfault=drop"));
     }
 
     #[test]
@@ -752,6 +845,7 @@ mod tests {
         check_axis(&STRATEGY_AXIS);
         check_axis(&COLLECTIVES_AXIS);
         check_axis(&VALIDATION_AXIS);
+        check_axis(&NETFAULT_AXIS);
     }
 
     #[test]
@@ -762,7 +856,7 @@ mod tests {
             Ok(()) => panic!("bogus key accepted"),
         };
         assert!(
-            err.contains("app|strategy|scenario|collectives|validation|faults"),
+            err.contains("app|strategy|scenario|collectives|validation|faults|netfault"),
             "listing missing from: {err}"
         );
     }

@@ -12,6 +12,7 @@ use std::time::Duration;
 use crate::checkpoint::snapshot::Codec;
 use crate::detect::ValidationMode;
 use crate::error::{Result, SedarError};
+use crate::faultnet::NetFaultMode;
 use crate::util::clock::ClockMode;
 
 /// The protection strategy — the three SEDAR levels plus the paper's
@@ -104,6 +105,9 @@ pub struct RunConfig {
     pub validation: ValidationMode,
     /// Collective implementation.
     pub collectives: CollectiveImpl,
+    /// Deterministic network-fault family perturbing vmpi deliveries
+    /// (`none` = no fault layer installed).
+    pub netfault: NetFaultMode,
     /// Clock the run's world lives on: `Wall` (real time; interactive and
     /// bench default) or `Virtual` (logical ticks, quiescence-driven;
     /// campaign default). Timeouts below are *modeled time* — under `Wall`
@@ -138,6 +142,7 @@ impl Default for RunConfig {
             strategy: Strategy::SysCkpt,
             validation: ValidationMode::Full,
             collectives: CollectiveImpl::PointToPoint,
+            netfault: NetFaultMode::None,
             clock: ClockMode::Wall,
             toe_timeout: Duration::from_millis(1500),
             ckpt_timeout: Duration::from_secs(60),
@@ -241,6 +246,14 @@ const KEYS: &[KeyDef] = &[
         kind: "choice",
         set: |c, v| {
             c.collectives = CollectiveImpl::parse(v)?;
+            Ok(())
+        },
+    },
+    KeyDef {
+        name: "netfault",
+        kind: "choice",
+        set: |c, v| {
+            c.netfault = NetFaultMode::parse(v)?;
             Ok(())
         },
     },
@@ -410,6 +423,17 @@ mod tests {
     }
 
     #[test]
+    fn netfault_key_parses_every_mode() {
+        assert_eq!(RunConfig::default().netfault, NetFaultMode::None);
+        for mode in NetFaultMode::ALL {
+            let cfg =
+                RunConfig::from_kv(&format!("netfault = {}", mode.label())).unwrap();
+            assert_eq!(cfg.netfault, mode);
+        }
+        assert!(RunConfig::from_kv("netfault = cosmic").is_err());
+    }
+
+    #[test]
     fn kv_rejects_unknown_keys_and_bad_lines() {
         assert!(RunConfig::from_kv("nope = 1").is_err());
         assert!(RunConfig::from_kv("strategy").is_err());
@@ -419,7 +443,13 @@ mod tests {
     #[test]
     fn unknown_key_error_lists_the_registry() {
         let err = RunConfig::from_kv("nope = 1").unwrap_err().to_string();
-        for name in ["strategy", "clock", "toe_timeout_ms", "toe_timeout_ticks"] {
+        for name in [
+            "strategy",
+            "clock",
+            "netfault",
+            "toe_timeout_ms",
+            "toe_timeout_ticks",
+        ] {
             assert!(err.contains(name), "'{name}' missing from: {err}");
         }
     }

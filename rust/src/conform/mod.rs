@@ -1,0 +1,425 @@
+//! `sedar conform` — the N-run determinism harness and divergence
+//! localizer.
+//!
+//! The repo's central reproducibility claim is that a campaign slice is a
+//! pure function of its seed: same seed + same filter ⇒ byte-identical
+//! report and trace logs, whatever the worker count, shard split or host
+//! load — and PR 8's network-fault axis leans on that claim hardest, since
+//! a reorder/dup schedule that varied between runs would make every
+//! faulted verdict unreproducible. `conform` turns the claim into a
+//! checked property: it executes the same slice N times into per-run
+//! scratch directories, byte-compares every deterministic artifact the
+//! runs produced (the deterministic report plus each task's typed trace
+//! log), and on the first mismatch localizes it exactly — artifact name,
+//! byte offset, a 16-byte hex window from both runs, and, when the
+//! artifact is a trace log, a decoded root-cause hint naming the first
+//! divergent event's tick, kind, rank and replica.
+//!
+//! On success the scratch tree is removed; on divergence it is left in
+//! place so the operator can diff the full artifacts.
+
+use std::path::{Path, PathBuf};
+
+use crate::campaign::{CampaignReport, CampaignSpec};
+use crate::error::{Result, SedarError};
+use crate::fleet::{self, FleetOptions};
+
+/// What to replay and how often.
+pub struct ConformOpts {
+    /// Number of identical executions (≥ 2; run 0 is the baseline).
+    pub runs: usize,
+    /// Campaign master seed, as for `sedar campaign --seed`.
+    pub seed: u64,
+    /// Optional cell filter, as for `sedar campaign --filter`.
+    pub filter: Option<String>,
+    /// Worker threads per run (jobs-invariance is part of the contract,
+    /// so any value must yield the same bytes).
+    pub jobs: usize,
+    /// Scratch root; per-run trees live at `<work_dir>/run-<i>/`.
+    pub work_dir: PathBuf,
+}
+
+/// The first byte-level disagreement between run 0 and a later run.
+#[derive(Debug)]
+pub struct Divergence {
+    /// Which artifact differed (`report.md` or `task-NNNN.trace`).
+    pub artifact: String,
+    /// The run (1-based index into the replay sequence) that disagreed
+    /// with run 0.
+    pub run: usize,
+    /// First differing byte offset (== the shorter length when one
+    /// artifact is a strict prefix of the other).
+    pub offset: usize,
+    /// 16-byte hex window around `offset` in run 0's artifact.
+    pub baseline_hex: String,
+    /// The same window in the diverged run's artifact.
+    pub diverged_hex: String,
+    /// Root-cause hint: for trace logs, the first decoded event the two
+    /// runs disagree on (tick/kind/rank/replica); otherwise a structural
+    /// note.
+    pub hint: String,
+}
+
+impl Divergence {
+    /// Operator-facing localization block.
+    pub fn render(&self) -> String {
+        format!(
+            "conformance FAILED: run 0 and run {} diverge in {} at byte {}\n\
+             \x20 run 0   : {}\n\
+             \x20 run {:<4}: {}\n\
+             \x20 hint    : {}",
+            self.run,
+            self.artifact,
+            self.offset,
+            self.baseline_hex,
+            self.run,
+            self.diverged_hex,
+            self.hint
+        )
+    }
+}
+
+/// Result of a conformance campaign.
+pub struct ConformOutcome {
+    pub runs: usize,
+    /// Tasks executed per run.
+    pub tasks: usize,
+    /// Artifacts compared per run (report + one trace per task).
+    pub artifacts: usize,
+    /// `None` ⇒ all runs byte-identical.
+    pub divergence: Option<Divergence>,
+}
+
+impl ConformOutcome {
+    pub fn passed(&self) -> bool {
+        self.divergence.is_none()
+    }
+
+    pub fn summary(&self) -> String {
+        match &self.divergence {
+            None => format!(
+                "conformance OK: {} run(s) × {} task(s), {} artifact(s) byte-identical",
+                self.runs, self.tasks, self.artifacts
+            ),
+            Some(d) => d.render(),
+        }
+    }
+}
+
+/// One comparable artifact of one run: its name (comparison key across
+/// runs), on-disk path (kept for trace decoding) and raw bytes.
+struct Artifact {
+    name: String,
+    path: PathBuf,
+    bytes: Vec<u8>,
+}
+
+/// Execute the slice `opts.runs` times and compare.
+pub fn run_conform(opts: &ConformOpts) -> Result<ConformOutcome> {
+    if opts.runs < 2 {
+        return Err(SedarError::Config(format!(
+            "conform: --runs {} makes no comparison (need at least 2)",
+            opts.runs
+        )));
+    }
+    let mut baseline: Vec<Artifact> = Vec::new();
+    let mut tasks = 0usize;
+    for run in 0..opts.runs {
+        let (n, artifacts) = one_run(opts, run)?;
+        if run == 0 {
+            tasks = n;
+            baseline = artifacts;
+            continue;
+        }
+        if let Some(d) = compare_runs(&baseline, &artifacts, run) {
+            // Leave the scratch tree for inspection.
+            return Ok(ConformOutcome {
+                runs: opts.runs,
+                tasks,
+                artifacts: baseline.len(),
+                divergence: Some(d),
+            });
+        }
+    }
+    let artifacts = baseline.len();
+    let _ = std::fs::remove_dir_all(&opts.work_dir);
+    Ok(ConformOutcome {
+        runs: opts.runs,
+        tasks,
+        artifacts,
+        divergence: None,
+    })
+}
+
+/// Run the slice once into `<work_dir>/run-<i>/` and collect its
+/// artifacts, name-sorted (directory iteration order is not stable).
+fn one_run(opts: &ConformOpts, run: usize) -> Result<(usize, Vec<Artifact>)> {
+    let dir = opts.work_dir.join(format!("run-{run}"));
+    let trace_dir = dir.join("trace");
+    let mut spec = CampaignSpec::new(opts.seed);
+    spec.jobs = opts.jobs.max(1);
+    if let Some(f) = &opts.filter {
+        spec.apply_filter(f)?;
+    }
+    spec.echo = false;
+    spec.base.run_dir = dir.join("world");
+    spec.trace_out = Some(trace_dir.clone());
+    let shard = fleet::run_shard(&spec, &FleetOptions::default())?;
+    let tasks = shard.outcomes.len();
+    let report = CampaignReport::new(spec.seed, shard.outcomes);
+    let report_path = dir.join("report.md");
+    let report_bytes = report.deterministic_report().into_bytes();
+    std::fs::write(&report_path, &report_bytes)?;
+    // The per-world scratch (checkpoints, stores) is not a comparison
+    // artifact — every deterministic byte it influences is already in the
+    // report and traces.
+    let _ = std::fs::remove_dir_all(dir.join("world"));
+    let mut artifacts = vec![Artifact {
+        name: "report.md".into(),
+        path: report_path,
+        bytes: report_bytes,
+    }];
+    for entry in std::fs::read_dir(&trace_dir)? {
+        let entry = entry?;
+        let name = entry.file_name().to_string_lossy().into_owned();
+        let path = entry.path();
+        let bytes = std::fs::read(&path)?;
+        artifacts.push(Artifact { name, path, bytes });
+    }
+    artifacts.sort_by(|a, b| a.name.cmp(&b.name));
+    Ok((tasks, artifacts))
+}
+
+/// First differing byte offset, or `None` if `a == b`. A strict prefix
+/// diverges at the shorter length.
+fn first_diff(a: &[u8], b: &[u8]) -> Option<usize> {
+    let n = a.len().min(b.len());
+    match (0..n).find(|&i| a[i] != b[i]) {
+        Some(i) => Some(i),
+        None if a.len() != b.len() => Some(n),
+        None => None,
+    }
+}
+
+/// A 16-byte hex window around `offset` (8 before, 8 after, clipped).
+fn hex_window(data: &[u8], offset: usize) -> String {
+    let start = offset.saturating_sub(8);
+    let end = (offset + 8).min(data.len());
+    if start >= end {
+        return format!("(empty — artifact ends at byte {})", data.len());
+    }
+    let body: Vec<String> = data[start..end]
+        .iter()
+        .enumerate()
+        .map(|(i, b)| {
+            if start + i == offset {
+                format!("[{b:02x}]")
+            } else {
+                format!("{b:02x}")
+            }
+        })
+        .collect();
+    format!("bytes {start}..{end}: {}", body.join(" "))
+}
+
+/// Compare one replay against the baseline; `None` ⇒ byte-identical.
+fn compare_runs(base: &[Artifact], cur: &[Artifact], run: usize) -> Option<Divergence> {
+    // A differing artifact *set* is itself a divergence (e.g. a task that
+    // wrote no trace in one run).
+    let base_names: Vec<&str> = base.iter().map(|a| a.name.as_str()).collect();
+    let cur_names: Vec<&str> = cur.iter().map(|a| a.name.as_str()).collect();
+    if base_names != cur_names {
+        let missing = base_names
+            .iter()
+            .find(|n| !cur_names.contains(n))
+            .or_else(|| cur_names.iter().find(|n| !base_names.contains(n)))
+            .copied()
+            .unwrap_or("?");
+        return Some(Divergence {
+            artifact: missing.to_string(),
+            run,
+            offset: 0,
+            baseline_hex: format!("artifact set: {}", base_names.join(", ")),
+            diverged_hex: format!("artifact set: {}", cur_names.join(", ")),
+            hint: "an artifact exists in only one run — a task wrote (or skipped) \
+                   a trace non-deterministically"
+                .into(),
+        });
+    }
+    for (a, b) in base.iter().zip(cur) {
+        if let Some(offset) = first_diff(&a.bytes, &b.bytes) {
+            return Some(Divergence {
+                artifact: a.name.clone(),
+                run,
+                offset,
+                baseline_hex: hex_window(&a.bytes, offset),
+                diverged_hex: hex_window(&b.bytes, offset),
+                hint: root_cause_hint(a, b, run),
+            });
+        }
+    }
+    None
+}
+
+/// For trace logs, decode both files and name the first event the runs
+/// disagree on — the rank/replica/tick that first went off-script is the
+/// natural place to start reading.
+fn root_cause_hint(a: &Artifact, b: &Artifact, run: usize) -> String {
+    if !a.name.ends_with(".trace") {
+        return "the deterministic report differs — diff the two report.md \
+                files in the kept run directories"
+            .into();
+    }
+    let (base, other) = match (
+        crate::obs::read_log(&a.path),
+        crate::obs::read_log(&b.path),
+    ) {
+        (Ok((e0, _)), Ok((e1, _))) => (e0, e1),
+        _ => {
+            return "trace log undecodable at the divergence — the file is torn \
+                    or the writer emitted a malformed record"
+                .into()
+        }
+    };
+    let n = base.len().min(other.len());
+    for i in 0..n {
+        let (x, y) = (&base[i], &other[i]);
+        if (x.tick, x.rank, x.replica, x.kind, &x.detail)
+            != (y.tick, y.rank, y.replica, y.kind, &y.detail)
+        {
+            return format!(
+                "first divergent event is #{i}: run 0 has tick={} kind={} \
+                 rank={} replica={} \"{}\"; run {run} has tick={} kind={} \
+                 rank={} replica={} \"{}\"",
+                x.tick,
+                x.kind.label(),
+                x.rank,
+                x.replica,
+                x.detail,
+                y.tick,
+                y.kind.label(),
+                y.rank,
+                y.replica,
+                y.detail
+            );
+        }
+    }
+    if base.len() != other.len() {
+        return format!(
+            "runs agree on the first {n} event(s) but run 0 logged {} and \
+             run {run} logged {} — one world did extra (or missing) work",
+            base.len(),
+            other.len()
+        );
+    }
+    "events identical — the byte difference is in the span table or log \
+     framing, not the event stream"
+        .into()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_diff_localizes_exactly() {
+        assert_eq!(first_diff(b"abcd", b"abcd"), None);
+        assert_eq!(first_diff(b"abcd", b"abXd"), Some(2));
+        assert_eq!(first_diff(b"abcd", b"ab"), Some(2), "strict prefix");
+        assert_eq!(first_diff(b"", b""), None);
+        assert_eq!(first_diff(b"", b"x"), Some(0));
+    }
+
+    #[test]
+    fn hex_window_brackets_the_divergent_byte() {
+        let data: Vec<u8> = (0..32).collect();
+        let w = hex_window(&data, 16);
+        assert_eq!(w, "bytes 8..24: 08 09 0a 0b 0c 0d 0e 0f [10] 11 12 13 14 15 16 17");
+        // Clipped at both ends.
+        assert!(hex_window(&data, 0).starts_with("bytes 0..8: [00]"));
+        let tail = hex_window(&data, 31);
+        assert!(tail.ends_with("[1f]"), "got: {tail}");
+        // Offset at the prefix end of the shorter artifact.
+        assert!(hex_window(&data[..4], 4).contains("bytes 0..4"));
+        assert!(hex_window(&[], 0).contains("ends at byte 0"));
+    }
+
+    fn art(name: &str, bytes: &[u8]) -> Artifact {
+        Artifact {
+            name: name.into(),
+            path: PathBuf::from("/nonexistent"),
+            bytes: bytes.to_vec(),
+        }
+    }
+
+    #[test]
+    fn compare_runs_finds_byte_and_set_divergences() {
+        let base = vec![art("report.md", b"hello"), art("task-0001.trace", b"abc")];
+        let same = vec![art("report.md", b"hello"), art("task-0001.trace", b"abc")];
+        assert!(compare_runs(&base, &same, 1).is_none());
+
+        let bent = vec![art("report.md", b"heLlo"), art("task-0001.trace", b"abc")];
+        let d = compare_runs(&base, &bent, 2).unwrap();
+        assert_eq!(d.artifact, "report.md");
+        assert_eq!(d.run, 2);
+        assert_eq!(d.offset, 2);
+        assert!(d.baseline_hex.contains("[6c]"), "got: {}", d.baseline_hex);
+        assert!(d.diverged_hex.contains("[4c]"), "got: {}", d.diverged_hex);
+        assert!(d.render().contains("at byte 2"), "got: {}", d.render());
+
+        let short = vec![art("report.md", b"hello")];
+        let d = compare_runs(&base, &short, 1).unwrap();
+        assert_eq!(d.artifact, "task-0001.trace");
+        assert!(d.hint.contains("only one run"), "got: {}", d.hint);
+    }
+
+    #[test]
+    fn undecodable_trace_still_gets_a_hint() {
+        // Paths don't exist, so read_log fails and the hint degrades
+        // gracefully instead of erroring the whole comparison.
+        let a = art("task-0001.trace", b"xy");
+        let b = art("task-0001.trace", b"xz");
+        let d = compare_runs(&[a], &[b], 1).unwrap();
+        assert!(d.hint.contains("undecodable"), "got: {}", d.hint);
+    }
+
+    #[test]
+    fn runs_below_two_are_refused() {
+        let err = run_conform(&ConformOpts {
+            runs: 1,
+            seed: 1,
+            filter: None,
+            jobs: 1,
+            work_dir: std::env::temp_dir().join("sedar-conform-refused"),
+        })
+        .unwrap_err();
+        assert!(err.to_string().contains("at least 2"), "got: {err}");
+    }
+
+    #[test]
+    fn one_cell_slice_conforms_across_two_runs() {
+        let work_dir = std::env::temp_dir().join(format!(
+            "sedar-conform-e2e-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&work_dir);
+        let out = run_conform(&ConformOpts {
+            runs: 2,
+            seed: 42,
+            filter: Some(
+                "scenario=1,app=matmul,strategy=detect,collectives=p2p".into(),
+            ),
+            jobs: 1,
+            work_dir: work_dir.clone(),
+        })
+        .unwrap();
+        assert!(out.passed(), "diverged: {}", out.summary());
+        assert_eq!(out.tasks, 1);
+        assert_eq!(out.artifacts, 2, "report + one trace");
+        assert!(
+            !work_dir.exists(),
+            "scratch tree must be removed on success"
+        );
+    }
+}

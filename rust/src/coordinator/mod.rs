@@ -350,7 +350,7 @@ impl SedarRun {
                 EventKind::AttemptStart,
                 format!("attempt {attempts}: start from {resume}"),
             );
-            let result = self.attempt(&shared, resume)?;
+            let result = self.attempt(&shared, resume, attempts)?;
             attempt_walls.push(shared.clock.since(t_attempt));
 
             match result {
@@ -448,9 +448,25 @@ impl SedarRun {
 
     /// One execution attempt: fresh world, run every replica to completion
     /// or first detection.
-    fn attempt(&self, shared: &Shared, resume: ResumeFrom) -> Result<AttemptResult> {
+    fn attempt(
+        &self,
+        shared: &Shared,
+        resume: ResumeFrom,
+        attempt_no: u32,
+    ) -> Result<AttemptResult> {
         let nranks = self.app.nranks();
-        let net = Network::with_clock(nranks, shared.clock.clone());
+        // Network faults are transient soft errors: the plan folds the
+        // attempt number, so a re-execution sees fresh perturbation
+        // positions (deterministically) instead of replaying the exact
+        // fault that killed the previous attempt.
+        let faults = crate::faultnet::FaultLayer::for_attempt(
+            self.cfg.netfault,
+            self.cfg.seed,
+            attempt_no,
+            self.cfg.toe_timeout,
+        )
+        .map(Arc::new);
+        let net = Network::with_faults(nranks, shared.clock.clone(), faults);
         let detector = Arc::new(Detector::new());
         detector.attach_network(Arc::clone(&net));
 
@@ -537,6 +553,11 @@ impl SedarRun {
                     }
                 }
             }
+        }
+        // Drain the fault layer's typed perturbation events into the run
+        // trace whatever the attempt's outcome.
+        if let Some(fl) = net.fault_layer() {
+            shared.trace.ingest_events(fl.take_events());
         }
         if let Some(e) = hard_error {
             return Err(e);
@@ -681,7 +702,16 @@ impl SedarRun {
     /// `instance` doubles as the injection "replica" id.
     fn solo_instance(&self, shared: &Shared, instance: usize) -> Result<VarStore> {
         let nranks = self.app.nranks();
-        let net = Network::with_clock(nranks, shared.clock.clone());
+        // Baseline instances face the same faulty interconnect; the
+        // instance number plays the attempt role in the plan seed.
+        let faults = crate::faultnet::FaultLayer::for_attempt(
+            self.cfg.netfault,
+            self.cfg.seed,
+            instance as u32 + 1,
+            self.cfg.toe_timeout,
+        )
+        .map(Arc::new);
+        let net = Network::with_faults(nranks, shared.clock.clone(), faults);
         let detector = Arc::new(Detector::new());
         detector.attach_network(Arc::clone(&net));
         // Same participant discipline as `attempt`: register all ranks of
@@ -746,6 +776,9 @@ impl SedarRun {
                 Err(e) if err.is_none() => err = Some(e),
                 Err(_) => {}
             }
+        }
+        if let Some(fl) = net.fault_layer() {
+            shared.trace.ingest_events(fl.take_events());
         }
         if let Some(e) = err {
             return Err(e);

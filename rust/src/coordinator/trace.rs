@@ -149,6 +149,18 @@ impl Trace {
         f(&self.buf.lock().unwrap().lines)
     }
 
+    /// Absorb externally recorded typed events into the typed log — the
+    /// faultnet layer records its perturbations against the world clock
+    /// and the coordinator drains them here after each attempt. The
+    /// events carry their own tick/rank/attempt stamps; canonical
+    /// ordering happens at read time like everywhere else.
+    pub fn ingest_events(&self, events: Vec<Event>) {
+        if events.is_empty() {
+            return;
+        }
+        self.buf.lock().unwrap().typed.extend(events);
+    }
+
     /// The typed events recorded so far, in canonical order
     /// ([`crate::obs::canonicalize_events`]).
     pub fn typed_events(&self) -> Vec<Event> {

@@ -61,6 +61,17 @@ pub enum SedarError {
     /// Message-passing substrate failure (mismatched shapes, bad peer, …).
     Vmpi(String),
 
+    /// A delivered message failed its transport integrity check (payload
+    /// CRC stamped at send does not match the received bytes). Typed so
+    /// the replica layer can classify it as a TDC at the receiving
+    /// validation point instead of a hard infrastructure error.
+    NetCorrupt {
+        src: usize,
+        dst: usize,
+        tag: u32,
+        seq: u64,
+    },
+
     /// Checkpoint storage / framing failure.
     Checkpoint(String),
 
@@ -82,6 +93,11 @@ impl std::fmt::Display for SedarError {
             }
             SedarError::Aborted => write!(f, "run aborted (fault detected elsewhere)"),
             SedarError::Vmpi(m) => write!(f, "vmpi: {m}"),
+            SedarError::NetCorrupt { src, dst, tag, seq } => write!(
+                f,
+                "vmpi: corrupt message payload src={src} dst={dst} tag={tag} \
+                 seq={seq} (transport CRC mismatch)"
+            ),
             SedarError::Checkpoint(m) => write!(f, "checkpoint: {m}"),
             SedarError::Runtime(m) => write!(f, "runtime: {m}"),
             SedarError::Config(m) => write!(f, "config: {m}"),

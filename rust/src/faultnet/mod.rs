@@ -1,0 +1,446 @@
+//! `faultnet` — deterministic network-fault injection inside vmpi.
+//!
+//! The 64-scenario workfault catalog corrupts *application state*; this
+//! layer perturbs the *transport*: for every message a seed-derived plan
+//! picks one of `deliver | drop | duplicate | reorder-delay(d ticks) |
+//! corrupt-payload-bit` (the NA-0090 idiom: `k = hash(seed, msg_idx);
+//! k % N → action`). The plan is a pure function of
+//! `(seed, src, dst, seq)` where `seq` is the per-(src, dst) send
+//! sequence number — program order on the sending thread — so the same
+//! seed perturbs the same messages whatever the thread interleaving, and
+//! two runs of one cell stay byte-identical (`sedar conform` proves it).
+//!
+//! Detection semantics (the safety oracle the campaign grades against):
+//!
+//! * **corrupt** — the sender stamps a CRC-32 of the payload *before* the
+//!   fault layer may flip a bit (the link-level checksum every real
+//!   interconnect carries). The receiver verifies on take; a mismatch is
+//!   [`SedarError::NetCorrupt`], which the replica layer classifies as a
+//!   **TDC** at the receiving site — transmitted data corruption caught
+//!   at the next validation point.
+//! * **drop** — the message is never queued. The fault layer imposes a
+//!   default receive deadline (the configured TOE lapse) on every
+//!   otherwise-unbounded receive, so a dropped delivery surfaces as a
+//!   **TOE** within the modeled timeout — never a hang, on either clock.
+//! * **duplicate** — a second copy (same `seq`) is queued, bounded by the
+//!   per-(src, tag) redelivery cap; the mailbox's dedup window absorbs it
+//!   at take. Final stores stay byte-identical.
+//! * **reorder-delay** — delivery is postponed `d` modeled ticks on the
+//!   PR-6 virtual clock (no wall time in campaigns). Per-(src, tag)
+//!   FIFO is preserved — MPI's non-overtaking guarantee, which SEDAR's
+//!   protocol is entitled to assume — so a delay reorders deliveries
+//!   *across* pairs and tags, never within one stream: absorbed, or a
+//!   TOE if the delay outlives the lapse.
+//!
+//! Every non-deliver action is recorded as a typed
+//! [`EventKind::NetFault`](crate::obs::EventKind) event and drained into
+//! the run's trace log by the coordinator.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::error::{Result, SedarError};
+use crate::obs::{Event, EventKind};
+use crate::util::clock::Tick;
+use crate::util::prng::SplitMix64;
+
+/// The campaign's `netfault=` axis values: which perturbation family a
+/// world's plan draws from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum NetFaultMode {
+    /// No fault layer installed (the default; zero transport overhead).
+    None,
+    /// Messages vanish in flight (graded: TOE within the modeled lapse).
+    Drop,
+    /// Messages arrive twice (graded: absorbed byte-identically).
+    Dup,
+    /// Deliveries are delayed d modeled ticks (graded: absorbed or TOE).
+    Reorder,
+    /// One payload bit flips in flight (graded: TDC at the next recv).
+    Corrupt,
+    /// All four families mixed in one plan.
+    Mixed,
+}
+
+impl NetFaultMode {
+    pub const ALL: [NetFaultMode; 6] = [
+        NetFaultMode::None,
+        NetFaultMode::Drop,
+        NetFaultMode::Dup,
+        NetFaultMode::Reorder,
+        NetFaultMode::Corrupt,
+        NetFaultMode::Mixed,
+    ];
+
+    pub fn parse(s: &str) -> Result<NetFaultMode> {
+        Ok(match s {
+            "none" => NetFaultMode::None,
+            "drop" => NetFaultMode::Drop,
+            "dup" | "duplicate" => NetFaultMode::Dup,
+            "reorder" => NetFaultMode::Reorder,
+            "corrupt" => NetFaultMode::Corrupt,
+            "mixed" => NetFaultMode::Mixed,
+            other => {
+                return Err(SedarError::Config(format!(
+                    "unknown netfault mode '{other}' (expected \
+                     none|drop|dup|reorder|corrupt|mixed)"
+                )))
+            }
+        })
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            NetFaultMode::None => "none",
+            NetFaultMode::Drop => "drop",
+            NetFaultMode::Dup => "dup",
+            NetFaultMode::Reorder => "reorder",
+            NetFaultMode::Corrupt => "corrupt",
+            NetFaultMode::Mixed => "mixed",
+        }
+    }
+
+    /// Stable ordinal, persisted in shard artifacts/journals (v4) and
+    /// folded into task seeds — frozen once released.
+    pub fn ordinal(self) -> u8 {
+        match self {
+            NetFaultMode::None => 0,
+            NetFaultMode::Drop => 1,
+            NetFaultMode::Dup => 2,
+            NetFaultMode::Reorder => 3,
+            NetFaultMode::Corrupt => 4,
+            NetFaultMode::Mixed => 5,
+        }
+    }
+
+    /// Inverse of [`NetFaultMode::ordinal`] (artifact decoding).
+    pub fn from_ordinal(ord: u8) -> Option<NetFaultMode> {
+        NetFaultMode::ALL.iter().copied().find(|m| m.ordinal() == ord)
+    }
+}
+
+/// What the plan decided for one message.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Pass through untouched (the overwhelming majority).
+    Deliver,
+    /// Never queue the message.
+    Drop,
+    /// Queue a second copy with the same sequence number.
+    Duplicate,
+    /// Queue with delivery postponed this many modeled ticks.
+    Delay(Tick),
+    /// Flip payload bit `k % (payload_bits)`; the raw `k` is carried so
+    /// the apply site can reduce it against the actual payload length.
+    CorruptBit(u64),
+}
+
+impl FaultAction {
+    /// Short label for event details and counters.
+    pub fn label(&self) -> &'static str {
+        match self {
+            FaultAction::Deliver => "deliver",
+            FaultAction::Drop => "drop",
+            FaultAction::Duplicate => "dup",
+            FaultAction::Delay(_) => "delay",
+            FaultAction::CorruptBit(_) => "corrupt",
+        }
+    }
+}
+
+/// Maximum reorder delay, in ticks (1 ms modeled). Deliberately well
+/// under the default TOE lapse so plain reorder cells are absorbed, not
+/// timed out — the timeout path belongs to the drop family.
+pub const MAX_DELAY_TICKS: Tick = 1_000_000;
+
+/// SplitMix64 seed-fold (the same chain the campaign uses for task
+/// seeds): order-sensitive, avalanching.
+fn fold(h: u64, v: u64) -> u64 {
+    SplitMix64::new(h ^ v.wrapping_mul(0x9E37_79B9_7F4A_7C15)).next_u64()
+}
+
+/// A world's perturbation plan: a pure function of `(seed, src, dst,
+/// seq)`. Copy-cheap and lock-free — evaluation is a handful of
+/// multiplies per message (`sedar bench --json`, group `faultnet`).
+#[derive(Debug, Clone, Copy)]
+pub struct FaultPlan {
+    mode: NetFaultMode,
+    seed: u64,
+}
+
+impl FaultPlan {
+    pub fn new(mode: NetFaultMode, seed: u64) -> FaultPlan {
+        FaultPlan { mode, seed }
+    }
+
+    pub fn mode(&self) -> NetFaultMode {
+        self.mode
+    }
+
+    /// The NA-0090 mapping: `k = hash(seed, msg); k % N → action`.
+    ///
+    /// Per-family fault rates (out of 16 slots): drop 2, dup 4, reorder
+    /// 4, corrupt 2; `mixed` spends 6 slots across all four. The
+    /// remaining slots deliver — most traffic must flow or every cell
+    /// degenerates to the same TOE.
+    pub fn action(&self, src: usize, dst: usize, seq: u64) -> FaultAction {
+        if self.mode == NetFaultMode::None {
+            return FaultAction::Deliver;
+        }
+        let mut k = self.seed;
+        k = fold(k, src as u64);
+        k = fold(k, dst as u64);
+        k = fold(k, seq);
+        let slot = k % 16;
+        let delay = 1 + (k >> 8) % MAX_DELAY_TICKS;
+        match self.mode {
+            NetFaultMode::None => FaultAction::Deliver,
+            NetFaultMode::Drop if slot < 2 => FaultAction::Drop,
+            NetFaultMode::Dup if slot < 4 => FaultAction::Duplicate,
+            NetFaultMode::Reorder if slot < 4 => FaultAction::Delay(delay),
+            NetFaultMode::Corrupt if slot < 2 => FaultAction::CorruptBit(k >> 8),
+            NetFaultMode::Mixed => match slot {
+                0 => FaultAction::Drop,
+                1 | 2 => FaultAction::Duplicate,
+                3 | 4 => FaultAction::Delay(delay),
+                5 => FaultAction::CorruptBit(k >> 8),
+                _ => FaultAction::Deliver,
+            },
+            _ => FaultAction::Deliver,
+        }
+    }
+}
+
+/// Per-action counters, exposed for tests and the bench suite.
+#[derive(Debug, Default)]
+pub struct FaultCounters {
+    pub drops: AtomicU64,
+    pub dups: AtomicU64,
+    pub delays: AtomicU64,
+    pub corrupts: AtomicU64,
+}
+
+/// The installed fault layer of one network: the plan, the default
+/// receive deadline it imposes (so drops become TOEs, not hangs), and
+/// the typed-event sink the coordinator drains after the attempt.
+pub struct FaultLayer {
+    plan: FaultPlan,
+    /// 1-based attempt the layer belongs to (stamped on events).
+    attempt: u32,
+    /// Deadline applied to receives that would otherwise block forever.
+    /// `None` keeps the substrate's native behavior (virtual-clock
+    /// worlds then end in the all-blocked poison error — see
+    /// `rust/tests/faultnet.rs`).
+    recv_deadline: Option<Duration>,
+    pub counters: FaultCounters,
+    events: Mutex<Vec<Event>>,
+}
+
+impl FaultLayer {
+    pub fn new(
+        plan: FaultPlan,
+        attempt: u32,
+        recv_deadline: Option<Duration>,
+    ) -> FaultLayer {
+        FaultLayer {
+            plan,
+            attempt,
+            recv_deadline,
+            counters: FaultCounters::default(),
+            events: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// The layer a coordinator attempt installs: plan seeded from the
+    /// run seed *and the attempt number* — soft errors are transient, so
+    /// a re-execution must not replay the identical perturbations (that
+    /// is what lets checkpoint recovery actually succeed under faults).
+    pub fn for_attempt(
+        mode: NetFaultMode,
+        run_seed: u64,
+        attempt: u32,
+        recv_deadline: Duration,
+    ) -> Option<FaultLayer> {
+        if mode == NetFaultMode::None {
+            return None;
+        }
+        let seed = fold(fold(run_seed, 0x5EDA_0F17), attempt as u64);
+        Some(FaultLayer::new(
+            FaultPlan::new(mode, seed),
+            attempt,
+            Some(recv_deadline),
+        ))
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    pub fn recv_deadline(&self) -> Option<Duration> {
+        self.recv_deadline
+    }
+
+    /// Record one non-deliver action as a typed event (tick-stamped by
+    /// the caller, which holds the world clock).
+    pub fn record(
+        &self,
+        tick: Tick,
+        src: usize,
+        dst: usize,
+        tag: u32,
+        seq: u64,
+        action: &FaultAction,
+    ) {
+        let ctr = match action {
+            FaultAction::Deliver => return,
+            FaultAction::Drop => &self.counters.drops,
+            FaultAction::Duplicate => &self.counters.dups,
+            FaultAction::Delay(_) => &self.counters.delays,
+            FaultAction::CorruptBit(_) => &self.counters.corrupts,
+        };
+        ctr.fetch_add(1, Ordering::Relaxed);
+        let detail = match action {
+            FaultAction::Delay(d) => format!(
+                "netfault: delay {d} ticks src={src} dst={dst} tag={tag} seq={seq}"
+            ),
+            other => format!(
+                "netfault: {} src={src} dst={dst} tag={tag} seq={seq}",
+                other.label()
+            ),
+        };
+        self.events.lock().unwrap().push(Event {
+            tick,
+            rank: src as u32,
+            replica: 0,
+            attempt: self.attempt,
+            kind: EventKind::NetFault,
+            detail,
+        });
+    }
+
+    /// Total non-deliver actions applied so far.
+    pub fn faults_applied(&self) -> u64 {
+        self.counters.drops.load(Ordering::Relaxed)
+            + self.counters.dups.load(Ordering::Relaxed)
+            + self.counters.delays.load(Ordering::Relaxed)
+            + self.counters.corrupts.load(Ordering::Relaxed)
+    }
+
+    /// Drain the typed events recorded so far (coordinator, post-join).
+    pub fn take_events(&self) -> Vec<Event> {
+        std::mem::take(&mut *self.events.lock().unwrap())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_parse_label_ordinal_roundtrip() {
+        for m in NetFaultMode::ALL {
+            assert_eq!(NetFaultMode::parse(m.label()).unwrap(), m);
+            assert_eq!(NetFaultMode::from_ordinal(m.ordinal()), Some(m));
+        }
+        assert_eq!(NetFaultMode::parse("duplicate").unwrap(), NetFaultMode::Dup);
+        assert!(NetFaultMode::parse("gamma-ray").is_err());
+        assert_eq!(NetFaultMode::from_ordinal(99), None);
+    }
+
+    #[test]
+    fn plan_is_a_pure_function_of_seed_and_message() {
+        let a = FaultPlan::new(NetFaultMode::Mixed, 7);
+        let b = FaultPlan::new(NetFaultMode::Mixed, 7);
+        for seq in 0..500 {
+            assert_eq!(a.action(0, 1, seq), b.action(0, 1, seq));
+        }
+        // Different seeds must disagree somewhere.
+        let c = FaultPlan::new(NetFaultMode::Mixed, 8);
+        assert!((0..500).any(|seq| a.action(0, 1, seq) != c.action(0, 1, seq)));
+        // Different pairs draw independent streams.
+        assert!((0..500).any(|seq| a.action(0, 1, seq) != a.action(1, 0, seq)));
+    }
+
+    #[test]
+    fn mixed_plan_covers_every_action_family() {
+        let p = FaultPlan::new(NetFaultMode::Mixed, 42);
+        let mut seen = [false; 5];
+        for seq in 0..2000 {
+            let idx = match p.action(0, 1, seq) {
+                FaultAction::Deliver => 0,
+                FaultAction::Drop => 1,
+                FaultAction::Duplicate => 2,
+                FaultAction::Delay(d) => {
+                    assert!(d >= 1 && d <= MAX_DELAY_TICKS);
+                    3
+                }
+                FaultAction::CorruptBit(_) => 4,
+            };
+            seen[idx] = true;
+        }
+        assert_eq!(seen, [true; 5], "mixed plan missed an action family");
+    }
+
+    #[test]
+    fn single_family_plans_emit_only_their_action() {
+        for (mode, want) in [
+            (NetFaultMode::Drop, "drop"),
+            (NetFaultMode::Dup, "dup"),
+            (NetFaultMode::Reorder, "delay"),
+            (NetFaultMode::Corrupt, "corrupt"),
+        ] {
+            let p = FaultPlan::new(mode, 3);
+            let mut faulted = 0u32;
+            for seq in 0..2000 {
+                let a = p.action(0, 1, seq);
+                if a != FaultAction::Deliver {
+                    assert_eq!(a.label(), want, "{mode:?} produced {a:?}");
+                    faulted += 1;
+                }
+            }
+            assert!(faulted > 0, "{mode:?} plan never faulted in 2000 msgs");
+            assert!(
+                faulted < 1000,
+                "{mode:?} plan faulted {faulted}/2000 — most traffic must flow"
+            );
+        }
+        let none = FaultPlan::new(NetFaultMode::None, 3);
+        assert!((0..100).all(|s| none.action(0, 1, s) == FaultAction::Deliver));
+    }
+
+    #[test]
+    fn layer_records_typed_events_and_counters() {
+        let layer = FaultLayer::new(FaultPlan::new(NetFaultMode::Mixed, 1), 2, None);
+        layer.record(10, 0, 1, 7, 3, &FaultAction::Drop);
+        layer.record(20, 1, 0, 8, 4, &FaultAction::Delay(500));
+        layer.record(30, 0, 1, 7, 5, &FaultAction::Deliver); // not recorded
+        assert_eq!(layer.faults_applied(), 2);
+        let events = layer.take_events();
+        assert_eq!(events.len(), 2);
+        assert_eq!(events[0].kind, EventKind::NetFault);
+        assert_eq!(events[0].attempt, 2);
+        assert!(events[0].detail.contains("drop src=0 dst=1 tag=7 seq=3"));
+        assert!(events[1].detail.contains("delay 500 ticks"));
+        // Drained: a second take is empty.
+        assert!(layer.take_events().is_empty());
+    }
+
+    #[test]
+    fn for_attempt_varies_across_attempts_and_skips_none() {
+        assert!(FaultLayer::for_attempt(
+            NetFaultMode::None,
+            7,
+            1,
+            Duration::from_secs(2)
+        )
+        .is_none());
+        let a1 =
+            FaultLayer::for_attempt(NetFaultMode::Mixed, 7, 1, Duration::from_secs(2)).unwrap();
+        let a2 =
+            FaultLayer::for_attempt(NetFaultMode::Mixed, 7, 2, Duration::from_secs(2)).unwrap();
+        // Transient faults: attempt 2 must not replay attempt 1's plan.
+        assert!((0..500).any(|s| a1.plan().action(0, 1, s) != a2.plan().action(0, 1, s)));
+        assert_eq!(a1.recv_deadline(), Some(Duration::from_secs(2)));
+    }
+}

@@ -21,8 +21,9 @@ use std::path::Path;
 
 use crate::campaign::shard::TaskOutcome;
 use crate::campaign::{
-    collective_from_ordinal, collective_ordinal, strategy_from_ordinal, strategy_ordinal,
-    validation_from_ordinal, validation_ordinal, CampaignApp,
+    collective_from_ordinal, collective_ordinal, netfault_from_ordinal, netfault_ordinal,
+    strategy_from_ordinal, strategy_ordinal, validation_from_ordinal, validation_ordinal,
+    CampaignApp,
 };
 use crate::checkpoint::snapshot::{read_frame, write_frame, Codec};
 use crate::error::{FaultClass, Result, SedarError};
@@ -36,7 +37,10 @@ const MAGIC: &[u8; 4] = b"SDSH";
 /// joined the record (14 trailing u64 counters); version-2 artifacts
 /// cannot carry the observability fields and are rejected rather than
 /// mis-decoded.
-const VERSION: u32 = 3;
+/// Bumped to 4 when the netfault axis joined the outcome record (a
+/// per-record ordinal byte after the validation's); version-3 artifacts
+/// cannot carry the axis and are rejected rather than mis-decoded.
+const VERSION: u32 = 4;
 
 /// Identity of a shard artifact: which sweep it belongs to and which slice
 /// it claims. `total_tasks` is the canonical task-list length of the sweep
@@ -152,6 +156,7 @@ pub fn encode_outcome(o: &TaskOutcome, out: &mut Vec<u8>) {
     out.push(strategy_ordinal(o.strategy) as u8);
     out.push(collective_ordinal(o.collectives) as u8);
     out.push(validation_ordinal(o.validation) as u8);
+    out.push(netfault_ordinal(o.netfault) as u8);
     out.extend_from_slice(&o.faults.to_le_bytes());
     out.push(o.completed as u8);
     out.push(o.injected as u8);
@@ -235,6 +240,8 @@ pub fn decode_outcome(r: &mut ByteReader<'_>) -> Result<TaskOutcome> {
         collective_from_ordinal(coll_ord).ok_or_else(|| bad("collectives", coll_ord))?;
     let val_ord = r.u8()? as u64;
     let validation = validation_from_ordinal(val_ord).ok_or_else(|| bad("validation", val_ord))?;
+    let nf_ord = r.u8()? as u64;
+    let netfault = netfault_from_ordinal(nf_ord).ok_or_else(|| bad("netfault", nf_ord))?;
     let faults = r.u32()?;
     let completed = bool_from(r.u8()?, what)?;
     let injected = bool_from(r.u8()?, what)?;
@@ -295,6 +302,7 @@ pub fn decode_outcome(r: &mut ByteReader<'_>) -> Result<TaskOutcome> {
         strategy,
         collectives,
         validation,
+        netfault,
         faults,
         completed,
         restarts,
@@ -385,6 +393,18 @@ pub fn read_artifact(path: &Path) -> Result<(ShardMeta, Vec<TaskOutcome>)> {
     Ok((meta, outcomes))
 }
 
+/// Render a shard header's identity fields for merge diagnostics.
+fn describe_meta(m: &ShardMeta) -> String {
+    format!(
+        "seed={} shard={}/{} tasks={} fingerprint={:#018x}",
+        m.seed,
+        m.shard_index + 1,
+        m.shard_count,
+        m.total_tasks,
+        m.spec_hash
+    )
+}
+
 /// Combine shard artifacts into one outcome list in canonical task order.
 ///
 /// Rejects shards from different sweeps (mismatched seed or total-task
@@ -414,11 +434,16 @@ pub fn merge_artifacts(
             )));
         }
         if m.spec_hash != first.spec_hash {
-            return Err(SedarError::Config(
+            // Decode both headers into the error so the operator can see
+            // *which* identity component disagrees without a hex dump:
+            // same seed + same task total but different fingerprints means
+            // a different --filter set (the netfault axis included).
+            return Err(SedarError::Config(format!(
                 "merge: shard spec fingerprints differ — artifacts were produced \
-                 under different --filter sets and cannot be combined"
-                    .into(),
-            ));
+                 under different --filter sets and cannot be combined\n  first: {}\n  other: {}",
+                describe_meta(&first),
+                describe_meta(m),
+            )));
         }
     }
     let outcomes = crate::campaign::aggregate::merge(
@@ -439,6 +464,7 @@ mod tests {
             strategy: crate::config::Strategy::UserCkpt,
             collectives: crate::config::CollectiveImpl::Native,
             validation: crate::detect::ValidationMode::Sha256,
+            netfault: crate::faultnet::NetFaultMode::Corrupt,
             faults: 2,
             completed: true,
             restarts: 1,
@@ -494,25 +520,47 @@ mod tests {
     }
 
     #[test]
-    fn v2_artifact_is_refused_naming_both_versions() {
-        // A hand-built version-2 payload (the pre-observability format):
-        // the reader must refuse it with an error naming the file's
-        // version AND the version this build reads, so mixed-version
-        // fleets fail fast instead of merging garbage.
+    fn fingerprint_mismatch_error_names_both_headers() {
+        let a = ShardMeta {
+            seed: 11,
+            shard_index: 0,
+            shard_count: 2,
+            total_tasks: 8,
+            spec_hash: 0xAAAA,
+        };
+        let b = ShardMeta {
+            spec_hash: 0xBBBB,
+            shard_index: 1,
+            ..a
+        };
+        let err = merge_artifacts(vec![(a, vec![]), (b, vec![])])
+            .unwrap_err()
+            .to_string();
+        for needle in ["0x000000000000aaaa", "0x000000000000bbbb", "shard=1/2", "shard=2/2"] {
+            assert!(err.contains(needle), "missing {needle}: {err}");
+        }
+    }
+
+    #[test]
+    fn v3_artifact_is_refused_naming_both_versions() {
+        // A hand-built version-3 payload (the pre-netfault format): the
+        // reader must refuse it with an error naming the file's version
+        // AND the version this build reads, so mixed-version fleets fail
+        // fast instead of merging garbage.
         let p = std::env::temp_dir().join(format!(
-            "sedar-artifact-v2-{}-{:?}.bin",
+            "sedar-artifact-v3-{}-{:?}.bin",
             std::process::id(),
             std::thread::current().id()
         ));
         let mut payload = Vec::new();
         payload.extend_from_slice(MAGIC);
-        payload.extend_from_slice(&2u32.to_le_bytes());
+        payload.extend_from_slice(&3u32.to_le_bytes());
         payload.extend_from_slice(&[0u8; 32]); // meta
         payload.extend_from_slice(&0u64.to_le_bytes()); // n = 0
         write_frame(&p, &payload, Codec::Raw).unwrap();
         let err = read_artifact(&p).unwrap_err().to_string();
-        assert!(err.contains("version 2"), "missing file version: {err}");
-        assert!(err.contains("version 3"), "missing reader version: {err}");
+        assert!(err.contains("version 3"), "missing file version: {err}");
+        assert!(err.contains("version 4"), "missing reader version: {err}");
         std::fs::remove_file(&p).unwrap();
     }
 }

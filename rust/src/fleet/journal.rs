@@ -36,7 +36,10 @@ const MAGIC: &[u8; 4] = b"SDJL";
 /// is unreadable by construction and must be refused, never mis-decoded.
 /// Bumped to 3 with the per-task observability counters (the trailing
 /// [`crate::metrics::MetricsSnapshot`] of each outcome record).
-const VERSION: u32 = 3;
+/// Bumped to 4 with the netfault axis (a per-record ordinal byte after
+/// the validation mode's), so a version-3 journal is refused by name
+/// rather than mis-decoded.
+const VERSION: u32 = 4;
 /// Sanity cap on a single record body; real outcome records are ≪ this.
 const MAX_RECORD: usize = 1 << 24;
 
@@ -235,6 +238,7 @@ mod tests {
             strategy: Strategy::SysCkpt,
             collectives: crate::config::CollectiveImpl::PointToPoint,
             validation: ValidationMode::Full,
+            netfault: crate::faultnet::NetFaultMode::None,
             faults: 1,
             completed: true,
             restarts: 0,
@@ -356,15 +360,15 @@ mod tests {
     }
 
     #[test]
-    fn v2_journal_is_refused_naming_both_versions() {
-        // Hand-build a journal whose header claims version 2 (the
-        // pre-observability record format): the reader must refuse it
+    fn v3_journal_is_refused_naming_both_versions() {
+        // Hand-build a journal whose header claims version 3 (the
+        // pre-netfault record format): the reader must refuse it
         // with an error naming both versions, and must NOT truncate it.
-        let p = tmp("v2");
+        let p = tmp("v3");
         let _ = std::fs::remove_file(&p);
         let mut body = Vec::new();
         body.extend_from_slice(MAGIC);
-        body.extend_from_slice(&2u32.to_le_bytes());
+        body.extend_from_slice(&3u32.to_le_bytes());
         body.extend_from_slice(&meta().seed.to_le_bytes());
         body.extend_from_slice(&meta().shard_index.to_le_bytes());
         body.extend_from_slice(&meta().shard_count.to_le_bytes());
@@ -376,9 +380,9 @@ mod tests {
         rec.extend_from_slice(&body);
         std::fs::write(&p, &rec).unwrap();
         let err = Journal::open(&p, &meta()).unwrap_err().to_string();
-        assert!(err.contains("version 2"), "missing file version: {err}");
-        assert!(err.contains("version 3"), "missing reader version: {err}");
-        assert_eq!(std::fs::read(&p).unwrap(), rec, "v2 journal was modified");
+        assert!(err.contains("version 3"), "missing file version: {err}");
+        assert!(err.contains("version 4"), "missing reader version: {err}");
+        assert_eq!(std::fs::read(&p).unwrap(), rec, "v3 journal was modified");
         std::fs::remove_file(&p).unwrap();
     }
 }

@@ -446,6 +446,7 @@ mod tests {
             strategy: t.strategy,
             collectives: t.collectives,
             validation: t.validation,
+            netfault: t.netfault,
             faults: t.faults,
             completed: true,
             restarts: 0,

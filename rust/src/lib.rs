@@ -44,8 +44,10 @@
 //! | [`workfault`] | the 64-scenario workfault catalog + prediction oracle (§4.1) |
 //! | [`model`] | analytical temporal model: Equations 1–14 + AET (§3.4, §4.3-4.4) |
 //! | [`runtime`] | PJRT engine: loads `artifacts/*.hlo.txt`, executes from rust |
+//! | [`faultnet`] | deterministic network-fault injection (drop/dup/reorder/corrupt) |
 //! | [`metrics`] | tick-based phase counters/spans + measured Table-3 parameters |
 //! | [`obs`] | typed run events: CRC'd trace logs + Chrome/Perfetto export |
+//! | [`conform`] | N-run determinism-conformance harness + divergence localizer |
 //! | [`report`] | markdown / CSV table emitters for the experiment harness |
 //! | [`bench`] | `sedar bench`: the machine-readable perf trajectory (`BENCH_*.json`) |
 //! | [`prop`] | in-repo property-based testing mini-framework |
@@ -57,9 +59,11 @@ pub mod checkpoint;
 pub mod cli;
 pub mod cluster;
 pub mod config;
+pub mod conform;
 pub mod coordinator;
 pub mod detect;
 pub mod error;
+pub mod faultnet;
 pub mod fleet;
 pub mod inject;
 pub mod metrics;

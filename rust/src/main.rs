@@ -5,6 +5,7 @@
 //!                [--n 256] [--nranks 4] [--iters 32] [--scenario 50] [--xla]
 //!                [--trace] [--trace-out FILE] [--seed 7]
 //!                [--collectives p2p|native] [--run-dir DIR]
+//!                [--netfault none|drop|dup|reorder|corrupt|mixed]
 //! sedar campaign [--jobs 8] [--seed 42] [--filter app=matmul,strategy=sys,scenario=1-8]
 //!                [--report md|csv] [--xla] [--run-dir DIR] [--quiet]
 //!                [--shard i/N] [--out shard.bin] [--journal sweep.journal]
@@ -15,6 +16,7 @@
 //!                [--report md|csv] [--report-out report.md] [--quiet]
 //! sedar merge    shard1.bin shard2.bin … [--report md|csv] [--report-out report.md]
 //!                [--allow-partial]
+//! sedar conform  --runs N [--seed S] [--filter …] [--jobs J] [--dir D]
 //! sedar catalog                                           # print Table 2 (all 64 rows)
 //! sedar model    [--table 4|5] [--thresholds] [--aet]     # the analytical model
 //! sedar bench    [--json] [--out FILE] [--quick] [--no-campaign] [--jobs N]
@@ -53,6 +55,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("campaign") => cmd_campaign(args),
         Some("fleet") => cmd_fleet(args),
         Some("merge") => cmd_merge(args),
+        Some("conform") => cmd_conform(args),
         Some("trace") => cmd_trace(args),
         Some("catalog") => cmd_catalog(),
         Some("model") => cmd_model(args),
@@ -88,6 +91,11 @@ commands:
   merge     combine shard artifacts written by `campaign --shard i/N --out F`
             into the full sweep's report (byte-identical to a single-process
             run with the same --seed)
+  conform   replay the same campaign slice N times and byte-compare every
+            deterministic artifact (report + per-task trace logs); on the
+            first mismatch, localize it — artifact, byte offset, 16-byte
+            hex context from both runs, and the first divergent decoded
+            event (tick/kind/rank/replica)
   trace     work with typed event logs written by `--trace-out`:
             `trace export FILE --format chrome` emits Chrome trace-event
             JSON (load it at ui.perfetto.dev or chrome://tracing; 1 tick =
@@ -110,7 +118,10 @@ campaign flags:
                 app=matmul,strategy=sys,scenario=1-8 (repeat keys to widen);
                 collectives=p2p|native narrows the §4.2 axis (default:
                 both); beyond-paper axes: validation=full|sha256,
-                faults=1..4
+                faults=1..4, netfault=none|drop|dup|reorder|corrupt|mixed
+                (deterministic network perturbation of the vmpi transport;
+                graded against the fail-safe oracle: corrupt ⇒ TDC, drop ⇒
+                TOE, dup/reorder ⇒ absorbed byte-identically or detected)
   --scenario K  shorthand for --filter scenario=K
   --clock M     wall | virtual (default: virtual). Virtual runs the sweep
                 on per-world logical clocks: TOE lapses and injected delays
@@ -168,6 +179,13 @@ merge flags:
   --report FMT     md (default) or csv
   --report-out F   also write the deterministic report to F
   --allow-partial  render even if the shards do not cover the whole sweep
+
+conform flags (N-run determinism harness):
+  --runs N         identical executions to compare (default 2; min 2)
+  --seed S / --filter F / --jobs J       as for campaign
+  --dir D          scratch root for the per-run trees (default
+                   runs/conform-<pid>; removed on success, kept on
+                   divergence so the artifacts can be diffed)
 
 bench flags:
   --json           emit the sedar-bench/1 JSON document on stdout (tables
@@ -235,6 +253,9 @@ fn build_cfg(args: &Args) -> Result<RunConfig> {
     }
     if let Some(c) = args.get("clock") {
         cfg.set("clock", c)?;
+    }
+    if let Some(m) = args.get("netfault") {
+        cfg.set("netfault", m)?;
     }
     Ok(cfg)
 }
@@ -444,6 +465,31 @@ fn cmd_merge(args: &Args) -> Result<()> {
             "{} campaign task(s) diverged from the oracle",
             report.failed()
         )));
+    }
+    Ok(())
+}
+
+/// `sedar conform --runs N [--seed S --filter F --jobs J --dir D]`: the
+/// N-run determinism harness — replay one slice repeatedly, byte-compare
+/// the artifacts, localize the first divergence.
+fn cmd_conform(args: &Args) -> Result<()> {
+    let opts = sedar::conform::ConformOpts {
+        runs: args.usize_or("runs", 2)?,
+        seed: args.u64_or("seed", 42)?,
+        filter: args.get("filter").map(String::from),
+        jobs: args.usize_or("jobs", CampaignSpec::default_jobs())?,
+        work_dir: match args.get("dir") {
+            Some(d) => d.into(),
+            None => format!("runs/conform-{}", std::process::id()).into(),
+        },
+    };
+    let out = sedar::conform::run_conform(&opts)?;
+    println!("{}", out.summary());
+    if !out.passed() {
+        println!("run trees kept under {}", opts.work_dir.display());
+        return Err(SedarError::Config(
+            "conformance failed: runs are not byte-identical".into(),
+        ));
     }
     Ok(())
 }

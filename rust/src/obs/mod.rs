@@ -62,10 +62,12 @@ pub enum EventKind {
     Completed,
     /// The coordinator exhausted its restart budget.
     GaveUp,
+    /// The faultnet layer perturbed a message (action in the detail).
+    NetFault,
 }
 
 impl EventKind {
-    pub const ALL: [EventKind; 11] = [
+    pub const ALL: [EventKind; 12] = [
         EventKind::RunStart,
         EventKind::AttemptStart,
         EventKind::Injected,
@@ -77,6 +79,7 @@ impl EventKind {
         EventKind::Validated,
         EventKind::Completed,
         EventKind::GaveUp,
+        EventKind::NetFault,
     ];
 
     pub fn label(self) -> &'static str {
@@ -92,6 +95,7 @@ impl EventKind {
             EventKind::Validated => "validated",
             EventKind::Completed => "completed",
             EventKind::GaveUp => "gave-up",
+            EventKind::NetFault => "net-fault",
         }
     }
 
@@ -109,6 +113,7 @@ impl EventKind {
             EventKind::Validated => 8,
             EventKind::Completed => 9,
             EventKind::GaveUp => 10,
+            EventKind::NetFault => 11,
         }
     }
 

@@ -132,7 +132,11 @@ pub fn decode_gather_parts(blob: &[u8]) -> Result<Vec<Var>> {
     Ok(parts)
 }
 
-/// Inverse of [`encode_var`].
+/// Inverse of [`encode_var`], with the header cross-checked against the
+/// body: a torn or bit-flipped encoding (a faultnet-corrupted delivery, a
+/// sibling that died mid-push) must surface as a [`SedarError`], never a
+/// panic and never a structurally inconsistent [`Var`] whose shape
+/// promises more elements than its buffer holds.
 pub fn decode_var(data: &[u8]) -> Result<Var> {
     if data.len() < 2 {
         return Err(SedarError::Vmpi("truncated var encoding".into()));
@@ -154,7 +158,25 @@ pub fn decode_var(data: &[u8]) -> Result<Var> {
         shape.push(u64::from_le_bytes(data[off..off + 8].try_into().unwrap()) as usize);
         off += 8;
     }
-    let buf = Buf::from_bytes(dtype, &data[off..])?;
+    let elem = match dtype {
+        DType::F32 => 4,
+        DType::F64 => 8,
+        DType::I64 => 8,
+        DType::U8 => 1,
+    };
+    let want = shape
+        .iter()
+        .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+        .and_then(|n| n.checked_mul(elem));
+    let body = &data[off..];
+    if want != Some(body.len()) {
+        return Err(SedarError::Vmpi(format!(
+            "var payload length mismatch: shape {shape:?} ({dtype:?}) needs \
+             {want:?} byte(s), encoding carries {}",
+            body.len()
+        )));
+    }
+    let buf = Buf::from_bytes(dtype, body)?;
     Ok(Var { shape, buf })
 }
 
@@ -420,6 +442,49 @@ impl ReplicaCtx {
         self.pop_from_sibling(site)
     }
 
+    /// Classify a transport error from a lead-side network operation at
+    /// `site`. The faultnet layer surfaces its perturbations as typed
+    /// transport errors; here they become SEDAR detections:
+    ///
+    /// * [`SedarError::NetCorrupt`] (payload CRC mismatch on take) →
+    ///   **TDC** — the paper's Transmitted Data Corruption, caught at the
+    ///   receiver instead of the sender-side replica comparison;
+    /// * a receive timeout while a fault layer is installed → **TOE** —
+    ///   a dropped message's absence, observed within the modeled lapse.
+    ///
+    /// Anything else (abort, protocol errors, timeouts on clean networks)
+    /// passes through untouched.
+    fn classify_net_err(&self, e: SedarError, site: &str) -> SedarError {
+        match e {
+            SedarError::NetCorrupt { src, dst, tag, seq } => {
+                self.event(
+                    EventKind::Detected,
+                    format!(
+                        "TDC divergence detected at {site} (transport CRC: \
+                         src={src} dst={dst} tag={tag} seq={seq})"
+                    ),
+                );
+                self.detector
+                    .report(FaultClass::Tdc, self.rank, site, self.cursor)
+            }
+            SedarError::Vmpi(msg)
+                if msg.contains("recv timeout")
+                    && self.ep.network().fault_layer().is_some() =>
+            {
+                self.event(EventKind::ToeExpired, format!("TOE: {msg} at {site}"));
+                self.detector
+                    .report(FaultClass::Toe, self.rank, site, self.cursor)
+            }
+            other => other,
+        }
+    }
+
+    /// Run a lead-side network operation result through the transport
+    /// fault classifier.
+    fn net_op<T>(&self, r: Result<T>, site: &str) -> Result<T> {
+        r.map_err(|e| self.classify_net_err(e, site))
+    }
+
     // ----------------------------------------------------- point-to-point
 
     /// Validated send (§3.1): compare the outgoing contents between
@@ -468,7 +533,7 @@ impl ReplicaCtx {
             let v = match self.ep.recv(src, tag) {
                 Ok(v) => v,
                 Err(SedarError::Aborted) => return Err(SedarError::Aborted),
-                Err(e) => return Err(e),
+                Err(e) => return Err(self.classify_net_err(e, site)),
             };
             // Hand the copy to the sibling, then wait for its check-in token
             // (the receiver-side synchronization of Figure 1).
@@ -509,11 +574,11 @@ impl ReplicaCtx {
                     let v = self.store.get(var)?.clone();
                     self.compare_with_sibling(&v.buf, site, FaultClass::Tdc)?;
                     if self.is_lead() {
-                        self.ep.bcast(root, Some(v))?;
+                        self.net_op(self.ep.bcast(root, Some(v)), site)?;
                     }
                 } else {
                     let v = if self.is_lead() {
-                        let v = self.ep.bcast(root, None)?;
+                        let v = self.net_op(self.ep.bcast(root, None), site)?;
                         self.push_to_sibling(encode_var(&v).into());
                         self.pop_from_sibling(site)?;
                         v
@@ -588,12 +653,12 @@ impl ReplicaCtx {
                     self.compare_bytes_with_sibling(&all, site, FaultClass::Tdc)?;
                     let own = chunks[root].clone();
                     if self.is_lead() {
-                        self.ep.scatter(root, Some(chunks))?;
+                        self.net_op(self.ep.scatter(root, Some(chunks)), site)?;
                     }
                     self.store.insert(into, own);
                 } else {
                     let v = if self.is_lead() {
-                        let v = self.ep.scatter(root, None)?;
+                        let v = self.net_op(self.ep.scatter(root, None), site)?;
                         self.push_to_sibling(encode_var(&v).into());
                         self.pop_from_sibling(site)?;
                         v
@@ -639,7 +704,7 @@ impl ReplicaCtx {
                 self.compare_with_sibling(&v.buf, site, FaultClass::Tdc)?;
                 if self.rank == root {
                     if self.is_lead() {
-                        let parts = self.ep.gather(root, v)?.unwrap();
+                        let parts = self.net_op(self.ep.gather(root, v), site)?.unwrap();
                         // Share the gathered parts with the sibling.
                         self.push_to_sibling(encode_gather_parts(&parts).into());
                         self.pop_from_sibling(site)?;
@@ -652,7 +717,7 @@ impl ReplicaCtx {
                     }
                 } else {
                     if self.is_lead() {
-                        self.ep.gather(root, v)?;
+                        self.net_op(self.ep.gather(root, v), site)?;
                     }
                     Ok(None)
                 }
@@ -665,7 +730,7 @@ impl ReplicaCtx {
     pub fn barrier(&mut self, site: &str) -> Result<()> {
         self.pair_exchange(vec![1].into(), site)?;
         if self.is_lead() {
-            self.ep.barrier(0)?;
+            self.net_op(self.ep.barrier(0), site)?;
         }
         // Second rendezvous so the sibling does not run ahead of the global
         // barrier point.
@@ -719,15 +784,15 @@ impl ReplicaCtx {
                 RankSnapshot::serialize_parts(resume_cursor, &my_bytes, peer_bytes.as_bytes());
             let payload_len = payload.len();
             // Coordinated: all leaders enter, write, then the master commits.
-            self.ep.barrier(0)?;
+            self.net_op(self.ep.barrier(0), site)?;
             chain
                 .write_payload(ck_no, self.rank, &payload)
                 .map_err(|e| SedarError::Checkpoint(format!("ck{ck_no}: {e}")))?;
-            self.ep.barrier(0)?;
+            self.net_op(self.ep.barrier(0), site)?;
             if self.rank == 0 {
                 chain.commit(ck_no)?;
             }
-            self.ep.barrier(0)?;
+            self.net_op(self.ep.barrier(0), site)?;
             self.metrics
                 .add(&self.metrics.sys_ckpt_bytes, payload_len as u64);
             self.metrics.add(&self.metrics.sys_ckpts, 1);
@@ -807,7 +872,7 @@ impl ReplicaCtx {
         // the checkpoint set is only usable if coordinated-consistent.
         let global_valid = if self.is_lead() {
             let verdict = Var::f32(&[], vec![if local_valid { 1.0 } else { 0.0 }]);
-            let g = self.ep.allreduce_sum_f32(0, verdict)?;
+            let g = self.net_op(self.ep.allreduce_sum_f32(0, verdict), site)?;
             let ok = g.buf.as_f32()?[0] as usize == self.nranks;
             self.push_to_sibling(vec![ok as u8].into());
             ok
@@ -822,7 +887,7 @@ impl ReplicaCtx {
                     None => chain.write_valid_payload(ck_no, self.rank, &payload),
                 }
                 .map_err(|e| SedarError::Checkpoint(format!("uck{ck_no}: {e}")))?;
-                self.ep.barrier(0)?;
+                self.net_op(self.ep.barrier(0), site)?;
                 if self.rank == 0 {
                     chain.commit_valid(ck_no)?;
                     self.event(
@@ -830,7 +895,7 @@ impl ReplicaCtx {
                         format!("{site}: user checkpoint #{ck_no} VALID (previous discarded)"),
                     );
                 }
-                self.ep.barrier(0)?;
+                self.net_op(self.ep.barrier(0), site)?;
                 self.push_to_sibling(vec![1].into());
                 self.metrics
                     .add(&self.metrics.user_ckpt_bytes, payload.len() as u64);
@@ -977,6 +1042,34 @@ mod tests {
     fn decode_rejects_garbage() {
         assert!(decode_var(&[]).is_err());
         assert!(decode_var(&[9, 1, 2]).is_err());
+    }
+
+    #[test]
+    fn malformed_var_encoding_is_an_error_never_a_panic() {
+        let v = Var::f32(&[2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let e = encode_var(&v);
+        // Every strict prefix — mid-header, mid-shape, mid-payload, and the
+        // element-boundary cuts a length-unaware decoder would accept as a
+        // shorter-but-valid buffer under the original shape.
+        for cut in 0..e.len() {
+            assert!(
+                decode_var(&e[..cut]).is_err(),
+                "prefix of {cut} byte(s) decoded"
+            );
+        }
+        // Trailing bytes after the declared payload are refused.
+        let mut padded = e.clone();
+        padded.extend_from_slice(&[0u8; 4]);
+        assert!(decode_var(&padded).is_err());
+        // A corrupted rank byte tears the header apart.
+        let mut bent = e.clone();
+        bent[1] = 7;
+        assert!(decode_var(&bent).is_err());
+        // A corrupted dimension no longer matches the body — and an absurd
+        // one must not size an allocation (checked multiply, no overflow).
+        let mut huge = e;
+        huge[2..10].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(decode_var(&huge).is_err());
     }
 
     #[test]

@@ -4,6 +4,14 @@
 //! prerequisite (replicated executions must be bit-identical, §3.1). The tag
 //! space above [`COLLECTIVE_TAG_BASE`] is reserved for these internals; user
 //! code must use tags below it.
+//!
+//! Because every collective is composed from [`Endpoint::send`] /
+//! [`Endpoint::recv`], an installed
+//! [`FaultLayer`](crate::faultnet::FaultLayer) perturbs collective
+//! internals exactly like user point-to-point traffic: a dropped
+//! scatter chunk stalls that rank's receive (timeout/poison, never a
+//! hang — see `rust/tests/faultnet.rs`), a corrupted broadcast payload
+//! trips the transport CRC on take.
 
 use crate::error::{Result, SedarError};
 use crate::state::{Buf, Var};

@@ -26,17 +26,33 @@
 //! reports a fault, the coordinator calls [`Network::abort`] and every
 //! blocked or future operation unwinds with [`SedarError::Aborted`], so all
 //! replica threads can be joined promptly.
+//!
+//! A network may carry a [`FaultLayer`](crate::faultnet::FaultLayer):
+//! every send is then sequenced per (src, dst), CRC-stamped, and run
+//! through the layer's deterministic plan (drop / duplicate /
+//! reorder-delay / corrupt-payload-bit). Delivery preserves per-(src,
+//! tag) FIFO even for delayed messages (MPI's non-overtaking guarantee),
+//! absorbs duplicate redeliveries through a bounded dedup window, and
+//! verifies the payload CRC on take — a flipped bit surfaces as the
+//! typed [`SedarError::NetCorrupt`], never silently corrupt data.
 
 pub mod collectives;
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use crate::error::{Result, SedarError};
+use crate::faultnet::{FaultAction, FaultLayer};
 use crate::state::Var;
-use crate::util::clock::{Clock, Wait, WaitPoint};
+use crate::util::clock::{Clock, Tick, Wait, WaitPoint};
+use crate::util::codec::crc32;
+
+/// Most duplicate copies one (src, tag) stream may hold queued at once:
+/// the redelivery cap that keeps a duplicate storm from growing a mailbox
+/// unboundedly.
+pub const MAX_QUEUED_DUPS: usize = 8;
 
 /// A message in flight.
 #[derive(Debug)]
@@ -44,13 +60,44 @@ pub struct Envelope {
     pub src: usize,
     pub tag: u32,
     pub payload: Var,
+    /// Per-(src, dst) send sequence number — the sender's program order,
+    /// so it is deterministic under any thread interleaving.
+    pub seq: u64,
+    /// Earliest tick at which this message may be taken (0 = immediately;
+    /// only a faultnet reorder-delay sets it).
+    pub deliver_at: Tick,
+    /// CRC-32 of the payload bytes stamped at send, *before* the fault
+    /// layer may corrupt them — the transport's link-level checksum.
+    /// `None` on clean networks (no per-message hashing overhead).
+    pub integrity: Option<u32>,
+    /// True for a faultnet-injected duplicate copy (counted against
+    /// [`MAX_QUEUED_DUPS`]).
+    pub dup: bool,
+}
+
+struct MailboxState {
+    q: VecDeque<Envelope>,
+    /// Next sequence number per source rank.
+    next_seq: Vec<u64>,
+    /// Highest delivered seq per (src, tag) — the bounded dedup window
+    /// that absorbs duplicate redeliveries (faulted networks only).
+    delivered: HashMap<(usize, u32), u64>,
 }
 
 struct Mailbox {
-    q: Mutex<VecDeque<Envelope>>,
+    state: Mutex<MailboxState>,
     /// This mailbox's wakeup channel: senders notify it, the owning rank's
     /// receives park on it.
     wp: WaitPoint,
+}
+
+/// Outcome of one non-blocking mailbox scan.
+enum Take {
+    Got(Var),
+    /// The head-of-line message of this (src, tag) stream exists but may
+    /// not be delivered before this tick.
+    NotDue(Tick),
+    Empty,
 }
 
 /// Byte / message accounting, kept per network (Table 3's communication
@@ -68,6 +115,9 @@ pub struct Network {
     boxes: Vec<Mailbox>,
     aborted: AtomicBool,
     clock: Clock,
+    /// Installed perturbation layer, if any (`sedar` runs with
+    /// `netfault != none`).
+    faults: Option<Arc<FaultLayer>>,
     pub stats: NetStats,
 }
 
@@ -80,23 +130,43 @@ impl Network {
     /// Network whose blocking operations route through `clock` — the
     /// coordinator passes the per-world clock here so every rank shares it.
     pub fn with_clock(nranks: usize, clock: Clock) -> Arc<Network> {
+        Self::with_faults(nranks, clock, None)
+    }
+
+    /// Network with an optional deterministic fault layer installed.
+    pub fn with_faults(
+        nranks: usize,
+        clock: Clock,
+        faults: Option<Arc<FaultLayer>>,
+    ) -> Arc<Network> {
         assert!(nranks >= 1);
         Arc::new(Network {
             n: nranks,
             boxes: (0..nranks)
                 .map(|_| Mailbox {
-                    q: Mutex::new(VecDeque::new()),
+                    state: Mutex::new(MailboxState {
+                        q: VecDeque::new(),
+                        next_seq: vec![0; nranks],
+                        delivered: HashMap::new(),
+                    }),
                     wp: clock.wait_point(),
                 })
                 .collect(),
             aborted: AtomicBool::new(false),
             clock,
+            faults,
             stats: NetStats::default(),
         })
     }
 
     pub fn nranks(&self) -> usize {
         self.n
+    }
+
+    /// The installed fault layer, if any (the coordinator drains its
+    /// typed events into the run trace after each attempt).
+    pub fn fault_layer(&self) -> Option<&Arc<FaultLayer>> {
+        self.faults.as_ref()
     }
 
     pub fn clock(&self) -> &Clock {
@@ -163,17 +233,97 @@ impl Endpoint {
         let bytes = payload.buf.byte_len() as u64;
         let mbox = &self.net.boxes[dst];
         {
-            let mut q = mbox.q.lock().unwrap();
-            q.push_back(Envelope {
-                src: self.rank,
-                tag,
-                payload,
-            });
+            let mut st = mbox.state.lock().unwrap();
+            let seq = st.next_seq[self.rank];
+            st.next_seq[self.rank] = seq + 1;
+            match self.net.faults.as_deref() {
+                None => st.q.push_back(Envelope {
+                    src: self.rank,
+                    tag,
+                    payload,
+                    seq,
+                    deliver_at: 0,
+                    integrity: None,
+                    dup: false,
+                }),
+                Some(fl) => self.push_faulted(&mut st, fl, dst, tag, payload, seq),
+            }
         }
         mbox.wp.notify();
         self.net.stats.messages.fetch_add(1, Ordering::Relaxed);
         self.net.stats.bytes.fetch_add(bytes, Ordering::Relaxed);
         Ok(())
+    }
+
+    /// Queue one message through the fault layer's plan. The CRC is
+    /// stamped before any perturbation, so a corrupted bit trips the
+    /// integrity check on take.
+    fn push_faulted(
+        &self,
+        st: &mut MailboxState,
+        fl: &FaultLayer,
+        dst: usize,
+        tag: u32,
+        payload: Var,
+        seq: u64,
+    ) {
+        let action = fl.plan().action(self.rank, dst, seq);
+        let crc = crc32(payload.buf.bytes());
+        let mut env = Envelope {
+            src: self.rank,
+            tag,
+            payload,
+            seq,
+            deliver_at: 0,
+            integrity: Some(crc),
+            dup: false,
+        };
+        let now = self.net.clock.now();
+        match action {
+            FaultAction::Deliver => st.q.push_back(env),
+            FaultAction::Drop => {
+                fl.record(now, self.rank, dst, tag, seq, &action);
+            }
+            FaultAction::Duplicate => {
+                fl.record(now, self.rank, dst, tag, seq, &action);
+                let copy = Envelope {
+                    src: env.src,
+                    tag,
+                    payload: env.payload.clone(),
+                    seq,
+                    deliver_at: 0,
+                    integrity: env.integrity,
+                    dup: true,
+                };
+                st.q.push_back(env);
+                // Redelivery cap: a storm may queue at most
+                // MAX_QUEUED_DUPS extra copies per (src, tag).
+                let queued = st
+                    .q
+                    .iter()
+                    .filter(|e| e.dup && e.src == self.rank && e.tag == tag)
+                    .count();
+                if queued < MAX_QUEUED_DUPS {
+                    st.q.push_back(copy);
+                }
+            }
+            FaultAction::Delay(d) => {
+                fl.record(now, self.rank, dst, tag, seq, &action);
+                env.deliver_at = now + d;
+                st.q.push_back(env);
+            }
+            FaultAction::CorruptBit(k) => {
+                let bits = (env.payload.buf.byte_len() * 8) as u64;
+                if bits == 0 {
+                    st.q.push_back(env);
+                    return;
+                }
+                fl.record(now, self.rank, dst, tag, seq, &action);
+                let bit = (k % bits) as usize;
+                env.payload.buf.bytes_mut()[bit / 8] ^= 1 << (bit % 8);
+                st.q.push_back(env);
+            }
+        }
     }
 
     /// Blocking receive matching `(src, tag)`; FIFO among matching messages.
@@ -188,34 +338,91 @@ impl Endpoint {
         self.recv_inner(src, tag, Some(timeout))
     }
 
-    fn try_take(&self, src: usize, tag: u32) -> Result<Option<Var>> {
-        let mut q = self.net.boxes[self.rank].q.lock().unwrap();
+    fn try_take(&self, src: usize, tag: u32) -> Result<Take> {
+        let mut st = self.net.boxes[self.rank].state.lock().unwrap();
         if self.net.is_aborted() {
             return Err(SedarError::Aborted);
         }
-        Ok(q
-            .iter()
-            .position(|e| e.src == src && e.tag == tag)
-            .map(|pos| q.remove(pos).unwrap().payload))
+        let faulted = self.net.faults.is_some();
+        loop {
+            let pos = match st.q.iter().position(|e| e.src == src && e.tag == tag) {
+                Some(pos) => pos,
+                None => return Ok(Take::Empty),
+            };
+            // Per-(src, tag) FIFO is MPI's non-overtaking guarantee, which
+            // SEDAR's protocol is entitled to assume: a delayed head holds
+            // its whole stream instead of being overtaken.
+            if st.q[pos].deliver_at > 0 {
+                let due = st.q[pos].deliver_at;
+                if due > self.net.clock.now() {
+                    return Ok(Take::NotDue(due));
+                }
+            }
+            let env = st.q.remove(pos).unwrap();
+            if faulted {
+                // Dedup window: a redelivery at or below the last
+                // delivered seq of this stream is absorbed silently.
+                if let Some(&last) = st.delivered.get(&(src, tag)) {
+                    if env.seq <= last {
+                        continue;
+                    }
+                }
+                if let Some(crc) = env.integrity {
+                    if crc32(env.payload.buf.bytes()) != crc {
+                        return Err(SedarError::NetCorrupt {
+                            src,
+                            dst: self.rank,
+                            tag,
+                            seq: env.seq,
+                        });
+                    }
+                }
+                st.delivered.insert((src, tag), env.seq);
+            }
+            return Ok(Take::Got(env.payload));
+        }
     }
 
     fn recv_inner(&self, src: usize, tag: u32, timeout: Option<Duration>) -> Result<Var> {
         let wp = &self.net.boxes[self.rank].wp;
+        // An installed fault layer imposes its default deadline on
+        // receives that would otherwise block forever: a dropped message
+        // must surface as a timeout verdict, never a hang, on either
+        // clock.
+        let timeout =
+            timeout.or_else(|| self.net.faults.as_ref().and_then(|f| f.recv_deadline()));
         let deadline = timeout.map(|t| self.net.clock.deadline_after(t));
         loop {
             // Generation first, queue check second: a send that lands after
             // the check has already bumped the generation, so the wait below
             // returns `Notified` instead of losing the wakeup.
             let gen = wp.subscribe();
-            if let Some(v) = self.try_take(src, tag)? {
-                return Ok(v);
-            }
-            match wp.wait(gen, deadline) {
+            let held = match self.try_take(src, tag)? {
+                Take::Got(v) => return Ok(v),
+                Take::NotDue(due) => Some(due),
+                Take::Empty => None,
+            };
+            // Park until the earlier of the recv deadline and the held
+            // head-of-line message's due tick.
+            let wake = match (deadline, held) {
+                (Some(d), Some(h)) => Some(d.min(h)),
+                (d, h) => d.or(h),
+            };
+            match wp.wait(gen, wake) {
                 Wait::Notified => continue,
                 Wait::TimedOut => {
+                    // A held message coming due is not the recv deadline
+                    // expiring — only give up once the deadline passed.
+                    let expired = match deadline {
+                        Some(d) => self.net.clock.now() >= d,
+                        None => false,
+                    };
+                    if !expired {
+                        continue;
+                    }
                     // The deadline and a matching send can race; prefer the
                     // message, exactly like a real just-in-time arrival.
-                    if let Some(v) = self.try_take(src, tag)? {
+                    if let Take::Got(v) = self.try_take(src, tag)? {
                         return Ok(v);
                     }
                     return Err(SedarError::Vmpi(format!(
@@ -236,7 +443,7 @@ impl Endpoint {
 
     /// Count of queued (unmatched) messages — used by tests.
     pub fn pending(&self) -> usize {
-        self.net.boxes[self.rank].q.lock().unwrap().len()
+        self.net.boxes[self.rank].state.lock().unwrap().q.len()
     }
 }
 
@@ -379,5 +586,154 @@ mod tests {
         a.send(1, 0, v(&[0.0; 16])).unwrap();
         assert_eq!(net.stats.messages.load(Ordering::Relaxed), 1);
         assert_eq!(net.stats.bytes.load(Ordering::Relaxed), 64);
+    }
+
+    // ---- faultnet integration -------------------------------------------
+
+    use crate::faultnet::{FaultPlan, NetFaultMode};
+
+    fn faulted_net(
+        mode: NetFaultMode,
+        seed: u64,
+        deadline: Option<Duration>,
+    ) -> (Arc<Network>, Arc<FaultLayer>) {
+        let layer = Arc::new(FaultLayer::new(FaultPlan::new(mode, seed), 1, deadline));
+        let net = Network::with_faults(2, Clock::wall(), Some(Arc::clone(&layer)));
+        (net, layer)
+    }
+
+    #[test]
+    fn dropped_message_surfaces_as_timeout_not_hang() {
+        let (net, layer) = faulted_net(
+            NetFaultMode::Drop,
+            11,
+            Some(Duration::from_millis(20)),
+        );
+        let plan = *layer.plan();
+        let dropped = (0u64..)
+            .find(|&s| plan.action(0, 1, s) == FaultAction::Drop)
+            .unwrap();
+        let a = net.endpoint(0);
+        let b = net.endpoint(1);
+        for s in 0..=dropped {
+            a.send(1, 3, v(&[s as f32])).unwrap();
+        }
+        for s in 0..dropped {
+            assert_eq!(b.recv(0, 3).unwrap().buf.as_f32().unwrap(), &[s as f32]);
+        }
+        // The dropped message: the layer's default deadline turns the
+        // plain (unbounded) recv into a clean timeout, never a hang.
+        let err = b.recv(0, 3).unwrap_err();
+        match err {
+            SedarError::Vmpi(msg) => assert!(msg.contains("recv timeout"), "{msg}"),
+            other => panic!("expected timeout, got {other:?}"),
+        }
+        assert!(layer.counters.drops.load(Ordering::Relaxed) >= 1);
+    }
+
+    #[test]
+    fn duplicates_are_absorbed_and_the_storm_is_capped() {
+        let (net, layer) = faulted_net(
+            NetFaultMode::Dup,
+            5,
+            Some(Duration::from_millis(20)),
+        );
+        let a = net.endpoint(0);
+        let b = net.endpoint(1);
+        const N: usize = 200;
+        for i in 0..N {
+            a.send(1, 3, v(&[i as f32])).unwrap();
+        }
+        let dups = layer.counters.dups.load(Ordering::Relaxed) as usize;
+        assert!(dups > MAX_QUEUED_DUPS, "want a real storm, got {dups} dups");
+        // The redelivery cap bounds mailbox growth below the storm size.
+        assert!(
+            b.pending() <= N + MAX_QUEUED_DUPS,
+            "mailbox grew to {} (cap {})",
+            b.pending(),
+            N + MAX_QUEUED_DUPS
+        );
+        // Every payload arrives exactly once, in order.
+        for i in 0..N {
+            assert_eq!(b.recv(0, 3).unwrap().buf.as_f32().unwrap(), &[i as f32]);
+        }
+        // Leftover duplicate copies are absorbed, not delivered.
+        assert!(b.recv(0, 3).is_err());
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn delayed_stream_stays_fifo_under_virtual_clock() {
+        let clock = Clock::virtual_clock();
+        clock.join_n(1);
+        let _g = clock.guard();
+        let layer = Arc::new(FaultLayer::new(
+            FaultPlan::new(NetFaultMode::Reorder, 9),
+            1,
+            None,
+        ));
+        let net = Network::with_faults(2, clock.clone(), Some(Arc::clone(&layer)));
+        let a = net.endpoint(0);
+        let b = net.endpoint(1);
+        for i in 0..50 {
+            a.send(1, 3, v(&[i as f32])).unwrap();
+        }
+        assert!(layer.counters.delays.load(Ordering::Relaxed) >= 1);
+        // Delays hold the stream head (non-overtaking), and the virtual
+        // clock jumps to each due tick — in-order delivery, no wall time.
+        for i in 0..50 {
+            assert_eq!(b.recv(0, 3).unwrap().buf.as_f32().unwrap(), &[i as f32]);
+        }
+        assert!(clock.now() > 0, "delays must advance the modeled clock");
+    }
+
+    #[test]
+    fn corrupt_payload_is_a_typed_error_never_a_panic() {
+        let (net, layer) = faulted_net(
+            NetFaultMode::Corrupt,
+            13,
+            Some(Duration::from_millis(20)),
+        );
+        let plan = *layer.plan();
+        let bent = (0u64..)
+            .find(|&s| matches!(plan.action(0, 1, s), FaultAction::CorruptBit(_)))
+            .unwrap();
+        let a = net.endpoint(0);
+        let b = net.endpoint(1);
+        for s in 0..=bent {
+            a.send(1, 3, v(&[s as f32])).unwrap();
+        }
+        for s in 0..bent {
+            assert_eq!(b.recv(0, 3).unwrap().buf.as_f32().unwrap(), &[s as f32]);
+        }
+        // The flipped bit trips the send-time CRC on take.
+        let err = b.recv(0, 3).unwrap_err();
+        match err {
+            SedarError::NetCorrupt { src, dst, tag, seq } => {
+                assert_eq!((src, dst, tag, seq), (0, 1, 3, bent));
+            }
+            other => panic!("expected NetCorrupt, got {other:?}"),
+        }
+        assert!(layer.counters.corrupts.load(Ordering::Relaxed) >= 1);
+    }
+
+    #[test]
+    fn fault_layer_records_typed_events_with_send_ticks() {
+        let (net, layer) = faulted_net(
+            NetFaultMode::Mixed,
+            3,
+            Some(Duration::from_millis(20)),
+        );
+        let a = net.endpoint(0);
+        for i in 0..100 {
+            a.send(1, 3, v(&[i as f32])).unwrap();
+        }
+        let events = layer.take_events();
+        assert_eq!(events.len() as u64, layer.faults_applied());
+        assert!(!events.is_empty());
+        for e in &events {
+            assert_eq!(e.kind, crate::obs::EventKind::NetFault);
+            assert!(e.detail.starts_with("netfault: "), "{}", e.detail);
+        }
     }
 }

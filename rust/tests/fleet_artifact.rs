@@ -10,6 +10,7 @@ use sedar::campaign::{CampaignApp, CampaignReport};
 use sedar::config::{CollectiveImpl, Strategy};
 use sedar::detect::ValidationMode;
 use sedar::error::FaultClass;
+use sedar::faultnet::NetFaultMode;
 use sedar::fleet::artifact::{merge_artifacts, read_artifact, write_artifact, ShardMeta};
 use sedar::recovery::ResumeFrom;
 
@@ -40,6 +41,7 @@ fn ornate(index: usize) -> TaskOutcome {
         strategy: Strategy::SysCkpt,
         collectives: CollectiveImpl::Native,
         validation: ValidationMode::Sha256,
+        netfault: NetFaultMode::Mixed,
         faults: 3,
         completed: true,
         restarts: 2,
@@ -81,6 +83,7 @@ fn plain(index: usize) -> TaskOutcome {
         strategy: Strategy::DetectOnly,
         collectives: CollectiveImpl::PointToPoint,
         validation: ValidationMode::Full,
+        netfault: NetFaultMode::None,
         faults: 1,
         completed: true,
         restarts: 0,

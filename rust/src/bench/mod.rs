@@ -1,7 +1,7 @@
 //! `sedar bench` — the in-binary performance suite behind the
 //! machine-readable bench trajectory (`BENCH_*.json`).
 //!
-//! Four sections cover the hot paths the perf PRs optimize, so successive
+//! The sections cover the hot paths the perf PRs optimize, so successive
 //! PRs diff numbers instead of re-guessing them:
 //!
 //! 1. **msg_validation** — per-message detection cost by payload size:
@@ -14,7 +14,11 @@
 //! 4. **faultnet** — per-message fault-plan evaluation cost (the tax every
 //!    delivery pays when a [`crate::faultnet`] plan is installed) and the
 //!    end-to-end overhead of a perturbed vs clean p2p stream;
-//! 5. **campaign** — end-to-end wall time of the 1152-task injection sweep
+//! 5. **persistence** — shard durability MB/s: the unified WAL (synced
+//!    per-outcome appends + periodic snapshot compaction + replay) against
+//!    an emulation of the retired dual write (per-record journal appends
+//!    plus a whole-shard artifact frame);
+//! 6. **campaign** — end-to-end wall time of the 1152-task injection sweep
 //!    (64 scenarios × 3 apps × 3 strategies × 2 collectives modes — the
 //!    system-level number everything above feeds, and the sweep the
 //!    pooled-world arena keeps allocation-flat).
@@ -83,6 +87,7 @@ pub fn run_suite(opts: &BenchOpts) -> Result<JsonReport> {
     transport_section(opts, &mut jr);
     ckpt_frame_section(opts, &mut jr);
     faultnet_section(opts, &mut jr);
+    persistence_section(opts, &mut jr);
     if opts.campaign {
         campaign_section(opts, &mut jr)?;
     }
@@ -298,6 +303,127 @@ fn faultnet_section(opts: &BenchOpts, jr: &mut JsonReport) {
     print_section(opts.echo, "network fault layer (plan eval / perturbed p2p)", &rows);
 }
 
+/// Shard durability substrate: what one finished task costs to make
+/// durable. Three cases over the same outcome batch:
+///
+/// - `wal append+compact` — the live path: per-outcome synced appends to
+///   one SDWL log, snapshot compaction at the default interval, a final
+///   compaction on clean shutdown;
+/// - `dual write` — an emulation of the retired journal+artifact pair
+///   (per-record synced appends to one file, then the whole shard payload
+///   re-framed and synced to a second), kept as the comparison baseline;
+/// - `wal replay` — the read side every resume and merge shares.
+///
+/// The bytes column is the encoded outcome payload per iteration (×2 for
+/// the dual write — both files carry it), so MB/s compares like for like.
+/// These are fsync-bound numbers: expect milliseconds per record on real
+/// disks and noise on CI runners — trend, not threshold.
+fn persistence_section(opts: &BenchOpts, jr: &mut JsonReport) {
+    use crate::campaign::shard::TaskOutcome;
+    use crate::campaign::CampaignApp;
+    use crate::config::{CollectiveImpl, Strategy};
+    use crate::detect::ValidationMode;
+    use crate::faultnet::NetFaultMode;
+    use crate::fleet::snapshot::read_wal;
+    use crate::fleet::wal::{encode_outcome, ShardMeta, Wal};
+    use crate::util::frame;
+
+    eprintln!("bench: persistence");
+    let n: usize = if opts.quick { 64 } else { 256 };
+    let iters = if opts.quick { 3 } else { 5 };
+    let dir = std::env::temp_dir().join(format!("sedar-bench-wal-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let outcomes: Vec<TaskOutcome> = (0..n)
+        .map(|index| TaskOutcome {
+            index,
+            scenario_id: (index % 64) as u32 + 1,
+            app: CampaignApp::Matmul,
+            strategy: Strategy::SysCkpt,
+            collectives: CollectiveImpl::PointToPoint,
+            validation: ValidationMode::Full,
+            netfault: NetFaultMode::None,
+            faults: 1,
+            completed: true,
+            restarts: 0,
+            injected: true,
+            correct: Some(true),
+            first_detection: None,
+            last_resume: None,
+            pass: true,
+            mismatches: vec![],
+            wall: std::time::Duration::ZERO,
+            metrics: Default::default(),
+        })
+        .collect();
+    let meta = ShardMeta {
+        seed: 7,
+        shard_index: 0,
+        shard_count: 1,
+        total_tasks: n as u64,
+        spec_hash: 0xBE9C_0009,
+    };
+    let mut payload = Vec::new();
+    for o in &outcomes {
+        encode_outcome(o, &mut payload);
+    }
+    let bytes = payload.len();
+
+    let mut rows = Vec::new();
+    let wal_path = dir.join("bench.wal");
+    rows.push((
+        bench(&format!("wal append+compact x{n}"), 1, iters, || {
+            let _ = std::fs::remove_file(&wal_path);
+            let (mut w, _) = Wal::open(&wal_path, &meta).unwrap();
+            for o in &outcomes {
+                w.append(o).unwrap();
+            }
+            w.finalize().unwrap();
+        }),
+        Some(bytes),
+    ));
+
+    let journal_path = dir.join("bench.journal");
+    let artifact_path = dir.join("bench.artifact");
+    rows.push((
+        bench(&format!("dual write (retired) x{n}"), 1, iters, || {
+            let mut j = std::fs::OpenOptions::new()
+                .create(true)
+                .write(true)
+                .truncate(true)
+                .open(&journal_path)
+                .unwrap();
+            let mut body = Vec::new();
+            for o in &outcomes {
+                body.clear();
+                encode_outcome(o, &mut body);
+                frame::write_record(&mut j, &body).unwrap();
+            }
+            let mut framed = Vec::with_capacity(payload.len() + 8);
+            frame::frame(&payload, &mut framed);
+            let mut a = std::fs::File::create(&artifact_path).unwrap();
+            std::io::Write::write_all(&mut a, &framed).unwrap();
+            a.sync_data().unwrap();
+        }),
+        Some(bytes * 2),
+    ));
+
+    // Leave a compacted WAL behind for the replay case (the last append
+    // iteration finalized it).
+    rows.push((
+        bench(&format!("wal replay x{n}"), 1, iters.max(10), || {
+            black_box(read_wal(&wal_path).unwrap().1.len());
+        }),
+        Some(bytes),
+    ));
+
+    let _ = std::fs::remove_dir_all(&dir);
+    for (s, b) in &rows {
+        jr.push_stats("persistence", s, *b);
+    }
+    print_section(opts.echo, "shard persistence (WAL vs retired dual write)", &rows);
+}
+
 /// End-to-end: the full injection campaign, one wall-clock number per
 /// clock mode. The wall-clock run is the paper-faithful baseline; the
 /// virtual-clock run is the same sweep (byte-identical report) with every
@@ -371,7 +497,7 @@ mod tests {
         let jr = run_suite(&opts).unwrap();
         let doc = jr.render();
         assert!(doc.contains("\"schema\": \"sedar-bench/1\""));
-        for group in ["msg_validation", "transport", "ckpt_frame", "faultnet"] {
+        for group in ["msg_validation", "transport", "ckpt_frame", "faultnet", "persistence"] {
             assert!(doc.contains(&format!("\"group\":\"{group}\"")), "missing {group}");
         }
         assert!(doc.contains("\"ns_per_mib\":"));

@@ -6,6 +6,17 @@
 //! wall-clock content, and every row derives from fields the shard computed
 //! from seeds and dataflow alone. Two sweeps with the same spec must render
 //! byte-identical reports whatever `--jobs` was.
+//!
+//! Two merge shapes live here:
+//!
+//! * [`merge`] — the one-shot barrier merge of complete outcome sets;
+//! * [`IncrementalMerger`] — the streaming union that consumes shard WAL
+//!   snapshots ([`crate::fleet::wal`]) *as they land*: the fleet supervisor
+//!   feeds it re-reads of live, still-growing logs, and the same object
+//!   renders the final report, so the live partial aggregate at completion
+//!   **is** the final report rather than merely agreeing with it.
+
+use std::collections::BTreeMap;
 
 use crate::config::{CollectiveImpl, Strategy};
 use crate::error::{FaultClass, Result, SedarError};
@@ -47,12 +58,163 @@ pub fn merge(shards: Vec<Vec<TaskOutcome>>) -> Result<Vec<TaskOutcome>> {
         let suffix = if dups.len() > 8 { ", …" } else { "" };
         return Err(SedarError::Config(format!(
             "merge: {} duplicate task index(es) across shards ({}{suffix}) — \
-             overlapping shard artifacts are rejected, not deduplicated",
+             overlapping shard slices are rejected, not deduplicated",
             dups.len(),
             shown.join(", ")
         )));
     }
     Ok(all)
+}
+
+/// Identity of a shard's slice of a sweep: which sweep it belongs to and
+/// which slice it claims. `total_tasks` is the canonical task-list length
+/// of the sweep (after filters), so a merge can tell "complete" from
+/// "partial"; `spec_hash` ([`crate::campaign::sweep_fingerprint`]) pins the
+/// exact cell list, so shards of same-seed, same-width but
+/// differently-filtered sweeps can never be silently mixed. Persisted as
+/// the header of every shard WAL ([`crate::fleet::wal`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardMeta {
+    pub seed: u64,
+    /// 0-based member index of the producing
+    /// [`crate::fleet::plan::ShardPlan`].
+    pub shard_index: u32,
+    pub shard_count: u32,
+    pub total_tasks: u64,
+    /// Fingerprint of the sweep's canonical task list (seed + filters).
+    pub spec_hash: u64,
+}
+
+impl ShardMeta {
+    /// Render the identity fields for merge diagnostics (shard shown
+    /// 1-based, as operators typed it).
+    pub fn describe(&self) -> String {
+        format!(
+            "seed={} shard={}/{} tasks={} fingerprint={:#018x}",
+            self.seed,
+            self.shard_index + 1,
+            self.shard_count,
+            self.total_tasks,
+            self.spec_hash
+        )
+    }
+}
+
+/// The streaming merge: a union of shard outcome sets that can be fed
+/// repeatedly while the shards are still running.
+///
+/// Each [`ingest`](IncrementalMerger::ingest) **replaces** that shard's
+/// previous contribution, so re-reading a live WAL is idempotent by
+/// construction — the supervisor tails growing logs without bookkeeping.
+/// Identity drift (another seed, task total or spec fingerprint) is
+/// rejected at ingest; *overlap* between different shards (two slices
+/// claiming one task index) is rejected when the union is materialized
+/// ([`merged`](IncrementalMerger::merged)), same policy as [`merge`].
+pub struct IncrementalMerger {
+    first: ShardMeta,
+    shards: BTreeMap<u32, Vec<TaskOutcome>>,
+}
+
+impl IncrementalMerger {
+    /// A merger expecting shards of `first`'s sweep (any slice of it).
+    pub fn new(first: ShardMeta) -> IncrementalMerger {
+        IncrementalMerger {
+            first,
+            shards: BTreeMap::new(),
+        }
+    }
+
+    /// Fold in one shard's current outcome set (complete or mid-flight),
+    /// replacing whatever that shard contributed before.
+    pub fn ingest(&mut self, meta: &ShardMeta, outcomes: Vec<TaskOutcome>) -> Result<()> {
+        if meta.seed != self.first.seed {
+            return Err(SedarError::Config(format!(
+                "merge: shard seeds differ ({} vs {}) — WALs from different sweeps",
+                self.first.seed, meta.seed
+            )));
+        }
+        if meta.total_tasks != self.first.total_tasks {
+            return Err(SedarError::Config(format!(
+                "merge: shard task totals differ ({} vs {}) — WALs from different \
+                 filters or specs",
+                self.first.total_tasks, meta.total_tasks
+            )));
+        }
+        if meta.spec_hash != self.first.spec_hash {
+            // Decode both headers into the error so the operator can see
+            // *which* identity component disagrees without a hex dump:
+            // same seed + same task total but different fingerprints means
+            // a different --filter set (the netfault axis included).
+            return Err(SedarError::Config(format!(
+                "merge: shard spec fingerprints differ — WALs were produced \
+                 under different --filter sets and cannot be combined\n  first: {}\n  other: {}",
+                self.first.describe(),
+                meta.describe(),
+            )));
+        }
+        self.shards.insert(meta.shard_index, outcomes);
+        Ok(())
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.first.seed
+    }
+
+    /// The sweep's canonical task count (the denominator of progress).
+    pub fn total_tasks(&self) -> u64 {
+        self.first.total_tasks
+    }
+
+    /// Pass verdict per distinct task index currently in the union (an
+    /// overlapping index is counted once here; it becomes a hard error
+    /// when the union is materialized).
+    fn verdicts(&self) -> BTreeMap<usize, bool> {
+        let mut v = BTreeMap::new();
+        for outcomes in self.shards.values() {
+            for o in outcomes {
+                v.entry(o.index).or_insert(o.pass);
+            }
+        }
+        v
+    }
+
+    /// Distinct task indices the union currently covers.
+    pub fn done(&self) -> usize {
+        self.verdicts().len()
+    }
+
+    pub fn passed(&self) -> usize {
+        self.verdicts().values().filter(|p| **p).count()
+    }
+
+    pub fn failed(&self) -> usize {
+        let v = self.verdicts();
+        v.len() - v.values().filter(|p| **p).count()
+    }
+
+    /// Whether the union covers the whole sweep.
+    pub fn is_complete(&self) -> bool {
+        self.done() as u64 == self.first.total_tasks
+    }
+
+    /// Per-shard coverage, ascending shard index: `(index, outcome count)`.
+    pub fn shard_progress(&self) -> Vec<(u32, usize)> {
+        self.shards.iter().map(|(i, o)| (*i, o.len())).collect()
+    }
+
+    /// Materialize the union in canonical task order, rejecting overlaps
+    /// (same policy and message as [`merge`]).
+    pub fn merged(&self) -> Result<Vec<TaskOutcome>> {
+        merge(self.shards.values().cloned().collect())
+    }
+
+    /// Render the current union as a campaign report. Mid-flight this is
+    /// the *partial* report (fewer rows than `total_tasks`); at completion
+    /// it is byte-identical to the single-process run's, because the rows
+    /// are a pure function of the outcome set.
+    pub fn report(&self) -> Result<CampaignReport> {
+        Ok(CampaignReport::new(self.first.seed, self.merged()?))
+    }
 }
 
 impl CampaignReport {
@@ -457,6 +619,92 @@ mod tests {
         let ra = CampaignReport::new(1, vec![a]).deterministic_report();
         let rb = CampaignReport::new(1, vec![b]).deterministic_report();
         assert_eq!(ra, rb);
+    }
+
+    fn meta(shard_index: u32) -> ShardMeta {
+        ShardMeta {
+            seed: 9,
+            shard_index,
+            shard_count: 2,
+            total_tasks: 4,
+            spec_hash: 0xAAAA,
+        }
+    }
+
+    #[test]
+    fn incremental_merger_streams_idempotently_to_the_final_report() {
+        let mut m = IncrementalMerger::new(meta(0));
+        assert_eq!((m.done(), m.passed(), m.failed()), (0, 0, 0));
+        assert!(!m.is_complete());
+
+        // Shard 0 lands mid-flight with one outcome…
+        m.ingest(&meta(0), vec![outcome(0, true)]).unwrap();
+        assert_eq!(m.done(), 1);
+        let partial = m.report().unwrap().deterministic_report();
+
+        // …then again with more: a live re-read REPLACES, never duplicates.
+        m.ingest(&meta(0), vec![outcome(0, true), outcome(2, false)])
+            .unwrap();
+        m.ingest(&meta(0), vec![outcome(0, true), outcome(2, false)])
+            .unwrap();
+        m.ingest(&meta(1), vec![outcome(1, true), outcome(3, true)])
+            .unwrap();
+        assert_eq!((m.done(), m.passed(), m.failed()), (4, 3, 1));
+        assert!(m.is_complete());
+        assert_eq!(m.shard_progress(), vec![(0, 2), (1, 2)]);
+
+        // The streaming union at completion IS the barrier merge's report,
+        // and every row of the mid-flight partial is a row of the final.
+        let final_report = m.report().unwrap().deterministic_report();
+        let barrier = CampaignReport::from_shards(
+            9,
+            vec![
+                vec![outcome(0, true), outcome(2, false)],
+                vec![outcome(1, true), outcome(3, true)],
+            ],
+        )
+        .unwrap()
+        .deterministic_report();
+        assert_eq!(final_report, barrier);
+        let row_of = |r: &str, needle: &str| {
+            r.lines().find(|l| l.contains(needle)).map(String::from)
+        };
+        assert_eq!(
+            row_of(&partial, "| 0 "),
+            row_of(&final_report, "| 0 "),
+            "partial rows must be a prefix of the final report's"
+        );
+    }
+
+    #[test]
+    fn incremental_merger_rejects_identity_drift_and_overlap() {
+        let mut m = IncrementalMerger::new(meta(0));
+        m.ingest(&meta(0), vec![outcome(0, true)]).unwrap();
+
+        let err = m
+            .ingest(&ShardMeta { seed: 10, ..meta(1) }, vec![])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("seeds differ"), "{err}");
+        let err = m
+            .ingest(&ShardMeta { total_tasks: 5, ..meta(1) }, vec![])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("task totals differ"), "{err}");
+        // Fingerprint drift names BOTH decoded headers.
+        let err = m
+            .ingest(&ShardMeta { spec_hash: 0xBBBB, ..meta(1) }, vec![])
+            .unwrap_err()
+            .to_string();
+        for needle in ["0x000000000000aaaa", "0x000000000000bbbb", "shard=1/2", "shard=2/2"] {
+            assert!(err.contains(needle), "missing {needle}: {err}");
+        }
+
+        // Two DIFFERENT shards claiming one index: accepted at ingest
+        // (live tails may be mid-write), rejected when materialized.
+        m.ingest(&meta(1), vec![outcome(0, true)]).unwrap();
+        let err = m.merged().unwrap_err().to_string();
+        assert!(err.contains("duplicate task index"), "{err}");
     }
 
     #[test]

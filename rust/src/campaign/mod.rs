@@ -49,9 +49,10 @@ use crate::workfault::{self, Scenario};
 
 /// One enum axis of the sweep, described once: its filter key, the full
 /// decodable value domain (a superset of the default sweep set — e.g. the
-/// strategy axis can decode `Baseline` from old artifacts even though the
-/// sweep never schedules it), and the ordinal/parse/label functions every
-/// consumer (seed folding, artifact codecs, filters, report rows) shares.
+/// strategy axis can decode `Baseline` from old persisted records even
+/// though the sweep never schedules it), and the ordinal/parse/label
+/// functions every consumer (seed folding, WAL codecs, filters, report
+/// rows) shares.
 ///
 /// Adding an axis value means extending the enum, its `parse`/`label`
 /// arms and the `domain` slice — the roundtrip test below checks nothing
@@ -62,7 +63,7 @@ pub struct Axis<T: Copy + PartialEq + 'static> {
     /// Every decodable value, in ordinal order.
     pub domain: &'static [T],
     /// Stable ordinal, folded into per-task seeds and persisted in shard
-    /// artifacts — frozen forever once released.
+    /// WALs — frozen forever once released.
     pub ordinal: fn(T) -> u64,
     /// Parse a filter/CLI spelling.
     pub parse: fn(&str) -> Result<T>,
@@ -71,7 +72,7 @@ pub struct Axis<T: Copy + PartialEq + 'static> {
 }
 
 impl<T: Copy + PartialEq + 'static> Axis<T> {
-    /// Inverse of `ordinal` (artifact decoding): scans `domain`.
+    /// Inverse of `ordinal` (WAL record decoding): scans `domain`.
     pub fn from_ordinal(&self, ord: u64) -> Option<T> {
         self.domain.iter().copied().find(|v| (self.ordinal)(*v) == ord)
     }
@@ -110,7 +111,7 @@ impl CampaignApp {
     }
 
     /// Stable ordinal, folded into the per-task seed and persisted in shard
-    /// artifacts ([`crate::fleet::artifact`]).
+    /// WALs ([`crate::fleet::wal`]).
     pub fn ordinal(self) -> u64 {
         match self {
             CampaignApp::Matmul => 0,
@@ -119,7 +120,7 @@ impl CampaignApp {
         }
     }
 
-    /// Inverse of [`CampaignApp::ordinal`] (artifact decoding).
+    /// Inverse of [`CampaignApp::ordinal`] (WAL record decoding).
     pub fn from_ordinal(ord: u64) -> Option<CampaignApp> {
         APP_AXIS.from_ordinal(ord)
     }
@@ -166,8 +167,9 @@ pub static APP_AXIS: Axis<CampaignApp> = Axis {
     label: CampaignApp::label,
 };
 
-/// The strategy axis. The domain includes `Baseline` (old artifacts may
-/// encode it) even though the sweep set [`STRATEGIES`] excludes it.
+/// The strategy axis. The domain includes `Baseline` (old persisted
+/// records may encode it) even though the sweep set [`STRATEGIES`]
+/// excludes it.
 pub static STRATEGY_AXIS: Axis<Strategy> = Axis {
     key: "strategy",
     domain: &[
@@ -221,7 +223,7 @@ pub fn strategy_ordinal(s: Strategy) -> u64 {
     }
 }
 
-/// Inverse of [`strategy_ordinal`] (artifact decoding).
+/// Inverse of [`strategy_ordinal`] (WAL record decoding).
 pub fn strategy_from_ordinal(ord: u64) -> Option<Strategy> {
     STRATEGY_AXIS.from_ordinal(ord)
 }
@@ -239,7 +241,7 @@ pub fn collective_ordinal(c: CollectiveImpl) -> u64 {
     }
 }
 
-/// Inverse of [`collective_ordinal`] (artifact decoding).
+/// Inverse of [`collective_ordinal`] (WAL record decoding).
 pub fn collective_from_ordinal(ord: u64) -> Option<CollectiveImpl> {
     COLLECTIVES_AXIS.from_ordinal(ord)
 }
@@ -257,7 +259,7 @@ pub fn validation_ordinal(v: ValidationMode) -> u64 {
     }
 }
 
-/// Inverse of [`validation_ordinal`] (artifact decoding).
+/// Inverse of [`validation_ordinal`] (WAL record decoding).
 pub fn validation_from_ordinal(ord: u64) -> Option<ValidationMode> {
     VALIDATION_AXIS.from_ordinal(ord)
 }
@@ -272,7 +274,7 @@ pub fn netfault_ordinal(m: NetFaultMode) -> u64 {
     m.ordinal() as u64
 }
 
-/// Inverse of [`netfault_ordinal`] (artifact decoding).
+/// Inverse of [`netfault_ordinal`] (WAL record decoding).
 pub fn netfault_from_ordinal(ord: u64) -> Option<NetFaultMode> {
     NETFAULT_AXIS.from_ordinal(ord)
 }
@@ -333,7 +335,7 @@ pub fn task_seed(
 ) -> u64 {
     // Domain tag bumped (…04) when the netfault axis joined the fold set
     // (…03 added collectives, …02 validation/faults), so cross-version
-    // artifacts can never alias.
+    // persisted records can never alias.
     let h = fold(campaign_seed, 0x5EDA_2C04);
     let h = fold(h, scenario_id as u64 + 1);
     let h = fold(h, app.ordinal() + 1);
@@ -587,12 +589,12 @@ pub fn build_tasks(spec: &CampaignSpec) -> Vec<CampaignTask> {
 /// Order-sensitive fingerprint of a sweep's canonical task list: folds the
 /// campaign seed and every task's cell coordinates. Two sweeps agree on
 /// this value iff they agree on seed, filters and axis order — the
-/// identity a shard artifact and a resume journal carry so `sedar merge`
-/// and `--journal` can refuse to mix different sweeps even when seed and
-/// task counts coincide.
+/// identity every shard WAL header carries so `sedar merge` and WAL
+/// resume can refuse to mix different sweeps even when seed and task
+/// counts coincide.
 pub fn sweep_fingerprint(seed: u64, tasks: &[CampaignTask]) -> u64 {
     // Domain tag bumped (…E9) when the netfault axis joined the fold set,
-    // so v3 artifacts can never alias a v4 fingerprint.
+    // so v3-era files can never alias a current fingerprint.
     let mut h = fold(seed, 0x5EDA_F1E9);
     for t in tasks {
         h = fold(h, t.index as u64 + 1);

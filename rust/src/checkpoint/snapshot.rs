@@ -17,9 +17,9 @@
 //! replica-vs-replica comparison can catch it, which is the whole point of
 //! §3.3).
 //!
-//! Beyond checkpoints, the same frame wraps the fleet's durable shard
-//! artifacts ([`crate::fleet::artifact`]) — one codec guards every byte the
-//! system persists.
+//! Checkpoint payloads keep this SDCK frame; the fleet's durable state
+//! moved to the write-ahead log ([`crate::fleet::wal`]), whose records ride
+//! the shared length+CRC framing in [`crate::util::frame`].
 //!
 //! Writes are **single-pass**: [`encode_frame`] emits the body while
 //! folding CRC-32 (and, for validated user checkpoints, SHA-256 of the

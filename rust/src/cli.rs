@@ -13,10 +13,10 @@
 //! fans the 64-scenario workfault × apps × strategies over a worker pool;
 //! the same `--seed` yields a byte-identical report for any `--jobs`.
 //! Fleet mode ([`crate::fleet`]) rides the same grammar: `--shard i/N`
-//! runs one deterministic slice, `--out`/`--journal` make it durable and
-//! resumable, `--status-port` serves live progress, and the `merge`
-//! subcommand (`sedar merge s1.bin s2.bin`) recombines shard artifacts
-//! into the byte-identical full report. `sedar bench --json` emits the
+//! runs one deterministic slice, `--wal` makes it durable and resumable
+//! (one write-ahead log per shard), `--status-port` serves live progress,
+//! and the `merge` subcommand (`sedar merge s1.wal s2.wal`) recombines
+//! shard WALs into the byte-identical full report. `sedar bench --json` emits the
 //! machine-readable perf trajectory ([`crate::bench`]). The full flag
 //! list is in the `HELP` text of `src/main.rs`.
 

@@ -101,8 +101,8 @@ impl NetFaultMode {
         }
     }
 
-    /// Stable ordinal, persisted in shard artifacts/journals (v4) and
-    /// folded into task seeds — frozen once released.
+    /// Stable ordinal, persisted in shard WAL records and folded into
+    /// task seeds — frozen once released.
     pub fn ordinal(self) -> u8 {
         match self {
             NetFaultMode::None => 0,
@@ -114,7 +114,7 @@ impl NetFaultMode {
         }
     }
 
-    /// Inverse of [`NetFaultMode::ordinal`] (artifact decoding).
+    /// Inverse of [`NetFaultMode::ordinal`] (WAL record decoding).
     pub fn from_ordinal(ord: u8) -> Option<NetFaultMode> {
         NetFaultMode::ALL.iter().copied().find(|m| m.ordinal() == ord)
     }

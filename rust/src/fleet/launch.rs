@@ -2,30 +2,35 @@
 //!
 //! The paper's pitch is detection plus *automatic* recovery (§1): a failed
 //! replica is noticed and restarted from durable state without an operator
-//! in the loop. The fleet layer already had the durable halves — shard
-//! artifacts, CRC'd resume journals, live status endpoints — but a crashed
+//! in the loop. The fleet layer already had the durable half — each
+//! shard's write-ahead log, plus live status endpoints — but a crashed
 //! shard still needed a human to notice and re-run it. This module closes
 //! that loop, applying SEDAR's own recovery discipline (level 2:
 //! redundancy + checkpointing beats re-execution from scratch) to the
 //! validation campaign itself:
 //!
 //! * [`run_launch`] spawns `N` `sedar campaign --shard i/N` child
-//!   processes, each with its own journal, artifact path and OS-assigned
-//!   status port under one run directory (`--status-addr-file` is the
-//!   port-discovery handshake);
+//!   processes, each with its own WAL and OS-assigned status port under
+//!   one run directory (`--status-addr-file` is the port-discovery
+//!   handshake);
 //! * the supervisor polls each child's `/json` status snapshot and exit
-//!   code; a child that **dies** (any exit before its artifact is
-//!   complete) or **stalls** (its monotone `heartbeat` counter stops
+//!   code; a child that **dies** (any exit before its WAL holds its whole
+//!   slice) or **stalls** (its monotone `heartbeat` counter stops
 //!   advancing for longer than the stall timeout) is killed if needed and
-//!   relaunched — journal resume makes every relaunch skip the tasks that
+//!   relaunched — WAL replay makes every relaunch skip the tasks that
 //!   already finished, so the retry cost is bounded by the work actually
 //!   lost;
 //! * restarts are bounded per shard; a shard that exhausts its budget
 //!   fails the whole launch with a pointer to its log;
-//! * on completion the shard artifacts are auto-merged into the final
-//!   report — byte-identical to the single-process run with the same
-//!   `--seed` (`rust/tests/fleet_launch.rs` proves this survives a
-//!   mid-sweep SIGKILL).
+//! * while shards run, the supervisor re-reads each WAL as it grows and
+//!   feeds a **live partial aggregate** (one
+//!   [`IncrementalMerger`] across the fleet) — served over the optional
+//!   launch-level status endpoint (`--status-port`), and *reused as the
+//!   final merge* when the fleet completes, so the live aggregate at
+//!   completion and the final report are the same object by construction
+//!   — byte-identical to the single-process run with the same `--seed`
+//!   (`rust/tests/fleet_launch.rs` proves this survives a mid-sweep
+//!   SIGKILL).
 //!
 //! The stall detector compares heartbeats across polls: the counter ticks
 //! once per finished task, so "no advance" means the worker pool is wedged
@@ -37,14 +42,18 @@ use std::fs::OpenOptions;
 use std::net::SocketAddr;
 use std::path::{Path, PathBuf};
 use std::process::{Child, Command, Stdio};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::campaign::aggregate::IncrementalMerger;
+use crate::campaign::shard::TaskOutcome;
 use crate::campaign::{build_tasks, sweep_fingerprint, CampaignReport, CampaignSpec};
 use crate::error::{Result, SedarError};
 
-use super::artifact::{self, ShardMeta};
 use super::plan::ShardPlan;
-use super::status::http_get;
+use super::snapshot::read_wal;
+use super::status::{http_get, StatusServer, StatusSource};
+use super::wal::ShardMeta;
 
 /// Per-poll timeout for one status GET (children live on loopback — a
 /// healthy endpoint answers in microseconds, a dead one refuses at once).
@@ -64,8 +73,8 @@ pub struct LaunchOptions {
     pub filter: Option<String>,
     /// Campaign `--scenario` shorthand (forwarded verbatim).
     pub scenario: Option<String>,
-    /// Run directory: journals, artifacts, logs, pid/addr files and the
-    /// children's working dirs all live here.
+    /// Run directory: WALs, logs, pid/addr files and the children's
+    /// working dirs all live here.
     pub dir: PathBuf,
     /// Relaunch budget per shard; exceeding it fails the launch.
     pub max_restarts: usize,
@@ -79,6 +88,13 @@ pub struct LaunchOptions {
     /// Suppress the live aggregate progress line (restart notices and the
     /// final summary still print).
     pub quiet: bool,
+    /// Serve the fleet-wide live partial aggregate on `127.0.0.1:port`
+    /// while shards run (port 0 = OS-assigned). This is the *union* view:
+    /// what `sedar merge --allow-partial` over the live WALs would render.
+    pub status_port: Option<u16>,
+    /// After the launch-level status server binds, atomically write its
+    /// actual address here (same handshake the children use).
+    pub status_addr_file: Option<PathBuf>,
 }
 
 impl Default for LaunchOptions {
@@ -95,6 +111,8 @@ impl Default for LaunchOptions {
             poll_interval: Duration::from_millis(200),
             bin: None,
             quiet: false,
+            status_port: None,
+            status_addr_file: None,
         }
     }
 }
@@ -146,6 +164,142 @@ impl LaunchReport {
     }
 }
 
+/// The fleet-wide live partial aggregate: one [`IncrementalMerger`] re-fed
+/// from each shard's WAL as it grows.
+///
+/// Ingest is idempotent per shard (a re-read *replaces* that shard's
+/// outcome set), so the supervisor can refresh as often as it likes; the
+/// WAL reader is lenient about a racing writer's torn tail, so the refresh
+/// never needs a lock against the children. When the fleet completes, the
+/// **same** merger renders the final report — the "live aggregate at
+/// completion equals the final report" invariant holds by construction,
+/// not by comparison.
+struct FleetAggregate {
+    total: usize,
+    merger: Mutex<IncrementalMerger>,
+}
+
+impl FleetAggregate {
+    fn new(first: ShardMeta, total: usize) -> FleetAggregate {
+        FleetAggregate {
+            total,
+            merger: Mutex::new(IncrementalMerger::new(first)),
+        }
+    }
+
+    /// Best-effort live refresh from one shard's WAL. A file that is
+    /// missing, mid-creation or identity-drifted is skipped — the strict
+    /// final ingest surfaces real problems with real errors.
+    fn refresh(&self, path: &Path) {
+        if let Ok((meta, outcomes)) = read_wal(path) {
+            let _ = self.merger.lock().unwrap().ingest(&meta, outcomes);
+        }
+    }
+
+    /// Strict ingest (the final-merge path): every error is fatal.
+    fn ingest(&self, meta: &ShardMeta, outcomes: Vec<TaskOutcome>) -> Result<()> {
+        self.merger.lock().unwrap().ingest(meta, outcomes)
+    }
+
+    /// Render the final report, requiring full coverage.
+    fn final_report(&self) -> Result<CampaignReport> {
+        let merger = self.merger.lock().unwrap();
+        if merger.done() != self.total {
+            return Err(SedarError::Config(format!(
+                "fleet launch: merged union covers {} of {} task(s) — \
+                 a shard WAL is incomplete",
+                merger.done(),
+                self.total
+            )));
+        }
+        merger.report()
+    }
+}
+
+impl StatusSource for FleetAggregate {
+    fn text_snapshot(&self) -> String {
+        let m = self.merger.lock().unwrap();
+        let mut s = format!(
+            "SEDAR fleet launch seed {}\ndone {}/{} (pass {}, fail {}) — {}\n",
+            m.seed(),
+            m.done(),
+            self.total,
+            m.passed(),
+            m.failed(),
+            if m.done() == self.total {
+                "complete"
+            } else {
+                "partial union of live WALs"
+            }
+        );
+        for (shard, done) in m.shard_progress() {
+            s.push_str(&format!("  shard {}: {done} outcome(s)\n", shard + 1));
+        }
+        s
+    }
+
+    fn json_snapshot(&self) -> String {
+        let m = self.merger.lock().unwrap();
+        let shards: Vec<String> = m
+            .shard_progress()
+            .iter()
+            .map(|(shard, done)| format!("{{\"shard\":{},\"done\":{done}}}", shard + 1))
+            .collect();
+        format!(
+            "{{\"fleet\":\"launch\",\"seed\":{},\"total\":{},\"done\":{},\
+             \"passed\":{},\"failed\":{},\"complete\":{},\"shards\":[{}]}}",
+            m.seed(),
+            self.total,
+            m.done(),
+            m.passed(),
+            m.failed(),
+            m.done() == self.total,
+            shards.join(",")
+        )
+    }
+
+    fn prometheus_snapshot(&self) -> String {
+        let m = self.merger.lock().unwrap();
+        let mut s = String::new();
+        let mut metric = |name: &str, kind: &str, help: &str, value: String| {
+            s.push_str(&format!(
+                "# HELP {name} {help}\n# TYPE {name} {kind}\n{name} {value}\n"
+            ));
+        };
+        metric(
+            "sedar_fleet_tasks_total",
+            "gauge",
+            "Tasks in the whole sweep across all shards.",
+            self.total.to_string(),
+        );
+        metric(
+            "sedar_fleet_tasks_done_total",
+            "counter",
+            "Distinct finished tasks across the live WAL union.",
+            m.done().to_string(),
+        );
+        metric(
+            "sedar_fleet_tasks_passed_total",
+            "counter",
+            "Finished tasks that passed their cell's oracle.",
+            m.passed().to_string(),
+        );
+        metric(
+            "sedar_fleet_tasks_failed_total",
+            "counter",
+            "Finished tasks that mismatched their cell's oracle.",
+            m.failed().to_string(),
+        );
+        metric(
+            "sedar_fleet_complete",
+            "gauge",
+            "1 once the union covers every task of the sweep.",
+            if m.done() == self.total { "1" } else { "0" }.to_string(),
+        );
+        s
+    }
+}
+
 /// Shard-level scalars of one `/json` status snapshot.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 struct Snapshot {
@@ -185,8 +339,8 @@ impl Snapshot {
 
 /// Where one shard's files live under the launch directory.
 struct ShardPaths {
-    artifact: PathBuf,
-    journal: PathBuf,
+    /// The shard's single durable file: its write-ahead log.
+    wal: PathBuf,
     addr: PathBuf,
     pid: PathBuf,
     log: PathBuf,
@@ -196,8 +350,7 @@ struct ShardPaths {
 impl ShardPaths {
     fn new(dir: &Path, member: usize) -> ShardPaths {
         ShardPaths {
-            artifact: dir.join(format!("shard-{member}.bin")),
-            journal: dir.join(format!("shard-{member}.journal")),
+            wal: dir.join(format!("shard-{member}.wal")),
             addr: dir.join(format!("shard-{member}.addr")),
             pid: dir.join(format!("shard-{member}.pid")),
             log: dir.join(format!("shard-{member}.log")),
@@ -227,6 +380,9 @@ struct ShardProc {
     last_heartbeat: Option<u64>,
     last_advance: Instant,
     finished: bool,
+    /// Last observed WAL byte length — the cheap change detector that
+    /// gates re-reading the file into the live aggregate.
+    wal_len: u64,
 }
 
 impl Drop for ShardProc {
@@ -240,9 +396,9 @@ impl Drop for ShardProc {
 }
 
 impl ShardProc {
-    /// Spawn (or respawn) this shard's `sedar campaign` child. The journal
-    /// and artifact paths are stable across incarnations — that is what
-    /// makes a relaunch a *resume*.
+    /// Spawn (or respawn) this shard's `sedar campaign` child. The WAL
+    /// path is stable across incarnations — that is what makes a relaunch
+    /// a *resume*.
     fn spawn(&mut self, ctx: &SpawnCtx<'_>) -> Result<()> {
         let _ = std::fs::remove_file(&self.paths.addr);
         let log = OpenOptions::new()
@@ -257,10 +413,8 @@ impl ShardProc {
             .arg(ctx.jobs.to_string())
             .arg("--shard")
             .arg(self.plan.label())
-            .arg("--out")
-            .arg(&self.paths.artifact)
-            .arg("--journal")
-            .arg(&self.paths.journal)
+            .arg("--wal")
+            .arg(&self.paths.wal)
             .arg("--status-port")
             .arg("0")
             .arg("--status-addr-file")
@@ -298,11 +452,11 @@ impl ShardProc {
         Ok(())
     }
 
-    /// Is this shard's durable artifact a complete record of its slice?
-    /// (The completion criterion: exit codes alone cannot distinguish "died
-    /// mid-sweep" from "finished but the report verdict failed".)
-    fn artifact_complete(&self) -> bool {
-        match artifact::read_artifact(&self.paths.artifact) {
+    /// Is this shard's WAL a complete record of its slice? (The completion
+    /// criterion: exit codes alone cannot distinguish "died mid-sweep"
+    /// from "finished but the report verdict failed".)
+    fn wal_complete(&self) -> bool {
+        match read_wal(&self.paths.wal) {
             Ok((meta, outcomes)) => meta == self.expect && outcomes.len() == self.owned,
             Err(_) => false,
         }
@@ -321,7 +475,7 @@ impl ShardProc {
         }
         self.restarts += 1;
         eprintln!(
-            "fleet: shard {} {why} — relaunch {}/{} (journal resume skips finished tasks)",
+            "fleet: shard {} {why} — relaunch {}/{} (WAL replay skips finished tasks)",
             self.plan.label(),
             self.restarts,
             ctx.opts.max_restarts
@@ -338,7 +492,7 @@ impl ShardProc {
         };
         if let Some(status) = exited {
             self.child = None;
-            if self.artifact_complete() {
+            if self.wal_complete() {
                 self.finished = true;
                 if !status.success() {
                     eprintln!(
@@ -396,7 +550,7 @@ fn progress_line(fleet: &[ShardProc], total: usize) -> String {
             Some(s) => (s.done, s.passed, s.failed),
             None => (0, 0, 0),
         };
-        // A finished shard's last snapshot can be stale; its artifact is
+        // A finished shard's last snapshot can be stale; its WAL is
         // complete by definition.
         let d = if p.finished { p.owned } else { d };
         done += d;
@@ -427,7 +581,7 @@ pub fn run_launch(opts: &LaunchOptions) -> Result<LaunchReport> {
         ));
     }
     // Build the spec exactly as every child will, so the supervisor knows
-    // each slice's size and identity (and can verify artifacts against the
+    // each slice's size and identity (and can verify WALs against the
     // same sweep fingerprint the children stamp into them).
     let mut spec = CampaignSpec::new(opts.seed);
     if let Some(f) = &opts.filter {
@@ -478,10 +632,34 @@ pub fn run_launch(opts: &LaunchOptions) -> Result<LaunchReport> {
                 last_heartbeat: None,
                 last_advance: Instant::now(),
                 finished: false,
+                wal_len: 0,
                 plan,
             }
         })
         .collect();
+
+    // The live partial aggregate spans the whole fleet; seed its identity
+    // from shard 1's expected header (every shard must match it anyway).
+    let aggregate = Arc::new(FleetAggregate::new(fleet[0].expect, total));
+    let _agg_server: Option<StatusServer> = match opts.status_port {
+        None => None,
+        Some(port) => {
+            let server = StatusServer::spawn(port, aggregate.clone())?;
+            eprintln!(
+                "fleet status endpoint: http://{}/ (and /json)",
+                server.addr()
+            );
+            if let Some(path) = &opts.status_addr_file {
+                // Write-then-rename: a watcher polling for this file must
+                // never observe a half-written address.
+                let tmp = path.with_extension("addr-tmp");
+                std::fs::write(&tmp, format!("{}\n", server.addr()))?;
+                std::fs::rename(&tmp, path)?;
+            }
+            Some(server)
+        }
+    };
+
     let ctx = SpawnCtx {
         opts,
         bin: &bin,
@@ -506,6 +684,17 @@ pub fn run_launch(opts: &LaunchOptions) -> Result<LaunchReport> {
             }
             all_done = false;
             p.step(&ctx)?;
+            // Feed the live aggregate whenever the shard's WAL grew. The
+            // metadata probe is cheap; the WAL reader tolerates a racing
+            // writer's torn tail, so no coordination with the child is
+            // needed.
+            let len = std::fs::metadata(&p.paths.wal)
+                .map(|m| m.len())
+                .unwrap_or(0);
+            if len != p.wal_len {
+                p.wal_len = len;
+                aggregate.refresh(&p.paths.wal);
+            }
         }
         if all_done {
             break;
@@ -521,21 +710,17 @@ pub fn run_launch(opts: &LaunchOptions) -> Result<LaunchReport> {
         std::thread::sleep(opts.poll_interval);
     }
 
-    // Every slice is durable: auto-merge into the final report. The merge
-    // layer re-verifies sweep identity and rejects overlaps; the coverage
-    // check below is the completeness half.
-    let mut shard_files = Vec::with_capacity(fleet.len());
+    // Every slice is durable. The final merge is one last STRICT ingest of
+    // each WAL into the same merger the live aggregate used all along —
+    // identity drift and overlap are re-verified here with real errors,
+    // and the coverage check below is the completeness half. Because it is
+    // the same object, "live aggregate at completion" and "final report"
+    // cannot disagree.
     for p in &fleet {
-        shard_files.push(artifact::read_artifact(&p.paths.artifact)?);
+        let (meta, outcomes) = read_wal(&p.paths.wal)?;
+        aggregate.ingest(&meta, outcomes)?;
     }
-    let (seed, total_tasks, outcomes) = artifact::merge_artifacts(shard_files)?;
-    if outcomes.len() as u64 != total_tasks {
-        return Err(SedarError::Config(format!(
-            "fleet launch: merged union covers {} of {total_tasks} task(s) — \
-             a shard artifact is incomplete",
-            outcomes.len()
-        )));
-    }
+    let report = aggregate.final_report()?;
     let stats = fleet
         .iter()
         .map(|p| ShardStat {
@@ -548,7 +733,7 @@ pub fn run_launch(opts: &LaunchOptions) -> Result<LaunchReport> {
         .collect();
     Ok(LaunchReport {
         shards: stats,
-        report: CampaignReport::new(seed, outcomes),
+        report,
     })
 }
 
@@ -627,6 +812,7 @@ mod tests {
             last_heartbeat: None,
             last_advance: Instant::now(),
             finished,
+            wal_len: 0,
         };
         let fleet = vec![
             mk(
@@ -649,5 +835,61 @@ mod tests {
         assert!(line.contains("1/2:3/5(r1)"), "got: {line}");
         assert!(line.contains("2/2:5/5"), "got: {line}");
         assert!(line.contains("1 restart(s)"), "got: {line}");
+    }
+
+    #[test]
+    fn fleet_aggregate_serves_partial_then_complete_unions() {
+        let meta = |shard_index: u32| ShardMeta {
+            seed: 9,
+            shard_index,
+            shard_count: 2,
+            total_tasks: 2,
+            spec_hash: 0xABCD,
+        };
+        let outcome = |index: usize, pass: bool| TaskOutcome {
+            index,
+            scenario_id: index as u32,
+            app: crate::campaign::CampaignApp::Matmul,
+            strategy: crate::config::Strategy::SysCkpt,
+            collectives: crate::config::CollectiveImpl::PointToPoint,
+            validation: crate::detect::ValidationMode::Full,
+            netfault: crate::faultnet::NetFaultMode::None,
+            faults: 1,
+            completed: true,
+            restarts: 0,
+            injected: true,
+            correct: Some(pass),
+            first_detection: None,
+            last_resume: None,
+            pass,
+            mismatches: vec![],
+            wall: Duration::ZERO,
+            metrics: Default::default(),
+        };
+
+        let agg = FleetAggregate::new(meta(0), 2);
+        agg.ingest(&meta(0), vec![outcome(0, true)]).unwrap();
+
+        // Mid-flight: a well-formed partial union.
+        let json = agg.json_snapshot();
+        assert!(json.contains("\"fleet\":\"launch\""), "got: {json}");
+        assert!(json.contains("\"done\":1"), "got: {json}");
+        assert!(json.contains("\"total\":2"), "got: {json}");
+        assert!(json.contains("\"complete\":false"), "got: {json}");
+        let text = agg.text_snapshot();
+        assert!(text.contains("partial union"), "got: {text}");
+        assert!(agg.final_report().is_err(), "partial must not finalize");
+
+        // Completion: the same merger renders the final report.
+        agg.ingest(&meta(1), vec![outcome(1, false)]).unwrap();
+        let json = agg.json_snapshot();
+        assert!(json.contains("\"complete\":true"), "got: {json}");
+        assert!(json.contains("\"failed\":1"), "got: {json}");
+        let prom = agg.prometheus_snapshot();
+        assert!(prom.contains("sedar_fleet_complete 1"), "got: {prom}");
+        assert!(prom.contains("sedar_fleet_tasks_done_total 2"), "got: {prom}");
+        let report = agg.final_report().unwrap();
+        assert_eq!(report.total(), 2);
+        assert_eq!(report.failed(), 1);
     }
 }

@@ -9,30 +9,31 @@
 //! * [`plan`] — deterministic `i/N` partitions of the canonical task list
 //!   (pure round-robin over task indices: no coordination, no shared
 //!   state);
-//! * [`artifact`] — each shard's [`TaskOutcome`]s serialized through the
-//!   checkpoint frame codec into a durable, CRC-guarded file that
-//!   `sedar merge` later combines (overlaps rejected, never
-//!   double-counted);
-//! * [`journal`] — the sweep checkpointing itself, SEDAR-level-2 style: a
-//!   killed shard re-run recovers finished tasks from its journal and
-//!   skips straight to the remainder;
+//! * [`wal`] — **one** durable file per shard: an append-only,
+//!   CRC-framed write-ahead log (`SDWL`) that records each
+//!   [`TaskOutcome`] as it finishes, SEDAR-level-2 style — the sweep
+//!   checkpointing itself;
+//! * [`snapshot`] — the WAL read side: periodic compaction snapshots (the
+//!   watermark readers resume from), the single lenient replay path that
+//!   resume, merge, completeness probing and live aggregation all share,
+//!   and the streaming shard merge;
 //! * [`status`] — a std-only TCP endpoint serving live progress snapshots
 //!   for long sweeps.
 //!
 //! The end-to-end invariant (enforced by
 //! `rust/tests/fleet_shard_equivalence.rs` and the CI sharded-sweep job):
-//! splitting a sweep into any `N` shards, merging the artifacts and
-//! rendering produces a report **byte-identical** to the single-process
-//! run with the same `--seed`. Task outcomes are pure functions of task
-//! seeds, and task seeds never see shard geometry — sharding is pure
-//! partition, so redundancy plus durable intermediate state turns one
-//! validation run into a guarantee that survives interruption.
+//! splitting a sweep into any `N` shards, merging the WALs and rendering
+//! produces a report **byte-identical** to the single-process run with the
+//! same `--seed`. Task outcomes are pure functions of task seeds, and task
+//! seeds never see shard geometry — sharding is pure partition, so
+//! redundancy plus durable intermediate state turns one validation run
+//! into a guarantee that survives interruption.
 
-pub mod artifact;
-pub mod journal;
 pub mod launch;
 pub mod plan;
+pub mod snapshot;
 pub mod status;
+pub mod wal;
 
 use std::path::PathBuf;
 use std::sync::{Arc, Mutex};
@@ -44,14 +45,13 @@ use crate::campaign::{
 };
 use crate::error::{Result, SedarError};
 
-use artifact::ShardMeta;
-use journal::Journal;
 use plan::ShardPlan;
 use status::{StatusBoard, StatusServer};
+use wal::{ShardMeta, Wal};
 
 /// Fsync the directory holding `path`, so a crash right after a file is
 /// created (or renamed into place) cannot lose the *directory entry* —
-/// per-record `sync_data` protects a journal's bytes, but until the
+/// per-record `sync_data` protects the WAL's bytes, but until the
 /// parent directory is synced the file's name itself is volatile. Unix
 /// only; elsewhere this is a no-op (NTFS journals metadata itself).
 pub(crate) fn sync_parent_dir(path: &std::path::Path) -> Result<()> {
@@ -76,11 +76,12 @@ pub(crate) fn sync_parent_dir(path: &std::path::Path) -> Result<()> {
 pub struct FleetOptions {
     /// This member's slice (`None` = the full sweep, i.e. plan `1/1`).
     pub plan: Option<ShardPlan>,
-    /// Journal completed tasks here; if the file already holds this
-    /// sweep's records, resume from them instead of re-executing.
-    pub journal_path: Option<PathBuf>,
-    /// Write the shard's durable artifact here when the slice completes.
-    pub artifact_path: Option<PathBuf>,
+    /// The shard's write-ahead log: completed tasks are appended here as
+    /// they finish, and if the file already holds this sweep's records the
+    /// run resumes from them instead of re-executing. One file is the
+    /// shard's entire durable footprint — resume, merge and the live
+    /// aggregate all read it.
+    pub wal_path: Option<PathBuf>,
     /// Serve live progress on `127.0.0.1:port` while the sweep runs
     /// (port 0 = OS-assigned).
     pub status_port: Option<u16>,
@@ -95,21 +96,21 @@ pub struct ShardRun {
     pub plan: ShardPlan,
     /// Tasks this shard owns (its slice of the canonical list).
     pub owned: usize,
-    /// Outcomes recovered from the journal and *not* re-executed.
+    /// Outcomes recovered from the WAL and *not* re-executed.
     pub resumed: usize,
     /// Tasks actually executed in this process.
     pub executed: usize,
     /// The shard's complete outcome set (resumed ∪ executed), task order.
     pub outcomes: Vec<TaskOutcome>,
-    /// Where the durable artifact went, if one was written.
-    pub artifact_path: Option<PathBuf>,
+    /// Where the durable WAL lives, if one was written.
+    pub wal_path: Option<PathBuf>,
 }
 
 impl ShardRun {
     /// One-line operator summary.
     pub fn summary_line(&self) -> String {
         format!(
-            "shard {}: {} task(s) owned, {} resumed from journal, {} executed",
+            "shard {}: {} task(s) owned, {} resumed from WAL, {} executed",
             self.plan.label(),
             self.owned,
             self.resumed,
@@ -118,8 +119,8 @@ impl ShardRun {
     }
 }
 
-/// Verify a journal-recovered outcome against the task the canonical list
-/// holds at its index — a mismatch means the journal was produced under a
+/// Verify a WAL-recovered outcome against the task the canonical list
+/// holds at its index — a mismatch means the WAL was produced under a
 /// different filter set than this invocation (the header catches seed and
 /// plan drift; this catches filter drift, which changes what each index
 /// *means*).
@@ -132,8 +133,8 @@ fn verify_recovered(o: &TaskOutcome, task: &CampaignTask) -> Result<()> {
         || o.faults != task.faults
     {
         return Err(SedarError::Config(format!(
-            "journal record for task {} does not match this sweep's task list \
-             (journal: sc{} {} × {} coll={} val={} faults={}; \
+            "WAL record for task {} does not match this sweep's task list \
+             (WAL: sc{} {} × {} coll={} val={} faults={}; \
              spec: sc{} {} × {} coll={} val={} faults={}) — was the --filter changed?",
             o.index,
             o.scenario_id,
@@ -154,9 +155,9 @@ fn verify_recovered(o: &TaskOutcome, task: &CampaignTask) -> Result<()> {
 }
 
 /// Run one shard of the sweep: slice the canonical task list per the plan,
-/// recover finished tasks from the journal (if any), execute the rest over
-/// the worker pool — journaling and publishing status as tasks finish —
-/// and write the durable shard artifact.
+/// recover finished tasks from the WAL (if any), execute the rest over the
+/// worker pool — appending to the WAL and publishing status as tasks
+/// finish — and compact the WAL with a final snapshot on clean completion.
 pub fn run_shard(spec: &CampaignSpec, opts: &FleetOptions) -> Result<ShardRun> {
     let plan = opts.plan.unwrap_or_else(ShardPlan::full);
     let tasks = build_tasks(spec);
@@ -174,27 +175,27 @@ pub fn run_shard(spec: &CampaignSpec, opts: &FleetOptions) -> Result<ShardRun> {
         spec_hash: sweep_fingerprint(spec.seed, &tasks),
     };
 
-    // Recover prior progress. The journal stays open for appending.
+    // Recover prior progress. The WAL stays open for appending.
     let mut recovered: Vec<TaskOutcome> = Vec::new();
-    let journal: Option<Mutex<Journal>> = match &opts.journal_path {
+    let wal: Option<Mutex<Wal>> = match &opts.wal_path {
         None => None,
         Some(path) => {
-            let (j, prior) = Journal::open(path, &meta)?;
+            let (w, prior) = Wal::open(path, &meta)?;
             recovered = prior;
-            Some(Mutex::new(j))
+            Some(Mutex::new(w))
         }
     };
     for o in &recovered {
         let task = tasks.get(o.index).ok_or_else(|| {
             SedarError::Config(format!(
-                "journal record for task {} is outside this sweep ({} tasks)",
+                "WAL record for task {} is outside this sweep ({} tasks)",
                 o.index,
                 tasks.len()
             ))
         })?;
         if !plan.owns(o.index) {
             return Err(SedarError::Config(format!(
-                "journal record for task {} is not owned by shard {}",
+                "WAL record for task {} is not owned by shard {}",
                 o.index,
                 plan.label()
             )));
@@ -231,32 +232,35 @@ pub fn run_shard(spec: &CampaignSpec, opts: &FleetOptions) -> Result<ShardRun> {
         }
     };
 
-    // Execute the remainder; every finished task goes to the journal and
-    // the status board from the worker that completed it.
+    // Execute the remainder; every finished task goes to the WAL and the
+    // status board from the worker that completed it.
     let sink_board = board.clone();
-    let sink_journal = &journal;
+    let sink_wal = &wal;
     let sink = move |_done: usize, _total: usize, outcome: &TaskOutcome| {
-        if let Some(j) = sink_journal {
-            if let Err(e) = j.lock().unwrap().append(outcome) {
-                // Journaling is resilience, not correctness: losing a
-                // record costs a re-execution on resume, not the sweep.
-                eprintln!("fleet: journal append failed for task {}: {e}", outcome.index);
+        if let Some(w) = sink_wal {
+            if let Err(e) = w.lock().unwrap().append(outcome) {
+                // The WAL is resilience, not correctness: losing a record
+                // costs a re-execution on resume, not the sweep.
+                eprintln!("fleet: WAL append failed for task {}: {e}", outcome.index);
             }
         }
         sink_board.record(outcome);
     };
     let fresh = scheduler::run_tasks(spec, &remaining, &sink)?;
 
+    // Clean completion: compact with a final snapshot so the next reader
+    // replays one record. A no-op resume (nothing executed) appends
+    // nothing and leaves the file byte-identical.
+    if let Some(w) = &wal {
+        w.lock().unwrap().finalize()?;
+    }
+
     let resumed = recovered.len();
     let executed = fresh.len();
     // Overlap here is impossible by construction (remaining excludes every
     // recovered index); merge re-checks anyway — defense in depth on the
-    // path that feeds the durable artifact.
+    // path that feeds the durable log.
     let outcomes = aggregate::merge(vec![recovered, fresh])?;
-
-    if let Some(path) = &opts.artifact_path {
-        artifact::write_artifact(path, &meta, &outcomes)?;
-    }
 
     Ok(ShardRun {
         plan,
@@ -264,6 +268,6 @@ pub fn run_shard(spec: &CampaignSpec, opts: &FleetOptions) -> Result<ShardRun> {
         resumed,
         executed,
         outcomes,
-        artifact_path: opts.artifact_path.clone(),
+        wal_path: opts.wal_path.clone(),
     })
 }

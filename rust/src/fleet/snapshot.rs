@@ -1,0 +1,349 @@
+//! The WAL read side: snapshot compaction, watermark-aware replay, and the
+//! streaming merge over shard WALs.
+//!
+//! This module is the **single** recovery path the fleet has left. Whether
+//! the caller is a resuming shard ([`crate::fleet::wal::Wal::open`]), the
+//! launch driver probing completeness, `sedar merge`, or the live partial
+//! aggregate behind a status endpoint — everyone reads a WAL through
+//! [`read_wal`], and everyone combines WALs through an
+//! [`IncrementalMerger`]. There is no "artifact decoder" distinct from the
+//! "journal replayer" any more; recovery *is* replay.
+//!
+//! Replay is **lenient** on purpose: an append-only log may legitimately
+//! end mid-record (the writer was killed mid-append, or a live reader is
+//! racing a writer that has not finished its current record). The valid
+//! prefix is the truth; the torn tail is dropped. A tag-1 snapshot record
+//! is the compaction **watermark**: when one replays completely, it
+//! *resets* the accumulated state to its contents — so readers effectively
+//! skip the prefix it supersedes, and a snapshot torn by a kill
+//! mid-compaction simply falls back to the outcome records before it
+//! (which it only ever repeated — nothing is lost).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::campaign::aggregate::IncrementalMerger;
+use crate::campaign::shard::TaskOutcome;
+use crate::error::{Result, SedarError};
+use crate::util::frame::{next_record, ByteReader};
+
+use super::wal::{decode_outcome, encode_outcome, parse_header, ShardMeta, TAG_OUTCOME, TAG_SNAPSHOT};
+
+/// What a lenient replay of the record stream proved.
+pub(crate) struct ScanState {
+    /// The replayed outcome set (last watermark + records after it).
+    pub known: BTreeMap<usize, TaskOutcome>,
+    /// Byte length of the valid prefix — a writer resuming over this file
+    /// truncates to here before appending.
+    pub valid_len: usize,
+    /// Outcome records seen since the last complete snapshot (seeds the
+    /// writer's compaction counter on resume).
+    pub since_snapshot: usize,
+}
+
+impl ScanState {
+    pub fn fresh() -> ScanState {
+        ScanState {
+            known: BTreeMap::new(),
+            valid_len: 0,
+            since_snapshot: 0,
+        }
+    }
+}
+
+/// Encode the full known outcome set as one snapshot record body
+/// (`tag 1 | count u64 | count × outcome`, ascending task index).
+pub(crate) fn encode_snapshot(known: &BTreeMap<usize, TaskOutcome>) -> Vec<u8> {
+    let mut body = Vec::with_capacity(16 + known.len() * 160);
+    body.push(TAG_SNAPSHOT);
+    body.extend_from_slice(&(known.len() as u64).to_le_bytes());
+    for o in known.values() {
+        encode_outcome(o, &mut body);
+    }
+    body
+}
+
+/// Lenient replay of the record stream following the header. A record that
+/// frames (CRC-valid) but does not decode to a well-formed body ends the
+/// valid prefix exactly like a torn tail: bits that pass CRC but fail the
+/// schema mean the writer died mid-rethink, not that the prefix is bad.
+pub(crate) fn scan_records(data: &[u8], start: usize, total_tasks: u64) -> ScanState {
+    let mut st = ScanState {
+        known: BTreeMap::new(),
+        valid_len: start,
+        since_snapshot: 0,
+    };
+    let mut pos = start;
+    while let Some((body, end)) = next_record(data, pos) {
+        if !apply_record(body, total_tasks, &mut st) {
+            break;
+        }
+        st.valid_len = end;
+        pos = end;
+    }
+    st
+}
+
+/// Apply one framed record body to the replay state; `false` ends the
+/// valid prefix.
+fn apply_record(body: &[u8], total_tasks: u64, st: &mut ScanState) -> bool {
+    let mut r = ByteReader::new(body, "fleet WAL record");
+    let Ok(tag) = r.u8() else { return false };
+    match tag {
+        TAG_OUTCOME => match decode_outcome(&mut r) {
+            Ok(o) if r.remaining() == 0 => {
+                // Keep-first: outcomes are pure functions of the per-task
+                // seed, so a duplicated index is benign during replay; the
+                // merge layer is where cross-shard overlap is a hard error.
+                st.known.entry(o.index).or_insert(o);
+                st.since_snapshot += 1;
+                true
+            }
+            _ => false,
+        },
+        TAG_SNAPSHOT => {
+            let Ok(n) = r.u64() else { return false };
+            // A snapshot cannot claim more outcomes than the sweep has
+            // tasks; a count above that is damage, not data.
+            if n > total_tasks {
+                return false;
+            }
+            let mut compacted = BTreeMap::new();
+            for _ in 0..n {
+                match decode_outcome(&mut r) {
+                    Ok(o) => {
+                        compacted.insert(o.index, o);
+                    }
+                    Err(_) => return false,
+                }
+            }
+            if r.remaining() != 0 {
+                return false;
+            }
+            // The watermark: this snapshot supersedes everything replayed
+            // before it.
+            st.known = compacted;
+            st.since_snapshot = 0;
+            true
+        }
+        _ => false,
+    }
+}
+
+/// Refuse files that lead with a legacy container's raw magic before we
+/// even try to frame them: pre-SDWL shard artifacts (`SDSH`) rode inside an
+/// `SDCK` checkpoint frame, so that is the four bytes an operator's stale
+/// `shard-N.bin` actually starts with.
+pub(crate) fn refuse_foreign_container(path: &Path, data: &[u8]) -> Result<()> {
+    if data.len() >= 4 && &data[..4] == b"SDCK" {
+        return Err(SedarError::Checkpoint(format!(
+            "{}: not a fleet WAL: this is a checkpoint-framed file (SDCK) — \
+             pre-SDWL shard artifacts (SDSH) were stored this way, and the \
+             SDWL v1 write-ahead log replaced the journal+artifact pair; \
+             re-run the shard to produce a WAL",
+            path.display()
+        )));
+    }
+    Ok(())
+}
+
+/// Parse a WAL image: header identity plus the lenient replay state.
+pub(crate) fn scan_wal(path: &Path, data: &[u8]) -> Result<(ShardMeta, ScanState)> {
+    refuse_foreign_container(path, data)?;
+    let Some((header, end)) = next_record(data, 0) else {
+        return Err(SedarError::Checkpoint(format!(
+            "{}: unreadable WAL header (torn or foreign file); delete it to \
+             start the shard from scratch",
+            path.display()
+        )));
+    };
+    let meta = parse_header(header)?;
+    let state = scan_records(data, end, meta.total_tasks);
+    Ok((meta, state))
+}
+
+/// Read a shard WAL from disk: its sweep identity and the outcomes it
+/// proves, in ascending task order.
+///
+/// The tail is read leniently, so this is safe to call on the WAL of a
+/// **live** shard (the launch driver's partial aggregate does exactly
+/// that): a racing writer at worst costs the record it is mid-way through
+/// appending, never a misread.
+pub fn read_wal(path: &Path) -> Result<(ShardMeta, Vec<TaskOutcome>)> {
+    let data = std::fs::read(path)?;
+    let (meta, state) = scan_wal(path, &data)?;
+    Ok((meta, state.known.into_values().collect()))
+}
+
+/// Combine shard WAL contents into one outcome list in canonical task
+/// order, enforcing that every shard belongs to the same sweep.
+///
+/// Returns `(seed, total_tasks, outcomes)`. The union may be *partial*
+/// (fewer outcomes than `total_tasks`) — some shards still running, or not
+/// passed in at all; the caller decides whether partial is acceptable
+/// (`--allow-partial`) or an error. What is never acceptable is two shards
+/// claiming the same task index, identity drift between shards, or the
+/// same outcome index disagreeing — all typed errors from the merge.
+pub fn merge_wals(shards: Vec<(ShardMeta, Vec<TaskOutcome>)>) -> Result<(u64, u64, Vec<TaskOutcome>)> {
+    let first = shards
+        .first()
+        .map(|(m, _)| *m)
+        .ok_or_else(|| SedarError::Config("merge: no shard WALs given".to_string()))?;
+    let mut merger = IncrementalMerger::new(first);
+    for (m, outcomes) in shards {
+        merger.ingest(&m, outcomes)?;
+    }
+    Ok((first.seed, first.total_tasks, merger.merged()?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::wal::Wal;
+
+    fn meta(shard_index: u32) -> ShardMeta {
+        ShardMeta {
+            seed: 42,
+            shard_index,
+            shard_count: 2,
+            total_tasks: 4,
+            spec_hash: 0xF1E7,
+        }
+    }
+
+    fn outcome(index: usize, pass: bool) -> TaskOutcome {
+        TaskOutcome {
+            index,
+            scenario_id: index as u32,
+            app: crate::campaign::CampaignApp::Matmul,
+            strategy: crate::config::Strategy::SysCkpt,
+            collectives: crate::config::CollectiveImpl::PointToPoint,
+            validation: crate::detect::ValidationMode::Full,
+            netfault: crate::faultnet::NetFaultMode::None,
+            faults: 1,
+            completed: true,
+            restarts: 0,
+            injected: true,
+            correct: Some(pass),
+            first_detection: None,
+            last_resume: None,
+            pass,
+            mismatches: vec![],
+            wall: std::time::Duration::ZERO,
+            metrics: Default::default(),
+        }
+    }
+
+    fn tmp(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!(
+            "sedar-walread-{tag}-{}-{:?}.wal",
+            std::process::id(),
+            std::thread::current().id()
+        ))
+    }
+
+    #[test]
+    fn read_and_merge_wals_across_shards() {
+        let p0 = tmp("merge-s0");
+        let p1 = tmp("merge-s1");
+        let _ = std::fs::remove_file(&p0);
+        let _ = std::fs::remove_file(&p1);
+        {
+            let (mut w, _) = Wal::open(&p0, &meta(0)).unwrap();
+            w.append(&outcome(2, true)).unwrap();
+            w.append(&outcome(0, true)).unwrap();
+            w.finalize().unwrap();
+        }
+        {
+            let (mut w, _) = Wal::open(&p1, &meta(1)).unwrap();
+            w.append(&outcome(3, false)).unwrap();
+            w.append(&outcome(1, true)).unwrap();
+            w.finalize().unwrap();
+        }
+        let s0 = read_wal(&p0).unwrap();
+        let s1 = read_wal(&p1).unwrap();
+        assert_eq!(s0.0, meta(0));
+        assert_eq!(s1.0, meta(1));
+        let (seed, total, merged) = merge_wals(vec![s0, s1]).unwrap();
+        assert_eq!((seed, total), (42, 4));
+        let idx: Vec<usize> = merged.iter().map(|o| o.index).collect();
+        assert_eq!(idx, vec![0, 1, 2, 3], "merge must be in canonical task order");
+        std::fs::remove_file(&p0).unwrap();
+        std::fs::remove_file(&p1).unwrap();
+    }
+
+    #[test]
+    fn partial_union_is_the_callers_call() {
+        let p = tmp("partial");
+        let _ = std::fs::remove_file(&p);
+        {
+            let (mut w, _) = Wal::open(&p, &meta(0)).unwrap();
+            w.append(&outcome(0, true)).unwrap();
+            w.finalize().unwrap();
+        }
+        // One live/lone shard: merge succeeds, coverage is partial — the
+        // CLI's --allow-partial gate compares len() against total.
+        let (_, total, merged) = merge_wals(vec![read_wal(&p).unwrap()]).unwrap();
+        assert_eq!(total, 4);
+        assert_eq!(merged.len(), 1);
+        assert!(merge_wals(Vec::new()).is_err(), "empty merge must error");
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn live_reader_tolerates_a_racing_writers_torn_tail() {
+        let p = tmp("live");
+        let _ = std::fs::remove_file(&p);
+        {
+            let (mut w, _) = Wal::open(&p, &meta(0)).unwrap();
+            w.append(&outcome(0, true)).unwrap();
+            w.append(&outcome(2, true)).unwrap();
+        }
+        // A reader racing the writer sees a prefix of the file: every
+        // prefix that still frames the header must read cleanly, proving
+        // the no-lock live-aggregate scrape can never misread.
+        let full = std::fs::read(&p).unwrap();
+        for cut in 48..=full.len() {
+            std::fs::write(&p, &full[..cut]).unwrap();
+            let (m, outcomes) = read_wal(&p).unwrap();
+            assert_eq!(m, meta(0));
+            assert!(outcomes.len() <= 2);
+        }
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn merge_rejects_fingerprint_drift_naming_both_headers() {
+        let a = meta(0);
+        let mut b = meta(1);
+        b.spec_hash = 0xBBBB;
+        let err = merge_wals(vec![(a, vec![outcome(0, true)]), (b, vec![outcome(2, true)])])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("--filter"), "{err}");
+        assert!(err.contains("shard=1/2"), "first header not described: {err}");
+        assert!(err.contains("shard=2/2"), "other header not described: {err}");
+    }
+
+    #[test]
+    fn snapshot_claiming_more_than_the_sweep_ends_the_prefix() {
+        let p = tmp("overclaim");
+        let _ = std::fs::remove_file(&p);
+        {
+            let (mut w, _) = Wal::open(&p, &meta(0)).unwrap();
+            w.append(&outcome(0, true)).unwrap();
+        }
+        // Append a CRC-valid snapshot record whose count field claims more
+        // outcomes than the sweep has tasks: frames fine, but replay must
+        // treat it as damage and keep only the prefix before it.
+        let mut body = vec![TAG_SNAPSHOT];
+        body.extend_from_slice(&(u64::MAX).to_le_bytes());
+        let mut data = std::fs::read(&p).unwrap();
+        crate::util::frame::frame(&body, &mut data);
+        std::fs::write(&p, &data).unwrap();
+        let (_, outcomes) = read_wal(&p).unwrap();
+        assert_eq!(outcomes.len(), 1);
+        assert_eq!(outcomes[0].index, 0);
+        std::fs::remove_file(&p).unwrap();
+    }
+}

@@ -4,9 +4,11 @@
 //! hours; an operator driving N shard processes across machines needs to
 //! see progress without grepping stderr. [`StatusBoard`] is the shared
 //! counter the scheduler sink updates per finished task;
-//! [`StatusServer::spawn`] serves a snapshot of it over plain HTTP —
-//! `GET /` for human-readable text, `GET /json` for machine-readable JSON —
-//! with nothing but `std::net`.
+//! [`StatusServer::spawn`] serves a snapshot of any [`StatusSource`] over
+//! plain HTTP — `GET /` for human-readable text, `GET /json` for
+//! machine-readable JSON — with nothing but `std::net`. The board is one
+//! source; the launch driver's live fleet aggregate
+//! ([`crate::fleet::launch`]) is another, served by the same listener.
 //!
 //! The endpoint is observational only: it reads atomics and a small mutex-
 //! guarded rollup, never touches the deterministic report path, and dies
@@ -14,7 +16,7 @@
 //!
 //! Snapshots carry what a *supervisor* needs, not just an operator: the
 //! shard label, the `executed`/`resumed` split (how much of the progress
-//! was recovered from the journal vs run in this process), and a
+//! was recovered from the WAL vs run in this process), and a
 //! monotonically increasing `heartbeat` counter — one tick per progress
 //! event — that [`crate::fleet::launch`] watches for stall detection.
 //! [`http_get`] is the matching std-only client half.
@@ -36,6 +38,18 @@ use crate::campaign::CampaignTask;
 use crate::error::{Result, SedarError};
 use crate::report::json_escape;
 
+/// Anything a [`StatusServer`] can serve: the three snapshot bodies behind
+/// `GET /`, `GET /json` and `GET /metrics`. Implementations must be cheap
+/// and lock-light — a snapshot is taken per request on the serving thread.
+pub trait StatusSource: Send + Sync {
+    /// Human-readable snapshot (the `GET /` body).
+    fn text_snapshot(&self) -> String;
+    /// Machine-readable snapshot (the `GET /json` body).
+    fn json_snapshot(&self) -> String;
+    /// Prometheus text-format snapshot (the `GET /metrics` body).
+    fn prometheus_snapshot(&self) -> String;
+}
+
 /// Per-(app × strategy) progress cell.
 #[derive(Debug, Default, Clone)]
 struct Cell {
@@ -52,7 +66,7 @@ pub struct StatusBoard {
     done: AtomicUsize,
     passed: AtomicUsize,
     failed: AtomicUsize,
-    /// Of `done`, how many were recovered from the journal (not executed
+    /// Of `done`, how many were recovered from the WAL (not executed
     /// in this process). A supervisor reads the split to tell "this
     /// relaunch is skipping finished work" from "it is redoing it".
     resumed: AtomicUsize,
@@ -104,7 +118,7 @@ impl StatusBoard {
         self.record_inner(outcome, false);
     }
 
-    /// Record one task recovered from the journal (counted as done, and
+    /// Record one task recovered from the WAL (counted as done, and
     /// in the `resumed` split).
     pub fn record_resumed(&self, outcome: &TaskOutcome) {
         self.record_inner(outcome, true);
@@ -250,7 +264,7 @@ impl StatusBoard {
         metric(
             "sedar_tasks_resumed_total",
             "counter",
-            "Finished tasks recovered from the journal, not executed here.",
+            "Finished tasks recovered from the WAL, not executed here.",
             load(&self.resumed),
         );
         metric(
@@ -281,8 +295,22 @@ impl StatusBoard {
     }
 }
 
-/// The listener thread serving a [`StatusBoard`]. Dropping the handle stops
-/// the thread (it polls a stop flag between accepts).
+impl StatusSource for StatusBoard {
+    fn text_snapshot(&self) -> String {
+        StatusBoard::text_snapshot(self)
+    }
+
+    fn json_snapshot(&self) -> String {
+        StatusBoard::json_snapshot(self)
+    }
+
+    fn prometheus_snapshot(&self) -> String {
+        StatusBoard::prometheus_snapshot(self)
+    }
+}
+
+/// The listener thread serving a [`StatusSource`]. Dropping the handle
+/// stops the thread (it polls a stop flag between accepts).
 pub struct StatusServer {
     addr: SocketAddr,
     stop: Arc<AtomicBool>,
@@ -292,7 +320,7 @@ pub struct StatusServer {
 impl StatusServer {
     /// Bind `127.0.0.1:port` (port 0 = OS-assigned; see [`StatusServer::addr`])
     /// and serve `board` until dropped.
-    pub fn spawn(port: u16, board: Arc<StatusBoard>) -> Result<StatusServer> {
+    pub fn spawn(port: u16, board: Arc<dyn StatusSource>) -> Result<StatusServer> {
         let listener = TcpListener::bind(("127.0.0.1", port))
             .map_err(|e| SedarError::Config(format!("--status-port {port}: cannot bind: {e}")))?;
         let addr = listener.local_addr()?;
@@ -307,7 +335,7 @@ impl StatusServer {
                         Ok((stream, _)) => {
                             // One request per connection; errors on a single
                             // connection never take the endpoint down.
-                            let _ = serve_one(stream, &board);
+                            let _ = serve_one(stream, board.as_ref());
                         }
                         Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                             if stop_flag.load(Ordering::SeqCst) {
@@ -350,7 +378,7 @@ impl Drop for StatusServer {
 /// the request line (a client streaming garbage must not pin the thread).
 const MAX_REQUEST: usize = 8 * 1024;
 
-fn serve_one(mut stream: TcpStream, board: &StatusBoard) -> std::io::Result<()> {
+fn serve_one(mut stream: TcpStream, board: &dyn StatusSource) -> std::io::Result<()> {
     use std::io::{ErrorKind, Read, Write};
     stream.set_nonblocking(false)?;
     stream.set_read_timeout(Some(Duration::from_millis(500)))?;

@@ -1,0 +1,792 @@
+//! The shard write-ahead log (`SDWL` v1): **one** durable file per shard.
+//!
+//! SEDAR level 2 protects the *application* by journaling recoverable
+//! state as it goes; the fleet applies the same idea to the *validation
+//! campaign*. Earlier builds kept two files per shard — a resume journal
+//! (`SDJL`) appended as tasks finished, and a shard artifact (`SDSH`)
+//! written at the end — two formats, two recovery paths, and a merge that
+//! could only happen after the barrier. The WAL collapses both onto one
+//! append-only stream:
+//!
+//! ```text
+//! file     := header-record record*
+//! record   := len u32 | crc32(body) u32 | body      (util::frame)
+//! header   := "SDWL" | version u32 | seed u64 | shard u32 | of u32
+//!             | total u64 | spec_hash u64
+//! body     := tag u8 (0 = outcome, 1 = snapshot) | payload
+//! outcome  := one TaskOutcome record (encode_outcome)
+//! snapshot := count u64 | count × outcome records, ascending task index
+//! ```
+//!
+//! As each task finishes, its [`TaskOutcome`] is appended as a tag-0
+//! record and synced — a kill immediately after completion cannot lose the
+//! record. Every `K` outcome records (and on clean shutdown), the full
+//! known outcome set is appended as a tag-1 **snapshot**: the compaction
+//! watermark. The reader ([`crate::fleet::snapshot`]) replays the stream,
+//! resetting its state at each complete snapshot — so the last snapshot
+//! supersedes the replayed prefix, a torn tail (including a kill **mid-
+//! compaction**) merely falls back to the records before it, and resume,
+//! completeness probing, merge and the live aggregate are all the same
+//! read path. Recovery *is* replay.
+//!
+//! The header binds the file to one sweep — seed, shard plan and filtered
+//! task total — so a stale WAL from a different seed or filter can never
+//! leak foreign outcomes into a report. Old `SDJL`/`SDSH` files are
+//! refused **by name** (and their readers are gone): the formats are not
+//! convertible, and mis-decoding one would be worse than failing fast.
+
+use std::collections::BTreeMap;
+use std::fs::OpenOptions;
+use std::io::{Seek, SeekFrom};
+use std::path::Path;
+
+use crate::campaign::shard::TaskOutcome;
+use crate::campaign::{
+    collective_from_ordinal, collective_ordinal, netfault_from_ordinal, netfault_ordinal,
+    strategy_from_ordinal, strategy_ordinal, validation_from_ordinal, validation_ordinal,
+    CampaignApp,
+};
+use crate::error::{FaultClass, Result, SedarError};
+use crate::recovery::ResumeFrom;
+use crate::util::frame::{self, next_record, push_string, ByteReader};
+
+use super::snapshot::{self, ScanState};
+
+pub use crate::campaign::aggregate::ShardMeta;
+
+pub(crate) const MAGIC: &[u8; 4] = b"SDWL";
+/// `SDWL` starts at 1: the WAL replaced the v4 `SDJL` journal + `SDSH`
+/// artifact pair wholesale. A version bump here follows the same
+/// discipline those formats did — any record-layout change bumps it, and
+/// readers refuse other versions by name rather than mis-decode.
+pub(crate) const VERSION: u32 = 1;
+/// Record tag: one appended [`TaskOutcome`].
+pub(crate) const TAG_OUTCOME: u8 = 0;
+/// Record tag: a compaction snapshot (the full known outcome set).
+pub(crate) const TAG_SNAPSHOT: u8 = 1;
+/// Append a compaction snapshot after this many outcome records. Chosen so
+/// a full 1152-task sweep compacts ~18 times: the replay a reader skips
+/// stays short without bloating the log (total size is O(n²/K)).
+pub const DEFAULT_SNAPSHOT_EVERY: usize = 64;
+
+/// An open, append-positioned shard WAL.
+pub struct Wal {
+    file: std::fs::File,
+    /// Every outcome the log currently proves, by task index — exactly
+    /// what the next snapshot record will contain.
+    known: BTreeMap<usize, TaskOutcome>,
+    /// Outcome records appended since the last snapshot (the compaction
+    /// counter; 0 means the tail is already compact).
+    since_snapshot: usize,
+    snapshot_every: usize,
+}
+
+pub(crate) fn header_body(meta: &ShardMeta) -> Vec<u8> {
+    let mut b = Vec::with_capacity(40);
+    b.extend_from_slice(MAGIC);
+    b.extend_from_slice(&VERSION.to_le_bytes());
+    b.extend_from_slice(&meta.seed.to_le_bytes());
+    b.extend_from_slice(&meta.shard_index.to_le_bytes());
+    b.extend_from_slice(&meta.shard_count.to_le_bytes());
+    b.extend_from_slice(&meta.total_tasks.to_le_bytes());
+    b.extend_from_slice(&meta.spec_hash.to_le_bytes());
+    b
+}
+
+pub(crate) fn parse_header(body: &[u8]) -> Result<ShardMeta> {
+    let mut r = ByteReader::new(body, "fleet WAL header");
+    let magic = r.bytes(4)?;
+    if magic != MAGIC {
+        // Name the legacy formats explicitly: a v4-era fleet directory is
+        // exactly what an operator upgrading in place will point us at.
+        let legacy = match magic {
+            b"SDJL" => Some("a fleet resume journal (SDJL)"),
+            b"SDSH" => Some("a shard artifact payload (SDSH)"),
+            b"SDTR" => Some("a trace log (SDTR)"),
+            _ => None,
+        };
+        return Err(SedarError::Checkpoint(match legacy {
+            Some(what) => format!(
+                "not a fleet WAL: this is {what} — the SDWL v1 write-ahead log replaced \
+                 the journal+artifact pair and this build reads neither old format; \
+                 re-run the shard to produce a WAL"
+            ),
+            None => "not a fleet WAL (bad header magic)".to_string(),
+        }));
+    }
+    let version = r.u32()?;
+    if version != VERSION {
+        return Err(SedarError::Checkpoint(format!(
+            "unsupported fleet WAL version {version} (this build reads \
+             version {VERSION}) — delete the WAL to re-run the shard"
+        )));
+    }
+    Ok(ShardMeta {
+        seed: r.u64()?,
+        shard_index: r.u32()?,
+        shard_count: r.u32()?,
+        total_tasks: r.u64()?,
+        spec_hash: r.u64()?,
+    })
+}
+
+impl Wal {
+    /// Open (creating if absent) the WAL at `path` for `meta`'s sweep,
+    /// with the default compaction interval.
+    ///
+    /// Returns the append-positioned WAL plus every outcome recovered from
+    /// a previous run of the same shard (ascending task index). The valid
+    /// prefix is kept; a torn tail record is truncated away. A WAL whose
+    /// header names a different sweep (other seed, plan or filter width)
+    /// is an error — as is a non-empty file that is not a WAL at all; this
+    /// function never truncates a file it cannot positively identify as
+    /// its own.
+    pub fn open(path: &Path, meta: &ShardMeta) -> Result<(Wal, Vec<TaskOutcome>)> {
+        Wal::open_with_interval(path, meta, DEFAULT_SNAPSHOT_EVERY)
+    }
+
+    /// [`Wal::open`] with an explicit compaction interval (`K` outcome
+    /// records between snapshots; the crash-recovery tests use small `K`).
+    pub fn open_with_interval(
+        path: &Path,
+        meta: &ShardMeta,
+        snapshot_every: usize,
+    ) -> Result<(Wal, Vec<TaskOutcome>)> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        let existing = match std::fs::read(path) {
+            Ok(data) => data,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Vec::new(),
+            Err(e) => return Err(e.into()),
+        };
+
+        let mut state = ScanState::fresh();
+        if !existing.is_empty() {
+            let (found, scanned) = snapshot::scan_wal(path, &existing)?;
+            if found != *meta {
+                let drift = if found.spec_hash != meta.spec_hash
+                    && (found.seed, found.shard_index, found.shard_count, found.total_tasks)
+                        == (meta.seed, meta.shard_index, meta.shard_count, meta.total_tasks)
+                {
+                    " — same seed and plan but a different --filter set"
+                } else {
+                    ""
+                };
+                return Err(SedarError::Checkpoint(format!(
+                    "{}: WAL belongs to a different sweep \
+                     (WAL seed {} shard {}/{} of {} tasks; \
+                     this run is seed {} shard {}/{} of {} tasks){drift}",
+                    path.display(),
+                    found.seed,
+                    found.shard_index + 1,
+                    found.shard_count,
+                    found.total_tasks,
+                    meta.seed,
+                    meta.shard_index + 1,
+                    meta.shard_count,
+                    meta.total_tasks
+                )));
+            }
+            state = scanned;
+        }
+
+        let file = OpenOptions::new()
+            .create(true)
+            .write(true)
+            .truncate(false)
+            .open(path)?;
+        file.set_len(state.valid_len as u64)?;
+        let mut wal = Wal {
+            file,
+            known: state.known,
+            since_snapshot: state.since_snapshot,
+            snapshot_every: snapshot_every.max(1),
+        };
+        wal.file.seek(SeekFrom::End(0))?;
+        if state.valid_len == 0 {
+            frame::write_record(&mut wal.file, &header_body(meta))?;
+            // A fresh WAL's directory entry must survive a crash too:
+            // without this, a kill right after creation can lose the whole
+            // file even though every record inside it was synced.
+            super::sync_parent_dir(path)?;
+        }
+        let recovered = wal.known.values().cloned().collect();
+        Ok((wal, recovered))
+    }
+
+    /// Durably append one finished task (synced before returning, so a
+    /// kill immediately after completion cannot lose the record), then
+    /// compact if the interval is due.
+    pub fn append(&mut self, outcome: &TaskOutcome) -> Result<()> {
+        let mut body = Vec::with_capacity(136);
+        body.push(TAG_OUTCOME);
+        encode_outcome(outcome, &mut body);
+        frame::write_record(&mut self.file, &body)?;
+        self.known.insert(outcome.index, outcome.clone());
+        self.since_snapshot += 1;
+        if self.since_snapshot >= self.snapshot_every {
+            self.write_snapshot()?;
+        }
+        Ok(())
+    }
+
+    fn write_snapshot(&mut self) -> Result<()> {
+        let body = snapshot::encode_snapshot(&self.known);
+        frame::write_record(&mut self.file, &body)?;
+        self.since_snapshot = 0;
+        Ok(())
+    }
+
+    /// Clean-shutdown compaction: append a final snapshot **only if**
+    /// outcome records landed since the last one. A no-op resume over an
+    /// already-compact WAL therefore appends nothing and leaves the file
+    /// byte-identical — re-running a finished shard is provably free.
+    pub fn finalize(&mut self) -> Result<()> {
+        if self.since_snapshot > 0 {
+            self.write_snapshot()?;
+        }
+        Ok(())
+    }
+
+    /// Outcomes the log currently proves (resumed ∪ appended).
+    pub fn len(&self) -> usize {
+        self.known.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.known.is_empty()
+    }
+}
+
+fn fault_class_ordinal(c: FaultClass) -> u8 {
+    match c {
+        FaultClass::Tdc => 0,
+        FaultClass::Fsc => 1,
+        FaultClass::Le => 2,
+        FaultClass::Toe => 3,
+        FaultClass::CkptCorrupt => 4,
+    }
+}
+
+fn fault_class_from_ordinal(ord: u8) -> Option<FaultClass> {
+    [
+        FaultClass::Tdc,
+        FaultClass::Fsc,
+        FaultClass::Le,
+        FaultClass::Toe,
+        FaultClass::CkptCorrupt,
+    ]
+    .into_iter()
+    .find(|c| fault_class_ordinal(*c) == ord)
+}
+
+/// Append one outcome's binary record to `out`. Every field of
+/// [`TaskOutcome`] round-trips — including the mismatch notes (arbitrary
+/// UTF-8) and the informational wall time — so a merged report is
+/// byte-identical to the single-process run's.
+pub fn encode_outcome(o: &TaskOutcome, out: &mut Vec<u8>) {
+    out.extend_from_slice(&(o.index as u64).to_le_bytes());
+    out.extend_from_slice(&o.scenario_id.to_le_bytes());
+    out.push(o.app.ordinal() as u8);
+    out.push(strategy_ordinal(o.strategy) as u8);
+    out.push(collective_ordinal(o.collectives) as u8);
+    out.push(validation_ordinal(o.validation) as u8);
+    out.push(netfault_ordinal(o.netfault) as u8);
+    out.extend_from_slice(&o.faults.to_le_bytes());
+    out.push(o.completed as u8);
+    out.push(o.injected as u8);
+    out.push(match o.correct {
+        None => 0,
+        Some(false) => 1,
+        Some(true) => 2,
+    });
+    out.extend_from_slice(&o.restarts.to_le_bytes());
+    match &o.first_detection {
+        None => out.push(0),
+        Some((class, site)) => {
+            out.push(1 + fault_class_ordinal(*class));
+            push_string(out, site);
+        }
+    }
+    match o.last_resume {
+        None => out.push(0),
+        Some(ResumeFrom::Scratch) => out.push(1),
+        Some(ResumeFrom::SysCkpt(k)) => {
+            out.push(2);
+            out.extend_from_slice(&k.to_le_bytes());
+        }
+        Some(ResumeFrom::UserCkpt(k)) => {
+            out.push(3);
+            out.extend_from_slice(&k.to_le_bytes());
+        }
+    }
+    out.push(o.pass as u8);
+    out.extend_from_slice(&(o.mismatches.len() as u32).to_le_bytes());
+    for m in &o.mismatches {
+        push_string(out, m);
+    }
+    let wall_nanos = u64::try_from(o.wall.as_nanos()).unwrap_or(u64::MAX);
+    out.extend_from_slice(&wall_nanos.to_le_bytes());
+    // The observability counters, in MetricsSnapshot field order.
+    for v in [
+        o.metrics.compare_ticks,
+        o.metrics.compare_bytes,
+        o.metrics.sync_ticks,
+        o.metrics.sync_events,
+        o.metrics.sys_ckpt_ticks,
+        o.metrics.sys_ckpt_bytes,
+        o.metrics.sys_ckpts,
+        o.metrics.user_ckpt_ticks,
+        o.metrics.user_ckpt_bytes,
+        o.metrics.user_ckpts,
+        o.metrics.exec_ticks,
+        o.metrics.execs,
+        o.metrics.rollback_ticks,
+        o.metrics.rollbacks,
+    ] {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn bool_from(b: u8, what: &str) -> Result<bool> {
+    match b {
+        0 => Ok(false),
+        1 => Ok(true),
+        other => Err(SedarError::Checkpoint(format!(
+            "{what}: bad bool byte {other}"
+        ))),
+    }
+}
+
+/// Decode one outcome record from `r`.
+pub fn decode_outcome(r: &mut ByteReader<'_>) -> Result<TaskOutcome> {
+    let what = r.what();
+    let bad = |field: &str, v: u64| {
+        SedarError::Checkpoint(format!("{what}: bad {field} ordinal {v}"))
+    };
+    let index = r.u64()? as usize;
+    let scenario_id = r.u32()?;
+    let app_ord = r.u8()? as u64;
+    let app = CampaignApp::from_ordinal(app_ord).ok_or_else(|| bad("app", app_ord))?;
+    let strat_ord = r.u8()? as u64;
+    let strategy = strategy_from_ordinal(strat_ord).ok_or_else(|| bad("strategy", strat_ord))?;
+    let coll_ord = r.u8()? as u64;
+    let collectives =
+        collective_from_ordinal(coll_ord).ok_or_else(|| bad("collectives", coll_ord))?;
+    let val_ord = r.u8()? as u64;
+    let validation = validation_from_ordinal(val_ord).ok_or_else(|| bad("validation", val_ord))?;
+    let nf_ord = r.u8()? as u64;
+    let netfault = netfault_from_ordinal(nf_ord).ok_or_else(|| bad("netfault", nf_ord))?;
+    let faults = r.u32()?;
+    let completed = bool_from(r.u8()?, what)?;
+    let injected = bool_from(r.u8()?, what)?;
+    let correct = match r.u8()? {
+        0 => None,
+        1 => Some(false),
+        2 => Some(true),
+        other => return Err(bad("correct", other as u64)),
+    };
+    let restarts = r.u32()?;
+    let first_detection = match r.u8()? {
+        0 => None,
+        tag => {
+            let class = fault_class_from_ordinal(tag - 1)
+                .ok_or_else(|| bad("fault class", tag as u64))?;
+            Some((class, r.string()?))
+        }
+    };
+    let last_resume = match r.u8()? {
+        0 => None,
+        1 => Some(ResumeFrom::Scratch),
+        2 => Some(ResumeFrom::SysCkpt(r.u64()?)),
+        3 => Some(ResumeFrom::UserCkpt(r.u64()?)),
+        other => return Err(bad("resume", other as u64)),
+    };
+    let pass = bool_from(r.u8()?, what)?;
+    let n_mismatches = r.u32()?;
+    if n_mismatches > 1 << 16 {
+        return Err(SedarError::Checkpoint(format!(
+            "{what}: implausible mismatch count {n_mismatches}"
+        )));
+    }
+    let mut mismatches = Vec::with_capacity(n_mismatches as usize);
+    for _ in 0..n_mismatches {
+        mismatches.push(r.string()?);
+    }
+    let wall = std::time::Duration::from_nanos(r.u64()?);
+    let metrics = crate::metrics::MetricsSnapshot {
+        compare_ticks: r.u64()?,
+        compare_bytes: r.u64()?,
+        sync_ticks: r.u64()?,
+        sync_events: r.u64()?,
+        sys_ckpt_ticks: r.u64()?,
+        sys_ckpt_bytes: r.u64()?,
+        sys_ckpts: r.u64()?,
+        user_ckpt_ticks: r.u64()?,
+        user_ckpt_bytes: r.u64()?,
+        user_ckpts: r.u64()?,
+        exec_ticks: r.u64()?,
+        execs: r.u64()?,
+        rollback_ticks: r.u64()?,
+        rollbacks: r.u64()?,
+    };
+    Ok(TaskOutcome {
+        index,
+        scenario_id,
+        app,
+        strategy,
+        collectives,
+        validation,
+        netfault,
+        faults,
+        completed,
+        restarts,
+        injected,
+        correct,
+        first_detection,
+        last_resume,
+        pass,
+        mismatches,
+        wall,
+        metrics,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Strategy;
+    use crate::detect::ValidationMode;
+    use crate::util::codec::crc32;
+
+    fn meta() -> ShardMeta {
+        ShardMeta {
+            seed: 42,
+            shard_index: 0,
+            shard_count: 2,
+            total_tasks: 8,
+            spec_hash: 0xF1E7,
+        }
+    }
+
+    fn outcome(index: usize) -> TaskOutcome {
+        TaskOutcome {
+            index,
+            scenario_id: index as u32,
+            app: CampaignApp::Matmul,
+            strategy: Strategy::SysCkpt,
+            collectives: crate::config::CollectiveImpl::PointToPoint,
+            validation: ValidationMode::Full,
+            netfault: crate::faultnet::NetFaultMode::None,
+            faults: 1,
+            completed: true,
+            restarts: 0,
+            injected: true,
+            correct: Some(true),
+            first_detection: None,
+            last_resume: None,
+            pass: true,
+            mismatches: vec![],
+            wall: std::time::Duration::ZERO,
+            metrics: crate::metrics::MetricsSnapshot {
+                compare_bytes: 64,
+                sync_events: 2,
+                execs: 1,
+                ..Default::default()
+            },
+        }
+    }
+
+    fn sample(index: usize) -> TaskOutcome {
+        TaskOutcome {
+            index,
+            scenario_id: 7,
+            app: CampaignApp::Sw,
+            strategy: Strategy::UserCkpt,
+            collectives: crate::config::CollectiveImpl::Native,
+            validation: ValidationMode::Sha256,
+            netfault: crate::faultnet::NetFaultMode::Corrupt,
+            faults: 2,
+            completed: true,
+            restarts: 1,
+            injected: true,
+            correct: Some(true),
+            first_detection: Some((FaultClass::Tdc, "GATHER|rank1".into())),
+            last_resume: Some(ResumeFrom::UserCkpt(3)),
+            pass: false,
+            mismatches: vec!["ошибка №1 — 错误".into(), String::new()],
+            wall: std::time::Duration::from_micros(1234),
+            metrics: crate::metrics::MetricsSnapshot {
+                compare_ticks: 1,
+                compare_bytes: 2,
+                sync_ticks: 3,
+                sync_events: 4,
+                sys_ckpt_ticks: 5,
+                sys_ckpt_bytes: 6,
+                sys_ckpts: 7,
+                user_ckpt_ticks: 8,
+                user_ckpt_bytes: 9,
+                user_ckpts: 10,
+                exec_ticks: 11,
+                execs: 12,
+                rollback_ticks: 13,
+                rollbacks: 14,
+            },
+        }
+    }
+
+    fn tmp(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!(
+            "sedar-wal-{tag}-{}-{:?}.wal",
+            std::process::id(),
+            std::thread::current().id()
+        ))
+    }
+
+    #[test]
+    fn record_roundtrip() {
+        let mut buf = Vec::new();
+        encode_outcome(&sample(42), &mut buf);
+        let mut r = ByteReader::new(&buf, "test");
+        let back = decode_outcome(&mut r).unwrap();
+        assert_eq!(r.remaining(), 0);
+        assert_eq!(format!("{:?}", back), format!("{:?}", sample(42)));
+    }
+
+    #[test]
+    fn decode_rejects_bad_ordinals_and_truncation() {
+        let mut buf = Vec::new();
+        encode_outcome(&sample(1), &mut buf);
+        // Truncation at every prefix must error, never panic.
+        for cut in 0..buf.len() {
+            let mut r = ByteReader::new(&buf[..cut], "test");
+            assert!(decode_outcome(&mut r).is_err(), "prefix {cut} decoded");
+        }
+        // Corrupt the app ordinal (offset 12: u64 index + u32 scenario).
+        let mut bad = buf.clone();
+        bad[12] = 99;
+        assert!(decode_outcome(&mut ByteReader::new(&bad, "test")).is_err());
+    }
+
+    #[test]
+    fn append_then_recover() {
+        let p = tmp("roundtrip");
+        let _ = std::fs::remove_file(&p);
+        {
+            let (mut w, recovered) = Wal::open(&p, &meta()).unwrap();
+            assert!(recovered.is_empty());
+            w.append(&outcome(0)).unwrap();
+            w.append(&outcome(2)).unwrap();
+        }
+        let (_, recovered) = Wal::open(&p, &meta()).unwrap();
+        let idx: Vec<usize> = recovered.iter().map(|o| o.index).collect();
+        assert_eq!(idx, vec![0, 2]);
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn torn_tail_is_dropped() {
+        let p = tmp("torn");
+        let _ = std::fs::remove_file(&p);
+        {
+            let (mut w, _) = Wal::open(&p, &meta()).unwrap();
+            w.append(&outcome(0)).unwrap();
+            w.append(&outcome(2)).unwrap();
+        }
+        // Simulate a crash mid-append: chop bytes off the last record.
+        let data = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &data[..data.len() - 5]).unwrap();
+        let (mut w, recovered) = Wal::open(&p, &meta()).unwrap();
+        assert_eq!(recovered.len(), 1);
+        assert_eq!(recovered[0].index, 0);
+        // The WAL must be appendable after truncation, and the new record
+        // must land cleanly where the torn one was.
+        w.append(&outcome(4)).unwrap();
+        drop(w);
+        let (_, recovered) = Wal::open(&p, &meta()).unwrap();
+        let idx: Vec<usize> = recovered.iter().map(|o| o.index).collect();
+        assert_eq!(idx, vec![0, 4]);
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn compaction_snapshots_are_the_watermark() {
+        let p = tmp("compact");
+        let _ = std::fs::remove_file(&p);
+        {
+            let (mut w, _) = Wal::open_with_interval(&p, &meta(), 2).unwrap();
+            for i in [0, 2, 4, 6, 1] {
+                w.append(&outcome(i)).unwrap();
+            }
+            // 5 appends at K=2 → snapshots after outcomes 2 and 6; index 1
+            // rides uncompacted behind the last watermark.
+            w.finalize().unwrap();
+        }
+        let (_, recovered) = Wal::open_with_interval(&p, &meta(), 2).unwrap();
+        let idx: Vec<usize> = recovered.iter().map(|o| o.index).collect();
+        assert_eq!(idx, vec![0, 1, 2, 4, 6], "replay through snapshots lost state");
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn kill_mid_compaction_recovers_from_the_last_watermark() {
+        let p = tmp("midcompact");
+        let _ = std::fs::remove_file(&p);
+        {
+            let (mut w, _) = Wal::open_with_interval(&p, &meta(), 2).unwrap();
+            for i in [0, 2, 4, 6] {
+                w.append(&outcome(i)).unwrap();
+            }
+        }
+        // The file now ends with the K=4 snapshot {0,2,4,6}. Tear INTO that
+        // snapshot record (a SIGKILL mid-compaction): the reader must fall
+        // back to the records before it — nothing is lost, because a
+        // snapshot only ever repeats what outcome records already proved.
+        let data = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &data[..data.len() - 9]).unwrap();
+        let (_, recovered) = Wal::open_with_interval(&p, &meta(), 2).unwrap();
+        let idx: Vec<usize> = recovered.iter().map(|o| o.index).collect();
+        assert_eq!(idx, vec![0, 2, 4, 6], "mid-compaction tear lost outcomes");
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn noop_resume_leaves_the_file_byte_identical() {
+        let p = tmp("noop");
+        let _ = std::fs::remove_file(&p);
+        {
+            let (mut w, _) = Wal::open(&p, &meta()).unwrap();
+            w.append(&outcome(0)).unwrap();
+            w.append(&outcome(2)).unwrap();
+            w.finalize().unwrap();
+        }
+        let before = std::fs::read(&p).unwrap();
+        {
+            // A resume that executes nothing: recover, finalize, exit. The
+            // tail is already compact, so finalize must append NOTHING —
+            // the CI wal-smoke job `cmp`s exactly this.
+            let (mut w, recovered) = Wal::open(&p, &meta()).unwrap();
+            assert_eq!(recovered.len(), 2);
+            w.finalize().unwrap();
+        }
+        assert_eq!(std::fs::read(&p).unwrap(), before);
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn created_wal_in_fresh_directory_reopens() {
+        // Creation in a freshly made nested directory exercises the
+        // create → header write → parent-directory fsync path; the reopen
+        // proves the WAL those steps left behind is well-formed.
+        let dir = std::env::temp_dir().join(format!(
+            "sedar-wal-dirsync-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let p = dir.join("deep").join("sweep.wal");
+        {
+            let (mut w, recovered) = Wal::open(&p, &meta()).unwrap();
+            assert!(recovered.is_empty());
+            w.append(&outcome(0)).unwrap();
+        }
+        let (_, recovered) = Wal::open(&p, &meta()).unwrap();
+        assert_eq!(recovered.len(), 1);
+        assert_eq!(recovered[0].index, 0);
+        // The helper itself must tolerate a parentless (cwd-relative)
+        // path — it syncs "." rather than erroring.
+        crate::fleet::sync_parent_dir(std::path::Path::new("bare-name.wal")).unwrap();
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn foreign_sweep_rejected() {
+        let p = tmp("foreign");
+        let _ = std::fs::remove_file(&p);
+        {
+            let (mut w, _) = Wal::open(&p, &meta()).unwrap();
+            w.append(&outcome(0)).unwrap();
+        }
+        let mut other = meta();
+        other.seed = 43;
+        assert!(Wal::open(&p, &other).is_err());
+        let mut other = meta();
+        other.shard_index = 1;
+        assert!(Wal::open(&p, &other).is_err());
+        // Same seed and plan but a different filter set (spec fingerprint).
+        let mut other = meta();
+        other.spec_hash = 0xDEAD;
+        let err = Wal::open(&p, &other).unwrap_err();
+        assert!(err.to_string().contains("--filter"), "got: {err}");
+        // A non-WAL file is refused, not truncated.
+        std::fs::write(&p, b"definitely not a WAL").unwrap();
+        assert!(Wal::open(&p, &meta()).is_err());
+        assert_eq!(std::fs::read(&p).unwrap(), b"definitely not a WAL");
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn legacy_journal_and_artifact_are_refused_by_name() {
+        // A v4-era SDJL journal header: framed exactly as this reader
+        // frames, but the magic names the retired format. The error must
+        // name BOTH formats, and the file must not be modified.
+        let p = tmp("legacy-journal");
+        let _ = std::fs::remove_file(&p);
+        let mut body = Vec::new();
+        body.extend_from_slice(b"SDJL");
+        body.extend_from_slice(&4u32.to_le_bytes());
+        body.extend_from_slice(&[0u8; 32]);
+        let mut rec = Vec::new();
+        rec.extend_from_slice(&(body.len() as u32).to_le_bytes());
+        rec.extend_from_slice(&crc32(&body).to_le_bytes());
+        rec.extend_from_slice(&body);
+        std::fs::write(&p, &rec).unwrap();
+        let err = Wal::open(&p, &meta()).unwrap_err().to_string();
+        assert!(err.contains("SDJL"), "missing legacy format name: {err}");
+        assert!(err.contains("SDWL"), "missing reader format name: {err}");
+        assert_eq!(std::fs::read(&p).unwrap(), rec, "legacy journal was modified");
+        std::fs::remove_file(&p).unwrap();
+
+        // A legacy SDSH artifact rode inside an SDCK checkpoint frame, so
+        // the raw file leads with the container's magic — also refused by
+        // name, also untouched.
+        let p = tmp("legacy-artifact");
+        let _ = std::fs::remove_file(&p);
+        let fake = b"SDCK then whatever the frame held".to_vec();
+        std::fs::write(&p, &fake).unwrap();
+        let err = Wal::open(&p, &meta()).unwrap_err().to_string();
+        assert!(err.contains("SDSH") || err.contains("SDCK"), "{err}");
+        assert!(err.contains("SDWL"), "missing reader format name: {err}");
+        assert_eq!(std::fs::read(&p).unwrap(), fake, "legacy artifact was modified");
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn version_drift_is_refused_naming_both_versions() {
+        // A hand-built WAL whose header claims version 2: the reader must
+        // refuse it naming both versions, and must NOT truncate it.
+        let p = tmp("v2");
+        let _ = std::fs::remove_file(&p);
+        let mut body = Vec::new();
+        body.extend_from_slice(MAGIC);
+        body.extend_from_slice(&2u32.to_le_bytes());
+        body.extend_from_slice(&meta().seed.to_le_bytes());
+        body.extend_from_slice(&meta().shard_index.to_le_bytes());
+        body.extend_from_slice(&meta().shard_count.to_le_bytes());
+        body.extend_from_slice(&meta().total_tasks.to_le_bytes());
+        body.extend_from_slice(&meta().spec_hash.to_le_bytes());
+        let mut rec = Vec::new();
+        rec.extend_from_slice(&(body.len() as u32).to_le_bytes());
+        rec.extend_from_slice(&crc32(&body).to_le_bytes());
+        rec.extend_from_slice(&body);
+        std::fs::write(&p, &rec).unwrap();
+        let err = Wal::open(&p, &meta()).unwrap_err().to_string();
+        assert!(err.contains("version 2"), "missing file version: {err}");
+        assert!(err.contains("version 1"), "missing reader version: {err}");
+        assert_eq!(std::fs::read(&p).unwrap(), rec, "v2 WAL was modified");
+        std::fs::remove_file(&p).unwrap();
+    }
+}

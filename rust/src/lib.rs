@@ -39,7 +39,7 @@
 //! | [`recovery`] | Algorithms 1 and 2: rollback orchestration |
 //! | [`coordinator`] | the SEDAR run controller (strategy × app × injection) |
 //! | [`campaign`] | parallel sweep of the workfault × apps × strategies |
-//! | [`fleet`] | sharded multi-process sweeps: shard plans, durable artifacts, resume journal, status endpoint, self-healing launch driver |
+//! | [`fleet`] | sharded multi-process sweeps: shard plans, per-shard write-ahead log (resume = replay), status endpoint, self-healing launch driver |
 //! | [`apps`] | matmul (Master/Worker), Jacobi (SPMD), Smith-Waterman (pipeline) |
 //! | [`workfault`] | the 64-scenario workfault catalog + prediction oracle (§4.1) |
 //! | [`model`] | analytical temporal model: Equations 1–14 + AET (§3.4, §4.3-4.4) |

@@ -8,13 +8,14 @@
 //!                [--netfault none|drop|dup|reorder|corrupt|mixed]
 //! sedar campaign [--jobs 8] [--seed 42] [--filter app=matmul,strategy=sys,scenario=1-8]
 //!                [--report md|csv] [--xla] [--run-dir DIR] [--quiet]
-//!                [--shard i/N] [--out shard.bin] [--journal sweep.journal]
+//!                [--shard i/N] [--wal shard.wal]
 //!                [--status-port 8080] [--report-out report.md] [--trace-out DIR]
 //! sedar trace    export FILE [--format chrome] [--out trace.json]
 //! sedar fleet launch --shards N [--jobs J] [--seed S] [--filter …] [--dir D]
 //!                [--max-restarts R] [--stall-secs T] [--poll-ms P]
-//!                [--report md|csv] [--report-out report.md] [--quiet]
-//! sedar merge    shard1.bin shard2.bin … [--report md|csv] [--report-out report.md]
+//!                [--status-port P] [--report md|csv] [--report-out report.md]
+//!                [--quiet]
+//! sedar merge    shard1.wal shard2.wal … [--report md|csv] [--report-out report.md]
 //!                [--allow-partial]
 //! sedar conform  --runs N [--seed S] [--filter …] [--jobs J] [--dir D]
 //! sedar catalog                                           # print Table 2 (all 64 rows)
@@ -86,11 +87,13 @@ commands:
   fleet     drive a whole multi-process fleet with one command:
             `fleet launch` spawns N shard processes, monitors their status
             endpoints and exit codes, relaunches any shard that dies or
-            stalls (journal resume skips finished tasks), and auto-merges
-            the artifacts into the final report
-  merge     combine shard artifacts written by `campaign --shard i/N --out F`
+            stalls (WAL replay skips finished tasks), streams every shard's
+            WAL into a live partial aggregate as tasks land, and renders the
+            final report from that same stream
+  merge     combine shard WALs written by `campaign --shard i/N --wal F`
             into the full sweep's report (byte-identical to a single-process
-            run with the same --seed)
+            run with the same --seed); live or partial WALs union with
+            --allow-partial
   conform   replay the same campaign slice N times and byte-compare every
             deterministic artifact (report + per-task trace logs); on the
             first mismatch, localize it — artifact, byte offset, 16-byte
@@ -144,10 +147,12 @@ trace flags:
 fleet flags (sharded / resumable / observable sweeps):
   --shard i/N      run only member i of an N-way deterministic split
                    (1-based; round-robin over canonical task indices)
-  --out FILE       write this shard's durable outcome artifact (merge the
-                   N artifacts with `sedar merge`)
-  --journal FILE   journal completed tasks; a re-run with the same journal
-                   resumes, skipping every finished task
+  --wal FILE       the shard's write-ahead log — its ONE durable file:
+                   every finished task is appended (and synced) as it
+                   lands, compaction snapshots ride in the same stream, a
+                   re-run over the same WAL resumes by replay (skipping
+                   every finished task), and `sedar merge` combines the N
+                   WALs into the full report
   --status-port P  serve live progress on http://127.0.0.1:P/ (text) and
                    /json while the sweep runs (0 = OS-assigned)
   --status-addr-file F  atomically write the endpoint's actual address to F
@@ -158,20 +163,25 @@ fleet flags (sharded / resumable / observable sweeps):
 
 fleet launch flags (one-command self-healing fleets):
   --shards N       spawn N `campaign --shard i/N` child processes, each
-                   with a journal, artifact and status endpoint under the
-                   run directory (default 2)
+                   with a WAL and status endpoint under the run directory
+                   (default 2)
   --jobs J         worker threads per shard (default: the machine's
                    default budget split evenly across shards)
   --seed S / --filter F / --scenario K   as for campaign (forwarded)
-  --dir D          run directory for journals, artifacts, logs, pid and
-                   addr files (default runs/fleet-<pid>)
+  --dir D          run directory for WALs, logs, pid and addr files
+                   (default runs/fleet-<pid>)
   --max-restarts R relaunch budget per shard; a shard that dies or stalls
-                   is relaunched (resuming from its journal) at most R
-                   times before the launch fails (default 3)
+                   is relaunched (replaying its WAL) at most R times
+                   before the launch fails (default 3)
   --stall-secs T   no status heartbeat advance for T seconds counts as a
                    stall -> kill + relaunch; must exceed the slowest
                    single task (default 300)
   --poll-ms P      supervisor poll cadence (default 200)
+  --status-port P  serve the fleet-wide live partial aggregate (the union
+                   of every shard's WAL so far) on http://127.0.0.1:P/
+                   (text), /json and /metrics (0 = OS-assigned)
+  --status-addr-file F  atomically write that endpoint's address to F
+                   once it binds (implies --status-port 0)
   --report FMT / --report-out F          as for campaign (merged report)
   --quiet          suppress the live aggregate progress line
 
@@ -310,10 +320,29 @@ fn cmd_campaign(args: &Args) -> Result<()> {
             "unknown report '{report_fmt}' (md|csv)"
         )));
     }
+    // The retired two-file flags fail fast with a pointer at the WAL: an
+    // operator's muscle memory (or an old script) must get a migration
+    // hint, not a silently ignored flag.
+    if args.get("out").is_some() {
+        return Err(SedarError::Config(
+            "campaign: --out is gone — the SDWL write-ahead log replaced the \
+             journal+artifact pair; pass --wal FILE (one durable file per \
+             shard, merged with `sedar merge`)"
+                .into(),
+        ));
+    }
+    if args.get("journal").is_some() {
+        return Err(SedarError::Config(
+            "campaign: --journal is gone — the SDWL write-ahead log replaced \
+             the journal+artifact pair; pass --wal FILE (resume works the \
+             same: re-run with the same --wal and finished tasks are \
+             replayed, not re-executed)"
+                .into(),
+        ));
+    }
     let opts = FleetOptions {
         plan: args.get("shard").map(ShardPlan::parse).transpose()?,
-        journal_path: args.get("journal").map(Into::into),
-        artifact_path: args.get("out").map(Into::into),
+        wal_path: args.get("wal").map(Into::into),
         status_port: match args.get("status-port") {
             // `--status-addr-file` without an explicit port implies an
             // OS-assigned one (the supervisor's handshake needs nothing
@@ -357,8 +386,8 @@ fn cmd_campaign(args: &Args) -> Result<()> {
     let report = CampaignReport::new(spec.seed, run.outcomes);
     emit_report(args, report_fmt, &report)?;
     println!("\n{}", report.summary_line());
-    if let Some(path) = &run.artifact_path {
-        println!("shard artifact: {}", path.display());
+    if let Some(path) = &run.wal_path {
+        println!("shard WAL: {}", path.display());
     }
     let _ = std::fs::remove_dir_all(&spec.base.run_dir);
     if !report.verdict() {
@@ -404,6 +433,16 @@ fn cmd_fleet_launch(args: &Args) -> Result<()> {
         poll_interval: std::time::Duration::from_millis(args.u64_or("poll-ms", 200)?.max(10)),
         bin: None,
         quiet: args.has("quiet"),
+        status_port: match args.get("status-port") {
+            // As for campaign: an addr file without an explicit port
+            // implies an OS-assigned one.
+            None => args.get("status-addr-file").map(|_| 0),
+            Some(p) => Some(
+                p.parse()
+                    .map_err(|e| SedarError::Config(format!("--status-port: {e}")))?,
+            ),
+        },
+        status_addr_file: args.get("status-addr-file").map(Into::into),
     };
     let launch = sedar::fleet::launch::run_launch(&opts)?;
     emit_report(args, report_fmt, &launch.report)?;
@@ -441,18 +480,22 @@ fn cmd_merge(args: &Args) -> Result<()> {
     let paths: Vec<&str> = args.positional.iter().map(|s| s.as_str()).collect();
     if paths.is_empty() {
         return Err(SedarError::Config(
-            "merge: name at least one shard artifact (sedar merge s1.bin s2.bin …)".into(),
+            "merge: name at least one shard WAL (sedar merge s1.wal s2.wal …)".into(),
         ));
     }
+    // One read path for everything: the same lenient WAL replay a resuming
+    // shard uses, so merging the WAL of a still-running shard is safe (its
+    // torn tail is simply not part of the union yet).
     let mut shards = Vec::with_capacity(paths.len());
     for path in &paths {
-        shards.push(sedar::fleet::artifact::read_artifact(std::path::Path::new(path))?);
+        shards.push(sedar::fleet::snapshot::read_wal(std::path::Path::new(path))?);
     }
-    let (seed, total_tasks, outcomes) = sedar::fleet::artifact::merge_artifacts(shards)?;
+    let (seed, total_tasks, outcomes) = sedar::fleet::snapshot::merge_wals(shards)?;
     if (outcomes.len() as u64) < total_tasks && !args.has("allow-partial") {
         return Err(SedarError::Config(format!(
-            "merge: shards cover {} of {} task(s) — some shard artifacts are \
-             missing (pass --allow-partial to render the union anyway)",
+            "merge: shards cover {} of {} task(s) — some shard WALs are \
+             missing or still being written (pass --allow-partial to render \
+             the union anyway)",
             outcomes.len(),
             total_tasks
         )));

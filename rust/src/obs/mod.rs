@@ -6,10 +6,11 @@
 //! can be serialized, diffed byte-for-byte in CI, and exported to the
 //! Chrome trace-event JSON that Perfetto loads (`sedar trace export`).
 //!
-//! The on-disk log reuses the fleet journal's framing discipline
-//! (`len u32 | crc32 u32 | body` per record, a versioned magic header
-//! first), so storage corruption surfaces as a recoverable error, exactly
-//! like a corrupt shard artifact:
+//! The on-disk log uses the shared framing codec
+//! ([`crate::util::frame`]: `len u32 | crc32 u32 | body` per record, a
+//! versioned magic header first) in its strict discipline — a trace log is
+//! written whole, so a record that does not frame is storage corruption
+//! and surfaces as a recoverable error, exactly like a corrupt fleet WAL:
 //!
 //! ```text
 //! file   := header-record record*
@@ -24,15 +25,12 @@
 use std::path::Path;
 
 use crate::error::{Result, SedarError};
-use crate::fleet::artifact::ByteReader;
 use crate::metrics::{Phase, Span};
 use crate::util::clock::Tick;
-use crate::util::codec::crc32;
+use crate::util::frame::{frame, push_string, read_record, ByteReader};
 
 const MAGIC: &[u8; 4] = b"SDTR";
 const VERSION: u32 = 1;
-/// Sanity cap on a single record body; real records are ≪ this.
-const MAX_RECORD: usize = 1 << 24;
 
 /// Rank value that marks a coordinator-level event.
 pub const COORD_RANK: u32 = u32::MAX;
@@ -146,11 +144,6 @@ pub fn canonicalize_events(events: &mut [Event]) {
     events.sort_by_key(|e| (e.tick, e.rank, e.replica, e.kind.ordinal()));
 }
 
-fn push_string(out: &mut Vec<u8>, s: &str) {
-    out.extend_from_slice(&(s.len() as u32).to_le_bytes());
-    out.extend_from_slice(s.as_bytes());
-}
-
 fn encode_event(e: &Event, out: &mut Vec<u8>) {
     out.push(0); // record tag: event
     out.extend_from_slice(&e.tick.to_le_bytes());
@@ -217,12 +210,6 @@ enum RecordBody {
     Span(Span),
 }
 
-fn frame(body: &[u8], out: &mut Vec<u8>) {
-    out.extend_from_slice(&(body.len() as u32).to_le_bytes());
-    out.extend_from_slice(&crc32(body).to_le_bytes());
-    out.extend_from_slice(body);
-}
-
 /// Serialize a run's events and spans to their canonical byte form.
 /// Inputs are canonicalized first, so the bytes are independent of the
 /// emission interleaving — two same-seed virtual-clock runs agree on them
@@ -252,32 +239,9 @@ pub fn encode_log(events: &[Event], spans: &[Span]) -> Vec<u8> {
     out
 }
 
-/// `Ok((body, end_offset))` for the CRC-valid record starting at `pos`.
-fn next_record(data: &[u8], pos: usize, what: &str) -> Result<(&[u8], usize)> {
-    if data.len() - pos < 8 {
-        return Err(SedarError::Checkpoint(format!(
-            "trace log truncated in {what} at offset {pos}"
-        )));
-    }
-    let len = u32::from_le_bytes(data[pos..pos + 4].try_into().unwrap()) as usize;
-    let crc = u32::from_le_bytes(data[pos + 4..pos + 8].try_into().unwrap());
-    if len > MAX_RECORD || data.len() - pos - 8 < len {
-        return Err(SedarError::Checkpoint(format!(
-            "trace log truncated in {what} at offset {pos}"
-        )));
-    }
-    let body = &data[pos + 8..pos + 8 + len];
-    if crc32(body) != crc {
-        return Err(SedarError::Checkpoint(format!(
-            "trace log CRC mismatch in {what} at offset {pos}"
-        )));
-    }
-    Ok((body, pos + 8 + len))
-}
-
 /// Parse trace-log bytes back into events and spans.
 pub fn decode_log(data: &[u8]) -> Result<(Vec<Event>, Vec<Span>)> {
-    let (header, mut pos) = next_record(data, 0, "header")?;
+    let (header, mut pos) = read_record(data, 0, "trace log header")?;
     let mut r = ByteReader::new(header, "trace log header");
     if r.bytes(4)? != MAGIC {
         return Err(SedarError::Checkpoint(
@@ -295,7 +259,7 @@ pub fn decode_log(data: &[u8]) -> Result<(Vec<Event>, Vec<Span>)> {
     let mut events = Vec::new();
     let mut spans = Vec::new();
     while pos < data.len() {
-        let (body, end) = next_record(data, pos, "record")?;
+        let (body, end) = read_record(data, pos, "trace log record")?;
         match decode_record(body)? {
             RecordBody::Event(e) => events.push(e),
             RecordBody::Span(s) => spans.push(s),
@@ -402,6 +366,7 @@ pub fn chrome_json(events: &[Event], spans: &[Span]) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::codec::crc32;
 
     fn event(tick: Tick, rank: u32, kind: EventKind, detail: &str) -> Event {
         Event {

@@ -62,7 +62,7 @@ pub fn crc32(bytes: &[u8]) -> u32 {
 
 /// Digest state folded over the encoder's single scan of the payload:
 /// CRC-32 always, SHA-256 on request (the user-checkpoint path needs both;
-/// system checkpoints and fleet artifacts need only the CRC).
+/// system checkpoints and fleet WAL records need only the CRC).
 pub struct PassState {
     crc: u32,
     sha: Option<Sha256>,

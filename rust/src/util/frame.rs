@@ -1,0 +1,277 @@
+//! The one CRC-framed record codec behind every durable SEDAR stream.
+//!
+//! The fleet write-ahead log (`SDWL`, [`crate::fleet::wal`]) and the trace
+//! log (`SDTR`, [`crate::obs`]) persist the same physical shape:
+//!
+//! ```text
+//! stream := record*
+//! record := len u32 | crc32(body) u32 | body
+//! ```
+//!
+//! Historically each stream hand-rolled its own copy of this framing with
+//! its own torn-tail policy; this module is the single implementation, with
+//! the two read disciplines both policies reduce to:
+//!
+//! * [`next_record`] — the **lenient** scan for append-only logs that may
+//!   legitimately end mid-record (the process died mid-append, or a live
+//!   reader raced a writer). Anything that does not frame — short header,
+//!   implausible length, short body, CRC mismatch — is `None`: the torn
+//!   tail ends the valid prefix, it is not an error.
+//! * [`read_record`] — the **strict** read for write-once files (trace
+//!   logs) where a record that does not frame is corruption and must
+//!   surface as a typed error naming the offset.
+//!
+//! [`ByteReader`] (bounds-checked little-endian decoding over a record
+//! body) and [`push_string`] live here too, shared by every body codec.
+
+use std::io::Write;
+
+use crate::error::{Result, SedarError};
+use crate::util::codec::crc32;
+
+/// Sanity cap on a single record body; real SEDAR records are ≪ this. A
+/// length field above the cap is treated as framing damage (lenient) or
+/// corruption (strict), never as an allocation request.
+pub const MAX_RECORD: usize = 1 << 24;
+
+/// Append one framed record (`len | crc | body`) to an in-memory buffer.
+pub fn frame(body: &[u8], out: &mut Vec<u8>) {
+    out.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    out.extend_from_slice(&crc32(body).to_le_bytes());
+    out.extend_from_slice(body);
+}
+
+/// Durably append one framed record to `file`: the bytes are written in a
+/// single `write_all` and synced (`sync_data`) before returning, so a kill
+/// immediately afterwards cannot lose the record — at worst it tears the
+/// *next* one, which the lenient scan drops.
+pub fn write_record(file: &mut std::fs::File, body: &[u8]) -> Result<()> {
+    let mut rec = Vec::with_capacity(8 + body.len());
+    frame(body, &mut rec);
+    file.write_all(&rec)?;
+    file.sync_data()?;
+    Ok(())
+}
+
+/// Lenient scan: `Some((body, end_offset))` if a whole, CRC-valid record
+/// starts at `pos`; `None` for a torn or foreign tail.
+pub fn next_record(data: &[u8], pos: usize) -> Option<(&[u8], usize)> {
+    if data.len() - pos < 8 {
+        return None;
+    }
+    let len = u32::from_le_bytes(data[pos..pos + 4].try_into().unwrap()) as usize;
+    let crc = u32::from_le_bytes(data[pos + 4..pos + 8].try_into().unwrap());
+    if len > MAX_RECORD || data.len() - pos - 8 < len {
+        return None;
+    }
+    let body = &data[pos + 8..pos + 8 + len];
+    if crc32(body) != crc {
+        return None;
+    }
+    Some((body, pos + 8 + len))
+}
+
+/// Strict read: `Ok((body, end_offset))` for the CRC-valid record starting
+/// at `pos`; truncation and CRC damage are typed errors carrying `what`
+/// ("trace log header", "trace log record", …) and the byte offset.
+pub fn read_record<'a>(data: &'a [u8], pos: usize, what: &str) -> Result<(&'a [u8], usize)> {
+    if data.len() - pos < 8 {
+        return Err(SedarError::Checkpoint(format!(
+            "{what} truncated at offset {pos}"
+        )));
+    }
+    let len = u32::from_le_bytes(data[pos..pos + 4].try_into().unwrap()) as usize;
+    let crc = u32::from_le_bytes(data[pos + 4..pos + 8].try_into().unwrap());
+    if len > MAX_RECORD || data.len() - pos - 8 < len {
+        return Err(SedarError::Checkpoint(format!(
+            "{what} truncated at offset {pos}"
+        )));
+    }
+    let body = &data[pos + 8..pos + 8 + len];
+    if crc32(body) != crc {
+        return Err(SedarError::Checkpoint(format!(
+            "{what} CRC mismatch at offset {pos}"
+        )));
+    }
+    Ok((body, pos + 8 + len))
+}
+
+/// Length-prefixed string encoding shared by every record body codec.
+pub fn push_string(out: &mut Vec<u8>, s: &str) {
+    out.extend_from_slice(&(s.len() as u32).to_le_bytes());
+    out.extend_from_slice(s.as_bytes());
+}
+
+/// Bounds-checked little-endian reader over a decoded record body.
+pub struct ByteReader<'a> {
+    data: &'a [u8],
+    pos: usize,
+    /// Context for error messages ("WAL outcome record", "trace log", …).
+    what: &'static str,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(data: &'a [u8], what: &'static str) -> ByteReader<'a> {
+        ByteReader { data, pos: 0, what }
+    }
+
+    pub fn what(&self) -> &'static str {
+        self.what
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.data.len() - self.pos
+    }
+
+    fn truncated<T>(&self) -> Result<T> {
+        Err(SedarError::Checkpoint(format!(
+            "{} truncated at offset {}",
+            self.what, self.pos
+        )))
+    }
+
+    pub fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            return self.truncated();
+        }
+        let s = &self.data[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.bytes(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
+    }
+
+    pub fn string(&mut self) -> Result<String> {
+        let len = self.u32()? as usize;
+        // Defensive cap: a corrupt length must not allocate the moon. Any
+        // legitimate site/mismatch string is far below this.
+        if len > 1 << 20 {
+            return Err(SedarError::Checkpoint(format!(
+                "{}: implausible string length {len}",
+                self.what
+            )));
+        }
+        let raw = self.bytes(len)?;
+        String::from_utf8(raw.to_vec()).map_err(|_| {
+            SedarError::Checkpoint(format!("{}: non-UTF-8 string payload", self.what))
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_roundtrips_through_both_readers() {
+        let mut buf = Vec::new();
+        frame(b"alpha", &mut buf);
+        frame(b"", &mut buf);
+        frame("βγ".as_bytes(), &mut buf);
+
+        let (a, p) = next_record(&buf, 0).unwrap();
+        let (b, p) = next_record(&buf, p).unwrap();
+        let (c, p) = next_record(&buf, p).unwrap();
+        assert_eq!((a, b, c), (&b"alpha"[..], &b""[..], "βγ".as_bytes()));
+        assert_eq!(p, buf.len());
+        assert!(next_record(&buf, p).is_none(), "clean EOF is not a record");
+
+        let (a2, q) = read_record(&buf, 0, "test stream").unwrap();
+        assert_eq!(a2, b"alpha");
+        assert_eq!(q, 8 + 5);
+    }
+
+    #[test]
+    fn torn_tails_are_none_leniently_and_errors_strictly() {
+        let mut buf = Vec::new();
+        frame(b"whole", &mut buf);
+        frame(b"torn-away", &mut buf);
+        let torn = &buf[..buf.len() - 3];
+
+        let (_, mid) = next_record(torn, 0).unwrap();
+        assert!(next_record(torn, mid).is_none(), "torn tail must not frame");
+        let err = read_record(torn, mid, "test stream").unwrap_err().to_string();
+        assert!(err.contains("truncated at offset 13"), "{err}");
+    }
+
+    #[test]
+    fn crc_damage_is_none_leniently_and_named_strictly() {
+        let mut buf = Vec::new();
+        frame(b"payload", &mut buf);
+        buf[10] ^= 0x40; // flip a body byte under an intact header
+        assert!(next_record(&buf, 0).is_none());
+        let err = read_record(&buf, 0, "test stream").unwrap_err().to_string();
+        assert!(err.contains("CRC mismatch at offset 0"), "{err}");
+    }
+
+    #[test]
+    fn implausible_length_is_framing_damage_not_an_allocation() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(u32::MAX).to_le_bytes());
+        buf.extend_from_slice(&0u32.to_le_bytes());
+        buf.extend_from_slice(&[0u8; 64]);
+        assert!(next_record(&buf, 0).is_none());
+        assert!(read_record(&buf, 0, "test stream").is_err());
+    }
+
+    #[test]
+    fn write_record_appends_synced_framed_bytes() {
+        let p = std::env::temp_dir().join(format!(
+            "sedar-frame-{}-{:?}.bin",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_file(&p);
+        {
+            let mut f = std::fs::File::create(&p).unwrap();
+            write_record(&mut f, b"one").unwrap();
+            write_record(&mut f, b"two").unwrap();
+        }
+        let data = std::fs::read(&p).unwrap();
+        let (a, mid) = next_record(&data, 0).unwrap();
+        let (b, end) = next_record(&data, mid).unwrap();
+        assert_eq!((a, b), (&b"one"[..], &b"two"[..]));
+        assert_eq!(end, data.len());
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn byte_reader_guards_every_primitive() {
+        let mut body = Vec::new();
+        body.push(7u8);
+        body.extend_from_slice(&0xABCDu32.to_le_bytes());
+        body.extend_from_slice(&0xFEED_F00Du64.to_le_bytes());
+        push_string(&mut body, "héllo");
+
+        let mut r = ByteReader::new(&body, "test body");
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u32().unwrap(), 0xABCD);
+        assert_eq!(r.u64().unwrap(), 0xFEED_F00D);
+        assert_eq!(r.string().unwrap(), "héllo");
+        assert_eq!(r.remaining(), 0);
+        assert!(r.u8().is_err(), "reads past the end must error");
+
+        // An implausible string length errors before allocating.
+        let mut huge = Vec::new();
+        huge.extend_from_slice(&(u32::MAX).to_le_bytes());
+        let err = ByteReader::new(&huge, "test body").string().unwrap_err();
+        assert!(err.to_string().contains("implausible string length"));
+
+        // Non-UTF-8 payloads are refused, not lossily converted.
+        let mut bad = Vec::new();
+        bad.extend_from_slice(&2u32.to_le_bytes());
+        bad.extend_from_slice(&[0xFF, 0xFE]);
+        let err = ByteReader::new(&bad, "test body").string().unwrap_err();
+        assert!(err.to_string().contains("non-UTF-8"));
+    }
+}

@@ -6,6 +6,7 @@ pub mod arena;
 pub mod bytes;
 pub mod clock;
 pub mod codec;
+pub mod frame;
 pub mod logger;
 pub mod prng;
 pub mod sha256;

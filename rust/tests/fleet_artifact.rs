@@ -1,7 +1,7 @@
-//! Durable shard artifacts: encode→decode round-trips (including
-//! non-ASCII mismatch notes and empty shards), merge idempotence and
-//! commutativity across shard orders, and rejection of truncated or
-//! corrupted frames.
+//! Durable shard WALs: append→recover round-trips (including non-ASCII
+//! mismatch notes and empty shards), merge idempotence and commutativity
+//! across shard orders, torn-tail tolerance, and version hygiene — the
+//! SDWL reader must refuse the retired `SDJL`/`SDSH` formats by name.
 
 use std::time::Duration;
 
@@ -11,12 +11,13 @@ use sedar::config::{CollectiveImpl, Strategy};
 use sedar::detect::ValidationMode;
 use sedar::error::FaultClass;
 use sedar::faultnet::NetFaultMode;
-use sedar::fleet::artifact::{merge_artifacts, read_artifact, write_artifact, ShardMeta};
+use sedar::fleet::snapshot::{merge_wals, read_wal};
+use sedar::fleet::wal::{ShardMeta, Wal};
 use sedar::recovery::ResumeFrom;
 
 fn tmpfile(tag: &str) -> std::path::PathBuf {
     std::env::temp_dir().join(format!(
-        "sedar-artifact-{tag}-{}-{:?}.bin",
+        "sedar-wal-{tag}-{}-{:?}.wal",
         std::process::id(),
         std::thread::current().id()
     ))
@@ -98,12 +99,23 @@ fn plain(index: usize) -> TaskOutcome {
     }
 }
 
+/// Write a complete shard WAL (append every outcome, then finalize).
+fn write_wal(path: &std::path::Path, m: &ShardMeta, outcomes: &[TaskOutcome]) {
+    let _ = std::fs::remove_file(path);
+    let (mut w, recovered) = Wal::open(path, m).unwrap();
+    assert!(recovered.is_empty(), "fresh WAL recovered outcomes");
+    for o in outcomes {
+        w.append(o).unwrap();
+    }
+    w.finalize().unwrap();
+}
+
 #[test]
-fn file_roundtrip_preserves_everything() {
+fn wal_roundtrip_preserves_everything() {
     let p = tmpfile("roundtrip");
     let outcomes = vec![plain(0), ornate(2), plain(4)];
-    write_artifact(&p, &meta(0, 2), &outcomes).unwrap();
-    let (m, back) = read_artifact(&p).unwrap();
+    write_wal(&p, &meta(0, 2), &outcomes);
+    let (m, back) = read_wal(&p).unwrap();
     assert_eq!(m, meta(0, 2));
     assert_eq!(back.len(), 3);
     // Field-for-field equality via Debug (TaskOutcome has no PartialEq).
@@ -116,8 +128,8 @@ fn file_roundtrip_preserves_everything() {
 #[test]
 fn empty_shard_roundtrips() {
     let p = tmpfile("empty");
-    write_artifact(&p, &meta(1, 2), &[]).unwrap();
-    let (m, back) = read_artifact(&p).unwrap();
+    write_wal(&p, &meta(1, 2), &[]);
+    let (m, back) = read_wal(&p).unwrap();
     assert_eq!(m.shard_index, 1);
     assert!(back.is_empty());
     std::fs::remove_file(&p).unwrap();
@@ -127,8 +139,8 @@ fn empty_shard_roundtrips() {
 fn merge_is_idempotent_and_commutative_over_shard_order() {
     let a = (meta(0, 2), vec![plain(0), ornate(2), plain(4)]);
     let b = (meta(1, 2), vec![plain(1), plain(3), plain(5)]);
-    let (seed_ab, total_ab, ab) = merge_artifacts(vec![a.clone(), b.clone()]).unwrap();
-    let (seed_ba, total_ba, ba) = merge_artifacts(vec![b.clone(), a.clone()]).unwrap();
+    let (seed_ab, total_ab, ab) = merge_wals(vec![a.clone(), b.clone()]).unwrap();
+    let (seed_ba, total_ba, ba) = merge_wals(vec![b.clone(), a.clone()]).unwrap();
     assert_eq!((seed_ab, total_ab), (seed_ba, total_ba));
     assert_eq!(
         CampaignReport::new(seed_ab, ab).deterministic_report(),
@@ -136,15 +148,17 @@ fn merge_is_idempotent_and_commutative_over_shard_order() {
         "merge must be commutative over shard order"
     );
     // Idempotent: merging the merged set with nothing new changes nothing.
-    let (_, _, once) = merge_artifacts(vec![a.clone(), b.clone()]).unwrap();
-    let (_, _, again) = merge_artifacts(vec![(meta(0, 1), once.clone())]).unwrap();
+    let (_, _, once) = merge_wals(vec![a.clone(), b.clone()]).unwrap();
+    let (_, _, again) = merge_wals(vec![(meta(0, 1), once.clone())]).unwrap();
     assert_eq!(format!("{once:?}"), format!("{again:?}"));
 }
 
 #[test]
 fn merge_rejects_overlap_seed_and_spec_drift() {
-    // Overlapping task indices.
-    let err = merge_artifacts(vec![
+    // Two *different* shards claiming one task index: rejected when the
+    // union is materialized. (Feeding the *same* shard twice is idempotent
+    // by design — the live merger replaces that shard's contribution.)
+    let err = merge_wals(vec![
         (meta(0, 2), vec![plain(0)]),
         (meta(1, 2), vec![plain(0)]),
     ])
@@ -154,52 +168,130 @@ fn merge_rejects_overlap_seed_and_spec_drift() {
     // Mismatched seeds.
     let mut other_seed = meta(1, 2);
     other_seed.seed = 43;
-    assert!(merge_artifacts(vec![(meta(0, 2), vec![plain(0)]), (other_seed, vec![plain(1)])])
-        .is_err());
+    assert!(
+        merge_wals(vec![(meta(0, 2), vec![plain(0)]), (other_seed, vec![plain(1)])]).is_err()
+    );
 
     // Mismatched filtered-sweep widths.
     let mut other_total = meta(1, 2);
     other_total.total_tasks = 7;
-    assert!(merge_artifacts(vec![(meta(0, 2), vec![plain(0)]), (other_total, vec![plain(1)])])
-        .is_err());
+    assert!(
+        merge_wals(vec![(meta(0, 2), vec![plain(0)]), (other_total, vec![plain(1)])]).is_err()
+    );
 
     // Same seed and width, different filter set (spec fingerprint drift —
     // e.g. scenario=1-12 vs scenario=13-24 both yield 12 tasks).
     let mut other_spec = meta(1, 2);
     other_spec.spec_hash = 0xF1E7_0002;
-    let err = merge_artifacts(vec![(meta(0, 2), vec![plain(0)]), (other_spec, vec![plain(1)])])
+    let err = merge_wals(vec![(meta(0, 2), vec![plain(0)]), (other_spec, vec![plain(1)])])
         .unwrap_err();
     assert!(err.to_string().contains("--filter"), "got: {err}");
 
     // No shards at all.
-    assert!(merge_artifacts(vec![]).is_err());
+    assert!(merge_wals(vec![]).is_err());
 }
 
 #[test]
-fn truncated_and_corrupted_files_are_rejected() {
-    let p = tmpfile("corrupt");
-    write_artifact(&p, &meta(0, 2), &[plain(0), ornate(2)]).unwrap();
-    let pristine = std::fs::read(&p).unwrap();
+fn same_shard_ingested_twice_replaces_instead_of_erroring() {
+    // The streaming supervisor re-reads a live WAL every time it grows; the
+    // union must absorb the re-read, not reject it as an overlap.
+    let early = (meta(0, 1), vec![plain(0), plain(1)]);
+    let later = (meta(0, 1), vec![plain(0), plain(1), ornate(2)]);
+    let (_, _, merged) = merge_wals(vec![early, later]).unwrap();
+    assert_eq!(merged.len(), 3, "later read must replace the earlier one");
+}
 
-    // Truncation at any point of the frame must error, never panic.
-    for cut in [0, 5, 23, pristine.len() / 2, pristine.len() - 1] {
+#[test]
+fn torn_tail_drops_records_but_never_errors() {
+    // A reader racing the writer (or a crash mid-append) sees a torn last
+    // frame: the valid prefix must read cleanly, the tail silently dropped.
+    let p = tmpfile("torn");
+    write_wal(&p, &meta(0, 2), &[plain(0), ornate(2)]);
+    let pristine = std::fs::read(&p).unwrap();
+    let (_, full) = read_wal(&p).unwrap();
+    assert_eq!(full.len(), 2);
+
+    // Chop anywhere past the header: the read succeeds with a (possibly
+    // shorter) prefix of the outcomes, never a panic or error.
+    for cut in [48, 53, pristine.len() / 2, pristine.len() - 1] {
         std::fs::write(&p, &pristine[..cut]).unwrap();
-        assert!(read_artifact(&p).is_err(), "accepted {cut}-byte prefix");
+        let (m, back) = read_wal(&p).unwrap();
+        assert_eq!(m, meta(0, 2));
+        assert!(back.len() <= 2, "cut at {cut} invented outcomes");
     }
 
-    // A single flipped payload byte trips the frame CRC.
+    // Chopping *into the header* is a hard error — the file's identity is
+    // gone, so resume cannot trust it.
+    for cut in [0, 5, 23] {
+        std::fs::write(&p, &pristine[..cut]).unwrap();
+        assert!(read_wal(&p).is_err(), "accepted {cut}-byte header prefix");
+    }
+
+    // A flipped payload byte trips that record's CRC and ends the valid
+    // prefix there. Bending the *first* outcome record (the header is the
+    // first 48 bytes) leaves nothing recoverable…
+    let mut bent = pristine.clone();
+    bent[60] ^= 0x40;
+    std::fs::write(&p, &bent).unwrap();
+    let (_, back) = read_wal(&p).unwrap();
+    assert!(back.is_empty(), "corrupted record accepted");
+
+    // …while bending the trailing compaction snapshot only loses the
+    // snapshot: the reader falls back to the intact records before it.
     let mut bent = pristine.clone();
     let last = bent.len() - 3;
     bent[last] ^= 0x40;
     std::fs::write(&p, &bent).unwrap();
-    assert!(read_artifact(&p).is_err(), "corrupted payload accepted");
-
-    // Garbage that is not a frame at all.
-    std::fs::write(&p, b"not a shard artifact").unwrap();
-    assert!(read_artifact(&p).is_err());
+    let (_, back) = read_wal(&p).unwrap();
+    assert_eq!(back.len(), 2, "records before a torn snapshot must survive");
 
     // And the pristine bytes still read fine (the writer is not at fault).
     std::fs::write(&p, &pristine).unwrap();
-    assert!(read_artifact(&p).is_ok());
+    let (_, back) = read_wal(&p).unwrap();
+    assert_eq!(back.len(), 2);
+    std::fs::remove_file(&p).unwrap();
+}
+
+#[test]
+fn retired_formats_are_refused_by_name() {
+    // Version hygiene: the SDWL v1 reader names both the format it found
+    // and the format it reads, and never modifies the refused file.
+    let p = tmpfile("legacy");
+
+    // A v4-era resume journal (SDJL magic under the shared framing).
+    let mut body = Vec::new();
+    body.extend_from_slice(b"SDJL");
+    body.extend_from_slice(&4u32.to_le_bytes());
+    body.extend_from_slice(&[0u8; 32]);
+    let mut framed = Vec::new();
+    sedar::util::frame::frame(&body, &mut framed);
+    std::fs::write(&p, &framed).unwrap();
+    let err = read_wal(&p).unwrap_err().to_string();
+    assert!(err.contains("SDJL"), "journal not named: {err}");
+    assert!(err.contains("SDWL"), "replacement not named: {err}");
+    assert_eq!(std::fs::read(&p).unwrap(), framed, "refused file modified");
+
+    // A pre-SDWL shard artifact (an SDSH payload inside an SDCK container
+    // frame — the reader recognizes the container prefix).
+    let relic = b"SDCK pretending to hold an SDSH artifact".to_vec();
+    std::fs::write(&p, &relic).unwrap();
+    let err = read_wal(&p).unwrap_err().to_string();
+    assert!(
+        err.contains("SDSH") || err.contains("SDCK"),
+        "artifact not named: {err}"
+    );
+    assert!(err.contains("SDWL"), "replacement not named: {err}");
+    assert_eq!(std::fs::read(&p).unwrap(), relic, "refused file modified");
+
+    // Garbage that is no known format at all.
+    std::fs::write(&p, b"not a shard WAL").unwrap();
+    assert!(read_wal(&p).is_err());
+
+    // Resume (Wal::open) applies the same hygiene: it must not truncate or
+    // overwrite a file it did not positively identify as a WAL.
+    std::fs::write(&p, &framed).unwrap();
+    let err = Wal::open(&p, &meta(0, 2)).unwrap_err().to_string();
+    assert!(err.contains("SDJL") && err.contains("SDWL"), "got: {err}");
+    assert_eq!(std::fs::read(&p).unwrap(), framed, "refused file modified");
     std::fs::remove_file(&p).unwrap();
 }

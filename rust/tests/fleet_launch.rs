@@ -1,10 +1,11 @@
 //! End-to-end proof of the self-healing fleet driver: a shard process
 //! SIGKILLed mid-sweep is relaunched by `sedar fleet launch`, resumes from
-//! its journal (skipping every task that finished before the kill), and
-//! the auto-merged final report is **byte-identical** to the
-//! single-process `sedar campaign` run with the same `--seed` — SEDAR's
-//! detection + automatic-recovery discipline applied to the validation
-//! campaign itself.
+//! its WAL (skipping every task that finished before the kill), and the
+//! auto-merged final report is **byte-identical** to the single-process
+//! `sedar campaign` run with the same `--seed` — SEDAR's detection +
+//! automatic-recovery discipline applied to the validation campaign
+//! itself. A partial merge of one live WAL must render a strict prefix
+//! (row-wise) of that final report.
 //!
 //! Everything here goes through the real CLI binary (driver and children
 //! alike), so the test covers the spawn/monitor/relaunch/merge path the
@@ -17,14 +18,14 @@ use std::time::{Duration, Instant};
 
 /// 32 matmul × sys-ckpt tasks (16 scenarios × both collectives modes):
 /// 16 per shard in a 2-way split — enough that the kill below always
-/// lands mid-slice (the watcher fires after the *first* journaled
-/// outcome, leaving 15 tasks of window).
+/// lands mid-slice (the watcher fires after the *first* durable outcome,
+/// leaving 15 tasks of window).
 const FILTER: &str = "app=matmul,strategy=sys,scenario=1-16";
 const SEED: &str = "11";
 
-/// Journal bytes before the first outcome record: 8 bytes of framing plus
-/// the 40-byte sweep-identity header (see `fleet::journal`).
-const JOURNAL_HEADER_LEN: u64 = 48;
+/// WAL bytes before the first outcome record: 8 bytes of framing plus the
+/// 40-byte sweep-identity header (see `fleet::wal`).
+const WAL_HEADER_LEN: u64 = 48;
 
 fn bin() -> &'static str {
     env!("CARGO_BIN_EXE_sedar")
@@ -61,7 +62,7 @@ fn killed_shard_is_relaunched_and_merged_report_is_byte_identical() {
 
     // The fleet: 2 shards under one run directory, driven by the real
     // supervisor. --jobs 1 keeps each shard's slice strictly sequential so
-    // the journal length tracks progress one task at a time.
+    // the WAL length tracks progress one task at a time.
     let fleet_dir = dir.join("fleet");
     let merged_md = dir.join("merged.md");
     let driver_stdout = dir.join("driver.stdout");
@@ -78,27 +79,27 @@ fn killed_shard_is_relaunched_and_merged_report_is_byte_identical() {
         .spawn()
         .unwrap();
 
-    // Watch shard 1's journal; the per-record sync means a growing file is
-    // a truthful progress signal. Once at least one outcome is durable,
+    // Watch shard 1's WAL; the per-record sync means a growing file is a
+    // truthful progress signal. Once at least one outcome is durable,
     // SIGKILL the shard process named by its pid file — exactly the
     // failure the driver exists to heal.
-    let journal = fleet_dir.join("shard-1.journal");
+    let wal = fleet_dir.join("shard-1.wal");
     let pidfile = fleet_dir.join("shard-1.pid");
     let deadline = Instant::now() + Duration::from_secs(120);
     loop {
         assert!(
             Instant::now() < deadline,
-            "shard 1 never journaled an outcome"
+            "shard 1 never logged an outcome"
         );
         assert!(
             driver.try_wait().unwrap().is_none(),
             "driver exited before the kill landed"
         );
-        let journaled = journal
+        let logged = wal
             .metadata()
-            .map(|m| m.len() > JOURNAL_HEADER_LEN)
+            .map(|m| m.len() > WAL_HEADER_LEN)
             .unwrap_or(false);
-        if journaled && pidfile.exists() {
+        if logged && pidfile.exists() {
             break;
         }
         std::thread::sleep(Duration::from_millis(2));
@@ -126,12 +127,12 @@ fn killed_shard_is_relaunched_and_merged_report_is_byte_identical() {
     );
 
     // Recovery proof 2: the relaunched incarnation *resumed* — its shard
-    // summary line counts journal-recovered tasks it did not re-execute.
+    // summary line counts WAL-recovered tasks it did not re-execute.
     let shard_log = std::fs::read_to_string(fleet_dir.join("shard-1.log")).unwrap();
     let resumed = shard_log
         .lines()
         .filter_map(|l| {
-            let prefix = l.split(" resumed from journal").next()?;
+            let prefix = l.split(" resumed from WAL").next()?;
             if prefix == l {
                 return None; // marker absent on this line
             }
@@ -141,7 +142,7 @@ fn killed_shard_is_relaunched_and_merged_report_is_byte_identical() {
         .unwrap_or(0);
     assert!(
         resumed >= 1,
-        "relaunched shard did not resume from its journal:\n{shard_log}"
+        "relaunched shard did not resume from its WAL:\n{shard_log}"
     );
 
     // The headline invariant: the auto-merged report is byte-identical to
@@ -153,6 +154,58 @@ fn killed_shard_is_relaunched_and_merged_report_is_byte_identical() {
         reference, merged,
         "fleet-launch merged report differs from the single-process run"
     );
+
+    // Exactly one durable file per shard: the run directory holds the two
+    // WALs plus the supervisor's pid/log/addr bookkeeping — no journal or
+    // artifact siblings.
+    for member in 1..=2 {
+        assert!(fleet_dir.join(format!("shard-{member}.wal")).exists());
+        for relic in ["journal", "bin", "out"] {
+            assert!(
+                !fleet_dir.join(format!("shard-{member}.{relic}")).exists(),
+                "unexpected .{relic} file — the WAL must be the only durable state"
+            );
+        }
+    }
+
+    // The partial-merge contract: one shard's WAL unioned alone (the
+    // mid-flight view an operator gets from `sedar merge --allow-partial`)
+    // renders per-task rows that all appear in the final merged report.
+    let partial_md = dir.join("partial.md");
+    let status = Command::new(bin())
+        .arg("merge")
+        .arg("--allow-partial")
+        .arg(&wal)
+        .arg("--report-out")
+        .arg(&partial_md)
+        .stdout(Stdio::null())
+        .stderr(Stdio::null())
+        .status()
+        .unwrap();
+    assert!(status.success(), "partial merge of one shard WAL failed");
+    // Markdown cell padding depends on each table's own widest row, so
+    // compare trimmed cells and skip the `---` separator row.
+    fn per_task_rows(report: &str) -> Vec<String> {
+        let start = report.find("## Per task").expect("report has a per-task section");
+        let rest = &report[start..];
+        let end = rest[1..].find("\n## ").map(|i| i + 1).unwrap_or(rest.len());
+        rest[..end]
+            .lines()
+            .filter(|l| l.starts_with('|') && !l.contains("---"))
+            .map(|l| l.split('|').map(str::trim).collect::<Vec<_>>().join("|"))
+            .collect()
+    }
+    let partial = std::fs::read_to_string(&partial_md).unwrap();
+    let full = std::fs::read_to_string(&merged_md).unwrap();
+    let full_rows = per_task_rows(&full);
+    let partial_rows = per_task_rows(&partial);
+    assert_eq!(partial_rows.len(), 17, "16 task rows + header");
+    for row in &partial_rows {
+        assert!(
+            full_rows.contains(row),
+            "partial-merge row missing from the final report: {row}"
+        );
+    }
 
     let _ = std::fs::remove_dir_all(&dir);
 }

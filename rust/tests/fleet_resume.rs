@@ -1,14 +1,13 @@
-//! Resume semantics: a shard killed mid-sweep re-runs from its journal,
-//! skips every finished task, and still renders the byte-identical report.
-//! The kill is simulated by pre-populating a journal with a prefix of the
-//! outcomes — exactly the on-disk state a real kill leaves behind (the
-//! journal is synced per record, and its torn-tail handling is unit-tested
-//! in `fleet::journal`).
+//! Resume semantics: a shard killed mid-sweep re-runs from its WAL, skips
+//! every finished task, and still renders the byte-identical report. The
+//! kill is simulated by pre-populating a WAL with a prefix of the outcomes
+//! — exactly the on-disk state a real kill leaves behind (records are
+//! synced as tasks finish, and the torn-tail / torn-snapshot handling is
+//! unit-tested in `fleet::wal`).
 
 use sedar::campaign::{build_tasks, sweep_fingerprint, CampaignReport, CampaignSpec};
 use sedar::config::RunConfig;
-use sedar::fleet::artifact::ShardMeta;
-use sedar::fleet::journal::Journal;
+use sedar::fleet::wal::{ShardMeta, Wal};
 use sedar::fleet::{run_shard, FleetOptions};
 
 /// One scenario across every app × strategy × collectives mode: 18 tasks
@@ -32,22 +31,22 @@ fn spec(tag: &str) -> CampaignSpec {
 
 fn tmpfile(tag: &str) -> std::path::PathBuf {
     std::env::temp_dir().join(format!(
-        "sedar-fleet-resume-{tag}-{}-{:?}.bin",
+        "sedar-fleet-resume-{tag}-{}-{:?}.wal",
         std::process::id(),
         std::thread::current().id()
     ))
 }
 
 #[test]
-fn journal_resume_skips_finished_tasks_and_reproduces_the_report() {
-    // Reference: an uninterrupted, journaled run.
+fn wal_resume_skips_finished_tasks_and_reproduces_the_report() {
+    // Reference: an uninterrupted run writing its WAL.
     let spec_a = spec("full");
-    let journal_a = tmpfile("journal-full");
-    let _ = std::fs::remove_file(&journal_a);
+    let wal_a = tmpfile("wal-full");
+    let _ = std::fs::remove_file(&wal_a);
     let run_a = run_shard(
         &spec_a,
         &FleetOptions {
-            journal_path: Some(journal_a.clone()),
+            wal_path: Some(wal_a.clone()),
             ..FleetOptions::default()
         },
     )
@@ -58,30 +57,37 @@ fn journal_resume_skips_finished_tasks_and_reproduces_the_report() {
     let report_a = CampaignReport::new(spec_a.seed, run_a.outcomes.clone());
     let _ = std::fs::remove_dir_all(&spec_a.base.run_dir);
 
-    // An idempotent re-run over the completed journal executes nothing and
-    // renders the same bytes.
+    // An idempotent re-run over the completed WAL executes nothing and
+    // renders the same bytes — and appends nothing either (the no-op
+    // resume must leave the file byte-identical).
+    let before = std::fs::read(&wal_a).unwrap();
     let spec_b = spec("idempotent");
     let run_b = run_shard(
         &spec_b,
         &FleetOptions {
-            journal_path: Some(journal_a.clone()),
+            wal_path: Some(wal_a.clone()),
             ..FleetOptions::default()
         },
     )
     .unwrap();
     assert_eq!(run_b.resumed, 18);
-    assert_eq!(run_b.executed, 0, "a complete journal re-executes nothing");
+    assert_eq!(run_b.executed, 0, "a complete WAL re-executes nothing");
     assert_eq!(
         CampaignReport::new(spec_b.seed, run_b.outcomes).deterministic_report(),
         report_a.deterministic_report()
     );
+    assert_eq!(
+        std::fs::read(&wal_a).unwrap(),
+        before,
+        "no-op resume must not grow the WAL"
+    );
     let _ = std::fs::remove_dir_all(&spec_b.base.run_dir);
 
-    // Simulate the kill: a journal holding only the first 4 outcomes. The
-    // meta must carry the sweep's real fingerprint or run_shard will
-    // (correctly) refuse the journal.
-    let journal_c = tmpfile("journal-killed");
-    let _ = std::fs::remove_file(&journal_c);
+    // Simulate the kill: a WAL holding only the first 4 outcomes. The
+    // header must carry the sweep's real fingerprint or run_shard will
+    // (correctly) refuse the WAL.
+    let wal_c = tmpfile("wal-killed");
+    let _ = std::fs::remove_file(&wal_c);
     let spec_for_meta = spec("meta");
     let meta = ShardMeta {
         seed: 77,
@@ -91,11 +97,12 @@ fn journal_resume_skips_finished_tasks_and_reproduces_the_report() {
         spec_hash: sweep_fingerprint(77, &build_tasks(&spec_for_meta)),
     };
     {
-        let (mut j, recovered) = Journal::open(&journal_c, &meta).unwrap();
+        let (mut w, recovered) = Wal::open(&wal_c, &meta).unwrap();
         assert!(recovered.is_empty());
         for o in run_a.outcomes.iter().take(4) {
-            j.append(o).unwrap();
+            w.append(o).unwrap();
         }
+        // No finalize: a killed process never reaches clean shutdown.
     }
 
     // The re-run resumes: only the 14 unfinished tasks execute, and the
@@ -104,13 +111,13 @@ fn journal_resume_skips_finished_tasks_and_reproduces_the_report() {
     let run_c = run_shard(
         &spec_c,
         &FleetOptions {
-            journal_path: Some(journal_c.clone()),
+            wal_path: Some(wal_c.clone()),
             ..FleetOptions::default()
         },
     )
     .unwrap();
     assert_eq!(run_c.resumed, 4);
-    assert_eq!(run_c.executed, 14, "journaled tasks must not re-execute");
+    assert_eq!(run_c.executed, 14, "WAL-recorded tasks must not re-execute");
     assert_eq!(
         CampaignReport::new(spec_c.seed, run_c.outcomes).deterministic_report(),
         report_a.deterministic_report(),
@@ -118,23 +125,51 @@ fn journal_resume_skips_finished_tasks_and_reproduces_the_report() {
     );
     let _ = std::fs::remove_dir_all(&spec_c.base.run_dir);
 
-    // A journal from a different sweep is refused outright.
+    // A WAL from a different sweep is refused outright.
     let mut spec_d = spec("wrong-seed");
     spec_d.seed = 78;
     let err = run_shard(
         &spec_d,
         &FleetOptions {
-            journal_path: Some(journal_c.clone()),
+            wal_path: Some(wal_c.clone()),
             ..FleetOptions::default()
         },
     )
     .unwrap_err();
-    assert!(
-        err.to_string().contains("different sweep"),
-        "got: {err}"
-    );
+    assert!(err.to_string().contains("different sweep"), "got: {err}");
     let _ = std::fs::remove_dir_all(&spec_d.base.run_dir);
 
-    let _ = std::fs::remove_file(journal_a);
-    let _ = std::fs::remove_file(journal_c);
+    let _ = std::fs::remove_file(wal_a);
+    let _ = std::fs::remove_file(wal_c);
+}
+
+#[test]
+fn resume_refuses_a_legacy_journal_by_name() {
+    // Version hygiene at the resume entry point: pointing --wal at a
+    // v4-era SDJL resume journal must fail naming both formats, and the
+    // refused file must not be truncated or overwritten.
+    let p = tmpfile("legacy-journal");
+    let mut body = Vec::new();
+    body.extend_from_slice(b"SDJL");
+    body.extend_from_slice(&4u32.to_le_bytes());
+    body.extend_from_slice(&[0u8; 32]);
+    let mut framed = Vec::new();
+    sedar::util::frame::frame(&body, &mut framed);
+    std::fs::write(&p, &framed).unwrap();
+
+    let spec_e = spec("legacy");
+    let err = run_shard(
+        &spec_e,
+        &FleetOptions {
+            wal_path: Some(p.clone()),
+            ..FleetOptions::default()
+        },
+    )
+    .unwrap_err()
+    .to_string();
+    assert!(err.contains("SDJL"), "old format not named: {err}");
+    assert!(err.contains("SDWL"), "new format not named: {err}");
+    assert_eq!(std::fs::read(&p).unwrap(), framed, "refused file modified");
+    let _ = std::fs::remove_dir_all(&spec_e.base.run_dir);
+    std::fs::remove_file(&p).unwrap();
 }

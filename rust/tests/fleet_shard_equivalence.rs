@@ -1,17 +1,19 @@
 //! The fleet's headline invariant: splitting the sweep into any `N`
-//! shards, writing durable artifacts, merging them and rendering must
-//! produce a report **byte-identical** to the single-process run with the
-//! same `--seed`. Task outcomes are pure functions of task seeds, and task
+//! shards, writing one WAL each, merging them and rendering must produce
+//! a report **byte-identical** to the single-process run with the same
+//! `--seed`. Task outcomes are pure functions of task seeds, and task
 //! seeds never see shard geometry — so sharding is pure partition.
 //!
 //! (The CLI-level twin of this test is the CI sharded-sweep smoke job,
-//! which runs `sedar campaign --shard i/2 --out` twice, `sedar merge`s the
-//! artifacts and `diff`s against the single-process report.)
+//! which runs `sedar campaign --shard i/2 --wal` twice, `sedar merge`s the
+//! WALs and `diff`s against the single-process report.)
 
+use sedar::campaign::aggregate::IncrementalMerger;
 use sedar::campaign::{run_campaign, CampaignReport, CampaignSpec};
 use sedar::config::RunConfig;
 use sedar::fleet::plan::ShardPlan;
-use sedar::fleet::{artifact, run_shard, FleetOptions};
+use sedar::fleet::snapshot::{merge_wals, read_wal};
+use sedar::fleet::{run_shard, FleetOptions};
 
 /// The representative slice the determinism suite uses: one TDC, one LE
 /// and one FSC scenario across every app, strategy and collectives mode
@@ -36,7 +38,7 @@ fn small_spec(tag: &str) -> CampaignSpec {
 
 fn tmpfile(tag: &str) -> std::path::PathBuf {
     std::env::temp_dir().join(format!(
-        "sedar-fleet-eq-{tag}-{}-{:?}.bin",
+        "sedar-fleet-eq-{tag}-{}-{:?}.wal",
         std::process::id(),
         std::thread::current().id()
     ))
@@ -49,7 +51,7 @@ fn two_way_split_merges_byte_identical() {
     let reference = run_campaign(&spec_single).unwrap();
     assert_eq!(reference.outcomes.len(), 54);
 
-    // The same sweep as two shard processes, each writing an artifact.
+    // The same sweep as two shard processes, each writing one WAL.
     let mut paths = Vec::new();
     for i in 1..=2usize {
         let spec = small_spec(&format!("shard{i}"));
@@ -59,25 +61,21 @@ fn two_way_split_merges_byte_identical() {
             &spec,
             &FleetOptions {
                 plan: Some(ShardPlan::parse(&format!("{i}/2")).unwrap()),
-                artifact_path: Some(out.clone()),
+                wal_path: Some(out.clone()),
                 ..FleetOptions::default()
             },
         )
         .unwrap();
-        assert_eq!(run.executed, run.owned, "no journal: everything executes");
-        assert!(out.exists(), "shard artifact must be written");
+        assert_eq!(run.executed, run.owned, "fresh WAL: everything executes");
+        assert!(out.exists(), "shard WAL must be written");
         paths.push(out);
         let _ = std::fs::remove_dir_all(&spec.base.run_dir);
     }
 
-    // Merge the durable artifacts (in reversed order, to also exercise
+    // Merge the durable WALs (in reversed order, to also exercise
     // commutativity at the file level) and compare every rendered byte.
-    let shards: Vec<_> = paths
-        .iter()
-        .rev()
-        .map(|p| artifact::read_artifact(p).unwrap())
-        .collect();
-    let (seed, total, outcomes) = artifact::merge_artifacts(shards).unwrap();
+    let shards: Vec<_> = paths.iter().rev().map(|p| read_wal(p).unwrap()).collect();
+    let (seed, total, outcomes) = merge_wals(shards).unwrap();
     assert_eq!(seed, 42);
     assert_eq!(total, 54);
     assert_eq!(outcomes.len(), 54);
@@ -89,21 +87,67 @@ fn two_way_split_merges_byte_identical() {
     );
     assert_eq!(merged.csv(), reference.csv());
 
-    // Overlapping shards must be rejected at merge time: feed shard 1's
-    // artifact twice.
-    let dup = vec![
-        artifact::read_artifact(&paths[0]).unwrap(),
-        artifact::read_artifact(&paths[0]).unwrap(),
-    ];
-    assert!(artifact::merge_artifacts(dup).is_err());
+    // Feeding one shard's WAL twice is *idempotent* (the live merger
+    // re-reads growing WALs), but two different shards claiming one index
+    // is still an overlap error — covered in tests/fleet_artifact.rs.
+    let dup = vec![read_wal(&paths[0]).unwrap(), read_wal(&paths[0]).unwrap()];
+    let (_, _, once) = merge_wals(dup).unwrap();
+    assert_eq!(once.len(), 27, "re-reading a shard must not duplicate rows");
 
     // A lone shard is an incomplete union — the merge surface reports the
     // coverage so `sedar merge` can refuse without --allow-partial.
-    let lone = vec![artifact::read_artifact(&paths[0]).unwrap()];
-    let (_, total, outcomes) = artifact::merge_artifacts(lone).unwrap();
+    let lone = vec![read_wal(&paths[0]).unwrap()];
+    let (_, total, outcomes) = merge_wals(lone).unwrap();
     assert!(
         (outcomes.len() as u64) < total,
         "a single shard of a 2-way split cannot cover the sweep"
+    );
+
+    // The live partial aggregate: stream shard 1's outcomes in first —
+    // the partial union must be exactly those rows of the final report —
+    // then shard 2's, after which the streamed report equals the merged
+    // (and therefore the single-process) report byte-for-byte.
+    let (meta1, out1) = read_wal(&paths[0]).unwrap();
+    let (meta2, out2) = read_wal(&paths[1]).unwrap();
+    let mut live = IncrementalMerger::new(meta1);
+    live.ingest(&meta1, out1.clone()).unwrap();
+    assert!(!live.is_complete());
+    assert_eq!(live.done(), 27);
+    // Rollup tables re-aggregate and so differ mid-flight; the per-task
+    // rows are pure per-outcome functions, so every row of the partial
+    // report must appear in the final one. (Markdown cell padding depends
+    // on the widest row *in that table*, so compare trimmed cells, and
+    // skip the width-dependent `---` separator row.)
+    fn per_task_rows(report: &str) -> Vec<String> {
+        let start = report.find("## Per task").expect("report has a per-task section");
+        let rest = &report[start..];
+        let end = rest[1..].find("\n## ").map(|i| i + 1).unwrap_or(rest.len());
+        rest[..end]
+            .lines()
+            .filter(|l| l.starts_with('|') && !l.contains("---"))
+            .map(|l| l.split('|').map(str::trim).collect::<Vec<_>>().join("|"))
+            .collect()
+    }
+    let partial = live.report().unwrap().deterministic_report();
+    let full = merged.deterministic_report();
+    let full_rows = per_task_rows(&full);
+    assert_eq!(full_rows.len(), 55, "54 task rows + header");
+    for row in per_task_rows(&partial) {
+        assert!(
+            full_rows.contains(&row),
+            "partial row missing from the final report: {row}"
+        );
+    }
+    // Re-ingesting the same shard mid-flight is the supervisor's normal
+    // tailing pattern; the union must not change.
+    live.ingest(&meta1, out1).unwrap();
+    assert_eq!(live.done(), 27);
+    live.ingest(&meta2, out2).unwrap();
+    assert!(live.is_complete());
+    assert_eq!(
+        live.report().unwrap().deterministic_report(),
+        full,
+        "live aggregate at completion must equal the final merged report"
     );
 
     for p in paths {

@@ -86,6 +86,22 @@ impl MatmulApp {
         format!("matmul_r{}_n{}", self.band_rows(), self.n)
     }
 
+    /// The scatter root's chunk list: zero-copy row-band views of `A`
+    /// (one reference bump per rank — no payload bytes are copied; see
+    /// `scatter_chunks_are_zero_copy_views`). Copy-on-write isolates any
+    /// downstream writer, so the views are safe to hand to other ranks.
+    pub fn scatter_chunks(&self, a: &Var) -> Result<Vec<Var>> {
+        let (rows, n) = (self.chunk_rows(), self.n);
+        (0..self.nranks)
+            .map(|r| {
+                Ok(Var {
+                    shape: vec![rows, n],
+                    buf: a.buf.view(r * rows * n, rows * n)?,
+                })
+            })
+            .collect()
+    }
+
     fn seed_a(seed: u64) -> u64 {
         seed.wrapping_mul(31).wrapping_add(1)
     }
@@ -170,14 +186,7 @@ impl AppSpec for MatmulApp {
             phases::CK0 => ctx.checkpoint(0, "CK0"),
             phases::SCATTER => {
                 let chunks = if ctx.rank == 0 {
-                    let a = ctx.store.f32("A")?;
-                    Some(
-                        (0..self.nranks)
-                            .map(|r| {
-                                Var::f32(&[rows, n], a[r * rows * n..(r + 1) * rows * n].to_vec())
-                            })
-                            .collect(),
-                    )
+                    Some(self.scatter_chunks(ctx.store.get("A")?)?)
                 } else {
                     None
                 };
@@ -297,6 +306,25 @@ mod tests {
         let w = app.init_store(1, 7);
         assert!(!w.contains("A"));
         assert!(w.contains("A_chunk"));
+    }
+
+    #[test]
+    fn scatter_chunks_are_zero_copy_views() {
+        let app = MatmulApp::new(16, 4);
+        let store = app.init_store(0, 7);
+        let a = store.get("A").unwrap();
+        let chunks = app.scatter_chunks(a).unwrap();
+        assert_eq!(chunks.len(), 4);
+        let full = a.buf.as_f32().unwrap();
+        let per = app.chunk_rows() * app.n;
+        for (r, c) in chunks.iter().enumerate() {
+            assert!(
+                c.buf.shares_allocation(&a.buf),
+                "chunk {r} must view A's allocation, not copy it"
+            );
+            assert_eq!(c.shape, vec![app.chunk_rows(), app.n]);
+            assert_eq!(c.buf.as_f32().unwrap(), &full[r * per..(r + 1) * per]);
+        }
     }
 
     #[test]

@@ -18,7 +18,13 @@
 //!    per-outcome appends + periodic snapshot compaction + replay) against
 //!    an emulation of the retired dual write (per-record journal appends
 //!    plus a whole-shard artifact frame);
-//! 6. **campaign** — end-to-end wall time of the 1152-task injection sweep
+//! 6. **gateway** — `sedar serve` front-door cost per HTTP round-trip
+//!    (submit parse + journal-before-ack fsync, sweep listing, metrics
+//!    scrape) against an ingress-only in-process daemon; with `--campaign`
+//!    and `SEDAR_BIN` set, also the end-to-end wall time of four sweeps
+//!    run sequentially as standalone campaigns vs multiplexed onto one
+//!    pooled daemon;
+//! 7. **campaign** — end-to-end wall time of the 1152-task injection sweep
 //!    (64 scenarios × 3 apps × 3 strategies × 2 collectives modes — the
 //!    system-level number everything above feeds, and the sweep the
 //!    pooled-world arena keeps allocation-flat).
@@ -88,6 +94,7 @@ pub fn run_suite(opts: &BenchOpts) -> Result<JsonReport> {
     ckpt_frame_section(opts, &mut jr);
     faultnet_section(opts, &mut jr);
     persistence_section(opts, &mut jr);
+    gateway_section(opts, &mut jr);
     if opts.campaign {
         campaign_section(opts, &mut jr)?;
     }
@@ -424,6 +431,179 @@ fn persistence_section(opts: &BenchOpts, jr: &mut JsonReport) {
     print_section(opts.echo, "shard persistence (WAL vs retired dual write)", &rows);
 }
 
+/// Gateway ingress: what one HTTP round-trip through the `sedar serve`
+/// front door costs. The daemon is in-process with **zero** pooled worker
+/// slots, so an accepted submission is parsed, planned, journaled (one
+/// fsync — the ack is durable) and queued but never started: the number is
+/// the front door itself, not the campaign behind it. Expect the submit
+/// rows to be fsync-bound — trend, not threshold, on CI runners.
+///
+/// With `--campaign` (not `--quick`) and `SEDAR_BIN` pointing at a built
+/// `sedar` binary, a heavy pair follows: four 32-task sweeps run
+/// sequentially as standalone `sedar campaign` processes vs the same four
+/// submitted concurrently to one pooled daemon with four shard slots —
+/// the wall-clock delta is what multiplexing buys (and costs).
+fn gateway_section(opts: &BenchOpts, jr: &mut JsonReport) {
+    use crate::fleet::status::http_get;
+    use crate::serve::http::http_post;
+    use crate::serve::{Daemon, ServeOptions};
+    use std::time::Duration;
+
+    eprintln!("bench: gateway");
+    let iters = if opts.quick { 20 } else { 100 };
+    let timeout = Duration::from_secs(5);
+    let dir = std::env::temp_dir().join(format!("sedar-bench-gateway-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let daemon = Daemon::spawn(ServeOptions {
+        workers: 0,
+        dir: dir.clone(),
+        poll_interval: Duration::from_millis(1),
+        rate: 1e9,
+        burst: 1e9,
+        queue_cap: usize::MAX,
+        quiet: true,
+        ..ServeOptions::default()
+    })
+    .unwrap();
+    let addr = daemon.addr();
+
+    let submit_small = "user=bench\nseed=7\nshards=1\nfilter=app=matmul,strategy=sys,scenario=1\n";
+    let submit_large = "user=bench\nseed=7\nshards=4\nfilter=app=matmul,strategy=sys,scenario=1-64\n";
+    let mut rows = Vec::new();
+    rows.push((
+        bench("submit 2-task sweep", 1, iters, || {
+            black_box(http_post(addr, "/submit", submit_small, timeout).unwrap().len());
+        }),
+        None,
+    ));
+    rows.push((
+        bench("submit 128-task sweep, 4 shards", 1, iters, || {
+            black_box(http_post(addr, "/submit", submit_large, timeout).unwrap().len());
+        }),
+        None,
+    ));
+    // The listing walks every submission accepted above — a loaded table,
+    // not an empty one.
+    rows.push((
+        bench("GET /sweeps (loaded)", 1, iters, || {
+            black_box(http_get(addr, "/sweeps", timeout).unwrap().len());
+        }),
+        None,
+    ));
+    rows.push((
+        bench("GET /metrics", 1, iters, || {
+            black_box(http_get(addr, "/metrics", timeout).unwrap().len());
+        }),
+        None,
+    ));
+    drop(daemon);
+    let _ = std::fs::remove_dir_all(&dir);
+    for (s, b) in &rows {
+        jr.push_stats("gateway", s, *b);
+    }
+    print_section(opts.echo, "serve gateway (front-door HTTP round-trips)", &rows);
+
+    if opts.campaign && !opts.quick {
+        match std::env::var("SEDAR_BIN") {
+            Ok(bin) => gateway_e2e(opts, jr, bin.into()),
+            Err(_) => eprintln!(
+                "bench: gateway e2e skipped — set SEDAR_BIN to a built `sedar` binary"
+            ),
+        }
+    }
+}
+
+/// The heavy half of the gateway section: four equal sweep slices run
+/// sequentially as standalone campaigns, then multiplexed onto one pooled
+/// daemon. Both sides get the same per-sweep worker budget (the default
+/// split four ways), so the pooled win is scheduling, not extra threads.
+fn gateway_e2e(opts: &BenchOpts, jr: &mut JsonReport, bin: std::path::PathBuf) {
+    use crate::fleet::status::http_get;
+    use crate::serve::http::http_post;
+    use crate::serve::{Daemon, ServeOptions};
+    use std::time::Duration;
+
+    eprintln!("bench: gateway e2e (4 sweeps, sequential vs pooled)");
+    let slices = ["1-16", "17-32", "33-48", "49-64"];
+    let jobs = (CampaignSpec::default_jobs() / slices.len()).max(1);
+    let timeout = Duration::from_secs(5);
+    let dir = std::env::temp_dir().join(format!("sedar-bench-gw-e2e-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let t0 = Instant::now();
+    for s in &slices {
+        let status = std::process::Command::new(&bin)
+            .args(["campaign", "--seed", "7", "--quiet", "--jobs"])
+            .arg(jobs.to_string())
+            .arg("--filter")
+            .arg(format!("app=matmul,strategy=sys,scenario={s}"))
+            .arg("--report-out")
+            .arg(dir.join(format!("seq-{s}.md")))
+            .stdout(std::process::Stdio::null())
+            .stderr(std::process::Stdio::null())
+            .status()
+            .unwrap();
+        assert!(status.success(), "standalone campaign slice {s} failed");
+    }
+    let sequential = t0.elapsed();
+
+    let daemon = Daemon::spawn(ServeOptions {
+        workers: slices.len(),
+        dir: dir.join("serve"),
+        poll_interval: Duration::from_millis(10),
+        rate: 1e9,
+        burst: 1e9,
+        queue_cap: slices.len(),
+        bin: Some(bin),
+        quiet: true,
+        ..ServeOptions::default()
+    })
+    .unwrap();
+    let t0 = Instant::now();
+    for s in &slices {
+        http_post(
+            daemon.addr(),
+            "/submit",
+            &format!(
+                "user=bench\nseed=7\nshards=1\njobs={jobs}\n\
+                 filter=app=matmul,strategy=sys,scenario={s}\n"
+            ),
+            timeout,
+        )
+        .unwrap();
+    }
+    let deadline = Instant::now() + Duration::from_secs(600);
+    for i in 1..=slices.len() {
+        let path = format!("/sweep/sweep-{i:04}/report");
+        while http_get(daemon.addr(), &path, timeout).is_err() {
+            assert!(Instant::now() < deadline, "pooled sweep {i} never merged");
+            std::thread::sleep(Duration::from_millis(50));
+        }
+    }
+    let pooled = t0.elapsed();
+    drop(daemon);
+    let _ = std::fs::remove_dir_all(&dir);
+
+    for (case, wall) in [
+        ("4x32-task sequential standalone", sequential),
+        ("4x32-task pooled daemon, 4 slots", pooled),
+    ] {
+        jr.push_raw(format!(
+            "{{\"group\":\"gateway\",\"case\":\"{case}\",\"sweeps\":4,\
+             \"jobs_per_sweep\":{jobs},\"wall_ms\":{}}}",
+            wall.as_millis()
+        ));
+    }
+    if opts.echo {
+        println!(
+            "\n=== gateway e2e (4 sweeps) ===\n\n  sequential {} | pooled {}",
+            crate::util::human_duration(sequential),
+            crate::util::human_duration(pooled)
+        );
+    }
+}
+
 /// End-to-end: the full injection campaign, one wall-clock number per
 /// clock mode. The wall-clock run is the paper-faithful baseline; the
 /// virtual-clock run is the same sweep (byte-identical report) with every
@@ -497,7 +677,14 @@ mod tests {
         let jr = run_suite(&opts).unwrap();
         let doc = jr.render();
         assert!(doc.contains("\"schema\": \"sedar-bench/1\""));
-        for group in ["msg_validation", "transport", "ckpt_frame", "faultnet", "persistence"] {
+        for group in [
+            "msg_validation",
+            "transport",
+            "ckpt_frame",
+            "faultnet",
+            "persistence",
+            "gateway",
+        ] {
             assert!(doc.contains(&format!("\"group\":\"{group}\"")), "missing {group}");
         }
         assert!(doc.contains("\"ns_per_mib\":"));

@@ -2,33 +2,27 @@
 //!
 //! The paper's pitch is detection plus *automatic* recovery (§1): a failed
 //! replica is noticed and restarted from durable state without an operator
-//! in the loop. The fleet layer already had the durable half — each
-//! shard's write-ahead log, plus live status endpoints — but a crashed
-//! shard still needed a human to notice and re-run it. This module closes
-//! that loop, applying SEDAR's own recovery discipline (level 2:
-//! redundancy + checkpointing beats re-execution from scratch) to the
-//! validation campaign itself:
+//! in the loop. This module is now a thin single-sweep client of the
+//! extracted service machinery — [`Sweep`](super::sweep::Sweep) owns the
+//! plan, directory, live aggregate and lifecycle;
+//! [`Supervisor`](super::supervisor::Supervisor) owns spawn / poll /
+//! restart / stall — the same components the `sedar serve` gateway
+//! multiplexes many sweeps over:
 //!
-//! * [`run_launch`] spawns `N` `sedar campaign --shard i/N` child
-//!   processes, each with its own WAL and OS-assigned status port under
-//!   one run directory (`--status-addr-file` is the port-discovery
-//!   handshake);
-//! * the supervisor polls each child's `/json` status snapshot and exit
-//!   code; a child that **dies** (any exit before its WAL holds its whole
+//! * [`run_launch`] builds one `Sweep`, starts every shard at once, and
+//!   blocks polling it until every slice is durable;
+//! * a child that **dies** (any exit before its WAL holds its whole
 //!   slice) or **stalls** (its monotone `heartbeat` counter stops
 //!   advancing for longer than the stall timeout) is killed if needed and
 //!   relaunched — WAL replay makes every relaunch skip the tasks that
 //!   already finished, so the retry cost is bounded by the work actually
-//!   lost;
-//! * restarts are bounded per shard; a shard that exhausts its budget
-//!   fails the whole launch with a pointer to its log;
-//! * while shards run, the supervisor re-reads each WAL as it grows and
-//!   feeds a **live partial aggregate** (one
-//!   [`IncrementalMerger`] across the fleet) — served over the optional
-//!   launch-level status endpoint (`--status-port`), and *reused as the
-//!   final merge* when the fleet completes, so the live aggregate at
-//!   completion and the final report are the same object by construction
-//!   — byte-identical to the single-process run with the same `--seed`
+//!   lost; restarts are bounded per shard;
+//! * while shards run, the sweep re-reads each WAL as it grows and feeds
+//!   a **live partial aggregate** — served over the optional launch-level
+//!   status endpoint (`--status-port`), and *reused as the final merge*
+//!   when the fleet completes, so the live aggregate at completion and
+//!   the final report are the same object by construction —
+//!   byte-identical to the single-process run with the same `--seed`
 //!   (`rust/tests/fleet_launch.rs` proves this survives a mid-sweep
 //!   SIGKILL).
 //!
@@ -38,28 +32,18 @@
 //! fires first). The timeout must therefore exceed the slowest single
 //! task; the default is generous and CLI-tunable (`--stall-secs`).
 
-use std::fs::OpenOptions;
-use std::net::SocketAddr;
-use std::path::{Path, PathBuf};
-use std::process::{Child, Command, Stdio};
-use std::sync::{Arc, Mutex};
+use std::path::PathBuf;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::campaign::aggregate::IncrementalMerger;
-use crate::campaign::shard::TaskOutcome;
-use crate::campaign::{build_tasks, sweep_fingerprint, CampaignReport, CampaignSpec};
-use crate::error::{Result, SedarError};
+use crate::campaign::CampaignReport;
+use crate::error::Result;
 
-use super::plan::ShardPlan;
-use super::snapshot::read_wal;
-use super::status::{http_get, StatusServer, StatusSource};
-use super::wal::ShardMeta;
+use super::status::StatusServer;
+use super::supervisor::{progress_line, LocalSpawner, SupervisorConfig};
+use super::sweep::{Sweep, SweepConfig};
 
-/// Per-poll timeout for one status GET (children live on loopback — a
-/// healthy endpoint answers in microseconds, a dead one refuses at once).
-const HTTP_TIMEOUT: Duration = Duration::from_millis(400);
-
-/// How the supervisor runs the fleet.
+/// How the driver runs the fleet.
 #[derive(Debug, Clone)]
 pub struct LaunchOptions {
     /// Number of shard processes (the `N` of `--shard i/N`).
@@ -133,7 +117,7 @@ pub struct ShardStat {
     pub executed: usize,
 }
 
-/// The supervisor's result: per-shard restart accounting plus the merged,
+/// The driver's result: per-shard restart accounting plus the merged,
 /// deterministic campaign report.
 pub struct LaunchReport {
     pub shards: Vec<ShardStat>,
@@ -164,487 +148,32 @@ impl LaunchReport {
     }
 }
 
-/// The fleet-wide live partial aggregate: one [`IncrementalMerger`] re-fed
-/// from each shard's WAL as it grows.
-///
-/// Ingest is idempotent per shard (a re-read *replaces* that shard's
-/// outcome set), so the supervisor can refresh as often as it likes; the
-/// WAL reader is lenient about a racing writer's torn tail, so the refresh
-/// never needs a lock against the children. When the fleet completes, the
-/// **same** merger renders the final report — the "live aggregate at
-/// completion equals the final report" invariant holds by construction,
-/// not by comparison.
-struct FleetAggregate {
-    total: usize,
-    merger: Mutex<IncrementalMerger>,
-}
-
-impl FleetAggregate {
-    fn new(first: ShardMeta, total: usize) -> FleetAggregate {
-        FleetAggregate {
-            total,
-            merger: Mutex::new(IncrementalMerger::new(first)),
-        }
-    }
-
-    /// Best-effort live refresh from one shard's WAL. A file that is
-    /// missing, mid-creation or identity-drifted is skipped — the strict
-    /// final ingest surfaces real problems with real errors.
-    fn refresh(&self, path: &Path) {
-        if let Ok((meta, outcomes)) = read_wal(path) {
-            let _ = self.merger.lock().unwrap().ingest(&meta, outcomes);
-        }
-    }
-
-    /// Strict ingest (the final-merge path): every error is fatal.
-    fn ingest(&self, meta: &ShardMeta, outcomes: Vec<TaskOutcome>) -> Result<()> {
-        self.merger.lock().unwrap().ingest(meta, outcomes)
-    }
-
-    /// Render the final report, requiring full coverage.
-    fn final_report(&self) -> Result<CampaignReport> {
-        let merger = self.merger.lock().unwrap();
-        if merger.done() != self.total {
-            return Err(SedarError::Config(format!(
-                "fleet launch: merged union covers {} of {} task(s) — \
-                 a shard WAL is incomplete",
-                merger.done(),
-                self.total
-            )));
-        }
-        merger.report()
-    }
-}
-
-impl StatusSource for FleetAggregate {
-    fn text_snapshot(&self) -> String {
-        let m = self.merger.lock().unwrap();
-        let mut s = format!(
-            "SEDAR fleet launch seed {}\ndone {}/{} (pass {}, fail {}) — {}\n",
-            m.seed(),
-            m.done(),
-            self.total,
-            m.passed(),
-            m.failed(),
-            if m.done() == self.total {
-                "complete"
-            } else {
-                "partial union of live WALs"
-            }
-        );
-        for (shard, done) in m.shard_progress() {
-            s.push_str(&format!("  shard {}: {done} outcome(s)\n", shard + 1));
-        }
-        s
-    }
-
-    fn json_snapshot(&self) -> String {
-        let m = self.merger.lock().unwrap();
-        let shards: Vec<String> = m
-            .shard_progress()
-            .iter()
-            .map(|(shard, done)| format!("{{\"shard\":{},\"done\":{done}}}", shard + 1))
-            .collect();
-        format!(
-            "{{\"fleet\":\"launch\",\"seed\":{},\"total\":{},\"done\":{},\
-             \"passed\":{},\"failed\":{},\"complete\":{},\"shards\":[{}]}}",
-            m.seed(),
-            self.total,
-            m.done(),
-            m.passed(),
-            m.failed(),
-            m.done() == self.total,
-            shards.join(",")
-        )
-    }
-
-    fn prometheus_snapshot(&self) -> String {
-        let m = self.merger.lock().unwrap();
-        let mut s = String::new();
-        let mut metric = |name: &str, kind: &str, help: &str, value: String| {
-            s.push_str(&format!(
-                "# HELP {name} {help}\n# TYPE {name} {kind}\n{name} {value}\n"
-            ));
-        };
-        metric(
-            "sedar_fleet_tasks_total",
-            "gauge",
-            "Tasks in the whole sweep across all shards.",
-            self.total.to_string(),
-        );
-        metric(
-            "sedar_fleet_tasks_done_total",
-            "counter",
-            "Distinct finished tasks across the live WAL union.",
-            m.done().to_string(),
-        );
-        metric(
-            "sedar_fleet_tasks_passed_total",
-            "counter",
-            "Finished tasks that passed their cell's oracle.",
-            m.passed().to_string(),
-        );
-        metric(
-            "sedar_fleet_tasks_failed_total",
-            "counter",
-            "Finished tasks that mismatched their cell's oracle.",
-            m.failed().to_string(),
-        );
-        metric(
-            "sedar_fleet_complete",
-            "gauge",
-            "1 once the union covers every task of the sweep.",
-            if m.done() == self.total { "1" } else { "0" }.to_string(),
-        );
-        s
-    }
-}
-
-/// Shard-level scalars of one `/json` status snapshot.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-struct Snapshot {
-    done: usize,
-    passed: usize,
-    failed: usize,
-    resumed: usize,
-    executed: usize,
-    heartbeat: u64,
-}
-
-/// First occurrence of `"key":<digits>` in `body`. The board emits every
-/// shard-level scalar before the `cells` array, so the first occurrence is
-/// always the shard-level value even though cells repeat `done`/`total`.
-fn json_u64_field(body: &str, key: &str) -> Option<u64> {
-    let pat = format!("\"{key}\":");
-    let at = body.find(&pat)? + pat.len();
-    let digits: String = body[at..]
-        .chars()
-        .take_while(|c| c.is_ascii_digit())
-        .collect();
-    digits.parse().ok()
-}
-
-impl Snapshot {
-    fn parse(body: &str) -> Option<Snapshot> {
-        Some(Snapshot {
-            done: json_u64_field(body, "done")? as usize,
-            passed: json_u64_field(body, "passed")? as usize,
-            failed: json_u64_field(body, "failed")? as usize,
-            resumed: json_u64_field(body, "resumed")? as usize,
-            executed: json_u64_field(body, "executed")? as usize,
-            heartbeat: json_u64_field(body, "heartbeat")?,
-        })
-    }
-}
-
-/// Where one shard's files live under the launch directory.
-struct ShardPaths {
-    /// The shard's single durable file: its write-ahead log.
-    wal: PathBuf,
-    addr: PathBuf,
-    pid: PathBuf,
-    log: PathBuf,
-    run_dir: PathBuf,
-}
-
-impl ShardPaths {
-    fn new(dir: &Path, member: usize) -> ShardPaths {
-        ShardPaths {
-            wal: dir.join(format!("shard-{member}.wal")),
-            addr: dir.join(format!("shard-{member}.addr")),
-            pid: dir.join(format!("shard-{member}.pid")),
-            log: dir.join(format!("shard-{member}.log")),
-            run_dir: dir.join(format!("run-{member}")),
-        }
-    }
-}
-
-/// What every (re)spawn needs: the launch options plus the resolved
-/// binary path and per-shard worker budget.
-struct SpawnCtx<'a> {
-    opts: &'a LaunchOptions,
-    bin: &'a Path,
-    jobs: usize,
-}
-
-/// One supervised shard process (its current incarnation, if any).
-struct ShardProc {
-    plan: ShardPlan,
-    owned: usize,
-    expect: ShardMeta,
-    paths: ShardPaths,
-    child: Option<Child>,
-    restarts: usize,
-    addr: Option<SocketAddr>,
-    snap: Option<Snapshot>,
-    last_heartbeat: Option<u64>,
-    last_advance: Instant,
-    finished: bool,
-    /// Last observed WAL byte length — the cheap change detector that
-    /// gates re-reading the file into the live aggregate.
-    wal_len: u64,
-}
-
-impl Drop for ShardProc {
-    fn drop(&mut self) {
-        // An early supervisor exit (error path) must not leak children.
-        if let Some(mut c) = self.child.take() {
-            let _ = c.kill();
-            let _ = c.wait();
-        }
-    }
-}
-
-impl ShardProc {
-    /// Spawn (or respawn) this shard's `sedar campaign` child. The WAL
-    /// path is stable across incarnations — that is what makes a relaunch
-    /// a *resume*.
-    fn spawn(&mut self, ctx: &SpawnCtx<'_>) -> Result<()> {
-        let _ = std::fs::remove_file(&self.paths.addr);
-        let log = OpenOptions::new()
-            .create(true)
-            .append(true)
-            .open(&self.paths.log)?;
-        let mut cmd = Command::new(ctx.bin);
-        cmd.arg("campaign")
-            .arg("--seed")
-            .arg(ctx.opts.seed.to_string())
-            .arg("--jobs")
-            .arg(ctx.jobs.to_string())
-            .arg("--shard")
-            .arg(self.plan.label())
-            .arg("--wal")
-            .arg(&self.paths.wal)
-            .arg("--status-port")
-            .arg("0")
-            .arg("--status-addr-file")
-            .arg(&self.paths.addr)
-            .arg("--run-dir")
-            .arg(&self.paths.run_dir)
-            .arg("--quiet");
-        if let Some(f) = &ctx.opts.filter {
-            cmd.arg("--filter").arg(f);
-        }
-        if let Some(k) = &ctx.opts.scenario {
-            cmd.arg("--scenario").arg(k);
-        }
-        cmd.stdin(Stdio::null())
-            .stdout(Stdio::from(log.try_clone()?))
-            .stderr(Stdio::from(log));
-        let child = cmd.spawn().map_err(|e| {
-            SedarError::Config(format!(
-                "fleet launch: cannot spawn shard {} ({}): {e}",
-                self.plan.label(),
-                ctx.bin.display()
-            ))
-        })?;
-        let pid = child.id();
-        // Track the handle before any further fallible step: a pid-file
-        // write failure must fail the launch without orphaning the child
-        // just spawned (Drop kills whatever `self.child` holds).
-        self.child = Some(child);
-        self.addr = None;
-        self.last_heartbeat = None;
-        self.last_advance = Instant::now();
-        // The pid file is observability (and what the e2e kill test aims
-        // at), not control flow — the supervisor holds the Child handle.
-        std::fs::write(&self.paths.pid, format!("{pid}\n"))?;
-        Ok(())
-    }
-
-    /// Is this shard's WAL a complete record of its slice? (The completion
-    /// criterion: exit codes alone cannot distinguish "died mid-sweep"
-    /// from "finished but the report verdict failed".)
-    fn wal_complete(&self) -> bool {
-        match read_wal(&self.paths.wal) {
-            Ok((meta, outcomes)) => meta == self.expect && outcomes.len() == self.owned,
-            Err(_) => false,
-        }
-    }
-
-    /// Bounded relaunch, or give up and fail the launch.
-    fn relaunch(&mut self, why: &str, ctx: &SpawnCtx<'_>) -> Result<()> {
-        if self.restarts >= ctx.opts.max_restarts {
-            return Err(SedarError::Config(format!(
-                "fleet launch: shard {} {why} and exhausted its restart budget \
-                 ({}) — see {}",
-                self.plan.label(),
-                ctx.opts.max_restarts,
-                self.paths.log.display()
-            )));
-        }
-        self.restarts += 1;
-        eprintln!(
-            "fleet: shard {} {why} — relaunch {}/{} (WAL replay skips finished tasks)",
-            self.plan.label(),
-            self.restarts,
-            ctx.opts.max_restarts
-        );
-        self.spawn(ctx)
-    }
-
-    /// One supervision step: reap an exit, or poll status and check for a
-    /// stall — relaunching as needed.
-    fn step(&mut self, ctx: &SpawnCtx<'_>) -> Result<()> {
-        let exited = match self.child.as_mut() {
-            None => None,
-            Some(c) => c.try_wait()?,
-        };
-        if let Some(status) = exited {
-            self.child = None;
-            if self.wal_complete() {
-                self.finished = true;
-                if !status.success() {
-                    eprintln!(
-                        "fleet: shard {} finished its slice with a failing verdict \
-                         ({status}) — the merged report will carry it; see {}",
-                        self.plan.label(),
-                        self.paths.log.display()
-                    );
-                }
-                return Ok(());
-            }
-            let why = format!("exited ({status}) before its slice was durable");
-            return self.relaunch(&why, ctx);
-        }
-
-        // Alive: learn the OS-assigned endpoint, then poll it.
-        if self.addr.is_none() {
-            if let Ok(s) = std::fs::read_to_string(&self.paths.addr) {
-                self.addr = s.trim().parse().ok();
-            }
-        }
-        if let Some(addr) = self.addr {
-            if let Ok(body) = http_get(addr, "/json", HTTP_TIMEOUT) {
-                if let Some(snap) = Snapshot::parse(&body) {
-                    if self.last_heartbeat != Some(snap.heartbeat) {
-                        self.last_heartbeat = Some(snap.heartbeat);
-                        self.last_advance = Instant::now();
-                    }
-                    self.snap = Some(snap);
-                }
-            }
-        }
-        if self.last_advance.elapsed() > ctx.opts.stall_timeout {
-            if let Some(mut c) = self.child.take() {
-                let _ = c.kill();
-                let _ = c.wait();
-            }
-            let secs = ctx.opts.stall_timeout.as_secs();
-            let why = format!("stalled (no heartbeat advance in {secs}s)");
-            return self.relaunch(&why, ctx);
-        }
-        Ok(())
-    }
-}
-
-/// Aggregate progress across the fleet, one line.
-fn progress_line(fleet: &[ShardProc], total: usize) -> String {
-    let mut done = 0usize;
-    let mut passed = 0usize;
-    let mut failed = 0usize;
-    let mut restarts = 0usize;
-    let mut parts = Vec::with_capacity(fleet.len());
-    for p in fleet {
-        let (d, pa, fa) = match &p.snap {
-            Some(s) => (s.done, s.passed, s.failed),
-            None => (0, 0, 0),
-        };
-        // A finished shard's last snapshot can be stale; its WAL is
-        // complete by definition.
-        let d = if p.finished { p.owned } else { d };
-        done += d;
-        passed += pa;
-        failed += fa;
-        restarts += p.restarts;
-        let marker = if p.restarts > 0 {
-            format!("(r{})", p.restarts)
-        } else {
-            String::new()
-        };
-        parts.push(format!("{}:{d}/{}{marker}", p.plan.label(), p.owned));
-    }
-    format!(
-        "fleet: {done}/{total} task(s) done ({passed} pass, {failed} fail) \
-         | {} | {restarts} restart(s)",
-        parts.join(" ")
-    )
-}
-
 /// Run the whole fleet: spawn, supervise, relaunch, merge. Blocks until
 /// every shard's slice is durable, then returns the merged report (or the
 /// first unrecoverable error — children are killed on the way out).
 pub fn run_launch(opts: &LaunchOptions) -> Result<LaunchReport> {
-    if opts.shards == 0 {
-        return Err(SedarError::Config(
-            "fleet launch: --shards must be >= 1".into(),
-        ));
-    }
-    // Build the spec exactly as every child will, so the supervisor knows
-    // each slice's size and identity (and can verify WALs against the
-    // same sweep fingerprint the children stamp into them).
-    let mut spec = CampaignSpec::new(opts.seed);
-    if let Some(f) = &opts.filter {
-        spec.apply_filter(f)?;
-    }
-    if let Some(k) = &opts.scenario {
-        spec.apply_filter(&format!("scenario={k}"))?;
-    }
-    let tasks = build_tasks(&spec);
-    if tasks.is_empty() {
-        return Err(SedarError::Config(
-            "campaign filter selects no tasks".into(),
-        ));
-    }
-    let total = tasks.len();
-    let fingerprint = sweep_fingerprint(opts.seed, &tasks);
-    std::fs::create_dir_all(&opts.dir)?;
-    let bin = match &opts.bin {
-        Some(b) => b.clone(),
-        None => std::env::current_exe()?,
-    };
-    let jobs = if opts.jobs > 0 {
-        opts.jobs
-    } else {
-        (CampaignSpec::default_jobs() / opts.shards).max(1)
-    };
+    let mut sweep = Sweep::new(
+        SweepConfig {
+            seed: opts.seed,
+            shards: opts.shards,
+            jobs: opts.jobs,
+            filter: opts.filter.clone(),
+            scenario: opts.scenario.clone(),
+        },
+        opts.dir.clone(),
+        opts.bin.clone(),
+        SupervisorConfig {
+            max_restarts: opts.max_restarts,
+            stall_timeout: opts.stall_timeout,
+        },
+        Arc::new(LocalSpawner),
+    )?;
+    let total = sweep.total();
 
-    let mut fleet: Vec<ShardProc> = (0..opts.shards)
-        .map(|i| {
-            let plan = ShardPlan {
-                index: i,
-                count: opts.shards,
-            };
-            ShardProc {
-                owned: plan.slice(&tasks).len(),
-                expect: ShardMeta {
-                    seed: opts.seed,
-                    shard_index: i as u32,
-                    shard_count: opts.shards as u32,
-                    total_tasks: total as u64,
-                    spec_hash: fingerprint,
-                },
-                paths: ShardPaths::new(&opts.dir, i + 1),
-                child: None,
-                restarts: 0,
-                addr: None,
-                snap: None,
-                last_heartbeat: None,
-                last_advance: Instant::now(),
-                finished: false,
-                wal_len: 0,
-                plan,
-            }
-        })
-        .collect();
-
-    // The live partial aggregate spans the whole fleet; seed its identity
-    // from shard 1's expected header (every shard must match it anyway).
-    let aggregate = Arc::new(FleetAggregate::new(fleet[0].expect, total));
     let _agg_server: Option<StatusServer> = match opts.status_port {
         None => None,
         Some(port) => {
-            let server = StatusServer::spawn(port, aggregate.clone())?;
+            let server = StatusServer::spawn(port, sweep.aggregate())?;
             eprintln!(
                 "fleet status endpoint: http://{}/ (and /json)",
                 server.addr()
@@ -660,47 +189,23 @@ pub fn run_launch(opts: &LaunchOptions) -> Result<LaunchReport> {
         }
     };
 
-    let ctx = SpawnCtx {
-        opts,
-        bin: &bin,
-        jobs,
-    };
-    for p in fleet.iter_mut() {
-        p.spawn(&ctx)?;
-    }
+    sweep.start_all()?;
     eprintln!(
-        "fleet: launched {} shard(s) over {total} task(s) ({jobs} job(s) per shard, dir {})",
+        "fleet: launched {} shard(s) over {total} task(s) ({} job(s) per shard, dir {})",
         opts.shards,
+        sweep.jobs(),
         opts.dir.display()
     );
 
     let mut last_line = String::new();
     let mut last_emit = Instant::now();
     loop {
-        let mut all_done = true;
-        for p in fleet.iter_mut() {
-            if p.finished {
-                continue;
-            }
-            all_done = false;
-            p.step(&ctx)?;
-            // Feed the live aggregate whenever the shard's WAL grew. The
-            // metadata probe is cheap; the WAL reader tolerates a racing
-            // writer's torn tail, so no coordination with the child is
-            // needed.
-            let len = std::fs::metadata(&p.paths.wal)
-                .map(|m| m.len())
-                .unwrap_or(0);
-            if len != p.wal_len {
-                p.wal_len = len;
-                aggregate.refresh(&p.paths.wal);
-            }
-        }
-        if all_done {
+        sweep.poll()?;
+        if sweep.done() {
             break;
         }
         if !opts.quiet {
-            let line = progress_line(&fleet, total);
+            let line = progress_line(sweep.supervisor().shards(), total);
             if line != last_line && last_emit.elapsed() >= Duration::from_millis(900) {
                 eprintln!("{line}");
                 last_line = line;
@@ -710,18 +215,10 @@ pub fn run_launch(opts: &LaunchOptions) -> Result<LaunchReport> {
         std::thread::sleep(opts.poll_interval);
     }
 
-    // Every slice is durable. The final merge is one last STRICT ingest of
-    // each WAL into the same merger the live aggregate used all along —
-    // identity drift and overlap are re-verified here with real errors,
-    // and the coverage check below is the completeness half. Because it is
-    // the same object, "live aggregate at completion" and "final report"
-    // cannot disagree.
-    for p in &fleet {
-        let (meta, outcomes) = read_wal(&p.paths.wal)?;
-        aggregate.ingest(&meta, outcomes)?;
-    }
-    let report = aggregate.final_report()?;
-    let stats = fleet
+    let report = sweep.finalize()?;
+    let stats = sweep
+        .supervisor()
+        .shards()
         .iter()
         .map(|p| ShardStat {
             label: p.plan.label(),
@@ -740,35 +237,6 @@ pub fn run_launch(opts: &LaunchOptions) -> Result<LaunchReport> {
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    #[test]
-    fn snapshot_parses_shard_level_scalars_not_cell_fields() {
-        // A realistic board document: the cells repeat `done`/`total`/
-        // `passed` keys with *different* values — the first (shard-level)
-        // occurrence must win.
-        let body = "{\"fleet\":\"shard 1/2\",\"seed\":7,\"total\":18,\"done\":5,\
-                    \"passed\":4,\"failed\":1,\"executed\":3,\"resumed\":2,\
-                    \"heartbeat\":5,\"cells\":[{\"app\":\"matmul\",\
-                    \"strategy\":\"sys-ckpt\",\"total\":9,\"done\":9,\"passed\":9}]}";
-        let s = Snapshot::parse(body).unwrap();
-        assert_eq!(s.done, 5);
-        assert_eq!(s.passed, 4);
-        assert_eq!(s.failed, 1);
-        assert_eq!(s.executed, 3);
-        assert_eq!(s.resumed, 2);
-        assert_eq!(s.heartbeat, 5);
-    }
-
-    #[test]
-    fn snapshot_parse_rejects_incomplete_documents() {
-        // A pre-extension snapshot (no heartbeat/resumed fields) must not
-        // parse into zeros that defeat stall detection.
-        let old = "{\"fleet\":\"shard 1/2\",\"seed\":7,\"total\":18,\"done\":5,\
-                   \"passed\":4,\"failed\":1,\"cells\":[]}";
-        assert!(Snapshot::parse(old).is_none());
-        assert!(Snapshot::parse("").is_none());
-        assert!(Snapshot::parse("not json at all").is_none());
-    }
 
     #[test]
     fn launch_rejects_empty_fleets_and_empty_sweeps() {
@@ -792,104 +260,35 @@ mod tests {
     }
 
     #[test]
-    fn progress_line_aggregates_and_marks_restarts() {
-        let dir = std::env::temp_dir();
-        let mk = |i: usize, snap: Option<Snapshot>, restarts: usize, finished: bool| ShardProc {
-            plan: ShardPlan { index: i, count: 2 },
-            owned: 5,
-            expect: ShardMeta {
-                seed: 1,
-                shard_index: i as u32,
-                shard_count: 2,
-                total_tasks: 10,
-                spec_hash: 0,
-            },
-            paths: ShardPaths::new(&dir, i + 1),
-            child: None,
-            restarts,
-            addr: None,
-            snap,
-            last_heartbeat: None,
-            last_advance: Instant::now(),
-            finished,
-            wal_len: 0,
-        };
-        let fleet = vec![
-            mk(
-                0,
-                Some(Snapshot {
-                    done: 3,
-                    passed: 2,
-                    failed: 1,
+    fn launch_report_summary_counts_shards_and_restarts() {
+        // The summary format is part of the CI launch-smoke contract:
+        // "fleet launch: 2 shard(s), 24 task(s), 0 restart(s)".
+        let report = LaunchReport {
+            shards: vec![
+                ShardStat {
+                    label: "1/2".into(),
+                    owned: 12,
+                    restarts: 1,
+                    resumed: 2,
+                    executed: 10,
+                },
+                ShardStat {
+                    label: "2/2".into(),
+                    owned: 12,
+                    restarts: 0,
                     resumed: 0,
-                    executed: 3,
-                    heartbeat: 3,
-                }),
-                1,
-                false,
-            ),
-            mk(1, None, 0, true),
-        ];
-        let line = progress_line(&fleet, 10);
-        assert!(line.contains("8/10"), "got: {line}");
-        assert!(line.contains("1/2:3/5(r1)"), "got: {line}");
-        assert!(line.contains("2/2:5/5"), "got: {line}");
-        assert!(line.contains("1 restart(s)"), "got: {line}");
-    }
-
-    #[test]
-    fn fleet_aggregate_serves_partial_then_complete_unions() {
-        let meta = |shard_index: u32| ShardMeta {
-            seed: 9,
-            shard_index,
-            shard_count: 2,
-            total_tasks: 2,
-            spec_hash: 0xABCD,
+                    executed: 12,
+                },
+            ],
+            report: crate::campaign::CampaignReport::new(7, vec![]),
         };
-        let outcome = |index: usize, pass: bool| TaskOutcome {
-            index,
-            scenario_id: index as u32,
-            app: crate::campaign::CampaignApp::Matmul,
-            strategy: crate::config::Strategy::SysCkpt,
-            collectives: crate::config::CollectiveImpl::PointToPoint,
-            validation: crate::detect::ValidationMode::Full,
-            netfault: crate::faultnet::NetFaultMode::None,
-            faults: 1,
-            completed: true,
-            restarts: 0,
-            injected: true,
-            correct: Some(pass),
-            first_detection: None,
-            last_resume: None,
-            pass,
-            mismatches: vec![],
-            wall: Duration::ZERO,
-            metrics: Default::default(),
-        };
-
-        let agg = FleetAggregate::new(meta(0), 2);
-        agg.ingest(&meta(0), vec![outcome(0, true)]).unwrap();
-
-        // Mid-flight: a well-formed partial union.
-        let json = agg.json_snapshot();
-        assert!(json.contains("\"fleet\":\"launch\""), "got: {json}");
-        assert!(json.contains("\"done\":1"), "got: {json}");
-        assert!(json.contains("\"total\":2"), "got: {json}");
-        assert!(json.contains("\"complete\":false"), "got: {json}");
-        let text = agg.text_snapshot();
-        assert!(text.contains("partial union"), "got: {text}");
-        assert!(agg.final_report().is_err(), "partial must not finalize");
-
-        // Completion: the same merger renders the final report.
-        agg.ingest(&meta(1), vec![outcome(1, false)]).unwrap();
-        let json = agg.json_snapshot();
-        assert!(json.contains("\"complete\":true"), "got: {json}");
-        assert!(json.contains("\"failed\":1"), "got: {json}");
-        let prom = agg.prometheus_snapshot();
-        assert!(prom.contains("sedar_fleet_complete 1"), "got: {prom}");
-        assert!(prom.contains("sedar_fleet_tasks_done_total 2"), "got: {prom}");
-        let report = agg.final_report().unwrap();
-        assert_eq!(report.total(), 2);
-        assert_eq!(report.failed(), 1);
+        assert_eq!(report.total_restarts(), 1);
+        let s = report.summary();
+        assert!(s.contains("2 shard(s)"), "got: {s}");
+        assert!(s.contains("1 restart(s)"), "got: {s}");
+        assert!(
+            s.contains("shard 1/2: 12 task(s), 1 restart(s)"),
+            "got: {s}"
+        );
     }
 }

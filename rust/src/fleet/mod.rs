@@ -18,7 +18,14 @@
 //!   resume, merge, completeness probing and live aggregation all share,
 //!   and the streaming shard merge;
 //! * [`status`] — a std-only TCP endpoint serving live progress snapshots
-//!   for long sweeps.
+//!   for long sweeps;
+//! * [`supervisor`] — spawn / poll / restart / stall machinery for one
+//!   shard set, generic over a [`supervisor::Spawner`] (local `Command`
+//!   today, the ssh remote-spawn seam tomorrow);
+//! * [`sweep`] — one submission as an owned object: plan, WAL directory,
+//!   live [`sweep::FleetAggregate`] and queued → running → merged/failed
+//!   lifecycle — `fleet launch` drives one, the `sedar serve` gateway
+//!   multiplexes many.
 //!
 //! The end-to-end invariant (enforced by
 //! `rust/tests/fleet_shard_equivalence.rs` and the CI sharded-sweep job):
@@ -33,6 +40,8 @@ pub mod launch;
 pub mod plan;
 pub mod snapshot;
 pub mod status;
+pub mod supervisor;
+pub mod sweep;
 pub mod wal;
 
 use std::path::PathBuf;

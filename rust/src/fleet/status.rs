@@ -7,8 +7,8 @@
 //! [`StatusServer::spawn`] serves a snapshot of any [`StatusSource`] over
 //! plain HTTP — `GET /` for human-readable text, `GET /json` for
 //! machine-readable JSON — with nothing but `std::net`. The board is one
-//! source; the launch driver's live fleet aggregate
-//! ([`crate::fleet::launch`]) is another, served by the same listener.
+//! source; a sweep's live fleet aggregate ([`crate::fleet::sweep`]) is
+//! another, served by the same listener.
 //!
 //! The endpoint is observational only: it reads atomics and a small mutex-
 //! guarded rollup, never touches the deterministic report path, and dies
@@ -18,7 +18,7 @@
 //! shard label, the `executed`/`resumed` split (how much of the progress
 //! was recovered from the WAL vs run in this process), and a
 //! monotonically increasing `heartbeat` counter — one tick per progress
-//! event — that [`crate::fleet::launch`] watches for stall detection.
+//! event — that [`crate::fleet::supervisor`] watches for stall detection.
 //! [`http_get`] is the matching std-only client half.
 //!
 //! Beyond progress counts, the board aggregates each finished task's
@@ -430,18 +430,61 @@ fn serve_one(mut stream: TcpStream, board: &dyn StatusSource) -> std::io::Result
     stream.flush()
 }
 
-/// Minimal std-only HTTP GET against a status endpoint: one HTTP/1.0
-/// request, the whole response read to EOF, the body returned iff the
-/// status line says 200. The fleet supervisor's poll path and the tests
-/// share this helper.
-pub fn http_get(addr: SocketAddr, path: &str, timeout: Duration) -> std::io::Result<String> {
-    use std::io::{Read, Write};
-    let mut conn = TcpStream::connect_timeout(&addr, timeout)?;
-    conn.set_read_timeout(Some(timeout))?;
-    conn.set_write_timeout(Some(timeout))?;
-    conn.write_all(format!("GET {path} HTTP/1.0\r\nConnection: close\r\n\r\n").as_bytes())?;
-    let mut raw = String::new();
-    conn.read_to_string(&mut raw)?;
+/// Largest response a status/gateway client will buffer. Status bodies
+/// are a few KiB and campaign reports tens of KiB; 1 MiB is an order of
+/// magnitude of headroom, and past it the peer is misbehaving.
+pub(crate) const MAX_RESPONSE: usize = 1 << 20;
+
+/// Read a whole response to EOF under a hard wall-clock `deadline` and a
+/// total-size `cap`. A naive `read_to_string` honors the socket's read
+/// timeout only *per read*: a peer dribbling one byte per timeout window
+/// can hold the caller hostage indefinitely (and an unbounded body can
+/// balloon memory). Shared by [`http_get`] and the gateway's submission
+/// client.
+pub(crate) fn read_response(
+    conn: &mut TcpStream,
+    deadline: Instant,
+    cap: usize,
+) -> std::io::Result<Vec<u8>> {
+    use std::io::Read;
+    let mut raw = Vec::new();
+    let mut chunk = [0u8; 4096];
+    loop {
+        let left = deadline.saturating_duration_since(Instant::now());
+        if left.is_zero() {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::TimedOut,
+                "response deadline exceeded (server stalled mid-response)",
+            ));
+        }
+        // Clamp the per-read window so the deadline check above runs at
+        // least every 250 ms no matter how slowly bytes arrive; Some(ZERO)
+        // is rejected by std, hence the 1 ms floor.
+        conn.set_read_timeout(Some(
+            left.min(Duration::from_millis(250))
+                .max(Duration::from_millis(1)),
+        ))?;
+        match conn.read(&mut chunk) {
+            Ok(0) => return Ok(raw),
+            Ok(n) => {
+                if raw.len() + n > cap {
+                    return Err(std::io::Error::other(format!(
+                        "response exceeds {cap} byte cap"
+                    )));
+                }
+                raw.extend_from_slice(&chunk[..n]);
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut => {}
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+/// Split a raw HTTP response, returning the body iff the status line says
+/// 200.
+pub(crate) fn parse_ok_body(raw: &str) -> std::io::Result<String> {
     let (head, body) = raw
         .split_once("\r\n\r\n")
         .ok_or_else(|| std::io::Error::other("malformed HTTP response (no header break)"))?;
@@ -452,6 +495,23 @@ pub fn http_get(addr: SocketAddr, path: &str, timeout: Duration) -> std::io::Res
         )));
     }
     Ok(body.to_string())
+}
+
+/// Minimal std-only HTTP GET against a status endpoint: one HTTP/1.0
+/// request, the whole response read to EOF, the body returned iff the
+/// status line says 200. `timeout` bounds the **entire** exchange —
+/// connect, write and all reads share one deadline — and the response is
+/// capped at [`MAX_RESPONSE`] bytes, so one stalled or runaway endpoint
+/// can never wedge the supervisor poll loop. The fleet supervisor's poll
+/// path, the serve gateway's clients and the tests share this helper.
+pub fn http_get(addr: SocketAddr, path: &str, timeout: Duration) -> std::io::Result<String> {
+    use std::io::Write;
+    let deadline = Instant::now() + timeout;
+    let mut conn = TcpStream::connect_timeout(&addr, timeout)?;
+    conn.set_write_timeout(Some(timeout))?;
+    conn.write_all(format!("GET {path} HTTP/1.0\r\nConnection: close\r\n\r\n").as_bytes())?;
+    let raw = read_response(&mut conn, deadline, MAX_RESPONSE)?;
+    parse_ok_body(&String::from_utf8_lossy(&raw))
 }
 
 #[cfg(test)]
@@ -622,5 +682,65 @@ mod tests {
         assert!(body.starts_with('{') && body.contains("\"done\":1"), "got: {body}");
         assert!(http_get(server.addr(), "/nope", Duration::from_secs(2)).is_err());
         drop(server);
+    }
+
+    #[test]
+    fn http_get_bounds_a_stalled_server_by_the_total_deadline() {
+        use std::io::Write;
+        // A malicious/stuck server that dribbles one byte per 50 ms after
+        // the headers, forever. Each dribble resets a naive per-read
+        // timeout, so only a *total* deadline gets the client out.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let server = std::thread::spawn(move || {
+            if let Ok((mut conn, _)) = listener.accept() {
+                let _ = conn.write_all(b"HTTP/1.0 200 OK\r\nContent-Type: text/plain\r\n\r\n");
+                while !stop2.load(Ordering::Relaxed) {
+                    if conn.write_all(b"x").is_err() {
+                        break;
+                    }
+                    let _ = conn.flush();
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+            }
+        });
+
+        let start = Instant::now();
+        let err = http_get(addr, "/", Duration::from_millis(300)).unwrap_err();
+        let elapsed = start.elapsed();
+        assert_eq!(err.kind(), std::io::ErrorKind::TimedOut, "got: {err}");
+        assert!(
+            elapsed < Duration::from_secs(3),
+            "client hostage for {elapsed:?}"
+        );
+        stop.store(true, Ordering::Relaxed);
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn http_get_caps_a_runaway_response_body() {
+        use std::io::Write;
+        // A server that streams far past MAX_RESPONSE as fast as it can:
+        // the client must give up at the cap instead of buffering it all.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            if let Ok((mut conn, _)) = listener.accept() {
+                let _ = conn.write_all(b"HTTP/1.0 200 OK\r\nContent-Type: text/plain\r\n\r\n");
+                let chunk = vec![b'y'; 64 * 1024];
+                for _ in 0..40 {
+                    // 2.5 MiB total, > the 1 MiB cap
+                    if conn.write_all(&chunk).is_err() {
+                        break;
+                    }
+                }
+            }
+        });
+
+        let err = http_get(addr, "/", Duration::from_secs(5)).unwrap_err();
+        assert!(err.to_string().contains("byte cap"), "got: {err}");
+        server.join().unwrap();
     }
 }

@@ -1,0 +1,757 @@
+//! The shard-set supervisor: spawn / poll / restart / stall logic for one
+//! set of `sedar campaign --shard i/N` workers, extracted from the launch
+//! driver so that both `fleet launch` (one sweep, all shards at once) and
+//! the `sedar serve` gateway (many sweeps multiplexed onto a pooled worker
+//! budget) drive the same supervision machinery.
+//!
+//! The pieces:
+//!
+//! * [`Spawner`] — how a shard process comes into being. The default
+//!   [`LocalSpawner`] runs `Command::new(bin)` on this machine; the trait
+//!   is the remote-spawn seam (an ssh spawner needs only "start this
+//!   command, report exit, kill on demand" — the supervisor itself talks
+//!   to shards exclusively through their WAL files and status endpoints,
+//!   both of which already work across machines given a shared directory
+//!   and reachable addresses);
+//! * [`ShardHandle`] — one live incarnation: exit probing and kill. The
+//!   [`ExitReport`] it yields carries a human-readable description so the
+//!   supervisor's messages stay byte-identical to the pre-refactor ones
+//!   for local children (`exit status: 0`, `signal: 9 (SIGKILL)`, …);
+//! * [`ShardProc`] — one supervised shard across incarnations: its plan,
+//!   expected WAL identity, restart budget accounting, status polling and
+//!   stall detection;
+//! * [`Supervisor`] — the shard set. `fleet launch` calls
+//!   [`Supervisor::spawn_all`]; the gateway starts shards one at a time
+//!   via [`Supervisor::start_next`] as pooled slots free up.
+//!
+//! Completion is judged by the WAL, never the exit code: a shard is done
+//! when its log holds its whole slice ([`ShardProc::wal_complete`]), so
+//! "died mid-sweep" and "finished but the report verdict failed" are
+//! distinguishable. A shard whose WAL is already complete when it is
+//! started (service restart adoption, or a re-launch over a finished
+//! directory) is marked finished without spawning anything — resuming a
+//! finished shard is provably free, so the supervisor does not even pay
+//! the process.
+
+use std::fs::OpenOptions;
+use std::net::SocketAddr;
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::error::{Result, SedarError};
+
+use super::plan::ShardPlan;
+use super::snapshot::read_wal;
+use super::status::http_get;
+use super::wal::ShardMeta;
+
+/// Per-poll timeout for one status GET (children live on loopback — a
+/// healthy endpoint answers in microseconds, a dead one refuses at once).
+const HTTP_TIMEOUT: Duration = Duration::from_millis(400);
+
+/// How one shard incarnation ended. `describe` is what the supervisor
+/// prints (`exit status: 1`, `signal: 9 (SIGKILL)`); keeping it a plain
+/// string is what lets a mock (or a remote spawner, which has no
+/// `std::process::ExitStatus` to show) report exits at all.
+#[derive(Debug, Clone)]
+pub struct ExitReport {
+    pub success: bool,
+    pub describe: String,
+}
+
+/// One live shard incarnation, however it was started.
+pub trait ShardHandle: Send {
+    /// Non-blocking exit probe: `Some` once the process is gone.
+    fn try_wait(&mut self) -> Result<Option<ExitReport>>;
+    /// Kill the process and reap it (best-effort; used on stalls and on
+    /// supervisor teardown).
+    fn kill_and_wait(&mut self);
+    /// The worker's process id (observability: written to the pid file the
+    /// e2e kill tests aim at; a remote spawner reports the remote pid).
+    fn pid(&self) -> u32;
+}
+
+/// What every (re)spawn of any shard in the set shares: the resolved
+/// binary, the campaign identity and the per-shard worker budget. The
+/// per-shard half of the spawn (plan label, file paths) rides in the
+/// [`ShardPlan`] and [`ShardPaths`] arguments.
+#[derive(Debug, Clone)]
+pub struct SpawnSpec {
+    pub bin: PathBuf,
+    pub seed: u64,
+    pub jobs: usize,
+    pub filter: Option<String>,
+    pub scenario: Option<String>,
+}
+
+/// How shard processes come into being. Implementations must be cheap to
+/// call repeatedly (relaunches) and must not block on the child's
+/// lifetime.
+pub trait Spawner: Send + Sync {
+    fn spawn(
+        &self,
+        spec: &SpawnSpec,
+        plan: &ShardPlan,
+        paths: &ShardPaths,
+    ) -> Result<Box<dyn ShardHandle>>;
+}
+
+/// The default spawner: a local `sedar campaign` child process with its
+/// stdout/stderr appended to the shard's log file.
+pub struct LocalSpawner;
+
+struct LocalHandle(Child);
+
+impl ShardHandle for LocalHandle {
+    fn try_wait(&mut self) -> Result<Option<ExitReport>> {
+        Ok(self.0.try_wait()?.map(|status| ExitReport {
+            success: status.success(),
+            describe: status.to_string(),
+        }))
+    }
+
+    fn kill_and_wait(&mut self) {
+        let _ = self.0.kill();
+        let _ = self.0.wait();
+    }
+
+    fn pid(&self) -> u32 {
+        self.0.id()
+    }
+}
+
+impl Spawner for LocalSpawner {
+    fn spawn(
+        &self,
+        spec: &SpawnSpec,
+        plan: &ShardPlan,
+        paths: &ShardPaths,
+    ) -> Result<Box<dyn ShardHandle>> {
+        let log = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&paths.log)?;
+        let mut cmd = Command::new(&spec.bin);
+        cmd.arg("campaign")
+            .arg("--seed")
+            .arg(spec.seed.to_string())
+            .arg("--jobs")
+            .arg(spec.jobs.to_string())
+            .arg("--shard")
+            .arg(plan.label())
+            .arg("--wal")
+            .arg(&paths.wal)
+            .arg("--status-port")
+            .arg("0")
+            .arg("--status-addr-file")
+            .arg(&paths.addr)
+            .arg("--run-dir")
+            .arg(&paths.run_dir)
+            .arg("--quiet");
+        if let Some(f) = &spec.filter {
+            cmd.arg("--filter").arg(f);
+        }
+        if let Some(k) = &spec.scenario {
+            cmd.arg("--scenario").arg(k);
+        }
+        cmd.stdin(Stdio::null())
+            .stdout(Stdio::from(log.try_clone()?))
+            .stderr(Stdio::from(log));
+        let child = cmd.spawn().map_err(|e| {
+            SedarError::Config(format!(
+                "fleet launch: cannot spawn shard {} ({}): {e}",
+                plan.label(),
+                spec.bin.display()
+            ))
+        })?;
+        Ok(Box::new(LocalHandle(child)))
+    }
+}
+
+/// Restart budget and stall policy for a shard set.
+#[derive(Debug, Clone)]
+pub struct SupervisorConfig {
+    /// Relaunch budget per shard; exceeding it fails the sweep.
+    pub max_restarts: usize,
+    /// No heartbeat advance for this long ⇒ the shard is stalled and gets
+    /// killed + relaunched. Must exceed the slowest single task.
+    pub stall_timeout: Duration,
+}
+
+/// Shard-level scalars of one `/json` status snapshot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) struct Snapshot {
+    pub(crate) done: usize,
+    pub(crate) passed: usize,
+    pub(crate) failed: usize,
+    pub(crate) resumed: usize,
+    pub(crate) executed: usize,
+    pub(crate) heartbeat: u64,
+}
+
+/// First occurrence of `"key":<digits>` in `body`. The board emits every
+/// shard-level scalar before the `cells` array, so the first occurrence is
+/// always the shard-level value even though cells repeat `done`/`total`.
+fn json_u64_field(body: &str, key: &str) -> Option<u64> {
+    let pat = format!("\"{key}\":");
+    let at = body.find(&pat)? + pat.len();
+    let digits: String = body[at..]
+        .chars()
+        .take_while(|c| c.is_ascii_digit())
+        .collect();
+    digits.parse().ok()
+}
+
+impl Snapshot {
+    fn parse(body: &str) -> Option<Snapshot> {
+        Some(Snapshot {
+            done: json_u64_field(body, "done")? as usize,
+            passed: json_u64_field(body, "passed")? as usize,
+            failed: json_u64_field(body, "failed")? as usize,
+            resumed: json_u64_field(body, "resumed")? as usize,
+            executed: json_u64_field(body, "executed")? as usize,
+            heartbeat: json_u64_field(body, "heartbeat")?,
+        })
+    }
+}
+
+/// Where one shard's files live under its sweep directory.
+pub struct ShardPaths {
+    /// The shard's single durable file: its write-ahead log.
+    pub wal: PathBuf,
+    pub addr: PathBuf,
+    pub pid: PathBuf,
+    pub log: PathBuf,
+    pub run_dir: PathBuf,
+}
+
+impl ShardPaths {
+    pub fn new(dir: &Path, member: usize) -> ShardPaths {
+        ShardPaths {
+            wal: dir.join(format!("shard-{member}.wal")),
+            addr: dir.join(format!("shard-{member}.addr")),
+            pid: dir.join(format!("shard-{member}.pid")),
+            log: dir.join(format!("shard-{member}.log")),
+            run_dir: dir.join(format!("run-{member}")),
+        }
+    }
+}
+
+/// One supervised shard process (its current incarnation, if any).
+pub struct ShardProc {
+    pub(crate) plan: ShardPlan,
+    pub(crate) owned: usize,
+    pub(crate) expect: ShardMeta,
+    pub(crate) paths: ShardPaths,
+    pub(crate) child: Option<Box<dyn ShardHandle>>,
+    pub(crate) restarts: usize,
+    pub(crate) addr: Option<SocketAddr>,
+    pub(crate) snap: Option<Snapshot>,
+    pub(crate) last_heartbeat: Option<u64>,
+    pub(crate) last_advance: Instant,
+    pub(crate) started: bool,
+    pub(crate) finished: bool,
+    /// Last observed WAL byte length — the cheap change detector that
+    /// gates re-reading the file into the live aggregate.
+    pub(crate) wal_len: u64,
+}
+
+impl Drop for ShardProc {
+    fn drop(&mut self) {
+        // An early supervisor exit (error path) must not leak children.
+        if let Some(mut c) = self.child.take() {
+            c.kill_and_wait();
+        }
+    }
+}
+
+impl ShardProc {
+    pub(crate) fn new(plan: ShardPlan, owned: usize, expect: ShardMeta, paths: ShardPaths) -> Self {
+        ShardProc {
+            plan,
+            owned,
+            expect,
+            paths,
+            child: None,
+            restarts: 0,
+            addr: None,
+            snap: None,
+            last_heartbeat: None,
+            last_advance: Instant::now(),
+            started: false,
+            finished: false,
+            wal_len: 0,
+        }
+    }
+
+    /// Spawn (or respawn) this shard's worker. The WAL path is stable
+    /// across incarnations — that is what makes a relaunch a *resume*.
+    fn spawn(&mut self, spawner: &dyn Spawner, spec: &SpawnSpec) -> Result<()> {
+        let _ = std::fs::remove_file(&self.paths.addr);
+        let child = spawner.spawn(spec, &self.plan, &self.paths)?;
+        let pid = child.pid();
+        // Track the handle before any further fallible step: a pid-file
+        // write failure must fail the launch without orphaning the child
+        // just spawned (Drop kills whatever `self.child` holds).
+        self.child = Some(child);
+        self.addr = None;
+        self.last_heartbeat = None;
+        self.last_advance = Instant::now();
+        // The pid file is observability (and what the e2e kill tests aim
+        // at), not control flow — the supervisor holds the handle.
+        std::fs::write(&self.paths.pid, format!("{pid}\n"))?;
+        Ok(())
+    }
+
+    /// Is this shard's WAL a complete record of its slice? (The completion
+    /// criterion: exit codes alone cannot distinguish "died mid-sweep"
+    /// from "finished but the report verdict failed".)
+    pub(crate) fn wal_complete(&self) -> bool {
+        match read_wal(&self.paths.wal) {
+            Ok((meta, outcomes)) => meta == self.expect && outcomes.len() == self.owned,
+            Err(_) => false,
+        }
+    }
+
+    /// Bounded relaunch, or give up and fail the sweep.
+    fn relaunch(&mut self, why: &str, spawner: &dyn Spawner, spec: &SpawnSpec, config: &SupervisorConfig) -> Result<()> {
+        if self.restarts >= config.max_restarts {
+            return Err(SedarError::Config(format!(
+                "fleet launch: shard {} {why} and exhausted its restart budget \
+                 ({}) — see {}",
+                self.plan.label(),
+                config.max_restarts,
+                self.paths.log.display()
+            )));
+        }
+        self.restarts += 1;
+        eprintln!(
+            "fleet: shard {} {why} — relaunch {}/{} (WAL replay skips finished tasks)",
+            self.plan.label(),
+            self.restarts,
+            config.max_restarts
+        );
+        self.spawn(spawner, spec)
+    }
+
+    /// One supervision step: reap an exit, or poll status and check for a
+    /// stall — relaunching as needed.
+    fn step(&mut self, spawner: &dyn Spawner, spec: &SpawnSpec, config: &SupervisorConfig) -> Result<()> {
+        let exited = match self.child.as_mut() {
+            None => None,
+            Some(c) => c.try_wait()?,
+        };
+        if let Some(report) = exited {
+            self.child = None;
+            if self.wal_complete() {
+                self.finished = true;
+                if !report.success {
+                    eprintln!(
+                        "fleet: shard {} finished its slice with a failing verdict \
+                         ({}) — the merged report will carry it; see {}",
+                        self.plan.label(),
+                        report.describe,
+                        self.paths.log.display()
+                    );
+                }
+                return Ok(());
+            }
+            let why = format!("exited ({}) before its slice was durable", report.describe);
+            return self.relaunch(&why, spawner, spec, config);
+        }
+
+        // Alive: learn the OS-assigned endpoint, then poll it.
+        if self.addr.is_none() {
+            if let Ok(s) = std::fs::read_to_string(&self.paths.addr) {
+                self.addr = s.trim().parse().ok();
+            }
+        }
+        if let Some(addr) = self.addr {
+            if let Ok(body) = http_get(addr, "/json", HTTP_TIMEOUT) {
+                if let Some(snap) = Snapshot::parse(&body) {
+                    if self.last_heartbeat != Some(snap.heartbeat) {
+                        self.last_heartbeat = Some(snap.heartbeat);
+                        self.last_advance = Instant::now();
+                    }
+                    self.snap = Some(snap);
+                }
+            }
+        }
+        if self.last_advance.elapsed() > config.stall_timeout {
+            if let Some(mut c) = self.child.take() {
+                c.kill_and_wait();
+            }
+            let secs = config.stall_timeout.as_secs();
+            let why = format!("stalled (no heartbeat advance in {secs}s)");
+            return self.relaunch(&why, spawner, spec, config);
+        }
+        Ok(())
+    }
+}
+
+/// The shard set: every [`ShardProc`] of one sweep plus the spawner and
+/// policy they share.
+pub struct Supervisor {
+    shards: Vec<ShardProc>,
+    spawner: Arc<dyn Spawner>,
+    spec: SpawnSpec,
+    config: SupervisorConfig,
+}
+
+impl Supervisor {
+    pub fn new(
+        shards: Vec<ShardProc>,
+        spawner: Arc<dyn Spawner>,
+        spec: SpawnSpec,
+        config: SupervisorConfig,
+    ) -> Supervisor {
+        Supervisor {
+            shards,
+            spawner,
+            spec,
+            config,
+        }
+    }
+
+    fn start_shard(&mut self, i: usize) -> Result<()> {
+        self.shards[i].started = true;
+        // Adoption short-circuit: a shard whose WAL already covers its
+        // slice (service restart over a finished directory) has nothing
+        // left to do — spawning a child just to replay and exit would be
+        // correct but wasteful.
+        if self.shards[i].wal_complete() {
+            self.shards[i].finished = true;
+            return Ok(());
+        }
+        let spawner = self.spawner.clone();
+        self.shards[i].spawn(spawner.as_ref(), &self.spec)
+    }
+
+    /// Start every shard now (the `fleet launch` shape: one sweep gets the
+    /// whole machine).
+    pub fn spawn_all(&mut self) -> Result<()> {
+        for i in 0..self.shards.len() {
+            self.start_shard(i)?;
+        }
+        Ok(())
+    }
+
+    /// Start the first not-yet-started shard, if any (the pooled-gateway
+    /// shape: one shard per free worker slot). Returns whether one was
+    /// started (or adopted as already complete).
+    pub fn start_next(&mut self) -> Result<bool> {
+        for i in 0..self.shards.len() {
+            if !self.shards[i].started {
+                self.start_shard(i)?;
+                return Ok(true);
+            }
+        }
+        Ok(false)
+    }
+
+    /// One supervision pass over every started, unfinished shard.
+    pub fn step(&mut self) -> Result<()> {
+        let spawner = self.spawner.clone();
+        for p in self.shards.iter_mut() {
+            if p.started && !p.finished {
+                p.step(spawner.as_ref(), &self.spec, &self.config)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Every shard's slice is durable.
+    pub fn all_done(&self) -> bool {
+        self.shards.iter().all(|p| p.finished)
+    }
+
+    /// Live child processes right now (what a pooled scheduler budgets).
+    pub fn running(&self) -> usize {
+        self.shards.iter().filter(|p| p.child.is_some()).count()
+    }
+
+    /// Shards not yet handed a worker slot.
+    pub fn unstarted(&self) -> usize {
+        self.shards.iter().filter(|p| !p.started).count()
+    }
+
+    pub fn total_restarts(&self) -> usize {
+        self.shards.iter().map(|p| p.restarts).sum()
+    }
+
+    /// Kill every live child (sweep teardown on failure).
+    pub fn kill_all(&mut self) {
+        for p in self.shards.iter_mut() {
+            if let Some(mut c) = p.child.take() {
+                c.kill_and_wait();
+            }
+        }
+    }
+
+    pub(crate) fn shards(&self) -> &[ShardProc] {
+        &self.shards
+    }
+
+    pub(crate) fn shards_mut(&mut self) -> &mut [ShardProc] {
+        &mut self.shards
+    }
+}
+
+/// Aggregate progress across the shard set, one line.
+pub(crate) fn progress_line(fleet: &[ShardProc], total: usize) -> String {
+    let mut done = 0usize;
+    let mut passed = 0usize;
+    let mut failed = 0usize;
+    let mut restarts = 0usize;
+    let mut parts = Vec::with_capacity(fleet.len());
+    for p in fleet {
+        let (d, pa, fa) = match &p.snap {
+            Some(s) => (s.done, s.passed, s.failed),
+            None => (0, 0, 0),
+        };
+        // A finished shard's last snapshot can be stale; its WAL is
+        // complete by definition.
+        let d = if p.finished { p.owned } else { d };
+        done += d;
+        passed += pa;
+        failed += fa;
+        restarts += p.restarts;
+        let marker = if p.restarts > 0 {
+            format!("(r{})", p.restarts)
+        } else {
+            String::new()
+        };
+        parts.push(format!("{}:{d}/{}{marker}", p.plan.label(), p.owned));
+    }
+    format!(
+        "fleet: {done}/{total} task(s) done ({passed} pass, {failed} fail) \
+         | {} | {restarts} restart(s)",
+        parts.join(" ")
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn snapshot_parses_shard_level_scalars_not_cell_fields() {
+        // A realistic board document: the cells repeat `done`/`total`/
+        // `passed` keys with *different* values — the first (shard-level)
+        // occurrence must win.
+        let body = "{\"fleet\":\"shard 1/2\",\"seed\":7,\"total\":18,\"done\":5,\
+                    \"passed\":4,\"failed\":1,\"executed\":3,\"resumed\":2,\
+                    \"heartbeat\":5,\"cells\":[{\"app\":\"matmul\",\
+                    \"strategy\":\"sys-ckpt\",\"total\":9,\"done\":9,\"passed\":9}]}";
+        let s = Snapshot::parse(body).unwrap();
+        assert_eq!(s.done, 5);
+        assert_eq!(s.passed, 4);
+        assert_eq!(s.failed, 1);
+        assert_eq!(s.executed, 3);
+        assert_eq!(s.resumed, 2);
+        assert_eq!(s.heartbeat, 5);
+    }
+
+    #[test]
+    fn snapshot_parse_rejects_incomplete_documents() {
+        // A pre-extension snapshot (no heartbeat/resumed fields) must not
+        // parse into zeros that defeat stall detection.
+        let old = "{\"fleet\":\"shard 1/2\",\"seed\":7,\"total\":18,\"done\":5,\
+                   \"passed\":4,\"failed\":1,\"cells\":[]}";
+        assert!(Snapshot::parse(old).is_none());
+        assert!(Snapshot::parse("").is_none());
+        assert!(Snapshot::parse("not json at all").is_none());
+    }
+
+    fn meta(i: u32, count: u32, total: u64) -> ShardMeta {
+        ShardMeta {
+            seed: 1,
+            shard_index: i,
+            shard_count: count,
+            total_tasks: total,
+            spec_hash: 0xFEED,
+        }
+    }
+
+    #[test]
+    fn progress_line_aggregates_and_marks_restarts() {
+        let dir = std::env::temp_dir();
+        let mk = |i: usize, snap: Option<Snapshot>, restarts: usize, finished: bool| {
+            let mut p = ShardProc::new(
+                ShardPlan { index: i, count: 2 },
+                5,
+                meta(i as u32, 2, 10),
+                ShardPaths::new(&dir, i + 1),
+            );
+            p.snap = snap;
+            p.restarts = restarts;
+            p.finished = finished;
+            p
+        };
+        let fleet = vec![
+            mk(
+                0,
+                Some(Snapshot {
+                    done: 3,
+                    passed: 2,
+                    failed: 1,
+                    resumed: 0,
+                    executed: 3,
+                    heartbeat: 3,
+                }),
+                1,
+                false,
+            ),
+            mk(1, None, 0, true),
+        ];
+        let line = progress_line(&fleet, 10);
+        assert!(line.contains("8/10"), "got: {line}");
+        assert!(line.contains("1/2:3/5(r1)"), "got: {line}");
+        assert!(line.contains("2/2:5/5"), "got: {line}");
+        assert!(line.contains("1 restart(s)"), "got: {line}");
+    }
+
+    /// A scripted spawner: every spawn yields a handle that reports the
+    /// same exit immediately. This is the remote-spawn seam under test —
+    /// the supervisor never touches `std::process` through it.
+    struct MockSpawner {
+        spawned: AtomicUsize,
+        success: bool,
+    }
+
+    struct MockHandle {
+        report: ExitReport,
+    }
+
+    impl ShardHandle for MockHandle {
+        fn try_wait(&mut self) -> Result<Option<ExitReport>> {
+            Ok(Some(self.report.clone()))
+        }
+        fn kill_and_wait(&mut self) {}
+        fn pid(&self) -> u32 {
+            4242
+        }
+    }
+
+    impl Spawner for MockSpawner {
+        fn spawn(
+            &self,
+            _spec: &SpawnSpec,
+            _plan: &ShardPlan,
+            _paths: &ShardPaths,
+        ) -> Result<Box<dyn ShardHandle>> {
+            self.spawned.fetch_add(1, Ordering::SeqCst);
+            Ok(Box::new(MockHandle {
+                report: ExitReport {
+                    success: self.success,
+                    describe: "mock exit".into(),
+                },
+            }))
+        }
+    }
+
+    fn test_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "sedar-supervisor-{tag}-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn test_spec() -> SpawnSpec {
+        SpawnSpec {
+            bin: PathBuf::from("sedar-mock"),
+            seed: 1,
+            jobs: 1,
+            filter: None,
+            scenario: None,
+        }
+    }
+
+    #[test]
+    fn mock_spawner_relaunches_until_budget_exhausted() {
+        let dir = test_dir("budget");
+        // An "exit status: 0" child whose WAL never covers its slice must
+        // still be relaunched — exit codes are not the completion signal.
+        let spawner = Arc::new(MockSpawner {
+            spawned: AtomicUsize::new(0),
+            success: true,
+        });
+        let shard = ShardProc::new(
+            ShardPlan { index: 0, count: 1 },
+            4,
+            meta(0, 1, 4),
+            ShardPaths::new(&dir, 1),
+        );
+        let mut sup = Supervisor::new(
+            vec![shard],
+            spawner.clone(),
+            test_spec(),
+            SupervisorConfig {
+                max_restarts: 2,
+                stall_timeout: Duration::from_secs(300),
+            },
+        );
+        sup.spawn_all().unwrap();
+        assert_eq!(spawner.spawned.load(Ordering::SeqCst), 1);
+        assert_eq!(sup.running(), 1);
+        // Each step reaps the scripted exit, finds the WAL incomplete and
+        // respawns through the trait — until the budget runs out.
+        sup.step().unwrap();
+        assert_eq!(sup.shards()[0].restarts, 1);
+        sup.step().unwrap();
+        assert_eq!(sup.shards()[0].restarts, 2);
+        assert_eq!(spawner.spawned.load(Ordering::SeqCst), 3);
+        let err = sup.step().unwrap_err().to_string();
+        assert!(err.contains("exhausted its restart budget (2)"), "got: {err}");
+        assert!(err.contains("before its slice was durable"), "got: {err}");
+        assert!(!sup.all_done());
+        // The pid file recorded the mock's pid — the seam carries
+        // observability too.
+        let pid = std::fs::read_to_string(dir.join("shard-1.pid")).unwrap();
+        assert_eq!(pid.trim(), "4242");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn complete_wal_short_circuits_the_spawn() {
+        use crate::fleet::wal::Wal;
+        let dir = test_dir("adopt");
+        let expect = meta(0, 1, 0);
+        let paths = ShardPaths::new(&dir, 1);
+        // A WAL that already covers the shard's (empty) slice: header only.
+        let (mut w, prior) = Wal::open(&paths.wal, &expect).unwrap();
+        assert!(prior.is_empty());
+        w.finalize().unwrap();
+        drop(w);
+
+        let spawner = Arc::new(MockSpawner {
+            spawned: AtomicUsize::new(0),
+            success: true,
+        });
+        let shard = ShardProc::new(ShardPlan { index: 0, count: 1 }, 0, expect, paths);
+        let mut sup = Supervisor::new(
+            vec![shard],
+            spawner.clone(),
+            test_spec(),
+            SupervisorConfig {
+                max_restarts: 2,
+                stall_timeout: Duration::from_secs(300),
+            },
+        );
+        assert_eq!(sup.unstarted(), 1);
+        assert!(sup.start_next().unwrap());
+        // Adopted as finished: no process was ever spawned.
+        assert_eq!(spawner.spawned.load(Ordering::SeqCst), 0);
+        assert!(sup.all_done());
+        assert_eq!(sup.running(), 0);
+        // Nothing left to start.
+        assert!(!sup.start_next().unwrap());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

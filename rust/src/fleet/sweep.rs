@@ -1,0 +1,536 @@
+//! One sweep as an owned object: a submission's plan, WAL directory, live
+//! [`IncrementalMerger`] aggregate and lifecycle state.
+//!
+//! `fleet launch` runs exactly one [`Sweep`] and blocks on it; the
+//! `sedar serve` gateway owns many at once and advances each a step at a
+//! time from its scheduler loop. Both get the same invariants:
+//!
+//! * the sweep's durable state is its directory — one WAL per shard — so
+//!   re-creating a `Sweep` over an existing directory *is* crash recovery
+//!   (complete shards are adopted without spawning, partial ones resume
+//!   via WAL replay);
+//! * the live aggregate is the **same** [`IncrementalMerger`] that renders
+//!   the final report, so "live view at completion" and "final report"
+//!   cannot disagree;
+//! * the final report is byte-identical to the single-process
+//!   `sedar campaign` run of the same spec (the merge invariant the fleet
+//!   layer has carried since PR 2).
+//!
+//! Lifecycle: queued → running → merged | failed. The state is
+//! advisory — transitions are driven by the owner calling
+//! [`Sweep::start_all`]/[`Sweep::start_one`], [`Sweep::poll`] and
+//! [`Sweep::finalize`] — but it is what the gateway reports per
+//! submission.
+
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use crate::campaign::aggregate::IncrementalMerger;
+use crate::campaign::shard::TaskOutcome;
+use crate::campaign::{build_tasks, sweep_fingerprint, CampaignReport, CampaignSpec};
+use crate::error::{Result, SedarError};
+
+use super::plan::ShardPlan;
+use super::snapshot::read_wal;
+use super::status::StatusSource;
+use super::supervisor::{
+    ShardPaths, ShardProc, SpawnSpec, Spawner, Supervisor, SupervisorConfig,
+};
+use super::wal::ShardMeta;
+
+/// The sweep-wide live partial aggregate: one [`IncrementalMerger`] re-fed
+/// from each shard's WAL as it grows.
+///
+/// Ingest is idempotent per shard (a re-read *replaces* that shard's
+/// outcome set), so the supervisor can refresh as often as it likes; the
+/// WAL reader is lenient about a racing writer's torn tail, so the refresh
+/// never needs a lock against the children. When the sweep completes, the
+/// **same** merger renders the final report — the "live aggregate at
+/// completion equals the final report" invariant holds by construction,
+/// not by comparison.
+pub struct FleetAggregate {
+    total: usize,
+    merger: Mutex<IncrementalMerger>,
+}
+
+impl FleetAggregate {
+    pub fn new(first: ShardMeta, total: usize) -> FleetAggregate {
+        FleetAggregate {
+            total,
+            merger: Mutex::new(IncrementalMerger::new(first)),
+        }
+    }
+
+    /// Best-effort live refresh from one shard's WAL. A file that is
+    /// missing, mid-creation or identity-drifted is skipped — the strict
+    /// final ingest surfaces real problems with real errors.
+    pub fn refresh(&self, path: &Path) {
+        if let Ok((meta, outcomes)) = read_wal(path) {
+            let _ = self.merger.lock().unwrap().ingest(&meta, outcomes);
+        }
+    }
+
+    /// Strict ingest (the final-merge path): every error is fatal.
+    pub fn ingest(&self, meta: &ShardMeta, outcomes: Vec<TaskOutcome>) -> Result<()> {
+        self.merger.lock().unwrap().ingest(meta, outcomes)
+    }
+
+    /// Distinct finished tasks in the current union.
+    pub fn done(&self) -> usize {
+        self.merger.lock().unwrap().done()
+    }
+
+    /// Render the final report, requiring full coverage.
+    pub fn final_report(&self) -> Result<CampaignReport> {
+        let merger = self.merger.lock().unwrap();
+        if merger.done() != self.total {
+            return Err(SedarError::Config(format!(
+                "fleet launch: merged union covers {} of {} task(s) — \
+                 a shard WAL is incomplete",
+                merger.done(),
+                self.total
+            )));
+        }
+        merger.report()
+    }
+}
+
+impl StatusSource for FleetAggregate {
+    fn text_snapshot(&self) -> String {
+        let m = self.merger.lock().unwrap();
+        let mut s = format!(
+            "SEDAR fleet launch seed {}\ndone {}/{} (pass {}, fail {}) — {}\n",
+            m.seed(),
+            m.done(),
+            self.total,
+            m.passed(),
+            m.failed(),
+            if m.done() == self.total {
+                "complete"
+            } else {
+                "partial union of live WALs"
+            }
+        );
+        for (shard, done) in m.shard_progress() {
+            s.push_str(&format!("  shard {}: {done} outcome(s)\n", shard + 1));
+        }
+        s
+    }
+
+    fn json_snapshot(&self) -> String {
+        let m = self.merger.lock().unwrap();
+        let shards: Vec<String> = m
+            .shard_progress()
+            .iter()
+            .map(|(shard, done)| format!("{{\"shard\":{},\"done\":{done}}}", shard + 1))
+            .collect();
+        format!(
+            "{{\"fleet\":\"launch\",\"seed\":{},\"total\":{},\"done\":{},\
+             \"passed\":{},\"failed\":{},\"complete\":{},\"shards\":[{}]}}",
+            m.seed(),
+            self.total,
+            m.done(),
+            m.passed(),
+            m.failed(),
+            m.done() == self.total,
+            shards.join(",")
+        )
+    }
+
+    fn prometheus_snapshot(&self) -> String {
+        let m = self.merger.lock().unwrap();
+        let mut s = String::new();
+        let mut metric = |name: &str, kind: &str, help: &str, value: String| {
+            s.push_str(&format!(
+                "# HELP {name} {help}\n# TYPE {name} {kind}\n{name} {value}\n"
+            ));
+        };
+        metric(
+            "sedar_fleet_tasks_total",
+            "gauge",
+            "Tasks in the whole sweep across all shards.",
+            self.total.to_string(),
+        );
+        metric(
+            "sedar_fleet_tasks_done_total",
+            "counter",
+            "Distinct finished tasks across the live WAL union.",
+            m.done().to_string(),
+        );
+        metric(
+            "sedar_fleet_tasks_passed_total",
+            "counter",
+            "Finished tasks that passed their cell's oracle.",
+            m.passed().to_string(),
+        );
+        metric(
+            "sedar_fleet_tasks_failed_total",
+            "counter",
+            "Finished tasks that mismatched their cell's oracle.",
+            m.failed().to_string(),
+        );
+        metric(
+            "sedar_fleet_complete",
+            "gauge",
+            "1 once the union covers every task of the sweep.",
+            if m.done() == self.total { "1" } else { "0" }.to_string(),
+        );
+        s
+    }
+}
+
+/// Where a sweep is in its life. `Failed` carries the operator-facing
+/// reason (restart budget exhausted, identity drift, …).
+#[derive(Debug, Clone, PartialEq)]
+pub enum SweepState {
+    Queued,
+    Running,
+    Merged,
+    Failed(String),
+}
+
+impl SweepState {
+    pub fn label(&self) -> &'static str {
+        match self {
+            SweepState::Queued => "queued",
+            SweepState::Running => "running",
+            SweepState::Merged => "merged",
+            SweepState::Failed(_) => "failed",
+        }
+    }
+}
+
+/// What defines a sweep: the campaign identity plus how to split it.
+#[derive(Debug, Clone)]
+pub struct SweepConfig {
+    pub seed: u64,
+    /// Number of shard processes (the `N` of `--shard i/N`).
+    pub shards: usize,
+    /// Worker threads per shard (`0` = split the machine's default budget
+    /// evenly across the shards, at least 1 each).
+    pub jobs: usize,
+    pub filter: Option<String>,
+    pub scenario: Option<String>,
+}
+
+/// One sweep: its plan, directory, supervisor and live aggregate.
+pub struct Sweep {
+    config: SweepConfig,
+    dir: PathBuf,
+    total: usize,
+    jobs: usize,
+    aggregate: Arc<FleetAggregate>,
+    supervisor: Supervisor,
+    state: SweepState,
+}
+
+impl Sweep {
+    /// Plan a sweep over `dir`, creating the directory if needed. Building
+    /// over a directory with existing WALs is the resume/adoption path —
+    /// complete shards will be marked finished without spawning anything
+    /// when started.
+    pub fn new(
+        config: SweepConfig,
+        dir: PathBuf,
+        bin: Option<PathBuf>,
+        sup: SupervisorConfig,
+        spawner: Arc<dyn Spawner>,
+    ) -> Result<Sweep> {
+        if config.shards == 0 {
+            return Err(SedarError::Config(
+                "fleet launch: --shards must be >= 1".into(),
+            ));
+        }
+        // Build the spec exactly as every child will, so the supervisor
+        // knows each slice's size and identity (and can verify WALs
+        // against the same sweep fingerprint the children stamp into
+        // them).
+        let mut spec = CampaignSpec::new(config.seed);
+        if let Some(f) = &config.filter {
+            spec.apply_filter(f)?;
+        }
+        if let Some(k) = &config.scenario {
+            spec.apply_filter(&format!("scenario={k}"))?;
+        }
+        let tasks = build_tasks(&spec);
+        if tasks.is_empty() {
+            return Err(SedarError::Config(
+                "campaign filter selects no tasks".into(),
+            ));
+        }
+        let total = tasks.len();
+        let fingerprint = sweep_fingerprint(config.seed, &tasks);
+        std::fs::create_dir_all(&dir)?;
+        let bin = match bin {
+            Some(b) => b,
+            None => std::env::current_exe()?,
+        };
+        let jobs = if config.jobs > 0 {
+            config.jobs
+        } else {
+            (CampaignSpec::default_jobs() / config.shards).max(1)
+        };
+
+        let shards: Vec<ShardProc> = (0..config.shards)
+            .map(|i| {
+                let plan = ShardPlan {
+                    index: i,
+                    count: config.shards,
+                };
+                ShardProc::new(
+                    plan,
+                    plan.slice(&tasks).len(),
+                    ShardMeta {
+                        seed: config.seed,
+                        shard_index: i as u32,
+                        shard_count: config.shards as u32,
+                        total_tasks: total as u64,
+                        spec_hash: fingerprint,
+                    },
+                    ShardPaths::new(&dir, i + 1),
+                )
+            })
+            .collect();
+
+        // The live partial aggregate spans the whole sweep; seed its
+        // identity from shard 1's expected header (every shard must match
+        // it anyway).
+        let aggregate = Arc::new(FleetAggregate::new(shards[0].expect, total));
+        let spec = SpawnSpec {
+            bin,
+            seed: config.seed,
+            jobs,
+            filter: config.filter.clone(),
+            scenario: config.scenario.clone(),
+        };
+        Ok(Sweep {
+            config,
+            dir,
+            total,
+            jobs,
+            aggregate,
+            supervisor: Supervisor::new(shards, spawner, spec, sup),
+            state: SweepState::Queued,
+        })
+    }
+
+    pub fn config(&self) -> &SweepConfig {
+        &self.config
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Tasks in the whole sweep.
+    pub fn total(&self) -> usize {
+        self.total
+    }
+
+    /// Resolved worker threads per shard.
+    pub fn jobs(&self) -> usize {
+        self.jobs
+    }
+
+    pub fn state(&self) -> &SweepState {
+        &self.state
+    }
+
+    /// The live aggregate, shareable with a status server.
+    pub fn aggregate(&self) -> Arc<FleetAggregate> {
+        self.aggregate.clone()
+    }
+
+    pub(crate) fn supervisor(&self) -> &Supervisor {
+        &self.supervisor
+    }
+
+    /// Live shard processes right now.
+    pub fn running(&self) -> usize {
+        self.supervisor.running()
+    }
+
+    /// Shards not yet handed a worker slot.
+    pub fn unstarted(&self) -> usize {
+        self.supervisor.unstarted()
+    }
+
+    pub fn total_restarts(&self) -> usize {
+        self.supervisor.total_restarts()
+    }
+
+    /// Start every shard now (the `fleet launch` shape).
+    pub fn start_all(&mut self) -> Result<()> {
+        self.supervisor.spawn_all()?;
+        self.state = SweepState::Running;
+        Ok(())
+    }
+
+    /// Start one more shard if any remain unstarted (the pooled-gateway
+    /// shape). Returns whether one was started.
+    pub fn start_one(&mut self) -> Result<bool> {
+        let started = self.supervisor.start_next()?;
+        if started {
+            self.state = SweepState::Running;
+        }
+        Ok(started)
+    }
+
+    /// One supervision pass plus a live-aggregate refresh for every shard
+    /// whose WAL grew since the last poll.
+    pub fn poll(&mut self) -> Result<()> {
+        self.supervisor.step()?;
+        for p in self.supervisor.shards_mut() {
+            let len = std::fs::metadata(&p.paths.wal)
+                .map(|m| m.len())
+                .unwrap_or(0);
+            if len != p.wal_len {
+                p.wal_len = len;
+                self.aggregate.refresh(&p.paths.wal);
+            }
+        }
+        Ok(())
+    }
+
+    /// Every shard's slice is durable.
+    pub fn done(&self) -> bool {
+        self.supervisor.all_done()
+    }
+
+    /// Final merge: one last STRICT ingest of each WAL into the same
+    /// merger the live aggregate used all along — identity drift and
+    /// overlap are re-verified here with real errors, and the coverage
+    /// check in [`FleetAggregate::final_report`] is the completeness half.
+    /// Because it is the same object, "live aggregate at completion" and
+    /// "final report" cannot disagree.
+    pub fn finalize(&mut self) -> Result<CampaignReport> {
+        for p in self.supervisor.shards() {
+            let (meta, outcomes) = read_wal(&p.paths.wal)?;
+            self.aggregate.ingest(&meta, outcomes)?;
+        }
+        let report = self.aggregate.final_report()?;
+        self.state = SweepState::Merged;
+        Ok(report)
+    }
+
+    /// Tear the sweep down as failed: kill every live shard, record why.
+    pub fn fail(&mut self, why: String) {
+        self.supervisor.kill_all();
+        self.state = SweepState::Failed(why);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn fleet_aggregate_serves_partial_then_complete_unions() {
+        let meta = |shard_index: u32| ShardMeta {
+            seed: 9,
+            shard_index,
+            shard_count: 2,
+            total_tasks: 2,
+            spec_hash: 0xABCD,
+        };
+        let outcome = |index: usize, pass: bool| TaskOutcome {
+            index,
+            scenario_id: index as u32,
+            app: crate::campaign::CampaignApp::Matmul,
+            strategy: crate::config::Strategy::SysCkpt,
+            collectives: crate::config::CollectiveImpl::PointToPoint,
+            validation: crate::detect::ValidationMode::Full,
+            netfault: crate::faultnet::NetFaultMode::None,
+            faults: 1,
+            completed: true,
+            restarts: 0,
+            injected: true,
+            correct: Some(pass),
+            first_detection: None,
+            last_resume: None,
+            pass,
+            mismatches: vec![],
+            wall: Duration::ZERO,
+            metrics: Default::default(),
+        };
+
+        let agg = FleetAggregate::new(meta(0), 2);
+        agg.ingest(&meta(0), vec![outcome(0, true)]).unwrap();
+
+        // Mid-flight: a well-formed partial union.
+        let json = agg.json_snapshot();
+        assert!(json.contains("\"fleet\":\"launch\""), "got: {json}");
+        assert!(json.contains("\"done\":1"), "got: {json}");
+        assert!(json.contains("\"total\":2"), "got: {json}");
+        assert!(json.contains("\"complete\":false"), "got: {json}");
+        let text = agg.text_snapshot();
+        assert!(text.contains("partial union"), "got: {text}");
+        assert!(agg.final_report().is_err(), "partial must not finalize");
+
+        // Completion: the same merger renders the final report.
+        agg.ingest(&meta(1), vec![outcome(1, false)]).unwrap();
+        let json = agg.json_snapshot();
+        assert!(json.contains("\"complete\":true"), "got: {json}");
+        assert!(json.contains("\"failed\":1"), "got: {json}");
+        let prom = agg.prometheus_snapshot();
+        assert!(prom.contains("sedar_fleet_complete 1"), "got: {prom}");
+        assert!(prom.contains("sedar_fleet_tasks_done_total 2"), "got: {prom}");
+        let report = agg.final_report().unwrap();
+        assert_eq!(report.total(), 2);
+        assert_eq!(report.failed(), 1);
+    }
+
+    #[test]
+    fn sweep_lifecycle_labels_and_rejections() {
+        assert_eq!(SweepState::Queued.label(), "queued");
+        assert_eq!(SweepState::Running.label(), "running");
+        assert_eq!(SweepState::Merged.label(), "merged");
+        assert_eq!(SweepState::Failed("x".into()).label(), "failed");
+
+        let sup = SupervisorConfig {
+            max_restarts: 1,
+            stall_timeout: Duration::from_secs(300),
+        };
+        let dir = std::env::temp_dir().join(format!(
+            "sedar-sweep-reject-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        // Zero shards and empty filters are rejected before any file or
+        // process side effects.
+        let cfg = SweepConfig {
+            seed: 1,
+            shards: 0,
+            jobs: 1,
+            filter: None,
+            scenario: None,
+        };
+        let err = Sweep::new(
+            cfg,
+            dir.clone(),
+            None,
+            sup.clone(),
+            Arc::new(super::super::supervisor::LocalSpawner),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("--shards must be >= 1"), "got: {err}");
+        let cfg = SweepConfig {
+            seed: 1,
+            shards: 2,
+            jobs: 1,
+            filter: Some("scenario=999".into()),
+            scenario: None,
+        };
+        let err = Sweep::new(
+            cfg,
+            dir.clone(),
+            None,
+            sup,
+            Arc::new(super::super::supervisor::LocalSpawner),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("no tasks"), "got: {err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -654,6 +654,57 @@ mod tests {
     }
 
     #[test]
+    fn live_tailing_reingest_is_idempotent_replacement() {
+        use super::snapshot::read_wal;
+        use crate::campaign::aggregate::IncrementalMerger;
+        let p = tmp("tail");
+        let _ = std::fs::remove_file(&p);
+        // One shard covering the whole sweep, so the merged union closes.
+        let m = ShardMeta {
+            seed: 42,
+            shard_index: 0,
+            shard_count: 1,
+            total_tasks: 4,
+            spec_hash: 0xF1E7,
+        };
+        let (mut w, _) = Wal::open(&p, &m).unwrap();
+        w.append(&outcome(0)).unwrap();
+        w.append(&outcome(1)).unwrap();
+        // A live tailer (the gateway's aggregate) reads mid-append…
+        let mut live = IncrementalMerger::new(m);
+        let (found, prefix) = read_wal(&p).unwrap();
+        assert_eq!(prefix.len(), 2);
+        live.ingest(&found, prefix).unwrap();
+        assert_eq!(live.done(), 2);
+        assert!(!live.is_complete());
+        // …the shard keeps appending and finishes…
+        w.append(&outcome(2)).unwrap();
+        w.append(&outcome(3)).unwrap();
+        w.finalize().unwrap();
+        drop(w);
+        // …and the tailer re-ingests the SAME WAL in full. Ingest must be
+        // idempotent replacement of that shard's slot, not accumulation.
+        let (found, full) = read_wal(&p).unwrap();
+        live.ingest(&found, full).unwrap();
+        assert_eq!(live.done(), 4);
+        assert!(live.is_complete());
+        // The prefix-then-full merger must be byte-identical to a fresh
+        // single full ingest — the serve report path depends on it.
+        let mut fresh = IncrementalMerger::new(m);
+        let (found, full) = read_wal(&p).unwrap();
+        fresh.ingest(&found, full).unwrap();
+        assert_eq!(
+            format!("{:?}", live.merged().unwrap()),
+            format!("{:?}", fresh.merged().unwrap())
+        );
+        assert_eq!(
+            live.report().unwrap().deterministic_report(),
+            fresh.report().unwrap().deterministic_report()
+        );
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
     fn noop_resume_leaves_the_file_byte_identical() {
         let p = tmp("noop");
         let _ = std::fs::remove_file(&p);

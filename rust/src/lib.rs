@@ -39,7 +39,8 @@
 //! | [`recovery`] | Algorithms 1 and 2: rollback orchestration |
 //! | [`coordinator`] | the SEDAR run controller (strategy × app × injection) |
 //! | [`campaign`] | parallel sweep of the workfault × apps × strategies |
-//! | [`fleet`] | sharded multi-process sweeps: shard plans, per-shard write-ahead log (resume = replay), status endpoint, self-healing launch driver |
+//! | [`fleet`] | sharded multi-process sweeps: shard plans, per-shard write-ahead log (resume = replay), status endpoint, supervisor + sweep objects, self-healing launch driver |
+//! | [`serve`] | campaign-as-a-service gateway: pooled concurrent sweeps over HTTP |
 //! | [`apps`] | matmul (Master/Worker), Jacobi (SPMD), Smith-Waterman (pipeline) |
 //! | [`workfault`] | the 64-scenario workfault catalog + prediction oracle (§4.1) |
 //! | [`model`] | analytical temporal model: Equations 1–14 + AET (§3.4, §4.3-4.4) |
@@ -74,6 +75,7 @@ pub mod recovery;
 pub mod replica;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod state;
 pub mod util;
 pub mod vmpi;

@@ -15,6 +15,9 @@
 //!                [--max-restarts R] [--stall-secs T] [--poll-ms P]
 //!                [--status-port P] [--report md|csv] [--report-out report.md]
 //!                [--quiet]
+//! sedar serve    [--port P] [--workers W] [--dir D] [--rate R] [--burst B]
+//!                [--queue-cap Q] [--max-restarts R] [--stall-secs T]
+//!                [--poll-ms P] [--addr-file F] [--quiet]
 //! sedar merge    shard1.wal shard2.wal … [--report md|csv] [--report-out report.md]
 //!                [--allow-partial]
 //! sedar conform  --runs N [--seed S] [--filter …] [--jobs J] [--dir D]
@@ -55,6 +58,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("run") => cmd_run(args),
         Some("campaign") => cmd_campaign(args),
         Some("fleet") => cmd_fleet(args),
+        Some("serve") => cmd_serve(args),
         Some("merge") => cmd_merge(args),
         Some("conform") => cmd_conform(args),
         Some("trace") => cmd_trace(args),
@@ -90,6 +94,14 @@ commands:
             stalls (WAL replay skips finished tasks), streams every shard's
             WAL into a live partial aggregate as tasks land, and renders the
             final report from that same stream
+  serve     run the campaign-as-a-service gateway: a long-lived daemon
+            accepting sweep submissions over HTTP (POST /submit with
+            user/seed/shards/jobs/filter lines), multiplexing every
+            submission's shards onto one pooled worker budget with
+            per-client rate limits and queue caps, journaling each
+            accepted sweep so a killed daemon restarted over the same
+            --dir resumes every in-flight sweep — each merged report is
+            byte-identical to the standalone `sedar campaign` run
   merge     combine shard WALs written by `campaign --shard i/N --wal F`
             into the full sweep's report (byte-identical to a single-process
             run with the same --seed); live or partial WALs union with
@@ -184,6 +196,32 @@ fleet launch flags (one-command self-healing fleets):
                    once it binds (implies --status-port 0)
   --report FMT / --report-out F          as for campaign (merged report)
   --quiet          suppress the live aggregate progress line
+
+serve flags (campaign as a service):
+  --port P         listen on 127.0.0.1:P (default 0 = OS-assigned; pair
+                   with --addr-file to discover the bound address)
+  --workers W      pooled budget of concurrent shard processes across ALL
+                   sweeps (default 4); free slots go to active sweeps
+                   round-robin, one shard at a time (fair-share, not FIFO)
+  --dir D          service directory: the submission manifest plus one
+                   sweep directory (WALs, logs, report.md) per submission
+                   (default runs/serve-<pid>); restarting over the same
+                   directory kills orphaned shards, re-adopts every
+                   journaled sweep and resumes it by WAL replay
+  --rate R         token-bucket refill per client, submissions/second
+                   (default 5)
+  --burst B        token-bucket burst capacity per client (default 10)
+  --queue-cap Q    max queued+running sweeps per user (default 8)
+  --max-restarts R / --stall-secs T      per-shard supervision, as for
+                   fleet launch
+  --poll-ms P      scheduler cadence (default 50)
+  --addr-file F    atomically write the bound address to F (the same
+                   handshake fleet shards use)
+  --quiet          suppress per-request error chatter
+  routes: POST /submit (body: key=value lines — user, seed, shards, jobs,
+          filter, scenario), GET /sweeps, GET /sweep/ID/json,
+          GET /sweep/ID/report (the merged report, 404 until merged),
+          GET /metrics (Prometheus), GET /
 
 merge flags:
   --report FMT     md (default) or csv
@@ -455,6 +493,40 @@ fn cmd_fleet_launch(args: &Args) -> Result<()> {
         )));
     }
     Ok(())
+}
+
+/// `sedar serve`: the campaign-as-a-service gateway. Runs until killed.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let port = args.u64_or("port", 0)?;
+    if port > u16::MAX as u64 {
+        return Err(SedarError::Config(format!(
+            "serve: --port {port} out of range"
+        )));
+    }
+    let workers = args.usize_or("workers", 4)?;
+    if workers == 0 {
+        return Err(SedarError::Config(
+            "serve: --workers must be >= 1 (the pooled shard budget)".into(),
+        ));
+    }
+    let opts = sedar::serve::ServeOptions {
+        port: port as u16,
+        workers,
+        dir: match args.get("dir") {
+            Some(d) => d.into(),
+            None => format!("runs/serve-{}", std::process::id()).into(),
+        },
+        poll_interval: std::time::Duration::from_millis(args.u64_or("poll-ms", 50)?.max(10)),
+        stall_timeout: std::time::Duration::from_secs(args.u64_or("stall-secs", 300)?),
+        max_restarts: args.usize_or("max-restarts", 3)?,
+        rate: args.f64_or("rate", 5.0)?,
+        burst: args.f64_or("burst", 10.0)?,
+        queue_cap: args.usize_or("queue-cap", 8)?,
+        addr_file: args.get("addr-file").map(Into::into),
+        bin: None,
+        quiet: args.has("quiet"),
+    };
+    sedar::serve::run_serve(&opts)
 }
 
 /// Print the report in the chosen format and honor `--report-out` (the

@@ -1,0 +1,227 @@
+//! The gateway's request layer: bounded std-only HTTP/1.0, both sides.
+//!
+//! The status server ([`crate::fleet::status`]) only ever needed the
+//! request *line* — every route is a GET with no body. The gateway adds
+//! `POST /submit`, so this module reads full requests (head + body) under
+//! hard caps ([`MAX_HEAD`], [`MAX_BODY`]) and a per-request deadline, and
+//! provides the matching client half ([`http_post`]) built on the same
+//! hardened deadline-bounded response reader as
+//! [`crate::fleet::status::http_get`]. Same wire format as the status
+//! server: `HTTP/1.0`, `Connection: close`, explicit `Content-Length`.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::{Duration, Instant};
+
+use crate::fleet::status::{parse_ok_body, read_response, MAX_RESPONSE};
+
+/// Cap on the request head (request line + headers).
+pub(crate) const MAX_HEAD: usize = 8 * 1024;
+/// Cap on a request body. Submission bodies are a few hundred bytes of
+/// `key=value` lines; 64 KiB is generous.
+pub(crate) const MAX_BODY: usize = 64 * 1024;
+/// A whole request must arrive within this window.
+const REQUEST_DEADLINE: Duration = Duration::from_secs(2);
+
+/// One parsed request.
+pub(crate) struct Request {
+    pub method: String,
+    /// The raw request target (`/sweep/sweep-0001/json?x=1`).
+    pub target: String,
+    pub body: String,
+}
+
+/// Read from `conn` until `want(buf)` yields, under `deadline`. Treats
+/// per-read timeouts as retries so a segmented request still parses, but
+/// the overall deadline is hard.
+fn read_until<T>(
+    conn: &mut TcpStream,
+    deadline: Instant,
+    cap: usize,
+    buf: &mut Vec<u8>,
+    mut want: impl FnMut(&[u8]) -> Option<T>,
+) -> std::io::Result<Option<T>> {
+    let mut chunk = [0u8; 1024];
+    loop {
+        if let Some(t) = want(buf) {
+            return Ok(Some(t));
+        }
+        if buf.len() >= cap {
+            return Err(std::io::Error::other(format!(
+                "request exceeds {cap} byte cap"
+            )));
+        }
+        let left = deadline.saturating_duration_since(Instant::now());
+        if left.is_zero() {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::TimedOut,
+                "request deadline exceeded",
+            ));
+        }
+        conn.set_read_timeout(Some(
+            left.min(Duration::from_millis(250))
+                .max(Duration::from_millis(1)),
+        ))?;
+        match conn.read(&mut chunk) {
+            Ok(0) => return Ok(None), // peer closed early
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut => {}
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+/// Position just past the `\r\n\r\n` head/body break, if present.
+fn head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n").map(|p| p + 4)
+}
+
+/// Case-insensitive `Content-Length` lookup in the head.
+fn content_length(head: &str) -> usize {
+    head.lines()
+        .filter_map(|l| l.split_once(':'))
+        .find(|(k, _)| k.trim().eq_ignore_ascii_case("content-length"))
+        .and_then(|(_, v)| v.trim().parse().ok())
+        .unwrap_or(0)
+}
+
+/// Read one whole request (head, then `Content-Length` bytes of body)
+/// under the caps and deadline.
+pub(crate) fn read_request(conn: &mut TcpStream) -> std::io::Result<Request> {
+    let deadline = Instant::now() + REQUEST_DEADLINE;
+    let mut buf: Vec<u8> = Vec::new();
+    let Some(head_len) = read_until(conn, deadline, MAX_HEAD, &mut buf, head_end)? else {
+        return Err(std::io::Error::other("connection closed mid-request"));
+    };
+    let head = String::from_utf8_lossy(&buf[..head_len]).into_owned();
+    let mut first = head.lines().next().unwrap_or("").split_whitespace();
+    let method = first.next().unwrap_or("").to_string();
+    let target = first.next().unwrap_or("/").to_string();
+    let want = content_length(&head);
+    if want > MAX_BODY {
+        return Err(std::io::Error::other(format!(
+            "request body of {want} bytes exceeds the {MAX_BODY} byte cap"
+        )));
+    }
+    let need = head_len + want;
+    if read_until(conn, deadline, need, &mut buf, |b| {
+        (b.len() >= need).then_some(())
+    })?
+    .is_none()
+        && buf.len() < need
+    {
+        return Err(std::io::Error::other("connection closed mid-body"));
+    }
+    let body = String::from_utf8_lossy(&buf[head_len..need]).into_owned();
+    Ok(Request {
+        method,
+        target,
+        body,
+    })
+}
+
+/// Write one HTTP/1.0 response (the status server's exact wire shape).
+pub(crate) fn respond(
+    conn: &mut TcpStream,
+    status: &str,
+    content_type: &str,
+    body: &str,
+) -> std::io::Result<()> {
+    let response = format!(
+        "HTTP/1.0 {status}\r\nContent-Type: {content_type}\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    conn.write_all(response.as_bytes())?;
+    conn.flush()
+}
+
+/// Std-only HTTP POST: one request, the whole response read to EOF under
+/// `timeout` and the shared response cap, the body returned iff the
+/// status line says 200.
+pub fn http_post(
+    addr: SocketAddr,
+    path: &str,
+    body: &str,
+    timeout: Duration,
+) -> std::io::Result<String> {
+    let deadline = Instant::now() + timeout;
+    let mut conn = TcpStream::connect_timeout(&addr, timeout)?;
+    conn.set_write_timeout(Some(timeout))?;
+    conn.write_all(
+        format!(
+            "POST {path} HTTP/1.0\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+            body.len()
+        )
+        .as_bytes(),
+    )?;
+    let raw = read_response(&mut conn, deadline, MAX_RESPONSE)?;
+    parse_ok_body(&String::from_utf8_lossy(&raw))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    fn one_request(write_script: impl FnOnce(&mut TcpStream) + Send + 'static) -> std::io::Result<Request> {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = std::thread::spawn(move || {
+            let mut conn = TcpStream::connect(addr).unwrap();
+            write_script(&mut conn);
+            // Keep the socket open long enough for the server side to
+            // finish parsing (close is the client's EOF signal).
+            std::thread::sleep(Duration::from_millis(100));
+        });
+        let (mut conn, _) = listener.accept().unwrap();
+        let req = read_request(&mut conn);
+        client.join().unwrap();
+        req
+    }
+
+    #[test]
+    fn parses_a_segmented_post() {
+        let req = one_request(|conn| {
+            conn.write_all(b"POST /sub").unwrap();
+            conn.flush().unwrap();
+            std::thread::sleep(Duration::from_millis(30));
+            conn.write_all(b"mit HTTP/1.0\r\nContent-Length: 17\r\n\r\nseed=7\n")
+                .unwrap();
+            conn.flush().unwrap();
+            std::thread::sleep(Duration::from_millis(30));
+            conn.write_all(b"filter=a=b").unwrap();
+            conn.flush().unwrap();
+        })
+        .unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.target, "/submit");
+        assert_eq!(req.body, "seed=7\nfilter=a=b");
+    }
+
+    #[test]
+    fn rejects_an_oversized_body_by_declared_length() {
+        let err = one_request(|conn| {
+            conn.write_all(
+                format!("POST /submit HTTP/1.0\r\nContent-Length: {}\r\n\r\n", MAX_BODY + 1)
+                    .as_bytes(),
+            )
+            .unwrap();
+        })
+        .unwrap_err();
+        assert!(err.to_string().contains("byte cap"), "got: {err}");
+    }
+
+    #[test]
+    fn get_requests_have_empty_bodies() {
+        let req = one_request(|conn| {
+            conn.write_all(b"GET /sweeps HTTP/1.0\r\n\r\n").unwrap();
+        })
+        .unwrap();
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.target, "/sweeps");
+        assert!(req.body.is_empty());
+    }
+}

@@ -1,0 +1,227 @@
+//! The gateway's submission journal: `serve.manifest`.
+//!
+//! One append-only CRC-framed file (the same [`crate::util::frame`] codec
+//! the shard WALs use) holding one record per accepted submission and one
+//! per merged sweep. Together with the per-sweep WAL directories this is
+//! the daemon's *entire* durable state: a restarted `sedar serve` over the
+//! same `--dir` replays the manifest, re-creates every sweep over its
+//! existing directory, and resumes — crash recovery for the service is
+//! the same code path as crash recovery for a shard.
+//!
+//! Format (`SDMF` v1): the first record's body is the magic `SDMF1`;
+//! every later record starts with a tag byte — [`TAG_SUBMIT`] carries the
+//! submission (id, user, seed, shards, jobs, filter, scenario),
+//! [`TAG_DONE`] marks a sweep merged (its report is durable). Replay is
+//! lenient like the WAL reader: a torn tail (daemon killed mid-append) is
+//! dropped, never an error — at worst the daemon forgets the very last
+//! accepted submission, which the client never got a 200 for anyway,
+//! because [`Manifest::record_submit`] syncs *before* the gateway
+//! acknowledges.
+
+use std::fs::OpenOptions;
+use std::path::Path;
+
+use crate::error::{Result, SedarError};
+use crate::util::frame::{next_record, push_string, write_record, ByteReader};
+
+/// Magic body of the first record.
+const MAGIC: &[u8] = b"SDMF1";
+/// Record tag: one accepted submission.
+const TAG_SUBMIT: u8 = 1;
+/// Record tag: the named sweep merged its final report.
+const TAG_DONE: u8 = 2;
+
+/// One journaled submission, exactly as accepted.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Submission {
+    pub id: String,
+    pub user: String,
+    pub seed: u64,
+    pub shards: u32,
+    pub jobs: u32,
+    pub filter: Option<String>,
+    pub scenario: Option<String>,
+}
+
+/// The open journal (append handle). Reading happens once, at
+/// [`Manifest::open`]; everything after is append-and-sync.
+pub struct Manifest {
+    file: std::fs::File,
+}
+
+fn opt_string(out: &mut Vec<u8>, s: &Option<String>) {
+    push_string(out, s.as_deref().unwrap_or(""));
+}
+
+fn parse_submission(body: &[u8]) -> Result<Submission> {
+    let mut r = ByteReader::new(body, "serve manifest submission");
+    let id = r.string()?;
+    let user = r.string()?;
+    let seed = r.u64()?;
+    let shards = r.u32()?;
+    let jobs = r.u32()?;
+    let none_if_empty = |s: String| if s.is_empty() { None } else { Some(s) };
+    let filter = none_if_empty(r.string()?);
+    let scenario = none_if_empty(r.string()?);
+    Ok(Submission {
+        id,
+        user,
+        seed,
+        shards,
+        jobs,
+        filter,
+        scenario,
+    })
+}
+
+impl Manifest {
+    /// Open (or create) the journal at `path` and replay it: every
+    /// submission in acceptance order, each paired with whether a
+    /// [`TAG_DONE`] record followed it.
+    pub fn open(path: &Path) -> Result<(Manifest, Vec<(Submission, bool)>)> {
+        let existing = std::fs::read(path).unwrap_or_default();
+        let mut replay: Vec<(Submission, bool)> = Vec::new();
+        if !existing.is_empty() {
+            let (first, mut pos) = next_record(&existing, 0).ok_or_else(|| {
+                SedarError::Config(format!(
+                    "{}: not a serve manifest (torn or foreign header)",
+                    path.display()
+                ))
+            })?;
+            if first != MAGIC {
+                return Err(SedarError::Config(format!(
+                    "{}: not a serve manifest (expected SDMF1 magic)",
+                    path.display()
+                )));
+            }
+            // Lenient replay: stop at the first torn/corrupt frame — the
+            // records before it are intact by CRC.
+            while let Some((body, next)) = next_record(&existing, pos) {
+                pos = next;
+                match body.first() {
+                    Some(&TAG_SUBMIT) => {
+                        let sub = parse_submission(&body[1..])?;
+                        replay.push((sub, false));
+                    }
+                    Some(&TAG_DONE) => {
+                        let mut r = ByteReader::new(&body[1..], "serve manifest done mark");
+                        let id = r.string()?;
+                        if let Some(e) = replay.iter_mut().find(|(s, _)| s.id == id) {
+                            e.1 = true;
+                        }
+                    }
+                    _ => {
+                        return Err(SedarError::Config(format!(
+                            "{}: unknown manifest record tag",
+                            path.display()
+                        )))
+                    }
+                }
+            }
+        }
+        let mut file = OpenOptions::new().create(true).append(true).open(path)?;
+        if existing.is_empty() {
+            write_record(&mut file, MAGIC)?;
+            crate::fleet::sync_parent_dir(path)?;
+        }
+        Ok((Manifest { file }, replay))
+    }
+
+    /// Journal one accepted submission. Synced before returning — the
+    /// gateway must not acknowledge a submission the journal could lose.
+    pub fn record_submit(&mut self, sub: &Submission) -> Result<()> {
+        let mut body = vec![TAG_SUBMIT];
+        push_string(&mut body, &sub.id);
+        push_string(&mut body, &sub.user);
+        body.extend_from_slice(&sub.seed.to_le_bytes());
+        body.extend_from_slice(&sub.shards.to_le_bytes());
+        body.extend_from_slice(&sub.jobs.to_le_bytes());
+        opt_string(&mut body, &sub.filter);
+        opt_string(&mut body, &sub.scenario);
+        write_record(&mut self.file, &body)
+    }
+
+    /// Journal that a sweep merged (its report file is durable).
+    pub fn record_done(&mut self, id: &str) -> Result<()> {
+        let mut body = vec![TAG_DONE];
+        push_string(&mut body, id);
+        write_record(&mut self.file, &body)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "sedar-manifest-{tag}-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn sub(id: &str, filter: Option<&str>) -> Submission {
+        Submission {
+            id: id.into(),
+            user: "alice".into(),
+            seed: 7,
+            shards: 2,
+            jobs: 1,
+            filter: filter.map(str::to_string),
+            scenario: None,
+        }
+    }
+
+    #[test]
+    fn round_trips_submissions_and_done_marks() {
+        let dir = tmp("roundtrip");
+        let path = dir.join("serve.manifest");
+        {
+            let (mut m, replay) = Manifest::open(&path).unwrap();
+            assert!(replay.is_empty());
+            m.record_submit(&sub("sweep-0001", Some("scenario=1-4"))).unwrap();
+            m.record_submit(&sub("sweep-0002", None)).unwrap();
+            m.record_done("sweep-0001").unwrap();
+        }
+        let (_m, replay) = Manifest::open(&path).unwrap();
+        assert_eq!(replay.len(), 2);
+        assert_eq!(replay[0].0, sub("sweep-0001", Some("scenario=1-4")));
+        assert!(replay[0].1, "sweep-0001 is done");
+        assert_eq!(replay[1].0, sub("sweep-0002", None));
+        assert!(!replay[1].1, "sweep-0002 is in flight");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_tail_drops_only_the_last_record() {
+        let dir = tmp("torn");
+        let path = dir.join("serve.manifest");
+        {
+            let (mut m, _) = Manifest::open(&path).unwrap();
+            m.record_submit(&sub("sweep-0001", None)).unwrap();
+            m.record_submit(&sub("sweep-0002", None)).unwrap();
+        }
+        // Tear the file mid-record (a daemon SIGKILLed mid-append).
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 3]).unwrap();
+        let (_m, replay) = Manifest::open(&path).unwrap();
+        assert_eq!(replay.len(), 1, "torn tail dropped, prefix kept");
+        assert_eq!(replay[0].0.id, "sweep-0001");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn foreign_files_are_refused_by_name() {
+        let dir = tmp("foreign");
+        let path = dir.join("serve.manifest");
+        std::fs::write(&path, b"SDWL1 something else entirely........").unwrap();
+        let err = Manifest::open(&path).unwrap_err().to_string();
+        assert!(err.contains("not a serve manifest"), "got: {err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

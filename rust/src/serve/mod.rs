@@ -1,0 +1,967 @@
+//! Campaign as a service: the `sedar serve` gateway.
+//!
+//! The paper frames SEDAR as a methodology for *users* of scientific
+//! applications — plural — and its overhead guidelines only pay off when
+//! many small what-if sweeps are cheap to run against a warm system. This
+//! module promotes the one-shot `fleet launch` driver into a long-running
+//! daemon that multiplexes **many** users' sweeps onto **one** pooled
+//! worker fleet:
+//!
+//! * **Ingress** ([`http`]): `POST /submit` with a `key=value` body
+//!   (`user`, `seed`, `shards`, `jobs`, `filter`, `scenario`) accepts a
+//!   sweep; `GET /sweeps` lists all of them, `GET /sweep/ID/json` serves
+//!   a sweep's live aggregate, `GET /sweep/ID/report` its final merged
+//!   report, `GET /metrics` the gateway's Prometheus counters. All
+//!   std-only, all bounded (request caps + deadlines).
+//! * **Admission** ([`queue`]): a per-client token bucket (`--rate`,
+//!   `--burst`) rejects submission floods with 429s, and a per-user cap
+//!   on queued+running sweeps (`--queue-cap`) bounds any one user's
+//!   standing claim on the fleet.
+//! * **Scheduling**: `--workers W` is the pooled budget of concurrent
+//!   shard processes. A round-robin cursor hands free slots to active
+//!   sweeps one shard at a time — fair-share across submissions rather
+//!   than FIFO head-of-line blocking, so a 4-shard sweep and a 64-shard
+//!   sweep make proportional progress.
+//! * **Durability** ([`manifest`]): every accepted submission is
+//!   journaled (CRC-framed, synced before the 200) and every merge
+//!   recorded. A daemon killed at any instant and restarted over the same
+//!   `--dir` replays the manifest, kills any orphaned shard processes,
+//!   re-adopts every sweep over its existing WAL directory (the PR-9
+//!   lenient reader) and resumes — crash recovery for the service is the
+//!   same code path as crash recovery for a shard.
+//!
+//! The invariant that makes the service trustworthy is inherited, not
+//! re-proven: each sweep is a [`crate::fleet::sweep::Sweep`], so its
+//! merged report is byte-identical to the equivalent standalone
+//! `sedar campaign` run — regardless of pooling, interleaving, restarts
+//! or daemon crashes (CI `serve-smoke` byte-diffs both, across a SIGKILL).
+
+pub mod http;
+pub mod manifest;
+pub mod queue;
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::error::{Result, SedarError};
+use crate::fleet::status::StatusSource;
+use crate::fleet::supervisor::{LocalSpawner, Spawner, SupervisorConfig};
+use crate::fleet::sweep::{Sweep, SweepConfig, SweepState};
+
+use http::{read_request, respond, Request};
+use manifest::{Manifest, Submission};
+use queue::Admission;
+
+/// How the daemon runs.
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// Listen port (`0` = OS-assigned; pair with `--addr-file`).
+    pub port: u16,
+    /// Pooled budget of concurrent shard processes across all sweeps.
+    pub workers: usize,
+    /// Service directory: the submission manifest plus one sweep
+    /// directory (WALs, logs, report) per submission.
+    pub dir: PathBuf,
+    /// Scheduler/poll cadence.
+    pub poll_interval: Duration,
+    /// Per-shard stall timeout (as in `fleet launch`).
+    pub stall_timeout: Duration,
+    /// Per-shard relaunch budget (as in `fleet launch`).
+    pub max_restarts: usize,
+    /// Token-bucket refill rate per client, submissions/second.
+    pub rate: f64,
+    /// Token-bucket burst capacity per client.
+    pub burst: f64,
+    /// Max queued+running sweeps per user.
+    pub queue_cap: usize,
+    /// After binding, atomically write the actual listen address here
+    /// (the same handshake fleet shards use).
+    pub addr_file: Option<PathBuf>,
+    /// The `sedar` binary to spawn for shards (`None` = this executable).
+    pub bin: Option<PathBuf>,
+    /// Suppress per-tick progress chatter (adoption/merge notices still
+    /// print).
+    pub quiet: bool,
+}
+
+impl Default for ServeOptions {
+    fn default() -> ServeOptions {
+        ServeOptions {
+            port: 0,
+            workers: 4,
+            dir: PathBuf::from("runs/serve"),
+            poll_interval: Duration::from_millis(50),
+            stall_timeout: Duration::from_secs(300),
+            max_restarts: 3,
+            rate: 5.0,
+            burst: 10.0,
+            queue_cap: 8,
+            addr_file: None,
+            bin: None,
+            quiet: false,
+        }
+    }
+}
+
+/// One tracked submission: its identity plus the live [`Sweep`].
+struct Entry {
+    id: String,
+    user: String,
+    sweep: Sweep,
+    /// The manifest already holds this sweep's DONE record (restart
+    /// adoption of an already-merged sweep must not journal it twice).
+    journaled_done: bool,
+}
+
+/// The gateway: submission table, admission control, scheduler state and
+/// the journal. Single-threaded by design — one [`Gateway::tick`] drains
+/// the listener, schedules shard starts and polls every active sweep; the
+/// heavy work (the campaigns themselves) lives in child processes.
+pub struct Gateway {
+    opts: ServeOptions,
+    bin: PathBuf,
+    spawner: Arc<dyn Spawner>,
+    entries: Vec<Entry>,
+    admission: Admission,
+    manifest: Manifest,
+    next_id: u64,
+    /// Round-robin fair-share cursor over `entries`.
+    cursor: usize,
+    submitted: u64,
+    rejected: u64,
+    merged: u64,
+    failed: u64,
+}
+
+/// Best-effort `kill -9` of shard pids recorded under `dir` — a SIGKILLed
+/// daemon orphans its running shard children, and a restarted daemon must
+/// not race a live writer on the same WAL. Pid reuse could in principle
+/// kill an innocent process; the window (daemon crash → restart, pid files
+/// removed right after) is accepted for this operational tool.
+fn kill_stale_pids(dir: &std::path::Path) {
+    #[cfg(unix)]
+    if let Ok(entries) = std::fs::read_dir(dir) {
+        for e in entries.flatten() {
+            let name = e.file_name();
+            let name = name.to_string_lossy();
+            if name.starts_with("shard-") && name.ends_with(".pid") {
+                if let Ok(pid) = std::fs::read_to_string(e.path()) {
+                    let pid = pid.trim().to_string();
+                    if !pid.is_empty() && pid.chars().all(|c| c.is_ascii_digit()) {
+                        let _ = std::process::Command::new("kill")
+                            .arg("-9")
+                            .arg(&pid)
+                            .status();
+                    }
+                }
+                let _ = std::fs::remove_file(e.path());
+            }
+        }
+    }
+    #[cfg(not(unix))]
+    {
+        let _ = dir;
+    }
+}
+
+/// Parse a `POST /submit` body: `key=value` lines (`user`, `seed`,
+/// `shards`, `jobs`, `filter`, `scenario`), unknown keys rejected so a
+/// typo cannot silently submit the wrong sweep.
+fn parse_submission(body: &str) -> Result<(String, SweepConfig)> {
+    let mut user = "anon".to_string();
+    let mut cfg = SweepConfig {
+        seed: 42,
+        shards: 1,
+        jobs: 0,
+        filter: None,
+        scenario: None,
+    };
+    for line in body.lines() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let Some((key, value)) = line.split_once('=') else {
+            return Err(SedarError::Config(format!(
+                "submit: malformed line '{line}' (expected key=value)"
+            )));
+        };
+        // `value` keeps any embedded '=' — filters like `app=matmul`
+        // depend on it.
+        match key {
+            "user" => user = value.to_string(),
+            "seed" => {
+                cfg.seed = value
+                    .parse()
+                    .map_err(|_| SedarError::Config(format!("submit: bad seed '{value}'")))?
+            }
+            "shards" => {
+                cfg.shards = value
+                    .parse()
+                    .map_err(|_| SedarError::Config(format!("submit: bad shards '{value}'")))?
+            }
+            "jobs" => {
+                cfg.jobs = value
+                    .parse()
+                    .map_err(|_| SedarError::Config(format!("submit: bad jobs '{value}'")))?
+            }
+            "filter" if !value.is_empty() => cfg.filter = Some(value.to_string()),
+            "filter" => {}
+            "scenario" if !value.is_empty() => cfg.scenario = Some(value.to_string()),
+            "scenario" => {}
+            other => {
+                return Err(SedarError::Config(format!(
+                    "submit: unknown key '{other}' (user, seed, shards, jobs, filter, scenario)"
+                )))
+            }
+        }
+    }
+    if cfg.shards == 0 {
+        return Err(SedarError::Config("submit: shards must be >= 1".into()));
+    }
+    Ok((user, cfg))
+}
+
+impl Gateway {
+    /// Open (or re-open) the service over `opts.dir`: replay the
+    /// manifest, kill orphaned shard processes, and re-adopt every
+    /// journaled sweep over its existing directory.
+    pub fn new(opts: &ServeOptions) -> Result<Gateway> {
+        std::fs::create_dir_all(&opts.dir)?;
+        let (manifest, replay) = Manifest::open(&opts.dir.join("serve.manifest"))?;
+        let bin = match &opts.bin {
+            Some(b) => b.clone(),
+            None => std::env::current_exe()?,
+        };
+        let spawner: Arc<dyn Spawner> = Arc::new(LocalSpawner);
+        let mut entries = Vec::new();
+        let mut next_id: u64 = 1;
+        for (sub, done) in replay {
+            if let Some(n) = sub
+                .id
+                .strip_prefix("sweep-")
+                .and_then(|s| s.parse::<u64>().ok())
+            {
+                next_id = next_id.max(n + 1);
+            }
+            let sweep_dir = opts.dir.join(&sub.id);
+            if !done {
+                // A SIGKILLed daemon orphans running shard children that
+                // keep appending; two concurrent writers on one WAL is
+                // the one thing the resume path cannot tolerate.
+                kill_stale_pids(&sweep_dir);
+            }
+            let cfg = SweepConfig {
+                seed: sub.seed,
+                shards: sub.shards as usize,
+                jobs: sub.jobs as usize,
+                filter: sub.filter.clone(),
+                scenario: sub.scenario.clone(),
+            };
+            match Sweep::new(
+                cfg,
+                sweep_dir,
+                Some(bin.clone()),
+                SupervisorConfig {
+                    max_restarts: opts.max_restarts,
+                    stall_timeout: opts.stall_timeout,
+                },
+                spawner.clone(),
+            ) {
+                Ok(sweep) => {
+                    eprintln!(
+                        "serve: adopted sweep {} (user {}, {} task(s){})",
+                        sub.id,
+                        sub.user,
+                        sweep.total(),
+                        if done { ", already merged" } else { "" }
+                    );
+                    entries.push(Entry {
+                        id: sub.id,
+                        user: sub.user,
+                        sweep,
+                        journaled_done: done,
+                    });
+                }
+                // An unadoptable journal entry (e.g. the filter grammar
+                // changed across versions) must not take the service
+                // down with it.
+                Err(e) => eprintln!("serve: cannot adopt sweep {}: {e}", sub.id),
+            }
+        }
+        Ok(Gateway {
+            opts: opts.clone(),
+            bin,
+            spawner,
+            entries,
+            admission: Admission::new(opts.rate, opts.burst),
+            manifest,
+            next_id,
+            cursor: 0,
+            submitted: 0,
+            rejected: 0,
+            merged: 0,
+            failed: 0,
+        })
+    }
+
+    /// One scheduler turn: drain pending connections, hand free worker
+    /// slots to sweeps (fair-share round-robin), poll active sweeps, and
+    /// finalize any that completed. Request/scheduling errors are
+    /// reported per sweep or per connection — the daemon itself keeps
+    /// running.
+    pub fn tick(&mut self, listener: &TcpListener) {
+        loop {
+            match listener.accept() {
+                Ok((mut stream, _)) => {
+                    let _ = stream.set_nonblocking(false);
+                    if let Err(e) = self.serve_client(&mut stream) {
+                        if !self.opts.quiet {
+                            eprintln!("serve: request error: {e}");
+                        }
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) => {
+                    if !self.opts.quiet {
+                        eprintln!("serve: accept error: {e}");
+                    }
+                    break;
+                }
+            }
+        }
+        self.schedule();
+        self.poll_sweeps();
+    }
+
+    /// Live shard processes across every sweep (the pooled budget's
+    /// denominator).
+    fn running(&self) -> usize {
+        self.entries.iter().map(|e| e.sweep.running()).sum()
+    }
+
+    /// Hand free worker slots to sweeps, one shard per sweep per pass —
+    /// the round-robin cursor makes the shares fair across active
+    /// submissions instead of FIFO head-of-line.
+    fn schedule(&mut self) {
+        loop {
+            if self.running() >= self.opts.workers {
+                return;
+            }
+            let n = self.entries.len();
+            if n == 0 {
+                return;
+            }
+            let mut started = false;
+            for k in 0..n {
+                let i = (self.cursor + k) % n;
+                let e = &mut self.entries[i];
+                let eligible = matches!(
+                    e.sweep.state(),
+                    SweepState::Queued | SweepState::Running
+                ) && e.sweep.unstarted() > 0;
+                if !eligible {
+                    continue;
+                }
+                match e.sweep.start_one() {
+                    Ok(true) => {
+                        self.cursor = (i + 1) % n;
+                        started = true;
+                        break;
+                    }
+                    Ok(false) => {}
+                    Err(err) => {
+                        let why = err.to_string();
+                        eprintln!("serve: sweep {} failed to start a shard: {why}", e.id);
+                        e.sweep.fail(why);
+                        self.failed += 1;
+                    }
+                }
+            }
+            if !started {
+                return;
+            }
+        }
+    }
+
+    /// Poll every running sweep; finalize (merge + journal) the ones
+    /// whose every slice is durable.
+    fn poll_sweeps(&mut self) {
+        for e in self.entries.iter_mut() {
+            if *e.sweep.state() != SweepState::Running {
+                continue;
+            }
+            if let Err(err) = e.sweep.poll() {
+                let why = err.to_string();
+                eprintln!("serve: sweep {} failed: {why}", e.id);
+                e.sweep.fail(why);
+                self.failed += 1;
+                continue;
+            }
+            if !e.sweep.done() {
+                continue;
+            }
+            match e.sweep.finalize() {
+                Ok(report) => {
+                    let path = e.sweep.dir().join("report.md");
+                    let write = std::fs::write(&path, report.deterministic_report())
+                        .map_err(SedarError::from)
+                        .and_then(|()| {
+                            if e.journaled_done {
+                                Ok(())
+                            } else {
+                                self.manifest.record_done(&e.id)
+                            }
+                        });
+                    match write {
+                        Ok(()) => {
+                            self.merged += 1;
+                            eprintln!(
+                                "serve: sweep {} merged — {} task(s), report {}",
+                                e.id,
+                                report.total(),
+                                path.display()
+                            );
+                        }
+                        Err(err) => {
+                            let why = format!("cannot persist merge: {err}");
+                            eprintln!("serve: sweep {} failed: {why}", e.id);
+                            e.sweep.fail(why);
+                            self.failed += 1;
+                        }
+                    }
+                }
+                Err(err) => {
+                    let why = err.to_string();
+                    eprintln!("serve: sweep {} failed to merge: {why}", e.id);
+                    e.sweep.fail(why);
+                    self.failed += 1;
+                }
+            }
+        }
+    }
+
+    fn serve_client(&mut self, stream: &mut TcpStream) -> std::io::Result<()> {
+        let req = read_request(stream)?;
+        // Route on the path component alone (`/sweeps?x=1` is /sweeps).
+        let path = req.target.split(['?', '#']).next().unwrap_or("/");
+        match (req.method.as_str(), path) {
+            ("POST", "/submit") => self.handle_submit(stream, &req),
+            ("GET", "/sweeps") => {
+                let rows: Vec<String> = self
+                    .entries
+                    .iter()
+                    .map(|e| {
+                        format!(
+                            "{{\"sweep\":\"{}\",\"user\":\"{}\",\"state\":\"{}\",\
+                             \"total\":{},\"done\":{},\"running\":{}}}",
+                            e.id,
+                            crate::report::json_escape(&e.user),
+                            e.sweep.state().label(),
+                            e.sweep.total(),
+                            e.sweep.aggregate().done(),
+                            e.sweep.running()
+                        )
+                    })
+                    .collect();
+                respond(
+                    stream,
+                    "200 OK",
+                    "application/json",
+                    &format!("[{}]", rows.join(",")),
+                )
+            }
+            ("GET", "/metrics") => {
+                respond(stream, "200 OK", "text/plain; version=0.0.4", &self.metrics())
+            }
+            ("GET", "/") => {
+                let mut s = format!(
+                    "SEDAR serve: {} sweep(s), {}/{} worker slot(s) busy\n",
+                    self.entries.len(),
+                    self.running(),
+                    self.opts.workers
+                );
+                for e in &self.entries {
+                    s.push_str(&format!(
+                        "  {} [{}] user {} — {}/{} task(s)\n",
+                        e.id,
+                        e.sweep.state().label(),
+                        e.user,
+                        e.sweep.aggregate().done(),
+                        e.sweep.total()
+                    ));
+                }
+                respond(stream, "200 OK", "text/plain; charset=utf-8", &s)
+            }
+            ("GET", p) => {
+                if let Some(rest) = p.strip_prefix("/sweep/") {
+                    if let Some((id, tail)) = rest.split_once('/') {
+                        return self.handle_sweep_get(stream, id, tail);
+                    }
+                }
+                respond(
+                    stream,
+                    "404 Not Found",
+                    "text/plain; charset=utf-8",
+                    &format!(
+                        "no such path: {p} (try /, /sweeps, /sweep/ID/json, \
+                         /sweep/ID/report or /metrics)\n"
+                    ),
+                )
+            }
+            (m, p) => respond(
+                stream,
+                "405 Method Not Allowed",
+                "text/plain; charset=utf-8",
+                &format!("cannot {m} {p}\n"),
+            ),
+        }
+    }
+
+    fn handle_submit(&mut self, stream: &mut TcpStream, req: &Request) -> std::io::Result<()> {
+        let (user, cfg) = match parse_submission(&req.body) {
+            Ok(x) => x,
+            Err(e) => {
+                self.rejected += 1;
+                return respond(
+                    stream,
+                    "400 Bad Request",
+                    "text/plain; charset=utf-8",
+                    &format!("{e}\n"),
+                );
+            }
+        };
+        if !self.admission.admit(&user) {
+            self.rejected += 1;
+            return respond(
+                stream,
+                "429 Too Many Requests",
+                "text/plain; charset=utf-8",
+                &format!("rate limited: client '{user}' is over its submission budget\n"),
+            );
+        }
+        let active = self
+            .entries
+            .iter()
+            .filter(|e| {
+                e.user == user
+                    && matches!(e.sweep.state(), SweepState::Queued | SweepState::Running)
+            })
+            .count();
+        if active >= self.opts.queue_cap {
+            self.rejected += 1;
+            return respond(
+                stream,
+                "429 Too Many Requests",
+                "text/plain; charset=utf-8",
+                &format!(
+                    "queue full: client '{user}' already has {active} queued/running sweep(s) \
+                     (cap {})\n",
+                    self.opts.queue_cap
+                ),
+            );
+        }
+        let id = format!("sweep-{:04}", self.next_id);
+        let sweep = match Sweep::new(
+            cfg.clone(),
+            self.opts.dir.join(&id),
+            Some(self.bin.clone()),
+            SupervisorConfig {
+                max_restarts: self.opts.max_restarts,
+                stall_timeout: self.opts.stall_timeout,
+            },
+            self.spawner.clone(),
+        ) {
+            Ok(s) => s,
+            Err(e) => {
+                self.rejected += 1;
+                return respond(
+                    stream,
+                    "400 Bad Request",
+                    "text/plain; charset=utf-8",
+                    &format!("{e}\n"),
+                );
+            }
+        };
+        // Journal before acknowledging: a 200 means the submission
+        // survives a daemon crash.
+        let sub = Submission {
+            id: id.clone(),
+            user: user.clone(),
+            seed: cfg.seed,
+            shards: cfg.shards as u32,
+            jobs: cfg.jobs as u32,
+            filter: cfg.filter.clone(),
+            scenario: cfg.scenario.clone(),
+        };
+        if let Err(e) = self.manifest.record_submit(&sub) {
+            return respond(
+                stream,
+                "500 Internal Server Error",
+                "text/plain; charset=utf-8",
+                &format!("cannot journal submission: {e}\n"),
+            );
+        }
+        self.next_id += 1;
+        self.submitted += 1;
+        let body = format!(
+            "{{\"sweep\":\"{id}\",\"state\":\"queued\",\"total\":{},\"shards\":{}}}",
+            sweep.total(),
+            cfg.shards
+        );
+        self.entries.push(Entry {
+            id,
+            user,
+            sweep,
+            journaled_done: false,
+        });
+        respond(stream, "200 OK", "application/json", &body)
+    }
+
+    fn handle_sweep_get(
+        &mut self,
+        stream: &mut TcpStream,
+        id: &str,
+        tail: &str,
+    ) -> std::io::Result<()> {
+        let Some(e) = self.entries.iter().find(|e| e.id == id) else {
+            return respond(
+                stream,
+                "404 Not Found",
+                "text/plain; charset=utf-8",
+                &format!("no such sweep: {id}\n"),
+            );
+        };
+        match tail {
+            "json" => respond(
+                stream,
+                "200 OK",
+                "application/json",
+                &e.sweep.aggregate().json_snapshot(),
+            ),
+            "report" => {
+                if *e.sweep.state() != SweepState::Merged {
+                    return respond(
+                        stream,
+                        "404 Not Found",
+                        "text/plain; charset=utf-8",
+                        &format!("sweep {id} not merged yet (state: {})\n", e.sweep.state().label()),
+                    );
+                }
+                match std::fs::read_to_string(e.sweep.dir().join("report.md")) {
+                    Ok(report) => respond(stream, "200 OK", "text/markdown; charset=utf-8", &report),
+                    Err(err) => respond(
+                        stream,
+                        "500 Internal Server Error",
+                        "text/plain; charset=utf-8",
+                        &format!("cannot read report for {id}: {err}\n"),
+                    ),
+                }
+            }
+            other => respond(
+                stream,
+                "404 Not Found",
+                "text/plain; charset=utf-8",
+                &format!("no such sweep view: {other} (try json or report)\n"),
+            ),
+        }
+    }
+
+    fn metrics(&self) -> String {
+        let mut s = String::new();
+        let mut metric = |name: &str, kind: &str, help: &str, value: String| {
+            s.push_str(&format!(
+                "# HELP {name} {help}\n# TYPE {name} {kind}\n{name} {value}\n"
+            ));
+        };
+        metric(
+            "sedar_serve_submissions_total",
+            "counter",
+            "Submissions accepted (journaled) since this daemon started.",
+            self.submitted.to_string(),
+        );
+        metric(
+            "sedar_serve_rejected_total",
+            "counter",
+            "Submissions rejected (parse, rate limit, queue cap).",
+            self.rejected.to_string(),
+        );
+        metric(
+            "sedar_serve_sweeps_merged_total",
+            "counter",
+            "Sweeps whose final report merged and persisted.",
+            self.merged.to_string(),
+        );
+        metric(
+            "sedar_serve_sweeps_failed_total",
+            "counter",
+            "Sweeps that failed (restart budget, identity drift, ...).",
+            self.failed.to_string(),
+        );
+        let active = self
+            .entries
+            .iter()
+            .filter(|e| {
+                matches!(e.sweep.state(), SweepState::Queued | SweepState::Running)
+            })
+            .count();
+        metric(
+            "sedar_serve_sweeps_active",
+            "gauge",
+            "Sweeps currently queued or running.",
+            active.to_string(),
+        );
+        metric(
+            "sedar_serve_shards_running",
+            "gauge",
+            "Live shard processes across all sweeps.",
+            self.running().to_string(),
+        );
+        metric(
+            "sedar_serve_worker_slots",
+            "gauge",
+            "The pooled concurrent shard budget (--workers).",
+            self.opts.workers.to_string(),
+        );
+        s
+    }
+}
+
+fn bind(opts: &ServeOptions) -> Result<TcpListener> {
+    let listener = TcpListener::bind(("127.0.0.1", opts.port)).map_err(|e| {
+        SedarError::Config(format!("serve: --port {}: cannot bind: {e}", opts.port))
+    })?;
+    listener.set_nonblocking(true)?;
+    Ok(listener)
+}
+
+fn write_addr_file(opts: &ServeOptions, addr: SocketAddr) -> Result<()> {
+    if let Some(path) = &opts.addr_file {
+        // Write-then-rename: a watcher polling for this file must never
+        // observe a half-written address.
+        let tmp = path.with_extension("addr-tmp");
+        std::fs::write(&tmp, format!("{addr}\n"))?;
+        std::fs::rename(&tmp, path)?;
+    }
+    Ok(())
+}
+
+/// Run the daemon in the foreground until killed. This is `sedar serve`.
+pub fn run_serve(opts: &ServeOptions) -> Result<()> {
+    let mut gw = Gateway::new(opts)?;
+    let listener = bind(opts)?;
+    let addr = listener.local_addr()?;
+    eprintln!(
+        "serve: gateway on http://{addr}/ — POST /submit, GET /sweeps, \
+         /sweep/ID/json, /sweep/ID/report, /metrics"
+    );
+    eprintln!(
+        "serve: {} pooled shard slot(s), dir {}",
+        opts.workers,
+        opts.dir.display()
+    );
+    write_addr_file(opts, addr)?;
+    loop {
+        gw.tick(&listener);
+        std::thread::sleep(opts.poll_interval);
+    }
+}
+
+/// An in-process daemon for tests and benches: the same gateway loop on a
+/// background thread, stopped (and joined) on drop.
+pub struct Daemon {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Daemon {
+    pub fn spawn(opts: ServeOptions) -> Result<Daemon> {
+        let mut gw = Gateway::new(&opts)?;
+        let listener = bind(&opts)?;
+        let addr = listener.local_addr()?;
+        write_addr_file(&opts, addr)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let thread = std::thread::Builder::new()
+            .name("sedar-serve".into())
+            .spawn(move || {
+                while !stop2.load(Ordering::Relaxed) {
+                    gw.tick(&listener);
+                    std::thread::sleep(opts.poll_interval);
+                }
+            })?;
+        Ok(Daemon {
+            addr,
+            stop,
+            thread: Some(thread),
+        })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+}
+
+impl Drop for Daemon {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::status::http_get;
+    use http::http_post;
+
+    const T: Duration = Duration::from_secs(5);
+
+    fn tmp(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "sedar-serve-{tag}-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    /// An ingress-only daemon: `workers: 0` means nothing ever spawns, so
+    /// these tests exercise submission, admission, journaling and every
+    /// GET route without depending on a `sedar` binary (under `cargo
+    /// test`, `current_exe` is the test runner, not `sedar`).
+    fn ingress_opts(dir: PathBuf) -> ServeOptions {
+        ServeOptions {
+            workers: 0,
+            dir,
+            poll_interval: Duration::from_millis(5),
+            rate: 0.0,
+            burst: 2.0,
+            queue_cap: 8,
+            quiet: true,
+            ..ServeOptions::default()
+        }
+    }
+
+    #[test]
+    fn submissions_rate_limits_and_views() {
+        let dir = tmp("ingress");
+        let daemon = Daemon::spawn(ingress_opts(dir.clone())).unwrap();
+        let addr = daemon.addr();
+
+        // Two submissions fit alice's burst of 2.
+        let a = http_post(addr, "/submit", "user=alice\nseed=7\nshards=2\nfilter=scenario=1-4", T)
+            .unwrap();
+        assert!(a.contains("\"sweep\":\"sweep-0001\""), "got: {a}");
+        assert!(a.contains("\"state\":\"queued\""), "got: {a}");
+        assert!(a.contains("\"shards\":2"), "got: {a}");
+        let b = http_post(addr, "/submit", "user=alice\nseed=7\nshards=1\nscenario=5-8", T)
+            .unwrap();
+        assert!(b.contains("\"sweep\":\"sweep-0002\""), "got: {b}");
+        // The third is rate limited (rate 0.0: the bucket never refills).
+        let err = http_post(addr, "/submit", "user=alice\nseed=7", T).unwrap_err();
+        assert!(err.to_string().contains("429"), "got: {err}");
+        // …but bob has his own bucket.
+        let c = http_post(addr, "/submit", "user=bob\nseed=9\nscenario=1-2", T).unwrap();
+        assert!(c.contains("\"sweep\":\"sweep-0003\""), "got: {c}");
+
+        // Malformed submissions are 400s, not 500s or accepts.
+        for bad in ["seed=nope", "shards=0", "color=red", "no equals sign"] {
+            let err = http_post(addr, "/submit", bad, T).unwrap_err();
+            assert!(err.to_string().contains("400"), "body {bad}: got {err}");
+        }
+
+        // /sweeps lists all three, queued (workers: 0 ⇒ never started).
+        let sweeps = http_get(addr, "/sweeps", T).unwrap();
+        assert!(sweeps.contains("\"sweep\":\"sweep-0001\""), "got: {sweeps}");
+        assert!(sweeps.contains("\"sweep\":\"sweep-0003\""), "got: {sweeps}");
+        assert!(sweeps.contains("\"user\":\"bob\""), "got: {sweeps}");
+        assert!(sweeps.contains("\"state\":\"queued\""), "got: {sweeps}");
+
+        // Per-sweep live aggregate json; report 404s before the merge.
+        let json = http_get(addr, "/sweep/sweep-0001/json", T).unwrap();
+        assert!(json.contains("\"done\":0"), "got: {json}");
+        assert!(json.contains("\"complete\":false"), "got: {json}");
+        let err = http_get(addr, "/sweep/sweep-0001/report", T).unwrap_err();
+        assert!(err.to_string().contains("404"), "got: {err}");
+        let err = http_get(addr, "/sweep/sweep-9999/json", T).unwrap_err();
+        assert!(err.to_string().contains("404"), "got: {err}");
+
+        // Gateway metrics count what happened.
+        let m = http_get(addr, "/metrics", T).unwrap();
+        assert!(m.contains("sedar_serve_submissions_total 3"), "got: {m}");
+        assert!(m.contains("sedar_serve_sweeps_active 3"), "got: {m}");
+        assert!(m.contains("sedar_serve_worker_slots 0"), "got: {m}");
+        // 1 rate-limit + 4 malformed.
+        assert!(m.contains("sedar_serve_rejected_total 5"), "got: {m}");
+
+        // Unknown paths and bad methods answer without wedging the loop.
+        assert!(http_get(addr, "/nope", T).unwrap_err().to_string().contains("404"));
+
+        drop(daemon);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn queue_cap_bounds_one_user() {
+        let dir = tmp("cap");
+        let mut opts = ingress_opts(dir.clone());
+        opts.burst = 100.0;
+        opts.queue_cap = 2;
+        let daemon = Daemon::spawn(opts).unwrap();
+        let addr = daemon.addr();
+        assert!(http_post(addr, "/submit", "user=carol\nscenario=1-2", T).is_ok());
+        assert!(http_post(addr, "/submit", "user=carol\nscenario=1-2", T).is_ok());
+        let err = http_post(addr, "/submit", "user=carol\nscenario=1-2", T).unwrap_err();
+        assert!(err.to_string().contains("429"), "got: {err}");
+        drop(daemon);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn restart_over_the_same_dir_adopts_journaled_sweeps() {
+        let dir = tmp("adopt");
+        {
+            let daemon = Daemon::spawn(ingress_opts(dir.clone())).unwrap();
+            http_post(daemon.addr(), "/submit", "user=alice\nseed=7\nshards=2\nscenario=1-4", T)
+                .unwrap();
+        } // daemon dropped — "crash"
+
+        let daemon = Daemon::spawn(ingress_opts(dir.clone())).unwrap();
+        let addr = daemon.addr();
+        // The journaled sweep is back, same id, still queued.
+        let sweeps = http_get(addr, "/sweeps", T).unwrap();
+        assert!(sweeps.contains("\"sweep\":\"sweep-0001\""), "got: {sweeps}");
+        assert!(sweeps.contains("\"user\":\"alice\""), "got: {sweeps}");
+        // New ids continue past the adopted ones.
+        let next =
+            http_post(addr, "/submit", "user=alice\nseed=9\nscenario=1-2", T).unwrap();
+        assert!(next.contains("\"sweep\":\"sweep-0002\""), "got: {next}");
+        drop(daemon);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn parse_submission_defaults_and_filters() {
+        let (user, cfg) = parse_submission("").unwrap();
+        assert_eq!(user, "anon");
+        assert_eq!(cfg.seed, 42);
+        assert_eq!(cfg.shards, 1);
+        let (_, cfg) =
+            parse_submission("filter=app=matmul,strategy=sys\nseed=11\njobs=3").unwrap();
+        // Embedded '=' survives: the filter value is everything after the
+        // first separator.
+        assert_eq!(cfg.filter.as_deref(), Some("app=matmul,strategy=sys"));
+        assert_eq!(cfg.seed, 11);
+        assert_eq!(cfg.jobs, 3);
+        assert!(parse_submission("shards=0").is_err());
+        assert!(parse_submission("unknown=1").is_err());
+    }
+}

@@ -1,0 +1,143 @@
+//! Gateway admission control: per-client token buckets and queue caps.
+//!
+//! The daemon is the one component of the crate that faces *traffic*
+//! rather than a single operator, so it rations two things per client
+//! name: submission **rate** (a classic token bucket — `rate` tokens per
+//! second refill, `burst` capacity, one token per submission) and
+//! **queue depth** (the gateway separately caps how many queued/running
+//! sweeps one user may hold; that check lives in the gateway because it
+//! needs the sweep table). Rejections are cheap 429s before any spec
+//! building, journaling or process spawning happens.
+//!
+//! The refill arithmetic is driven by an explicit [`Admission::advance`]
+//! so tests pace time deterministically; the production entry point
+//! [`Admission::admit`] feeds it real elapsed wall time (the daemon is
+//! operational machinery, exempt from the virtual-clock rule that governs
+//! world execution).
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// One client's bucket: `tokens` available now, refilled at `rate`/s up
+/// to `burst`.
+#[derive(Debug, Clone)]
+pub struct TokenBucket {
+    tokens: f64,
+    rate: f64,
+    burst: f64,
+}
+
+impl TokenBucket {
+    /// A fresh bucket starts full: a new client gets its burst allowance
+    /// immediately.
+    pub fn new(rate: f64, burst: f64) -> TokenBucket {
+        TokenBucket {
+            tokens: burst,
+            rate,
+            burst,
+        }
+    }
+
+    /// Refill for `dt` of elapsed time, capped at the burst size.
+    pub fn advance(&mut self, dt: Duration) {
+        self.tokens = (self.tokens + self.rate * dt.as_secs_f64()).min(self.burst);
+    }
+
+    /// Spend one token if available.
+    pub fn try_take(&mut self) -> bool {
+        if self.tokens >= 1.0 {
+            self.tokens -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// Per-client admission: one [`TokenBucket`] per client name, refilled
+/// lazily from one shared elapsed-time watermark.
+pub struct Admission {
+    rate: f64,
+    burst: f64,
+    buckets: BTreeMap<String, TokenBucket>,
+    last: Instant,
+}
+
+impl Admission {
+    pub fn new(rate: f64, burst: f64) -> Admission {
+        Admission {
+            rate,
+            burst,
+            buckets: BTreeMap::new(),
+            last: Instant::now(),
+        }
+    }
+
+    /// Refill every bucket for `dt` of elapsed time.
+    pub fn advance(&mut self, dt: Duration) {
+        for b in self.buckets.values_mut() {
+            b.advance(dt);
+        }
+    }
+
+    /// Spend one of `user`'s tokens if available (no refill — pair with
+    /// [`Admission::advance`]; tests drive the pair deterministically).
+    pub fn try_take(&mut self, user: &str) -> bool {
+        self.buckets
+            .entry(user.to_string())
+            .or_insert_with(|| TokenBucket::new(self.rate, self.burst))
+            .try_take()
+    }
+
+    /// The production path: refill by real elapsed time, then take.
+    pub fn admit(&mut self, user: &str) -> bool {
+        let now = Instant::now();
+        let dt = now.saturating_duration_since(self.last);
+        self.last = now;
+        self.advance(dt);
+        self.try_take(user)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_spends_burst_then_refills_at_rate() {
+        let mut b = TokenBucket::new(2.0, 3.0);
+        // The burst is available immediately…
+        assert!(b.try_take());
+        assert!(b.try_take());
+        assert!(b.try_take());
+        // …then the bucket is dry…
+        assert!(!b.try_take());
+        // …and refills at 2 tokens/s: 250 ms buys half a token, not one.
+        b.advance(Duration::from_millis(250));
+        assert!(!b.try_take());
+        b.advance(Duration::from_millis(250));
+        assert!(b.try_take());
+        // Refill never exceeds the burst cap.
+        b.advance(Duration::from_secs(3600));
+        assert!(b.try_take());
+        assert!(b.try_take());
+        assert!(b.try_take());
+        assert!(!b.try_take());
+    }
+
+    #[test]
+    fn admission_isolates_clients() {
+        let mut a = Admission::new(0.0, 2.0);
+        // alice exhausting her burst must not cost bob anything.
+        assert!(a.try_take("alice"));
+        assert!(a.try_take("alice"));
+        assert!(!a.try_take("alice"));
+        assert!(a.try_take("bob"));
+        assert!(a.try_take("bob"));
+        assert!(!a.try_take("bob"));
+        // rate 0.0: no amount of elapsed time refills anyone.
+        a.advance(Duration::from_secs(3600));
+        assert!(!a.try_take("alice"));
+        assert!(!a.try_take("bob"));
+    }
+}

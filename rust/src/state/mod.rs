@@ -146,6 +146,28 @@ impl Buf {
         SharedBuf::ptr_eq(&self.data, &other.data)
     }
 
+    /// Zero-copy element-range view: a `Buf` windowing
+    /// `start..start + len` (in elements) of this buffer's allocation.
+    /// No payload bytes move — the view is a reference bump — and the
+    /// element granularity keeps the typed casts aligned (the storage
+    /// base is 8-byte aligned, so an element-multiple byte offset is
+    /// aligned for that element type). Copy-on-write still applies:
+    /// mutating the view detaches it; the parent never changes.
+    pub fn view(&self, start: usize, len: usize) -> Result<Buf> {
+        if start.checked_add(len).is_none_or(|end| end > self.len()) {
+            return Err(SedarError::Vmpi(format!(
+                "view {start}..{} exceeds {} element buffer",
+                start.saturating_add(len),
+                self.len()
+            )));
+        }
+        let esz = self.dtype.size_of();
+        Ok(Buf {
+            dtype: self.dtype,
+            data: self.data.view(start * esz, len * esz),
+        })
+    }
+
     fn expect(&self, want: DType) -> Result<()> {
         if self.dtype == want {
             Ok(())
@@ -160,8 +182,10 @@ impl Buf {
     pub fn as_f32(&self) -> Result<&[f32]> {
         self.expect(DType::F32)?;
         let b = self.data.as_bytes();
-        // Safety: storage is 8-byte aligned; length is a multiple of 4 by
-        // construction (`from_bytes` validates, typed constructors trivially).
+        // Safety: the storage base is 8-byte aligned and view offsets are
+        // element multiples, so the pointer is f32-aligned; length is a
+        // multiple of 4 by construction (`from_bytes` validates, typed
+        // constructors and `view` trivially).
         Ok(unsafe { std::slice::from_raw_parts(b.as_ptr().cast::<f32>(), b.len() / 4) })
     }
 
@@ -497,6 +521,25 @@ mod tests {
         assert!(!c.buf.shares_allocation(&a.buf));
         assert_eq!(a.buf.as_f32().unwrap(), &[1.0, 2.0, 3.0]);
         assert_eq!(c.buf.as_f32().unwrap(), &[-1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn buf_views_are_typed_zero_copy_windows() {
+        let v = Var::f32(&[2, 4], vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0]);
+        let row = v.buf.view(4, 4).unwrap();
+        assert!(row.shares_allocation(&v.buf), "a view must not copy");
+        assert_eq!(row.as_f32().unwrap(), &[4.0, 5.0, 6.0, 7.0]);
+        assert_eq!(row.len(), 4);
+        // Odd element offsets stay aligned for the element type.
+        assert_eq!(v.buf.view(1, 2).unwrap().as_f32().unwrap(), &[1.0, 2.0]);
+        // Copy-on-write: mutating the view never reaches the parent.
+        let mut row = row;
+        row.as_f32_mut().unwrap()[0] = 99.0;
+        assert!(!row.shares_allocation(&v.buf));
+        assert_eq!(v.buf.as_f32().unwrap()[4], 4.0);
+        // Bounds are element-granular and checked.
+        assert!(v.buf.view(6, 4).is_err());
+        assert!(v.buf.view(usize::MAX, 2).is_err());
     }
 
     #[test]

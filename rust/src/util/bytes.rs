@@ -13,6 +13,12 @@
 //! element type the [`crate::state`] layer supports (f32/f64/i64/u8) can be
 //! viewed directly over these bytes without realignment copies.
 //!
+//! [`SharedBuf::view`] extends the same economics to *sub-ranges*: a
+//! scatter root slicing row chunks out of a matrix hands each rank a
+//! window of the one parent allocation (a reference bump per chunk)
+//! instead of a copied byte range, and copy-on-write still isolates any
+//! later writer.
+//!
 //! [`TokenBuf`] is the companion type for the replica rendezvous channels
 //! ([`crate::replica::pair::PairSync`]): small control tokens stay owned
 //! `Vec<u8>`s, full-payload comparison tokens cross as `SharedBuf` views —
@@ -39,7 +45,10 @@ pub struct SharedBuf {
     /// rather than `Arc<[u64]>` so the final holder can take the `Vec` back
     /// out and recycle it through the arena.
     words: Arc<Vec<u64>>,
-    /// Valid byte length (`<= words.len() * 8`).
+    /// Byte offset of this buffer's window into the word storage — 0 for
+    /// whole-allocation buffers, nonzero for [`SharedBuf::view`]s.
+    off: usize,
+    /// Valid byte length (`off + len <= words.len() * 8`).
     len: usize,
 }
 
@@ -48,6 +57,7 @@ impl SharedBuf {
     pub fn empty() -> SharedBuf {
         SharedBuf {
             words: Arc::new(Vec::new()),
+            off: 0,
             len: 0,
         }
     }
@@ -69,6 +79,7 @@ impl SharedBuf {
         }
         SharedBuf {
             words: Arc::new(words),
+            off: 0,
             len: bytes.len(),
         }
     }
@@ -81,6 +92,7 @@ impl SharedBuf {
         words.fill(0);
         SharedBuf {
             words: Arc::new(words),
+            off: 0,
             len,
         }
     }
@@ -93,23 +105,65 @@ impl SharedBuf {
         self.len == 0
     }
 
-    /// Immutable byte view. The base pointer is 8-byte aligned by
-    /// construction (word storage), so typed views over these bytes are
-    /// alignment-safe for every supported element width.
+    /// Immutable byte view. The storage base is 8-byte aligned by
+    /// construction (word storage), so the returned pointer is aligned to
+    /// `8.gcd(off)` — whole buffers (`off == 0`) support every element
+    /// width, and the typed layer ([`crate::state::Buf::view`]) only ever
+    /// creates element-multiple offsets.
     pub fn as_bytes(&self) -> &[u8] {
-        // Safety: the words allocation holds at least `len` initialized
-        // bytes; u8 has no alignment requirement.
-        unsafe { std::slice::from_raw_parts(self.words.as_ptr().cast::<u8>(), self.len) }
+        // Safety: the words allocation holds at least `off + len`
+        // initialized bytes (asserted at view construction); `off` is at
+        // most one past the end for empty windows; u8 has no alignment
+        // requirement.
+        unsafe {
+            std::slice::from_raw_parts(self.words.as_ptr().cast::<u8>().add(self.off), self.len)
+        }
+    }
+
+    /// A zero-copy sub-range view: shares this buffer's allocation and
+    /// windows `offset..offset + len` of its visible bytes. Costs one
+    /// reference bump — no payload bytes move. Mutation through a view
+    /// ([`SharedBuf::make_mut`]) always detaches into a private copy
+    /// first, so a write can never reach the parent or sibling views.
+    ///
+    /// Panics if the range runs past the buffer (caller bug — the typed
+    /// layer bounds-checks in element units first).
+    pub fn view(&self, offset: usize, len: usize) -> SharedBuf {
+        assert!(
+            offset.checked_add(len).is_some_and(|end| end <= self.len),
+            "view {offset}..{} exceeds {} byte buffer",
+            offset.saturating_add(len),
+            self.len
+        );
+        SharedBuf {
+            words: Arc::clone(&self.words),
+            off: self.off + offset,
+            len,
+        }
     }
 
     /// Mutable byte view, copy-on-write: in place when this is the only
-    /// reference, otherwise the contents are copied into a private
-    /// allocation first (other holders keep seeing the old bytes).
+    /// reference to a whole allocation, otherwise the visible window is
+    /// copied into a private allocation first (other holders keep seeing
+    /// the old bytes). A view (`off != 0`) always detaches — even a
+    /// "unique" one still aliases whatever windows the parent handed out.
     pub fn make_mut(&mut self) -> &mut [u8] {
-        if Arc::get_mut(&mut self.words).is_none() {
-            let mut copy = arena::take_words(self.words.len());
-            copy.copy_from_slice(&self.words);
+        if self.off != 0 || Arc::get_mut(&mut self.words).is_none() {
+            let mut copy = arena::take_words(self.len.div_ceil(8));
+            if self.len != 0 {
+                // Safety: source is `len` initialized bytes; destination
+                // spans ceil(len/8) words >= len bytes; the allocations are
+                // distinct, so the ranges cannot overlap.
+                unsafe {
+                    std::ptr::copy_nonoverlapping(
+                        self.as_bytes().as_ptr(),
+                        copy.as_mut_ptr().cast::<u8>(),
+                        self.len,
+                    );
+                }
+            }
             self.words = Arc::new(copy);
+            self.off = 0;
         }
         let words = Arc::get_mut(&mut self.words).expect("unique after copy-on-write");
         // Safety: as for `as_bytes`, plus exclusive access via `get_mut`.
@@ -133,6 +187,7 @@ impl Clone for SharedBuf {
     fn clone(&self) -> SharedBuf {
         SharedBuf {
             words: Arc::clone(&self.words),
+            off: self.off,
             len: self.len,
         }
     }
@@ -152,8 +207,11 @@ impl Drop for SharedBuf {
 
 impl PartialEq for SharedBuf {
     fn eq(&self, other: &SharedBuf) -> bool {
+        // The ptr_eq fast path needs matching offsets: two views of one
+        // allocation window different bytes.
         self.len == other.len
-            && (SharedBuf::ptr_eq(self, other) || self.as_bytes() == other.as_bytes())
+            && ((SharedBuf::ptr_eq(self, other) && self.off == other.off)
+                || self.as_bytes() == other.as_bytes())
     }
 }
 
@@ -306,6 +364,46 @@ mod tests {
         drop(again);
         assert_eq!(keep.as_bytes(), &src[..]);
         assert_eq!(keep.refcount(), 1);
+    }
+
+    #[test]
+    fn views_share_the_allocation_and_window_the_bytes() {
+        let parent = SharedBuf::from_bytes(&(0..32u8).collect::<Vec<_>>());
+        let v = parent.view(8, 12);
+        assert!(SharedBuf::ptr_eq(&parent, &v));
+        assert_eq!(v.len(), 12);
+        assert_eq!(v.as_bytes(), &(8..20u8).collect::<Vec<_>>()[..]);
+        // A view of a view composes offsets into the one allocation.
+        let vv = v.view(4, 4);
+        assert!(SharedBuf::ptr_eq(&parent, &vv));
+        assert_eq!(vv.as_bytes(), &[12, 13, 14, 15]);
+        // Same allocation, different windows: equality is by contents.
+        assert_ne!(v, vv);
+        assert_eq!(vv, SharedBuf::from_bytes(&[12, 13, 14, 15]));
+        // Zero-length windows are fine, including one at the very end.
+        assert!(parent.view(32, 0).is_empty());
+    }
+
+    #[test]
+    fn view_mutation_detaches_and_never_touches_the_parent() {
+        let parent = SharedBuf::from_bytes(&[1, 2, 3, 4, 5, 6, 7, 8]);
+        let mut v = parent.view(2, 4);
+        v.make_mut()[0] = 99;
+        assert!(!SharedBuf::ptr_eq(&parent, &v), "write must detach the view");
+        assert_eq!(v.as_bytes(), &[99, 4, 5, 6]);
+        assert_eq!(parent.as_bytes(), &[1, 2, 3, 4, 5, 6, 7, 8]);
+        // Even a view holding the LAST reference detaches: in-place writes
+        // at off != 0 would corrupt the window arithmetic.
+        let mut only = SharedBuf::from_bytes(&[10, 11, 12]).view(1, 2);
+        only.make_mut()[1] = 77;
+        assert_eq!(only.as_bytes(), &[11, 77]);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds")]
+    fn view_past_the_end_panics() {
+        let b = SharedBuf::from_bytes(&[0u8; 8]);
+        let _ = b.view(4, 8);
     }
 
     #[test]
